@@ -1,0 +1,75 @@
+//! Cluster planner: the tool a practitioner would actually use — given a
+//! model and a cluster, enumerate the feasible (N_MP, N_ESP) layouts and
+//! report each one's simulated iteration time under the baseline and
+//! under Parm, recommending the best (layout, schedule) pair.
+//!
+//! Run: `cargo run --release --example cluster_planner -- [model] [cluster]`
+//! models: bert_base_moe_a|bert_base_moe_b|gpt2_moe_a|gpt2_moe_b|tiny_moe_lm
+//! clusters: testbed_a|testbed_b|testbed_b_8gpu|testbed_b_16gpu
+
+use parm::config::moe::ParallelDegrees;
+use parm::config::{ClusterProfile, ModelConfig};
+use parm::perfmodel::{selection, PerfModel};
+use parm::schedule::ScheduleKind;
+use parm::train::model_iteration_time;
+use parm::util::table::{fmt_speedup, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model_name = args.first().map(|s| s.as_str()).unwrap_or("gpt2_moe_b");
+    let cluster_name = args.get(1).map(|s| s.as_str()).unwrap_or("testbed_b");
+    let model = ModelConfig::builtin(model_name)?;
+    let cluster = ClusterProfile::load(cluster_name)?;
+    let p = cluster.total_gpus();
+    println!(
+        "planning {} ({} params) on {} ({} GPUs)\n",
+        model.name,
+        model.param_count(),
+        cluster.name,
+        p
+    );
+
+    let mut t = Table::new(&[
+        "N_MP", "N_ESP", "baseline (ms)", "parm (ms)", "schedule", "speedup",
+    ])
+    .numeric();
+    let mut best: Option<(f64, String)> = None;
+    for n_mp in [1usize, 2, 4] {
+        for n_esp in [1usize, 2, 4] {
+            let par = ParallelDegrees { p, n_mp, n_esp };
+            if par.validate().is_err()
+                || n_esp > cluster.gpus_per_node
+                || n_mp > cluster.gpus_per_node
+            {
+                continue;
+            }
+            let layer = model.moe_layer(par);
+            if layer.validate().is_err()
+                || layer.memory_bytes_per_gpu() > cluster.gpu_mem_bytes
+            {
+                continue;
+            }
+            let pm = PerfModel::fit(&cluster, par)?;
+            let choice = selection::choose_schedule(&pm, &layer);
+            let base = model_iteration_time(&model, par, &cluster, ScheduleKind::Baseline)?;
+            let parm = model_iteration_time(&model, par, &cluster, choice)?;
+            let row_desc = format!("N_MP={n_mp}, N_ESP={n_esp}, {}", choice.name());
+            if best.as_ref().map(|(b, _)| parm.total() < *b).unwrap_or(true) {
+                best = Some((parm.total(), row_desc));
+            }
+            t.row(&[
+                format!("{n_mp}"),
+                format!("{n_esp}"),
+                format!("{:.1}", base.total() * 1e3),
+                format!("{:.1}", parm.total() * 1e3),
+                choice.name().into(),
+                fmt_speedup(base.total() / parm.total()),
+            ]);
+        }
+    }
+    print!("{}", t.to_text());
+    if let Some((secs, desc)) = best {
+        println!("\nrecommended: {desc} ({:.1} ms/iter)", secs * 1e3);
+    }
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! Quickstart: the whole Parm pipeline on one MoE layer, no artifacts
+//! needed.
+//!
+//! 1. Describe a cluster and a MoE layer (paper Table I/II notation).
+//! 2. Prove the schedules are semantics-preserving on the data plane.
+//! 3. Simulate Baseline / S1 / S2 iteration time on the cluster.
+//! 4. Fit the α-β model and let Algorithm 1 pick the schedule.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use parm::config::moe::ParallelDegrees;
+use parm::config::{ClusterProfile, MoeLayerConfig};
+use parm::moe::{run_schedule, LayerState, NativeBackend};
+use parm::perfmodel::{selection, PerfModel};
+use parm::schedule::{lowering, ScheduleKind};
+use parm::util::table::{fmt_seconds, fmt_speedup};
+
+fn main() -> anyhow::Result<()> {
+    // -- 1. a 32-GPU cluster (paper testbed B) and a MoE layer on it ------
+    let cluster = ClusterProfile::testbed_b();
+    let cfg = MoeLayerConfig {
+        par: ParallelDegrees { p: 32, n_mp: 4, n_esp: 4 },
+        b: 4,
+        l: 1024,
+        e: 8,
+        m: 1024,
+        h: 2048,
+        k: 2,
+        f: 1.2,
+        dtype_bytes: 4,
+    };
+    cfg.validate()?;
+    println!("layer {} on {} ({} GPUs)\n", cfg.id(), cluster.name, cluster.total_gpus());
+
+    // -- 2. data-plane equivalence on a scaled-down twin ------------------
+    let small = MoeLayerConfig {
+        par: ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 },
+        b: 1,
+        l: 16,
+        e: 4,
+        m: 8,
+        h: 16,
+        k: 2,
+        f: 64.0, // drop-free so all schedules agree exactly
+        dtype_bytes: 4,
+    };
+    let state = LayerState::random(&small, 7)?;
+    let base = run_schedule(ScheduleKind::Baseline, &state, &mut NativeBackend)?;
+    for kind in [ScheduleKind::S1, ScheduleKind::S2] {
+        let out = run_schedule(kind, &state, &mut NativeBackend)?;
+        let max_diff: f32 = out
+            .outputs
+            .iter()
+            .flatten()
+            .zip(base.outputs.iter().flatten())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        println!("data plane: {:8} vs baseline — max |Δ| = {max_diff:.2e}", kind.name());
+        assert!(max_diff < 1e-3);
+    }
+
+    // -- 3. simulate iteration times --------------------------------------
+    println!();
+    let t_base = lowering::simulate_iteration(ScheduleKind::Baseline, &cfg, &cluster)?;
+    println!(
+        "baseline : {}  (comm {:.0}%)",
+        fmt_seconds(t_base.makespan),
+        t_base.comm_ratio() * 100.0
+    );
+    let mut times = Vec::new();
+    for kind in [ScheduleKind::S1, ScheduleKind::S2] {
+        let r = lowering::simulate_iteration(kind, &cfg, &cluster)?;
+        println!(
+            "{:<9}: {}  ({} vs baseline)",
+            kind.name(),
+            fmt_seconds(r.makespan),
+            fmt_speedup(t_base.makespan / r.makespan)
+        );
+        times.push((kind, r.makespan));
+    }
+
+    // -- 4. Algorithm 1 ----------------------------------------------------
+    let model = PerfModel::fit(&cluster, cfg.par)?;
+    let pred = selection::predict(&model, &cfg);
+    let choice = pred.better();
+    println!(
+        "\nAlgorithm 1: t_D1 = {}, t_D2 = {} → choose {}",
+        fmt_seconds(pred.t_d1),
+        fmt_seconds(pred.t_d2),
+        choice.name()
+    );
+    let sim_best = times
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+        .0;
+    println!("simulator agrees: best schedule is {}", sim_best.name());
+    Ok(())
+}

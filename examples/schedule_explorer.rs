@@ -1,0 +1,58 @@
+//! Schedule explorer: sweeps one knob (the capacity factor f, which
+//! drives T) and shows the §IV-B crossover — S2 wins for small T, S1 for
+//! large T, and Parm's Algorithm 1 tracks the winner.
+//!
+//! Run: `cargo run --release --example schedule_explorer`
+
+use parm::config::moe::ParallelDegrees;
+use parm::config::{ClusterProfile, MoeLayerConfig};
+use parm::perfmodel::{selection, PerfModel};
+use parm::schedule::{lowering, ScheduleKind};
+use parm::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let cluster = ClusterProfile::testbed_b();
+    let par = ParallelDegrees { p: 32, n_mp: 4, n_esp: 4 };
+    let model = PerfModel::fit(&cluster, par)?;
+
+    let mut t = Table::new(&[
+        "f", "T", "S1 (ms)", "S2 (ms)", "sim best", "Algorithm 1", "agree",
+    ])
+    .numeric();
+    let mut agreements = 0;
+    let mut total = 0;
+    for f in [0.05, 0.1, 0.25, 0.5, 1.2, 2.4, 4.8, 9.6, 19.2] {
+        let cfg = MoeLayerConfig {
+            par,
+            b: 4,
+            l: 1024,
+            e: 8,
+            m: 1024,
+            h: 2048,
+            k: 2,
+            f,
+            dtype_bytes: 4,
+        };
+        let t1 = lowering::simulate_iteration(ScheduleKind::S1, &cfg, &cluster)?.makespan;
+        let t2 = lowering::simulate_iteration(ScheduleKind::S2, &cfg, &cluster)?.makespan;
+        let sim_best = if t1 <= t2 { "s1" } else { "s2" };
+        let choice = selection::choose_schedule(&model, &cfg);
+        let agree = choice.name() == sim_best
+            || (t1 - t2).abs() / t1.max(t2) < 0.03; // within noise: either fine
+        agreements += agree as usize;
+        total += 1;
+        t.row(&[
+            format!("{f}"),
+            format!("{}", cfg.t()),
+            format!("{:.1}", t1 * 1e3),
+            format!("{:.1}", t2 * 1e3),
+            sim_best.into(),
+            choice.name().into(),
+            if agree { "✓".into() } else { "✗".to_string() },
+        ]);
+    }
+    print!("{}", t.to_text());
+    println!("\nAlgorithm 1 tracked the winner in {agreements}/{total} settings");
+    println!("(paper §IV-B: small T favors S2, large T favors S1)");
+    Ok(())
+}

@@ -1,0 +1,150 @@
+"""AOT compile path: lower the JAX/Pallas computations to HLO **text** and
+write ``artifacts/manifest.json`` for the Rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once via ``make artifacts`` — Python never executes on the request
+path.
+
+Usage: python -m compile.aot --out ../artifacts [--skip-train-step]
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import expert_ffn_single
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def lower_fn(fn, arg_specs):
+    return to_hlo_text(jax.jit(fn).lower(*arg_specs))
+
+
+# ---------------------------------------------------------------------------
+# Artifact definitions.
+# ---------------------------------------------------------------------------
+
+# Expert-FFN kernel shapes used by the Rust integration tests + benches.
+# (n, m, h) triples; the names encode the shapes so the Rust side can
+# select the artifact matching its config:
+#   - 40x8x8 / 80x8x8: the cross-language MoE data-plane test config
+#     (p=8, n_mp=2, n_esp=2, b=1, l=16, e=4, m=8, h=16 → hs=8; S1/S2 feed
+#     (P·cap)=40 rows, baseline feeds (N_EP·capG)=80 rows).
+#   - 1024x512x512: kernel-scale shape for the hot-path bench.
+EXPERT_FFN_SHAPES = [(40, 8, 8), (80, 8, 8), (1024, 512, 512)]
+
+# Cross-language dense MoE layer reference (drop-free capacity).
+REF_N, REF_M, REF_E, REF_H, REF_K = 16, 8, 4, 16, 2
+
+
+def build_artifacts(out_dir: str, skip_train_step: bool = False):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+
+    def emit(name, text, inputs, outputs, meta=None):
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest.append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [list(s) for s in inputs],
+                "outputs": [list(s) for s in outputs],
+                "meta": meta or {},
+            }
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    # 1. Expert-FFN kernel artifacts (Layer 1 through Layer 2 lowering).
+    for n, m, h in EXPERT_FFN_SHAPES:
+        name = f"expert_ffn_{n}x{m}x{h}"
+        args = [spec((n, m)), spec((m, h)), spec((h, m))]
+        text = lower_fn(lambda x, w1, w2: (expert_ffn_single(x, w1, w2),), args)
+        emit(name, text, [(n, m), (m, h), (h, m)], [(n, m)], {"kind": "expert_ffn"})
+
+    # 2. Dense MoE layer reference (drop-free) for the Rust data plane.
+    cap = REF_N * REF_K  # generous
+    args = [
+        spec((REF_N, REF_M)),
+        spec((REF_M, REF_E)),
+        spec((REF_E, REF_M, REF_H)),
+        spec((REF_E, REF_H, REF_M)),
+    ]
+    text = lower_fn(
+        lambda t, wg, w1, w2: (model.moe_layer_ref(t, wg, w1, w2, REF_K, cap),),
+        args,
+    )
+    emit(
+        "moe_layer_ref_small",
+        text,
+        [(REF_N, REF_M), (REF_M, REF_E), (REF_E, REF_M, REF_H), (REF_E, REF_H, REF_M)],
+        [(REF_N, REF_M)],
+        {"kind": "moe_layer_ref", "k": REF_K, "capacity": cap},
+    )
+
+    # 3. The end-to-end LM train step (tiny_moe_lm mirror).
+    if not skip_train_step:
+        cfg = model.TINY
+        schema = model.param_schema(cfg)
+        batch_shape = (cfg.batch, cfg.seq_len + 1)
+        arg_specs = [spec(batch_shape), spec(())] + [spec(s) for _, s, _ in schema]
+        step = functools.partial(model.train_step, cfg=cfg)
+        text = lower_fn(lambda batch, lr, *params: step(batch, lr, list(params)), arg_specs)
+        emit(
+            "lm_train_step",
+            text,
+            [batch_shape, ()] + [s for _, s, _ in schema],
+            [()] + [s for _, s, _ in schema],
+            {
+                "kind": "train_step",
+                "params": [
+                    {"name": n, "shape": list(s), "scale": sc} for n, s, sc in schema
+                ],
+                "vocab": cfg.vocab,
+                "seq_len": cfg.seq_len,
+                "batch": cfg.batch,
+                "param_count": model.param_count(cfg),
+            },
+        )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest}, f, indent=1)
+    print(f"manifest: {len(manifest)} artifacts → {out_dir}/manifest.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--skip-train-step",
+        action="store_true",
+        help="skip the (slow to lower) LM train-step artifact",
+    )
+    args = ap.parse_args()
+    build_artifacts(args.out, args.skip_train_step)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Layer 1: Pallas kernels for the MoE compute hot-spot + jnp oracles."""
+
+from .expert_ffn import (  # noqa: F401
+    expert_ffn,
+    expert_ffn_batched,
+    expert_ffn_bwd_batched,
+    expert_ffn_single,
+    pick_block_t,
+)
+from .ref import expert_ffn_bwd_ref, expert_ffn_ref  # noqa: F401

@@ -1,0 +1,182 @@
+"""Layer 1 — the expert-FFN Pallas kernel (the MoE compute hot-spot).
+
+Computes, per expert e: ``y[e] = relu(x[e] @ w1[e]) @ w2[e]`` over a batch
+of capacity-padded token blocks.
+
+TPU adaptation of the paper's CUDA hot path (DESIGN.md §Hardware-
+Adaptation): the per-expert batched GEMM that a GPU implementation would
+tile over threadblocks/shared memory is expressed here as a Pallas grid
+over (expert, token-block) with BlockSpec-managed HBM→VMEM staging:
+
+* grid axis 0 walks experts — each step stages that expert's (M, H) and
+  (H, M) weight tiles into VMEM once and reuses them for every token block
+  (weight-stationary, the same reuse a CUDA kernel gets from shared mem);
+* grid axis 1 walks token blocks of size BT, sized so the working set
+  (BT·M + M·H + H·M + BT·H floats) stays within the ~16 MiB VMEM budget;
+* the two matmuls target the MXU via ``jnp.dot`` with
+  ``preferred_element_type=f32`` (bf16-friendly on real TPUs).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO — numerically identical,
+structurally the same schedule (see DESIGN.md §Perf for the VMEM/MXU
+estimates used in lieu of on-device timings).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget per grid step (bytes) used to pick the token-block size.
+VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def pick_block_t(t: int, m: int, h: int, dtype_bytes: int = 4) -> int:
+    """Largest power-of-two token block ≤ t whose working set fits VMEM."""
+    bt = 1
+    cand = 1
+    while cand <= t:
+        if t % cand == 0:
+            working = (cand * m + m * h + h * m + cand * h) * dtype_bytes
+            if working <= VMEM_BUDGET:
+                bt = cand
+        cand *= 2
+    return bt
+
+
+def _dot_f32(a, b):
+    """MXU-shaped matmul accumulating in f32.
+
+    On real TPU hardware this is `jnp.dot(..., preferred_element_type=f32)`
+    over the native dtype; the CPU interpret path lacks a BF16 dot, so we
+    upcast explicitly — numerically equal-or-better than MXU accumulation.
+    """
+    return jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+
+
+def _ffn_kernel(x_ref, w1_ref, w2_ref, y_ref):
+    """One (expert, token-block) grid step."""
+    x = x_ref[0]  # (BT, M)
+    w1 = w1_ref[0]  # (M, H)
+    w2 = w2_ref[0]  # (H, M)
+    h = _dot_f32(x, w1)
+    a = jnp.maximum(h, 0.0)
+    y_ref[0] = _dot_f32(a, w2).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def expert_ffn_batched(x, w1, w2, block_t=None):
+    """Batched expert FFN: x (E, T, M), w1 (E, M, H), w2 (E, H, M) → (E, T, M)."""
+    e, t, m = x.shape
+    _, _, h = w1.shape
+    bt = block_t or pick_block_t(t, m, h)
+    assert t % bt == 0, f"token block {bt} must divide T={t}"
+    grid = (e, t // bt)
+    return pl.pallas_call(
+        _ffn_kernel,
+        out_shape=jax.ShapeDtypeStruct((e, t, m), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, m), lambda ei, ti: (ei, ti, 0)),
+            pl.BlockSpec((1, m, h), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((1, h, m), lambda ei, ti: (ei, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, m), lambda ei, ti: (ei, ti, 0)),
+        interpret=True,
+    )(x, w1, w2)
+
+
+def expert_ffn_single(x, w1, w2):
+    """Single-expert convenience: x (N, M), w1 (M, H), w2 (H, M) → (N, M)."""
+    y = expert_ffn_batched(x[None], w1[None], w2[None])
+    return y[0]
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels + custom VJP so the training graph differentiates
+# through the Pallas forward (pallas_call has no automatic VJP).
+# ---------------------------------------------------------------------------
+
+
+def _ffn_bwd_kernel(x_ref, w1_ref, w2_ref, g_ref, dx_ref, dw1_ref, dw2_ref):
+    """Backward for one (expert, token-block) grid step.
+
+    dw1/dw2 blocks are revisited across token blocks of the same expert;
+    Pallas keeps the output block resident in VMEM across consecutive grid
+    steps with the same index, so we initialize on the first token block
+    and accumulate on the rest.
+    """
+    ti = pl.program_id(1)
+    x = x_ref[0]  # (BT, M)
+    w1 = w1_ref[0]  # (M, H)
+    w2 = w2_ref[0]  # (H, M)
+    g = g_ref[0]  # (BT, M)
+    h = _dot_f32(x, w1)
+    a = jnp.maximum(h, 0.0)
+    da = _dot_f32(g, w2.T)
+    dh = jnp.where(h > 0.0, da, 0.0)
+    dx_ref[0] = _dot_f32(dh, w1.T).astype(dx_ref.dtype)
+    dw1_blk = _dot_f32(x.T, dh).astype(dw1_ref.dtype)
+    dw2_blk = _dot_f32(a.T, g).astype(dw2_ref.dtype)
+
+    @pl.when(ti == 0)
+    def _init():
+        dw1_ref[0] = dw1_blk
+        dw2_ref[0] = dw2_blk
+
+    @pl.when(ti != 0)
+    def _acc():
+        dw1_ref[0] += dw1_blk
+        dw2_ref[0] += dw2_blk
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def expert_ffn_bwd_batched(x, w1, w2, g, block_t=None):
+    e, t, m = x.shape
+    _, _, h = w1.shape
+    bt = block_t or pick_block_t(t, m, h)
+    assert t % bt == 0
+    grid = (e, t // bt)
+    return pl.pallas_call(
+        _ffn_bwd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((e, t, m), x.dtype),
+            jax.ShapeDtypeStruct((e, m, h), w1.dtype),
+            jax.ShapeDtypeStruct((e, h, m), w2.dtype),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, m), lambda ei, ti: (ei, ti, 0)),
+            pl.BlockSpec((1, m, h), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((1, h, m), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((1, bt, m), lambda ei, ti: (ei, ti, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, bt, m), lambda ei, ti: (ei, ti, 0)),
+            pl.BlockSpec((1, m, h), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((1, h, m), lambda ei, ti: (ei, 0, 0)),
+        ),
+        interpret=True,
+    )(x, w1, w2, g)
+
+
+@jax.custom_vjp
+def expert_ffn(x, w1, w2):
+    """Differentiable batched expert FFN (Pallas fwd + Pallas bwd)."""
+    return expert_ffn_batched(x, w1, w2)
+
+
+def _fwd(x, w1, w2):
+    return expert_ffn_batched(x, w1, w2), (x, w1, w2)
+
+
+def _bwd(res, g):
+    x, w1, w2 = res
+    dx, dw1, dw2 = expert_ffn_bwd_batched(x, w1, w2, g)
+    return dx, dw1, dw2
+
+
+expert_ffn.defvjp(_fwd, _bwd)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness anchor every
+kernel is tested against (pytest + hypothesis in python/tests)."""
+
+import jax.numpy as jnp
+
+
+def expert_ffn_ref(x, w1, w2):
+    """y[e] = relu(x[e] @ w1[e]) @ w2[e]; x (E, T, M), w1 (E, M, H), w2 (E, H, M)."""
+    h = jnp.einsum("etm,emh->eth", x, w1)
+    a = jnp.maximum(h, 0.0)
+    return jnp.einsum("eth,ehm->etm", a, w2)
+
+
+def expert_ffn_bwd_ref(x, w1, w2, g):
+    """Hand-derived VJP of expert_ffn_ref for checking the Pallas backward."""
+    h = jnp.einsum("etm,emh->eth", x, w1)
+    a = jnp.maximum(h, 0.0)
+    da = jnp.einsum("etm,ehm->eth", g, w2)
+    dh = jnp.where(h > 0.0, da, 0.0)
+    dx = jnp.einsum("eth,emh->etm", dh, w1)
+    dw1 = jnp.einsum("etm,eth->emh", x, dh)
+    dw2 = jnp.einsum("eth,etm->ehm", a, g)
+    return dx, dw1, dw2

@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig6_perf_model` — regenerates the paper's fig6
+//! artifact via the shared harness (see parm::bench::paper::fig6 and
+//! DESIGN.md §Experiment index). Reports land in reports/.
+
+fn main() -> anyhow::Result<()> {
+    // cargo passes --bench; our harness-free binaries ignore flags.
+    parm::util::benchmark::bench_header(
+        "fig6_perf_model",
+        "parm::bench::paper::fig6 (see DESIGN.md experiment index)",
+    );
+    let out = parm::bench::paper::fig6(std::path::Path::new("reports"))?;
+    println!("{out}");
+    Ok(())
+}

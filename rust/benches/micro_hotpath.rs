@@ -1,0 +1,122 @@
+//! `cargo bench --bench micro_hotpath` — L3 hot-path micro benchmarks:
+//! the discrete-event engine, schedule lowering, data-plane collectives,
+//! gating, and (when artifacts exist) the PJRT expert kernel. These are
+//! the numbers the §Perf optimization loop tracks.
+
+use parm::comm::data;
+use parm::config::moe::ParallelDegrees;
+use parm::config::{ClusterProfile, MoeLayerConfig};
+use parm::moe::{gating, ExpertBackend, LayerState, NativeBackend, PjrtExpertBackend};
+use parm::runtime::Runtime;
+use parm::schedule::{iteration_ops, lowering, ScheduleKind};
+use parm::sim::Simulator;
+use parm::util::benchmark::{bench_header, black_box, Bencher};
+use parm::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    bench_header("micro_hotpath", "L3 hot paths (EXPERIMENTS.md §Perf)");
+    let mut b = Bencher::new();
+
+    // -- simulator engine: one 32-GPU S2 iteration, lower + run ----------
+    let cluster = ClusterProfile::testbed_b();
+    let cfg32 = MoeLayerConfig {
+        par: ParallelDegrees { p: 32, n_mp: 4, n_esp: 4 },
+        b: 4,
+        l: 1024,
+        e: 8,
+        m: 1024,
+        h: 2048,
+        k: 2,
+        f: 1.2,
+        dtype_bytes: 4,
+    };
+    let ops = iteration_ops(ScheduleKind::S2, &cfg32);
+    let dag = lowering::lower_ops(&ops, &cfg32, &cluster)?;
+    println!("s2@32gpu DAG: {} tasks", dag.len());
+    b.bench("sim.engine.run s2@32gpu", || {
+        black_box(Simulator::new(&cluster).run(&dag).makespan)
+    });
+    b.bench("sim.lower+run s2@32gpu", || {
+        let dag = lowering::lower_ops(&ops, &cfg32, &cluster).unwrap();
+        black_box(Simulator::new(&cluster).run(&dag).makespan)
+    });
+    b.bench("sim.full_case 4sched@32gpu", || {
+        for kind in [
+            ScheduleKind::Baseline,
+            ScheduleKind::S1,
+            ScheduleKind::S2,
+            ScheduleKind::S2Aas,
+        ] {
+            black_box(lowering::simulate_iteration(kind, &cfg32, &cluster).unwrap().makespan);
+        }
+    });
+
+    // -- data-plane collectives at 1 MiB per rank -------------------------
+    let mut rng = Rng::new(1);
+    let n = 262_144; // 1 MiB of f32 per rank
+    let world0: Vec<Vec<f32>> = (0..8).map(|_| rng.f32_vec(n)).collect();
+    let group: Vec<usize> = (0..8).collect();
+    b.bench("data.alltoall 8x1MiB", || {
+        let mut w = world0.clone();
+        data::alltoall(&mut w, &group);
+        black_box(w[0][0])
+    });
+    b.bench("data.allgather 8x1MiB", || {
+        let mut w = world0.clone();
+        data::allgather(&mut w, &group);
+        black_box(w[0][0])
+    });
+    b.bench("data.allreduce 8x1MiB", || {
+        let mut w = world0.clone();
+        data::allreduce(&mut w, &group);
+        black_box(w[0][0])
+    });
+
+    // -- gating at BERT-ish shape -----------------------------------------
+    let (nt, m, e) = (2048usize, 768usize, 8usize);
+    let tokens = rng.f32_vec(nt * m);
+    let wg = rng.f32_vec(m * e);
+    b.bench("gate 2048tok x 768d x 8e", || {
+        black_box(gating::gate(&tokens, &wg, nt, m, e, 2, 1024).assignments.len())
+    });
+
+    // -- full data-plane schedule execution (small config) ----------------
+    let small = MoeLayerConfig::test_default();
+    let state = LayerState::random(&small, 3)?;
+    b.bench("dataplane.s1 p8 small", || {
+        black_box(
+            parm::moe::run_schedule(ScheduleKind::S1, &state, &mut NativeBackend)
+                .unwrap()
+                .outputs[0][0],
+        )
+    });
+
+    // -- PJRT expert kernel (needs artifacts) ------------------------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = Runtime::load(std::path::Path::new("artifacts"))?;
+        let mut pjrt = PjrtExpertBackend::new(rt, "expert_ffn_1024x512x512")?;
+        let (kn, km, kh) = pjrt.shape();
+        let x = rng.f32_vec(kn * km);
+        let w1 = rng.f32_vec(km * kh);
+        let w2 = rng.f32_vec(kh * km);
+        pjrt.expert_ffn(&x, &w1, &w2, kn, km, kh)?; // compile once
+        let flops = 2.0 * 2.0 * (kn * km * kh) as f64;
+        let r = b.bench("pjrt.expert_ffn 1024x512x512", || {
+            black_box(pjrt.expert_ffn(&x, &w1, &w2, kn, km, kh).unwrap()[0])
+        });
+        println!(
+            "  → {:.1} GFLOP/s through PJRT (Pallas-lowered kernel)",
+            flops / r.median / 1e9
+        );
+        let mut native = NativeBackend;
+        let r = b.bench("native.expert_ffn 1024x512x512", || {
+            black_box(native.expert_ffn(&x, &w1, &w2, kn, km, kh).unwrap()[0])
+        });
+        println!("  → {:.1} GFLOP/s native Rust", flops / r.median / 1e9);
+    } else {
+        println!("(artifacts missing — skipping PJRT kernel benches)");
+    }
+
+    println!("\nJSON: {}", b.to_json().to_string());
+    Ok(())
+}

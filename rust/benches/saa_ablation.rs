@@ -1,0 +1,14 @@
+//! `cargo bench --bench saa_ablation` — regenerates the paper's saa
+//! artifact via the shared harness (see parm::bench::paper::saa_ablation and
+//! DESIGN.md §Experiment index). Reports land in reports/.
+
+fn main() -> anyhow::Result<()> {
+    // cargo passes --bench; our harness-free binaries ignore flags.
+    parm::util::benchmark::bench_header(
+        "saa_ablation",
+        "parm::bench::paper::saa_ablation (see DESIGN.md experiment index)",
+    );
+    let out = parm::bench::paper::saa_ablation(std::path::Path::new("reports"))?;
+    println!("{out}");
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! `cargo bench --bench selection_accuracy` — regenerates the paper's selection
+//! artifact via the shared harness (see parm::bench::paper::selection_accuracy and
+//! DESIGN.md §Experiment index). Reports land in reports/.
+
+fn main() -> anyhow::Result<()> {
+    // cargo passes --bench; our harness-free binaries ignore flags.
+    parm::util::benchmark::bench_header(
+        "selection_accuracy",
+        "parm::bench::paper::selection_accuracy (see DESIGN.md experiment index)",
+    );
+    let out = parm::bench::paper::selection_accuracy(std::path::Path::new("reports"))?;
+    println!("{out}");
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! `cargo bench --bench table4_speedups` — regenerates the paper's table4
+//! artifact via the shared harness (see parm::bench::paper::table4 and
+//! DESIGN.md §Experiment index). Reports land in reports/.
+
+fn main() -> anyhow::Result<()> {
+    // cargo passes --bench; our harness-free binaries ignore flags.
+    parm::util::benchmark::bench_header(
+        "table4_speedups",
+        "parm::bench::paper::table4 (see DESIGN.md experiment index)",
+    );
+    let out = parm::bench::paper::table4(std::path::Path::new("reports"))?;
+    println!("{out}");
+    Ok(())
+}

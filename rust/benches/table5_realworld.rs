@@ -1,0 +1,14 @@
+//! `cargo bench --bench table5_realworld` — regenerates the paper's table5
+//! artifact via the shared harness (see parm::bench::paper::table5 and
+//! DESIGN.md §Experiment index). Reports land in reports/.
+
+fn main() -> anyhow::Result<()> {
+    // cargo passes --bench; our harness-free binaries ignore flags.
+    parm::util::benchmark::bench_header(
+        "table5_realworld",
+        "parm::bench::paper::table5 (see DESIGN.md experiment index)",
+    );
+    let out = parm::bench::paper::table5(std::path::Path::new("reports"))?;
+    println!("{out}");
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation (§VI) from the simulator + perf model + trainer, printing
+//! paper-style rows and writing CSV/markdown reports.
+
+pub mod paper;
+pub mod runner;
+
+pub use paper::{fig1, fig6, fig7, saa_ablation, selection_accuracy, table4, table5};
+pub use runner::{run_sweep, CaseResult, ModelCache};

@@ -1,0 +1,363 @@
+//! Paper-artifact generators: one function per table/figure of §VI.
+//! Each returns rendered text (printed by the bench binaries / CLI) and
+//! writes CSV+markdown into `reports/`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::bench::runner::{self, CaseResult};
+use crate::config::moe::ParallelDegrees;
+use crate::config::{sweep, ClusterProfile, ModelConfig, SweepFilter};
+use crate::perfmodel::fit::{measure_collective, CollKind, PerfModel, FIT_SIZES};
+use crate::schedule::ScheduleKind;
+use crate::train::simtime::model_iteration_time;
+use crate::util::stats::{mean, Histogram};
+use crate::util::table::{fmt_speedup, Table};
+
+fn write_report(dir: &Path, name: &str, table: &Table) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{name}.csv")), table.to_csv())?;
+    std::fs::write(dir.join(format!("{name}.md")), table.to_markdown())?;
+    Ok(())
+}
+
+/// Fig 1 — communication-time ratio of the baseline schedule over the
+/// Table III grid at P = 32 on the 32-GPU cluster (paper: 67.9%–96.0%).
+pub fn fig1(reports: &Path) -> Result<String> {
+    let cluster = ClusterProfile::testbed_b();
+    let configs = sweep::sweep_at_p(&cluster, 32, SweepFilter::Feasible);
+    let results = runner::run_sweep(&configs, &cluster, true)?;
+    let ratios: Vec<f64> = results.iter().map(|r| r.comm_ratio_baseline * 100.0).collect();
+
+    let mut t = Table::new(&["metric", "value"]).numeric();
+    t.row(&["configs".into(), format!("{}", ratios.len())]);
+    t.row(&["min comm %".into(), format!("{:.1}", ratios.iter().cloned().fold(f64::MAX, f64::min))]);
+    t.row(&["mean comm %".into(), format!("{:.1}", mean(&ratios))]);
+    t.row(&["max comm %".into(), format!("{:.1}", ratios.iter().cloned().fold(0.0, f64::max))]);
+    let h = Histogram::build(&ratios, 50.0, 100.0, 10);
+    for ((lo, hi), n) in h.edges().iter().zip(h.counts.iter()) {
+        t.row(&[format!("{lo:.0}–{hi:.0}%"), format!("{n}")]);
+    }
+    write_report(reports, "fig1_comm_ratio", &t)?;
+
+    // Per-config CSV for plotting.
+    let mut detail = Table::new(&["config", "comm_ratio_pct"]).numeric();
+    for r in &results {
+        detail.row(&[r.cfg.id(), format!("{:.2}", r.comm_ratio_baseline * 100.0)]);
+    }
+    write_report(reports, "fig1_comm_ratio_detail", &detail)?;
+    Ok(format!(
+        "Fig 1 — baseline comm-time ratio @32 GPUs (paper: 67.9%–96.0%)\n{}",
+        t.to_text()
+    ))
+}
+
+/// Fig 6 — α-β fits per collective on both testbeds (paper publishes
+/// AG_MP: α=6.64e-4/β=5.38e-10 on A; α=1.09e-4/β=7.14e-10 on B).
+pub fn fig6(reports: &Path) -> Result<String> {
+    let mut t = Table::new(&["testbed", "collective", "alpha (s)", "beta (s/B)", "r²"]).numeric();
+    let mut detail = Table::new(&["testbed", "collective", "bytes", "seconds"]).numeric();
+    for (cluster, par) in [
+        (ClusterProfile::testbed_a(), ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 }),
+        (ClusterProfile::testbed_b(), ParallelDegrees { p: 32, n_mp: 4, n_esp: 4 }),
+    ] {
+        let model = PerfModel::fit(&cluster, par)?;
+        for kind in CollKind::ALL {
+            let f = model.get(kind);
+            t.row(&[
+                cluster.name.clone(),
+                kind.name().into(),
+                format!("{:.3e}", f.intercept),
+                format!("{:.3e}", f.slope),
+                format!("{:.5}", f.r2),
+            ]);
+            for &x in &FIT_SIZES {
+                let y = measure_collective(&cluster, par, kind, x)?;
+                detail.row(&[
+                    cluster.name.clone(),
+                    kind.name().into(),
+                    format!("{x:.0}"),
+                    format!("{y:.6e}"),
+                ]);
+            }
+        }
+    }
+    write_report(reports, "fig6_perf_model", &t)?;
+    write_report(reports, "fig6_perf_model_points", &detail)?;
+    Ok(format!(
+        "Fig 6 — fitted α-β per collective (linear fits, r² ≈ 1)\n{}",
+        t.to_text()
+    ))
+}
+
+fn cell_results<'a>(
+    results: &'a [CaseResult],
+    n_mp: usize,
+    n_esp: usize,
+    p: Option<usize>,
+) -> Vec<&'a CaseResult> {
+    results
+        .iter()
+        .filter(|r| {
+            r.cfg.par.n_mp == n_mp
+                && r.cfg.par.n_esp == n_esp
+                && p.map(|p| r.cfg.par.p == p).unwrap_or(true)
+        })
+        .collect()
+}
+
+/// Table IV — averaged speedups of S1/S2/Parm over the baseline per
+/// (N_MP, N_ESP) cell, on testbed A and testbed B (8/16/32 GPUs).
+pub fn table4(reports: &Path) -> Result<String> {
+    let tb_a = ClusterProfile::testbed_a();
+    let tb_b = ClusterProfile::testbed_b();
+    let sweep_a = sweep::sweep_table3(&tb_a, SweepFilter::Feasible);
+    let sweep_b = sweep::sweep_table3(&tb_b, SweepFilter::Feasible);
+    eprintln!("table4: {} cases on A, {} on B", sweep_a.len(), sweep_b.len());
+    let res_a = runner::run_sweep(&sweep_a, &tb_a, true)?;
+    let res_b = runner::run_sweep(&sweep_b, &tb_b, true)?;
+
+    let mut t = Table::new(&[
+        "Schedule", "N_MP", "N_ESP", "Speedup (T-A)", "T-B 8-GPU", "T-B 16-GPU", "T-B 32-GPU",
+    ])
+    .numeric();
+    let avg = |rs: &[&CaseResult], f: &dyn Fn(&CaseResult) -> f64| -> String {
+        if rs.is_empty() {
+            "—".into()
+        } else {
+            fmt_speedup(mean(&rs.iter().map(|r| f(r)).collect::<Vec<_>>()))
+        }
+    };
+    for (sched, f) in [
+        ("S1", &CaseResult::speedup_s1 as &dyn Fn(&CaseResult) -> f64),
+        ("S2", &CaseResult::speedup_s2),
+        ("Parm", &CaseResult::speedup_parm),
+    ] {
+        for (n_mp, n_esp) in sweep::table4_cells() {
+            let a = cell_results(&res_a, n_mp, n_esp, Some(8));
+            let b8 = cell_results(&res_b, n_mp, n_esp, Some(8));
+            let b16 = cell_results(&res_b, n_mp, n_esp, Some(16));
+            let b32 = cell_results(&res_b, n_mp, n_esp, Some(32));
+            t.row(&[
+                sched.into(),
+                format!("{n_mp}"),
+                format!("{n_esp}"),
+                avg(&a, f),
+                avg(&b8, f),
+                avg(&b16, f),
+                avg(&b32, f),
+            ]);
+        }
+    }
+    write_report(reports, "table4_speedups", &t)?;
+
+    // Overall range (the paper's 1.13×–5.77× headline).
+    let all: Vec<f64> = res_a
+        .iter()
+        .chain(res_b.iter())
+        .map(|r| r.speedup_parm())
+        .collect();
+    let lo = all.iter().cloned().fold(f64::MAX, f64::min);
+    let hi = all.iter().cloned().fold(0.0, f64::max);
+    Ok(format!(
+        "Table IV — averaged speedups vs baseline (paper: 1.13×–5.77× overall)\n{}\noverall Parm speedup range: {:.2}×–{:.2}× over {} cases\n",
+        t.to_text(),
+        lo,
+        hi,
+        all.len()
+    ))
+}
+
+/// Fig 7 — Parm speedup distribution at P=32, N_MP=N_ESP=4 (paper: avg
+/// 4.91×, ≥4× in ~89% of cases).
+pub fn fig7(reports: &Path) -> Result<String> {
+    let cluster = ClusterProfile::testbed_b();
+    let configs: Vec<_> = sweep::sweep_at_p(&cluster, 32, SweepFilter::Feasible)
+        .into_iter()
+        .filter(|c| c.par.n_mp == 4 && c.par.n_esp == 4)
+        .collect();
+    let results = runner::run_sweep(&configs, &cluster, true)?;
+    let speedups: Vec<f64> = results.iter().map(|r| r.speedup_parm()).collect();
+
+    let h = Histogram::build(&speedups, 1.0, 7.0, 12);
+    let mut t = Table::new(&["speedup bucket", "cases", "frac %"]).numeric();
+    for ((lo, hi), n) in h.edges().iter().zip(h.counts.iter()) {
+        t.row(&[
+            format!("{lo:.1}–{hi:.1}×"),
+            format!("{n}"),
+            format!("{:.1}", 100.0 * *n as f64 / h.total.max(1) as f64),
+        ]);
+    }
+    t.row(&["average".into(), format!("{:.2}×", mean(&speedups)), "".into()]);
+    let frac4 = Histogram::frac_at_least(&speedups, 4.0) * 100.0;
+    t.row(&["≥ 4×".into(), "".into(), format!("{frac4:.1}")]);
+    write_report(reports, "fig7_histogram", &t)?;
+    Ok(format!(
+        "Fig 7 — Parm speedup @32 GPUs, N_MP=N_ESP=4 (paper: avg 4.91×, ≥4× in ~89%)\n{}",
+        t.to_text()
+    ))
+}
+
+/// Table V — real-world MoE models (BERT-Base / GPT-2), N_MP=N_ESP=4;
+/// experts = 2 on testbed A, 8 on testbed B. Paper: ≈3× speedup.
+pub fn table5(reports: &Path) -> Result<String> {
+    let mut t = Table::new(&[
+        "Base Model", "Testbed", "DeepSpeed-MoE (ms)", "Parm (ms)", "Speedup",
+    ])
+    .numeric();
+    let mut cache = runner::ModelCache::default();
+    for (model_ctor, label) in [
+        (&ModelConfig::bert_base_moe as &dyn Fn(usize) -> ModelConfig, "BERT-Base"),
+        (&ModelConfig::gpt2_moe, "GPT-2"),
+    ] {
+        for (cluster, experts, tb) in [
+            (ClusterProfile::testbed_a(), 2usize, "A"),
+            (ClusterProfile::testbed_b(), 8, "B"),
+        ] {
+            let model = model_ctor(experts);
+            let par = ParallelDegrees { p: cluster.total_gpus(), n_mp: 4, n_esp: 4 };
+            let layer = model.moe_layer(par);
+            let pm = cache.get(&cluster, par)?;
+            let choice = crate::perfmodel::choose_schedule(pm, &layer);
+            let base =
+                model_iteration_time(&model, par, &cluster, ScheduleKind::Baseline)?;
+            let parm = model_iteration_time(&model, par, &cluster, choice)?;
+            t.row(&[
+                label.into(),
+                tb.into(),
+                format!("{:.0}", base.total() * 1e3),
+                format!("{:.0}", parm.total() * 1e3),
+                fmt_speedup(base.total() / parm.total()),
+            ]);
+        }
+    }
+    write_report(reports, "table5_realworld", &t)?;
+    Ok(format!(
+        "Table V — real-world MoE models, N_MP=N_ESP=4 (paper: 2.98×–3.15×)\n{}",
+        t.to_text()
+    ))
+}
+
+/// §VI-C SAA-vs-AAS ablation (paper: SAA ≈ 1.09%/1.12% better).
+pub fn saa_ablation(reports: &Path) -> Result<String> {
+    let mut t = Table::new(&["testbed", "cases", "mean gain %", "max gain %"]).numeric();
+    for cluster in [ClusterProfile::testbed_a(), ClusterProfile::testbed_b()] {
+        let configs: Vec<_> = sweep::sweep_table3(&cluster, SweepFilter::Feasible)
+            .into_iter()
+            .filter(|c| c.par.n_mp >= 2)
+            .step_by(7) // decimate: ablation needs a sample, not the grid
+            .collect();
+        let results = runner::run_sweep(&configs, &cluster, false)?;
+        let gains: Vec<f64> = results
+            .iter()
+            .map(|r| (r.t_s2_aas - r.t_s2) / r.t_s2_aas * 100.0)
+            .collect();
+        t.row(&[
+            cluster.name.clone(),
+            format!("{}", gains.len()),
+            format!("{:.2}", mean(&gains)),
+            format!("{:.2}", gains.iter().cloned().fold(f64::MIN, f64::max)),
+        ]);
+    }
+    write_report(reports, "saa_ablation", &t)?;
+    Ok(format!(
+        "SAA vs AAS (S2 combine overlap; paper: ~1.1% average gain)\n{}",
+        t.to_text()
+    ))
+}
+
+/// Algorithm-1 selection accuracy (ours): how often the α-β choice agrees
+/// with the simulated-best of S1/S2, and the regret when it does not.
+pub fn selection_accuracy(reports: &Path) -> Result<String> {
+    let mut t =
+        Table::new(&["testbed", "cases", "accuracy %", "mean regret %", "max regret %"]).numeric();
+    for cluster in [ClusterProfile::testbed_a(), ClusterProfile::testbed_b()] {
+        let configs: Vec<_> = sweep::sweep_table3(&cluster, SweepFilter::Feasible)
+            .into_iter()
+            .filter(|c| c.par.n_mp >= 2)
+            .step_by(5)
+            .collect();
+        let results = runner::run_sweep(&configs, &cluster, false)?;
+        let mut correct = 0usize;
+        let mut regrets: Vec<f64> = Vec::new();
+        for r in &results {
+            let best = r.t_s1.min(r.t_s2);
+            let got = r.t_parm();
+            if (got - best).abs() < 1e-12 {
+                correct += 1;
+            }
+            regrets.push((got - best) / best * 100.0);
+        }
+        t.row(&[
+            cluster.name.clone(),
+            format!("{}", results.len()),
+            format!("{:.1}", 100.0 * correct as f64 / results.len().max(1) as f64),
+            format!("{:.2}", mean(&regrets)),
+            format!("{:.2}", regrets.iter().cloned().fold(f64::MIN, f64::max)),
+        ]);
+    }
+    write_report(reports, "selection_accuracy", &t)?;
+    Ok(format!(
+        "Algorithm 1 selection accuracy (predicted vs simulated best of S1/S2)\n{}",
+        t.to_text()
+    ))
+}
+
+/// Per-(N_MP, N_ESP) breakdown of Parm's choices — which schedule wins
+/// where (the §IV-B "not mutually exclusive" claim, quantified).
+pub fn choice_breakdown(reports: &Path) -> Result<String> {
+    let cluster = ClusterProfile::testbed_b();
+    let configs: Vec<_> = sweep::sweep_table3(&cluster, SweepFilter::Feasible)
+        .into_iter()
+        .filter(|c| c.par.n_mp >= 2)
+        .collect();
+    let results = runner::run_sweep(&configs, &cluster, true)?;
+    let mut counts: BTreeMap<(usize, usize), (usize, usize)> = BTreeMap::new();
+    for r in &results {
+        let e = counts.entry((r.cfg.par.n_mp, r.cfg.par.n_esp)).or_default();
+        let sim_best_s1 = r.t_s1 <= r.t_s2;
+        if sim_best_s1 {
+            e.0 += 1;
+        } else {
+            e.1 += 1;
+        }
+    }
+    let mut t = Table::new(&["N_MP", "N_ESP", "S1 wins", "S2 wins"]).numeric();
+    for ((n_mp, n_esp), (s1, s2)) in &counts {
+        t.row(&[
+            format!("{n_mp}"),
+            format!("{n_esp}"),
+            format!("{s1}"),
+            format!("{s2}"),
+        ]);
+    }
+    write_report(reports, "choice_breakdown", &t)?;
+    Ok(format!("S1-vs-S2 winner breakdown on {}\n{}", cluster.name, t.to_text()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("parm_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn table5_generates() {
+        let out = table5(&tmp()).unwrap();
+        assert!(out.contains("BERT-Base"));
+        assert!(out.contains("×"));
+    }
+
+    #[test]
+    fn fig6_generates() {
+        let out = fig6(&tmp()).unwrap();
+        assert!(out.contains("ag_mp"));
+        assert!(out.contains("testbed_a"));
+    }
+}

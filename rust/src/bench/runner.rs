@@ -1,0 +1,165 @@
+//! Sweep runner: simulate every schedule over a set of MoE layer
+//! configurations, with the α-β model (for Parm's choice) fitted once per
+//! parallel layout.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::moe::ParallelDegrees;
+use crate::config::{ClusterProfile, MoeLayerConfig};
+use crate::perfmodel::{choose_schedule, PerfModel};
+use crate::schedule::{lowering, ScheduleKind};
+
+/// One configuration's simulated iteration times.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub cfg: MoeLayerConfig,
+    pub t_baseline: f64,
+    pub t_s1: f64,
+    pub t_s2: f64,
+    pub t_s2_aas: f64,
+    pub parm_choice: ScheduleKind,
+    /// Fig 1 quantity: fraction of baseline iteration not covered by
+    /// compute.
+    pub comm_ratio_baseline: f64,
+}
+
+impl CaseResult {
+    pub fn t_parm(&self) -> f64 {
+        match self.parm_choice {
+            ScheduleKind::S1 => self.t_s1,
+            _ => self.t_s2,
+        }
+    }
+
+    pub fn speedup_s1(&self) -> f64 {
+        self.t_baseline / self.t_s1
+    }
+
+    pub fn speedup_s2(&self) -> f64 {
+        self.t_baseline / self.t_s2
+    }
+
+    pub fn speedup_parm(&self) -> f64 {
+        self.t_baseline / self.t_parm()
+    }
+}
+
+/// Per-layout α-β model cache (fitting is itself a simulation sweep, so
+/// reuse across the hundreds of grid rows sharing a layout).
+#[derive(Default)]
+pub struct ModelCache {
+    map: BTreeMap<(String, usize, usize, usize), PerfModel>,
+}
+
+impl ModelCache {
+    pub fn get(
+        &mut self,
+        cluster: &ClusterProfile,
+        par: ParallelDegrees,
+    ) -> Result<&PerfModel> {
+        let key = (cluster.name.clone(), par.p, par.n_mp, par.n_esp);
+        if !self.map.contains_key(&key) {
+            let m = PerfModel::fit(cluster, par)?;
+            self.map.insert(key.clone(), m);
+        }
+        Ok(&self.map[&key])
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Simulate one configuration under every schedule.
+pub fn run_case(
+    cfg: &MoeLayerConfig,
+    cluster: &ClusterProfile,
+    cache: &mut ModelCache,
+) -> Result<CaseResult> {
+    let base = lowering::simulate_iteration(ScheduleKind::Baseline, cfg, cluster)?;
+    let t_s1 = lowering::simulate_iteration(ScheduleKind::S1, cfg, cluster)?.makespan;
+    let t_s2 = lowering::simulate_iteration(ScheduleKind::S2, cfg, cluster)?.makespan;
+    let t_s2_aas = lowering::simulate_iteration(ScheduleKind::S2Aas, cfg, cluster)?.makespan;
+    let model = cache.get(cluster, cfg.par)?;
+    let parm_choice = choose_schedule(model, cfg);
+    Ok(CaseResult {
+        cfg: cfg.clone(),
+        t_baseline: base.makespan,
+        t_s1,
+        t_s2,
+        t_s2_aas,
+        parm_choice,
+        comm_ratio_baseline: base.comm_ratio(),
+    })
+}
+
+/// Run the whole sweep (progress printed every ~10%).
+pub fn run_sweep(
+    configs: &[MoeLayerConfig],
+    cluster: &ClusterProfile,
+    verbose: bool,
+) -> Result<Vec<CaseResult>> {
+    let mut cache = ModelCache::default();
+    let mut out = Vec::with_capacity(configs.len());
+    let tick = (configs.len() / 10).max(1);
+    for (i, cfg) in configs.iter().enumerate() {
+        out.push(run_case(cfg, cluster, &mut cache)?);
+        if verbose && (i + 1) % tick == 0 {
+            eprintln!("  sweep {}/{} on {}", i + 1, configs.len(), cluster.name);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(p: usize, n_mp: usize, n_esp: usize) -> MoeLayerConfig {
+        MoeLayerConfig {
+            par: ParallelDegrees { p, n_mp, n_esp },
+            b: 2,
+            l: 512,
+            e: p / n_esp,
+            m: 1024,
+            h: 1024,
+            k: 2,
+            f: 1.2,
+            dtype_bytes: 4,
+        }
+    }
+
+    #[test]
+    fn case_speedups_exceed_one() {
+        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let mut cache = ModelCache::default();
+        let r = run_case(&cfg(8, 2, 2), &cluster, &mut cache).unwrap();
+        assert!(r.speedup_s1() > 1.0, "{r:?}");
+        assert!(r.speedup_s2() > 1.0, "{r:?}");
+        assert!(r.speedup_parm() >= r.speedup_s1().min(r.speedup_s2()));
+        assert!(r.comm_ratio_baseline > 0.0 && r.comm_ratio_baseline < 1.0);
+    }
+
+    #[test]
+    fn model_cache_reused() {
+        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let mut cache = ModelCache::default();
+        run_case(&cfg(8, 2, 2), &cluster, &mut cache).unwrap();
+        run_case(&cfg(8, 2, 2), &cluster, &mut cache).unwrap();
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn sweep_runs_small_batch() {
+        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let configs = vec![cfg(8, 2, 2), cfg(8, 4, 2), cfg(8, 1, 2)];
+        let res = run_sweep(&configs, &cluster, false).unwrap();
+        assert_eq!(res.len(), 3);
+    }
+}

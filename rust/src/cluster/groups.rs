@@ -1,0 +1,237 @@
+//! Process-group construction for MP + EP + ESP (paper §II-B, Fig 2).
+//!
+//! Rank layout (matching DeepSpeed-MoE's contiguous placement, which the
+//! paper's observations assume):
+//!
+//! * **ESP blocks**: ranks `[i·N_ESP, (i+1)·N_ESP)` form ESP group `i`.
+//!   Block `i` collectively hosts the experts of EP slot `i`, each expert
+//!   sharded `N_ESP` ways across the block. Placed intra-node whenever
+//!   `N_ESP ≤ gpus_per_node` (Observation 1: "intra-node ESP-AllGather").
+//! * **EP groups**: ranks with equal offset within their ESP block —
+//!   `{ off + j·N_ESP : j ∈ 0..N_EP }` — stride across blocks (and nodes;
+//!   Observation 1: "inter-node EP-AlltoAll").
+//! * **MP groups**: `N_MP` consecutive ranks; activations entering the MoE
+//!   layer are duplicated within an MP group.
+//! * **EP&ESP product group**: all `P = N_EP · N_ESP` ranks — the domain of
+//!   Parm's fused AlltoAll (§III-C).
+//!
+//! In Fig 2's example (`N_MP = N_EP = N_ESP = 2`, two nodes × two GPUs):
+//! ESP groups {0,1},{2,3}; EP groups {0,2},{1,3}; MP groups {0,1},{2,3} —
+//! which this module reproduces (see tests).
+
+use anyhow::Result;
+
+use crate::config::moe::ParallelDegrees;
+use crate::config::ClusterProfile;
+
+/// The collective-communication domains used by the schedules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GroupKind {
+    Mp,
+    Ep,
+    Esp,
+    /// The fused EP×ESP product group (all ranks of the layer).
+    EpEsp,
+}
+
+/// Materialized rank sets for every group of a parallel layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProcessGroups {
+    pub par: ParallelDegrees,
+}
+
+impl ProcessGroups {
+    pub fn new(par: ParallelDegrees) -> Result<ProcessGroups> {
+        par.validate()?;
+        Ok(ProcessGroups { par })
+    }
+
+    pub fn world(&self) -> Vec<usize> {
+        (0..self.par.p).collect()
+    }
+
+    /// ESP group (rank set) containing `rank`.
+    pub fn esp_group(&self, rank: usize) -> Vec<usize> {
+        let block = rank / self.par.n_esp;
+        (block * self.par.n_esp..(block + 1) * self.par.n_esp).collect()
+    }
+
+    /// EP group containing `rank`: equal offsets across ESP blocks.
+    pub fn ep_group(&self, rank: usize) -> Vec<usize> {
+        let off = rank % self.par.n_esp;
+        (0..self.par.n_ep()).map(|j| off + j * self.par.n_esp).collect()
+    }
+
+    /// MP group containing `rank`: consecutive block of `n_mp`.
+    pub fn mp_group(&self, rank: usize) -> Vec<usize> {
+        let block = rank / self.par.n_mp;
+        (block * self.par.n_mp..(block + 1) * self.par.n_mp).collect()
+    }
+
+    /// Group of `kind` containing `rank`.
+    pub fn group(&self, kind: GroupKind, rank: usize) -> Vec<usize> {
+        match kind {
+            GroupKind::Mp => self.mp_group(rank),
+            GroupKind::Ep => self.ep_group(rank),
+            GroupKind::Esp => self.esp_group(rank),
+            GroupKind::EpEsp => self.world(),
+        }
+    }
+
+    /// All distinct groups of a kind (each rank appears in exactly one).
+    pub fn all_groups(&self, kind: GroupKind) -> Vec<Vec<usize>> {
+        let mut seen = vec![false; self.par.p];
+        let mut out = Vec::new();
+        for r in 0..self.par.p {
+            if !seen[r] {
+                let g = self.group(kind, r);
+                for &m in &g {
+                    seen[m] = true;
+                }
+                out.push(g);
+            }
+        }
+        out
+    }
+
+    /// EP slot (== ESP block index) of `rank`.
+    pub fn ep_slot(&self, rank: usize) -> usize {
+        rank / self.par.n_esp
+    }
+
+    /// Offset of `rank` within its ESP block (its shard index).
+    pub fn esp_shard(&self, rank: usize) -> usize {
+        rank % self.par.n_esp
+    }
+
+    /// Rank's index within its MP group (0 = MP leader).
+    pub fn mp_index(&self, rank: usize) -> usize {
+        rank % self.par.n_mp
+    }
+
+    /// EP slot hosting `expert` when `e` experts are distributed round-robin
+    /// blocks over `n_ep` slots (contiguous: slot = expert / (e / n_ep)).
+    pub fn slot_of_expert(&self, expert: usize, e: usize) -> usize {
+        let n_ep = self.par.n_ep();
+        if e >= n_ep {
+            expert / (e / n_ep)
+        } else {
+            // Fewer experts than slots: experts replicated? No — slots
+            // beyond `e` idle; expert i lives in slot i.
+            expert
+        }
+    }
+
+    /// Experts hosted by `slot` (empty if the slot is idle).
+    pub fn experts_of_slot(&self, slot: usize, e: usize) -> std::ops::Range<usize> {
+        let n_ep = self.par.n_ep();
+        if e >= n_ep {
+            let per = e / n_ep;
+            slot * per..(slot + 1) * per
+        } else if slot < e {
+            slot..slot + 1
+        } else {
+            0..0
+        }
+    }
+
+    /// True when every rank of the group lies on one node of `cluster`.
+    pub fn group_intra_node(&self, kind: GroupKind, rank: usize, cluster: &ClusterProfile) -> bool {
+        let g = self.group(kind, rank);
+        let first = cluster.node_of(g[0]);
+        g.iter().all(|&r| cluster.node_of(r) == first)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pg(p: usize, n_mp: usize, n_esp: usize) -> ProcessGroups {
+        ProcessGroups::new(ParallelDegrees { p, n_mp, n_esp }).unwrap()
+    }
+
+    #[test]
+    fn fig2_layout() {
+        // N_MP = N_EP = N_ESP = 2, P = 4 (two nodes × two GPUs).
+        let g = pg(4, 2, 2);
+        assert_eq!(g.esp_group(0), vec![0, 1]);
+        assert_eq!(g.esp_group(3), vec![2, 3]);
+        assert_eq!(g.ep_group(0), vec![0, 2]);
+        assert_eq!(g.ep_group(1), vec![1, 3]);
+        assert_eq!(g.mp_group(0), vec![0, 1]);
+        assert_eq!(g.mp_group(2), vec![2, 3]);
+        assert_eq!(g.group(GroupKind::EpEsp, 0), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn groups_partition_world() {
+        for (p, n_mp, n_esp) in [(8, 2, 2), (8, 4, 2), (16, 2, 4), (32, 4, 4), (8, 1, 1)] {
+            let g = pg(p, n_mp, n_esp);
+            for kind in [GroupKind::Mp, GroupKind::Ep, GroupKind::Esp] {
+                let groups = g.all_groups(kind);
+                let mut all: Vec<usize> = groups.concat();
+                all.sort_unstable();
+                assert_eq!(all, (0..p).collect::<Vec<_>>(), "{kind:?} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn group_membership_consistent() {
+        let g = pg(16, 2, 4);
+        for r in 0..16 {
+            for kind in [GroupKind::Mp, GroupKind::Ep, GroupKind::Esp] {
+                let grp = g.group(kind, r);
+                assert!(grp.contains(&r), "{kind:?} group of {r} = {grp:?}");
+                // Every member's group is identical.
+                for &m in &grp {
+                    assert_eq!(g.group(kind, m), grp);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ep_esp_cross_section() {
+        // EP and ESP groups of a rank intersect exactly in that rank.
+        let g = pg(32, 4, 4);
+        for r in 0..32 {
+            let ep = g.ep_group(r);
+            let esp = g.esp_group(r);
+            let inter: Vec<usize> = ep.iter().filter(|x| esp.contains(x)).cloned().collect();
+            assert_eq!(inter, vec![r]);
+        }
+    }
+
+    #[test]
+    fn expert_slots() {
+        let g = pg(8, 1, 2); // n_ep = 4
+        // 8 experts over 4 slots: 2 per slot.
+        assert_eq!(g.slot_of_expert(0, 8), 0);
+        assert_eq!(g.slot_of_expert(3, 8), 1);
+        assert_eq!(g.experts_of_slot(2, 8), 4..6);
+        // 2 experts over 4 slots: slots 2,3 idle.
+        assert_eq!(g.slot_of_expert(1, 2), 1);
+        assert_eq!(g.experts_of_slot(3, 2), 0..0);
+    }
+
+    #[test]
+    fn intra_node_detection() {
+        let cluster = ClusterProfile::testbed_b(); // 4 GPUs/node
+        let g = pg(32, 4, 4);
+        for r in 0..32 {
+            assert!(g.group_intra_node(GroupKind::Esp, r, &cluster));
+            assert!(g.group_intra_node(GroupKind::Mp, r, &cluster));
+            assert!(!g.group_intra_node(GroupKind::Ep, r, &cluster));
+        }
+    }
+
+    #[test]
+    fn shard_and_slot_indices() {
+        let g = pg(8, 2, 4);
+        assert_eq!(g.ep_slot(5), 1);
+        assert_eq!(g.esp_shard(5), 1);
+        assert_eq!(g.mp_index(5), 1);
+    }
+}

@@ -1,0 +1,6 @@
+//! Cluster-side abstractions: process-group construction for the hybrid
+//! MP+EP+ESP parallelism and placement reasoning over a [`ClusterProfile`].
+
+pub mod groups;
+
+pub use groups::{GroupKind, ProcessGroups};

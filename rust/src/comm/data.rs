@@ -1,0 +1,305 @@
+//! Data-plane collectives over in-process rank buffers.
+//!
+//! `world[r]` is rank `r`'s local buffer. A collective takes the world and
+//! a *group* (an ordered list of distinct rank ids); only group members'
+//! buffers are touched. Semantics follow NCCL/MPI conventions:
+//!
+//! * `allgather`  — every member ends with the concatenation of all
+//!   members' inputs, in group order.
+//! * `reduce_scatter` — inputs (equal length, divisible by g) are summed
+//!   elementwise; member `j` keeps the `j`-th 1/g chunk of the sum.
+//! * `allreduce` — elementwise sum, everyone gets the full result
+//!   (implemented as reduce-scatter ∘ allgather, as in [21,22] of the
+//!   paper — the identity Eq. (6) relies on).
+//! * `alltoall` — member `i`'s input is split into g chunks; chunk `j`
+//!   goes to member `j`; member `j` ends with `[chunk_j of member 0, …,
+//!   chunk_j of member g-1]`. An involution when chunk sizes are uniform.
+//! * `split` — local: member `j` keeps its `j`-th 1/g chunk (the ESP-Split
+//!   of Fig 3a; communication-free in forward).
+
+/// Validate a group: non-empty, distinct, in range.
+fn check_group(world_len: usize, group: &[usize]) {
+    assert!(!group.is_empty(), "empty group");
+    for (i, &r) in group.iter().enumerate() {
+        assert!(r < world_len, "rank {r} outside world of {world_len}");
+        assert!(!group[..i].contains(&r), "duplicate rank {r} in group");
+    }
+}
+
+fn check_equal_lengths(world: &[Vec<f32>], group: &[usize]) -> usize {
+    let n = world[group[0]].len();
+    for &r in group {
+        assert_eq!(world[r].len(), n, "buffer length mismatch within group");
+    }
+    n
+}
+
+/// AllGather within `group` (in-place on the world).
+pub fn allgather(world: &mut [Vec<f32>], group: &[usize]) {
+    check_group(world.len(), group);
+    let n = check_equal_lengths(world, group);
+    let mut gathered = Vec::with_capacity(n * group.len());
+    for &r in group {
+        gathered.extend_from_slice(&world[r]);
+    }
+    for &r in group {
+        world[r] = gathered.clone();
+    }
+}
+
+/// ReduceScatter (sum) within `group`.
+pub fn reduce_scatter(world: &mut [Vec<f32>], group: &[usize]) {
+    check_group(world.len(), group);
+    let n = check_equal_lengths(world, group);
+    let g = group.len();
+    assert_eq!(n % g, 0, "reduce_scatter needs length divisible by group size");
+    let chunk = n / g;
+    let mut sum = vec![0.0f32; n];
+    for &r in group {
+        for (s, v) in sum.iter_mut().zip(world[r].iter()) {
+            *s += v;
+        }
+    }
+    for (j, &r) in group.iter().enumerate() {
+        world[r] = sum[j * chunk..(j + 1) * chunk].to_vec();
+    }
+}
+
+/// AllReduce (sum) within `group` = ReduceScatter ∘ AllGather.
+pub fn allreduce(world: &mut [Vec<f32>], group: &[usize]) {
+    check_group(world.len(), group);
+    let n = check_equal_lengths(world, group);
+    let g = group.len();
+    if n % g == 0 && n > 0 {
+        reduce_scatter(world, group);
+        allgather(world, group);
+    } else {
+        // Lengths not divisible by g: direct elementwise sum (semantically
+        // identical; the RS∘AG decomposition is a wire-level detail).
+        let mut sum = vec![0.0f32; n];
+        for &r in group {
+            for (s, v) in sum.iter_mut().zip(world[r].iter()) {
+                *s += v;
+            }
+        }
+        for &r in group {
+            world[r] = sum.clone();
+        }
+    }
+}
+
+/// AlltoAll within `group`.
+pub fn alltoall(world: &mut [Vec<f32>], group: &[usize]) {
+    check_group(world.len(), group);
+    let n = check_equal_lengths(world, group);
+    let g = group.len();
+    assert_eq!(n % g, 0, "alltoall needs length divisible by group size");
+    let chunk = n / g;
+    let mut outputs: Vec<Vec<f32>> = vec![Vec::with_capacity(n); g];
+    for (j, out) in outputs.iter_mut().enumerate() {
+        for &ri in group.iter() {
+            out.extend_from_slice(&world[ri][j * chunk..(j + 1) * chunk]);
+        }
+    }
+    for (j, &r) in group.iter().enumerate() {
+        world[r] = std::mem::take(&mut outputs[j]);
+    }
+}
+
+/// Local Split: member `j` keeps its `j`-th 1/g chunk (no communication in
+/// forward; its backward is an AllGather — handled by the schedules).
+pub fn split(world: &mut [Vec<f32>], group: &[usize]) {
+    check_group(world.len(), group);
+    let n = check_equal_lengths(world, group);
+    let g = group.len();
+    assert_eq!(n % g, 0, "split needs length divisible by group size");
+    let chunk = n / g;
+    for (j, &r) in group.iter().enumerate() {
+        world[r] = world[r][j * chunk..(j + 1) * chunk].to_vec();
+    }
+}
+
+/// Broadcast member 0's buffer to the whole group (used to set up the
+/// MP-duplicated activations entering a MoE layer in tests).
+pub fn broadcast(world: &mut [Vec<f32>], group: &[usize]) {
+    check_group(world.len(), group);
+    let src = world[group[0]].clone();
+    for &r in &group[1..] {
+        world[r] = src.clone();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{assert_close, assert_eq_slice, check};
+
+    fn world_of(bufs: &[&[f32]]) -> Vec<Vec<f32>> {
+        bufs.iter().map(|b| b.to_vec()).collect()
+    }
+
+    #[test]
+    fn allgather_concats_in_group_order() {
+        let mut w = world_of(&[&[1.0, 2.0], &[3.0, 4.0], &[9.0, 9.0]]);
+        allgather(&mut w, &[1, 0]);
+        assert_eq!(w[1], vec![3.0, 4.0, 1.0, 2.0]);
+        assert_eq!(w[0], vec![3.0, 4.0, 1.0, 2.0]);
+        assert_eq!(w[2], vec![9.0, 9.0]); // untouched
+    }
+
+    #[test]
+    fn reduce_scatter_sums_and_scatters() {
+        let mut w = world_of(&[&[1.0, 2.0, 3.0, 4.0], &[10.0, 20.0, 30.0, 40.0]]);
+        reduce_scatter(&mut w, &[0, 1]);
+        assert_eq!(w[0], vec![11.0, 22.0]);
+        assert_eq!(w[1], vec![33.0, 44.0]);
+    }
+
+    #[test]
+    fn allreduce_everyone_gets_sum() {
+        let mut w = world_of(&[&[1.0, 2.0], &[3.0, 5.0]]);
+        allreduce(&mut w, &[0, 1]);
+        assert_eq!(w[0], vec![4.0, 7.0]);
+        assert_eq!(w[1], vec![4.0, 7.0]);
+    }
+
+    #[test]
+    fn allreduce_odd_length() {
+        let mut w = world_of(&[&[1.0, 2.0, 3.0], &[1.0, 1.0, 1.0]]);
+        allreduce(&mut w, &[0, 1]);
+        assert_eq!(w[0], vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn alltoall_is_block_transpose() {
+        let mut w = world_of(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        alltoall(&mut w, &[0, 1]);
+        assert_eq!(w[0], vec![1.0, 3.0]);
+        assert_eq!(w[1], vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn split_keeps_own_chunk() {
+        let mut w = world_of(&[&[1.0, 2.0, 3.0, 4.0], &[1.0, 2.0, 3.0, 4.0]]);
+        split(&mut w, &[0, 1]);
+        assert_eq!(w[0], vec![1.0, 2.0]);
+        assert_eq!(w[1], vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn broadcast_duplicates_leader() {
+        let mut w = world_of(&[&[7.0], &[0.0], &[0.0]]);
+        broadcast(&mut w, &[0, 2]);
+        assert_eq!(w[2], vec![7.0]);
+        assert_eq!(w[1], vec![0.0]);
+    }
+
+    // ---- property tests ---------------------------------------------------
+
+    fn random_world(rng: &mut crate::util::prng::Rng, g: usize, per: usize) -> Vec<Vec<f32>> {
+        (0..g).map(|_| rng.f32_vec(per)).collect()
+    }
+
+    #[test]
+    fn prop_alltoall_involution() {
+        check("alltoall-involution", 50, |rng| {
+            let g = rng.range(1, 6);
+            let chunk = rng.range(1, 8);
+            let mut w = random_world(rng, g, g * chunk);
+            let orig = w.clone();
+            let group: Vec<usize> = (0..g).collect();
+            alltoall(&mut w, &group);
+            alltoall(&mut w, &group);
+            for r in 0..g {
+                assert_eq_slice(&w[r], &orig[r])?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_allreduce_equals_rs_then_ag() {
+        check("allreduce-rs-ag", 50, |rng| {
+            let g = rng.range(1, 6);
+            let chunk = rng.range(1, 8);
+            let group: Vec<usize> = (0..g).collect();
+            let w0 = random_world(rng, g, g * chunk);
+            let mut a = w0.clone();
+            allreduce(&mut a, &group);
+            let mut b = w0.clone();
+            reduce_scatter(&mut b, &group);
+            allgather(&mut b, &group);
+            for r in 0..g {
+                assert_close(&a[r], &b[r], 1e-5, 1e-5)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_allgather_then_split_identity() {
+        check("ag-split-id", 50, |rng| {
+            let g = rng.range(1, 6);
+            let per = rng.range(1, 10);
+            let group: Vec<usize> = (0..g).collect();
+            let w0 = random_world(rng, g, per);
+            let mut w = w0.clone();
+            allgather(&mut w, &group);
+            split(&mut w, &group);
+            for r in 0..g {
+                assert_eq_slice(&w[r], &w0[r])?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_alltoall_conserves_multiset() {
+        check("alltoall-conserves", 30, |rng| {
+            let g = rng.range(1, 5);
+            let chunk = rng.range(1, 6);
+            let group: Vec<usize> = (0..g).collect();
+            let w0 = random_world(rng, g, g * chunk);
+            let mut w = w0.clone();
+            alltoall(&mut w, &group);
+            let mut before: Vec<u32> = w0.iter().flatten().map(|f| f.to_bits()).collect();
+            let mut after: Vec<u32> = w.iter().flatten().map(|f| f.to_bits()).collect();
+            before.sort_unstable();
+            after.sort_unstable();
+            assert_eq_slice(&after, &before)
+        });
+    }
+
+    #[test]
+    fn prop_groups_are_order_sensitive_but_consistent() {
+        // AllGather with a permuted group concatenates in that order.
+        check("ag-order", 30, |rng| {
+            let g = rng.range(2, 5);
+            let per = rng.range(1, 5);
+            let mut group: Vec<usize> = (0..g).collect();
+            rng.shuffle(&mut group);
+            let w0 = random_world(rng, g, per);
+            let mut w = w0.clone();
+            allgather(&mut w, &group);
+            let expect: Vec<f32> = group.iter().flat_map(|&r| w0[r].clone()).collect();
+            for &r in &group {
+                assert_eq_slice(&w[r], &expect)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate rank")]
+    fn duplicate_group_rejected() {
+        let mut w = world_of(&[&[1.0], &[2.0]]);
+        allgather(&mut w, &[0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible")]
+    fn alltoall_divisibility_checked() {
+        let mut w = world_of(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        alltoall(&mut w, &[0, 1]);
+    }
+}

@@ -1,0 +1,16 @@
+//! Collective communication, in two coupled forms:
+//!
+//! * **data plane** ([`data`]) — collectives over real in-process rank
+//!   buffers (`Vec<f32>` per rank). This is how correctness is proved: the
+//!   MoE layer executed under every schedule must produce identical numbers
+//!   (paper's implicit semantics-preservation claim).
+//! * **sim lowering** ([`lower`]) — the same collectives decomposed into
+//!   point-to-point transfer DAGs for the discrete-event engine. This is
+//!   how time is measured.
+//!
+//! [`saa`] implements the paper's Simultaneous-AlltoAll-and-AllGather
+//! (§III-D, Fig 5) in both forms.
+
+pub mod data;
+pub mod lower;
+pub mod saa;

@@ -1,0 +1,236 @@
+//! Cluster profiles: the hardware description the simulator runs against.
+//!
+//! The paper's testbeds are reduced to link-class α-β parameters — exactly
+//! the reduction the paper itself applies for Algorithm 1 (§V-A, Fig 6).
+//! Built-in profiles `testbed_a` / `testbed_b` are calibrated from the
+//! constants the paper publishes (and PCIe/IB nominal bandwidths for the
+//! classes it does not).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Static description of a homogeneous GPU cluster (paper §IV assumptions:
+/// homogeneous nodes, homogeneous devices, β_intra > β_inter).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterProfile {
+    pub name: String,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// Startup latency of an intra-node p2p transfer (seconds).
+    pub alpha_intra: f64,
+    /// Per-byte time of an intra-node p2p transfer (seconds/byte).
+    pub beta_intra: f64,
+    /// Startup latency of an inter-node p2p transfer (seconds).
+    pub alpha_inter: f64,
+    /// Per-byte time of an inter-node p2p transfer (seconds/byte).
+    pub beta_inter: f64,
+    /// Dense fp32 throughput of one GPU (FLOP/s) — times expert compute.
+    pub gpu_flops: f64,
+    /// Device memory (bytes) — drives the sweep feasibility filter.
+    pub gpu_mem_bytes: usize,
+}
+
+impl ClusterProfile {
+    pub fn total_gpus(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Node index hosting `rank`.
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.gpus_per_node
+    }
+
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 || self.gpus_per_node == 0 {
+            bail!("cluster must have at least one node and one GPU");
+        }
+        if self.beta_intra <= 0.0 || self.beta_inter <= 0.0 {
+            bail!("β must be positive");
+        }
+        if self.alpha_intra < 0.0 || self.alpha_inter < 0.0 {
+            bail!("α must be non-negative");
+        }
+        if self.beta_intra > self.beta_inter {
+            // Paper §IV: β_intra > β_inter refers to SPEED; our fields are
+            // per-byte TIME, so intra must be <= inter.
+            bail!(
+                "intra-node per-byte time ({}) must not exceed inter-node ({})",
+                self.beta_intra,
+                self.beta_inter
+            );
+        }
+        if self.gpu_flops <= 0.0 || self.gpu_mem_bytes == 0 {
+            bail!("GPU compute/memory must be positive");
+        }
+        Ok(())
+    }
+
+    /// Testbed A (paper Table II): one node, 8× RTX 4090 on PCIe 4.0 x16.
+    ///
+    /// The paper's published AG_MP fit on this machine is collective-level
+    /// (α = 6.64e-4 s, β = 5.38e-10 s/B). Our simulator composes
+    /// collectives from point-to-point messages, so the per-message α is
+    /// the collective α divided by the ring steps of the fitted group
+    /// (8-GPU ring ⇒ 7 steps): α_msg ≈ 9.5e-5. β is per byte on the wire
+    /// and carries over directly. There is no inter-node fabric; we keep a
+    /// virtual inter class (unused at P=8) equal to PCIe for robustness.
+    pub fn testbed_a() -> ClusterProfile {
+        ClusterProfile {
+            name: "testbed_a".into(),
+            nodes: 1,
+            gpus_per_node: 8,
+            alpha_intra: 9.5e-5,
+            beta_intra: 5.38e-10,
+            alpha_inter: 9.5e-5,
+            beta_inter: 5.38e-10,
+            gpu_flops: 82.6e12 * 0.35, // RTX4090 peak fp32, derated to achievable GEMM
+            gpu_mem_bytes: 24 * (1 << 30),
+        }
+    }
+
+    /// Testbed B (paper Table II): 8 nodes × 4× RTX 2080Ti, PCIe 3.0 x16
+    /// intra-node, 100 Gb/s ConnectX-5 inter-node.
+    ///
+    /// Intra α/β from the paper's 32-GPU AG_MP fit (collective α =
+    /// 1.09e-4 over a 4-GPU ring ⇒ α_msg ≈ 3.6e-5; β = 7.14e-10). Inter β
+    /// from 100 Gb/s ≈ 12.5 GB/s line rate derated to ~9 GB/s effective;
+    /// inter α_msg ≈ 5e-5 (IB verbs + NCCL proxy per message).
+    pub fn testbed_b() -> ClusterProfile {
+        ClusterProfile {
+            name: "testbed_b".into(),
+            nodes: 8,
+            gpus_per_node: 4,
+            alpha_intra: 3.6e-5,
+            beta_intra: 7.14e-10,
+            alpha_inter: 5.0e-5,
+            beta_inter: 1.11e-9,
+            gpu_flops: 13.4e12 * 0.35, // RTX2080Ti peak fp32, derated
+            gpu_mem_bytes: 11 * (1 << 30),
+        }
+    }
+
+    /// Testbed B truncated to `gpus` total GPUs (the paper reports 8-, 16-
+    /// and 32-GPU columns for testbed B in Table IV).
+    pub fn testbed_b_subset(gpus: usize) -> Result<ClusterProfile> {
+        let full = Self::testbed_b();
+        if gpus % full.gpus_per_node != 0 || gpus > full.total_gpus() || gpus == 0 {
+            bail!(
+                "testbed B subset must be a positive multiple of {} ≤ {}",
+                full.gpus_per_node,
+                full.total_gpus()
+            );
+        }
+        Ok(ClusterProfile {
+            name: format!("testbed_b_{gpus}gpu"),
+            nodes: gpus / full.gpus_per_node,
+            ..full
+        })
+    }
+
+    /// Look up a built-in profile by name.
+    pub fn builtin(name: &str) -> Result<ClusterProfile> {
+        match name {
+            "testbed_a" => Ok(Self::testbed_a()),
+            "testbed_b" | "testbed_b_32gpu" => Ok(Self::testbed_b()),
+            "testbed_b_8gpu" => Self::testbed_b_subset(8),
+            "testbed_b_16gpu" => Self::testbed_b_subset(16),
+            other => bail!(
+                "unknown cluster profile `{other}` (builtins: testbed_a, testbed_b, \
+                 testbed_b_8gpu, testbed_b_16gpu); or pass a JSON file path"
+            ),
+        }
+    }
+
+    /// Load from a JSON file or fall back to a builtin name.
+    pub fn load(name_or_path: &str) -> Result<ClusterProfile> {
+        if name_or_path.ends_with(".json") {
+            let text = std::fs::read_to_string(name_or_path)
+                .with_context(|| format!("reading cluster profile {name_or_path}"))?;
+            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+            Self::from_json(&j)
+        } else {
+            Self::builtin(name_or_path)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("gpus_per_node", Json::num(self.gpus_per_node as f64)),
+            ("alpha_intra", Json::num(self.alpha_intra)),
+            ("beta_intra", Json::num(self.beta_intra)),
+            ("alpha_inter", Json::num(self.alpha_inter)),
+            ("beta_inter", Json::num(self.beta_inter)),
+            ("gpu_flops", Json::num(self.gpu_flops)),
+            ("gpu_mem_bytes", Json::num(self.gpu_mem_bytes as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ClusterProfile> {
+        let p = ClusterProfile {
+            name: j.req_str("name")?.to_string(),
+            nodes: j.req_usize("nodes")?,
+            gpus_per_node: j.req_usize("gpus_per_node")?,
+            alpha_intra: j.req_f64("alpha_intra")?,
+            beta_intra: j.req_f64("beta_intra")?,
+            alpha_inter: j.req_f64("alpha_inter")?,
+            beta_inter: j.req_f64("beta_inter")?,
+            gpu_flops: j.req_f64("gpu_flops")?,
+            gpu_mem_bytes: j.req_f64("gpu_mem_bytes")? as usize,
+        };
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_valid() {
+        for name in ["testbed_a", "testbed_b", "testbed_b_8gpu", "testbed_b_16gpu"] {
+            let p = ClusterProfile::builtin(name).unwrap();
+            p.validate().unwrap();
+        }
+        assert!(ClusterProfile::builtin("nope").is_err());
+    }
+
+    #[test]
+    fn topology_helpers() {
+        let b = ClusterProfile::testbed_b();
+        assert_eq!(b.total_gpus(), 32);
+        assert_eq!(b.node_of(0), 0);
+        assert_eq!(b.node_of(4), 1);
+        assert!(b.same_node(0, 3));
+        assert!(!b.same_node(3, 4));
+    }
+
+    #[test]
+    fn subset_bounds() {
+        assert!(ClusterProfile::testbed_b_subset(16).is_ok());
+        assert!(ClusterProfile::testbed_b_subset(6).is_err());
+        assert!(ClusterProfile::testbed_b_subset(64).is_err());
+        assert_eq!(ClusterProfile::testbed_b_subset(8).unwrap().nodes, 2);
+    }
+
+    #[test]
+    fn intra_faster_than_inter_enforced() {
+        let mut p = ClusterProfile::testbed_b();
+        p.beta_intra = p.beta_inter * 2.0;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = ClusterProfile::testbed_b();
+        let back = ClusterProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+    }
+}

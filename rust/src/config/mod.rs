@@ -1,0 +1,12 @@
+//! Configuration layer: MoE layer hyper-parameters, cluster profiles,
+//! real-world model descriptions, and the Table III sweep grid.
+
+pub mod cluster;
+pub mod model;
+pub mod moe;
+pub mod sweep;
+
+pub use cluster::ClusterProfile;
+pub use model::ModelConfig;
+pub use moe::{MoeLayerConfig, ParallelDegrees};
+pub use sweep::{sweep_table3, SweepFilter};

@@ -1,0 +1,240 @@
+//! Real-world model descriptions (paper §VI-D, Table V): MoE variants of
+//! BERT-Base and GPT-2, plus the small LM used by the end-to-end training
+//! example. A model is a stack of transformer blocks where every other FFN
+//! is replaced by an MoE layer (the common "MoE-every-2" recipe used by
+//! GShard/DeepSpeed-MoE).
+
+use anyhow::{bail, Result};
+
+use super::moe::{MoeLayerConfig, ParallelDegrees};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Transformer blocks.
+    pub layers: usize,
+    /// Every `moe_every`-th block uses an MoE FFN (1 = all blocks).
+    pub moe_every: usize,
+    /// Hidden/embedding size `M`.
+    pub m: usize,
+    /// FFN hidden size `H` (typically 4·M).
+    pub h: usize,
+    pub vocab: usize,
+    pub heads: usize,
+    pub seq_len: usize,
+    pub batch_per_gpu: usize,
+    pub experts: usize,
+    pub top_k: usize,
+    pub capacity_factor: f64,
+}
+
+impl ModelConfig {
+    /// BERT-Base MoE (paper §VI-D): 12 layers, M=768, H=3072; experts per
+    /// the paper (2 on testbed A, 8 on testbed B).
+    pub fn bert_base_moe(experts: usize) -> ModelConfig {
+        ModelConfig {
+            name: format!("bert_base_moe_e{experts}"),
+            layers: 12,
+            moe_every: 2,
+            m: 768,
+            h: 3072,
+            vocab: 30522,
+            heads: 12,
+            seq_len: 512,
+            batch_per_gpu: 8,
+            experts,
+            top_k: 2,
+            capacity_factor: 1.2,
+        }
+    }
+
+    /// GPT-2 (117M-class) MoE: 12 layers, M=768, H=3072, seq 1024.
+    pub fn gpt2_moe(experts: usize) -> ModelConfig {
+        ModelConfig {
+            name: format!("gpt2_moe_e{experts}"),
+            layers: 12,
+            moe_every: 2,
+            m: 768,
+            h: 3072,
+            vocab: 50257,
+            heads: 12,
+            seq_len: 1024,
+            batch_per_gpu: 4,
+            experts,
+            top_k: 2,
+            capacity_factor: 1.2,
+        }
+    }
+
+    /// The ~100M-parameter MoE LM trained end-to-end by
+    /// `examples/train_moe_lm.rs` (compute per step is that of a much
+    /// smaller dense model thanks to sparse activation).
+    pub fn tiny_moe_lm() -> ModelConfig {
+        ModelConfig {
+            name: "tiny_moe_lm".into(),
+            layers: 4,
+            moe_every: 2,
+            m: 512,
+            h: 2048,
+            vocab: 8192,
+            heads: 8,
+            seq_len: 128,
+            batch_per_gpu: 2,
+            experts: 32,
+            top_k: 2,
+            capacity_factor: 1.5,
+        }
+    }
+
+    pub fn builtin(name: &str) -> Result<ModelConfig> {
+        match name {
+            "bert_base_moe_a" => Ok(Self::bert_base_moe(2)),
+            "bert_base_moe_b" => Ok(Self::bert_base_moe(8)),
+            "gpt2_moe_a" => Ok(Self::gpt2_moe(2)),
+            "gpt2_moe_b" => Ok(Self::gpt2_moe(8)),
+            "tiny_moe_lm" => Ok(Self::tiny_moe_lm()),
+            other => bail!(
+                "unknown model `{other}` (builtins: bert_base_moe_a/b, gpt2_moe_a/b, tiny_moe_lm)"
+            ),
+        }
+    }
+
+    pub fn n_moe_layers(&self) -> usize {
+        self.layers / self.moe_every
+    }
+
+    pub fn n_dense_ffn_layers(&self) -> usize {
+        self.layers - self.n_moe_layers()
+    }
+
+    /// Total parameter count (embeddings + blocks + experts).
+    pub fn param_count(&self) -> usize {
+        let emb = self.vocab * self.m + self.seq_len * self.m;
+        let attn = self.layers * 4 * self.m * self.m;
+        let dense_ffn = self.n_dense_ffn_layers() * 2 * self.m * self.h;
+        let gate = self.n_moe_layers() * self.m * self.experts;
+        let experts = self.n_moe_layers() * self.experts * 2 * self.m * self.h;
+        let norms = self.layers * 2 * 2 * self.m + self.m;
+        emb + attn + dense_ffn + gate + experts + norms
+    }
+
+    /// The per-MoE-layer config this model induces under given degrees.
+    pub fn moe_layer(&self, par: ParallelDegrees) -> MoeLayerConfig {
+        MoeLayerConfig {
+            par,
+            b: self.batch_per_gpu,
+            l: self.seq_len,
+            e: self.experts,
+            m: self.m,
+            h: self.h,
+            k: self.top_k,
+            f: self.capacity_factor,
+            dtype_bytes: 4,
+        }
+    }
+
+    /// FLOPs per GPU per training iteration for the *dense* (non-MoE)
+    /// portion: attention + dense FFN + LM head, forward + backward (≈3×
+    /// forward), under `n_mp`-way tensor parallelism.
+    pub fn dense_flops_per_gpu(&self, n_mp: usize) -> f64 {
+        let tokens = (self.batch_per_gpu * self.seq_len) as f64;
+        let m = self.m as f64;
+        let h = self.h as f64;
+        // Per-token forward MACs: attention projections (4·M²) + scores
+        // (2·L·M) + dense FFN (2·M·H on dense layers) + LM head (V·M).
+        let attn = self.layers as f64 * (4.0 * m * m + 2.0 * self.seq_len as f64 * m);
+        let ffn = self.n_dense_ffn_layers() as f64 * 2.0 * m * h;
+        let head = self.vocab as f64 * m;
+        let fwd_macs = tokens * (attn + ffn + head);
+        // fwd+bwd ≈ 3× forward, 2 FLOP per MAC, split across MP ranks.
+        3.0 * 2.0 * fwd_macs / n_mp as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("layers", Json::num(self.layers as f64)),
+            ("moe_every", Json::num(self.moe_every as f64)),
+            ("m", Json::num(self.m as f64)),
+            ("h", Json::num(self.h as f64)),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("heads", Json::num(self.heads as f64)),
+            ("seq_len", Json::num(self.seq_len as f64)),
+            ("batch_per_gpu", Json::num(self.batch_per_gpu as f64)),
+            ("experts", Json::num(self.experts as f64)),
+            ("top_k", Json::num(self.top_k as f64)),
+            ("capacity_factor", Json::num(self.capacity_factor)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: j.req_str("name")?.to_string(),
+            layers: j.req_usize("layers")?,
+            moe_every: j.req_usize("moe_every")?,
+            m: j.req_usize("m")?,
+            h: j.req_usize("h")?,
+            vocab: j.req_usize("vocab")?,
+            heads: j.req_usize("heads")?,
+            seq_len: j.req_usize("seq_len")?,
+            batch_per_gpu: j.req_usize("batch_per_gpu")?,
+            experts: j.req_usize("experts")?,
+            top_k: j.req_usize("top_k")?,
+            capacity_factor: j.req_f64("capacity_factor")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_models() {
+        for n in ["bert_base_moe_a", "bert_base_moe_b", "gpt2_moe_a", "gpt2_moe_b", "tiny_moe_lm"] {
+            let m = ModelConfig::builtin(n).unwrap();
+            assert!(m.param_count() > 0);
+        }
+        assert!(ModelConfig::builtin("gpt5").is_err());
+    }
+
+    #[test]
+    fn tiny_lm_is_about_100m_params() {
+        let m = ModelConfig::tiny_moe_lm();
+        let p = m.param_count();
+        assert!(
+            (80_000_000..160_000_000).contains(&p),
+            "tiny_moe_lm should be ~100M params, got {p}"
+        );
+    }
+
+    #[test]
+    fn moe_layer_inherits_dims() {
+        let m = ModelConfig::bert_base_moe(8);
+        let par = ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 };
+        let layer = m.moe_layer(par);
+        assert_eq!(layer.m, 768);
+        assert_eq!(layer.e, 8);
+        layer.validate().unwrap();
+    }
+
+    #[test]
+    fn moe_layer_counts() {
+        let m = ModelConfig::gpt2_moe(8);
+        assert_eq!(m.n_moe_layers(), 6);
+        assert_eq!(m.n_dense_ffn_layers(), 6);
+    }
+
+    #[test]
+    fn dense_flops_scale_with_mp() {
+        let m = ModelConfig::bert_base_moe(8);
+        assert!((m.dense_flops_per_gpu(1) / m.dense_flops_per_gpu(4) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = ModelConfig::gpt2_moe(2);
+        assert_eq!(ModelConfig::from_json(&m.to_json()).unwrap(), m);
+    }
+}

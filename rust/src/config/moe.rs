@@ -1,0 +1,288 @@
+//! MoE layer configuration (paper Table I notation) and derived quantities.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Degrees of the hybrid parallelism MP+EP+ESP (paper §II-B).
+///
+/// The world of `P = n_ep × n_esp` ranks is laid out as consecutive ESP
+/// blocks (placed intra-node whenever `n_esp ≤ gpus_per_node`), with EP
+/// groups strided across the blocks and MP groups of `n_mp` consecutive
+/// ranks. Ranks inside an MP group carry *duplicated* activations at the
+/// MoE layer boundary — the redundancy Parm's PauseMP removes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ParallelDegrees {
+    /// Total ranks (GPUs) participating in the MoE layer.
+    pub p: usize,
+    /// Model-parallel (tensor-parallel) group size, `N_MP`.
+    pub n_mp: usize,
+    /// Expert-sharding group size, `N_ESP`.
+    pub n_esp: usize,
+}
+
+impl ParallelDegrees {
+    /// Expert-parallel group size `N_EP = P / N_ESP`.
+    pub fn n_ep(&self) -> usize {
+        self.p / self.n_esp
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.p == 0 || self.n_mp == 0 || self.n_esp == 0 {
+            bail!("parallel degrees must be positive: {self:?}");
+        }
+        if self.p % self.n_esp != 0 {
+            bail!("P={} not divisible by N_ESP={}", self.p, self.n_esp);
+        }
+        if self.p % self.n_mp != 0 {
+            bail!("P={} not divisible by N_MP={}", self.p, self.n_mp);
+        }
+        if !self.p.is_power_of_two() || !self.n_mp.is_power_of_two() || !self.n_esp.is_power_of_two()
+        {
+            bail!("degrees must be powers of two (ring/pairwise collectives): {self:?}");
+        }
+        Ok(())
+    }
+}
+
+/// One MoE layer's hyper-parameters (paper Table I) plus its parallel
+/// placement. All sizes are in *elements*; `dtype_bytes` converts to bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MoeLayerConfig {
+    pub par: ParallelDegrees,
+    /// Local mini-batch size per GPU, `B`.
+    pub b: usize,
+    /// Sequence length per sample, `L`.
+    pub l: usize,
+    /// Total number of experts, `E`.
+    pub e: usize,
+    /// Token embedding size, `M`.
+    pub m: usize,
+    /// Expert FFN hidden size, `H` (sharded `H/N_ESP` per ESP rank).
+    pub h: usize,
+    /// top-k experts per token.
+    pub k: usize,
+    /// Capacity factor `f`.
+    pub f: f64,
+    /// Bytes per element (4 = fp32; the paper trains fp32 on 2080Ti/4090).
+    pub dtype_bytes: usize,
+}
+
+impl MoeLayerConfig {
+    /// A small config used pervasively in tests.
+    pub fn test_default() -> MoeLayerConfig {
+        MoeLayerConfig {
+            par: ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 },
+            b: 2,
+            l: 64,
+            e: 4,
+            m: 32,
+            h: 64,
+            k: 2,
+            f: 1.2,
+            dtype_bytes: 4,
+        }
+    }
+
+    /// Max tokens per expert per source GPU: `T = k·f·B·L/E` (paper Table I),
+    /// rounded up to at least 1.
+    pub fn t(&self) -> usize {
+        let t = (self.k as f64 * self.f * (self.b * self.l) as f64 / self.e as f64).ceil();
+        (t as usize).max(1)
+    }
+
+    /// Tokens per gate invocation under PauseMP: the local `1/N_MP` slice.
+    /// `T` shrinks proportionally (S1 gates on split tokens).
+    pub fn t_pausemp(&self) -> usize {
+        let tokens = (self.b * self.l) / self.par.n_mp;
+        let t = (self.k as f64 * self.f * tokens as f64 / self.e as f64).ceil();
+        (t as usize).max(1)
+    }
+
+    /// Local token count `B·L`.
+    pub fn tokens(&self) -> usize {
+        self.b * self.l
+    }
+
+    /// Experts hosted per EP slot (`E / N_EP`), ≥ 1.
+    pub fn experts_per_rank(&self) -> usize {
+        (self.e / self.par.n_ep()).max(1)
+    }
+
+    /// Elements in the (B, L, M) input tensor.
+    pub fn input_elems(&self) -> usize {
+        self.b * self.l * self.m
+    }
+
+    /// Elements in the dispatched (E, T, M) tensor.
+    pub fn dispatch_elems(&self) -> usize {
+        self.e * self.t() * self.m
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.par.validate()?;
+        if self.b == 0 || self.l == 0 || self.e == 0 || self.m == 0 || self.h == 0 || self.k == 0 {
+            bail!("all MoE dimensions must be positive: {self:?}");
+        }
+        if self.k > self.e {
+            bail!("top-k ({}) exceeds number of experts ({})", self.k, self.e);
+        }
+        if self.f <= 0.0 {
+            bail!("capacity factor must be positive, got {}", self.f);
+        }
+        if self.h % self.par.n_esp != 0 {
+            bail!("H={} not divisible by N_ESP={}", self.h, self.par.n_esp);
+        }
+        if self.e % self.par.n_ep() != 0 && self.par.n_ep() % self.e != 0 {
+            bail!(
+                "E={} and N_EP={} must divide one another",
+                self.e,
+                self.par.n_ep()
+            );
+        }
+        if (self.b * self.l) % self.par.n_mp != 0 {
+            bail!("B·L={} not divisible by N_MP={}", self.b * self.l, self.par.n_mp);
+        }
+        Ok(())
+    }
+
+    /// Estimated per-GPU memory (bytes) for this layer when training:
+    /// expert weight shards (+grad +Adam moments = ×4), the gathered input
+    /// activations, dispatch buffers, and expert activations. Used by the
+    /// sweep filter to exclude configurations that could not run on the
+    /// testbeds (paper: "some cases that require memory larger than the
+    /// capacity of GPU memory cannot run ... are excluded").
+    pub fn memory_bytes_per_gpu(&self) -> usize {
+        let d = self.dtype_bytes;
+        let experts_local = self.experts_per_rank();
+        let weight = experts_local * 2 * self.m * (self.h / self.par.n_esp);
+        let states = weight * 4; // weight + grad + 2 Adam moments
+        // Baseline schedule materializes the ESP-gathered input and the
+        // dispatched tensor on every rank (the worst case across schedules).
+        let gathered_input = self.input_elems() * self.par.n_esp;
+        let dispatched = self.dispatch_elems() * self.par.n_esp;
+        // Expert activations: inputs + hidden per token processed locally.
+        let expert_tokens = self.e * self.t() * self.par.n_esp / self.par.n_ep().max(1);
+        let expert_act = expert_tokens * (self.m + self.h / self.par.n_esp);
+        // Activations are held for the backward pass plus comm/workspace
+        // copies (×3, the empirical PyTorch training footprint the paper's
+        // "cannot run on our testbeds" exclusions reflect).
+        (states + 3 * (gathered_input + 2 * dispatched + expert_act)) * d
+    }
+
+    /// Expert FLOPs per rank per forward pass (2 matmuls; ×2 MAC→FLOP).
+    /// `dup` accounts for the baseline's N_MP-duplicated compute.
+    pub fn expert_flops_per_rank(&self, duplicated: bool) -> f64 {
+        let tokens = (self.e * self.t()) as f64 * self.par.n_esp as f64 / self.par.n_ep() as f64;
+        let tokens = if duplicated { tokens } else { tokens / self.par.n_mp as f64 };
+        let per_token = 2.0 * 2.0 * self.m as f64 * (self.h / self.par.n_esp) as f64;
+        tokens * per_token
+    }
+
+    /// Short human id, e.g. `p8_mp2_esp2_b2_l64_e4_m32_h64_k2_f1.2`.
+    pub fn id(&self) -> String {
+        format!(
+            "p{}_mp{}_esp{}_b{}_l{}_e{}_m{}_h{}_k{}_f{}",
+            self.par.p, self.par.n_mp, self.par.n_esp, self.b, self.l, self.e, self.m, self.h,
+            self.k, self.f
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("p", Json::num(self.par.p as f64)),
+            ("n_mp", Json::num(self.par.n_mp as f64)),
+            ("n_esp", Json::num(self.par.n_esp as f64)),
+            ("b", Json::num(self.b as f64)),
+            ("l", Json::num(self.l as f64)),
+            ("e", Json::num(self.e as f64)),
+            ("m", Json::num(self.m as f64)),
+            ("h", Json::num(self.h as f64)),
+            ("k", Json::num(self.k as f64)),
+            ("f", Json::num(self.f)),
+            ("dtype_bytes", Json::num(self.dtype_bytes as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<MoeLayerConfig> {
+        let cfg = MoeLayerConfig {
+            par: ParallelDegrees {
+                p: j.req_usize("p")?,
+                n_mp: j.req_usize("n_mp")?,
+                n_esp: j.req_usize("n_esp")?,
+            },
+            b: j.req_usize("b")?,
+            l: j.req_usize("l")?,
+            e: j.req_usize("e")?,
+            m: j.req_usize("m")?,
+            h: j.req_usize("h")?,
+            k: j.req_usize("k")?,
+            f: j.req_f64("f")?,
+            dtype_bytes: j.get("dtype_bytes").as_usize().unwrap_or(4),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_quantities() {
+        let c = MoeLayerConfig::test_default();
+        // T = ceil(2 * 1.2 * 128 / 4) = 77
+        assert_eq!(c.t(), 77);
+        assert_eq!(c.tokens(), 128);
+        assert_eq!(c.par.n_ep(), 4);
+        assert_eq!(c.experts_per_rank(), 1);
+        assert_eq!(c.input_elems(), 2 * 64 * 32);
+    }
+
+    #[test]
+    fn validates_divisibility() {
+        let mut c = MoeLayerConfig::test_default();
+        assert!(c.validate().is_ok());
+        c.h = 65;
+        assert!(c.validate().is_err());
+        c = MoeLayerConfig::test_default();
+        c.k = 99;
+        assert!(c.validate().is_err());
+        c = MoeLayerConfig::test_default();
+        c.par.n_esp = 3;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn pausemp_t_shrinks() {
+        let c = MoeLayerConfig::test_default();
+        assert!(c.t_pausemp() <= c.t());
+        // With n_mp=2: ceil(2*1.2*64/4) = 39
+        assert_eq!(c.t_pausemp(), 39);
+    }
+
+    #[test]
+    fn duplicated_flops_ratio() {
+        let c = MoeLayerConfig::test_default();
+        let dup = c.expert_flops_per_rank(true);
+        let dedup = c.expert_flops_per_rank(false);
+        assert!((dup / dedup - c.par.n_mp as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = MoeLayerConfig::test_default();
+        let j = c.to_json();
+        let back = MoeLayerConfig::from_json(&j).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn memory_positive_and_monotone_in_h() {
+        let c = MoeLayerConfig::test_default();
+        let mut big = c.clone();
+        big.h *= 4;
+        assert!(big.memory_bytes_per_gpu() > c.memory_bytes_per_gpu());
+    }
+}

@@ -1,0 +1,167 @@
+//! The paper's Table III configuration grid and its validity filter.
+//!
+//! Table III candidate values:
+//!   P ∈ {8, 16, 32};  N_MP, N_ESP ∈ {1, 2, 4};  B ∈ {2, 4, 8};
+//!   L ∈ {512, 1024, 2048};  M, H ∈ {1024, 2048, 4096};  f ∈ {1.2, 2.4}.
+//!
+//! The paper excludes configurations that exceed GPU memory and reports
+//! "1296 valid runnable cases" across its testbeds. We reproduce the grid
+//! exactly and apply the analogous feasibility filter against the target
+//! cluster profile (memory capacity + placement constraints); the bench
+//! harness prints the retained count so the filter is auditable.
+
+use super::cluster::ClusterProfile;
+use super::moe::{MoeLayerConfig, ParallelDegrees};
+
+/// Which rows of the grid survive for a given cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepFilter {
+    /// Keep every syntactically valid config (used by unit tests).
+    All,
+    /// Paper behaviour: drop configs whose per-GPU memory estimate exceeds
+    /// the profile's device memory, and require the parallel degrees to be
+    /// placeable on the profile (P ≤ total GPUs, groups within nodes where
+    /// the paper's observations assume so).
+    Feasible,
+}
+
+pub const TABLE3_P: [usize; 3] = [8, 16, 32];
+pub const TABLE3_NMP: [usize; 3] = [1, 2, 4];
+pub const TABLE3_NESP: [usize; 3] = [1, 2, 4];
+pub const TABLE3_B: [usize; 3] = [2, 4, 8];
+pub const TABLE3_L: [usize; 3] = [512, 1024, 2048];
+pub const TABLE3_MH: [usize; 3] = [1024, 2048, 4096];
+pub const TABLE3_F: [f64; 2] = [1.2, 2.4];
+
+/// Enumerate the Table III grid for one cluster, in deterministic order.
+///
+/// The number of experts is not in Table III; as in DeepSpeed-MoE's layer
+/// benchmarks we place one expert per EP slot (`E = N_EP = P / N_ESP`) and
+/// use top-2 gating (the GShard/Switch default the paper's models use).
+pub fn sweep_table3(cluster: &ClusterProfile, filter: SweepFilter) -> Vec<MoeLayerConfig> {
+    let mut out = Vec::new();
+    for &p in &TABLE3_P {
+        for &n_mp in &TABLE3_NMP {
+            for &n_esp in &TABLE3_NESP {
+                for &b in &TABLE3_B {
+                    for &l in &TABLE3_L {
+                        for &m in &TABLE3_MH {
+                            for &h in &TABLE3_MH {
+                                for &f in &TABLE3_F {
+                                    let par = ParallelDegrees { p, n_mp, n_esp };
+                                    let cfg = MoeLayerConfig {
+                                        par,
+                                        b,
+                                        l,
+                                        e: p / n_esp,
+                                        m,
+                                        h,
+                                        k: 2,
+                                        f,
+                                        dtype_bytes: 4,
+                                    };
+                                    if cfg.validate().is_err() {
+                                        continue;
+                                    }
+                                    if filter == SweepFilter::Feasible
+                                        && !is_feasible(&cfg, cluster)
+                                    {
+                                        continue;
+                                    }
+                                    out.push(cfg);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Feasibility on a concrete cluster: fits on the machine and respects the
+/// placement assumptions of §IV (ESP and MP groups intra-node).
+pub fn is_feasible(cfg: &MoeLayerConfig, cluster: &ClusterProfile) -> bool {
+    if cfg.par.p > cluster.total_gpus() {
+        return false;
+    }
+    // ESP groups (and MP groups, which the schedules treat as intra-node
+    // collectives) must fit within a node — paper §IV Case 2/Case 4 place
+    // them intra-node; larger groups would violate Observation 1's premise.
+    if cfg.par.n_esp > cluster.gpus_per_node || cfg.par.n_mp > cluster.gpus_per_node {
+        return false;
+    }
+    // k ≤ E (top-2 gating needs at least 2 experts).
+    if cfg.k > cfg.e {
+        return false;
+    }
+    cfg.memory_bytes_per_gpu() <= cluster.gpu_mem_bytes
+}
+
+/// The Fig 1 slice: all grid rows at a fixed `P` on the given cluster.
+pub fn sweep_at_p(cluster: &ClusterProfile, p: usize, filter: SweepFilter) -> Vec<MoeLayerConfig> {
+    sweep_table3(cluster, filter)
+        .into_iter()
+        .filter(|c| c.par.p == p)
+        .collect()
+}
+
+/// The Table IV slices: rows grouped by (N_MP, N_ESP) ∈ {2,4} × {2,4}.
+pub fn table4_cells() -> Vec<(usize, usize)> {
+    vec![(2, 2), (2, 4), (4, 2), (4, 4)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_size_unfiltered() {
+        // 3 P × 3 N_MP × 3 N_ESP × 3 B × 3 L × 3 M × 3 H × 2 f = 4374 rows
+        // before validity; syntactic validity keeps those with divisibility
+        // and k ≤ E.
+        let all = sweep_table3(&ClusterProfile::testbed_b(), SweepFilter::All);
+        assert!(!all.is_empty());
+        assert!(all.len() <= 4374);
+        for c in &all {
+            c.validate().unwrap();
+            assert_eq!(c.e, c.par.n_ep());
+        }
+    }
+
+    #[test]
+    fn feasible_subset_smaller_and_within_memory() {
+        let cluster = ClusterProfile::testbed_b();
+        let all = sweep_table3(&cluster, SweepFilter::All);
+        let feasible = sweep_table3(&cluster, SweepFilter::Feasible);
+        assert!(feasible.len() < all.len());
+        assert!(!feasible.is_empty());
+        for c in &feasible {
+            assert!(c.memory_bytes_per_gpu() <= cluster.gpu_mem_bytes);
+            assert!(c.par.p <= cluster.total_gpus());
+        }
+    }
+
+    #[test]
+    fn testbed_a_caps_p_at_8() {
+        let feasible = sweep_table3(&ClusterProfile::testbed_a(), SweepFilter::Feasible);
+        assert!(feasible.iter().all(|c| c.par.p <= 8));
+    }
+
+    #[test]
+    fn p_slice() {
+        let cluster = ClusterProfile::testbed_b();
+        let s = sweep_at_p(&cluster, 32, SweepFilter::Feasible);
+        assert!(!s.is_empty());
+        assert!(s.iter().all(|c| c.par.p == 32));
+    }
+
+    #[test]
+    fn deterministic_order() {
+        let cluster = ClusterProfile::testbed_b();
+        let a = sweep_table3(&cluster, SweepFilter::Feasible);
+        let b = sweep_table3(&cluster, SweepFilter::Feasible);
+        assert_eq!(a, b);
+    }
+}

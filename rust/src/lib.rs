@@ -1,0 +1,26 @@
+//! # Parm — efficient MoE training with dedicated MP+EP+ESP schedules
+//!
+//! Reproduction of *Parm: Efficient Training of Large Sparsely-Activated
+//! Models with Dedicated Schedules* (Pan et al., 2024) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: cluster topology, process
+//!   groups, the Baseline/S1/S2/Parm schedules, the fused EP&ESP-AlltoAll
+//!   and SAA collectives, the α-β performance model with Algorithm 1
+//!   auto-selection, a discrete-event network simulator, a distributed
+//!   data-plane executor, and the training driver.
+//! * **Layer 2 (python/compile)** — the MoE transformer in JAX, AOT-lowered
+//!   to HLO text artifacts loaded here via PJRT (the `runtime` module).
+//! * **Layer 1 (python/compile/kernels)** — the expert-FFN Pallas kernel.
+
+pub mod bench;
+pub mod cluster;
+pub mod comm;
+pub mod config;
+pub mod moe;
+pub mod perfmodel;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod train;
+pub mod util;

@@ -1,0 +1,383 @@
+//! `parm` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!   doctor      PJRT + artifact sanity check
+//!   train       end-to-end MoE LM training through the PJRT artifact
+//!   sim         simulate one MoE layer config under a schedule
+//!   fit         fit and print the α-β performance models (Fig 6 style)
+//!   choose      Algorithm 1: pick S1 or S2 for a config
+//!   sweep       Table III sweep on a cluster; summary per schedule
+//!   bench       regenerate paper tables/figures (fig1|fig6|table4|fig7|
+//!               table5|saa|selection|choices|all)
+//!   trace       emit a Chrome trace of one simulated schedule
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Result};
+
+use parm::bench::paper;
+use parm::config::moe::ParallelDegrees;
+use parm::config::{sweep as sweepcfg, ClusterProfile, MoeLayerConfig, SweepFilter};
+use parm::perfmodel::{selection, PerfModel};
+use parm::schedule::{lowering, ScheduleKind};
+use parm::sim::trace::chrome_trace;
+use parm::sim::Simulator;
+use parm::train::{train_lm, TrainOptions};
+use parm::util::cli::{render_help, Args, Spec};
+use parm::util::stats::mean;
+use parm::util::table::{fmt_seconds, Table};
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            print_usage();
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd {
+        "doctor" => cmd_doctor(&rest),
+        "train" => cmd_train(&rest),
+        "sim" => cmd_sim(&rest),
+        "fit" => cmd_fit(&rest),
+        "choose" => cmd_choose(&rest),
+        "sweep" => cmd_sweep(&rest),
+        "bench" => cmd_bench(&rest),
+        "trace" => cmd_trace(&rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command `{other}` (try `parm help`)")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "parm — efficient MoE training with dedicated MP+EP+ESP schedules\n\n\
+         usage: parm <command> [options]\n\n\
+         commands:\n  \
+         doctor   PJRT + artifact sanity check\n  \
+         train    end-to-end MoE LM training (PJRT artifact)\n  \
+         sim      simulate one MoE layer under a schedule\n  \
+         fit      fit α-β performance models (Fig 6)\n  \
+         choose   Algorithm 1 schedule selection for a config\n  \
+         sweep    Table III sweep summary on a cluster\n  \
+         bench    regenerate paper tables/figures\n  \
+         trace    emit Chrome trace of a simulated schedule\n\n\
+         run `parm <command> --help` for options"
+    );
+}
+
+// ---- shared option groups ------------------------------------------------
+
+const LAYER_SPECS: &[Spec] = &[
+    Spec::opt_default("cluster", "testbed_b", "cluster profile name or JSON path"),
+    Spec::opt_default("p", "8", "total GPUs for the layer"),
+    Spec::opt_default("mp", "2", "N_MP (model-parallel degree)"),
+    Spec::opt_default("esp", "2", "N_ESP (expert-sharding degree)"),
+    Spec::opt_default("b", "4", "local batch size B"),
+    Spec::opt_default("l", "1024", "sequence length L"),
+    Spec::opt_default("m", "1024", "embedding size M"),
+    Spec::opt_default("hidden", "2048", "expert hidden size H"),
+    Spec::opt_default("k", "2", "top-k"),
+    Spec::opt_default("f", "1.2", "capacity factor"),
+    Spec::opt("e", "number of experts (default: P / N_ESP)"),
+    Spec::flag("help", "show help"),
+];
+
+fn layer_from(a: &Args) -> Result<(MoeLayerConfig, ClusterProfile)> {
+    let cluster = ClusterProfile::load(a.req("cluster")?)?;
+    let p = a.get_usize("p")?.unwrap();
+    let n_esp = a.get_usize("esp")?.unwrap();
+    let cfg = MoeLayerConfig {
+        par: ParallelDegrees { p, n_mp: a.get_usize("mp")?.unwrap(), n_esp },
+        b: a.get_usize("b")?.unwrap(),
+        l: a.get_usize("l")?.unwrap(),
+        e: a.get_usize("e")?.unwrap_or(p / n_esp),
+        m: a.get_usize("m")?.unwrap(),
+        h: a.get_usize("hidden")?.unwrap(),
+        k: a.get_usize("k")?.unwrap(),
+        f: a.get_f64("f")?.unwrap(),
+        dtype_bytes: 4,
+    };
+    cfg.validate()?;
+    Ok((cfg, cluster))
+}
+
+fn help_guard(a: &Args, cmd: &str, about: &str, specs: &[Spec]) -> bool {
+    if a.has_flag("help") {
+        print!("{}", render_help(cmd, about, specs));
+        true
+    } else {
+        false
+    }
+}
+
+// ---- commands --------------------------------------------------------------
+
+fn cmd_doctor(rest: &[String]) -> Result<()> {
+    const SPECS: &[Spec] = &[
+        Spec::opt_default("artifacts", "artifacts", "artifacts directory"),
+        Spec::flag("help", "show help"),
+    ];
+    let a = Args::parse(rest, SPECS)?;
+    if help_guard(&a, "doctor", "sanity-check the runtime", SPECS) {
+        return Ok(());
+    }
+    println!("PJRT: {}", parm::runtime::smoke()?);
+    let dir = Path::new(a.req("artifacts")?);
+    match parm::runtime::Manifest::load(dir) {
+        Ok(m) => {
+            println!("artifacts ({}):", m.artifacts.len());
+            for art in &m.artifacts {
+                let status = if m.hlo_path(&art.name).is_ok() { "ok" } else { "MISSING" };
+                println!("  {:<24} {status}", art.name);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e:#})"),
+    }
+    println!("doctor OK");
+    Ok(())
+}
+
+fn cmd_train(rest: &[String]) -> Result<()> {
+    const SPECS: &[Spec] = &[
+        Spec::opt_default("artifacts", "artifacts", "artifacts directory"),
+        Spec::opt_default("steps", "200", "training steps"),
+        Spec::opt_default("lr", "0.05", "learning rate"),
+        Spec::opt_default("seed", "42", "PRNG seed"),
+        Spec::opt_default("log-every", "10", "print every N steps"),
+        Spec::opt("log", "JSONL loss log path"),
+        Spec::flag("help", "show help"),
+    ];
+    let a = Args::parse(rest, SPECS)?;
+    if help_guard(&a, "train", "train the tiny MoE LM end-to-end", SPECS) {
+        return Ok(());
+    }
+    let opts = TrainOptions {
+        artifacts_dir: PathBuf::from(a.req("artifacts")?),
+        steps: a.get_usize("steps")?.unwrap(),
+        lr: a.get_f64("lr")?.unwrap() as f32,
+        seed: a.get_usize("seed")?.unwrap() as u64,
+        log_every: a.get_usize("log-every")?.unwrap(),
+        log_path: a.get("log").map(PathBuf::from),
+        reset_every: 12,
+    };
+    let report = train_lm(&opts)?;
+    println!(
+        "\ntrained {} params for {} steps in {:.1}s ({:.2} s/step)",
+        report.param_count,
+        report.steps,
+        report.wall_seconds,
+        report.wall_seconds / report.steps.max(1) as f64
+    );
+    println!(
+        "loss: {:.4} → {:.4} (synthetic-corpus entropy floor {:.3})",
+        report.first_loss(),
+        report.last_loss(),
+        report.entropy_floor
+    );
+    Ok(())
+}
+
+fn cmd_sim(rest: &[String]) -> Result<()> {
+    let mut specs = LAYER_SPECS.to_vec();
+    specs.push(Spec::opt_default("schedule", "parm", "baseline|s1|s2|s2-aas|parm"));
+    let a = Args::parse(rest, &specs)?;
+    if help_guard(&a, "sim", "simulate one MoE layer iteration", &specs) {
+        return Ok(());
+    }
+    let (cfg, cluster) = layer_from(&a)?;
+    let kind = ScheduleKind::parse(a.req("schedule")?)
+        .ok_or_else(|| anyhow!("bad --schedule"))?;
+    let kind = resolve(kind, &cfg, &cluster)?;
+    let report = lowering::simulate_iteration(kind, &cfg, &cluster)?;
+    println!("config   : {}", cfg.id());
+    println!("cluster  : {}", cluster.name);
+    println!("schedule : {}", kind.name());
+    println!("iteration: {}", fmt_seconds(report.makespan));
+    println!("comm %   : {:.1}", report.comm_ratio() * 100.0);
+    Ok(())
+}
+
+fn resolve(
+    kind: ScheduleKind,
+    cfg: &MoeLayerConfig,
+    cluster: &ClusterProfile,
+) -> Result<ScheduleKind> {
+    if kind == ScheduleKind::Parm {
+        let model = PerfModel::fit(cluster, cfg.par)?;
+        Ok(selection::choose_schedule(&model, cfg))
+    } else {
+        Ok(kind)
+    }
+}
+
+fn cmd_fit(rest: &[String]) -> Result<()> {
+    const SPECS: &[Spec] = &[
+        Spec::opt_default("cluster", "testbed_b", "cluster profile"),
+        Spec::opt_default("p", "32", "total GPUs"),
+        Spec::opt_default("mp", "4", "N_MP"),
+        Spec::opt_default("esp", "4", "N_ESP"),
+        Spec::flag("json", "print JSON instead of a table"),
+        Spec::flag("help", "show help"),
+    ];
+    let a = Args::parse(rest, SPECS)?;
+    if help_guard(&a, "fit", "fit α-β models for a layout", SPECS) {
+        return Ok(());
+    }
+    let cluster = ClusterProfile::load(a.req("cluster")?)?;
+    let par = ParallelDegrees {
+        p: a.get_usize("p")?.unwrap(),
+        n_mp: a.get_usize("mp")?.unwrap(),
+        n_esp: a.get_usize("esp")?.unwrap(),
+    };
+    let model = PerfModel::fit(&cluster, par)?;
+    if a.has_flag("json") {
+        println!("{}", model.to_json().to_pretty());
+    } else {
+        use parm::perfmodel::fit::CollKind;
+        let mut t = Table::new(&["collective", "alpha (s)", "beta (s/B)", "r²"]).numeric();
+        for kind in CollKind::ALL {
+            let f = model.get(kind);
+            t.row(&[
+                kind.name().into(),
+                format!("{:.3e}", f.intercept),
+                format!("{:.3e}", f.slope),
+                format!("{:.6}", f.r2),
+            ]);
+        }
+        print!("{}", t.to_text());
+    }
+    Ok(())
+}
+
+fn cmd_choose(rest: &[String]) -> Result<()> {
+    let a = Args::parse(rest, LAYER_SPECS)?;
+    if help_guard(&a, "choose", "Algorithm 1: pick S1 or S2", LAYER_SPECS) {
+        return Ok(());
+    }
+    let (cfg, cluster) = layer_from(&a)?;
+    let model = PerfModel::fit(&cluster, cfg.par)?;
+    let pred = selection::predict(&model, &cfg);
+    println!("t_baseline (predicted): {}", fmt_seconds(pred.t_baseline));
+    println!("t_D1 (S1, predicted)  : {}", fmt_seconds(pred.t_d1));
+    println!("t_D2 (S2, predicted)  : {}", fmt_seconds(pred.t_d2));
+    println!("Algorithm 1 chooses   : {}", pred.better().name());
+    Ok(())
+}
+
+fn cmd_sweep(rest: &[String]) -> Result<()> {
+    const SPECS: &[Spec] = &[
+        Spec::opt_default("cluster", "testbed_b", "cluster profile"),
+        Spec::opt("p", "restrict to one P"),
+        Spec::opt("limit", "only run the first N configs"),
+        Spec::flag("help", "show help"),
+    ];
+    let a = Args::parse(rest, SPECS)?;
+    if help_guard(&a, "sweep", "Table III sweep summary", SPECS) {
+        return Ok(());
+    }
+    let cluster = ClusterProfile::load(a.req("cluster")?)?;
+    let mut configs = match a.get_usize("p")? {
+        Some(p) => sweepcfg::sweep_at_p(&cluster, p, SweepFilter::Feasible),
+        None => sweepcfg::sweep_table3(&cluster, SweepFilter::Feasible),
+    };
+    if let Some(limit) = a.get_usize("limit")? {
+        configs.truncate(limit);
+    }
+    println!("{} feasible configs on {}", configs.len(), cluster.name);
+    let results = parm::bench::run_sweep(&configs, &cluster, true)?;
+    let s1: Vec<f64> = results.iter().map(|r| r.speedup_s1()).collect();
+    let s2: Vec<f64> = results.iter().map(|r| r.speedup_s2()).collect();
+    let pm: Vec<f64> = results.iter().map(|r| r.speedup_parm()).collect();
+    let mut t = Table::new(&["schedule", "mean speedup", "min", "max"]).numeric();
+    for (name, v) in [("S1", &s1), ("S2", &s2), ("Parm", &pm)] {
+        t.row(&[
+            name.into(),
+            format!("{:.2}×", mean(v)),
+            format!("{:.2}×", v.iter().cloned().fold(f64::MAX, f64::min)),
+            format!("{:.2}×", v.iter().cloned().fold(0.0, f64::max)),
+        ]);
+    }
+    print!("{}", t.to_text());
+    Ok(())
+}
+
+fn cmd_bench(rest: &[String]) -> Result<()> {
+    const SPECS: &[Spec] = &[
+        Spec::opt_default("reports", "reports", "output directory"),
+        Spec::flag("help", "show help"),
+    ];
+    let a = Args::parse(rest, SPECS)?;
+    if help_guard(
+        &a,
+        "bench",
+        "regenerate paper artifacts: fig1|fig6|table4|fig7|table5|saa|selection|choices|all",
+        SPECS,
+    ) {
+        return Ok(());
+    }
+    let which = a.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let reports = PathBuf::from(a.req("reports")?);
+    let run = |name: &str| -> Result<()> {
+        let out = match name {
+            "fig1" => paper::fig1(&reports)?,
+            "fig6" => paper::fig6(&reports)?,
+            "table4" => paper::table4(&reports)?,
+            "fig7" => paper::fig7(&reports)?,
+            "table5" => paper::table5(&reports)?,
+            "saa" => paper::saa_ablation(&reports)?,
+            "selection" => paper::selection_accuracy(&reports)?,
+            "choices" => paper::choice_breakdown(&reports)?,
+            other => bail!("unknown bench `{other}`"),
+        };
+        println!("\n{out}");
+        Ok(())
+    };
+    if which == "all" {
+        for name in ["fig1", "fig6", "table4", "fig7", "table5", "saa", "selection", "choices"] {
+            run(name)?;
+        }
+    } else {
+        run(which)?;
+    }
+    println!("reports written to {}", reports.display());
+    Ok(())
+}
+
+fn cmd_trace(rest: &[String]) -> Result<()> {
+    let mut specs = LAYER_SPECS.to_vec();
+    specs.push(Spec::opt_default("schedule", "s2", "schedule to trace"));
+    specs.push(Spec::opt_default("out", "trace.json", "Chrome trace output path"));
+    let a = Args::parse(rest, &specs)?;
+    if help_guard(&a, "trace", "emit a Chrome trace of one iteration", &specs) {
+        return Ok(());
+    }
+    let (cfg, cluster) = layer_from(&a)?;
+    let kind = ScheduleKind::parse(a.req("schedule")?)
+        .ok_or_else(|| anyhow!("bad --schedule"))?;
+    let kind = resolve(kind, &cfg, &cluster)?;
+    let ops = parm::schedule::iteration_ops(kind, &cfg);
+    let dag = lowering::lower_ops(&ops, &cfg, &cluster)?;
+    let report = Simulator::new(&cluster).run(&dag);
+    let trace = chrome_trace(&dag, &report);
+    std::fs::write(a.req("out")?, trace.to_string())?;
+    println!(
+        "{} tasks, makespan {} → {}",
+        dag.len(),
+        fmt_seconds(report.makespan),
+        a.req("out")?
+    );
+    Ok(())
+}

@@ -1,0 +1,137 @@
+//! Expert-FFN compute backends.
+//!
+//! The data-plane executor calls `expert_ffn` for every (source, local
+//! expert) block. [`NativeBackend`] computes in-process (pure Rust — the
+//! correctness anchor); [`PjrtExpertBackend`] runs the AOT-compiled
+//! Pallas kernel through PJRT — the production path, verified against the
+//! native backend in `rust/tests/`.
+
+use anyhow::{bail, Result};
+
+use crate::moe::linalg;
+use crate::runtime::{HostTensor, Runtime};
+
+/// Computes `y = relu(x @ w1) @ w2` with x (n, m), w1 (m, hs), w2 (hs, m).
+pub trait ExpertBackend {
+    fn expert_ffn(
+        &mut self,
+        x: &[f32],
+        w1: &[f32],
+        w2: &[f32],
+        n: usize,
+        m: usize,
+        hs: usize,
+    ) -> Result<Vec<f32>>;
+}
+
+/// Pure-Rust reference backend.
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl ExpertBackend for NativeBackend {
+    fn expert_ffn(
+        &mut self,
+        x: &[f32],
+        w1: &[f32],
+        w2: &[f32],
+        n: usize,
+        m: usize,
+        hs: usize,
+    ) -> Result<Vec<f32>> {
+        let mut h = linalg::matmul(x, w1, n, m, hs);
+        linalg::relu(&mut h);
+        Ok(linalg::matmul(&h, w2, n, hs, m))
+    }
+}
+
+/// PJRT backend: executes the `expert_ffn` artifact (the Pallas kernel
+/// lowered through JAX). The artifact is compiled for fixed (n, m, hs);
+/// calls with other shapes are an error (the executor arranges fixed
+/// capacity-padded shapes).
+pub struct PjrtExpertBackend {
+    rt: Runtime,
+    artifact: String,
+    n: usize,
+    m: usize,
+    hs: usize,
+}
+
+impl PjrtExpertBackend {
+    /// Wrap `runtime` for the named artifact; shapes are read from the
+    /// manifest (inputs: x (n,m), w1 (m,hs), w2 (hs,m)).
+    pub fn new(rt: Runtime, artifact: &str) -> Result<PjrtExpertBackend> {
+        let spec = rt.manifest().get(artifact)?.clone();
+        if spec.inputs.len() != 3 {
+            bail!("artifact `{artifact}` should take (x, w1, w2)");
+        }
+        let (x, w1, w2) = (&spec.inputs[0], &spec.inputs[1], &spec.inputs[2]);
+        if x.len() != 2 || w1.len() != 2 || w2.len() != 2 || x[1] != w1[0] || w1[1] != w2[0] {
+            bail!("artifact `{artifact}` has inconsistent shapes: {:?}", spec.inputs);
+        }
+        Ok(PjrtExpertBackend {
+            rt,
+            artifact: artifact.to_string(),
+            n: x[0],
+            m: x[1],
+            hs: w1[1],
+        })
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.n, self.m, self.hs)
+    }
+}
+
+impl ExpertBackend for PjrtExpertBackend {
+    fn expert_ffn(
+        &mut self,
+        x: &[f32],
+        w1: &[f32],
+        w2: &[f32],
+        n: usize,
+        m: usize,
+        hs: usize,
+    ) -> Result<Vec<f32>> {
+        if (n, m, hs) != (self.n, self.m, self.hs) {
+            bail!(
+                "PJRT expert backend compiled for {:?}, called with {:?}",
+                (self.n, self.m, self.hs),
+                (n, m, hs)
+            );
+        }
+        let out = self.rt.exec(
+            &self.artifact,
+            &[
+                HostTensor::new(vec![n, m], x.to_vec())?,
+                HostTensor::new(vec![m, hs], w1.to_vec())?,
+                HostTensor::new(vec![hs, m], w2.to_vec())?,
+            ],
+        )?;
+        Ok(out.into_iter().next().expect("one output").data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_matches_hand_computation() {
+        let mut b = NativeBackend;
+        // x = [1, -1], w1 = [[1, 0], [0, 1]] → h = relu([1, -1]) = [1, 0]
+        // w2 = [[2, 0], [0, 2]] → y = [2, 0]
+        let y = b
+            .expert_ffn(&[1.0, -1.0], &[1.0, 0.0, 0.0, 1.0], &[2.0, 0.0, 0.0, 2.0], 1, 2, 2)
+            .unwrap();
+        assert_eq!(y, vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn native_zero_rows_stay_zero() {
+        let mut b = NativeBackend;
+        let y = b
+            .expert_ffn(&[0.0; 4], &[1.0; 4], &[1.0; 4], 2, 2, 2)
+            .unwrap();
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+}

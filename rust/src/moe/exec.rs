@@ -1,0 +1,585 @@
+//! Distributed data-plane executor: runs one MoE layer forward under the
+//! Baseline / S1 / S2 schedule over P in-process ranks with *real* tensor
+//! data and the real collective semantics of [`crate::comm::data`].
+//!
+//! This is the semantics-preservation proof the paper asserts implicitly:
+//! all three schedules (and the single-device reference) must produce the
+//! same outputs for drop-free capacities. The executor also emits a
+//! communication log whose (tag, volume) entries are cross-checked in
+//! tests against the schedule IR the simulator times — the thing we time
+//! is the thing we verified.
+
+use anyhow::{ensure, Result};
+
+use crate::cluster::{GroupKind, ProcessGroups};
+use crate::comm::data;
+use crate::config::MoeLayerConfig;
+use crate::moe::backend::ExpertBackend;
+use crate::moe::gating::{self, DispatchInfo};
+use crate::moe::weights::GlobalWeights;
+use crate::schedule::ScheduleKind;
+use crate::util::prng::Rng;
+
+/// The world's state entering a MoE layer.
+#[derive(Debug, Clone)]
+pub struct LayerState {
+    pub cfg: MoeLayerConfig,
+    pub groups: ProcessGroups,
+    pub weights: GlobalWeights,
+    /// Per-rank tokens, (B·L, M) row-major; MP groups carry duplicates.
+    pub tokens: Vec<Vec<f32>>,
+}
+
+impl LayerState {
+    /// Random state: one distinct token set per MP group, duplicated to
+    /// members (the MP invariant at a MoE layer boundary).
+    pub fn random(cfg: &MoeLayerConfig, seed: u64) -> Result<LayerState> {
+        cfg.validate()?;
+        let groups = ProcessGroups::new(cfg.par)?;
+        let weights = GlobalWeights::random(cfg, seed);
+        let mut rng = Rng::new(seed ^ 0xD15A);
+        let n = cfg.tokens() * cfg.m;
+        let mut tokens: Vec<Vec<f32>> = vec![Vec::new(); cfg.par.p];
+        for r in 0..cfg.par.p {
+            if groups.mp_index(r) == 0 {
+                tokens[r] = rng.f32_vec(n);
+            }
+        }
+        for r in 0..cfg.par.p {
+            if groups.mp_index(r) != 0 {
+                let leader = groups.mp_group(r)[0];
+                tokens[r] = tokens[leader].clone();
+            }
+        }
+        Ok(LayerState { cfg: cfg.clone(), groups, weights, tokens })
+    }
+}
+
+/// Result of running a schedule on the data plane.
+#[derive(Debug, Clone)]
+pub struct ExecResult {
+    /// Per-rank layer outputs, (B·L, M) — same shape/meaning as inputs.
+    pub outputs: Vec<Vec<f32>>,
+    /// (tag, per-rank bytes) per collective executed, for IR cross-check.
+    pub comm_log: Vec<(String, f64)>,
+    /// Tokens dropped by capacity limits (0 for generous `f`).
+    pub dropped: usize,
+}
+
+/// Execute one forward pass of the layer under `kind`.
+pub fn run_schedule(
+    kind: ScheduleKind,
+    state: &LayerState,
+    backend: &mut dyn ExpertBackend,
+) -> Result<ExecResult> {
+    match kind {
+        ScheduleKind::Baseline => baseline_forward(state, backend),
+        ScheduleKind::S1 => s1_forward(state, backend),
+        // S2 and S2Aas share the data plane (SAA changes timing, not
+        // bytes — saa_data == saa_reference is proven in comm::saa).
+        ScheduleKind::S2 | ScheduleKind::S2Aas => s2_forward(state, backend),
+        ScheduleKind::Parm => {
+            anyhow::bail!("resolve Parm to S1/S2 via the perf model first")
+        }
+    }
+}
+
+const FB: f64 = 4.0; // f32 bytes
+
+// ---------------------------------------------------------------------
+// Baseline (Fig 3a): ESP-AllGather → Gate → EP-AlltoAll → experts →
+// ESP-AllReduce → EP-AlltoAll → un-gate → ESP-Split.
+// ---------------------------------------------------------------------
+fn baseline_forward(
+    state: &LayerState,
+    backend: &mut dyn ExpertBackend,
+) -> Result<ExecResult> {
+    let c = &state.cfg;
+    let g = &state.groups;
+    let p = c.par.p;
+    let m = c.m;
+    let hs = c.h / c.par.n_esp;
+    let e_local = c.experts_per_rank();
+    let n_ep = c.par.n_ep();
+    let mut log = Vec::new();
+
+    // 1. ESP-AllGather of the tokens.
+    let mut world: Vec<Vec<f32>> = state.tokens.clone();
+    for grp in g.all_groups(GroupKind::Esp) {
+        data::allgather(&mut world, &grp);
+    }
+    log.push(("esp.allgather".to_string(), (c.tokens() * m) as f64 * FB));
+
+    // 2. Gate the gathered tokens (identical within each ESP group).
+    let n_gathered = c.tokens() * c.par.n_esp;
+    let cap = gating::capacity(n_gathered, c.e, c.k, c.f, 1);
+    let mut infos: Vec<DispatchInfo> = Vec::with_capacity(p);
+    let mut dispatch: Vec<Vec<f32>> = Vec::with_capacity(p);
+    for r in 0..p {
+        let info = gating::gate(&world[r], &state.weights.wg, n_gathered, m, c.e, c.k, cap);
+        dispatch.push(gating::build_dispatch(&info, &world[r], m));
+        infos.push(info);
+    }
+    let dropped = infos.iter().map(|i| i.dropped).sum();
+
+    // 3. EP-AlltoAll dispatch: chunk j of the (E, cap, M) tensor = the
+    // experts of EP slot j (contiguous rows).
+    let mut world = dispatch;
+    for grp in g.all_groups(GroupKind::Ep) {
+        data::alltoall(&mut world, &grp);
+    }
+    log.push(("ep.alltoall".to_string(), (e_local * cap * m) as f64 * FB));
+    // Rank now holds (N_EP srcs, E_local, cap, M).
+
+    // 4. Expert shards: per (src, local expert) block, batched per expert.
+    let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); p];
+    for r in 0..p {
+        let (w1s, w2s) = state.weights.shard_for_rank(c, g, r);
+        let recv = &world[r];
+        let mut out = vec![0.0f32; recv.len()];
+        let block = e_local * cap * m;
+        for le in 0..e_local {
+            // Gather rows of local expert `le` from every source chunk.
+            let mut x = Vec::with_capacity(n_ep * cap * m);
+            for src in 0..n_ep {
+                let base = src * block + le * cap * m;
+                x.extend_from_slice(&recv[base..base + cap * m]);
+            }
+            let y = backend.expert_ffn(&x, &w1s[le], &w2s[le], n_ep * cap, m, hs)?;
+            for src in 0..n_ep {
+                let base = src * block + le * cap * m;
+                out[base..base + cap * m]
+                    .copy_from_slice(&y[src * cap * m..(src + 1) * cap * m]);
+            }
+        }
+        outputs[r] = out;
+    }
+
+    // 5. ESP-AllReduce of the partial expert outputs.
+    let mut world = outputs;
+    for grp in g.all_groups(GroupKind::Esp) {
+        data::allreduce(&mut world, &grp);
+    }
+    log.push(("esp.allreduce".to_string(), (n_ep * e_local * cap * m) as f64 * FB));
+
+    // 6. EP-AlltoAll combine (chunk j = outputs computed for source j).
+    for grp in g.all_groups(GroupKind::Ep) {
+        data::alltoall(&mut world, &grp);
+    }
+    log.push(("ep.alltoall".to_string(), (e_local * cap * m) as f64 * FB));
+    // Rank holds (N_EP blocks, E_local, cap, M) = (E, cap, M) in expert
+    // order — exactly its dispatch tensor's outputs.
+
+    // 7. Un-gate to gathered-token order, then ESP-Split keeps own rows.
+    let mut final_out: Vec<Vec<f32>> = vec![Vec::new(); p];
+    for r in 0..p {
+        let y = gating::combine(&infos[r], &world[r], m);
+        let shard = g.esp_shard(r);
+        let start = shard * c.tokens() * m;
+        final_out[r] = y[start..start + c.tokens() * m].to_vec();
+    }
+    log.push(("esp.split".to_string(), 0.0));
+
+    Ok(ExecResult { outputs: final_out, comm_log: log, dropped })
+}
+
+// ---------------------------------------------------------------------
+// PauseMP common pieces (S1/S2): fused dispatch / combine over the
+// EP×ESP product group with local Dump / local Combine.
+// ---------------------------------------------------------------------
+
+/// Build the fused-AlltoAll send buffer from a (E, cap, M) dispatch
+/// tensor: for each destination rank (block j, shard s) append the rows of
+/// block j's experts — the Dump duplicates each block's slice to its
+/// N_ESP shard holders.
+fn fused_send_buffer(
+    d: &[f32],
+    g: &ProcessGroups,
+    e: usize,
+    cap: usize,
+    m: usize,
+) -> Vec<f32> {
+    let p = g.par.p;
+    let mut out = Vec::with_capacity(p * (e / g.par.n_ep()).max(1) * cap * m);
+    for dst in 0..p {
+        let slot = g.ep_slot(dst);
+        for ex in g.experts_of_slot(slot, e) {
+            out.extend_from_slice(&d[ex * cap * m..(ex + 1) * cap * m]);
+        }
+    }
+    out
+}
+
+/// Inverse of the Dump: sum the per-shard partial copies returned by the
+/// combine AlltoAll into a (E, cap, M) tensor.
+fn fused_combine_buffer(
+    recv: &[f32],
+    g: &ProcessGroups,
+    e: usize,
+    cap: usize,
+    m: usize,
+) -> Vec<f32> {
+    let p = g.par.p;
+    let e_local = (e / g.par.n_ep()).max(1);
+    let chunk = e_local * cap * m;
+    assert_eq!(recv.len(), p * chunk);
+    let mut out = vec![0.0f32; e * cap * m];
+    for q in 0..p {
+        let slot = g.ep_slot(q);
+        for (i, ex) in g.experts_of_slot(slot, e).enumerate() {
+            let src = q * chunk + i * cap * m;
+            let dst = ex * cap * m;
+            for j in 0..cap * m {
+                out[dst + j] += recv[src + j];
+            }
+        }
+    }
+    out
+}
+
+/// Shared S1/S2 middle: fused dispatch → expert shards → fused combine →
+/// local combine. Takes each rank's (E, cap, M) dispatch tensor; returns
+/// each rank's (E, cap, M) expert outputs.
+fn pausemp_expert_phase(
+    state: &LayerState,
+    dispatch: Vec<Vec<f32>>,
+    cap: usize,
+    backend: &mut dyn ExpertBackend,
+    log: &mut Vec<(String, f64)>,
+) -> Result<Vec<Vec<f32>>> {
+    let c = &state.cfg;
+    let g = &state.groups;
+    let p = c.par.p;
+    let m = c.m;
+    let hs = c.h / c.par.n_esp;
+    let e_local = c.experts_per_rank();
+    let world_group: Vec<usize> = g.world();
+
+    // Dump + fused AlltoAll dispatch.
+    let mut world: Vec<Vec<f32>> = dispatch
+        .iter()
+        .map(|d| fused_send_buffer(d, g, c.e, cap, m))
+        .collect();
+    data::alltoall(&mut world, &world_group);
+    log.push(("fused.alltoall".to_string(), (e_local * cap * m) as f64 * FB));
+    // Rank holds (P srcs, E_local, cap, M).
+
+    // Expert shards, batched per local expert over all P sources.
+    let block = e_local * cap * m;
+    for r in 0..p {
+        let (w1s, w2s) = state.weights.shard_for_rank(c, g, r);
+        let recv = std::mem::take(&mut world[r]);
+        let mut out = vec![0.0f32; recv.len()];
+        for le in 0..e_local {
+            let mut x = Vec::with_capacity(p * cap * m);
+            for src in 0..p {
+                let base = src * block + le * cap * m;
+                x.extend_from_slice(&recv[base..base + cap * m]);
+            }
+            let y = backend.expert_ffn(&x, &w1s[le], &w2s[le], p * cap, m, hs)?;
+            for src in 0..p {
+                let base = src * block + le * cap * m;
+                out[base..base + cap * m]
+                    .copy_from_slice(&y[src * cap * m..(src + 1) * cap * m]);
+            }
+        }
+        world[r] = out;
+    }
+
+    // Fused AlltoAll combine (send buffer already ordered by source).
+    data::alltoall(&mut world, &world_group);
+    log.push(("fused.alltoall".to_string(), (e_local * cap * m) as f64 * FB));
+
+    // Local combine: sum shard partials per expert block.
+    let out = world
+        .iter()
+        .map(|recv| fused_combine_buffer(recv, g, c.e, cap, m))
+        .collect();
+    log.push(("local.combine".to_string(), 0.0));
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// S1 (Fig 3b): MP-Split → Gate → fused dispatch/experts/combine →
+// un-gate → MP-AllGather.
+// ---------------------------------------------------------------------
+fn s1_forward(state: &LayerState, backend: &mut dyn ExpertBackend) -> Result<ExecResult> {
+    let c = &state.cfg;
+    let g = &state.groups;
+    let p = c.par.p;
+    let m = c.m;
+    ensure!(c.tokens() % c.par.n_mp == 0, "B·L must divide N_MP");
+    let n_local = c.tokens() / c.par.n_mp;
+    let mut log = Vec::new();
+
+    // 1. MP-Split: each rank keeps its 1/N_MP token slice.
+    let slices: Vec<Vec<f32>> = (0..p)
+        .map(|r| {
+            let mi = g.mp_index(r);
+            state.tokens[r][mi * n_local * m..(mi + 1) * n_local * m].to_vec()
+        })
+        .collect();
+    log.push(("mp.split".to_string(), 0.0));
+
+    // 2. Gate the local slice.
+    let cap = gating::capacity(n_local, c.e, c.k, c.f, 1);
+    let mut infos = Vec::with_capacity(p);
+    let mut dispatch = Vec::with_capacity(p);
+    for r in 0..p {
+        let info = gating::gate(&slices[r], &state.weights.wg, n_local, m, c.e, c.k, cap);
+        dispatch.push(gating::build_dispatch(&info, &slices[r], m));
+        infos.push(info);
+    }
+    let dropped = infos.iter().map(|i| i.dropped).sum();
+
+    // 3-6. Fused dispatch → experts → fused combine → local combine.
+    let expert_out = pausemp_expert_phase(state, dispatch, cap, backend, &mut log)?;
+
+    // 7. Un-gate to local token order.
+    let mut world: Vec<Vec<f32>> = (0..p)
+        .map(|r| gating::combine(&infos[r], &expert_out[r], m))
+        .collect();
+
+    // 8. MP-AllGather restores the full (B·L, M) tokens.
+    for grp in g.all_groups(GroupKind::Mp) {
+        data::allgather(&mut world, &grp);
+    }
+    log.push(("mp.allgather".to_string(), (n_local * m) as f64 * FB));
+
+    Ok(ExecResult { outputs: world, comm_log: log, dropped })
+}
+
+// ---------------------------------------------------------------------
+// S2 (Fig 3c): Gate (full tokens) → MP-Split of capacity slots → fused
+// dispatch/experts/combine → MP-AllGather of the (E, C, M) outputs
+// (overlapped with the combine via SAA on the wire) → un-gate.
+// ---------------------------------------------------------------------
+fn s2_forward(state: &LayerState, backend: &mut dyn ExpertBackend) -> Result<ExecResult> {
+    let c = &state.cfg;
+    let g = &state.groups;
+    let p = c.par.p;
+    let m = c.m;
+    let n = c.tokens();
+    let mut log = Vec::new();
+
+    // 1. Gate on the full (MP-duplicated) tokens; capacity divisible by
+    // N_MP so the slot split is even.
+    let cap = gating::capacity(n, c.e, c.k, c.f, c.par.n_mp);
+    let cap_local = cap / c.par.n_mp;
+    let mut infos = Vec::with_capacity(p);
+    let mut dispatch_full = Vec::with_capacity(p);
+    for r in 0..p {
+        let info = gating::gate(&state.tokens[r], &state.weights.wg, n, m, c.e, c.k, cap);
+        dispatch_full.push(gating::build_dispatch(&info, &state.tokens[r], m));
+        infos.push(info);
+    }
+    let dropped = infos.iter().map(|i| i.dropped).sum();
+
+    // 2. MP-Split of the capacity dimension: member i keeps slots
+    // [i·cap_local, (i+1)·cap_local) of every expert.
+    let mut dispatch = Vec::with_capacity(p);
+    for r in 0..p {
+        let mi = g.mp_index(r);
+        let full = &dispatch_full[r];
+        let mut part = Vec::with_capacity(c.e * cap_local * m);
+        for ex in 0..c.e {
+            let base = (ex * cap + mi * cap_local) * m;
+            part.extend_from_slice(&full[base..base + cap_local * m]);
+        }
+        dispatch.push(part);
+    }
+    log.push(("mp.split".to_string(), 0.0));
+
+    // 3-6. Fused dispatch → experts → fused combine → local combine.
+    let expert_out = pausemp_expert_phase(state, dispatch, cap_local, backend, &mut log)?;
+
+    // 7. MP-AllGather of the (E, cap_local, M) outputs; on the wire this
+    // is the SAA-overlapped combine (see comm::saa for the equivalence
+    // proof). Gathered chunks interleave back into (E, cap, M) slot order.
+    let mut world = expert_out;
+    for grp in g.all_groups(GroupKind::Mp) {
+        data::allgather(&mut world, &grp);
+    }
+    log.push(("mp.allgather".to_string(), (c.e * cap_local * m) as f64 * FB));
+
+    let mut outputs = Vec::with_capacity(p);
+    for r in 0..p {
+        let gathered = &world[r]; // (N_MP, E, cap_local, M) in MP order
+        let mut full = vec![0.0f32; c.e * cap * m];
+        let chunk = c.e * cap_local * m;
+        for mi in 0..c.par.n_mp {
+            for ex in 0..c.e {
+                let src = mi * chunk + ex * cap_local * m;
+                let dst = (ex * cap + mi * cap_local) * m;
+                full[dst..dst + cap_local * m]
+                    .copy_from_slice(&gathered[src..src + cap_local * m]);
+            }
+        }
+        // 8. Un-gate.
+        outputs.push(gating::combine(&infos[r], &full, m));
+    }
+
+    Ok(ExecResult { outputs, comm_log: log, dropped })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::moe::ParallelDegrees;
+    use crate::moe::backend::NativeBackend;
+    use crate::moe::reference::reference_forward;
+    use crate::util::propcheck::assert_close;
+
+    /// Drop-free config: generous capacity factor.
+    fn cfg(p: usize, n_mp: usize, n_esp: usize) -> MoeLayerConfig {
+        MoeLayerConfig {
+            par: ParallelDegrees { p, n_mp, n_esp },
+            b: 1,
+            l: 16,
+            e: (p / n_esp).max(2),
+            m: 8,
+            h: 8 * n_esp, // divisible by n_esp
+            k: 2,
+            f: 64.0, // generous: no drops anywhere
+            dtype_bytes: 4,
+        }
+    }
+
+    fn check_all_schedules_match_reference(c: &MoeLayerConfig, seed: u64) {
+        let state = LayerState::random(c, seed).unwrap();
+        let mut backend = NativeBackend;
+
+        // Reference output per rank (dense, no parallelism).
+        let cap_ref = c.tokens() * c.k; // generous
+        let refs: Vec<Vec<f32>> = (0..c.par.p)
+            .map(|r| {
+                reference_forward(c, &state.weights, &state.tokens[r], c.tokens(), cap_ref, &mut backend)
+                    .unwrap()
+            })
+            .collect();
+
+        for kind in [ScheduleKind::Baseline, ScheduleKind::S1, ScheduleKind::S2] {
+            let res = run_schedule(kind, &state, &mut backend).unwrap();
+            assert_eq!(res.dropped, 0, "{kind:?} dropped tokens");
+            for r in 0..c.par.p {
+                assert_close(&res.outputs[r], &refs[r], 1e-4, 1e-3).unwrap_or_else(|e| {
+                    panic!("{kind:?} rank {r} mismatch: {e}");
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn schedules_match_reference_p4() {
+        check_all_schedules_match_reference(&cfg(4, 2, 2), 11);
+    }
+
+    #[test]
+    fn schedules_match_reference_p8_mp2_esp2() {
+        check_all_schedules_match_reference(&cfg(8, 2, 2), 12);
+    }
+
+    #[test]
+    fn schedules_match_reference_p8_mp4_esp2() {
+        check_all_schedules_match_reference(&cfg(8, 4, 2), 13);
+    }
+
+    #[test]
+    fn schedules_match_reference_p8_mp2_esp4() {
+        check_all_schedules_match_reference(&cfg(8, 2, 4), 14);
+    }
+
+    #[test]
+    fn schedules_match_reference_no_mp() {
+        check_all_schedules_match_reference(&cfg(4, 1, 2), 15);
+    }
+
+    #[test]
+    fn schedules_match_reference_no_esp() {
+        check_all_schedules_match_reference(&cfg(4, 2, 1), 16);
+    }
+
+    #[test]
+    fn comm_log_matches_schedule_ir() {
+        // The data plane's collective volumes must agree with the op
+        // program the simulator times (within capacity-rounding).
+        use crate::schedule::{forward_ops, Op};
+        let c = cfg(8, 2, 2);
+        let state = LayerState::random(&c, 3).unwrap();
+        let mut backend = NativeBackend;
+        for kind in [ScheduleKind::Baseline, ScheduleKind::S1, ScheduleKind::S2] {
+            let res = run_schedule(kind, &state, &mut backend).unwrap();
+            let ops = forward_ops(kind, &c);
+            let mut ir_comm: Vec<(&str, f64)> = Vec::new();
+            for o in &ops {
+                match *o {
+                    Op::EspAllGather { bytes_per_rank } => {
+                        ir_comm.push(("esp.allgather", bytes_per_rank))
+                    }
+                    Op::EpAlltoAll { bytes_per_pair } => {
+                        ir_comm.push(("ep.alltoall", bytes_per_pair))
+                    }
+                    Op::EspAllReduce { total_bytes } => {
+                        ir_comm.push(("esp.allreduce", total_bytes))
+                    }
+                    Op::FusedAlltoAll { bytes_per_pair } => {
+                        ir_comm.push(("fused.alltoall", bytes_per_pair))
+                    }
+                    // SAA/AAS = fused combine + MP-AllGather on the wire.
+                    Op::SaaCombine { bytes_per_pair } | Op::AasCombine { bytes_per_pair } => {
+                        ir_comm.push(("fused.alltoall", bytes_per_pair));
+                        ir_comm.push((
+                            "mp.allgather",
+                            crate::schedule::ops::bytes_mp_ag_s2_per_rank(&c),
+                        ));
+                    }
+                    Op::MpAllGather { bytes_per_rank } => {
+                        ir_comm.push(("mp.allgather", bytes_per_rank))
+                    }
+                    _ => {}
+                }
+            }
+            let exec_comm: Vec<(&str, f64)> = res
+                .comm_log
+                .iter()
+                .filter(|(_, b)| *b > 0.0)
+                .map(|(t, b)| (t.as_str(), *b))
+                .collect();
+            assert_eq!(
+                ir_comm.len(),
+                exec_comm.len(),
+                "{kind:?}: IR {ir_comm:?} vs exec {exec_comm:?}"
+            );
+            for ((it, ib), (et, eb)) in ir_comm.iter().zip(exec_comm.iter()) {
+                assert_eq!(it, et, "{kind:?} op order");
+                let rel = (ib - eb).abs() / ib.max(*eb);
+                assert!(
+                    rel < 0.15,
+                    "{kind:?} {it}: IR {ib} vs exec {eb} (rel {rel})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tight_capacity_drops_consistently() {
+        let mut c = cfg(4, 2, 2);
+        c.f = 0.5; // starved capacity
+        let state = LayerState::random(&c, 9).unwrap();
+        let mut backend = NativeBackend;
+        for kind in [ScheduleKind::Baseline, ScheduleKind::S1, ScheduleKind::S2] {
+            let res = run_schedule(kind, &state, &mut backend).unwrap();
+            assert!(res.dropped > 0, "{kind:?} should drop under f=0.5");
+            for out in &res.outputs {
+                assert!(out.iter().all(|v| v.is_finite()));
+            }
+        }
+    }
+
+    #[test]
+    fn parm_requires_resolution() {
+        let c = cfg(4, 2, 2);
+        let state = LayerState::random(&c, 1).unwrap();
+        assert!(run_schedule(ScheduleKind::Parm, &state, &mut NativeBackend).is_err());
+    }
+}

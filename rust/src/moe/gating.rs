@@ -1,0 +1,251 @@
+//! GShard-style gating: softmax router, top-k selection, capacity-limited
+//! slot assignment, dense (E, C, M) dispatch construction and the inverse
+//! combine (un-gate).
+//!
+//! Determinism contract: token order is preserved through top-k and slot
+//! assignment (first-come-first-served per expert, ties broken by expert
+//! index), so identical inputs produce identical routing on every rank —
+//! the property the baseline/S1/S2 equivalence rests on.
+
+use crate::moe::linalg;
+
+/// Routing decisions for one gate invocation over `n_tokens` tokens.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DispatchInfo {
+    pub n_tokens: usize,
+    pub e: usize,
+    /// Capacity per expert for this invocation.
+    pub capacity: usize,
+    /// (token, expert, slot, combine-weight), in assignment order.
+    pub assignments: Vec<(usize, usize, usize, f32)>,
+    /// Tokens whose k-th choice overflowed an expert's capacity.
+    pub dropped: usize,
+}
+
+/// Capacity per expert: `C = ceil(k·f·n/E)`, floored at 1, optionally
+/// rounded up to a multiple of `multiple_of` (S2 splits capacity across
+/// the MP group, so it must divide evenly).
+pub fn capacity(n_tokens: usize, e: usize, k: usize, f: f64, multiple_of: usize) -> usize {
+    let c = (k as f64 * f * n_tokens as f64 / e as f64).ceil() as usize;
+    let c = c.max(1);
+    c.div_ceil(multiple_of) * multiple_of
+}
+
+/// Route `tokens` ((n, m) row-major) through the gate `wg` ((m, e)).
+pub fn gate(
+    tokens: &[f32],
+    wg: &[f32],
+    n: usize,
+    m: usize,
+    e: usize,
+    k: usize,
+    cap: usize,
+) -> DispatchInfo {
+    assert!(k <= e, "top-{k} of {e} experts");
+    let mut logits = linalg::matmul(tokens, wg, n, m, e);
+    linalg::softmax_rows(&mut logits, n, e);
+
+    let mut counts = vec![0usize; e];
+    let mut assignments = Vec::with_capacity(n * k);
+    let mut dropped = 0usize;
+    // Scratch for the partial top-k selection (alloc-free per token):
+    // taken[j] marks experts already chosen for this token.
+    let mut taken = vec![false; e];
+    for t in 0..n {
+        let probs = &logits[t * e..(t + 1) * e];
+        // Top-k by k max-scans (k ≤ 2 in practice; O(k·E), no sort, no
+        // per-token allocation). Strict `>` keeps the lowest index among
+        // ties — same order the previous sort-based selection produced.
+        taken.iter_mut().for_each(|x| *x = false);
+        for _ in 0..k {
+            let mut best = usize::MAX;
+            let mut best_p = f32::NEG_INFINITY;
+            for (expert, &p) in probs.iter().enumerate() {
+                if !taken[expert] && p > best_p {
+                    best = expert;
+                    best_p = p;
+                }
+            }
+            let expert = best;
+            taken[expert] = true;
+            if counts[expert] < cap {
+                assignments.push((t, expert, counts[expert], probs[expert]));
+                counts[expert] += 1;
+            } else {
+                dropped += 1;
+            }
+        }
+    }
+    DispatchInfo { n_tokens: n, e, capacity: cap, assignments, dropped }
+}
+
+/// Build the dense (E, C, M) dispatch tensor (zero-padded).
+pub fn build_dispatch(info: &DispatchInfo, tokens: &[f32], m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; info.e * info.capacity * m];
+    for &(t, expert, slot, _w) in &info.assignments {
+        let dst = (expert * info.capacity + slot) * m;
+        let src = t * m;
+        out[dst..dst + m].copy_from_slice(&tokens[src..src + m]);
+    }
+    out
+}
+
+/// Un-gate: scatter expert outputs ((E, C, M)) back to token order with
+/// combine weights: `y[t] = Σ w·expert_out[e, slot]` over t's assignments.
+pub fn combine(info: &DispatchInfo, expert_out: &[f32], m: usize) -> Vec<f32> {
+    assert_eq!(expert_out.len(), info.e * info.capacity * m);
+    let mut y = vec![0.0f32; info.n_tokens * m];
+    for &(t, expert, slot, w) in &info.assignments {
+        let src = (expert * info.capacity + slot) * m;
+        let dst = t * m;
+        for i in 0..m {
+            y[dst + i] += w * expert_out[src + i];
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn capacity_formula() {
+        assert_eq!(capacity(128, 4, 2, 1.2, 1), 77); // ceil(2·1.2·128/4)
+        assert_eq!(capacity(128, 4, 2, 1.2, 4), 80); // rounded to ×4
+        assert_eq!(capacity(1, 64, 1, 1.0, 1), 1); // floor at 1
+    }
+
+    #[test]
+    fn gate_routes_to_topk() {
+        // Identity-ish gate: 2 tokens, 2 experts, strongly separated.
+        let tokens = vec![10.0, 0.0, 0.0, 10.0]; // (2, 2)
+        let wg = vec![1.0, 0.0, 0.0, 1.0]; // (2, 2) identity
+        let info = gate(&tokens, &wg, 2, 2, 2, 1, 4);
+        assert_eq!(info.assignments.len(), 2);
+        assert_eq!(info.assignments[0].1, 0); // token 0 → expert 0
+        assert_eq!(info.assignments[1].1, 1); // token 1 → expert 1
+        assert_eq!(info.dropped, 0);
+        for &(_, _, _, w) in &info.assignments {
+            assert!(w > 0.99); // softmax saturated
+        }
+    }
+
+    #[test]
+    fn capacity_drops_overflow() {
+        // Every token prefers expert 0; capacity 1 forces drops.
+        let tokens = vec![5.0, 0.0, 5.0, 0.0, 5.0, 0.0]; // 3 tokens
+        let wg = vec![1.0, 0.0, 0.0, 1.0];
+        let info = gate(&tokens, &wg, 3, 2, 2, 1, 1);
+        assert_eq!(info.dropped, 2);
+        // First token won the slot.
+        assert_eq!(info.assignments[0].0, 0);
+    }
+
+    #[test]
+    fn dispatch_combine_roundtrip_identity_experts() {
+        // With identity experts and top-1 saturated routing, combine ∘
+        // dispatch ≈ identity (weight ≈ 1).
+        let tokens = vec![10.0, 0.0, 0.0, 10.0];
+        let wg = vec![1.0, 0.0, 0.0, 1.0];
+        let info = gate(&tokens, &wg, 2, 2, 2, 1, 2);
+        let d = build_dispatch(&info, &tokens, 2);
+        let y = combine(&info, &d, 2);
+        for (a, b) in y.iter().zip(tokens.iter()) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn prop_no_drops_with_generous_capacity() {
+        check("gate-generous-capacity", 30, |rng| {
+            let n = rng.range(1, 16);
+            let m = rng.range(1, 8);
+            let e = rng.range(1, 6);
+            let k = rng.range(1, e.min(3));
+            let tokens = rng.f32_vec(n * m);
+            let wg = rng.f32_vec(m * e);
+            let info = gate(&tokens, &wg, n, m, e, k, n.max(1) * k);
+            if info.dropped != 0 {
+                return Err(format!("dropped {} with cap ≥ n·k", info.dropped));
+            }
+            if info.assignments.len() != n * k {
+                return Err("not all tokens assigned".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_slots_unique_per_expert() {
+        check("gate-slots-unique", 30, |rng| {
+            let n = rng.range(1, 20);
+            let m = rng.range(1, 6);
+            let e = rng.range(2, 6);
+            let tokens = rng.f32_vec(n * m);
+            let wg = rng.f32_vec(m * e);
+            let cap = rng.range(1, 8);
+            let info = gate(&tokens, &wg, n, m, e, 2.min(e), cap);
+            let mut seen = std::collections::HashSet::new();
+            for &(_, expert, slot, _) in &info.assignments {
+                if slot >= cap {
+                    return Err(format!("slot {slot} ≥ cap {cap}"));
+                }
+                if !seen.insert((expert, slot)) {
+                    return Err(format!("duplicate slot ({expert},{slot})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_gate_deterministic() {
+        check("gate-deterministic", 10, |rng| {
+            let n = 8;
+            let m = 4;
+            let e = 4;
+            let tokens = rng.f32_vec(n * m);
+            let wg = rng.f32_vec(m * e);
+            let a = gate(&tokens, &wg, n, m, e, 2, 6);
+            let b = gate(&tokens, &wg, n, m, e, 2, 6);
+            if a != b {
+                return Err("gate not deterministic".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_across_token_grouping() {
+        // Gating a concatenation assigns the same experts per token as
+        // gating the halves separately (weights identical; slots differ).
+        let mut rng = Rng::new(42);
+        let m = 4;
+        let e = 4;
+        let a = rng.f32_vec(4 * m);
+        let b = rng.f32_vec(4 * m);
+        let wg = rng.f32_vec(m * e);
+        let mut cat = a.clone();
+        cat.extend_from_slice(&b);
+        let info_cat = gate(&cat, &wg, 8, m, e, 2, 16);
+        let info_a = gate(&a, &wg, 4, m, e, 2, 16);
+        let info_b = gate(&b, &wg, 4, m, e, 2, 16);
+        let experts_of = |info: &DispatchInfo, t: usize| {
+            let mut v: Vec<(usize, u32)> = info
+                .assignments
+                .iter()
+                .filter(|(tok, ..)| *tok == t)
+                .map(|&(_, e, _, w)| (e, w.to_bits()))
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        for t in 0..4 {
+            assert_eq!(experts_of(&info_cat, t), experts_of(&info_a, t));
+            assert_eq!(experts_of(&info_cat, t + 4), experts_of(&info_b, t));
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Minimal dense linear algebra for the data plane: row-major f32 GEMM
+//! (cache-blocked), ReLU, and a numerically-stable softmax.
+//!
+//! These back the *native* compute backend used by correctness tests; the
+//! PJRT backend runs the same math through the AOT-compiled Pallas/XLA
+//! artifacts.
+
+/// `c += a @ b` where a: (m, k), b: (k, n), c: (m, n), all row-major.
+///
+/// i-k-j loop order with a register-carried `a[i][l]` gives contiguous
+/// access to both `b` and `c` rows — memory-friendly without needing a
+/// full tiling framework for the sizes tests use.
+pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "a shape");
+    assert_eq!(b.len(), k * n, "b shape");
+    assert_eq!(c.len(), m * n, "c shape");
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // dispatch tensors are zero-padded; skip dead rows
+            }
+            let brow = &b[l * n..(l + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// `a @ b`, fresh output.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_acc(a, b, &mut c, m, k, n);
+    c
+}
+
+/// In-place ReLU.
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Row-wise softmax over a (rows, cols) row-major matrix, in place.
+pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols);
+    for r in 0..rows {
+        let row = &mut x[r * cols..(r + 1) * cols];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_2x2() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let c = matmul(&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0], 2, 2, 2);
+        assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_rect() {
+        // (1,3) @ (3,2)
+        let c = matmul(&[1.0, 0.0, -1.0], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 1, 3, 2);
+        assert_eq!(c, vec![-4.0, -4.0]);
+    }
+
+    #[test]
+    fn matmul_acc_accumulates() {
+        let mut c = vec![1.0f32; 1];
+        matmul_acc(&[2.0], &[3.0], &mut c, 1, 1, 1);
+        assert_eq!(c, vec![7.0]);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let mut x = vec![-1.0, 0.0, 2.0];
+        relu(&mut x);
+        assert_eq!(x, vec![0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn softmax_rows_normalize() {
+        let mut x = vec![0.0, 0.0, 1000.0, 1000.0];
+        softmax_rows(&mut x, 2, 2);
+        for r in 0..2 {
+            let s: f32 = x[r * 2..(r + 1) * 2].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            assert!((x[r * 2] - 0.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let mut x = vec![1e30f32, 0.0];
+        softmax_rows(&mut x, 1, 2);
+        assert!((x[0] - 1.0).abs() < 1e-6 && x[1].abs() < 1e-6);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+}

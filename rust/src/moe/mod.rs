@@ -1,0 +1,16 @@
+//! The MoE layer itself: gating, expert weights, the distributed
+//! data-plane executor (numerics of each schedule over real rank buffers),
+//! and the single-device reference the schedules are verified against.
+
+pub mod backend;
+pub mod exec;
+pub mod gating;
+pub mod linalg;
+pub mod reference;
+pub mod weights;
+
+pub use backend::{ExpertBackend, NativeBackend, PjrtExpertBackend};
+pub use exec::{run_schedule, LayerState};
+pub use gating::{gate, DispatchInfo};
+pub use reference::reference_forward;
+pub use weights::GlobalWeights;

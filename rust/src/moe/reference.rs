@@ -1,0 +1,80 @@
+//! Single-device dense reference of the MoE layer forward: no
+//! parallelism, full experts, same gating code. Every distributed
+//! schedule must reproduce this bit-for-bit up to f32 summation order.
+
+use anyhow::Result;
+
+use crate::config::MoeLayerConfig;
+use crate::moe::backend::ExpertBackend;
+use crate::moe::gating;
+use crate::moe::weights::GlobalWeights;
+
+/// Forward one rank's tokens ((n, M) row-major) through the dense layer.
+/// `cap` is the per-expert capacity to emulate (schedules differ here);
+/// pass a generous value for drop-free comparison.
+pub fn reference_forward(
+    c: &MoeLayerConfig,
+    w: &GlobalWeights,
+    tokens: &[f32],
+    n: usize,
+    cap: usize,
+    backend: &mut dyn ExpertBackend,
+) -> Result<Vec<f32>> {
+    let info = gating::gate(tokens, &w.wg, n, c.m, c.e, c.k, cap);
+    let dispatch = gating::build_dispatch(&info, tokens, c.m);
+    let mut expert_out = vec![0.0f32; c.e * cap * c.m];
+    for e in 0..c.e {
+        let x = &dispatch[e * cap * c.m..(e + 1) * cap * c.m];
+        let y = backend.expert_ffn(x, &w.w1[e], &w.w2[e], cap, c.m, c.h)?;
+        expert_out[e * cap * c.m..(e + 1) * cap * c.m].copy_from_slice(&y);
+    }
+    Ok(gating::combine(&info, &expert_out, c.m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::moe::ParallelDegrees;
+    use crate::moe::backend::NativeBackend;
+    use crate::util::prng::Rng;
+
+    fn cfg() -> MoeLayerConfig {
+        MoeLayerConfig {
+            par: ParallelDegrees { p: 1, n_mp: 1, n_esp: 1 },
+            b: 1,
+            l: 8,
+            e: 4,
+            m: 6,
+            h: 8,
+            k: 2,
+            f: 4.0,
+            dtype_bytes: 4,
+        }
+    }
+
+    #[test]
+    fn output_shape_and_finiteness() {
+        let c = cfg();
+        let w = GlobalWeights::random(&c, 1);
+        let mut rng = Rng::new(2);
+        let tokens = rng.f32_vec(8 * c.m);
+        let y =
+            reference_forward(&c, &w, &tokens, 8, 16, &mut NativeBackend).unwrap();
+        assert_eq!(y.len(), 8 * c.m);
+        assert!(y.iter().all(|v| v.is_finite()));
+        assert!(y.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn capacity_one_drops_most_tokens() {
+        let c = cfg();
+        let w = GlobalWeights::random(&c, 1);
+        let mut rng = Rng::new(2);
+        let tokens = rng.f32_vec(8 * c.m);
+        let generous =
+            reference_forward(&c, &w, &tokens, 8, 16, &mut NativeBackend).unwrap();
+        let starved =
+            reference_forward(&c, &w, &tokens, 8, 1, &mut NativeBackend).unwrap();
+        assert_ne!(generous, starved);
+    }
+}

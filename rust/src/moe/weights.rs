@@ -1,0 +1,145 @@
+//! Expert/gate weights: a single global parameter set, plus the per-rank
+//! shard views the parallel layout induces (EP distributes experts over
+//! ESP blocks; ESP splits each expert's hidden dimension).
+
+use crate::cluster::ProcessGroups;
+use crate::config::MoeLayerConfig;
+use crate::util::prng::Rng;
+
+/// The full (unsharded) MoE layer parameters.
+#[derive(Debug, Clone)]
+pub struct GlobalWeights {
+    /// Gate: (M, E), row-major.
+    pub wg: Vec<f32>,
+    /// Per expert: W1 (M, H).
+    pub w1: Vec<Vec<f32>>,
+    /// Per expert: W2 (H, M).
+    pub w2: Vec<Vec<f32>>,
+}
+
+impl GlobalWeights {
+    /// Random init, scaled ~1/sqrt(fan-in) so activations stay O(1).
+    pub fn random(c: &MoeLayerConfig, seed: u64) -> GlobalWeights {
+        let mut rng = Rng::new(seed);
+        let scale_g = 1.0 / (c.m as f32).sqrt();
+        let scale1 = 1.0 / (c.m as f32).sqrt();
+        let scale2 = 1.0 / (c.h as f32).sqrt();
+        let randn = |rng: &mut Rng, n: usize, s: f32| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() as f32 * s).collect()
+        };
+        GlobalWeights {
+            wg: randn(&mut rng, c.m * c.e, scale_g),
+            w1: (0..c.e).map(|_| randn(&mut rng, c.m * c.h, scale1)).collect(),
+            w2: (0..c.e).map(|_| randn(&mut rng, c.h * c.m, scale2)).collect(),
+        }
+    }
+
+    /// Rank `r`'s expert shard: for each local expert of its EP slot, the
+    /// H-columns `[s·Hs, (s+1)·Hs)` of W1 and matching rows of W2, where
+    /// `s` is the rank's ESP shard index. Returns (w1_shards, w2_shards)
+    /// each `experts_per_rank` long; w1 shard is (M, Hs), w2 shard (Hs, M).
+    pub fn shard_for_rank(
+        &self,
+        c: &MoeLayerConfig,
+        groups: &ProcessGroups,
+        rank: usize,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let hs = c.h / c.par.n_esp;
+        let s = groups.esp_shard(rank);
+        let slot = groups.ep_slot(rank);
+        let mut w1s = Vec::new();
+        let mut w2s = Vec::new();
+        for e in groups.experts_of_slot(slot, c.e) {
+            // W1 (M, H): take columns [s·hs, (s+1)·hs).
+            let mut w1 = Vec::with_capacity(c.m * hs);
+            for row in 0..c.m {
+                let base = row * c.h + s * hs;
+                w1.extend_from_slice(&self.w1[e][base..base + hs]);
+            }
+            // W2 (H, M): take rows [s·hs, (s+1)·hs).
+            let w2 = self.w2[e][s * hs * c.m..(s + 1) * hs * c.m].to_vec();
+            w1s.push(w1);
+            w2s.push(w2);
+        }
+        (w1s, w2s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::moe::ParallelDegrees;
+    use crate::moe::linalg;
+
+    fn cfg() -> MoeLayerConfig {
+        MoeLayerConfig {
+            par: ParallelDegrees { p: 4, n_mp: 2, n_esp: 2 },
+            b: 1,
+            l: 8,
+            e: 2,
+            m: 6,
+            h: 8,
+            k: 1,
+            f: 2.0,
+            dtype_bytes: 4,
+        }
+    }
+
+    #[test]
+    fn shard_shapes() {
+        let c = cfg();
+        let g = ProcessGroups::new(c.par).unwrap();
+        let w = GlobalWeights::random(&c, 1);
+        for r in 0..4 {
+            let (w1s, w2s) = w.shard_for_rank(&c, &g, r);
+            assert_eq!(w1s.len(), c.experts_per_rank());
+            assert_eq!(w1s[0].len(), c.m * c.h / c.par.n_esp);
+            assert_eq!(w2s[0].len(), c.h / c.par.n_esp * c.m);
+        }
+    }
+
+    #[test]
+    fn shards_reassemble_full_expert() {
+        // Summing the shard partials reproduces the full FFN: for input x,
+        // Σ_s relu(x @ W1_s) @ W2_s == relu(x @ W1) @ W2.
+        let c = cfg();
+        let g = ProcessGroups::new(c.par).unwrap();
+        let w = GlobalWeights::random(&c, 7);
+        let hs = c.h / c.par.n_esp;
+        let x: Vec<f32> = (0..c.m).map(|i| (i as f32 - 2.0) * 0.3).collect();
+
+        // Full expert 0.
+        let mut h_full = linalg::matmul(&x, &w.w1[0], 1, c.m, c.h);
+        linalg::relu(&mut h_full);
+        let y_full = linalg::matmul(&h_full, &w.w2[0], 1, c.h, c.m);
+
+        // Expert 0 lives in EP slot 0 = ranks {0, 1} (shards 0, 1).
+        let mut y_sum = vec![0.0f32; c.m];
+        for r in [0usize, 1] {
+            let (w1s, w2s) = w.shard_for_rank(&c, &g, r);
+            let mut h = linalg::matmul(&x, &w1s[0], 1, c.m, hs);
+            linalg::relu(&mut h);
+            let y = linalg::matmul(&h, &w2s[0], 1, hs, c.m);
+            for (a, b) in y_sum.iter_mut().zip(y.iter()) {
+                *a += b;
+            }
+        }
+        for (a, b) in y_sum.iter().zip(y_full.iter()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn different_shards_differ() {
+        let c = cfg();
+        let g = ProcessGroups::new(c.par).unwrap();
+        let w = GlobalWeights::random(&c, 3);
+        let (a, _) = w.shard_for_rank(&c, &g, 0);
+        let (b, _) = w.shard_for_rank(&c, &g, 1);
+        assert_ne!(a, b);
+        // Ranks 0 and 2 host different experts.
+        let (c0, _) = w.shard_for_rank(&c, &g, 0);
+        let (c2, _) = w.shard_for_rank(&c, &g, 2);
+        assert_ne!(c0, c2);
+    }
+}

@@ -1,0 +1,144 @@
+//! Algorithm 1: find the better schedule from S1 and S2 (paper §V-B).
+//!
+//! With the fitted α-β models, the closed forms are
+//!
+//! ```text
+//! t_B  = AG_ESP(BLM·N_ESP·d) + AR_ESP(ar_total) + 2·A2A_EP(ETM·N_ESP·d)      (Eq. 1)
+//! t_D1 = 2·A2A_fused(ETM·N_ESP/N_MP·d) + AG_MP(BLM·d)                        (Eq. 13)
+//! t_D2 =   A2A_fused(ETM·N_ESP/N_MP·d) + SAA(ETM·N_ESP/N_MP·d)               (Eq. 14)
+//! ```
+//!
+//! where SAA(x) is the fitted model of the *overlapped* combine (the
+//! paper's `Overlap(x) + AG_MP(ETM)` pair, measured as one collective so
+//! its α_o/β_o are grounded in the same engine the schedules run on).
+//! Volumes come from [`crate::schedule::ops`], so predictions and the
+//! simulated/executed schedules always agree on sizes.
+
+use crate::config::MoeLayerConfig;
+use crate::schedule::ops::{self, ScheduleKind};
+
+use super::fit::{CollKind, PerfModel};
+
+/// Predicted per-layer forward communication times for each schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct Prediction {
+    pub t_baseline: f64,
+    pub t_d1: f64,
+    pub t_d2: f64,
+}
+
+impl Prediction {
+    /// Algorithm 1 lines 6-9: the smaller of t_D1/t_D2.
+    pub fn better(&self) -> ScheduleKind {
+        if self.t_d1 <= self.t_d2 {
+            ScheduleKind::S1
+        } else {
+            ScheduleKind::S2
+        }
+    }
+}
+
+/// Evaluate the closed forms for one configuration.
+pub fn predict(model: &PerfModel, c: &MoeLayerConfig) -> Prediction {
+    debug_assert_eq!(model.par, c.par, "model fitted for different degrees");
+    // Per-member volumes (bytes), shared with the schedule builders.
+    let x_ag_esp = ops::bytes_esp_ag_per_rank(c) * c.par.n_esp as f64; // gathered output
+    let x_ar_esp = ops::bytes_esp_ar_total(c);
+    let x_a2a_ep = ops::bytes_ep_a2a_per_pair(c) * c.par.n_ep() as f64; // per-member send
+    let x_fused = ops::bytes_fused_a2a_per_pair(c) * c.par.p as f64;
+    let x_ag_mp_s1 = ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64; // gathered = BLM·d
+
+    let t_baseline = model.predict(CollKind::AgEsp, x_ag_esp)
+        + model.predict(CollKind::ArEsp, x_ar_esp)
+        + 2.0 * model.predict(CollKind::A2aEp, x_a2a_ep);
+    let t_d1 = 2.0 * model.predict(CollKind::A2aFused, x_fused)
+        + model.predict(CollKind::AgMp, x_ag_mp_s1);
+    let t_d2 =
+        model.predict(CollKind::A2aFused, x_fused) + model.predict(CollKind::SaaS2, x_fused);
+    Prediction { t_baseline, t_d1, t_d2 }
+}
+
+/// Algorithm 1 entry point: choose S1 or S2 for `c`.
+pub fn choose_schedule(model: &PerfModel, c: &MoeLayerConfig) -> ScheduleKind {
+    predict(model, c).better()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::moe::ParallelDegrees;
+    use crate::config::ClusterProfile;
+
+    fn cfg(p: usize, n_mp: usize, n_esp: usize, l: usize, f: f64) -> MoeLayerConfig {
+        MoeLayerConfig {
+            par: ParallelDegrees { p, n_mp, n_esp },
+            b: 4,
+            l,
+            e: p / n_esp,
+            m: 1024,
+            h: 2048,
+            k: 2,
+            f,
+            dtype_bytes: 4,
+        }
+    }
+
+    #[test]
+    fn dedicated_schedules_predicted_faster_than_baseline() {
+        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let par = ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 };
+        let model = PerfModel::fit(&cluster, par).unwrap();
+        let c = cfg(8, 2, 2, 1024, 1.2);
+        let pred = predict(&model, &c);
+        assert!(pred.t_d1 < pred.t_baseline, "{pred:?}");
+        assert!(pred.t_d2 < pred.t_baseline, "{pred:?}");
+    }
+
+    #[test]
+    fn capacity_extremes_flip_the_choice() {
+        // §IV-B: T → 0 favors S2 (t_D2 → 0 while t_D1 keeps AG_MP(BLM));
+        // T → ∞ favors S1 (AG_MP(BLM) is constant in T).
+        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let par = ParallelDegrees { p: 8, n_mp: 4, n_esp: 2 };
+        let model = PerfModel::fit(&cluster, par).unwrap();
+
+        // Tiny capacity: f small ⇒ T ≈ 0.
+        let tiny = cfg(8, 4, 2, 2048, 0.01);
+        let p_tiny = predict(&model, &tiny);
+        // Huge capacity: f large ⇒ T ≫ BL.
+        let huge = cfg(8, 4, 2, 2048, 64.0);
+        let p_huge = predict(&model, &huge);
+
+        assert_eq!(p_tiny.better(), ScheduleKind::S2, "{p_tiny:?}");
+        assert_eq!(p_huge.better(), ScheduleKind::S1, "{p_huge:?}");
+    }
+
+    #[test]
+    fn choice_agrees_with_simulation_on_forward_comm() {
+        // The selector should usually pick the schedule the simulator also
+        // finds faster (selection accuracy; the bench quantifies this over
+        // the whole grid).
+        use crate::schedule::lowering::simulate_iteration;
+        let cluster = ClusterProfile::testbed_b_subset(16).unwrap();
+        let par = ParallelDegrees { p: 16, n_mp: 2, n_esp: 4 };
+        let model = PerfModel::fit(&cluster, par).unwrap();
+        let mut agree = 0;
+        let mut total = 0;
+        for l in [512usize, 2048] {
+            for f in [1.2, 2.4] {
+                let c = cfg(16, 2, 4, l, f);
+                let choice = choose_schedule(&model, &c);
+                let t1 = simulate_iteration(ScheduleKind::S1, &c, &cluster).unwrap().makespan;
+                let t2 = simulate_iteration(ScheduleKind::S2, &c, &cluster).unwrap().makespan;
+                let sim_best = if t1 <= t2 { ScheduleKind::S1 } else { ScheduleKind::S2 };
+                total += 1;
+                if choice == sim_best
+                    || (t1 - t2).abs() / t1.max(t2) < 0.03
+                {
+                    agree += 1;
+                }
+            }
+        }
+        assert!(agree >= total - 1, "selector agreed on {agree}/{total}");
+    }
+}

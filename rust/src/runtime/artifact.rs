@@ -1,0 +1,127 @@
+//! The artifact manifest: what `python/compile/aot.py` built.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One AOT artifact (an HLO-text file plus its signature).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// File name relative to the artifacts directory.
+    pub file: String,
+    /// Input shapes, row-major dims per argument (f32 unless noted).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes (the computation returns a tuple of these).
+    pub outputs: Vec<Vec<usize>>,
+    /// Free-form metadata (config echo from the Python side).
+    pub meta: Json,
+}
+
+impl ArtifactSpec {
+    fn from_json(j: &Json) -> Result<ArtifactSpec> {
+        let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+            j.req_arr(key)
+                .map_err(|e| anyhow!("{e}"))?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .ok_or_else(|| anyhow!("{key}: expected array of dims"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("{key}: bad dim")))
+                        .collect()
+                })
+                .collect()
+        };
+        Ok(ArtifactSpec {
+            name: j.req_str("name").map_err(|e| anyhow!("{e}"))?.to_string(),
+            file: j.req_str("file").map_err(|e| anyhow!("{e}"))?.to_string(),
+            inputs: shapes("inputs")?,
+            outputs: shapes("outputs")?,
+            meta: j.get("meta").clone(),
+        })
+    }
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let artifacts = j
+            .req_arr("artifacts")
+            .map_err(|e| anyhow!("{e}"))?
+            .iter()
+            .map(ArtifactSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name).ok_or_else(|| {
+            anyhow!(
+                "artifact `{name}` not in manifest (have: {})",
+                self.artifacts
+                    .iter()
+                    .map(|a| a.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        let spec = self.get(name)?;
+        let p = self.dir.join(&spec.file);
+        if !p.exists() {
+            bail!("artifact file {p:?} missing — re-run `make artifacts`");
+        }
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join(format!("parm_manifest_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_manifest(
+            &dir,
+            r#"{"artifacts":[{"name":"f","file":"f.hlo.txt",
+                "inputs":[[2,3]],"outputs":[[2,3]],"meta":{"k":1}}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("f").unwrap();
+        assert_eq!(a.inputs, vec![vec![2, 3]]);
+        assert_eq!(a.meta.get("k").as_usize(), Some(1));
+        assert!(m.get("nope").is_err());
+        // hlo_path errors until the file exists.
+        assert!(m.hlo_path("f").is_err());
+        std::fs::write(dir.join("f.hlo.txt"), "x").unwrap();
+        assert!(m.hlo_path("f").is_ok());
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,145 @@
+//! PJRT client wrapper: HLO-text → compiled executable (cached) → execute.
+//!
+//! Follows the /opt/xla-example `load_hlo` recipe: HLO **text** is the
+//! interchange format (jax ≥ 0.5 emits 64-bit-id protos this XLA build
+//! rejects; the text parser reassigns ids). Computations are lowered with
+//! `return_tuple=True`, so every execution returns a tuple literal.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::Manifest;
+
+/// A host-side tensor: f32 data plus dims, the only dtype crossing the
+/// runtime boundary (artifacts compute in f32; bf16 is an L1 concern).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<HostTensor> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("shape {dims:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(HostTensor { dims, data })
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> HostTensor {
+        let n = dims.iter().product();
+        HostTensor { dims, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> HostTensor {
+        HostTensor { dims: vec![], data: vec![v] }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(HostTensor { dims, data })
+    }
+}
+
+/// The runtime: one PJRT CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load the manifest under `artifacts_dir` and create the PJRT client.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.manifest.hlo_path(name)?;
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact `{name}`"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute artifact `name` on `inputs`; returns the tuple elements.
+    /// Input shapes are validated against the manifest before dispatch.
+    pub fn exec(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.get(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact `{name}` takes {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, want)) in inputs.iter().zip(spec.inputs.iter()).enumerate() {
+            if &t.dims != want {
+                bail!(
+                    "artifact `{name}` input {i}: expected shape {want:?}, got {:?}",
+                    t.dims
+                );
+            }
+        }
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let out: Vec<HostTensor> =
+            parts.iter().map(HostTensor::from_literal).collect::<Result<_>>()?;
+        if out.len() != spec.outputs.len() {
+            bail!(
+                "artifact `{name}` declared {} outputs, produced {}",
+                spec.outputs.len(),
+                out.len()
+            );
+        }
+        Ok(out)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checked() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert_eq!(HostTensor::zeros(vec![2, 2]).data.len(), 4);
+        assert_eq!(HostTensor::scalar(3.0).dims.len(), 0);
+    }
+
+    // Round-trip execution tests live in rust/tests/runtime_pjrt.rs (they
+    // need `make artifacts` to have run).
+}

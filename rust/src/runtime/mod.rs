@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the hot path.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only place the compiled graphs are touched at run time. Artifacts are
+//! described by `artifacts/manifest.json` (name, file, input/output
+//! shapes) and compiled lazily, cached per name.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactSpec, Manifest};
+pub use client::{HostTensor, Runtime};
+
+use anyhow::Result;
+
+/// Smoke helper used by `parm doctor`: bring up the PJRT CPU client.
+pub fn smoke() -> Result<String> {
+    let client = xla::PjRtClient::cpu()?;
+    Ok(format!("{} x{}", client.platform_name(), client.device_count()))
+}

@@ -1,0 +1,248 @@
+//! Schedule builders: the forward (and mirrored backward) op programs for
+//! the Baseline (Fig 3a), S1 (Fig 3b) and S2 (Fig 3c) schedules.
+
+use crate::config::MoeLayerConfig;
+
+use super::ops::{self, Op, ScheduleKind};
+
+/// Forward op program for one MoE layer under `kind`.
+///
+/// `kind` must be concrete (not [`ScheduleKind::Parm`]) — resolve Parm via
+/// [`crate::perfmodel::PerfModel::choose`] first.
+pub fn forward_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
+    let d = c.dtype_bytes as f64;
+    match kind {
+        ScheduleKind::Parm => panic!("resolve Parm to S1/S2 via the perf model first"),
+        ScheduleKind::Baseline => {
+            let gathered_tokens = c.tokens() * c.par.n_esp;
+            // Expert outputs returned to this rank before the split:
+            // gathered tokens' combined outputs (the A2A-combine result).
+            let split_bytes = (gathered_tokens * c.m) as f64 * d / c.par.n_esp as f64;
+            vec![
+                Op::EspAllGather { bytes_per_rank: ops::bytes_esp_ag_per_rank(c) },
+                Op::Gate { flops_per_rank: ops::gate_flops(c, gathered_tokens) },
+                Op::EpAlltoAll { bytes_per_pair: ops::bytes_ep_a2a_per_pair(c) },
+                Op::ExpertFfn {
+                    flops_per_rank: ops::expert_flops(c, ops::expert_tokens_per_rank(c, false)),
+                },
+                Op::EspAllReduce { total_bytes: ops::bytes_esp_ar_total(c) },
+                Op::EpAlltoAll { bytes_per_pair: ops::bytes_ep_a2a_per_pair(c) },
+                Op::EspSplit { bytes_per_rank: split_bytes },
+                Op::Ungate {
+                    flops_per_rank: (c.tokens() * c.k * c.m) as f64,
+                },
+            ]
+        }
+        ScheduleKind::S1 => {
+            let local_tokens = c.tokens() / c.par.n_mp;
+            // Returned partial copies to combine: (E, T/N_MP, M) × N_ESP.
+            let combine_elems =
+                (c.e * c.t_pausemp() * c.m) as f64 * (c.par.n_esp.saturating_sub(1)) as f64;
+            vec![
+                Op::MpSplit {
+                    bytes_per_rank: (c.input_elems() / c.par.n_mp) as f64 * d,
+                },
+                Op::Gate { flops_per_rank: ops::gate_flops(c, local_tokens) },
+                Op::FusedAlltoAll { bytes_per_pair: ops::bytes_fused_a2a_per_pair(c) },
+                Op::ExpertFfn {
+                    flops_per_rank: ops::expert_flops(c, ops::expert_tokens_per_rank(c, true)),
+                },
+                Op::FusedAlltoAll { bytes_per_pair: ops::bytes_fused_a2a_per_pair(c) },
+                Op::LocalCombine { flops_per_rank: combine_elems },
+                Op::Ungate { flops_per_rank: (local_tokens * c.k * c.m) as f64 },
+                Op::MpAllGather { bytes_per_rank: ops::bytes_mp_ag_s1_per_rank(c) },
+            ]
+        }
+        ScheduleKind::S2 | ScheduleKind::S2Aas => {
+            let combine_elems =
+                (c.e * c.t_pausemp() * c.m) as f64 * (c.par.n_esp.saturating_sub(1)) as f64;
+            let combine = if kind == ScheduleKind::S2 {
+                Op::SaaCombine { bytes_per_pair: ops::bytes_fused_a2a_per_pair(c) }
+            } else {
+                Op::AasCombine { bytes_per_pair: ops::bytes_fused_a2a_per_pair(c) }
+            };
+            vec![
+                // Gate runs on the full (MP-duplicated) token set.
+                Op::Gate { flops_per_rank: ops::gate_flops(c, c.tokens()) },
+                Op::MpSplit {
+                    bytes_per_rank: ops::bytes_mp_ag_s2_per_rank(c),
+                },
+                Op::FusedAlltoAll { bytes_per_pair: ops::bytes_fused_a2a_per_pair(c) },
+                Op::ExpertFfn {
+                    flops_per_rank: ops::expert_flops(c, ops::expert_tokens_per_rank(c, true)),
+                },
+                // Second fused AlltoAll overlapped with the MP-AllGather of
+                // the (E, T/N_MP, M) combine output — AG_MP(ETM) in Eq. 14.
+                combine,
+                Op::LocalCombine { flops_per_rank: combine_elems },
+                Op::Ungate { flops_per_rank: (c.tokens() * c.k * c.m) as f64 },
+            ]
+        }
+    }
+}
+
+/// Backward op program: the forward reversed, with each collective
+/// replaced by its adjoint and compute doubled (dgrad + wgrad):
+///
+/// | forward            | backward                  |
+/// |--------------------|---------------------------|
+/// | AllGather(x)       | ReduceScatter(x)          |
+/// | ReduceScatter(x)   | AllGather(x)              |
+/// | AlltoAll           | AlltoAll (same volume)    |
+/// | AllReduce          | AllReduce (same volume)   |
+/// | Split              | AllGather (Fig 3 note)    |
+/// | SAA/AAS combine    | same, reversed direction  |
+/// | compute f          | 2·f                       |
+pub fn backward_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
+    forward_ops(kind, c)
+        .into_iter()
+        .rev()
+        .map(|op| match op {
+            Op::EspAllGather { bytes_per_rank } => Op::EspReduceScatter {
+                total_bytes: bytes_per_rank * c.par.n_esp as f64,
+            },
+            Op::MpAllGather { bytes_per_rank } => Op::MpReduceScatter {
+                total_bytes: bytes_per_rank * c.par.n_mp as f64,
+            },
+            Op::EspReduceScatter { total_bytes } => Op::EspAllGather {
+                bytes_per_rank: total_bytes / c.par.n_esp as f64,
+            },
+            Op::MpReduceScatter { total_bytes } => Op::MpAllGather {
+                bytes_per_rank: total_bytes / c.par.n_mp as f64,
+            },
+            Op::EspSplit { bytes_per_rank } => Op::EspAllGather { bytes_per_rank },
+            Op::MpSplit { bytes_per_rank } => Op::MpAllGather { bytes_per_rank },
+            Op::EpAlltoAll { bytes_per_pair } => Op::EpAlltoAll { bytes_per_pair },
+            Op::FusedAlltoAll { bytes_per_pair } => Op::FusedAlltoAll { bytes_per_pair },
+            Op::SaaCombine { bytes_per_pair } => Op::SaaCombine { bytes_per_pair },
+            Op::AasCombine { bytes_per_pair } => Op::AasCombine { bytes_per_pair },
+            Op::EspAllReduce { total_bytes } => Op::EspAllReduce { total_bytes },
+            Op::Gate { flops_per_rank } => Op::Gate { flops_per_rank: 2.0 * flops_per_rank },
+            Op::ExpertFfn { flops_per_rank } => {
+                Op::ExpertFfn { flops_per_rank: 2.0 * flops_per_rank }
+            }
+            Op::LocalCombine { flops_per_rank } => {
+                Op::LocalCombine { flops_per_rank: 2.0 * flops_per_rank }
+            }
+            Op::Ungate { flops_per_rank } => Op::Ungate { flops_per_rank: 2.0 * flops_per_rank },
+        })
+        .collect()
+}
+
+/// Full training-iteration program (forward + backward). Gradient
+/// all-reduce of parameters is excluded, matching the paper's measurement
+/// protocol ("the time for the allreduce of gradients is excluded").
+pub fn iteration_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
+    let mut v = forward_ops(kind, c);
+    v.extend(backward_ops(kind, c));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> MoeLayerConfig {
+        MoeLayerConfig::test_default()
+    }
+
+    #[test]
+    fn baseline_structure() {
+        let ops = forward_ops(ScheduleKind::Baseline, &cfg());
+        let tags: Vec<&str> = ops.iter().map(|o| o.tag()).collect();
+        assert_eq!(
+            tags,
+            vec![
+                "esp.allgather",
+                "gate",
+                "ep.alltoall",
+                "expert.ffn",
+                "esp.allreduce",
+                "ep.alltoall",
+                "esp.split",
+                "ungate"
+            ]
+        );
+    }
+
+    #[test]
+    fn s1_structure() {
+        let tags: Vec<&str> = forward_ops(ScheduleKind::S1, &cfg())
+            .iter()
+            .map(|o| o.tag())
+            .collect();
+        assert_eq!(
+            tags,
+            vec![
+                "mp.split",
+                "gate",
+                "fused.alltoall",
+                "expert.ffn",
+                "fused.alltoall",
+                "local.combine",
+                "ungate",
+                "mp.allgather"
+            ]
+        );
+    }
+
+    #[test]
+    fn s2_uses_saa_and_gates_before_split() {
+        let tags: Vec<&str> = forward_ops(ScheduleKind::S2, &cfg())
+            .iter()
+            .map(|o| o.tag())
+            .collect();
+        assert_eq!(tags[0], "gate");
+        assert_eq!(tags[1], "mp.split");
+        assert!(tags.contains(&"saa.combine"));
+        let tags_aas: Vec<&str> = forward_ops(ScheduleKind::S2Aas, &cfg())
+            .iter()
+            .map(|o| o.tag())
+            .collect();
+        assert!(tags_aas.contains(&"aas.combine"));
+    }
+
+    #[test]
+    fn s1_eliminates_duplicate_compute() {
+        let base = forward_ops(ScheduleKind::Baseline, &cfg());
+        let s1 = forward_ops(ScheduleKind::S1, &cfg());
+        let flops = |ops: &[Op]| {
+            ops.iter()
+                .map(|o| match o {
+                    Op::ExpertFfn { flops_per_rank } => *flops_per_rank,
+                    _ => 0.0,
+                })
+                .sum::<f64>()
+        };
+        let ratio = flops(&base) / flops(&s1);
+        let n_mp = cfg().par.n_mp as f64;
+        assert!((ratio - n_mp).abs() / n_mp < 0.06, "ratio {ratio}");
+    }
+
+    #[test]
+    fn backward_mirrors_forward() {
+        let c = cfg();
+        let fwd = forward_ops(ScheduleKind::S1, &c);
+        let bwd = backward_ops(ScheduleKind::S1, &c);
+        assert_eq!(fwd.len(), bwd.len());
+        // First backward op is the adjoint of the last forward op.
+        assert_eq!(bwd[0].tag(), "mp.reducescatter");
+        // Splits become AllGathers (the Fig 3 note).
+        assert!(bwd.iter().any(|o| o.tag() == "mp.allgather"));
+    }
+
+    #[test]
+    fn iteration_concatenates() {
+        let c = cfg();
+        let it = iteration_ops(ScheduleKind::Baseline, &c);
+        assert_eq!(it.len(), 2 * forward_ops(ScheduleKind::Baseline, &c).len());
+        // Baseline backward contains the ESP-AllGather from the ESP-Split.
+        assert!(it[8..].iter().any(|o| o.tag() == "esp.allgather"));
+    }
+
+    #[test]
+    #[should_panic(expected = "resolve Parm")]
+    fn parm_must_be_resolved() {
+        forward_ops(ScheduleKind::Parm, &cfg());
+    }
+}

@@ -1,0 +1,297 @@
+//! Lowering of a schedule's op program to a [`SimDag`] for the
+//! discrete-event engine.
+//!
+//! Ranks `0..P` of the MoE layer map to GPUs `0..P` of the cluster
+//! (contiguous placement, as DeepSpeed-MoE). Each rank carries a frontier
+//! task; collectives join the frontiers of their group members, compute
+//! chains per rank.
+
+use anyhow::{ensure, Result};
+
+use crate::cluster::{GroupKind, ProcessGroups};
+use crate::comm::{lower, saa};
+use crate::config::{ClusterProfile, MoeLayerConfig};
+use crate::sim::dag::{SimDag, TaskId};
+use crate::sim::engine::{SimReport, Simulator};
+
+use super::builders;
+use super::ops::{Op, ScheduleKind};
+
+/// Lower `ops` for `cfg` onto `cluster`; returns the DAG (makespan = the
+/// program's iteration time once simulated).
+pub fn lower_ops(
+    ops: &[Op],
+    cfg: &MoeLayerConfig,
+    cluster: &ClusterProfile,
+) -> Result<SimDag> {
+    let p = cfg.par.p;
+    ensure!(
+        p <= cluster.total_gpus(),
+        "layer needs {} GPUs but cluster {} has {}",
+        p,
+        cluster.name,
+        cluster.total_gpus()
+    );
+    let groups = ProcessGroups::new(cfg.par)?;
+    let mut dag = SimDag::new();
+    // Current frontier (last task) per rank; None = start of program.
+    let mut frontier: Vec<Option<TaskId>> = vec![None; p];
+
+    // Join the frontiers of a set of ranks into a dep list.
+    let deps_of = |frontier: &[Option<TaskId>], ranks: &[usize]| -> Vec<TaskId> {
+        ranks.iter().filter_map(|&r| frontier[r]).collect()
+    };
+
+    for op in ops {
+        let tag = op.tag();
+        match *op {
+            Op::EspSplit { .. } | Op::MpSplit { .. } => {
+                // Free in forward (local view change).
+            }
+            Op::Gate { flops_per_rank }
+            | Op::ExpertFfn { flops_per_rank }
+            | Op::LocalCombine { flops_per_rank }
+            | Op::Ungate { flops_per_rank } => {
+                for r in 0..p {
+                    let dep: Vec<TaskId> = frontier[r].into_iter().collect();
+                    let t = dag.compute(r, flops_per_rank, &dep, tag);
+                    frontier[r] = Some(t);
+                }
+            }
+            Op::EspAllGather { bytes_per_rank } => {
+                lower_groups(&mut dag, &groups, GroupKind::Esp, &mut frontier, |dag, grp, deps| {
+                    lower::ring_allgather(dag, grp, bytes_per_rank, deps, tag)
+                });
+            }
+            Op::EspReduceScatter { total_bytes } => {
+                lower_groups(&mut dag, &groups, GroupKind::Esp, &mut frontier, |dag, grp, deps| {
+                    let chunk = total_bytes / grp.len() as f64;
+                    lower::ring_reduce_scatter(dag, grp, chunk, deps, tag)
+                });
+            }
+            Op::EspAllReduce { total_bytes } => {
+                lower_groups(&mut dag, &groups, GroupKind::Esp, &mut frontier, |dag, grp, deps| {
+                    lower::ring_allreduce(dag, grp, total_bytes, deps, tag)
+                });
+            }
+            Op::MpAllGather { bytes_per_rank } => {
+                lower_groups(&mut dag, &groups, GroupKind::Mp, &mut frontier, |dag, grp, deps| {
+                    lower::ring_allgather(dag, grp, bytes_per_rank, deps, tag)
+                });
+            }
+            Op::MpReduceScatter { total_bytes } => {
+                lower_groups(&mut dag, &groups, GroupKind::Mp, &mut frontier, |dag, grp, deps| {
+                    let chunk = total_bytes / grp.len() as f64;
+                    lower::ring_reduce_scatter(dag, grp, chunk, deps, tag)
+                });
+            }
+            Op::EpAlltoAll { bytes_per_pair } => {
+                lower_groups(&mut dag, &groups, GroupKind::Ep, &mut frontier, |dag, grp, deps| {
+                    lower::pairwise_alltoall(dag, cluster, grp, bytes_per_pair, deps, tag)
+                });
+            }
+            Op::FusedAlltoAll { bytes_per_pair } => {
+                lower_groups(
+                    &mut dag,
+                    &groups,
+                    GroupKind::EpEsp,
+                    &mut frontier,
+                    |dag, grp, deps| {
+                        lower::pairwise_alltoall(dag, cluster, grp, bytes_per_pair, deps, tag)
+                    },
+                );
+            }
+            Op::SaaCombine { bytes_per_pair } => {
+                let world: Vec<usize> = groups.world();
+                let mp_groups = groups.all_groups(GroupKind::Mp);
+                let deps = deps_of(&frontier, &world);
+                let ends = saa::saa_lower(
+                    &mut dag,
+                    cluster,
+                    &world,
+                    &mp_groups,
+                    bytes_per_pair,
+                    &deps,
+                    "saa.combine",
+                    "mp.allgather",
+                );
+                for (i, &r) in world.iter().enumerate() {
+                    frontier[r] = Some(ends[i]);
+                }
+            }
+            Op::AasCombine { bytes_per_pair } => {
+                let world: Vec<usize> = groups.world();
+                let mp_groups = groups.all_groups(GroupKind::Mp);
+                let deps = deps_of(&frontier, &world);
+                let ends = saa::aas_lower(
+                    &mut dag,
+                    cluster,
+                    &world,
+                    &mp_groups,
+                    bytes_per_pair,
+                    &deps,
+                    "aas.combine",
+                    "mp.allgather",
+                );
+                for (i, &r) in world.iter().enumerate() {
+                    frontier[r] = Some(ends[i]);
+                }
+            }
+        }
+    }
+    Ok(dag)
+}
+
+/// Lower one collective over every group of `kind`, updating frontiers.
+fn lower_groups<F>(
+    dag: &mut SimDag,
+    groups: &ProcessGroups,
+    kind: GroupKind,
+    frontier: &mut [Option<TaskId>],
+    mut f: F,
+) where
+    F: FnMut(&mut SimDag, &[usize], &[TaskId]) -> Vec<TaskId>,
+{
+    for grp in groups.all_groups(kind) {
+        let deps: Vec<TaskId> = grp.iter().filter_map(|&r| frontier[r]).collect();
+        let ends = f(dag, &grp, &deps);
+        for (i, &r) in grp.iter().enumerate() {
+            frontier[r] = Some(ends[i]);
+        }
+    }
+}
+
+/// Simulate one full training iteration (fwd+bwd) of a MoE layer under a
+/// concrete schedule; returns the engine report.
+pub fn simulate_iteration(
+    kind: ScheduleKind,
+    cfg: &MoeLayerConfig,
+    cluster: &ClusterProfile,
+) -> Result<SimReport> {
+    let ops = builders::iteration_ops(kind, cfg);
+    let dag = lower_ops(&ops, cfg, cluster)?;
+    Ok(Simulator::new(cluster).run(&dag))
+}
+
+/// Simulate the forward pass only.
+pub fn simulate_forward(
+    kind: ScheduleKind,
+    cfg: &MoeLayerConfig,
+    cluster: &ClusterProfile,
+) -> Result<SimReport> {
+    let ops = builders::forward_ops(kind, cfg);
+    let dag = lower_ops(&ops, cfg, cluster)?;
+    Ok(Simulator::new(cluster).run(&dag))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::moe::ParallelDegrees;
+
+    fn cfg(p: usize, n_mp: usize, n_esp: usize) -> MoeLayerConfig {
+        MoeLayerConfig {
+            par: ParallelDegrees { p, n_mp, n_esp },
+            b: 2,
+            l: 512,
+            e: p / n_esp,
+            m: 1024,
+            h: 1024,
+            k: 2,
+            f: 1.2,
+            dtype_bytes: 4,
+        }
+    }
+
+    fn testbed_b() -> ClusterProfile {
+        ClusterProfile::testbed_b()
+    }
+
+    #[test]
+    fn all_schedules_lower_and_run() {
+        let c = cfg(8, 2, 2);
+        let cluster = testbed_b();
+        for kind in [
+            ScheduleKind::Baseline,
+            ScheduleKind::S1,
+            ScheduleKind::S2,
+            ScheduleKind::S2Aas,
+        ] {
+            let r = simulate_iteration(kind, &c, &cluster).unwrap();
+            assert!(r.makespan > 0.0, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn s1_and_s2_beat_baseline() {
+        // The paper's §IV-B conclusion: both dedicated schedules are always
+        // faster than the baseline (here on testbed B shapes).
+        let cluster = testbed_b();
+        for (p, n_mp, n_esp) in [(8, 2, 2), (16, 2, 4), (32, 4, 4), (8, 1, 2), (16, 4, 2)] {
+            let c = cfg(p, n_mp, n_esp);
+            let tb = simulate_iteration(ScheduleKind::Baseline, &c, &cluster)
+                .unwrap()
+                .makespan;
+            let t1 = simulate_iteration(ScheduleKind::S1, &c, &cluster).unwrap().makespan;
+            let t2 = simulate_iteration(ScheduleKind::S2, &c, &cluster).unwrap().makespan;
+            assert!(t1 < tb, "S1 {t1} !< baseline {tb} at p={p} mp={n_mp} esp={n_esp}");
+            assert!(t2 < tb, "S2 {t2} !< baseline {tb} at p={p} mp={n_mp} esp={n_esp}");
+        }
+    }
+
+    #[test]
+    fn speedup_grows_with_nmp() {
+        let cluster = testbed_b();
+        let speedup = |n_mp: usize| {
+            let c = cfg(16, n_mp, 2);
+            let tb = simulate_iteration(ScheduleKind::Baseline, &c, &cluster)
+                .unwrap()
+                .makespan;
+            let t1 = simulate_iteration(ScheduleKind::S1, &c, &cluster).unwrap().makespan;
+            tb / t1
+        };
+        assert!(speedup(4) > speedup(2), "larger N_MP ⇒ larger S1 speedup");
+    }
+
+    #[test]
+    fn nmp1_still_benefits_from_fusion() {
+        // §IV-B N_MP = 1 case: PauseMP degenerates but the fused collective
+        // still beats {AllGather; AlltoAll} sequencing.
+        let cluster = testbed_b();
+        let c = cfg(8, 1, 2);
+        let tb = simulate_iteration(ScheduleKind::Baseline, &c, &cluster)
+            .unwrap()
+            .makespan;
+        let t1 = simulate_iteration(ScheduleKind::S1, &c, &cluster).unwrap().makespan;
+        assert!(t1 < tb);
+    }
+
+    #[test]
+    fn forward_cheaper_than_iteration() {
+        let cluster = testbed_b();
+        let c = cfg(8, 2, 2);
+        let f = simulate_forward(ScheduleKind::S2, &c, &cluster).unwrap().makespan;
+        let it = simulate_iteration(ScheduleKind::S2, &c, &cluster).unwrap().makespan;
+        assert!(f < it);
+    }
+
+    #[test]
+    fn rejects_oversized_layer() {
+        let cluster = ClusterProfile::testbed_a(); // 8 GPUs
+        let c = cfg(16, 2, 2);
+        assert!(simulate_iteration(ScheduleKind::Baseline, &c, &cluster).is_err());
+    }
+
+    #[test]
+    fn comm_dominates_on_testbed_b() {
+        // Fig 1's observation: communication dominates MoE layer time.
+        let cluster = testbed_b();
+        let c = cfg(32, 2, 2);
+        let r = simulate_iteration(ScheduleKind::Baseline, &c, &cluster).unwrap();
+        assert!(
+            r.comm_ratio() > 0.5,
+            "comm ratio {} should dominate",
+            r.comm_ratio()
+        );
+    }
+}

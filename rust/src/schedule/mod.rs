@@ -1,0 +1,14 @@
+//! The paper's contribution: dedicated MoE-layer schedules.
+//!
+//! * [`ops`] — the schedule IR shared by timing and numerics.
+//! * [`builders`] — Baseline (Fig 3a), S1 (Fig 3b), S2 (Fig 3c, with SAA
+//!   or AAS combine) forward/backward programs.
+//! * [`lowering`] — programs → transfer/compute DAGs → simulated time.
+
+pub mod builders;
+pub mod lowering;
+pub mod ops;
+
+pub use builders::{backward_ops, forward_ops, iteration_ops};
+pub use lowering::{lower_ops, simulate_forward, simulate_iteration};
+pub use ops::{Op, ScheduleKind};

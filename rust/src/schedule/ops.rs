@@ -1,0 +1,252 @@
+//! The schedule IR: a MoE layer's execution under one schedule is a short
+//! program of [`Op`]s. The same program drives BOTH the discrete-event
+//! lowering (timing, [`crate::schedule::lowering`]) and the data-plane
+//! executor (numerics, [`crate::moe::exec`]) — so the schedule we time is
+//! exactly the schedule whose correctness the tests establish.
+
+use crate::config::MoeLayerConfig;
+
+/// One step of a schedule. Communication sizes are in **bytes** and are
+/// per the unit noted on each variant; compute is in FLOPs per rank.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// AllGather within each ESP group; `bytes_per_rank` = each member's
+    /// contribution (ring AG).
+    EspAllGather { bytes_per_rank: f64 },
+    /// AlltoAll within each EP group; `bytes_per_pair` = one (src,dst)
+    /// chunk.
+    EpAlltoAll { bytes_per_pair: f64 },
+    /// AllReduce within each ESP group over `total_bytes` per member.
+    EspAllReduce { total_bytes: f64 },
+    /// ReduceScatter within each ESP group (backward of ESP-AllGather).
+    EspReduceScatter { total_bytes: f64 },
+    /// ReduceScatter within each MP group (backward of MP-AllGather).
+    MpReduceScatter { total_bytes: f64 },
+    /// Local ESP split (free forward; AllGather of `bytes_per_rank` per
+    /// member in backward — paper Fig 3 note).
+    EspSplit { bytes_per_rank: f64 },
+    /// Local MP split (free forward; AllGather in backward).
+    MpSplit { bytes_per_rank: f64 },
+    /// AllGather within each MP group; `bytes_per_rank` = contribution.
+    MpAllGather { bytes_per_rank: f64 },
+    /// Parm's fused EP&ESP-AlltoAll over the whole layer (product group);
+    /// includes the local Dump (free) before / local Combine cost after is
+    /// a separate op.
+    FusedAlltoAll { bytes_per_pair: f64 },
+    /// S2's overlapped combine: fused AlltoAll + MP-AllGather via SAA.
+    SaaCombine { bytes_per_pair: f64 },
+    /// Non-overlapped variant of [`Op::SaaCombine`] (AAS ablation).
+    AasCombine { bytes_per_pair: f64 },
+    /// Gating network + top-k routing.
+    Gate { flops_per_rank: f64 },
+    /// Expert FFN shards.
+    ExpertFfn { flops_per_rank: f64 },
+    /// Local partial-sum combine of N_ESP returned copies (PauseMP path).
+    LocalCombine { flops_per_rank: f64 },
+    /// Scatter combined outputs back into token order (un-gate).
+    Ungate { flops_per_rank: f64 },
+}
+
+impl Op {
+    /// Short tag for trace/report accounting.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Op::EspAllGather { .. } => "esp.allgather",
+            Op::EpAlltoAll { .. } => "ep.alltoall",
+            Op::EspAllReduce { .. } => "esp.allreduce",
+            Op::EspReduceScatter { .. } => "esp.reducescatter",
+            Op::MpReduceScatter { .. } => "mp.reducescatter",
+            Op::EspSplit { .. } => "esp.split",
+            Op::MpSplit { .. } => "mp.split",
+            Op::MpAllGather { .. } => "mp.allgather",
+            Op::FusedAlltoAll { .. } => "fused.alltoall",
+            Op::SaaCombine { .. } => "saa.combine",
+            Op::AasCombine { .. } => "aas.combine",
+            Op::Gate { .. } => "gate",
+            Op::ExpertFfn { .. } => "expert.ffn",
+            Op::LocalCombine { .. } => "local.combine",
+            Op::Ungate { .. } => "ungate",
+        }
+    }
+
+    pub fn is_communication(&self) -> bool {
+        matches!(
+            self,
+            Op::EspAllGather { .. }
+                | Op::EpAlltoAll { .. }
+                | Op::EspAllReduce { .. }
+                | Op::EspReduceScatter { .. }
+                | Op::MpReduceScatter { .. }
+                | Op::MpAllGather { .. }
+                | Op::FusedAlltoAll { .. }
+                | Op::SaaCombine { .. }
+                | Op::AasCombine { .. }
+        )
+    }
+}
+
+/// Which schedule to run (paper Fig 3 + §V).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScheduleKind {
+    /// DeepSpeed-MoE's default schedule (Fig 3a).
+    Baseline,
+    /// PauseMP before the gate (Fig 3b).
+    S1,
+    /// PauseMP after the gate, SAA-overlapped combine (Fig 3c).
+    S2,
+    /// S2 without SAA (sequential AlltoAll + AllGather) — §VI-C ablation.
+    S2Aas,
+    /// Automatic selection between S1 and S2 (Algorithm 1).
+    Parm,
+}
+
+impl ScheduleKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleKind::Baseline => "baseline",
+            ScheduleKind::S1 => "s1",
+            ScheduleKind::S2 => "s2",
+            ScheduleKind::S2Aas => "s2-aas",
+            ScheduleKind::Parm => "parm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ScheduleKind> {
+        match s {
+            "baseline" | "deepspeed" => Some(ScheduleKind::Baseline),
+            "s1" => Some(ScheduleKind::S1),
+            "s2" => Some(ScheduleKind::S2),
+            "s2-aas" | "aas" => Some(ScheduleKind::S2Aas),
+            "parm" | "auto" => Some(ScheduleKind::Parm),
+            _ => None,
+        }
+    }
+}
+
+// ---- communication volumes (bytes), shared by schedule builders and the
+// ---- α-β predictions so both sides use identical sizes -----------------
+
+/// Baseline ESP-AllGather: each rank contributes its (B,L,M) input.
+pub fn bytes_esp_ag_per_rank(c: &MoeLayerConfig) -> f64 {
+    (c.input_elems() * c.dtype_bytes) as f64
+}
+
+/// Baseline EP-AlltoAll per-pair chunk: experts-per-slot × gathered
+/// capacity (T·N_ESP) × M.
+pub fn bytes_ep_a2a_per_pair(c: &MoeLayerConfig) -> f64 {
+    (c.experts_per_rank() * c.t() * c.par.n_esp * c.m * c.dtype_bytes) as f64
+}
+
+/// Baseline ESP-AllReduce total per member: local experts × tokens-per-
+/// expert (T·P, one T per source rank in the EP group ⇒ T·N_ESP·N_EP) × M.
+pub fn bytes_esp_ar_total(c: &MoeLayerConfig) -> f64 {
+    (c.experts_per_rank() * c.t() * c.par.p * c.m * c.dtype_bytes) as f64
+}
+
+/// PauseMP fused EP&ESP-AlltoAll per-pair chunk (S1/S2): experts-per-slot ×
+/// split capacity (T/N_MP) × M. Per-rank total = ETM·N_ESP/N_MP — the
+/// paper's Eq. (13)/(14) argument.
+pub fn bytes_fused_a2a_per_pair(c: &MoeLayerConfig) -> f64 {
+    (c.experts_per_rank() * c.t_pausemp() * c.m * c.dtype_bytes) as f64
+}
+
+/// S1's final MP-AllGather contribution per rank: the 1/N_MP token slice.
+pub fn bytes_mp_ag_s1_per_rank(c: &MoeLayerConfig) -> f64 {
+    (c.input_elems() / c.par.n_mp * c.dtype_bytes) as f64
+}
+
+/// S2's final MP-AllGather contribution per rank: the 1/N_MP capacity
+/// slice (E, T/N_MP, M) — the AG_MP(ETM) of Eq. (14).
+pub fn bytes_mp_ag_s2_per_rank(c: &MoeLayerConfig) -> f64 {
+    (c.e * c.t_pausemp() * c.m * c.dtype_bytes) as f64
+}
+
+// ---- compute volumes (FLOPs per rank) ----------------------------------
+
+/// Gate FLOPs: tokens × M × E MACs (×2), on however many tokens this
+/// schedule gates per rank.
+pub fn gate_flops(c: &MoeLayerConfig, tokens: usize) -> f64 {
+    2.0 * tokens as f64 * (c.m * c.e) as f64
+}
+
+/// Expert FLOPs per rank: two matmuls over the local H-shard, for
+/// `tokens_per_rank` tokens routed to this rank.
+pub fn expert_flops(c: &MoeLayerConfig, tokens_per_rank: f64) -> f64 {
+    tokens_per_rank * 2.0 * 2.0 * (c.m * (c.h / c.par.n_esp)) as f64
+}
+
+/// Tokens each rank's expert shards process per step. Baseline duplicates
+/// the work N_MP times (`pause_mp = false`).
+pub fn expert_tokens_per_rank(c: &MoeLayerConfig, pause_mp: bool) -> f64 {
+    let t = if pause_mp { c.t_pausemp() } else { c.t() * c.par.n_esp } as f64;
+    // Each rank hosts E/N_EP expert slots and receives `t` tokens per
+    // expert from each source in its dispatch group (EP group for the
+    // baseline, the whole world for PauseMP).
+    let sources = if pause_mp { c.par.p } else { c.par.n_ep() } as f64;
+    c.experts_per_rank() as f64 * t * sources
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> MoeLayerConfig {
+        MoeLayerConfig::test_default()
+    }
+
+    #[test]
+    fn pausemp_reduces_a2a_volume_by_nmp() {
+        let c = cfg();
+        let baseline_total = bytes_ep_a2a_per_pair(&c) * c.par.n_ep() as f64;
+        let fused_total = bytes_fused_a2a_per_pair(&c) * c.par.p as f64;
+        // ETM·N_ESP vs ETM·N_ESP/N_MP (up to capacity rounding).
+        let ratio = baseline_total / fused_total;
+        assert!(
+            (ratio - c.par.n_mp as f64).abs() / (c.par.n_mp as f64) < 0.05,
+            "ratio {ratio} ≈ n_mp {}",
+            c.par.n_mp
+        );
+    }
+
+    #[test]
+    fn pausemp_reduces_expert_tokens_by_nmp() {
+        let c = cfg();
+        let dup = expert_tokens_per_rank(&c, false);
+        let dedup = expert_tokens_per_rank(&c, true);
+        let ratio = dup / dedup;
+        assert!((ratio - c.par.n_mp as f64).abs() / (c.par.n_mp as f64) < 0.05);
+    }
+
+    #[test]
+    fn s2_ag_scales_with_capacity_s1_with_tokens() {
+        let mut c = cfg();
+        let s1_before = bytes_mp_ag_s1_per_rank(&c);
+        let s2_before = bytes_mp_ag_s2_per_rank(&c);
+        c.f *= 2.0; // double capacity factor → T doubles
+        assert_eq!(bytes_mp_ag_s1_per_rank(&c), s1_before);
+        assert!(bytes_mp_ag_s2_per_rank(&c) > 1.9 * s2_before);
+    }
+
+    #[test]
+    fn schedule_kind_parse() {
+        assert_eq!(ScheduleKind::parse("parm"), Some(ScheduleKind::Parm));
+        assert_eq!(ScheduleKind::parse("deepspeed"), Some(ScheduleKind::Baseline));
+        assert_eq!(ScheduleKind::parse("nope"), None);
+        for k in [
+            ScheduleKind::Baseline,
+            ScheduleKind::S1,
+            ScheduleKind::S2,
+            ScheduleKind::S2Aas,
+            ScheduleKind::Parm,
+        ] {
+            assert_eq!(ScheduleKind::parse(k.name()), Some(k));
+        }
+    }
+
+    #[test]
+    fn op_tags_and_comm_flags() {
+        assert!(Op::FusedAlltoAll { bytes_per_pair: 1.0 }.is_communication());
+        assert!(!Op::Gate { flops_per_rank: 1.0 }.is_communication());
+        assert_eq!(Op::MpSplit { bytes_per_rank: 0.0 }.tag(), "mp.split");
+    }
+}

@@ -1,0 +1,378 @@
+//! Greedy list-scheduling engine over contended resources.
+//!
+//! Resource model (per [`crate::config::ClusterProfile`]):
+//! * `gpu_tx[r]` / `gpu_rx[r]` — each GPU's local fabric port (PCIe),
+//!   carrying **intra-node** transfers.
+//! * `nic_tx[n]` / `nic_rx[n]` — each node's NIC, carrying **inter-node**
+//!   transfers; GPUs of one node *share* inter-node bandwidth (testbed B:
+//!   4 GPUs per ConnectX-5). Inter-node transfers do NOT occupy the GPU
+//!   ports: the intra-node connect and the inter-node connect are
+//!   independent channels — the paper's Observation 1/2 premise ("either
+//!   the intra-node connect or the inter-node connect is idle"), realized
+//!   by NCCL's separate channels and GPUDirect-style DMA.
+//! * `gpu_compute[r]` — one compute stream per GPU.
+//!
+//! A transfer src→dst (src ≠ dst) starts when its dependencies are done
+//! and every required resource is free, then holds all of them for
+//! `α + bytes·β` of the appropriate link class. This is the standard
+//! α-β/LogP-style list-scheduling approximation (cf. ASTRA-sim's analytical
+//! mode): deterministic, and it exposes exactly the two properties the
+//! paper exploits — serialization on a shared link class, and overlap
+//! across link classes.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::config::ClusterProfile;
+use crate::sim::dag::{SimDag, TaskKind};
+
+/// Timing of one scheduled task.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskTiming {
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Result of simulating a DAG.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub makespan: f64,
+    pub timings: Vec<TaskTiming>,
+    /// Busy seconds per GPU compute unit.
+    pub compute_busy: Vec<f64>,
+    /// Busy seconds per GPU port (max of tx/rx), intra-node class.
+    pub intra_busy: Vec<f64>,
+    /// Busy seconds per node NIC (max of tx/rx).
+    pub inter_busy: Vec<f64>,
+    /// Aggregated transfer seconds per tag (tags are 'static, so this is
+    /// a small alloc-free association list, not a per-task log).
+    pub tag_seconds: Vec<(&'static str, f64)>,
+}
+
+impl SimReport {
+    /// Fraction of the makespan not covered by the busiest rank's compute —
+    /// the "communication time ratio" of Fig 1 (communication + exposed
+    /// idle waiting on communication).
+    pub fn comm_ratio(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        let max_compute = self.compute_busy.iter().cloned().fold(0.0, f64::max);
+        (1.0 - max_compute / self.makespan).clamp(0.0, 1.0)
+    }
+
+    /// Total seconds attributed to a tag (sum over tasks).
+    pub fn seconds_for_tag(&self, tag: &str) -> f64 {
+        self.tag_seconds
+            .iter()
+            .filter(|(t, _)| *t == tag)
+            .map(|(_, s)| *s)
+            .sum()
+    }
+}
+
+/// The engine. Holds mutable resource availability during a run.
+pub struct Simulator<'a> {
+    cluster: &'a ClusterProfile,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(cluster: &'a ClusterProfile) -> Simulator<'a> {
+        Simulator { cluster }
+    }
+
+    /// Schedule the DAG; returns per-task timings and aggregate stats.
+    pub fn run(&self, dag: &SimDag) -> SimReport {
+        let p = self.cluster.total_gpus();
+        let nodes = self.cluster.nodes;
+        let mut gpu_tx = vec![0.0f64; p];
+        let mut gpu_rx = vec![0.0f64; p];
+        let mut nic_tx = vec![0.0f64; nodes];
+        let mut nic_rx = vec![0.0f64; nodes];
+        let mut compute = vec![0.0f64; p];
+
+        let mut compute_busy = vec![0.0f64; p];
+        let mut intra_busy = vec![0.0f64; p];
+        let mut inter_busy = vec![0.0f64; nodes];
+
+        let n = dag.tasks.len();
+        let mut timings = vec![TaskTiming { start: 0.0, end: 0.0 }; n];
+        let mut indeg = vec![0usize; n];
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (id, t) in dag.tasks.iter().enumerate() {
+            indeg[id] = t.deps.len();
+            for &d in &t.deps {
+                children[d].push(id);
+            }
+        }
+
+        // Ready queue ordered by (ready_time, id) — deterministic FIFO per
+        // resource among equally-ready tasks.
+        #[derive(PartialEq)]
+        struct Ready {
+            time: f64,
+            id: usize,
+        }
+        impl Eq for Ready {}
+        impl PartialOrd for Ready {
+            fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(other))
+            }
+        }
+        impl Ord for Ready {
+            fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+                self.time
+                    .partial_cmp(&other.time)
+                    .unwrap()
+                    .then(self.id.cmp(&other.id))
+            }
+        }
+
+        let mut heap: BinaryHeap<Reverse<Ready>> = BinaryHeap::new();
+        let mut ready_time = vec![0.0f64; n];
+        for id in 0..n {
+            if indeg[id] == 0 {
+                heap.push(Reverse(Ready { time: 0.0, id }));
+            }
+        }
+
+        let mut tag_seconds: Vec<(&'static str, f64)> = Vec::new();
+        let charge_tag = move |tag_seconds: &mut Vec<(&'static str, f64)>,
+                                   tag: &'static str,
+                                   dur: f64| {
+            if tag.is_empty() {
+                return;
+            }
+            match tag_seconds.iter_mut().find(|(t, _)| *t == tag) {
+                Some((_, s)) => *s += dur,
+                None => tag_seconds.push((tag, dur)),
+            }
+        };
+        let mut done = 0usize;
+        let mut makespan = 0.0f64;
+
+        while let Some(Reverse(Ready { time, id })) = heap.pop() {
+            let task = &dag.tasks[id];
+            let (start, end) = match task.kind {
+                TaskKind::Noop => (time, time),
+                TaskKind::Compute { rank, flops } => {
+                    assert!(rank < p, "compute rank {rank} outside cluster of {p}");
+                    let start = time.max(compute[rank]);
+                    let dur = flops / self.cluster.gpu_flops;
+                    let end = start + dur;
+                    compute[rank] = end;
+                    compute_busy[rank] += dur;
+                    (start, end)
+                }
+                TaskKind::Transfer { src, dst, bytes } => {
+                    assert!(src < p && dst < p, "transfer endpoints outside cluster");
+                    if src == dst {
+                        (time, time) // device-local: free in the network model
+                    } else if self.cluster.same_node(src, dst) {
+                        let start = time.max(gpu_tx[src]).max(gpu_rx[dst]);
+                        let dur = self.cluster.alpha_intra + bytes * self.cluster.beta_intra;
+                        let end = start + dur;
+                        gpu_tx[src] = end;
+                        gpu_rx[dst] = end;
+                        intra_busy[src] += dur;
+                        intra_busy[dst] += dur;
+                        charge_tag(&mut tag_seconds, task.tag, dur);
+                        (start, end)
+                    } else {
+                        let sn = self.cluster.node_of(src);
+                        let dn = self.cluster.node_of(dst);
+                        let start = time.max(nic_tx[sn]).max(nic_rx[dn]);
+                        let dur = self.cluster.alpha_inter + bytes * self.cluster.beta_inter;
+                        let end = start + dur;
+                        nic_tx[sn] = end;
+                        nic_rx[dn] = end;
+                        inter_busy[sn] += dur;
+                        inter_busy[dn] += dur;
+                        charge_tag(&mut tag_seconds, task.tag, dur);
+                        (start, end)
+                    }
+                }
+            };
+            timings[id] = TaskTiming { start, end };
+            makespan = makespan.max(end);
+            done += 1;
+            for &c in &children[id] {
+                ready_time[c] = ready_time[c].max(end);
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    heap.push(Reverse(Ready { time: ready_time[c], id: c }));
+                }
+            }
+        }
+        assert_eq!(done, n, "DAG contains unreachable tasks (cycle?)");
+
+        SimReport {
+            makespan,
+            timings,
+            compute_busy,
+            intra_busy,
+            inter_busy,
+            tag_seconds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::dag::SimDag;
+
+    fn tiny_cluster() -> ClusterProfile {
+        ClusterProfile {
+            name: "tiny".into(),
+            nodes: 2,
+            gpus_per_node: 2,
+            alpha_intra: 1e-5,
+            beta_intra: 1e-9,
+            alpha_inter: 1e-4,
+            beta_inter: 1e-8,
+            gpu_flops: 1e12,
+            gpu_mem_bytes: 1 << 30,
+        }
+    }
+
+    #[test]
+    fn single_transfer_alpha_beta() {
+        let c = tiny_cluster();
+        let mut d = SimDag::new();
+        d.transfer(0, 1, 1e6, &[], "t"); // intra-node
+        let r = Simulator::new(&c).run(&d);
+        assert!((r.makespan - (1e-5 + 1e6 * 1e-9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inter_node_uses_inter_class() {
+        let c = tiny_cluster();
+        let mut d = SimDag::new();
+        d.transfer(0, 2, 1e6, &[], "t"); // node 0 → node 1
+        let r = Simulator::new(&c).run(&d);
+        assert!((r.makespan - (1e-4 + 1e6 * 1e-8)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn local_copy_is_free() {
+        let c = tiny_cluster();
+        let mut d = SimDag::new();
+        d.transfer(1, 1, 1e9, &[], "local");
+        let r = Simulator::new(&c).run(&d);
+        assert_eq!(r.makespan, 0.0);
+    }
+
+    #[test]
+    fn shared_port_serializes() {
+        // Two transfers out of GPU 0 must serialize on gpu_tx[0].
+        let c = tiny_cluster();
+        let mut d = SimDag::new();
+        d.transfer(0, 1, 1e6, &[], "a");
+        d.transfer(0, 1, 1e6, &[], "b");
+        let r = Simulator::new(&c).run(&d);
+        let one = 1e-5 + 1e6 * 1e-9;
+        assert!((r.makespan - 2.0 * one).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_ports_overlap() {
+        // 0→1 and 2→3 share nothing: same makespan as one transfer.
+        let c = tiny_cluster();
+        let mut d = SimDag::new();
+        d.transfer(0, 1, 1e6, &[], "a");
+        d.transfer(2, 3, 1e6, &[], "b");
+        let r = Simulator::new(&c).run(&d);
+        let one = 1e-5 + 1e6 * 1e-9;
+        assert!((r.makespan - one).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nic_shared_per_node() {
+        // 0→2 and 1→3 are distinct GPU ports but share both NICs.
+        let c = tiny_cluster();
+        let mut d = SimDag::new();
+        d.transfer(0, 2, 1e6, &[], "a");
+        d.transfer(1, 3, 1e6, &[], "b");
+        let r = Simulator::new(&c).run(&d);
+        let one = 1e-4 + 1e6 * 1e-8;
+        assert!((r.makespan - 2.0 * one).abs() < 1e-12, "{}", r.makespan);
+    }
+
+    #[test]
+    fn intra_and_inter_overlap() {
+        // An intra-node transfer (0→1) and an inter-node transfer (2→... )
+        // wait: 2→0 shares gpu_rx[0]? use 3→2? same node. Use 2 nodes:
+        // intra 0→1 on node0; inter 2→... node1's GPU 2 to node0 GPU? that
+        // would hit gpu_rx[0] or [1]. Instead inter 3→2 is intra. So: inter
+        // transfer 2→1 conflicts on rx[1]. Choose inter 3→0 and intra 2→3?
+        // Simplest: intra on node1 (2→3) + inter 0→... no: 0→2 holds
+        // rx[2]. Use intra 0→1 and inter 3→2 (both node1 endpoints? 3,2
+        // same node → intra). Take a 3rd node? Extend cluster.
+        let mut c = tiny_cluster();
+        c.nodes = 3;
+        let mut d = SimDag::new();
+        d.transfer(0, 1, 1e6, &[], "intra"); // node0 internal
+        d.transfer(2, 4, 1e6, &[], "inter"); // node1 → node2
+        let r = Simulator::new(&c).run(&d);
+        let expect = (1e-5 + 1e6 * 1e-9f64).max(1e-4 + 1e6 * 1e-8);
+        assert!((r.makespan - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dependencies_chain() {
+        let c = tiny_cluster();
+        let mut d = SimDag::new();
+        let a = d.compute(0, 1e9, &[], "c1"); // 1ms
+        let b = d.transfer(0, 1, 1e6, &[a], "t");
+        d.compute(1, 1e9, &[b], "c2");
+        let r = Simulator::new(&c).run(&d);
+        let expect = 1e-3 + (1e-5 + 1e6 * 1e-9) + 1e-3;
+        assert!((r.makespan - expect).abs() < 1e-9);
+        // Timings are monotone along the chain.
+        assert!(r.timings[1].start >= r.timings[0].end);
+        assert!(r.timings[2].start >= r.timings[1].end);
+    }
+
+    #[test]
+    fn comm_ratio_bounds() {
+        let c = tiny_cluster();
+        let mut d = SimDag::new();
+        d.compute(0, 1e9, &[], "c");
+        let r = Simulator::new(&c).run(&d);
+        assert!(r.comm_ratio() < 1e-9); // pure compute
+        let mut d2 = SimDag::new();
+        d2.transfer(0, 1, 1e6, &[], "t");
+        let r2 = Simulator::new(&c).run(&d2);
+        assert!((r2.comm_ratio() - 1.0).abs() < 1e-9); // pure comm
+    }
+
+    #[test]
+    fn makespan_at_least_critical_path_and_bottleneck() {
+        let c = tiny_cluster();
+        let mut d = SimDag::new();
+        // Fan of 4 transfers out of GPU 0 + a dependent compute.
+        let mut last = Vec::new();
+        for i in 0..4 {
+            last.push(d.transfer(0, 1 + (i % 1), 1e6, &[], "t"));
+        }
+        let j = d.join(&last, "j");
+        d.compute(1, 1e9, &[j], "c");
+        let r = Simulator::new(&c).run(&d);
+        let bottleneck = 4.0 * (1e-5 + 1e6 * 1e-9);
+        assert!(r.makespan >= bottleneck);
+        assert!(r.makespan >= 1e-3);
+    }
+
+    #[test]
+    fn tag_accounting() {
+        let c = tiny_cluster();
+        let mut d = SimDag::new();
+        d.transfer(0, 1, 1e6, &[], "x");
+        d.transfer(0, 1, 1e6, &[], "x");
+        let r = Simulator::new(&c).run(&d);
+        let x = r.seconds_for_tag("x");
+        assert!((x - 2.0 * (1e-5 + 1e6 * 1e-9)).abs() < 1e-12);
+        assert_eq!(r.seconds_for_tag("y"), 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Discrete-event cluster simulator.
+//!
+//! The paper's performance claims are statements about *which transfers
+//! occupy which link class, and whether transfers on different classes
+//! overlap*. This module models exactly that: a task DAG of point-to-point
+//! transfers and per-GPU compute, scheduled greedily over contended
+//! resources (per-GPU intra-node tx/rx ports, per-node NIC tx/rx, per-GPU
+//! compute units) with α-β transfer costs — the same cost model the paper's
+//! §IV analysis and Algorithm 1 use.
+
+pub mod dag;
+pub mod engine;
+pub mod trace;
+
+pub use dag::{SimDag, TaskId, TaskKind};
+pub use engine::{SimReport, Simulator};

@@ -1,0 +1,58 @@
+//! Chrome-trace (about://tracing / Perfetto) export of a simulated run,
+//! for eyeballing overlap structure (e.g. that SAA really interleaves the
+//! AlltoAll phases with the AllGather forwards).
+
+use crate::sim::dag::{SimDag, TaskKind};
+use crate::sim::engine::SimReport;
+use crate::util::json::Json;
+
+/// Render a simulated run as a Chrome trace JSON document. Rows (tids) are
+/// GPUs; compute and transfers are duration events; transfers are placed on
+/// the source GPU's row.
+pub fn chrome_trace(dag: &SimDag, report: &SimReport) -> Json {
+    let mut events = Vec::new();
+    for (id, task) in dag.tasks.iter().enumerate() {
+        let t = report.timings[id];
+        if t.end <= t.start {
+            continue; // zero-duration: noop/local copy
+        }
+        let (name, tid) = match task.kind {
+            TaskKind::Compute { rank, .. } => (format!("compute:{}", task.tag), rank),
+            TaskKind::Transfer { src, dst, .. } => (format!("xfer:{}→{dst}:{}", src, task.tag), src),
+            TaskKind::Noop => continue,
+        };
+        events.push(Json::obj(vec![
+            ("name", Json::str(&name)),
+            ("ph", Json::str("X")),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(tid as f64)),
+            // Chrome traces use microseconds.
+            ("ts", Json::num(t.start * 1e6)),
+            ("dur", Json::num((t.end - t.start) * 1e6)),
+        ]));
+    }
+    Json::obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterProfile;
+    use crate::sim::engine::Simulator;
+
+    #[test]
+    fn trace_has_events_with_positive_durations() {
+        let c = ClusterProfile::testbed_a();
+        let mut d = SimDag::new();
+        let a = d.transfer(0, 1, 1e6, &[], "ag");
+        d.compute(1, 1e9, &[a], "ffn");
+        d.join(&[a], "sync");
+        let r = Simulator::new(&c).run(&d);
+        let trace = chrome_trace(&d, &r);
+        let events = trace.get("traceEvents").as_arr().unwrap();
+        assert_eq!(events.len(), 2); // join excluded
+        for e in events {
+            assert!(e.get("dur").as_f64().unwrap() > 0.0);
+        }
+    }
+}

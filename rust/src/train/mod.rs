@@ -1,0 +1,12 @@
+//! Training driver: the end-to-end loop that executes the AOT
+//! `lm_train_step` artifact via PJRT (real numerics, real loss curve) and
+//! reports the *simulated* distributed iteration time of the same model
+//! under a chosen schedule and cluster (the timing the paper measures).
+
+pub mod data;
+pub mod simtime;
+pub mod trainer;
+
+pub use data::SyntheticCorpus;
+pub use simtime::{model_iteration_time, ModelTiming};
+pub use trainer::{train_lm, TrainOptions, TrainReport};

@@ -1,0 +1,181 @@
+//! Micro-benchmark harness (criterion is not vendored).
+//!
+//! `cargo bench` targets are declared with `harness = false` and drive this
+//! module directly: warmup, fixed-duration sampling, median/MAD reporting,
+//! and an optional JSON report for EXPERIMENTS.md tooling.
+
+use crate::util::stats;
+use crate::util::table::fmt_seconds;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median: f64,
+    /// Median absolute deviation of per-iteration seconds.
+    pub mad: f64,
+    pub iterations: u64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} {:>12} ± {:>10}  ({} iters, {} samples)",
+            self.name,
+            fmt_seconds(self.median),
+            fmt_seconds(self.mad),
+            self.iterations,
+            self.samples
+        )
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Modest defaults: the sweep benches dominate wall-clock, so the
+        // micro harness keeps sampling short. Override via PARM_BENCH_FAST=1
+        // for CI-style smoke runs.
+        let fast = std::env::var("PARM_BENCH_FAST").is_ok();
+        Bencher {
+            warmup: Duration::from_millis(if fast { 20 } else { 200 }),
+            measure: Duration::from_millis(if fast { 80 } else { 800 }),
+            min_samples: if fast { 5 } else { 15 },
+            results: Vec::new(),
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    pub fn new() -> Bencher {
+        Bencher::default()
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    pub fn bench<F, R>(&mut self, name: &str, mut f: F) -> BenchResult
+    where
+        F: FnMut() -> R,
+    {
+        // Warmup + estimate per-iteration cost.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let est = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+
+        // Choose a batch size so each sample takes ~measure/min_samples.
+        let target_sample = self.measure.as_secs_f64() / self.min_samples as f64;
+        let batch = ((target_sample / est.max(1e-9)).ceil() as u64).max(1);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let mut total_iters: u64 = 0;
+        let start = Instant::now();
+        while start.elapsed() < self.measure || samples.len() < self.min_samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+            total_iters += batch;
+            if samples.len() > 10_000 {
+                break; // pathological fast function; enough signal
+            }
+        }
+
+        let res = BenchResult {
+            name: name.to_string(),
+            median: stats::percentile(&samples, 50.0),
+            mad: stats::mad(&samples),
+            iterations: total_iters,
+            samples: samples.len(),
+        };
+        println!("{}", res.summary());
+        self.results.push(res.clone());
+        res
+    }
+
+    /// All results measured so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render results as a JSON array (for report collection).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::arr(self.results.iter().map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(&r.name)),
+                ("median_s", Json::num(r.median)),
+                ("mad_s", Json::num(r.mad)),
+                ("iterations", Json::num(r.iterations as f64)),
+                ("samples", Json::num(r.samples as f64)),
+            ])
+        }))
+    }
+}
+
+/// Standard header printed at the top of every bench binary, so `cargo
+/// bench` output is self-describing.
+pub fn bench_header(title: &str, paper_ref: &str) {
+    println!("\n=== {title} ===");
+    println!("reproduces: {paper_ref}");
+    println!("{}", "-".repeat(72));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_samples: 3,
+            results: Vec::new(),
+        };
+        let r = b.bench("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.median > 0.0);
+        assert!(r.iterations > 0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(5),
+            min_samples: 2,
+            results: Vec::new(),
+        };
+        b.bench("x", || 1 + 1);
+        let j = b.to_json();
+        assert_eq!(j.at(0).get("name").as_str().unwrap(), "x");
+        assert!(j.at(0).get("median_s").as_f64().unwrap() >= 0.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Tiny CLI argument parser (clap is not vendored).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+//! Unknown flags are an error; each subcommand declares what it accepts.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Parsed arguments: options by name plus positionals in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Declares an accepted option/flag for parse-time validation + help text.
+#[derive(Debug, Clone)]
+pub struct Spec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+impl Spec {
+    pub const fn opt(name: &'static str, help: &'static str) -> Spec {
+        Spec { name, takes_value: true, help, default: None }
+    }
+    pub const fn opt_default(name: &'static str, default: &'static str, help: &'static str) -> Spec {
+        Spec { name, takes_value: true, help, default: Some(default) }
+    }
+    pub const fn flag(name: &'static str, help: &'static str) -> Spec {
+        Spec { name, takes_value: false, help, default: None }
+    }
+}
+
+impl Args {
+    /// Parse `argv` (without the program/subcommand names) against `specs`.
+    pub fn parse(argv: &[String], specs: &[Spec]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let find = |name: &str| specs.iter().find(|s| s.name == name);
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = find(&name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}")))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                        }
+                    };
+                    args.opts.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("--{name} does not take a value")));
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // Apply defaults.
+        for s in specs {
+            if let Some(d) = s.default {
+                args.opts.entry(s.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name} expects an integer, got `{v}`"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name} expects a number, got `{v}`"))),
+        }
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name)
+            .ok_or_else(|| CliError(format!("required option --{name} missing")))
+    }
+}
+
+/// Render a help block for a subcommand.
+pub fn render_help(cmd: &str, about: &str, specs: &[Spec]) -> String {
+    let mut out = format!("parm {cmd} — {about}\n\noptions:\n");
+    for s in specs {
+        let head = if s.takes_value {
+            format!("  --{} <v>", s.name)
+        } else {
+            format!("  --{}", s.name)
+        };
+        let default = s.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        out.push_str(&format!("{head:<26} {}{}\n", s.help, default));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    const SPECS: &[Spec] = &[
+        Spec::opt("steps", "number of steps"),
+        Spec::opt_default("seed", "42", "prng seed"),
+        Spec::flag("verbose", "chatty output"),
+    ];
+
+    #[test]
+    fn parses_forms() {
+        let a = Args::parse(&sv(&["--steps", "10", "--verbose", "pos1"]), SPECS).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), Some(10));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert_eq!(a.get("seed"), Some("42")); // default applied
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&sv(&["--steps=3"]), SPECS).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), Some(3));
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(Args::parse(&sv(&["--nope"]), SPECS).is_err());
+        assert!(Args::parse(&sv(&["--steps"]), SPECS).is_err());
+        assert!(Args::parse(&sv(&["--verbose=1"]), SPECS).is_err());
+    }
+
+    #[test]
+    fn bad_number() {
+        let a = Args::parse(&sv(&["--steps", "abc"]), SPECS).unwrap();
+        assert!(a.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = render_help("train", "train a model", SPECS);
+        assert!(h.contains("--steps"));
+        assert!(h.contains("[default: 42]"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Small self-contained substrates the coordinator is built on.
+//!
+//! Nothing in this module knows about MoE or the paper; these are the
+//! pieces a production system would normally pull from crates.io
+//! (serde/clap/criterion/proptest/rand). This build is fully offline with a
+//! minimal vendored crate set, so we implement them here, with tests.
+
+pub mod benchmark;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,135 @@
+//! Lightweight property-based testing (proptest is not vendored).
+//!
+//! `check(name, cases, |rng| ...)` runs a property over `cases` random
+//! inputs drawn through the deterministic [`crate::util::prng::Rng`]; on
+//! failure it reports the per-case seed so the exact input can be replayed
+//! with `replay(seed, f)`. No shrinking — failing seeds are replayable and
+//! our generators draw small structured inputs, which keeps counterexamples
+//! readable without it.
+
+use crate::util::prng::Rng;
+
+/// Outcome of a property over one generated case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` for `cases` seeds derived from the property `name`.
+///
+/// Panics (test-failure style) with the offending seed on the first failed
+/// case. The base seed is derived from the name so adding properties does
+/// not perturb existing ones.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let base = name_seed(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed on case {case}/{cases} (replay seed: {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a property on a single seed reported by [`check`].
+pub fn replay<F>(seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("replayed property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// FNV-1a hash of the property name → stable base seed.
+fn name_seed(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assert two f32 slices are elementwise close; returns a property error
+/// naming the first offending index otherwise.
+pub fn assert_close(actual: &[f32], expected: &[f32], atol: f32, rtol: f32) -> PropResult {
+    if actual.len() != expected.len() {
+        return Err(format!("length mismatch: {} vs {}", actual.len(), expected.len()));
+    }
+    for (i, (a, e)) in actual.iter().zip(expected.iter()).enumerate() {
+        let tol = atol + rtol * e.abs();
+        if (a - e).abs() > tol || (a.is_nan() != e.is_nan()) {
+            return Err(format!(
+                "mismatch at [{i}]: actual={a} expected={e} (|diff|={} > tol={tol})",
+                (a - e).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Property-style equality for exact (e.g. permutation) data planes.
+pub fn assert_eq_slice<T: PartialEq + std::fmt::Debug>(actual: &[T], expected: &[T]) -> PropResult {
+    if actual.len() != expected.len() {
+        return Err(format!("length mismatch: {} vs {}", actual.len(), expected.len()));
+    }
+    for (i, (a, e)) in actual.iter().zip(expected.iter()).enumerate() {
+        if a != e {
+            return Err(format!("mismatch at [{i}]: actual={a:?} expected={e:?}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always-true", 25, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check("always-false", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_inputs_per_name() {
+        let mut first: Vec<u64> = Vec::new();
+        check("det", 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check("det", 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-5).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-5, 1e-5).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-5, 1e-5).is_err());
+    }
+
+    #[test]
+    fn eq_helper() {
+        assert!(assert_eq_slice(&[1, 2], &[1, 2]).is_ok());
+        assert!(assert_eq_slice(&[1, 2], &[2, 1]).is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! Statistics helpers: summary stats, percentiles, histograms, and the
+//! ordinary-least-squares line fit used by the α-β performance model
+//! (paper §V-A: "employ a least square fitting method to estimate them").
+
+/// Arithmetic mean. Returns 0 for an empty slice (callers treat empty
+/// sample sets as "no signal").
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Geometric mean — the right average for speedup ratios (Table IV).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Linear-interpolated percentile, `q` in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&q));
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q / 100.0 * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        let w = pos - lo as f64;
+        s[lo] * (1.0 - w) + s[hi] * w
+    }
+}
+
+/// Median absolute deviation — robust spread estimate for bench timings.
+pub fn mad(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let med = percentile(xs, 50.0);
+    let devs: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
+    percentile(&devs, 50.0)
+}
+
+/// Result of an ordinary-least-squares fit `y ≈ intercept + slope * x`.
+///
+/// In the α-β communication model the intercept is α (startup latency) and
+/// the slope is β (per-element transfer time).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearFit {
+    pub intercept: f64,
+    pub slope: f64,
+    /// Coefficient of determination (1 = perfect linear fit).
+    pub r2: f64,
+}
+
+impl LinearFit {
+    pub fn predict(&self, x: f64) -> f64 {
+        self.intercept + self.slope * x
+    }
+}
+
+/// Ordinary least squares over (x, y) pairs. Requires ≥ 2 distinct x.
+pub fn least_squares(points: &[(f64, f64)]) -> Option<LinearFit> {
+    let n = points.len() as f64;
+    if points.len() < 2 {
+        return None;
+    }
+    let sx: f64 = points.iter().map(|p| p.0).sum();
+    let sy: f64 = points.iter().map(|p| p.1).sum();
+    let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-30 {
+        return None; // all x identical — slope undefined
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    let intercept = (sy - slope * sx) / n;
+    let my = sy / n;
+    let ss_tot: f64 = points.iter().map(|p| (p.1 - my) * (p.1 - my)).sum();
+    let ss_res: f64 = points
+        .iter()
+        .map(|p| {
+            let e = p.1 - (intercept + slope * p.0);
+            e * e
+        })
+        .sum();
+    let r2 = if ss_tot < 1e-30 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    Some(LinearFit { intercept, slope, r2 })
+}
+
+/// Fixed-width histogram over `[lo, hi)` with `bins` buckets; values outside
+/// the range are clamped into the terminal buckets (Fig 7 style).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<usize>,
+    pub total: usize,
+}
+
+impl Histogram {
+    pub fn build(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Histogram {
+        assert!(bins > 0 && hi > lo);
+        let mut counts = vec![0usize; bins];
+        for &x in xs {
+            let t = ((x - lo) / (hi - lo) * bins as f64).floor();
+            let idx = (t.max(0.0) as usize).min(bins - 1);
+            counts[idx] += 1;
+        }
+        Histogram { lo, hi, counts, total: xs.len() }
+    }
+
+    /// Fraction of samples at or above `threshold` (e.g. "speedup ≥ 4× in
+    /// ~89% of cases").
+    pub fn frac_at_least(xs: &[f64], threshold: f64) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter().filter(|&&x| x >= threshold).count() as f64 / xs.len() as f64
+    }
+
+    /// Bucket boundaries as (lo, hi) pairs.
+    pub fn edges(&self) -> Vec<(f64, f64)> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..self.counts.len())
+            .map(|i| (self.lo + w * i as f64, self.lo + w * (i + 1) as f64))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_of_ratios() {
+        let g = geomean(&[2.0, 8.0]);
+        assert!((g - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn ols_recovers_exact_line() {
+        let pts: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, 3.0 + 0.5 * i as f64)).collect();
+        let fit = least_squares(&pts).unwrap();
+        assert!((fit.intercept - 3.0).abs() < 1e-9);
+        assert!((fit.slope - 0.5).abs() < 1e-9);
+        assert!((fit.r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ols_alpha_beta_shape() {
+        // Synthetic collective timings: t = 1e-4 + 5e-10 * bytes + noise-free
+        let sizes = [1e5, 1e6, 1e7, 1e8];
+        let pts: Vec<(f64, f64)> = sizes.iter().map(|&s| (s, 1e-4 + 5e-10 * s)).collect();
+        let fit = least_squares(&pts).unwrap();
+        assert!((fit.intercept - 1e-4).abs() < 1e-9);
+        assert!((fit.slope - 5e-10).abs() < 1e-15);
+    }
+
+    #[test]
+    fn ols_degenerate() {
+        assert!(least_squares(&[(1.0, 2.0)]).is_none());
+        assert!(least_squares(&[(1.0, 2.0), (1.0, 3.0)]).is_none());
+    }
+
+    #[test]
+    fn histogram_clamps_and_counts() {
+        let h = Histogram::build(&[-1.0, 0.5, 1.5, 2.5, 99.0], 0.0, 3.0, 3);
+        assert_eq!(h.counts, vec![2, 1, 2]);
+        assert_eq!(h.total, 5);
+        let edges = h.edges();
+        assert_eq!(edges[0], (0.0, 1.0));
+    }
+
+    #[test]
+    fn frac_at_least() {
+        assert!((Histogram::frac_at_least(&[1.0, 4.0, 5.0, 3.9], 4.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mad_robust() {
+        let xs = [1.0, 1.0, 1.0, 100.0];
+        assert_eq!(mad(&xs), 0.0);
+    }
+}

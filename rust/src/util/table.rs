@@ -1,0 +1,215 @@
+//! Plain-text / markdown table rendering for bench reports (Table IV/V
+//! style output on stdout and in EXPERIMENTS.md).
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder: set headers, push rows, render.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: headers.iter().map(|_| Align::Left).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Right-align all columns except the first (typical for numeric tables).
+    pub fn numeric(mut self) -> Table {
+        for (i, a) in self.aligns.iter_mut().enumerate() {
+            *a = if i == 0 { Align::Left } else { Align::Right };
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    fn pad(cell: &str, width: usize, align: Align) -> String {
+        let len = cell.chars().count();
+        let fill = " ".repeat(width - len);
+        match align {
+            Align::Left => format!("{cell}{fill}"),
+            Align::Right => format!("{fill}{cell}"),
+        }
+    }
+
+    /// Render as an aligned plain-text table.
+    pub fn to_text(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| Self::pad(h, w[i], self.aligns[i]))
+            .collect();
+        out.push_str(&hdr.join("  "));
+        out.push('\n');
+        out.push_str(&w.iter().map(|n| "-".repeat(*n)).collect::<Vec<_>>().join("  "));
+        out.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| Self::pad(c, w[i], self.aligns[i]))
+                .collect();
+            out.push_str(&cells.join("  "));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as a GitHub-flavored markdown table.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        let seps: Vec<&str> = self
+            .aligns
+            .iter()
+            .map(|a| match a {
+                Align::Left => "---",
+                Align::Right => "---:",
+            })
+            .collect();
+        out.push_str(&format!("| {} |\n", seps.join(" | ")));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+
+    /// Render as CSV (no quoting needed for our numeric/identifier cells,
+    /// but commas in cells are escaped defensively).
+    pub fn to_csv(&self) -> String {
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format seconds with an adaptive unit (ns/µs/ms/s).
+pub fn fmt_seconds(s: f64) -> String {
+    let abs = s.abs();
+    if abs >= 1.0 {
+        format!("{s:.3} s")
+    } else if abs >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if abs >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Format a speedup ratio in the paper's style, e.g. `3.06×`.
+pub fn fmt_speedup(x: f64) -> String {
+    format!("{x:.2}×")
+}
+
+/// Format a byte count with binary units.
+pub fn fmt_bytes(b: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{v:.0} {}", UNITS[u])
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_text_aligned() {
+        let mut t = Table::new(&["name", "value"]).numeric();
+        t.row_strs(&["aa", "1.5"]);
+        t.row_strs(&["b", "12.25"]);
+        let text = t.to_text();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[2].starts_with("aa"));
+        assert!(lines[3].ends_with("12.25"));
+    }
+
+    #[test]
+    fn renders_markdown() {
+        let mut t = Table::new(&["a", "b"]).numeric();
+        t.row_strs(&["x", "1"]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| --- | ---: |"));
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new(&["a"]);
+        t.row_strs(&["x,y"]);
+        assert!(t.to_csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_seconds(1.5), "1.500 s");
+        assert_eq!(fmt_seconds(0.0015), "1.500 ms");
+        assert_eq!(fmt_speedup(3.061), "3.06×");
+        assert_eq!(fmt_bytes(2048.0), "2.00 KiB");
+    }
+}

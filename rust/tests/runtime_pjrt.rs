@@ -1,0 +1,177 @@
+//! Integration: the Rust coordinator loads and executes the AOT artifacts
+//! (JAX/Pallas → HLO text → PJRT), and the PJRT expert backend agrees with
+//! the native data plane. Requires `make artifacts` (run automatically by
+//! `make test`).
+
+use std::path::Path;
+
+use parm::config::moe::ParallelDegrees;
+use parm::config::MoeLayerConfig;
+use parm::moe::{
+    reference_forward, run_schedule, ExpertBackend, GlobalWeights, LayerState, NativeBackend,
+    PjrtExpertBackend,
+};
+use parm::runtime::{HostTensor, Runtime};
+use parm::schedule::ScheduleKind;
+use parm::util::prng::Rng;
+
+fn artifacts_dir() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").leak()
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// The cross-language test config: must match aot.py's EXPERT_FFN_SHAPES
+/// comment (p=8, n_mp=2, n_esp=2, b=1, l=16, e=4, m=8, h=16).
+fn xlang_cfg() -> MoeLayerConfig {
+    MoeLayerConfig {
+        par: ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 },
+        b: 1,
+        l: 16,
+        e: 4,
+        m: 8,
+        h: 16,
+        k: 2,
+        f: 1.2,
+        dtype_bytes: 4,
+    }
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!(
+            (x - y).abs() <= tol + tol * y.abs(),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_expert_ffn_matches_native() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load(artifacts_dir()).unwrap();
+    let mut pjrt = PjrtExpertBackend::new(rt, "expert_ffn_40x8x8").unwrap();
+    let (n, m, hs) = pjrt.shape();
+    assert_eq!((n, m, hs), (40, 8, 8));
+
+    let mut rng = Rng::new(7);
+    let x = rng.f32_vec(n * m);
+    let w1: Vec<f32> = (0..m * hs).map(|_| rng.normal() as f32 * 0.3).collect();
+    let w2: Vec<f32> = (0..hs * m).map(|_| rng.normal() as f32 * 0.3).collect();
+
+    let y_pjrt = pjrt.expert_ffn(&x, &w1, &w2, n, m, hs).unwrap();
+    let y_native = NativeBackend.expert_ffn(&x, &w1, &w2, n, m, hs).unwrap();
+    assert_close(&y_pjrt, &y_native, 1e-4, "expert_ffn pjrt-vs-native");
+    assert!(y_pjrt.iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn pjrt_backend_rejects_wrong_shape() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::load(artifacts_dir()).unwrap();
+    let mut pjrt = PjrtExpertBackend::new(rt, "expert_ffn_40x8x8").unwrap();
+    assert!(pjrt.expert_ffn(&[0.0; 16], &[0.0; 16], &[0.0; 16], 4, 4, 4).is_err());
+}
+
+#[test]
+fn jax_moe_layer_ref_matches_rust_reference() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let spec = rt.manifest().get("moe_layer_ref_small").unwrap().clone();
+    let (n, m) = (spec.inputs[0][0], spec.inputs[0][1]);
+    let e = spec.inputs[1][1];
+    let h = spec.inputs[2][2];
+    let cap = spec.meta.get("capacity").as_usize().unwrap();
+    let k = spec.meta.get("k").as_usize().unwrap();
+
+    let cfg = MoeLayerConfig {
+        par: ParallelDegrees { p: 1, n_mp: 1, n_esp: 1 },
+        b: 1,
+        l: n,
+        e,
+        m,
+        h,
+        k,
+        f: 64.0,
+        dtype_bytes: 4,
+    };
+    let w = GlobalWeights::random(&cfg, 5);
+    let mut rng = Rng::new(6);
+    let tokens = rng.f32_vec(n * m);
+
+    // Rust reference.
+    let y_rust =
+        reference_forward(&cfg, &w, &tokens, n, cap, &mut NativeBackend).unwrap();
+
+    // JAX reference through PJRT (w1/w2 stacked (E, M, H)/(E, H, M)).
+    let w1_stacked: Vec<f32> = w.w1.iter().flatten().cloned().collect();
+    let w2_stacked: Vec<f32> = w.w2.iter().flatten().cloned().collect();
+    let out = rt
+        .exec(
+            "moe_layer_ref_small",
+            &[
+                HostTensor::new(vec![n, m], tokens.clone()).unwrap(),
+                HostTensor::new(vec![m, e], w.wg.clone()).unwrap(),
+                HostTensor::new(vec![e, m, h], w1_stacked).unwrap(),
+                HostTensor::new(vec![e, h, m], w2_stacked).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_close(&out[0].data, &y_rust, 2e-3, "jax-vs-rust moe layer");
+}
+
+#[test]
+fn distributed_schedules_on_pjrt_backend_match_native() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = xlang_cfg();
+    let state = LayerState::random(&cfg, 21).unwrap();
+
+    for (kind, artifact) in [
+        (ScheduleKind::S1, "expert_ffn_40x8x8"),
+        (ScheduleKind::S2, "expert_ffn_40x8x8"),
+        (ScheduleKind::Baseline, "expert_ffn_80x8x8"),
+    ] {
+        let rt = Runtime::load(artifacts_dir()).unwrap();
+        let mut pjrt = PjrtExpertBackend::new(rt, artifact).unwrap();
+        let res_pjrt = run_schedule(kind, &state, &mut pjrt).unwrap();
+        let res_native = run_schedule(kind, &state, &mut NativeBackend).unwrap();
+        for r in 0..cfg.par.p {
+            assert_close(
+                &res_pjrt.outputs[r],
+                &res_native.outputs[r],
+                1e-4,
+                &format!("{kind:?} rank {r}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn executable_cache_reused() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let spec = rt.manifest().get("expert_ffn_40x8x8").unwrap().clone();
+    let inputs: Vec<HostTensor> = spec
+        .inputs
+        .iter()
+        .map(|s| HostTensor::zeros(s.clone()))
+        .collect();
+    rt.exec("expert_ffn_40x8x8", &inputs).unwrap();
+    assert_eq!(rt.cached(), 1);
+    rt.exec("expert_ffn_40x8x8", &inputs).unwrap();
+    assert_eq!(rt.cached(), 1); // compiled once
+}

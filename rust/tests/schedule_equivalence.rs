@@ -1,0 +1,113 @@
+//! Integration: the paper's implicit semantics-preservation theorem,
+//! property-tested across random layouts, shapes and seeds — Baseline,
+//! S1 and S2 must compute the same MoE layer function as the dense
+//! single-device reference whenever capacity is drop-free.
+
+use parm::config::moe::ParallelDegrees;
+use parm::config::MoeLayerConfig;
+use parm::moe::{reference_forward, run_schedule, LayerState, NativeBackend};
+use parm::schedule::ScheduleKind;
+use parm::util::propcheck::{assert_close, check};
+
+fn random_cfg(rng: &mut parm::util::prng::Rng) -> MoeLayerConfig {
+    let n_esp = *rng.choice(&[1usize, 2, 4]);
+    let n_ep = *rng.choice(&[2usize, 4]);
+    let p = n_ep * n_esp;
+    // N_MP must divide P (both are powers of two, so min() suffices).
+    let n_mp = (*rng.choice(&[1usize, 2, 4])).min(p);
+    let b = *rng.choice(&[1usize, 2]);
+    // B·L divisible by N_MP; keep shapes small enough to run hundreds of
+    // cases.
+    let l = n_mp * rng.range(4, 12);
+    let m = *rng.choice(&[4usize, 8, 12]);
+    let h = n_esp * rng.range(2, 6);
+    let e = n_ep * rng.range(1, 2); // e == n_ep or 2·n_ep
+    MoeLayerConfig {
+        par: ParallelDegrees { p, n_mp, n_esp },
+        b,
+        l,
+        e,
+        m,
+        h,
+        k: 2.min(e),
+        f: 64.0, // generous: drop-free
+        dtype_bytes: 4,
+    }
+}
+
+#[test]
+fn prop_schedules_equal_reference_across_layouts() {
+    check("schedules-equal-reference", 25, |rng| {
+        let cfg = random_cfg(rng);
+        cfg.validate().map_err(|e| format!("invalid cfg {cfg:?}: {e}"))?;
+        let state = LayerState::random(&cfg, rng.next_u64()).map_err(|e| e.to_string())?;
+        let mut backend = NativeBackend;
+        let cap_ref = cfg.tokens() * cfg.k;
+        for kind in [ScheduleKind::Baseline, ScheduleKind::S1, ScheduleKind::S2] {
+            let res = run_schedule(kind, &state, &mut backend).map_err(|e| e.to_string())?;
+            if res.dropped != 0 {
+                return Err(format!("{kind:?} dropped {} tokens", res.dropped));
+            }
+            for r in 0..cfg.par.p {
+                let reference = reference_forward(
+                    &cfg,
+                    &state.weights,
+                    &state.tokens[r],
+                    cfg.tokens(),
+                    cap_ref,
+                    &mut backend,
+                )
+                .map_err(|e| e.to_string())?;
+                assert_close(&res.outputs[r], &reference, 1e-4, 2e-3)
+                    .map_err(|e| format!("{kind:?} rank {r} cfg {}: {e}", cfg.id()))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mp_duplicates_stay_identical() {
+    // The MP invariant must hold at the layer output too: ranks of one MP
+    // group produce bitwise-identical outputs.
+    check("mp-outputs-identical", 15, |rng| {
+        let cfg = random_cfg(rng);
+        if cfg.par.n_mp == 1 {
+            return Ok(());
+        }
+        let state = LayerState::random(&cfg, rng.next_u64()).map_err(|e| e.to_string())?;
+        for kind in [ScheduleKind::Baseline, ScheduleKind::S1, ScheduleKind::S2] {
+            let res =
+                run_schedule(kind, &state, &mut NativeBackend).map_err(|e| e.to_string())?;
+            for r in 0..cfg.par.p {
+                let leader = (r / cfg.par.n_mp) * cfg.par.n_mp;
+                if res.outputs[r] != res.outputs[leader] {
+                    return Err(format!(
+                        "{kind:?}: rank {r} diverged from MP leader {leader} ({})",
+                        cfg.id()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn s2_aas_shares_s2_data_plane() {
+    let cfg = MoeLayerConfig {
+        par: ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 },
+        b: 1,
+        l: 16,
+        e: 4,
+        m: 8,
+        h: 16,
+        k: 2,
+        f: 8.0,
+        dtype_bytes: 4,
+    };
+    let state = LayerState::random(&cfg, 77).unwrap();
+    let a = run_schedule(ScheduleKind::S2, &state, &mut NativeBackend).unwrap();
+    let b = run_schedule(ScheduleKind::S2Aas, &state, &mut NativeBackend).unwrap();
+    assert_eq!(a.outputs, b.outputs);
+}

@@ -1,0 +1,151 @@
+//! Integration: paper-shape assertions over a slice of the Table III
+//! sweep — the qualitative claims of §VI-C must hold in the simulator.
+
+use parm::bench::{run_sweep, ModelCache};
+use parm::config::moe::ParallelDegrees;
+use parm::config::{sweep, ClusterProfile, MoeLayerConfig, SweepFilter};
+use parm::util::stats::mean;
+
+fn decimated(cluster: &ClusterProfile, step: usize) -> Vec<MoeLayerConfig> {
+    sweep::sweep_table3(cluster, SweepFilter::Feasible)
+        .into_iter()
+        .step_by(step)
+        .collect()
+}
+
+#[test]
+fn dedicated_schedules_always_beat_baseline() {
+    // §IV-B: "the S2 schedule is always better than the baseline" (and S1
+    // likewise) — checked across a decimated grid on both testbeds.
+    for cluster in [ClusterProfile::testbed_a(), ClusterProfile::testbed_b()] {
+        let configs = decimated(&cluster, 23);
+        assert!(configs.len() > 20, "decimation too aggressive");
+        let results = run_sweep(&configs, &cluster, false).unwrap();
+        for r in &results {
+            // With N_MP = N_ESP = 1 there is nothing to pause or fuse:
+            // the dedicated schedules degenerate to the baseline exactly
+            // (speedup = 1), so require strict improvement only when at
+            // least one dimension is active.
+            let degenerate = r.cfg.par.n_mp == 1 && r.cfg.par.n_esp == 1;
+            let floor = if degenerate { 0.999 } else { 1.0 };
+            assert!(
+                r.speedup_s1() >= floor,
+                "S1 slower than baseline at {} on {} ({:.3}×)",
+                r.cfg.id(),
+                cluster.name,
+                r.speedup_s1()
+            );
+            assert!(
+                r.speedup_s2() >= floor,
+                "S2 slower than baseline at {} on {} ({:.3}×)",
+                r.cfg.id(),
+                cluster.name,
+                r.speedup_s2()
+            );
+        }
+    }
+}
+
+#[test]
+fn speedups_grow_with_mp_and_esp() {
+    // Table IV trend: larger N_MP / N_ESP ⇒ larger average speedup.
+    let cluster = ClusterProfile::testbed_b();
+    let configs = decimated(&cluster, 11);
+    let results = run_sweep(&configs, &cluster, false).unwrap();
+    let avg = |n_mp: usize| {
+        let v: Vec<f64> = results
+            .iter()
+            .filter(|r| r.cfg.par.n_mp == n_mp && r.cfg.par.n_esp >= 2)
+            .map(|r| r.speedup_parm())
+            .collect();
+        mean(&v)
+    };
+    assert!(avg(4) > avg(2), "mp4 {} !> mp2 {}", avg(4), avg(2));
+    assert!(avg(2) > avg(1), "mp2 {} !> mp1 {}", avg(2), avg(1));
+}
+
+#[test]
+fn comm_ratio_dominates_at_scale() {
+    // Fig 1: 32-GPU baseline comm ratios live in the paper's 60–100%
+    // band for the bulk of configs.
+    let cluster = ClusterProfile::testbed_b();
+    let configs: Vec<MoeLayerConfig> = sweep::sweep_at_p(&cluster, 32, SweepFilter::Feasible)
+        .into_iter()
+        .step_by(17)
+        .collect();
+    let results = run_sweep(&configs, &cluster, false).unwrap();
+    let ratios: Vec<f64> = results.iter().map(|r| r.comm_ratio_baseline).collect();
+    assert!(mean(&ratios) > 0.6, "mean comm ratio {}", mean(&ratios));
+    assert!(ratios.iter().all(|&r| r > 0.3 && r <= 1.0));
+}
+
+#[test]
+fn parm_never_much_worse_than_best() {
+    // Algorithm 1's pick must track min(S1, S2) with bounded regret.
+    let cluster = ClusterProfile::testbed_b();
+    let configs = decimated(&cluster, 19);
+    let results = run_sweep(&configs, &cluster, false).unwrap();
+    for r in &results {
+        let best = r.t_s1.min(r.t_s2);
+        let regret = (r.t_parm() - best) / best;
+        assert!(
+            regret < 0.35,
+            "regret {:.0}% at {} (t1={}, t2={}, chose {:?})",
+            regret * 100.0,
+            r.cfg.id(),
+            r.t_s1,
+            r.t_s2,
+            r.parm_choice
+        );
+    }
+}
+
+#[test]
+fn saa_helps_on_average() {
+    // §VI-C: S2-with-SAA ≥ S2-with-AAS on average (~1% in the paper).
+    let cluster = ClusterProfile::testbed_b();
+    let configs: Vec<MoeLayerConfig> = decimated(&cluster, 13)
+        .into_iter()
+        .filter(|c| c.par.n_mp >= 2)
+        .collect();
+    let results = run_sweep(&configs, &cluster, false).unwrap();
+    let gains: Vec<f64> = results
+        .iter()
+        .map(|r| (r.t_s2_aas - r.t_s2) / r.t_s2_aas)
+        .collect();
+    assert!(
+        mean(&gains) > -0.01,
+        "SAA should not hurt on average: {}",
+        mean(&gains)
+    );
+}
+
+#[test]
+fn model_cache_covers_all_layouts() {
+    let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+    let configs = decimated(&cluster, 29);
+    let mut cache = ModelCache::default();
+    for c in &configs {
+        cache.get(&cluster, c.par).unwrap();
+    }
+    let layouts: std::collections::BTreeSet<(usize, usize, usize)> = configs
+        .iter()
+        .map(|c| (c.par.p, c.par.n_mp, c.par.n_esp))
+        .collect();
+    assert_eq!(cache.len(), layouts.len());
+}
+
+#[test]
+fn table3_grid_counts_are_plausible() {
+    // The paper reports 1296 valid runnable cases across its testbeds; our
+    // feasibility filter should land in the same order of magnitude.
+    let b_all = sweep::sweep_table3(&ClusterProfile::testbed_b(), SweepFilter::All).len();
+    let a = sweep::sweep_table3(&ClusterProfile::testbed_a(), SweepFilter::Feasible).len();
+    let b = sweep::sweep_table3(&ClusterProfile::testbed_b(), SweepFilter::Feasible).len();
+    let p = ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 };
+    p.validate().unwrap();
+    println!("feasible: A={a} B={b} (B unfiltered: {b_all})");
+    assert!(a + b > 400, "grid too small: A={a} B={b}");
+    assert!(b < b_all, "11 GB filter removed nothing: B={b} of {b_all}");
+    assert!(a + b < 6000, "counts out of range: A={a} B={b}");
+}

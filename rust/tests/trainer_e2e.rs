@@ -1,0 +1,61 @@
+//! Integration: a short end-to-end training run through the PJRT
+//! artifact (the full e2e run is examples/train_moe_lm.rs; this keeps CI
+//! to a couple of steps).
+
+use std::path::PathBuf;
+
+use parm::train::{train_lm, SyntheticCorpus, TrainOptions};
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn two_steps_execute_and_losses_are_sane() {
+    if !artifacts().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let opts = TrainOptions {
+        artifacts_dir: artifacts(),
+        steps: 2,
+        lr: 0.05,
+        seed: 7,
+        log_every: 1,
+        log_path: None,
+        reset_every: 12,
+    };
+    let report = train_lm(&opts).unwrap();
+    assert_eq!(report.losses.len(), 2);
+    assert!(report.param_count > 100_000_000);
+    for &(_, loss) in &report.losses {
+        // Initial loss ≈ ln(vocab) = ln(8192) ≈ 9.0; anything in (0, 12)
+        // is sane for the first steps.
+        assert!(loss.is_finite() && loss > 0.0 && loss < 12.0, "loss {loss}");
+    }
+}
+
+#[test]
+fn training_is_deterministic_per_seed() {
+    if !artifacts().join("manifest.json").exists() {
+        return;
+    }
+    let opts = TrainOptions {
+        artifacts_dir: artifacts(),
+        steps: 1,
+        lr: 0.05,
+        seed: 11,
+        log_every: 1,
+        log_path: None,
+        reset_every: 12,
+    };
+    let a = train_lm(&opts).unwrap();
+    let b = train_lm(&opts).unwrap();
+    assert_eq!(a.losses, b.losses);
+}
+
+#[test]
+fn corpus_floor_below_initial_loss() {
+    let c = SyntheticCorpus::new(8192, 1);
+    assert!(c.entropy_floor() < 2.0);
+}
