@@ -1,14 +1,11 @@
-//! `cargo bench --bench fig1_comm_ratio` — regenerates the paper's fig1
-//! artifact via the shared harness (see parm::bench::paper::fig1 and
-//! DESIGN.md §Experiment index). Reports land in reports/.
+//! `cargo bench --bench fig1_comm_ratio` — regenerates this paper artifact via the
+//! shared paper-bench harness (one-call stub; see
+//! `parm::util::benchmark::run_paper_bench`).
 
 fn main() -> anyhow::Result<()> {
-    // cargo passes --bench; our harness-free binaries ignore flags.
-    parm::util::benchmark::bench_header(
+    parm::util::benchmark::run_paper_bench(
         "fig1_comm_ratio",
         "parm::bench::paper::fig1 (see DESIGN.md experiment index)",
-    );
-    let out = parm::bench::paper::fig1(std::path::Path::new("reports"))?;
-    println!("{out}");
-    Ok(())
+        parm::bench::paper::fig1,
+    )
 }

@@ -1,14 +1,11 @@
-//! `cargo bench --bench fig6_perf_model` — regenerates the paper's fig6
-//! artifact via the shared harness (see parm::bench::paper::fig6 and
-//! DESIGN.md §Experiment index). Reports land in reports/.
+//! `cargo bench --bench fig6_perf_model` — regenerates this paper artifact via the
+//! shared paper-bench harness (one-call stub; see
+//! `parm::util::benchmark::run_paper_bench`).
 
 fn main() -> anyhow::Result<()> {
-    // cargo passes --bench; our harness-free binaries ignore flags.
-    parm::util::benchmark::bench_header(
+    parm::util::benchmark::run_paper_bench(
         "fig6_perf_model",
         "parm::bench::paper::fig6 (see DESIGN.md experiment index)",
-    );
-    let out = parm::bench::paper::fig6(std::path::Path::new("reports"))?;
-    println!("{out}");
-    Ok(())
+        parm::bench::paper::fig6,
+    )
 }

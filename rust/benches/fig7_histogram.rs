@@ -1,14 +1,11 @@
-//! `cargo bench --bench fig7_histogram` — regenerates the paper's fig7
-//! artifact via the shared harness (see parm::bench::paper::fig7 and
-//! DESIGN.md §Experiment index). Reports land in reports/.
+//! `cargo bench --bench fig7_histogram` — regenerates this paper artifact via the
+//! shared paper-bench harness (one-call stub; see
+//! `parm::util::benchmark::run_paper_bench`).
 
 fn main() -> anyhow::Result<()> {
-    // cargo passes --bench; our harness-free binaries ignore flags.
-    parm::util::benchmark::bench_header(
+    parm::util::benchmark::run_paper_bench(
         "fig7_histogram",
         "parm::bench::paper::fig7 (see DESIGN.md experiment index)",
-    );
-    let out = parm::bench::paper::fig7(std::path::Path::new("reports"))?;
-    println!("{out}");
-    Ok(())
+        parm::bench::paper::fig7,
+    )
 }

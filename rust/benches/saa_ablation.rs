@@ -1,14 +1,11 @@
-//! `cargo bench --bench saa_ablation` — regenerates the paper's saa
-//! artifact via the shared harness (see parm::bench::paper::saa_ablation and
-//! DESIGN.md §Experiment index). Reports land in reports/.
+//! `cargo bench --bench saa_ablation` — regenerates this paper artifact via the
+//! shared paper-bench harness (one-call stub; see
+//! `parm::util::benchmark::run_paper_bench`).
 
 fn main() -> anyhow::Result<()> {
-    // cargo passes --bench; our harness-free binaries ignore flags.
-    parm::util::benchmark::bench_header(
+    parm::util::benchmark::run_paper_bench(
         "saa_ablation",
         "parm::bench::paper::saa_ablation (see DESIGN.md experiment index)",
-    );
-    let out = parm::bench::paper::saa_ablation(std::path::Path::new("reports"))?;
-    println!("{out}");
-    Ok(())
+        parm::bench::paper::saa_ablation,
+    )
 }

@@ -1,14 +1,11 @@
-//! `cargo bench --bench selection_accuracy` — regenerates the paper's selection
-//! artifact via the shared harness (see parm::bench::paper::selection_accuracy and
-//! DESIGN.md §Experiment index). Reports land in reports/.
+//! `cargo bench --bench selection_accuracy` — regenerates this paper artifact via the
+//! shared paper-bench harness (one-call stub; see
+//! `parm::util::benchmark::run_paper_bench`).
 
 fn main() -> anyhow::Result<()> {
-    // cargo passes --bench; our harness-free binaries ignore flags.
-    parm::util::benchmark::bench_header(
+    parm::util::benchmark::run_paper_bench(
         "selection_accuracy",
         "parm::bench::paper::selection_accuracy (see DESIGN.md experiment index)",
-    );
-    let out = parm::bench::paper::selection_accuracy(std::path::Path::new("reports"))?;
-    println!("{out}");
-    Ok(())
+        parm::bench::paper::selection_accuracy,
+    )
 }

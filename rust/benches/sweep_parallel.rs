@@ -1,0 +1,60 @@
+//! `cargo bench --bench sweep_parallel` — scaling of the Table III sweep
+//! runner across `std::thread::scope` workers. Asserts that the parallel
+//! runner's output is byte-identical to the sequential runner's (ordering
+//! and contents) and reports the wall-clock speedup per thread count —
+//! the number that makes the paper's 1296-case sweep and the Algorithm-1
+//! selection-accuracy runs scale with cores.
+
+use std::time::Instant;
+
+use parm::bench::run_sweep_with_threads;
+use parm::config::{sweep, ClusterProfile, SweepFilter};
+use parm::util::benchmark::bench_header;
+
+fn main() -> anyhow::Result<()> {
+    bench_header(
+        "sweep_parallel",
+        "parm::bench::runner::run_sweep_with_threads (thread scaling; deterministic output)",
+    );
+    let cluster = ClusterProfile::testbed_b_subset(8)?;
+    let step = if std::env::var("PARM_BENCH_FAST").is_ok() { 11 } else { 3 };
+    let configs: Vec<_> = sweep::sweep_table3(&cluster, SweepFilter::Feasible)
+        .into_iter()
+        .step_by(step)
+        .collect();
+    println!("{} cases on {}\n", configs.len(), cluster.name);
+
+    let t0 = Instant::now();
+    let seq = run_sweep_with_threads(&configs, &cluster, false, 1)?;
+    let t_seq = t0.elapsed().as_secs_f64();
+    println!("{:>8} thread   {:>8.2}s   1.00x", 1, t_seq);
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut widths = vec![2usize, 4];
+    if cores > 4 {
+        widths.push(cores);
+    }
+    for threads in widths {
+        let t0 = Instant::now();
+        let par = run_sweep_with_threads(&configs, &cluster, false, threads)?;
+        let t_par = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            format!("{seq:?}"),
+            format!("{par:?}"),
+            "parallel sweep diverged from sequential at {threads} threads"
+        );
+        println!("{threads:>8} threads  {t_par:>8.2}s   {:.2}x", t_seq / t_par);
+        // Only enforce the speedup where it is meaningful: a real workload
+        // (full, non-decimated-to-nothing grid) on a machine with the
+        // cores to show it. Tiny/FAST runs and loaded machines still get
+        // the printed scaling numbers without aborting the bench.
+        if threads >= 4 && cores >= 4 && step == 3 && configs.len() >= 100 {
+            assert!(
+                t_par < t_seq,
+                "sweep on {threads} threads ({t_par:.2}s) should beat sequential ({t_seq:.2}s)"
+            );
+        }
+    }
+    println!("\noutput verified byte-identical across all thread counts");
+    Ok(())
+}

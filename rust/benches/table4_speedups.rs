@@ -1,14 +1,11 @@
-//! `cargo bench --bench table4_speedups` — regenerates the paper's table4
-//! artifact via the shared harness (see parm::bench::paper::table4 and
-//! DESIGN.md §Experiment index). Reports land in reports/.
+//! `cargo bench --bench table4_speedups` — regenerates this paper artifact via the
+//! shared paper-bench harness (one-call stub; see
+//! `parm::util::benchmark::run_paper_bench`).
 
 fn main() -> anyhow::Result<()> {
-    // cargo passes --bench; our harness-free binaries ignore flags.
-    parm::util::benchmark::bench_header(
+    parm::util::benchmark::run_paper_bench(
         "table4_speedups",
         "parm::bench::paper::table4 (see DESIGN.md experiment index)",
-    );
-    let out = parm::bench::paper::table4(std::path::Path::new("reports"))?;
-    println!("{out}");
-    Ok(())
+        parm::bench::paper::table4,
+    )
 }

@@ -207,7 +207,7 @@ pub fn table5(reports: &Path) -> Result<String> {
         "Base Model", "Testbed", "DeepSpeed-MoE (ms)", "Parm (ms)", "Speedup",
     ])
     .numeric();
-    let mut cache = runner::ModelCache::default();
+    let cache = runner::ModelCache::default();
     for (model_ctor, label) in [
         (&ModelConfig::bert_base_moe as &dyn Fn(usize) -> ModelConfig, "BERT-Base"),
         (&ModelConfig::gpt2_moe, "GPT-2"),
@@ -220,7 +220,7 @@ pub fn table5(reports: &Path) -> Result<String> {
             let par = ParallelDegrees { p: cluster.total_gpus(), n_mp: 4, n_esp: 4 };
             let layer = model.moe_layer(par);
             let pm = cache.get(&cluster, par)?;
-            let choice = crate::perfmodel::choose_schedule(pm, &layer);
+            let choice = crate::perfmodel::choose_schedule(&pm, &layer);
             let base =
                 model_iteration_time(&model, par, &cluster, ScheduleKind::Baseline)?;
             let parm = model_iteration_time(&model, par, &cluster, choice)?;

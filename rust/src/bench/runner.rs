@@ -1,8 +1,18 @@
 //! Sweep runner: simulate every schedule over a set of MoE layer
 //! configurations, with the α-β model (for Parm's choice) fitted once per
 //! parallel layout.
+//!
+//! The sweep parallelizes across `std::thread::scope` workers: each case
+//! is an independent deterministic simulation, so workers pull case
+//! indices from a shared atomic counter and write into per-index slots —
+//! the result vector is byte-identical to the sequential runner's,
+//! config-ordered, regardless of thread count or interleaving. The α-β
+//! model cache is shared (mutex-guarded map; fitting happens outside the
+//! lock, first insert wins).
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use anyhow::Result;
 
@@ -47,32 +57,33 @@ impl CaseResult {
 }
 
 /// Per-layout α-β model cache (fitting is itself a simulation sweep, so
-/// reuse across the hundreds of grid rows sharing a layout).
+/// reuse across the hundreds of grid rows sharing a layout). Thread-safe:
+/// shared by the sweep workers.
 #[derive(Default)]
 pub struct ModelCache {
-    map: BTreeMap<(String, usize, usize, usize), PerfModel>,
+    map: Mutex<BTreeMap<(String, usize, usize, usize), PerfModel>>,
 }
 
 impl ModelCache {
-    pub fn get(
-        &mut self,
-        cluster: &ClusterProfile,
-        par: ParallelDegrees,
-    ) -> Result<&PerfModel> {
+    /// Fetch (or fit) the model for a layout. Fitting runs outside the
+    /// lock — two workers may race to fit the same layout; the first
+    /// insert wins and the fit is deterministic, so both see equal models.
+    pub fn get(&self, cluster: &ClusterProfile, par: ParallelDegrees) -> Result<PerfModel> {
         let key = (cluster.name.clone(), par.p, par.n_mp, par.n_esp);
-        if !self.map.contains_key(&key) {
-            let m = PerfModel::fit(cluster, par)?;
-            self.map.insert(key.clone(), m);
+        if let Some(m) = self.map.lock().unwrap().get(&key) {
+            return Ok(m.clone());
         }
-        Ok(&self.map[&key])
+        let fitted = PerfModel::fit(cluster, par)?;
+        let mut map = self.map.lock().unwrap();
+        Ok(map.entry(key).or_insert(fitted).clone())
     }
 
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.map.lock().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.len() == 0
     }
 }
 
@@ -80,14 +91,14 @@ impl ModelCache {
 pub fn run_case(
     cfg: &MoeLayerConfig,
     cluster: &ClusterProfile,
-    cache: &mut ModelCache,
+    cache: &ModelCache,
 ) -> Result<CaseResult> {
     let base = lowering::simulate_iteration(ScheduleKind::Baseline, cfg, cluster)?;
     let t_s1 = lowering::simulate_iteration(ScheduleKind::S1, cfg, cluster)?.makespan;
     let t_s2 = lowering::simulate_iteration(ScheduleKind::S2, cfg, cluster)?.makespan;
     let t_s2_aas = lowering::simulate_iteration(ScheduleKind::S2Aas, cfg, cluster)?.makespan;
     let model = cache.get(cluster, cfg.par)?;
-    let parm_choice = choose_schedule(model, cfg);
+    let parm_choice = choose_schedule(&model, cfg);
     Ok(CaseResult {
         cfg: cfg.clone(),
         t_baseline: base.makespan,
@@ -99,22 +110,64 @@ pub fn run_case(
     })
 }
 
-/// Run the whole sweep (progress printed every ~10%).
+/// Run the whole sweep across all available cores (progress printed every
+/// ~10% when `verbose`). Output order is config order — identical to the
+/// sequential runner's.
 pub fn run_sweep(
     configs: &[MoeLayerConfig],
     cluster: &ClusterProfile,
     verbose: bool,
 ) -> Result<Vec<CaseResult>> {
-    let mut cache = ModelCache::default();
-    let mut out = Vec::with_capacity(configs.len());
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    run_sweep_with_threads(configs, cluster, verbose, threads)
+}
+
+/// Run the sweep on exactly `threads` workers (1 = sequential).
+pub fn run_sweep_with_threads(
+    configs: &[MoeLayerConfig],
+    cluster: &ClusterProfile,
+    verbose: bool,
+    threads: usize,
+) -> Result<Vec<CaseResult>> {
+    let cache = ModelCache::default();
     let tick = (configs.len() / 10).max(1);
-    for (i, cfg) in configs.iter().enumerate() {
-        out.push(run_case(cfg, cluster, &mut cache)?);
-        if verbose && (i + 1) % tick == 0 {
-            eprintln!("  sweep {}/{} on {}", i + 1, configs.len(), cluster.name);
+    let threads = threads.clamp(1, configs.len().max(1));
+
+    if threads <= 1 {
+        let mut out = Vec::with_capacity(configs.len());
+        for (i, cfg) in configs.iter().enumerate() {
+            out.push(run_case(cfg, cluster, &cache)?);
+            if verbose && (i + 1) % tick == 0 {
+                eprintln!("  sweep {}/{} on {}", i + 1, configs.len(), cluster.name);
+            }
         }
+        return Ok(out);
     }
-    Ok(out)
+
+    let next = AtomicUsize::new(0);
+    let done = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<CaseResult>>>> =
+        (0..configs.len()).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= configs.len() {
+                    break;
+                }
+                let r = run_case(&configs[i], cluster, &cache);
+                *slots[i].lock().unwrap() = Some(r);
+                let d = done.fetch_add(1, Ordering::Relaxed) + 1;
+                if verbose && d % tick == 0 {
+                    eprintln!("  sweep {}/{} on {}", d, configs.len(), cluster.name);
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every claimed case completes"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -138,8 +191,8 @@ mod tests {
     #[test]
     fn case_speedups_exceed_one() {
         let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
-        let mut cache = ModelCache::default();
-        let r = run_case(&cfg(8, 2, 2), &cluster, &mut cache).unwrap();
+        let cache = ModelCache::default();
+        let r = run_case(&cfg(8, 2, 2), &cluster, &cache).unwrap();
         assert!(r.speedup_s1() > 1.0, "{r:?}");
         assert!(r.speedup_s2() > 1.0, "{r:?}");
         assert!(r.speedup_parm() >= r.speedup_s1().min(r.speedup_s2()));
@@ -149,9 +202,9 @@ mod tests {
     #[test]
     fn model_cache_reused() {
         let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
-        let mut cache = ModelCache::default();
-        run_case(&cfg(8, 2, 2), &cluster, &mut cache).unwrap();
-        run_case(&cfg(8, 2, 2), &cluster, &mut cache).unwrap();
+        let cache = ModelCache::default();
+        run_case(&cfg(8, 2, 2), &cluster, &cache).unwrap();
+        run_case(&cfg(8, 2, 2), &cluster, &cache).unwrap();
         assert_eq!(cache.len(), 1);
     }
 
@@ -161,5 +214,20 @@ mod tests {
         let configs = vec![cfg(8, 2, 2), cfg(8, 4, 2), cfg(8, 1, 2)];
         let res = run_sweep(&configs, &cluster, false).unwrap();
         assert_eq!(res.len(), 3);
+    }
+
+    #[test]
+    fn parallel_sweep_matches_sequential_byte_for_byte() {
+        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let configs = vec![cfg(8, 2, 2), cfg(8, 4, 2), cfg(8, 1, 2), cfg(8, 2, 4), cfg(8, 4, 4)];
+        let seq = run_sweep_with_threads(&configs, &cluster, false, 1).unwrap();
+        for threads in [2usize, 4] {
+            let par = run_sweep_with_threads(&configs, &cluster, false, threads).unwrap();
+            assert_eq!(
+                format!("{seq:?}"),
+                format!("{par:?}"),
+                "parallel sweep diverged at {threads} threads"
+            );
+        }
     }
 }

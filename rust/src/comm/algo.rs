@@ -1,0 +1,482 @@
+//! The ONE source of every collective algorithm, generic over
+//! [`Transport`].
+//!
+//! Ring AllGather, ring ReduceScatter, AllReduce (RS ∘ AG), the pairwise
+//! AlltoAll (which is also Parm's fused EP&ESP-AlltoAll when run over the
+//! product group, §III-C), and the SAA/AAS overlapped combine (§III-D,
+//! Fig 5) are each written exactly once here. Instantiated with
+//! [`crate::comm::transport::DagTransport`] they emit the transfer DAGs the
+//! discrete-event engine times; with
+//! [`crate::comm::transport::DataTransport`] they move real `f32` chunks —
+//! identical per-tag wire volumes on both planes by construction.
+//!
+//! Algorithms match what NCCL uses on the paper's testbeds (no
+//! NVLink/NVSwitch): **ring** AllGather / ReduceScatter (AllReduce as
+//! RS ∘ AG, [21,22]) and **pairwise-exchange** AlltoAll. Each returns one
+//! completion handle per group member (group order), so schedules can
+//! chain per-rank dependencies without global barriers.
+//!
+//! Payloads are opaque [`Chunk`] values: the algorithms never inspect
+//! sizes, so uneven chunk partitions work wherever the collective's
+//! semantics allow them.
+
+use super::transport::{Chunk, Transport};
+
+/// If a group has one member, a collective is a no-op; we still emit a join
+/// so callers always get a dependable handle per member.
+fn singleton<T: Transport>(t: &mut T, deps: &[T::Handle], tag: &'static str) -> Vec<T::Handle> {
+    vec![t.join(deps, tag)]
+}
+
+/// Ring AllGather: `g-1` steps; at step `s`, member `i` forwards the chunk
+/// it received at step `s-1` (initially its own, `inputs[i]`) to member
+/// `i+1`. Every member ends with all chunks; member `j`'s output is
+/// `inputs` in group order. Completion of member `i` = its final receive.
+pub fn ring_allgather<T: Transport>(
+    t: &mut T,
+    group: &[usize],
+    inputs: &[T::Chunk],
+    deps: &[T::Handle],
+    tag: &'static str,
+) -> (Vec<Vec<T::Chunk>>, Vec<T::Handle>) {
+    let g = group.len();
+    assert_eq!(inputs.len(), g, "one input chunk per group member");
+    let outputs: Vec<Vec<T::Chunk>> = (0..g).map(|_| inputs.to_vec()).collect();
+    if g == 1 {
+        return (outputs, singleton(t, deps, tag));
+    }
+    let mut prev: Vec<T::Handle> = Vec::new();
+    let mut last_recv: Vec<Option<T::Handle>> = vec![None; g];
+    for s in 0..g - 1 {
+        let mut cur = Vec::with_capacity(g);
+        for i in 0..g {
+            let dst = (i + 1) % g;
+            let dep: Vec<T::Handle> = if s == 0 {
+                deps.to_vec()
+            } else {
+                vec![prev[(i + g - 1) % g].clone()]
+            };
+            // The chunk member i holds for forwarding at step s originated
+            // at member (i - s) mod g.
+            let h = t.send(group[i], group[dst], &inputs[(i + g - s) % g], &dep, tag);
+            last_recv[dst] = Some(h.clone());
+            cur.push(h);
+        }
+        prev = cur;
+    }
+    let done = last_recv.into_iter().map(|h| h.expect("every member receives")).collect();
+    (outputs, done)
+}
+
+/// Ring ReduceScatter: same ring pattern; `inputs[i]` is member `i`'s `g`
+/// chunks. At step `s` member `i` forwards the partial of chunk
+/// `(i - s - 1) mod g`; the receiver folds in its own contribution. After
+/// `g-1` steps member `j` holds the fully-reduced chunk `j`. Completion of
+/// member `j` = receive of its fully-reduced chunk.
+pub fn ring_reduce_scatter<T: Transport>(
+    t: &mut T,
+    group: &[usize],
+    inputs: &[Vec<T::Chunk>],
+    deps: &[T::Handle],
+    tag: &'static str,
+) -> (Vec<T::Chunk>, Vec<T::Handle>) {
+    let g = group.len();
+    assert_eq!(inputs.len(), g, "one chunk list per group member");
+    assert!(inputs.iter().all(|c| c.len() == g), "g chunks per member");
+    if g == 1 {
+        return (vec![inputs[0][0].clone()], singleton(t, deps, tag));
+    }
+    // partial[i] = the accumulated chunk member i forwards next.
+    let mut partial: Vec<T::Chunk> = (0..g).map(|i| inputs[i][(i + g - 1) % g].clone()).collect();
+    let mut prev: Vec<T::Handle> = Vec::new();
+    let mut reduced: Vec<Option<T::Chunk>> = vec![None; g];
+    let mut done: Vec<Option<T::Handle>> = vec![None; g];
+    for s in 0..g - 1 {
+        let mut cur = Vec::with_capacity(g);
+        let mut next_partial: Vec<Option<T::Chunk>> = vec![None; g];
+        for i in 0..g {
+            let dst = (i + 1) % g;
+            let dep: Vec<T::Handle> = if s == 0 {
+                deps.to_vec()
+            } else {
+                vec![prev[(i + g - 1) % g].clone()]
+            };
+            let h = t.send(group[i], group[dst], &partial[i], &dep, tag);
+            // Chunk id travelling on this edge; the receiver folds in its
+            // own contribution before forwarding (or keeping) it.
+            let j = (i + g - 1 - s) % g;
+            let mut acc = partial[i].clone();
+            acc.reduce_add(&inputs[dst][j]);
+            if s == g - 2 {
+                reduced[dst] = Some(acc);
+                done[dst] = Some(h.clone());
+            } else {
+                next_partial[dst] = Some(acc);
+            }
+            cur.push(h);
+        }
+        if s < g - 2 {
+            partial = next_partial.into_iter().map(|c| c.expect("ring covers all")).collect();
+        }
+        prev = cur;
+    }
+    (
+        reduced.into_iter().map(|c| c.expect("every member reduced")).collect(),
+        done.into_iter().map(|h| h.expect("every member receives")).collect(),
+    )
+}
+
+/// AllReduce = ReduceScatter ∘ AllGather over each member's `g` chunks.
+/// Member `j` ends with all `g` reduced chunks (group order — concatenate
+/// for the full sum). The RS completions fan in through a join before the
+/// AG phase (the RS chunks all complete within α of each other on a ring,
+/// so the join loses nothing material).
+pub fn ring_allreduce<T: Transport>(
+    t: &mut T,
+    group: &[usize],
+    inputs: &[Vec<T::Chunk>],
+    deps: &[T::Handle],
+    tag: &'static str,
+) -> (Vec<Vec<T::Chunk>>, Vec<T::Handle>) {
+    let (reduced, rs_done) = ring_reduce_scatter(t, group, inputs, deps, tag);
+    let j = t.join(&rs_done, tag);
+    ring_allgather(t, group, &reduced, &[j], tag)
+}
+
+/// Pairwise-exchange AlltoAll: rounds `r = 1..g-1`; in round `r` member `i`
+/// sends `inputs[i][(i+r) mod g]` to member `(i+r) mod g`. Member `j` ends
+/// with `outputs[j][i] = inputs[i][j]` (its own chunk never touches the
+/// wire). Completion per member: all its sends and receives done.
+///
+/// Sends are chained per *(sender, link class)* via
+/// [`Transport::same_node`]: a sender's intra-node sends form one queue and
+/// its inter-node sends another, progressing concurrently (NCCL uses
+/// distinct channels for P2P over PCIe vs the NIC). This is the property
+/// §III-C's fused EP&ESP-AlltoAll exploits — intra-node ESP traffic
+/// proceeds while inter-node EP traffic drains.
+pub fn pairwise_alltoall<T: Transport>(
+    t: &mut T,
+    group: &[usize],
+    inputs: &[Vec<T::Chunk>],
+    deps: &[T::Handle],
+    tag: &'static str,
+) -> (Vec<Vec<T::Chunk>>, Vec<T::Handle>) {
+    let g = group.len();
+    assert_eq!(inputs.len(), g, "one chunk list per group member");
+    assert!(inputs.iter().all(|c| c.len() == g), "g chunks per member");
+    let outputs: Vec<Vec<T::Chunk>> =
+        (0..g).map(|j| (0..g).map(|i| inputs[i][j].clone()).collect()).collect();
+    if g == 1 {
+        return (outputs, singleton(t, deps, tag));
+    }
+    let mut prev_intra: Vec<Option<T::Handle>> = vec![None; g];
+    let mut prev_inter: Vec<Option<T::Handle>> = vec![None; g];
+    let mut incident: Vec<Vec<T::Handle>> = vec![Vec::new(); g];
+    for r in 1..g {
+        for i in 0..g {
+            let dst = (i + r) % g;
+            let intra = t.same_node(group[i], group[dst]);
+            let prev = if intra { &mut prev_intra } else { &mut prev_inter };
+            let dep: Vec<T::Handle> = match &prev[i] {
+                None => deps.to_vec(),
+                Some(h) => vec![h.clone()],
+            };
+            let h = t.send(group[i], group[dst], &inputs[i][dst], &dep, tag);
+            prev[i] = Some(h.clone());
+            incident[i].push(h.clone());
+            incident[dst].push(h);
+        }
+    }
+    let done = (0..g).map(|i| t.join(&incident[i], tag)).collect();
+    (outputs, done)
+}
+
+/// Number of SAA phases: the AlltoAll's rounds are grouped into at most
+/// this many phases; each member forwards one *accumulated* block to its
+/// MP peers per phase (Fig 5's phase granularity). Coarsening keeps the
+/// per-message α cost of the forwards at ring-AllGather scale instead of
+/// paying α on every slice.
+pub const SAA_PHASES: usize = 4;
+
+/// Forward `block` (an accumulated slice block held by `a2a_group[i]`,
+/// ready after `ready`) to `i`'s MP peers.
+#[allow(clippy::too_many_arguments)]
+fn saa_forward<T: Transport>(
+    t: &mut T,
+    a2a_group: &[usize],
+    mp_groups: &[Vec<usize>],
+    incident: &mut [Vec<T::Handle>],
+    i: usize,
+    block: &[T::Chunk],
+    ready: &[T::Handle],
+    tag_ag: &'static str,
+) {
+    if block.is_empty() {
+        return;
+    }
+    let me = a2a_group[i];
+    let grp = mp_groups
+        .iter()
+        .find(|grp| grp.contains(&me))
+        .expect("rank missing from mp partition");
+    let payload = T::Chunk::concat(block);
+    for &peer in grp {
+        if peer == me {
+            continue;
+        }
+        let h = t.send(me, peer, &payload, ready, tag_ag);
+        incident[i].push(h.clone());
+        if let Some(pi) = a2a_group.iter().position(|&x| x == peer) {
+            incident[pi].push(h);
+        }
+    }
+}
+
+/// SAA — Simultaneous AlltoAll and AllGather (§III-D, Fig 5): the pairwise
+/// AlltoAll over `a2a_group` immediately composed with an AllGather of each
+/// member's AlltoAll output within its `mp_groups` partition.
+///
+/// With `overlap = true`, the AlltoAll's rounds are grouped into at most
+/// [`SAA_PHASES`] phases; when member `i` has received every slice of a
+/// phase (its own slice counts toward the first), it forwards the
+/// accumulated block to each MP peer. Forwards depend only on that phase's
+/// receives — they run concurrently with the next phase's AlltoAll rounds
+/// (distinct link classes when MP is intra-node and the AlltoAll is
+/// inter-node dominant). With `overlap = false` this is AAS, the §VI-C
+/// ablation: AlltoAll to completion, then a ring MP-AllGather of the full
+/// output. SAA also degrades to AAS when the whole group shares one node —
+/// there is no second link class, so the phased forwards would only contend
+/// with the AlltoAll on the same ports.
+///
+/// Returns per member of `a2a_group`: its AllGather result as one chunk
+/// list per MP peer (MP-group order; each peer's list is that peer's
+/// AlltoAll output in source order), plus one completion handle.
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
+pub fn saa<T: Transport>(
+    t: &mut T,
+    a2a_group: &[usize],
+    mp_groups: &[Vec<usize>],
+    inputs: &[Vec<T::Chunk>],
+    deps: &[T::Handle],
+    tag_a2a: &'static str,
+    tag_ag: &'static str,
+    overlap: bool,
+) -> (Vec<Vec<Vec<T::Chunk>>>, Vec<T::Handle>) {
+    let g = a2a_group.len();
+    assert!(g > 0, "empty a2a group");
+    assert_eq!(inputs.len(), g, "one chunk list per group member");
+    assert!(inputs.iter().all(|c| c.len() == g), "g chunks per member");
+
+    // a2a_out[j] = member j's AlltoAll output, in source order.
+    let a2a_out: Vec<Vec<T::Chunk>> =
+        (0..g).map(|j| (0..g).map(|i| inputs[i][j].clone()).collect()).collect();
+    // Final value per member: each MP peer's AlltoAll output.
+    let outputs: Vec<Vec<Vec<T::Chunk>>> = a2a_group
+        .iter()
+        .map(|&r| {
+            let grp = mp_groups
+                .iter()
+                .find(|grp| grp.contains(&r))
+                .expect("rank missing from mp partition");
+            grp.iter()
+                .map(|&q| {
+                    let qi = a2a_group.iter().position(|&x| x == q).expect("mp peer in group");
+                    a2a_out[qi].clone()
+                })
+                .collect()
+        })
+        .collect();
+
+    let single_node = a2a_group.iter().all(|&r| t.same_node(r, a2a_group[0]));
+    if !overlap || (single_node && g > 1) {
+        // AAS: AlltoAll to completion, then ring-AllGather the full output
+        // (each member contributes its g chunks as one block).
+        let (_, a2a_done) = pairwise_alltoall(t, a2a_group, inputs, deps, tag_a2a);
+        let j = t.join(&a2a_done, tag_a2a);
+        let mut done: Vec<Option<T::Handle>> = vec![None; g];
+        for grp in mp_groups {
+            let contribs: Vec<T::Chunk> = grp
+                .iter()
+                .map(|&q| {
+                    let qi = a2a_group.iter().position(|&x| x == q).expect("mp peer in group");
+                    T::Chunk::concat(&a2a_out[qi])
+                })
+                .collect();
+            let (_, ends) = ring_allgather(t, grp, &contribs, &[j.clone()], tag_ag);
+            for (gi, &r) in grp.iter().enumerate() {
+                if let Some(pi) = a2a_group.iter().position(|&x| x == r) {
+                    done[pi] = Some(ends[gi].clone());
+                }
+            }
+        }
+        let done = done.into_iter().map(|h| h.expect("mp partition covers group")).collect();
+        return (outputs, done);
+    }
+
+    let mut incident: Vec<Vec<T::Handle>> = vec![Vec::new(); g];
+    let rounds = g - 1;
+    if rounds == 0 {
+        // Degenerate single-member AlltoAll: forward the own slice only.
+        for i in 0..g {
+            let own = [inputs[i][i].clone()];
+            saa_forward(t, a2a_group, mp_groups, &mut incident, i, &own, deps, tag_ag);
+        }
+        let done = (0..g).map(|i| t.join(&incident[i], tag_a2a)).collect();
+        return (outputs, done);
+    }
+
+    // Partition rounds 1..g-1 into SAA_PHASES contiguous phases; the own
+    // slice (round 0) joins the first phase's forward.
+    let n_phases = SAA_PHASES.min(rounds);
+    let mut prev_intra: Vec<Option<T::Handle>> = vec![None; g];
+    let mut prev_inter: Vec<Option<T::Handle>> = vec![None; g];
+    let mut round = 1usize;
+    for phase in 0..n_phases {
+        let remaining_phases = n_phases - phase;
+        let remaining_rounds = rounds + 1 - round;
+        let in_phase = remaining_rounds / remaining_phases
+            + usize::from(remaining_rounds % remaining_phases != 0);
+        // Receives of this phase, per receiving member.
+        let mut phase_recv: Vec<Vec<T::Handle>> = vec![Vec::new(); g];
+        let mut phase_chunks: Vec<Vec<T::Chunk>> = vec![Vec::new(); g];
+        for p in round..round + in_phase {
+            for i in 0..g {
+                let dst = (i + p) % g;
+                let intra = t.same_node(a2a_group[i], a2a_group[dst]);
+                let prev = if intra { &mut prev_intra } else { &mut prev_inter };
+                let dep: Vec<T::Handle> = match &prev[i] {
+                    None => deps.to_vec(),
+                    Some(h) => vec![h.clone()],
+                };
+                let h = t.send(a2a_group[i], a2a_group[dst], &inputs[i][dst], &dep, tag_a2a);
+                prev[i] = Some(h.clone());
+                incident[i].push(h.clone());
+                incident[dst].push(h.clone());
+                phase_recv[dst].push(h);
+                phase_chunks[dst].push(inputs[i][dst].clone());
+            }
+        }
+        round += in_phase;
+        // Forward the accumulated block (+ own slice in the first phase).
+        for i in 0..g {
+            let mut block = std::mem::take(&mut phase_chunks[i]);
+            if phase == 0 {
+                block.insert(0, inputs[i][i].clone());
+            }
+            let ready = std::mem::take(&mut phase_recv[i]);
+            saa_forward(t, a2a_group, mp_groups, &mut incident, i, &block, &ready, tag_ag);
+        }
+    }
+
+    let done = (0..g).map(|i| t.join(&incident[i], tag_a2a)).collect();
+    (outputs, done)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::transport::DataTransport;
+
+    fn world(g: usize, per: usize) -> Vec<Vec<f32>> {
+        (0..g).map(|i| (0..per).map(|j| (i * per + j) as f32).collect()).collect()
+    }
+
+    #[test]
+    fn generic_allgather_orders_chunks() {
+        let mut t = DataTransport::new();
+        let inputs = world(3, 2);
+        let (outs, done) = ring_allgather(&mut t, &[5, 6, 7], &inputs, &[], "ag");
+        assert_eq!(done.len(), 3);
+        for out in &outs {
+            assert_eq!(out.len(), 3);
+            assert_eq!(out[0], inputs[0]);
+            assert_eq!(out[2], inputs[2]);
+        }
+        // g·(g-1) messages of 2 floats each.
+        assert_eq!(t.log(), &[("ag", (3 * 2 * 2 * 4) as f64)]);
+    }
+
+    #[test]
+    fn generic_reduce_scatter_sums() {
+        let mut t = DataTransport::new();
+        // inputs[i][j]: member i's chunk j.
+        let inputs: Vec<Vec<Vec<f32>>> = (0..3)
+            .map(|i| (0..3).map(|j| vec![(10 * i + j) as f32]).collect())
+            .collect();
+        let (reduced, done) = ring_reduce_scatter(&mut t, &[0, 1, 2], &inputs, &[], "rs");
+        assert_eq!(done.len(), 3);
+        for (j, r) in reduced.iter().enumerate() {
+            // Σ_i (10i + j) = 30 + 3j.
+            assert_eq!(r, &vec![(30 + 3 * j) as f32]);
+        }
+    }
+
+    #[test]
+    fn generic_allreduce_full_sum_everywhere() {
+        let mut t = DataTransport::new();
+        let inputs: Vec<Vec<Vec<f32>>> = (0..4)
+            .map(|i| (0..4).map(|j| vec![i as f32, j as f32]).collect())
+            .collect();
+        let (outs, _) = ring_allreduce(&mut t, &[0, 1, 2, 3], &inputs, &[], "ar");
+        for out in &outs {
+            for (j, c) in out.iter().enumerate() {
+                assert_eq!(c, &vec![6.0, 4.0 * j as f32]);
+            }
+        }
+    }
+
+    #[test]
+    fn generic_alltoall_transposes() {
+        let mut t = DataTransport::new();
+        let inputs: Vec<Vec<Vec<f32>>> = (0..3)
+            .map(|i| (0..3).map(|j| vec![(i * 10 + j) as f32]).collect())
+            .collect();
+        let (outs, _) = pairwise_alltoall(&mut t, &[0, 1, 2], &inputs, &[], "a2a");
+        for (j, out) in outs.iter().enumerate() {
+            for (i, c) in out.iter().enumerate() {
+                assert_eq!(c, &vec![(i * 10 + j) as f32]);
+            }
+        }
+        // Own chunks stay local: 3·2 messages of one f32.
+        assert_eq!(t.log(), &[("a2a", (3 * 2 * 4) as f64)]);
+    }
+
+    #[test]
+    fn generic_saa_equals_a2a_then_allgather() {
+        // Data semantics of SAA must equal the composed collectives —
+        // regardless of the overlap flag.
+        let inputs: Vec<Vec<Vec<f32>>> = (0..4)
+            .map(|i| (0..4).map(|j| vec![(i * 10 + j) as f32; 2]).collect())
+            .collect();
+        let mp: Vec<Vec<usize>> = vec![vec![0, 1], vec![2, 3]];
+        for overlap in [false, true] {
+            let mut t = DataTransport::new();
+            let (outs, done) =
+                saa(&mut t, &[0, 1, 2, 3], &mp, &inputs, &[], "a2a", "ag", overlap);
+            assert_eq!(done.len(), 4);
+            for (pi, out) in outs.iter().enumerate() {
+                let grp = &mp[pi / 2];
+                assert_eq!(out.len(), 2);
+                for (k, &peer) in grp.iter().enumerate() {
+                    for (i, c) in out[k].iter().enumerate() {
+                        assert_eq!(c, &vec![(i * 10 + peer) as f32; 2]);
+                    }
+                }
+            }
+            // Wire totals identical across the two forms.
+            let total: f64 = t.log().iter().map(|(_, b)| b).sum();
+            // A2A: 4·3 chunks of 2 f32; AG: each member forwards its 4-chunk
+            // output to 1 peer = 4·4·2 f32.
+            assert_eq!(total, (12 * 2 * 4 + 4 * 4 * 2 * 4) as f64);
+        }
+    }
+
+    #[test]
+    fn singleton_groups_are_free() {
+        let mut t = DataTransport::new();
+        let (outs, done) = ring_allgather(&mut t, &[3], &world(1, 4), &[], "ag");
+        assert_eq!(outs[0].len(), 1);
+        assert_eq!(done.len(), 1);
+        assert!(t.log().is_empty());
+    }
+}

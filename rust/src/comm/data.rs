@@ -1,4 +1,4 @@
-//! Data-plane collectives over in-process rank buffers.
+//! Data-plane adapters: collectives over in-process rank buffers.
 //!
 //! `world[r]` is rank `r`'s local buffer. A collective takes the world and
 //! a *group* (an ordered list of distinct rank ids); only group members'
@@ -16,6 +16,14 @@
 //!   chunk_j of member g-1]`. An involution when chunk sizes are uniform.
 //! * `split` — local: member `j` keeps its `j`-th 1/g chunk (the ESP-Split
 //!   of Fig 3a; communication-free in forward).
+//!
+//! Every wire-touching collective here instantiates the one-source
+//! algorithms of [`crate::comm::algo`] with a [`DataTransport`] — the same
+//! ring/pairwise code the simulator times. Only the purely local ops
+//! (`split`, `broadcast`) are implemented directly.
+
+use super::algo;
+use super::transport::{split_chunks, DataTransport};
 
 /// Validate a group: non-empty, distinct, in range.
 fn check_group(world_len: usize, group: &[usize]) {
@@ -37,13 +45,12 @@ fn check_equal_lengths(world: &[Vec<f32>], group: &[usize]) -> usize {
 /// AllGather within `group` (in-place on the world).
 pub fn allgather(world: &mut [Vec<f32>], group: &[usize]) {
     check_group(world.len(), group);
-    let n = check_equal_lengths(world, group);
-    let mut gathered = Vec::with_capacity(n * group.len());
-    for &r in group {
-        gathered.extend_from_slice(&world[r]);
-    }
-    for &r in group {
-        world[r] = gathered.clone();
+    check_equal_lengths(world, group);
+    let mut t = DataTransport::new();
+    let inputs: Vec<Vec<f32>> = group.iter().map(|&r| world[r].clone()).collect();
+    let (outs, _) = algo::ring_allgather(&mut t, group, &inputs, &[], "allgather");
+    for (out, &r) in outs.into_iter().zip(group.iter()) {
+        world[r] = out.concat();
     }
 }
 
@@ -53,38 +60,27 @@ pub fn reduce_scatter(world: &mut [Vec<f32>], group: &[usize]) {
     let n = check_equal_lengths(world, group);
     let g = group.len();
     assert_eq!(n % g, 0, "reduce_scatter needs length divisible by group size");
-    let chunk = n / g;
-    let mut sum = vec![0.0f32; n];
-    for &r in group {
-        for (s, v) in sum.iter_mut().zip(world[r].iter()) {
-            *s += v;
-        }
-    }
-    for (j, &r) in group.iter().enumerate() {
-        world[r] = sum[j * chunk..(j + 1) * chunk].to_vec();
+    let mut t = DataTransport::new();
+    let inputs: Vec<Vec<Vec<f32>>> = group.iter().map(|&r| split_chunks(&world[r], g)).collect();
+    let (reduced, _) = algo::ring_reduce_scatter(&mut t, group, &inputs, &[], "reducescatter");
+    for (out, &r) in reduced.into_iter().zip(group.iter()) {
+        world[r] = out;
     }
 }
 
-/// AllReduce (sum) within `group` = ReduceScatter ∘ AllGather.
+/// AllReduce (sum) within `group` = ReduceScatter ∘ AllGather. Lengths
+/// need not divide the group size: the ring runs on a ragged chunk
+/// partition (sizes differ by at most one; the result is only ever
+/// consumed re-concatenated, so chunk boundaries are a wire detail).
 pub fn allreduce(world: &mut [Vec<f32>], group: &[usize]) {
     check_group(world.len(), group);
-    let n = check_equal_lengths(world, group);
+    check_equal_lengths(world, group);
     let g = group.len();
-    if n % g == 0 && n > 0 {
-        reduce_scatter(world, group);
-        allgather(world, group);
-    } else {
-        // Lengths not divisible by g: direct elementwise sum (semantically
-        // identical; the RS∘AG decomposition is a wire-level detail).
-        let mut sum = vec![0.0f32; n];
-        for &r in group {
-            for (s, v) in sum.iter_mut().zip(world[r].iter()) {
-                *s += v;
-            }
-        }
-        for &r in group {
-            world[r] = sum.clone();
-        }
+    let mut t = DataTransport::new();
+    let inputs: Vec<Vec<Vec<f32>>> = group.iter().map(|&r| split_chunks(&world[r], g)).collect();
+    let (outs, _) = algo::ring_allreduce(&mut t, group, &inputs, &[], "allreduce");
+    for (out, &r) in outs.into_iter().zip(group.iter()) {
+        world[r] = out.concat();
     }
 }
 
@@ -94,15 +90,11 @@ pub fn alltoall(world: &mut [Vec<f32>], group: &[usize]) {
     let n = check_equal_lengths(world, group);
     let g = group.len();
     assert_eq!(n % g, 0, "alltoall needs length divisible by group size");
-    let chunk = n / g;
-    let mut outputs: Vec<Vec<f32>> = vec![Vec::with_capacity(n); g];
-    for (j, out) in outputs.iter_mut().enumerate() {
-        for &ri in group.iter() {
-            out.extend_from_slice(&world[ri][j * chunk..(j + 1) * chunk]);
-        }
-    }
-    for (j, &r) in group.iter().enumerate() {
-        world[r] = std::mem::take(&mut outputs[j]);
+    let mut t = DataTransport::new();
+    let inputs: Vec<Vec<Vec<f32>>> = group.iter().map(|&r| split_chunks(&world[r], g)).collect();
+    let (outs, _) = algo::pairwise_alltoall(&mut t, group, &inputs, &[], "alltoall");
+    for (out, &r) in outs.into_iter().zip(group.iter()) {
+        world[r] = out.concat();
     }
 }
 

@@ -1,117 +1,71 @@
-//! Lowering of collectives to point-to-point transfer DAGs.
+//! Timing-plane adapters: lower collectives to point-to-point transfer
+//! DAGs for the discrete-event engine.
 //!
-//! Algorithms match what NCCL uses on the paper's testbeds (no
-//! NVLink/NVSwitch): **ring** AllGather / ReduceScatter (AllReduce as
-//! RS ∘ AG, [21,22]) and **pairwise-exchange** AlltoAll. Each lowering
-//! returns one completion `TaskId` per group member (group order), so
-//! schedules can chain per-rank dependencies without global barriers.
+//! These are thin wrappers that instantiate the one-source algorithms of
+//! [`crate::comm::algo`] with a [`DagTransport`] — chunk payloads are byte
+//! counts ([`Lump`]), and every `send` becomes a [`SimDag`] transfer. No
+//! collective loop is written here; the ring/pairwise structure lives in
+//! `algo` only.
+//!
+//! Each lowering returns one completion `TaskId` per group member (group
+//! order), so schedules can chain per-rank dependencies without global
+//! barriers.
 
 use crate::config::ClusterProfile;
 use crate::sim::dag::{SimDag, TaskId};
 
-/// If a group has one member, a collective is a no-op; we still emit a join
-/// so callers always get a dependable task id per rank.
-fn singleton(dag: &mut SimDag, deps: &[TaskId], tag: &'static str) -> Vec<TaskId> {
-    vec![dag.join(deps, tag)]
-}
+use super::algo;
+use super::transport::{DagTransport, Lump};
 
-/// Ring AllGather: `g-1` steps; at step `s`, member `i` forwards the chunk
-/// it received at step `s-1` (initially its own) to member `i+1`.
-/// `bytes_per_rank` is each member's input size (every step moves one such
-/// chunk). Completion of member `i` = its final receive.
+/// Ring AllGather: `bytes_per_rank` is each member's input size (every
+/// step moves one such chunk).
 pub fn ring_allgather(
     dag: &mut SimDag,
+    cluster: &ClusterProfile,
     group: &[usize],
     bytes_per_rank: f64,
     deps: &[TaskId],
     tag: &'static str,
 ) -> Vec<TaskId> {
-    let g = group.len();
-    if g == 1 {
-        return singleton(dag, deps, tag);
-    }
-    // sends[s][i] = task id of member i's send at step s.
-    let mut prev: Vec<TaskId> = Vec::new();
-    let mut last_recv: Vec<TaskId> = vec![0; g];
-    for s in 0..g - 1 {
-        let mut cur = Vec::with_capacity(g);
-        for i in 0..g {
-            let dst = (i + 1) % g;
-            let dep: Vec<TaskId> = if s == 0 {
-                deps.to_vec()
-            } else {
-                vec![prev[(i + g - 1) % g]]
-            };
-            let t = dag.transfer(group[i], group[dst], bytes_per_rank, &dep, tag);
-            last_recv[dst] = t;
-            cur.push(t);
-        }
-        prev = cur;
-    }
-    last_recv
+    let mut t = DagTransport::new(dag, cluster);
+    let inputs = vec![Lump(bytes_per_rank); group.len()];
+    algo::ring_allgather(&mut t, group, &inputs, deps, tag).1
 }
 
-/// Ring ReduceScatter: same ring pattern; each step moves one reduced
-/// chunk of `chunk_bytes` (= total bytes / g). Completion of member `i` =
-/// receive of its fully-reduced chunk.
+/// Ring ReduceScatter: each step moves one reduced chunk of `chunk_bytes`
+/// (= total bytes / g).
 pub fn ring_reduce_scatter(
     dag: &mut SimDag,
+    cluster: &ClusterProfile,
     group: &[usize],
     chunk_bytes: f64,
     deps: &[TaskId],
     tag: &'static str,
 ) -> Vec<TaskId> {
+    let mut t = DagTransport::new(dag, cluster);
     let g = group.len();
-    if g == 1 {
-        return singleton(dag, deps, tag);
-    }
-    let mut prev: Vec<TaskId> = Vec::new();
-    let mut last_recv: Vec<TaskId> = vec![0; g];
-    for s in 0..g - 1 {
-        let mut cur = Vec::with_capacity(g);
-        for i in 0..g {
-            let dst = (i + 1) % g;
-            let dep: Vec<TaskId> = if s == 0 {
-                deps.to_vec()
-            } else {
-                vec![prev[(i + g - 1) % g]]
-            };
-            let t = dag.transfer(group[i], group[dst], chunk_bytes, &dep, tag);
-            last_recv[dst] = t;
-            cur.push(t);
-        }
-        prev = cur;
-    }
-    last_recv
+    let inputs = vec![vec![Lump(chunk_bytes); g]; g];
+    algo::ring_reduce_scatter(&mut t, group, &inputs, deps, tag).1
 }
 
 /// AllReduce = ReduceScatter ∘ AllGather over `total_bytes` per member.
 pub fn ring_allreduce(
     dag: &mut SimDag,
+    cluster: &ClusterProfile,
     group: &[usize],
     total_bytes: f64,
     deps: &[TaskId],
     tag: &'static str,
 ) -> Vec<TaskId> {
-    let g = group.len() as f64;
-    let rs = ring_reduce_scatter(dag, group, total_bytes / g, deps, tag);
-    // AllGather of the reduced chunks: chain each member on its RS result.
-    // ring_allgather takes uniform deps; to keep per-rank chaining we fan
-    // in through a join (the RS chunks all complete within α of each other
-    // on a ring, so the join loses nothing material).
-    let j = dag.join(&rs, tag);
-    ring_allgather(dag, group, total_bytes / g, &[j], tag)
+    let mut t = DagTransport::new(dag, cluster);
+    let g = group.len();
+    let inputs = vec![vec![Lump(total_bytes / g as f64); g]; g];
+    algo::ring_allreduce(&mut t, group, &inputs, deps, tag).1
 }
 
-/// Pairwise-exchange AlltoAll: rounds `r = 1..g-1`; in round `r` member
-/// `i` sends its chunk for member `(i+r) mod g`. `bytes_per_pair` is the
-/// chunk size for one (src, dst) pair.
-///
-/// Sends are chained per *(sender, link class)*: a sender's intra-node
-/// sends form one queue and its inter-node sends another, progressing
-/// concurrently (NCCL uses distinct channels for P2P over PCIe vs the
-/// NIC). This is the property §III-C's fused EP&ESP-AlltoAll exploits —
-/// intra-node ESP traffic proceeds while inter-node EP traffic drains.
+/// Pairwise-exchange AlltoAll; `bytes_per_pair` is the chunk size for one
+/// (src, dst) pair. Sends chain per (sender, link class) — see
+/// [`algo::pairwise_alltoall`].
 pub fn pairwise_alltoall(
     dag: &mut SimDag,
     cluster: &ClusterProfile,
@@ -120,30 +74,10 @@ pub fn pairwise_alltoall(
     deps: &[TaskId],
     tag: &'static str,
 ) -> Vec<TaskId> {
+    let mut t = DagTransport::new(dag, cluster);
     let g = group.len();
-    if g == 1 {
-        return singleton(dag, deps, tag);
-    }
-    let mut prev_intra: Vec<Option<TaskId>> = vec![None; g];
-    let mut prev_inter: Vec<Option<TaskId>> = vec![None; g];
-    let mut incident: Vec<Vec<TaskId>> = vec![Vec::new(); g];
-    for r in 1..g {
-        for i in 0..g {
-            let dst = (i + r) % g;
-            let intra = cluster.same_node(group[i], group[dst]);
-            let prev = if intra { &mut prev_intra } else { &mut prev_inter };
-            let dep: Vec<TaskId> = match prev[i] {
-                None => deps.to_vec(),
-                Some(t) => vec![t],
-            };
-            let t = dag.transfer(group[i], group[dst], bytes_per_pair, &dep, tag);
-            prev[i] = Some(t);
-            incident[i].push(t);
-            incident[dst].push(t);
-        }
-    }
-    // Completion per member: all its sends and receives done.
-    (0..g).map(|i| dag.join(&incident[i], tag)).collect()
+    let inputs = vec![vec![Lump(bytes_per_pair); g]; g];
+    algo::pairwise_alltoall(&mut t, group, &inputs, deps, tag).1
 }
 
 /// Per-rank transfer DAG statistics used in tests: number of p2p transfers
@@ -177,17 +111,18 @@ mod tests {
 
     #[test]
     fn allgather_ring_step_count() {
+        let c = cluster(1, 4);
         let mut d = SimDag::new();
-        let ends = ring_allgather(&mut d, &[0, 1, 2, 3], 1e6, &[], "ag");
+        let ends = ring_allgather(&mut d, &c, &[0, 1, 2, 3], 1e6, &[], "ag");
         assert_eq!(ends.len(), 4);
         assert_eq!(transfer_count(&d), 4 * 3); // g·(g-1) sends
     }
 
     #[test]
     fn allgather_singleton_free() {
-        let mut d = SimDag::new();
-        let ends = ring_allgather(&mut d, &[2], 1e6, &[], "ag");
         let c = cluster(1, 4);
+        let mut d = SimDag::new();
+        let ends = ring_allgather(&mut d, &c, &[2], 1e6, &[], "ag");
         let r = Simulator::new(&c).run(&d);
         assert_eq!(r.makespan, 0.0);
         assert_eq!(ends.len(), 1);
@@ -199,7 +134,7 @@ mod tests {
         // critical path.
         let c = cluster(1, 4);
         let mut d = SimDag::new();
-        ring_allgather(&mut d, &[0, 1, 2, 3], 1e6, &[], "ag");
+        ring_allgather(&mut d, &c, &[0, 1, 2, 3], 1e6, &[], "ag");
         let r = Simulator::new(&c).run(&d);
         let expect = 3.0 * (1e-5 + 1e6 * 1e-9);
         assert!((r.makespan - expect).abs() < 1e-9, "{} vs {expect}", r.makespan);
@@ -210,7 +145,7 @@ mod tests {
         let c = cluster(1, 4);
         let mut d = SimDag::new();
         // total 4 MB per rank → 1 MB chunks.
-        ring_reduce_scatter(&mut d, &[0, 1, 2, 3], 1e6, &[], "rs");
+        ring_reduce_scatter(&mut d, &c, &[0, 1, 2, 3], 1e6, &[], "rs");
         let r = Simulator::new(&c).run(&d);
         let expect = 3.0 * (1e-5 + 1e6 * 1e-9);
         assert!((r.makespan - expect).abs() < 1e-9);
@@ -220,7 +155,7 @@ mod tests {
     fn allreduce_is_two_phases() {
         let c = cluster(1, 4);
         let mut d = SimDag::new();
-        ring_allreduce(&mut d, &[0, 1, 2, 3], 4e6, &[], "ar");
+        ring_allreduce(&mut d, &c, &[0, 1, 2, 3], 4e6, &[], "ar");
         let r = Simulator::new(&c).run(&d);
         let expect = 2.0 * 3.0 * (1e-5 + 1e6 * 1e-9);
         assert!((r.makespan - expect).abs() < 1e-9, "{}", r.makespan);
@@ -265,7 +200,7 @@ mod tests {
         let mut base = SimDag::new();
         let mut ag_ends = Vec::new();
         for grp in [[0usize, 1], [2, 3]] {
-            ag_ends.extend(ring_allgather(&mut base, &grp, elem_bytes, &[], "ag"));
+            ag_ends.extend(ring_allgather(&mut base, &c, &grp, elem_bytes, &[], "ag"));
         }
         let j = base.join(&ag_ends, "sync");
         for grp in [[0usize, 2], [1, 3]] {

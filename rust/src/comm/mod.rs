@@ -1,16 +1,29 @@
-//! Collective communication, in two coupled forms:
+//! Collective communication — ONE algorithm source, two planes.
 //!
-//! * **data plane** ([`data`]) — collectives over real in-process rank
-//!   buffers (`Vec<f32>` per rank). This is how correctness is proved: the
-//!   MoE layer executed under every schedule must produce identical numbers
-//!   (paper's implicit semantics-preservation claim).
-//! * **sim lowering** ([`lower`]) — the same collectives decomposed into
-//!   point-to-point transfer DAGs for the discrete-event engine. This is
-//!   how time is measured.
-//!
-//! [`saa`] implements the paper's Simultaneous-AlltoAll-and-AllGather
-//! (§III-D, Fig 5) in both forms.
+//! * [`algo`] — every collective (ring AllGather / ReduceScatter,
+//!   AllReduce as RS ∘ AG, pairwise AlltoAll — which is also the fused
+//!   EP&ESP-AlltoAll over the product group — and the SAA/AAS overlapped
+//!   combine) is written exactly once, generic over a transport.
+//! * [`transport`] — the [`transport::Transport`] trait and its two
+//!   implementations: [`transport::DagTransport`] emits transfer DAGs for
+//!   the discrete-event engine (**timing plane**), and
+//!   [`transport::DataTransport`] moves real `f32` chunks between
+//!   in-process rank buffers (**data plane**) while logging wire volumes.
+//!   Because both planes execute the same algorithm source, the schedule
+//!   we time is structurally the schedule whose numerics we verify — the
+//!   paper's implicit semantics-preservation claim, made a type-level
+//!   property instead of a cross-check test.
+//! * [`tags`] — the canonical tag constants shared by the schedule IR, the
+//!   simulator's per-tag accounting and the data-plane comm log.
+//! * [`lower`] / [`data`] / [`saa`] — thin plane-specific adapters kept as
+//!   the stable public API (and as regression tests pinning the ring
+//!   timings and NCCL/MPI data semantics).
 
+pub mod algo;
 pub mod data;
 pub mod lower;
 pub mod saa;
+pub mod tags;
+pub mod transport;
+
+pub use transport::{Chunk, DagTransport, DataTransport, Lump, Transport};

@@ -1,25 +1,29 @@
-//! SAA — Simultaneous AlltoAll and AllGather (paper §III-D, Fig 5).
+//! SAA — Simultaneous AlltoAll and AllGather (paper §III-D, Fig 5):
+//! plane-specific adapters over the one-source algorithm
+//! [`algo::saa`].
 //!
 //! In the S2 schedule the second EP&ESP-AlltoAll (inter-node dominant) is
 //! followed by an MP-AllGather (intra-node). SAA phases the AlltoAll so the
 //! slice received in phase `p` is forwarded to the MP peers during phase
 //! `p+1`, overlapping the two collectives on their distinct link classes.
 //!
-//! Two implementations, verified against each other:
-//! * [`saa_data`] — data plane: produces exactly the bytes of
-//!   `alltoall(group)` followed by `allgather(mp_group)` (tested).
-//! * [`saa_lower`] — transfer DAG with the phase-overlap structure for the
-//!   simulator; the AAS (sequential) variant [`aas_lower`] is the ablation
-//!   baseline (§VI-C reports SAA ≈ 1.1% faster than AAS).
+//! There is exactly one implementation of the phased algorithm (in
+//! [`crate::comm::algo`]); [`saa_data`] instantiates it over real rank
+//! buffers, [`saa_lower`]/[`aas_lower`] over the simulator's transfer DAG.
+//! The data result must equal `alltoall(group)` followed by
+//! `allgather(mp_group)` — [`saa_reference`] — which the tests assert.
 
 use crate::config::ClusterProfile;
 use crate::sim::dag::{SimDag, TaskId};
 
+use super::algo;
+pub use super::algo::SAA_PHASES;
 use super::data;
-use super::lower;
+use super::transport::{DagTransport, DataTransport, Lump};
 
-/// Data-plane SAA: phased implementation whose result must equal
-/// `alltoall(a2a_group)` then `allgather(mp_group)` for every member.
+/// Data-plane SAA: the phased algorithm over real buffers. The result
+/// equals `alltoall(a2a_group)` then `allgather(mp_group)` for every
+/// member.
 ///
 /// `mp_groups` partitions `a2a_group` (each member appears in exactly one).
 pub fn saa_data(world: &mut [Vec<f32>], a2a_group: &[usize], mp_groups: &[Vec<usize>]) {
@@ -30,45 +34,20 @@ pub fn saa_data(world: &mut [Vec<f32>], a2a_group: &[usize], mp_groups: &[Vec<us
     assert_eq!(n % g, 0, "saa needs buffer divisible by a2a group size");
     let chunk = n / g;
 
-    let mp_of = |rank: usize| -> &Vec<usize> {
-        mp_groups
-            .iter()
-            .find(|grp| grp.contains(&rank))
-            .expect("rank missing from mp partition")
-    };
-
-    // slices[i][j] = chunk destined to member i, originating at member j.
-    // Phase p delivers slices[i][(i - p) mod g] to member i; the forward of
-    // that slice to i's MP peers happens in phase p+1 (overlap). Because
-    // the data plane is sequential in-process, phases only affect *when*
-    // a slice becomes available for forwarding — the final bytes assembled
-    // here are what the phased algorithm delivers on the wire.
-    let pos_in = |grp: &[usize], r: usize| grp.iter().position(|&x| x == r).unwrap();
-
-    // a2a_out[i] = member i's AlltoAll output, assembled slice by slice.
-    let mut a2a_out: Vec<Vec<f32>> = vec![vec![0.0; n]; g];
-    for p in 0..g {
-        for (i, _) in a2a_group.iter().enumerate() {
-            let j = (i + g - p) % g; // source member for this phase
-            let src_rank = a2a_group[j];
-            let slice = &world[src_rank][i * chunk..(i + 1) * chunk];
-            a2a_out[i][j * chunk..(j + 1) * chunk].copy_from_slice(slice);
+    let mut t = DataTransport::new();
+    let inputs: Vec<Vec<Vec<f32>>> = a2a_group
+        .iter()
+        .map(|&r| (0..g).map(|j| world[r][j * chunk..(j + 1) * chunk].to_vec()).collect())
+        .collect();
+    let (outs, _) = algo::saa(&mut t, a2a_group, mp_groups, &inputs, &[], "saa.a2a", "saa.ag", true);
+    for (out, &r) in outs.into_iter().zip(a2a_group.iter()) {
+        // out = per MP peer (MP order), that peer's AlltoAll output chunks.
+        let mut buf = Vec::with_capacity(out.len() * n);
+        for peer_chunks in out {
+            for c in peer_chunks {
+                buf.extend_from_slice(&c);
+            }
         }
-    }
-
-    // MP-AllGather of the assembled outputs (the forwards): member r ends
-    // with the concatenation of its MP group members' a2a outputs.
-    let mut finals: Vec<(usize, Vec<f32>)> = Vec::with_capacity(g);
-    for &r in a2a_group {
-        let grp = mp_of(r);
-        let mut out = Vec::with_capacity(n * grp.len());
-        for &q in grp {
-            let qi = pos_in(a2a_group, q);
-            out.extend_from_slice(&a2a_out[qi]);
-        }
-        finals.push((r, out));
-    }
-    for (r, buf) in finals {
         world[r] = buf;
     }
 }
@@ -81,25 +60,10 @@ pub fn saa_reference(world: &mut [Vec<f32>], a2a_group: &[usize], mp_groups: &[V
     }
 }
 
-/// Number of SAA phases: the AlltoAll's rounds are grouped into at most
-/// this many phases; each member forwards one *accumulated* block to its
-/// MP peers per phase (Fig 5's phase granularity). Coarsening keeps the
-/// per-message α cost of the forwards at ring-AllGather scale instead of
-/// paying α on every slice.
-pub const SAA_PHASES: usize = 4;
-
-/// Transfer-DAG lowering of SAA.
-///
-/// * AlltoAll rounds `p = 1..g-1` are chained per (sender, link class) as
-///   in [`lower::pairwise_alltoall`].
-/// * Rounds are grouped into [`SAA_PHASES`] phases; when member `i` has
-///   received every slice of a phase (own slice counts toward the first),
-///   it forwards the accumulated block to each MP peer. Forwards depend
-///   only on that phase's receives — they run concurrently with the next
-///   phase's AlltoAll rounds (distinct link classes when MP is intra-node
-///   and the AlltoAll is inter-node dominant).
+/// Transfer-DAG lowering of SAA (phase-overlapped combine).
 ///
 /// Returns one completion task per member of `a2a_group`.
+#[allow(clippy::too_many_arguments)]
 pub fn saa_lower(
     dag: &mut SimDag,
     cluster: &ClusterProfile,
@@ -110,108 +74,15 @@ pub fn saa_lower(
     tag_a2a: &'static str,
     tag_ag: &'static str,
 ) -> Vec<TaskId> {
+    let mut t = DagTransport::new(dag, cluster);
     let g = a2a_group.len();
-    // SAA exists to overlap the inter-node-dominant AlltoAll with the
-    // intra-node AllGather. If the whole group lives on one node there is
-    // no second link class — the phased forwards would only contend with
-    // the AlltoAll on the same ports — so degrade to the sequential form.
-    let single_node = a2a_group
-        .iter()
-        .all(|&r| cluster.node_of(r) == cluster.node_of(a2a_group[0]));
-    if single_node && g > 1 {
-        return aas_lower(
-            dag,
-            cluster,
-            a2a_group,
-            mp_groups,
-            bytes_per_pair,
-            deps,
-            tag_a2a,
-            tag_ag,
-        );
-    }
-    let mp_of = |rank: usize| -> Vec<usize> {
-        mp_groups
-            .iter()
-            .find(|grp| grp.contains(&rank))
-            .expect("rank missing from mp partition")
-            .clone()
-    };
-
-    let mut incident: Vec<Vec<TaskId>> = vec![Vec::new(); g];
-    // Forward an accumulated block of `slices` slices held by member `i`
-    // (ready after `ready`) to its MP peers.
-    let forward = |dag: &mut SimDag,
-                   incident: &mut Vec<Vec<TaskId>>,
-                   i: usize,
-                   slices: usize,
-                   ready: &[TaskId]| {
-        if slices == 0 {
-            return;
-        }
-        let me = a2a_group[i];
-        for peer in mp_of(me) {
-            if peer == me {
-                continue;
-            }
-            let t = dag.transfer(me, peer, slices as f64 * bytes_per_pair, ready, tag_ag);
-            incident[i].push(t);
-            if let Some(pi) = a2a_group.iter().position(|&x| x == peer) {
-                incident[pi].push(t);
-            }
-        }
-    };
-
-    // Partition rounds 1..g-1 into SAA_PHASES contiguous groups; the own
-    // slice (round 0) joins the first phase.
-    let rounds = g - 1;
-    let n_phases = SAA_PHASES.min(rounds.max(1));
-    let mut prev_intra: Vec<Option<TaskId>> = vec![None; g];
-    let mut prev_inter: Vec<Option<TaskId>> = vec![None; g];
-    if rounds == 0 {
-        // Degenerate single-member AlltoAll: forward the own slice only.
-        for i in 0..g {
-            forward(dag, &mut incident, i, 1, deps);
-        }
-    }
-    let mut round = 1usize;
-    for phase in 0..n_phases {
-        let remaining_phases = n_phases - phase;
-        let remaining_rounds = rounds + 1 - round;
-        let in_phase = remaining_rounds / remaining_phases
-            + usize::from(remaining_rounds % remaining_phases != 0);
-        // Receives of this phase, per receiving member.
-        let mut phase_recv: Vec<Vec<TaskId>> = vec![Vec::new(); g];
-        for p in round..round + in_phase {
-            for i in 0..g {
-                let dst = (i + p) % g;
-                let intra = cluster.same_node(a2a_group[i], a2a_group[dst]);
-                let prev = if intra { &mut prev_intra } else { &mut prev_inter };
-                let dep: Vec<TaskId> = match prev[i] {
-                    None => deps.to_vec(),
-                    Some(t) => vec![t],
-                };
-                let t =
-                    dag.transfer(a2a_group[i], a2a_group[dst], bytes_per_pair, &dep, tag_a2a);
-                prev[i] = Some(t);
-                incident[i].push(t);
-                incident[dst].push(t);
-                phase_recv[dst].push(t);
-            }
-        }
-        round += in_phase;
-        // Forward the accumulated block (+ own slice in the first phase).
-        let own = usize::from(phase == 0);
-        for (i, recvs) in phase_recv.iter().enumerate() {
-            forward(dag, &mut incident, i, recvs.len() + own, recvs);
-        }
-    }
-
-    (0..g).map(|i| dag.join(&incident[i], tag_a2a)).collect()
+    let inputs = vec![vec![Lump(bytes_per_pair); g]; g];
+    algo::saa(&mut t, a2a_group, mp_groups, &inputs, deps, tag_a2a, tag_ag, true).1
 }
 
 /// AAS — the non-overlapped ablation: AlltoAll to completion, then a ring
 /// MP-AllGather of the full output.
+#[allow(clippy::too_many_arguments)]
 pub fn aas_lower(
     dag: &mut SimDag,
     cluster: &ClusterProfile,
@@ -222,21 +93,10 @@ pub fn aas_lower(
     tag_a2a: &'static str,
     tag_ag: &'static str,
 ) -> Vec<TaskId> {
+    let mut t = DagTransport::new(dag, cluster);
     let g = a2a_group.len();
-    let a2a_ends = lower::pairwise_alltoall(dag, cluster, a2a_group, bytes_per_pair, deps, tag_a2a);
-    let j = dag.join(&a2a_ends, tag_a2a);
-    // Full a2a output per member = g × bytes_per_pair.
-    let out_bytes = g as f64 * bytes_per_pair;
-    let mut completion: Vec<TaskId> = vec![0; g];
-    for grp in mp_groups {
-        let ends = lower::ring_allgather(dag, grp, out_bytes, &[j], tag_ag);
-        for (gi, &r) in grp.iter().enumerate() {
-            if let Some(pi) = a2a_group.iter().position(|&x| x == r) {
-                completion[pi] = ends[gi];
-            }
-        }
-    }
-    completion
+    let inputs = vec![vec![Lump(bytes_per_pair); g]; g];
+    algo::saa(&mut t, a2a_group, mp_groups, &inputs, deps, tag_a2a, tag_ag, false).1
 }
 
 #[cfg(test)]
@@ -363,9 +223,30 @@ mod tests {
         let t_saa = Simulator::new(&c).run(&d1).makespan;
 
         let mut d2 = SimDag::new();
-        lower::pairwise_alltoall(&mut d2, &c, &a2a, bytes, &[], "a2a");
+        crate::comm::lower::pairwise_alltoall(&mut d2, &c, &a2a, bytes, &[], "a2a");
         let t_a2a = Simulator::new(&c).run(&d2).makespan;
 
         assert!((t_saa - t_a2a).abs() < 1e-12);
+    }
+
+    #[test]
+    fn saa_dag_log_totals_match_aas_per_tag() {
+        // Same wire volume per tag whichever form runs — the phased
+        // forwards only move the AllGather's bytes earlier in time.
+        let c = two_node_cluster();
+        let a2a: Vec<usize> = (0..8).collect();
+        let mp: Vec<Vec<usize>> = vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]];
+        let bytes = 3.0e4;
+        let mut d1 = SimDag::new();
+        saa_lower(&mut d1, &c, &a2a, &mp, bytes, &[], "a2a", "ag");
+        let mut d2 = SimDag::new();
+        aas_lower(&mut d2, &c, &a2a, &mp, bytes, &[], "a2a", "ag");
+        let l1 = d1.comm_log();
+        let l2 = d2.comm_log();
+        assert_eq!(l1.len(), l2.len());
+        for ((t1, b1), (t2, b2)) in l1.iter().zip(l2.iter()) {
+            assert_eq!(t1, t2);
+            assert!((b1 - b2).abs() < 1e-6, "{t1}: {b1} vs {b2}");
+        }
     }
 }

@@ -1,0 +1,45 @@
+//! Canonical tag constants — the ONE vocabulary every plane uses to label
+//! communication and compute:
+//!
+//! * the schedule IR ([`crate::schedule::ops::Op::tag`]),
+//! * the generic collective algorithms ([`crate::comm::algo`]) via the tags
+//!   threaded through [`crate::comm::transport::Transport::send`],
+//! * the simulator's per-tag accounting
+//!   ([`crate::sim::engine::SimReport::seconds_for_tag`]), and
+//! * the data-plane communication log
+//!   ([`crate::moe::exec::ExecResult::comm_log`]).
+//!
+//! Because both transports run the *same* algorithm source with the *same*
+//! constants, a sweep report's tag breakdown and an executor's comm log can
+//! be diffed mechanically — no string re-derivation on either side.
+
+/// ESP-group AllGather of the layer input (baseline Fig 3a step 1).
+pub const ESP_ALLGATHER: &str = "esp.allgather";
+/// EP-group pairwise AlltoAll (baseline dispatch/combine).
+pub const EP_ALLTOALL: &str = "ep.alltoall";
+/// ESP-group AllReduce of shard-partial expert outputs (baseline).
+pub const ESP_ALLREDUCE: &str = "esp.allreduce";
+/// ESP-group ReduceScatter (backward of the ESP-AllGather).
+pub const ESP_REDUCESCATTER: &str = "esp.reducescatter";
+/// MP-group ReduceScatter (backward of the MP-AllGather).
+pub const MP_REDUCESCATTER: &str = "mp.reducescatter";
+/// Local ESP split (free forward; AllGather in backward).
+pub const ESP_SPLIT: &str = "esp.split";
+/// Local MP split — PauseMP's entry point (free forward).
+pub const MP_SPLIT: &str = "mp.split";
+/// MP-group ring AllGather (S1's token restore / S2's capacity restore).
+pub const MP_ALLGATHER: &str = "mp.allgather";
+/// Parm's fused EP&ESP-AlltoAll over the product group (§III-C).
+pub const FUSED_ALLTOALL: &str = "fused.alltoall";
+/// S2's SAA-overlapped combine (fused AlltoAll + MP-AllGather, §III-D).
+pub const SAA_COMBINE: &str = "saa.combine";
+/// The sequential (non-overlapped) combine — the AAS ablation (§VI-C).
+pub const AAS_COMBINE: &str = "aas.combine";
+/// Gating network + top-k routing (compute).
+pub const GATE: &str = "gate";
+/// Expert FFN shards (compute).
+pub const EXPERT_FFN: &str = "expert.ffn";
+/// Local partial-sum combine of the N_ESP returned copies (compute).
+pub const LOCAL_COMBINE: &str = "local.combine";
+/// Scatter combined outputs back into token order (compute).
+pub const UNGATE: &str = "ungate";

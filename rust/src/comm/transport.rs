@@ -1,0 +1,283 @@
+//! The transport abstraction under the one-source collective core.
+//!
+//! A collective algorithm in [`crate::comm::algo`] is written ONCE, generic
+//! over a [`Transport`]. The transport decides what a point-to-point
+//! message *is*:
+//!
+//! * [`DagTransport`] — the **timing plane**: every `send` appends a
+//!   transfer task to a [`SimDag`] for the discrete-event engine; payloads
+//!   are byte counts ([`Lump`]) and dependency handles are [`TaskId`]s, so
+//!   the algorithm's chaining structure becomes the DAG's critical path.
+//! * [`DataTransport`] — the **data plane**: payloads are real `f32`
+//!   chunks; the algorithm's value bookkeeping IS the data movement, and
+//!   the transport records a `(tag, bytes)` wire log whose per-tag totals
+//!   must equal the timing plane's (this is what makes timing/numerics
+//!   agreement structural rather than test-enforced).
+//!
+//! The same algorithm source + the same tag constants
+//! ([`crate::comm::tags`]) means the schedule we time is — by construction,
+//! not by cross-check — the schedule we execute.
+
+use crate::config::ClusterProfile;
+use crate::sim::dag::{SimDag, TaskId};
+
+/// Payload of one point-to-point message inside a generic collective.
+pub trait Chunk: Clone {
+    /// Wire size of this chunk in bytes.
+    fn bytes(&self) -> f64;
+    /// Elementwise-accumulate `rhs` into `self` (ReduceScatter/AllReduce
+    /// partials). Reduction must not change the wire size.
+    fn reduce_add(&mut self, rhs: &Self);
+    /// Concatenate `parts` into one block (SAA's phased forwards send
+    /// several accumulated slices as a single message).
+    fn concat(parts: &[Self]) -> Self;
+}
+
+/// Timing-plane payload: a byte count, no data.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Lump(pub f64);
+
+impl Chunk for Lump {
+    fn bytes(&self) -> f64 {
+        self.0
+    }
+
+    fn reduce_add(&mut self, _rhs: &Self) {
+        // A reduced partial has the same wire size as its inputs.
+    }
+
+    fn concat(parts: &[Self]) -> Self {
+        Lump(parts.iter().map(|c| c.0).sum())
+    }
+}
+
+/// Data-plane payload: a real slice of rank-local `f32` state.
+impl Chunk for Vec<f32> {
+    fn bytes(&self) -> f64 {
+        (self.len() * 4) as f64
+    }
+
+    fn reduce_add(&mut self, rhs: &Self) {
+        assert_eq!(self.len(), rhs.len(), "reduce over unequal chunks");
+        for (a, b) in self.iter_mut().zip(rhs.iter()) {
+            *a += b;
+        }
+    }
+
+    fn concat(parts: &[Self]) -> Self {
+        let mut out = Vec::with_capacity(parts.iter().map(|p| p.len()).sum());
+        for p in parts {
+            out.extend_from_slice(p);
+        }
+        out
+    }
+}
+
+/// Split a data buffer into `g` contiguous chunks whose sizes differ by at
+/// most one element (the first `len % g` chunks are one longer). With
+/// `len % g == 0` this is the uniform split the chunk-addressed
+/// collectives (AlltoAll, ReduceScatter) require; reductions whose result
+/// is only ever consumed re-concatenated (AllReduce) tolerate the ragged
+/// form — the generic ring algorithms never inspect chunk sizes.
+pub fn split_chunks(buf: &[f32], g: usize) -> Vec<Vec<f32>> {
+    let base = buf.len() / g;
+    let rem = buf.len() % g;
+    let mut out = Vec::with_capacity(g);
+    let mut start = 0;
+    for j in 0..g {
+        let len = base + usize::from(j < rem);
+        out.push(buf[start..start + len].to_vec());
+        start += len;
+    }
+    out
+}
+
+/// What a collective algorithm needs from the world: point-to-point sends,
+/// per-rank compute, dependency joins, and the link-class oracle that
+/// drives per-(sender, class) chaining.
+pub trait Transport {
+    /// Dependency token: [`TaskId`] on the timing plane, `()` on the data
+    /// plane (in-process execution is already sequential).
+    type Handle: Clone;
+    /// Message payload: [`Lump`] (bytes) or `Vec<f32>` (data).
+    type Chunk: Chunk;
+
+    /// Move `chunk` from rank `src` to rank `dst` after `deps`.
+    fn send(
+        &mut self,
+        src: usize,
+        dst: usize,
+        chunk: &Self::Chunk,
+        deps: &[Self::Handle],
+        tag: &'static str,
+    ) -> Self::Handle;
+
+    /// Run `flops` of compute on `rank` after `deps`.
+    fn compute(
+        &mut self,
+        rank: usize,
+        flops: f64,
+        deps: &[Self::Handle],
+        tag: &'static str,
+    ) -> Self::Handle;
+
+    /// Zero-cost fan-in over `deps`.
+    fn join(&mut self, deps: &[Self::Handle], tag: &'static str) -> Self::Handle;
+
+    /// True when `a` and `b` share a node (same link class). Decides the
+    /// per-(sender, link-class) send chaining of the pairwise AlltoAll and
+    /// whether SAA has a second link class to overlap onto.
+    fn same_node(&self, a: usize, b: usize) -> bool;
+}
+
+/// Timing plane: emit the collective as transfer/compute tasks of a
+/// [`SimDag`], classified against a [`ClusterProfile`] topology.
+pub struct DagTransport<'a> {
+    dag: &'a mut SimDag,
+    cluster: &'a ClusterProfile,
+}
+
+impl<'a> DagTransport<'a> {
+    pub fn new(dag: &'a mut SimDag, cluster: &'a ClusterProfile) -> DagTransport<'a> {
+        DagTransport { dag, cluster }
+    }
+}
+
+impl Transport for DagTransport<'_> {
+    type Handle = TaskId;
+    type Chunk = Lump;
+
+    fn send(
+        &mut self,
+        src: usize,
+        dst: usize,
+        chunk: &Lump,
+        deps: &[TaskId],
+        tag: &'static str,
+    ) -> TaskId {
+        self.dag.transfer(src, dst, chunk.0, deps, tag)
+    }
+
+    fn compute(&mut self, rank: usize, flops: f64, deps: &[TaskId], tag: &'static str) -> TaskId {
+        self.dag.compute(rank, flops, deps, tag)
+    }
+
+    fn join(&mut self, deps: &[TaskId], tag: &'static str) -> TaskId {
+        self.dag.join(deps, tag)
+    }
+
+    fn same_node(&self, a: usize, b: usize) -> bool {
+        self.cluster.same_node(a, b)
+    }
+}
+
+/// Data plane: chunks are real `f32` vectors that the algorithms move by
+/// value; the transport's job is the wire log. All ranks live in one
+/// process (`same_node` is uniformly true), so SAA degrades to its
+/// sequential form — per-tag volumes are identical either way.
+#[derive(Debug, Default)]
+pub struct DataTransport {
+    /// Aggregated `(tag, total bytes)` in first-touch order.
+    log: Vec<(&'static str, f64)>,
+}
+
+impl DataTransport {
+    pub fn new() -> DataTransport {
+        DataTransport::default()
+    }
+
+    /// The wire log accumulated so far.
+    pub fn log(&self) -> &[(&'static str, f64)] {
+        &self.log
+    }
+
+    /// Consume the transport, returning its wire log.
+    pub fn into_log(self) -> Vec<(&'static str, f64)> {
+        self.log
+    }
+}
+
+impl Transport for DataTransport {
+    type Handle = ();
+    type Chunk = Vec<f32>;
+
+    fn send(
+        &mut self,
+        _src: usize,
+        _dst: usize,
+        chunk: &Vec<f32>,
+        _deps: &[()],
+        tag: &'static str,
+    ) {
+        let bytes = chunk.bytes();
+        match self.log.iter_mut().find(|(t, _)| *t == tag) {
+            Some((_, b)) => *b += bytes,
+            None => self.log.push((tag, bytes)),
+        }
+    }
+
+    fn compute(&mut self, _rank: usize, _flops: f64, _deps: &[()], _tag: &'static str) {}
+
+    fn join(&mut self, _deps: &[()], _tag: &'static str) {}
+
+    fn same_node(&self, _a: usize, _b: usize) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lump_chunk_arithmetic() {
+        let mut a = Lump(64.0);
+        a.reduce_add(&Lump(64.0));
+        assert_eq!(a.bytes(), 64.0); // reduction keeps wire size
+        let c = Lump::concat(&[Lump(8.0), Lump(24.0)]);
+        assert_eq!(c.bytes(), 32.0);
+    }
+
+    #[test]
+    fn data_chunk_arithmetic() {
+        let mut a = vec![1.0f32, 2.0];
+        a.reduce_add(&vec![10.0, 20.0]);
+        assert_eq!(a, vec![11.0, 22.0]);
+        assert_eq!(a.bytes(), 8.0);
+        let c = <Vec<f32> as Chunk>::concat(&[vec![1.0], vec![2.0, 3.0]]);
+        assert_eq!(c, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn dag_transport_emits_tasks() {
+        let cluster = ClusterProfile::testbed_a();
+        let mut dag = SimDag::new();
+        let mut t = DagTransport::new(&mut dag, &cluster);
+        let a = t.send(0, 1, &Lump(100.0), &[], "x");
+        let b = t.compute(1, 5.0, &[a], "c");
+        t.join(&[b], "j");
+        assert_eq!(dag.len(), 3);
+        assert_eq!(dag.total_network_bytes(), 100.0);
+    }
+
+    #[test]
+    fn split_chunks_covers_ragged_lengths() {
+        let buf: Vec<f32> = (0..7).map(|i| i as f32).collect();
+        let chunks = split_chunks(&buf, 3);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0], vec![0.0, 1.0, 2.0]); // 7 = 3 + 2 + 2
+        assert_eq!(chunks[1], vec![3.0, 4.0]);
+        assert_eq!(chunks[2], vec![5.0, 6.0]);
+        let uniform = split_chunks(&buf[..6], 3);
+        assert!(uniform.iter().all(|c| c.len() == 2));
+    }
+
+    #[test]
+    fn data_transport_aggregates_log_first_touch() {
+        let mut t = DataTransport::new();
+        t.send(0, 1, &vec![0.0f32; 4], &[], "a");
+        t.send(1, 0, &vec![0.0f32; 2], &[], "b");
+        t.send(0, 1, &vec![0.0f32; 4], &[], "a");
+        assert_eq!(t.log(), &[("a", 32.0), ("b", 8.0)]);
+    }
+}

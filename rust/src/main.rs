@@ -282,6 +282,7 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
         Spec::opt_default("cluster", "testbed_b", "cluster profile"),
         Spec::opt("p", "restrict to one P"),
         Spec::opt("limit", "only run the first N configs"),
+        Spec::opt("threads", "sweep worker threads (default: all cores)"),
         Spec::flag("help", "show help"),
     ];
     let a = Args::parse(rest, SPECS)?;
@@ -297,7 +298,10 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
         configs.truncate(limit);
     }
     println!("{} feasible configs on {}", configs.len(), cluster.name);
-    let results = parm::bench::run_sweep(&configs, &cluster, true)?;
+    let results = match a.get_usize("threads")? {
+        Some(t) => parm::bench::run_sweep_with_threads(&configs, &cluster, true, t)?,
+        None => parm::bench::run_sweep(&configs, &cluster, true)?,
+    };
     let s1: Vec<f64> = results.iter().map(|r| r.speedup_s1()).collect();
     let s2: Vec<f64> = results.iter().map(|r| r.speedup_s2()).collect();
     let pm: Vec<f64> = results.iter().map(|r| r.speedup_parm()).collect();

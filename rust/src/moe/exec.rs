@@ -1,23 +1,31 @@
-//! Distributed data-plane executor: runs one MoE layer forward under the
-//! Baseline / S1 / S2 schedule over P in-process ranks with *real* tensor
-//! data and the real collective semantics of [`crate::comm::data`].
+//! Data plane of the unified interpreter: run one MoE layer forward under
+//! any schedule over P in-process ranks with *real* tensor data.
+//!
+//! There is no per-schedule executor here. The SAME Op-program walker that
+//! the simulator times ([`crate::schedule::interp::run_program`]) drives a
+//! [`DataMachine`]: communication ops execute through the one-source
+//! collective algorithms over a [`DataTransport`] (real `f32` chunks), and
+//! the rank-local ops (gate, expert FFN, local combine, un-gate, splits)
+//! are defined once per op — a small abstract machine over the layer's
+//! staged tensors, so Baseline/S1/S2 differ only in the op sequence their
+//! builders emit. Timing/numerics agreement is structural: the wire log
+//! the transport records carries the same tags and byte totals as the
+//! transfer DAG the engine schedules.
 //!
 //! This is the semantics-preservation proof the paper asserts implicitly:
-//! all three schedules (and the single-device reference) must produce the
-//! same outputs for drop-free capacities. The executor also emits a
-//! communication log whose (tag, volume) entries are cross-checked in
-//! tests against the schedule IR the simulator times — the thing we time
-//! is the thing we verified.
+//! all schedules (and the single-device reference) must produce the same
+//! outputs for drop-free capacities.
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
-use crate::cluster::{GroupKind, ProcessGroups};
-use crate::comm::data;
+use crate::cluster::ProcessGroups;
+use crate::comm::transport::{split_chunks, DataTransport};
 use crate::config::MoeLayerConfig;
 use crate::moe::backend::ExpertBackend;
 use crate::moe::gating::{self, DispatchInfo};
 use crate::moe::weights::GlobalWeights;
-use crate::schedule::ScheduleKind;
+use crate::schedule::interp::{run_program, Machine};
+use crate::schedule::{forward_ops, Op, ScheduleKind};
 use crate::util::prng::Rng;
 
 /// The world's state entering a MoE layer.
@@ -60,366 +68,446 @@ impl LayerState {
 pub struct ExecResult {
     /// Per-rank layer outputs, (B·L, M) — same shape/meaning as inputs.
     pub outputs: Vec<Vec<f32>>,
-    /// (tag, per-rank bytes) per collective executed, for IR cross-check.
-    pub comm_log: Vec<(String, f64)>,
+    /// Wire log: aggregated `(tag, total bytes)` across all ranks, in
+    /// first-touch order, using the canonical [`crate::comm::tags`]
+    /// constants — directly comparable to
+    /// [`crate::sim::dag::SimDag::comm_log`] of the lowered program.
+    pub comm_log: Vec<(&'static str, f64)>,
     /// Tokens dropped by capacity limits (0 for generous `f`).
     pub dropped: usize,
 }
 
 /// Execute one forward pass of the layer under `kind`.
+///
+/// S2 and S2-AAS share numerics (the overlap changes timing, not bytes or
+/// values — the generic SAA algorithm computes identical outputs either
+/// way), so both resolve to the same op semantics here.
 pub fn run_schedule(
     kind: ScheduleKind,
     state: &LayerState,
     backend: &mut dyn ExpertBackend,
 ) -> Result<ExecResult> {
-    match kind {
-        ScheduleKind::Baseline => baseline_forward(state, backend),
-        ScheduleKind::S1 => s1_forward(state, backend),
-        // S2 and S2Aas share the data plane (SAA changes timing, not
-        // bytes — saa_data == saa_reference is proven in comm::saa).
-        ScheduleKind::S2 | ScheduleKind::S2Aas => s2_forward(state, backend),
-        ScheduleKind::Parm => {
-            anyhow::bail!("resolve Parm to S1/S2 via the perf model first")
-        }
+    if kind == ScheduleKind::Parm {
+        bail!("resolve Parm to S1/S2 via the perf model first");
     }
+    let ops = forward_ops(kind, &state.cfg);
+    let mut transport = DataTransport::new();
+    let mut machine = DataMachine::new(state, backend, &ops);
+    run_program(&ops, &state.groups, &mut transport, &mut machine)?;
+    ensure!(
+        matches!(machine.stage, Stage::Tokens),
+        "schedule {kind:?} did not return to token stage"
+    );
+    Ok(ExecResult {
+        outputs: machine.buf,
+        comm_log: transport.into_log(),
+        dropped: machine.dropped,
+    })
 }
 
-const FB: f64 = 4.0; // f32 bytes
+/// Where the layer's per-rank primary tensor currently lives in the
+/// forward pipeline. Each [`Op`] has ONE data semantic, keyed off the
+/// stage — the schedules differ only in the op order their builders emit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Stage {
+    /// (n_tok, M) token-major activations.
+    Tokens,
+    /// (E, cap, M) dense dispatch tensor (post-gate).
+    Dispatch,
+    /// (sources, E_local, cap, M) received expert inputs.
+    Recv,
+    /// (sources, E_local, cap, M) computed expert outputs.
+    ExpertOut,
+    /// (sources, E_local, cap, M) per-source partials returned by the
+    /// combine AlltoAll (awaiting the local partial-sum combine).
+    Returned,
+    /// MP-peer-major concatenation of every peer's returned partials
+    /// (the SAA AllGather result, awaiting combine + interleave).
+    Gathered,
+    /// (E, cap, M) combined expert outputs in expert order.
+    Combined,
+}
 
-// ---------------------------------------------------------------------
-// Baseline (Fig 3a): ESP-AllGather → Gate → EP-AlltoAll → experts →
-// ESP-AllReduce → EP-AlltoAll → un-gate → ESP-Split.
-// ---------------------------------------------------------------------
-fn baseline_forward(
-    state: &LayerState,
-    backend: &mut dyn ExpertBackend,
-) -> Result<ExecResult> {
-    let c = &state.cfg;
-    let g = &state.groups;
-    let p = c.par.p;
-    let m = c.m;
-    let hs = c.h / c.par.n_esp;
-    let e_local = c.experts_per_rank();
-    let n_ep = c.par.n_ep();
-    let mut log = Vec::new();
+/// The data plane's [`Machine`]: rank buffers, gating state, and the
+/// per-op tensor semantics.
+struct DataMachine<'a> {
+    cfg: &'a MoeLayerConfig,
+    groups: &'a ProcessGroups,
+    weights: &'a GlobalWeights,
+    backend: &'a mut dyn ExpertBackend,
+    /// Per-rank primary buffer (layout per `stage`).
+    buf: Vec<Vec<f32>>,
+    /// Tokens currently represented per rank (token-stage layouts).
+    n_tok: usize,
+    /// Routing decisions, one per rank, once `Gate` has run.
+    infos: Vec<DispatchInfo>,
+    /// Current capacity per expert (cap_full / N_MP after an S2 MpSplit).
+    cap: usize,
+    /// Capacity at gate time (what `infos` were built with).
+    cap_full: usize,
+    /// Capacity alignment for the gate: N_MP when an MpSplit follows the
+    /// gate in the program (S2 splits the capacity dimension, which must
+    /// divide evenly), else 1.
+    gate_cap_multiple: usize,
+    /// Source blocks in the (sources, E_local, cap, M) layouts: N_EP for
+    /// the EP AlltoAll, P for the fused product-group AlltoAll.
+    sources: usize,
+    stage: Stage,
+    dropped: usize,
+}
 
-    // 1. ESP-AllGather of the tokens.
-    let mut world: Vec<Vec<f32>> = state.tokens.clone();
-    for grp in g.all_groups(GroupKind::Esp) {
-        data::allgather(&mut world, &grp);
+impl<'a> DataMachine<'a> {
+    fn new(state: &'a LayerState, backend: &'a mut dyn ExpertBackend, ops: &[Op]) -> Self {
+        // Structural inference of the gate's capacity alignment: if the
+        // program pauses MP *after* gating (S2), capacity must split
+        // evenly across the MP group.
+        let gate_at = ops.iter().position(|o| matches!(o, Op::Gate { .. }));
+        let split_after_gate = gate_at
+            .map(|g| ops[g + 1..].iter().any(|o| matches!(o, Op::MpSplit { .. })))
+            .unwrap_or(false);
+        DataMachine {
+            cfg: &state.cfg,
+            groups: &state.groups,
+            weights: &state.weights,
+            backend,
+            buf: state.tokens.clone(),
+            n_tok: state.cfg.tokens(),
+            infos: Vec::new(),
+            cap: 0,
+            cap_full: 0,
+            gate_cap_multiple: if split_after_gate { state.cfg.par.n_mp } else { 1 },
+            sources: 0,
+            stage: Stage::Tokens,
+            dropped: 0,
+        }
     }
-    log.push(("esp.allgather".to_string(), (c.tokens() * m) as f64 * FB));
 
-    // 2. Gate the gathered tokens (identical within each ESP group).
-    let n_gathered = c.tokens() * c.par.n_esp;
-    let cap = gating::capacity(n_gathered, c.e, c.k, c.f, 1);
-    let mut infos: Vec<DispatchInfo> = Vec::with_capacity(p);
-    let mut dispatch: Vec<Vec<f32>> = Vec::with_capacity(p);
-    for r in 0..p {
-        let info = gating::gate(&world[r], &state.weights.wg, n_gathered, m, c.e, c.k, cap);
-        dispatch.push(gating::build_dispatch(&info, &world[r], m));
-        infos.push(info);
+    /// Split `buf` into `g` equal chunks (chunk-addressed collectives need
+    /// the uniform partition; divisibility is a semantic requirement).
+    fn equal_chunks(buf: &[f32], g: usize, what: &str) -> Result<Vec<Vec<f32>>> {
+        ensure!(buf.len() % g == 0, "{what}: buffer {} not divisible by {g}", buf.len());
+        Ok(split_chunks(buf, g))
     }
-    let dropped = infos.iter().map(|i| i.dropped).sum();
 
-    // 3. EP-AlltoAll dispatch: chunk j of the (E, cap, M) tensor = the
-    // experts of EP slot j (contiguous rows).
-    let mut world = dispatch;
-    for grp in g.all_groups(GroupKind::Ep) {
-        data::alltoall(&mut world, &grp);
+    /// Per-destination chunks of the fused EP&ESP AlltoAll dispatch: the
+    /// Dump duplicates each expert block's slice to all N_ESP holders of
+    /// its EP slot (destination rank `q` receives the experts of `q`'s
+    /// slot).
+    fn fused_dispatch_chunks(&self, rank: usize) -> Vec<Vec<f32>> {
+        let (e, cap, m) = (self.cfg.e, self.cap, self.cfg.m);
+        let d = &self.buf[rank];
+        (0..self.cfg.par.p)
+            .map(|dst| {
+                let slot = self.groups.ep_slot(dst);
+                let mut out = Vec::new();
+                for ex in self.groups.experts_of_slot(slot, e) {
+                    out.extend_from_slice(&d[ex * cap * m..(ex + 1) * cap * m]);
+                }
+                out
+            })
+            .collect()
     }
-    log.push(("ep.alltoall".to_string(), (e_local * cap * m) as f64 * FB));
-    // Rank now holds (N_EP srcs, E_local, cap, M).
 
-    // 4. Expert shards: per (src, local expert) block, batched per expert.
-    let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); p];
-    for r in 0..p {
-        let (w1s, w2s) = state.weights.shard_for_rank(c, g, r);
-        let recv = &world[r];
-        let mut out = vec![0.0f32; recv.len()];
+    /// Inverse of the Dump: sum the per-source partial copies of one
+    /// returned (sources, E_local, cap, M) block into an (E, cap, M)
+    /// tensor in expert order.
+    fn fused_combine(&self, recv: &[f32]) -> Vec<f32> {
+        let (e, cap, m) = (self.cfg.e, self.cap, self.cfg.m);
+        let p = self.cfg.par.p;
+        let e_local = self.cfg.experts_per_rank();
+        let chunk = e_local * cap * m;
+        assert_eq!(recv.len(), p * chunk, "returned block shape");
+        let mut out = vec![0.0f32; e * cap * m];
+        for q in 0..p {
+            let slot = self.groups.ep_slot(q);
+            for (i, ex) in self.groups.experts_of_slot(slot, e).enumerate() {
+                let src = q * chunk + i * cap * m;
+                let dst = ex * cap * m;
+                for j in 0..cap * m {
+                    out[dst + j] += recv[src + j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Gate the current token buffers into dense dispatch tensors.
+    fn gate(&mut self) -> Result<()> {
+        ensure!(self.stage == Stage::Tokens, "gate expects token stage, got {:?}", self.stage);
+        let c = self.cfg;
+        let cap = gating::capacity(self.n_tok, c.e, c.k, c.f, self.gate_cap_multiple);
+        let mut infos = Vec::with_capacity(c.par.p);
+        for r in 0..c.par.p {
+            let info =
+                gating::gate(&self.buf[r], &self.weights.wg, self.n_tok, c.m, c.e, c.k, cap);
+            let dispatch = gating::build_dispatch(&info, &self.buf[r], c.m);
+            self.buf[r] = dispatch;
+            infos.push(info);
+        }
+        self.dropped += infos.iter().map(|i| i.dropped).sum::<usize>();
+        self.infos = infos;
+        self.cap = cap;
+        self.cap_full = cap;
+        self.stage = Stage::Dispatch;
+        Ok(())
+    }
+
+    /// Expert FFN shards, batched per local expert over all source blocks.
+    fn expert_ffn(&mut self) -> Result<()> {
+        ensure!(self.stage == Stage::Recv, "expert ffn expects received dispatch");
+        let c = self.cfg;
+        let (cap, m) = (self.cap, c.m);
+        let hs = c.h / c.par.n_esp;
+        let e_local = c.experts_per_rank();
+        let sources = self.sources;
         let block = e_local * cap * m;
-        for le in 0..e_local {
-            // Gather rows of local expert `le` from every source chunk.
-            let mut x = Vec::with_capacity(n_ep * cap * m);
-            for src in 0..n_ep {
-                let base = src * block + le * cap * m;
-                x.extend_from_slice(&recv[base..base + cap * m]);
+        for r in 0..c.par.p {
+            let (w1s, w2s) = self.weights.shard_for_rank(c, self.groups, r);
+            let recv = std::mem::take(&mut self.buf[r]);
+            ensure!(recv.len() == sources * block, "expert input shape");
+            let mut out = vec![0.0f32; recv.len()];
+            for le in 0..e_local {
+                // Gather rows of local expert `le` from every source chunk.
+                let mut x = Vec::with_capacity(sources * cap * m);
+                for src in 0..sources {
+                    let base = src * block + le * cap * m;
+                    x.extend_from_slice(&recv[base..base + cap * m]);
+                }
+                let y = self.backend.expert_ffn(&x, &w1s[le], &w2s[le], sources * cap, m, hs)?;
+                for src in 0..sources {
+                    let base = src * block + le * cap * m;
+                    out[base..base + cap * m]
+                        .copy_from_slice(&y[src * cap * m..(src + 1) * cap * m]);
+                }
             }
-            let y = backend.expert_ffn(&x, &w1s[le], &w2s[le], n_ep * cap, m, hs)?;
-            for src in 0..n_ep {
-                let base = src * block + le * cap * m;
-                out[base..base + cap * m]
-                    .copy_from_slice(&y[src * cap * m..(src + 1) * cap * m]);
-            }
+            self.buf[r] = out;
         }
-        outputs[r] = out;
+        self.stage = Stage::ExpertOut;
+        Ok(())
     }
 
-    // 5. ESP-AllReduce of the partial expert outputs.
-    let mut world = outputs;
-    for grp in g.all_groups(GroupKind::Esp) {
-        data::allreduce(&mut world, &grp);
+    /// MP-Split: on tokens, each rank keeps its 1/N_MP token slice (S1);
+    /// on a dispatch tensor, each rank keeps its 1/N_MP capacity-slot
+    /// slice of every expert (S2).
+    fn mp_split(&mut self) -> Result<()> {
+        let c = self.cfg;
+        let n_mp = c.par.n_mp;
+        match self.stage {
+            Stage::Tokens => {
+                ensure!(self.n_tok % n_mp == 0, "B·L must divide N_MP");
+                let n_local = self.n_tok / n_mp;
+                let m = c.m;
+                for r in 0..c.par.p {
+                    let mi = self.groups.mp_index(r);
+                    let slice = self.buf[r][mi * n_local * m..(mi + 1) * n_local * m].to_vec();
+                    self.buf[r] = slice;
+                }
+                self.n_tok = n_local;
+            }
+            Stage::Dispatch => {
+                ensure!(self.cap % n_mp == 0, "capacity must divide N_MP");
+                let cap_local = self.cap / n_mp;
+                let (e, cap, m) = (c.e, self.cap, c.m);
+                for r in 0..c.par.p {
+                    let mi = self.groups.mp_index(r);
+                    let full = &self.buf[r];
+                    let mut part = Vec::with_capacity(e * cap_local * m);
+                    for ex in 0..e {
+                        let base = (ex * cap + mi * cap_local) * m;
+                        part.extend_from_slice(&full[base..base + cap_local * m]);
+                    }
+                    self.buf[r] = part;
+                }
+                self.cap = cap_local;
+            }
+            other => bail!("mp.split has no semantic at stage {other:?}"),
+        }
+        Ok(())
     }
-    log.push(("esp.allreduce".to_string(), (n_ep * e_local * cap * m) as f64 * FB));
 
-    // 6. EP-AlltoAll combine (chunk j = outputs computed for source j).
-    for grp in g.all_groups(GroupKind::Ep) {
-        data::alltoall(&mut world, &grp);
+    /// Local partial-sum combine of the returned shard copies: directly on
+    /// this rank's returned block (S1), or on every MP peer's gathered
+    /// block followed by the capacity-slot interleave back to the full
+    /// (E, cap_full, M) order (S2 after the SAA/AAS combine).
+    fn local_combine(&mut self) -> Result<()> {
+        let c = self.cfg;
+        match self.stage {
+            Stage::Returned => {
+                for r in 0..c.par.p {
+                    let recv = std::mem::take(&mut self.buf[r]);
+                    let combined = self.fused_combine(&recv);
+                    self.buf[r] = combined;
+                }
+            }
+            Stage::Gathered => {
+                let (e, m) = (c.e, c.m);
+                let cap_local = self.cap;
+                let cap_full = self.cap_full;
+                let n_mp = c.par.n_mp;
+                let blk = c.par.p * c.experts_per_rank() * cap_local * m;
+                for r in 0..c.par.p {
+                    let gathered = std::mem::take(&mut self.buf[r]);
+                    ensure!(gathered.len() == n_mp * blk, "gathered combine shape");
+                    let mut full = vec![0.0f32; e * cap_full * m];
+                    for mi in 0..n_mp {
+                        let combined = self.fused_combine(&gathered[mi * blk..(mi + 1) * blk]);
+                        for ex in 0..e {
+                            let src = ex * cap_local * m;
+                            let dst = (ex * cap_full + mi * cap_local) * m;
+                            full[dst..dst + cap_local * m]
+                                .copy_from_slice(&combined[src..src + cap_local * m]);
+                        }
+                    }
+                    self.buf[r] = full;
+                }
+                self.cap = cap_full;
+            }
+            other => bail!("local.combine has no semantic at stage {other:?}"),
+        }
+        self.stage = Stage::Combined;
+        Ok(())
     }
-    log.push(("ep.alltoall".to_string(), (e_local * cap * m) as f64 * FB));
-    // Rank holds (N_EP blocks, E_local, cap, M) = (E, cap, M) in expert
-    // order — exactly its dispatch tensor's outputs.
 
-    // 7. Un-gate to gathered-token order, then ESP-Split keeps own rows.
-    let mut final_out: Vec<Vec<f32>> = vec![Vec::new(); p];
-    for r in 0..p {
-        let y = gating::combine(&infos[r], &world[r], m);
-        let shard = g.esp_shard(r);
-        let start = shard * c.tokens() * m;
-        final_out[r] = y[start..start + c.tokens() * m].to_vec();
+    /// Un-gate: scatter combined expert outputs back to token order.
+    fn ungate(&mut self) -> Result<()> {
+        ensure!(self.stage == Stage::Combined, "ungate expects combined outputs");
+        for r in 0..self.cfg.par.p {
+            let y = gating::combine(&self.infos[r], &self.buf[r], self.cfg.m);
+            self.buf[r] = y;
+        }
+        self.n_tok = self.infos[0].n_tokens;
+        self.stage = Stage::Tokens;
+        Ok(())
     }
-    log.push(("esp.split".to_string(), 0.0));
 
-    Ok(ExecResult { outputs: final_out, comm_log: log, dropped })
+    /// ESP-Split: each rank keeps its own 1/N_ESP token rows (baseline
+    /// epilogue — the gathered-token order splits back per shard).
+    fn esp_split(&mut self) -> Result<()> {
+        ensure!(self.stage == Stage::Tokens, "esp.split expects token stage");
+        let c = self.cfg;
+        let n_esp = c.par.n_esp;
+        ensure!(self.n_tok % n_esp == 0, "token count must divide N_ESP");
+        let t_local = self.n_tok / n_esp;
+        let m = c.m;
+        for r in 0..c.par.p {
+            let shard = self.groups.esp_shard(r);
+            let slice = self.buf[r][shard * t_local * m..(shard + 1) * t_local * m].to_vec();
+            self.buf[r] = slice;
+        }
+        self.n_tok = t_local;
+        Ok(())
+    }
 }
 
-// ---------------------------------------------------------------------
-// PauseMP common pieces (S1/S2): fused dispatch / combine over the
-// EP×ESP product group with local Dump / local Combine.
-// ---------------------------------------------------------------------
-
-/// Build the fused-AlltoAll send buffer from a (E, cap, M) dispatch
-/// tensor: for each destination rank (block j, shard s) append the rows of
-/// block j's experts — the Dump duplicates each block's slice to its
-/// N_ESP shard holders.
-fn fused_send_buffer(
-    d: &[f32],
-    g: &ProcessGroups,
-    e: usize,
-    cap: usize,
-    m: usize,
-) -> Vec<f32> {
-    let p = g.par.p;
-    let mut out = Vec::with_capacity(p * (e / g.par.n_ep()).max(1) * cap * m);
-    for dst in 0..p {
-        let slot = g.ep_slot(dst);
-        for ex in g.experts_of_slot(slot, e) {
-            out.extend_from_slice(&d[ex * cap * m..(ex + 1) * cap * m]);
-        }
-    }
-    out
-}
-
-/// Inverse of the Dump: sum the per-shard partial copies returned by the
-/// combine AlltoAll into a (E, cap, M) tensor.
-fn fused_combine_buffer(
-    recv: &[f32],
-    g: &ProcessGroups,
-    e: usize,
-    cap: usize,
-    m: usize,
-) -> Vec<f32> {
-    let p = g.par.p;
-    let e_local = (e / g.par.n_ep()).max(1);
-    let chunk = e_local * cap * m;
-    assert_eq!(recv.len(), p * chunk);
-    let mut out = vec![0.0f32; e * cap * m];
-    for q in 0..p {
-        let slot = g.ep_slot(q);
-        for (i, ex) in g.experts_of_slot(slot, e).enumerate() {
-            let src = q * chunk + i * cap * m;
-            let dst = ex * cap * m;
-            for j in 0..cap * m {
-                out[dst + j] += recv[src + j];
+impl Machine<DataTransport> for DataMachine<'_> {
+    fn inputs(&mut self, op: &Op, grp: &[usize]) -> Result<Vec<Vec<Vec<f32>>>> {
+        let g = grp.len();
+        match *op {
+            Op::EspAllGather { .. } | Op::MpAllGather { .. } => {
+                ensure!(self.stage == Stage::Tokens, "allgather expects token stage");
+                Ok(grp.iter().map(|&r| vec![self.buf[r].clone()]).collect())
             }
-        }
-    }
-    out
-}
-
-/// Shared S1/S2 middle: fused dispatch → expert shards → fused combine →
-/// local combine. Takes each rank's (E, cap, M) dispatch tensor; returns
-/// each rank's (E, cap, M) expert outputs.
-fn pausemp_expert_phase(
-    state: &LayerState,
-    dispatch: Vec<Vec<f32>>,
-    cap: usize,
-    backend: &mut dyn ExpertBackend,
-    log: &mut Vec<(String, f64)>,
-) -> Result<Vec<Vec<f32>>> {
-    let c = &state.cfg;
-    let g = &state.groups;
-    let p = c.par.p;
-    let m = c.m;
-    let hs = c.h / c.par.n_esp;
-    let e_local = c.experts_per_rank();
-    let world_group: Vec<usize> = g.world();
-
-    // Dump + fused AlltoAll dispatch.
-    let mut world: Vec<Vec<f32>> = dispatch
-        .iter()
-        .map(|d| fused_send_buffer(d, g, c.e, cap, m))
-        .collect();
-    data::alltoall(&mut world, &world_group);
-    log.push(("fused.alltoall".to_string(), (e_local * cap * m) as f64 * FB));
-    // Rank holds (P srcs, E_local, cap, M).
-
-    // Expert shards, batched per local expert over all P sources.
-    let block = e_local * cap * m;
-    for r in 0..p {
-        let (w1s, w2s) = state.weights.shard_for_rank(c, g, r);
-        let recv = std::mem::take(&mut world[r]);
-        let mut out = vec![0.0f32; recv.len()];
-        for le in 0..e_local {
-            let mut x = Vec::with_capacity(p * cap * m);
-            for src in 0..p {
-                let base = src * block + le * cap * m;
-                x.extend_from_slice(&recv[base..base + cap * m]);
+            Op::EspAllReduce { .. } => {
+                ensure!(self.stage == Stage::ExpertOut, "esp.allreduce expects expert outputs");
+                // AllReduce tolerates a ragged partition (the result is
+                // consumed re-concatenated), so no divisibility demand —
+                // the old per-schedule executor accepted these configs too.
+                Ok(grp.iter().map(|&r| split_chunks(&self.buf[r], g)).collect())
             }
-            let y = backend.expert_ffn(&x, &w1s[le], &w2s[le], p * cap, m, hs)?;
-            for src in 0..p {
-                let base = src * block + le * cap * m;
-                out[base..base + cap * m]
-                    .copy_from_slice(&y[src * cap * m..(src + 1) * cap * m]);
+            Op::EpAlltoAll { .. } => match self.stage {
+                Stage::Dispatch | Stage::ExpertOut => grp
+                    .iter()
+                    .map(|&r| Self::equal_chunks(&self.buf[r], g, "ep.alltoall"))
+                    .collect(),
+                other => bail!("ep.alltoall has no semantic at stage {other:?}"),
+            },
+            Op::FusedAlltoAll { .. } | Op::SaaCombine { .. } | Op::AasCombine { .. } => {
+                match self.stage {
+                    // Dispatch direction: Dump + product-group AlltoAll.
+                    Stage::Dispatch => {
+                        Ok(grp.iter().map(|&r| self.fused_dispatch_chunks(r)).collect())
+                    }
+                    // Combine direction: the (P, E_local, cap, M) expert
+                    // outputs are already source-block ordered.
+                    Stage::ExpertOut => grp
+                        .iter()
+                        .map(|&r| Self::equal_chunks(&self.buf[r], g, "fused combine"))
+                        .collect(),
+                    other => bail!("fused alltoall has no semantic at stage {other:?}"),
+                }
             }
-        }
-        world[r] = out;
-    }
-
-    // Fused AlltoAll combine (send buffer already ordered by source).
-    data::alltoall(&mut world, &world_group);
-    log.push(("fused.alltoall".to_string(), (e_local * cap * m) as f64 * FB));
-
-    // Local combine: sum shard partials per expert block.
-    let out = world
-        .iter()
-        .map(|recv| fused_combine_buffer(recv, g, c.e, cap, m))
-        .collect();
-    log.push(("local.combine".to_string(), 0.0));
-    Ok(out)
-}
-
-// ---------------------------------------------------------------------
-// S1 (Fig 3b): MP-Split → Gate → fused dispatch/experts/combine →
-// un-gate → MP-AllGather.
-// ---------------------------------------------------------------------
-fn s1_forward(state: &LayerState, backend: &mut dyn ExpertBackend) -> Result<ExecResult> {
-    let c = &state.cfg;
-    let g = &state.groups;
-    let p = c.par.p;
-    let m = c.m;
-    ensure!(c.tokens() % c.par.n_mp == 0, "B·L must divide N_MP");
-    let n_local = c.tokens() / c.par.n_mp;
-    let mut log = Vec::new();
-
-    // 1. MP-Split: each rank keeps its 1/N_MP token slice.
-    let slices: Vec<Vec<f32>> = (0..p)
-        .map(|r| {
-            let mi = g.mp_index(r);
-            state.tokens[r][mi * n_local * m..(mi + 1) * n_local * m].to_vec()
-        })
-        .collect();
-    log.push(("mp.split".to_string(), 0.0));
-
-    // 2. Gate the local slice.
-    let cap = gating::capacity(n_local, c.e, c.k, c.f, 1);
-    let mut infos = Vec::with_capacity(p);
-    let mut dispatch = Vec::with_capacity(p);
-    for r in 0..p {
-        let info = gating::gate(&slices[r], &state.weights.wg, n_local, m, c.e, c.k, cap);
-        dispatch.push(gating::build_dispatch(&info, &slices[r], m));
-        infos.push(info);
-    }
-    let dropped = infos.iter().map(|i| i.dropped).sum();
-
-    // 3-6. Fused dispatch → experts → fused combine → local combine.
-    let expert_out = pausemp_expert_phase(state, dispatch, cap, backend, &mut log)?;
-
-    // 7. Un-gate to local token order.
-    let mut world: Vec<Vec<f32>> = (0..p)
-        .map(|r| gating::combine(&infos[r], &expert_out[r], m))
-        .collect();
-
-    // 8. MP-AllGather restores the full (B·L, M) tokens.
-    for grp in g.all_groups(GroupKind::Mp) {
-        data::allgather(&mut world, &grp);
-    }
-    log.push(("mp.allgather".to_string(), (n_local * m) as f64 * FB));
-
-    Ok(ExecResult { outputs: world, comm_log: log, dropped })
-}
-
-// ---------------------------------------------------------------------
-// S2 (Fig 3c): Gate (full tokens) → MP-Split of capacity slots → fused
-// dispatch/experts/combine → MP-AllGather of the (E, C, M) outputs
-// (overlapped with the combine via SAA on the wire) → un-gate.
-// ---------------------------------------------------------------------
-fn s2_forward(state: &LayerState, backend: &mut dyn ExpertBackend) -> Result<ExecResult> {
-    let c = &state.cfg;
-    let g = &state.groups;
-    let p = c.par.p;
-    let m = c.m;
-    let n = c.tokens();
-    let mut log = Vec::new();
-
-    // 1. Gate on the full (MP-duplicated) tokens; capacity divisible by
-    // N_MP so the slot split is even.
-    let cap = gating::capacity(n, c.e, c.k, c.f, c.par.n_mp);
-    let cap_local = cap / c.par.n_mp;
-    let mut infos = Vec::with_capacity(p);
-    let mut dispatch_full = Vec::with_capacity(p);
-    for r in 0..p {
-        let info = gating::gate(&state.tokens[r], &state.weights.wg, n, m, c.e, c.k, cap);
-        dispatch_full.push(gating::build_dispatch(&info, &state.tokens[r], m));
-        infos.push(info);
-    }
-    let dropped = infos.iter().map(|i| i.dropped).sum();
-
-    // 2. MP-Split of the capacity dimension: member i keeps slots
-    // [i·cap_local, (i+1)·cap_local) of every expert.
-    let mut dispatch = Vec::with_capacity(p);
-    for r in 0..p {
-        let mi = g.mp_index(r);
-        let full = &dispatch_full[r];
-        let mut part = Vec::with_capacity(c.e * cap_local * m);
-        for ex in 0..c.e {
-            let base = (ex * cap + mi * cap_local) * m;
-            part.extend_from_slice(&full[base..base + cap_local * m]);
-        }
-        dispatch.push(part);
-    }
-    log.push(("mp.split".to_string(), 0.0));
-
-    // 3-6. Fused dispatch → experts → fused combine → local combine.
-    let expert_out = pausemp_expert_phase(state, dispatch, cap_local, backend, &mut log)?;
-
-    // 7. MP-AllGather of the (E, cap_local, M) outputs; on the wire this
-    // is the SAA-overlapped combine (see comm::saa for the equivalence
-    // proof). Gathered chunks interleave back into (E, cap, M) slot order.
-    let mut world = expert_out;
-    for grp in g.all_groups(GroupKind::Mp) {
-        data::allgather(&mut world, &grp);
-    }
-    log.push(("mp.allgather".to_string(), (c.e * cap_local * m) as f64 * FB));
-
-    let mut outputs = Vec::with_capacity(p);
-    for r in 0..p {
-        let gathered = &world[r]; // (N_MP, E, cap_local, M) in MP order
-        let mut full = vec![0.0f32; c.e * cap * m];
-        let chunk = c.e * cap_local * m;
-        for mi in 0..c.par.n_mp {
-            for ex in 0..c.e {
-                let src = mi * chunk + ex * cap_local * m;
-                let dst = (ex * cap + mi * cap_local) * m;
-                full[dst..dst + cap_local * m]
-                    .copy_from_slice(&gathered[src..src + cap_local * m]);
+            Op::EspReduceScatter { .. } | Op::MpReduceScatter { .. } => {
+                bail!("backward op {op:?} is not executed on the data plane")
             }
+            _ => bail!("non-communication op has no chunk inputs: {op:?}"),
         }
-        // 8. Un-gate.
-        outputs.push(gating::combine(&infos[r], &full, m));
     }
 
-    Ok(ExecResult { outputs, comm_log: log, dropped })
+    fn accept(&mut self, op: &Op, grp: &[usize], outputs: Vec<Vec<Vec<f32>>>) -> Result<()> {
+        match *op {
+            Op::EspAllGather { .. }
+            | Op::MpAllGather { .. }
+            | Op::EspAllReduce { .. }
+            | Op::EpAlltoAll { .. }
+            | Op::FusedAlltoAll { .. }
+            | Op::SaaCombine { .. }
+            | Op::AasCombine { .. } => {
+                for (out, &r) in outputs.into_iter().zip(grp.iter()) {
+                    self.buf[r] = out.concat();
+                }
+                Ok(())
+            }
+            _ => bail!("non-communication op has no outputs to accept: {op:?}"),
+        }
+    }
+
+    fn apply_local(&mut self, op: &Op) -> Result<()> {
+        match *op {
+            Op::Gate { .. } => self.gate(),
+            Op::ExpertFfn { .. } => self.expert_ffn(),
+            Op::MpSplit { .. } => self.mp_split(),
+            Op::EspSplit { .. } => self.esp_split(),
+            Op::LocalCombine { .. } => self.local_combine(),
+            Op::Ungate { .. } => self.ungate(),
+            _ => bail!("communication op {op:?} reached apply_local"),
+        }
+    }
+
+    fn finish(&mut self, op: &Op) -> Result<()> {
+        match *op {
+            Op::EspAllGather { .. } | Op::MpAllGather { .. } => {
+                // Gather grew the token dimension.
+                self.n_tok = self.buf[0].len() / self.cfg.m;
+            }
+            Op::EspAllReduce { .. } => {} // shape unchanged
+            Op::EpAlltoAll { .. } => {
+                self.stage = match self.stage {
+                    Stage::Dispatch => {
+                        self.sources = self.cfg.par.n_ep();
+                        Stage::Recv
+                    }
+                    Stage::ExpertOut => Stage::Combined,
+                    other => bail!("ep.alltoall finished at stage {other:?}"),
+                };
+            }
+            Op::FusedAlltoAll { .. } => {
+                self.stage = match self.stage {
+                    Stage::Dispatch => {
+                        self.sources = self.cfg.par.p;
+                        Stage::Recv
+                    }
+                    Stage::ExpertOut => Stage::Returned,
+                    other => bail!("fused.alltoall finished at stage {other:?}"),
+                };
+            }
+            Op::SaaCombine { .. } | Op::AasCombine { .. } => {
+                ensure!(self.stage == Stage::ExpertOut, "saa/aas combine after experts");
+                self.stage = Stage::Gathered;
+            }
+            _ => {}
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -500,65 +588,26 @@ mod tests {
     }
 
     #[test]
-    fn comm_log_matches_schedule_ir() {
-        // The data plane's collective volumes must agree with the op
-        // program the simulator times (within capacity-rounding).
-        use crate::schedule::{forward_ops, Op};
+    fn comm_log_uses_canonical_tags_in_program_order() {
+        use crate::comm::tags;
         let c = cfg(8, 2, 2);
         let state = LayerState::random(&c, 3).unwrap();
         let mut backend = NativeBackend;
-        for kind in [ScheduleKind::Baseline, ScheduleKind::S1, ScheduleKind::S2] {
-            let res = run_schedule(kind, &state, &mut backend).unwrap();
-            let ops = forward_ops(kind, &c);
-            let mut ir_comm: Vec<(&str, f64)> = Vec::new();
-            for o in &ops {
-                match *o {
-                    Op::EspAllGather { bytes_per_rank } => {
-                        ir_comm.push(("esp.allgather", bytes_per_rank))
-                    }
-                    Op::EpAlltoAll { bytes_per_pair } => {
-                        ir_comm.push(("ep.alltoall", bytes_per_pair))
-                    }
-                    Op::EspAllReduce { total_bytes } => {
-                        ir_comm.push(("esp.allreduce", total_bytes))
-                    }
-                    Op::FusedAlltoAll { bytes_per_pair } => {
-                        ir_comm.push(("fused.alltoall", bytes_per_pair))
-                    }
-                    // SAA/AAS = fused combine + MP-AllGather on the wire.
-                    Op::SaaCombine { bytes_per_pair } | Op::AasCombine { bytes_per_pair } => {
-                        ir_comm.push(("fused.alltoall", bytes_per_pair));
-                        ir_comm.push((
-                            "mp.allgather",
-                            crate::schedule::ops::bytes_mp_ag_s2_per_rank(&c),
-                        ));
-                    }
-                    Op::MpAllGather { bytes_per_rank } => {
-                        ir_comm.push(("mp.allgather", bytes_per_rank))
-                    }
-                    _ => {}
-                }
-            }
-            let exec_comm: Vec<(&str, f64)> = res
-                .comm_log
-                .iter()
-                .filter(|(_, b)| *b > 0.0)
-                .map(|(t, b)| (t.as_str(), *b))
-                .collect();
-            assert_eq!(
-                ir_comm.len(),
-                exec_comm.len(),
-                "{kind:?}: IR {ir_comm:?} vs exec {exec_comm:?}"
-            );
-            for ((it, ib), (et, eb)) in ir_comm.iter().zip(exec_comm.iter()) {
-                assert_eq!(it, et, "{kind:?} op order");
-                let rel = (ib - eb).abs() / ib.max(*eb);
-                assert!(
-                    rel < 0.15,
-                    "{kind:?} {it}: IR {ib} vs exec {eb} (rel {rel})"
-                );
-            }
-        }
+
+        let res = run_schedule(ScheduleKind::Baseline, &state, &mut backend).unwrap();
+        let tags_seen: Vec<&str> = res.comm_log.iter().map(|(t, _)| *t).collect();
+        assert_eq!(
+            tags_seen,
+            vec![tags::ESP_ALLGATHER, tags::EP_ALLTOALL, tags::ESP_ALLREDUCE]
+        );
+        assert!(res.comm_log.iter().all(|(_, b)| *b > 0.0));
+
+        let res = run_schedule(ScheduleKind::S2, &state, &mut backend).unwrap();
+        let tags_seen: Vec<&str> = res.comm_log.iter().map(|(t, _)| *t).collect();
+        assert_eq!(
+            tags_seen,
+            vec![tags::FUSED_ALLTOALL, tags::SAA_COMBINE, tags::MP_ALLGATHER]
+        );
     }
 
     #[test]

@@ -77,18 +77,18 @@ pub fn measure_collective(
         CollKind::AgMp => {
             let per_rank = x / par.n_mp as f64;
             for grp in groups.all_groups(GroupKind::Mp) {
-                lower::ring_allgather(&mut dag, &grp, per_rank, &[], "m");
+                lower::ring_allgather(&mut dag, cluster, &grp, per_rank, &[], "m");
             }
         }
         CollKind::AgEsp => {
             let per_rank = x / par.n_esp as f64;
             for grp in groups.all_groups(GroupKind::Esp) {
-                lower::ring_allgather(&mut dag, &grp, per_rank, &[], "m");
+                lower::ring_allgather(&mut dag, cluster, &grp, per_rank, &[], "m");
             }
         }
         CollKind::ArEsp => {
             for grp in groups.all_groups(GroupKind::Esp) {
-                lower::ring_allreduce(&mut dag, &grp, x, &[], "m");
+                lower::ring_allreduce(&mut dag, cluster, &grp, x, &[], "m");
             }
         }
         CollKind::A2aEp => {

@@ -27,10 +27,14 @@ pub fn forward_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
                 },
                 Op::EspAllReduce { total_bytes: ops::bytes_esp_ar_total(c) },
                 Op::EpAlltoAll { bytes_per_pair: ops::bytes_ep_a2a_per_pair(c) },
-                Op::EspSplit { bytes_per_rank: split_bytes },
+                // Un-gate back to gathered-token order, THEN the ESP-Split
+                // keeps each rank's own token rows — the order the data
+                // plane actually executes (both are rank-local; the free
+                // split does not move the timing frontier either way).
                 Op::Ungate {
                     flops_per_rank: (c.tokens() * c.k * c.m) as f64,
                 },
+                Op::EspSplit { bytes_per_rank: split_bytes },
             ]
         }
         ScheduleKind::S1 => {
@@ -159,8 +163,8 @@ mod tests {
                 "expert.ffn",
                 "esp.allreduce",
                 "ep.alltoall",
-                "esp.split",
-                "ungate"
+                "ungate",
+                "esp.split"
             ]
         );
     }

@@ -1,0 +1,242 @@
+//! The transport-generic Op-program interpreter — ONE walker for the
+//! schedule IR, shared by the timing plane and the data plane.
+//!
+//! `run_program` walks a schedule's [`Op`] program once: communication ops
+//! dispatch to the one-source collective algorithms of
+//! [`crate::comm::algo`] over the layout's process groups, compute ops
+//! charge per-rank FLOPs, and per-rank dependency frontiers chain it all
+//! without global barriers. What varies between the planes is factored
+//! into two small traits:
+//!
+//! * the [`Transport`] (how a message/compute/join materializes — DAG task
+//!   or real `f32` movement), and
+//! * the [`Machine`] (how a plane marshals an op's chunk payloads and what
+//!   rank-local work accompanies the non-communication ops).
+//!
+//! The timing plane's machine ([`crate::schedule::lowering`]) reads chunk
+//! sizes straight off the op's byte fields and ignores payloads; the data
+//! plane's machine ([`crate::moe::exec`]) slices real rank buffers and
+//! applies gating/expert/combine semantics. Neither re-states which
+//! collective an op is, over which groups it runs, or how its messages
+//! chain — that exists only here and in `comm::algo`.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::cluster::{GroupKind, ProcessGroups};
+use crate::comm::algo;
+use crate::comm::tags;
+use crate::comm::transport::Transport;
+
+use super::ops::Op;
+
+/// Plane-specific semantics around the shared interpreter.
+pub trait Machine<T: Transport> {
+    /// Marshal the chunks each member of `grp` contributes to `op`.
+    /// Shape contract per member: AllGather ops → 1 chunk; ReduceScatter /
+    /// AllReduce / AlltoAll / SAA ops → one chunk per group member
+    /// (pair-addressed for the AlltoAll-likes, equal partition for the
+    /// reductions).
+    fn inputs(&mut self, op: &Op, grp: &[usize]) -> Result<Vec<Vec<T::Chunk>>>;
+
+    /// Accept a collective's result; `outputs[k]` is member `grp[k]`'s
+    /// chunk list: the gathered chunks (AllGather, group order), its
+    /// reduced chunk (ReduceScatter), all reduced chunks (AllReduce), the
+    /// received chunks in source order (AlltoAll), or the MP-peer-major
+    /// flattening of the SAA AllGather result.
+    fn accept(&mut self, op: &Op, grp: &[usize], outputs: Vec<Vec<T::Chunk>>) -> Result<()>;
+
+    /// Apply the rank-local semantics of a non-communication op (gate,
+    /// expert FFN, local combine, un-gate, and the free splits).
+    fn apply_local(&mut self, op: &Op) -> Result<()>;
+
+    /// Called once after ALL groups of a communication op have been
+    /// accepted — the place for whole-op state transitions (a machine must
+    /// not change what `inputs` returns while sibling groups of the same
+    /// op are still being marshalled).
+    fn finish(&mut self, _op: &Op) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Which process-group kind an op's collective runs over.
+fn group_kind(op: &Op) -> Option<GroupKind> {
+    match op {
+        Op::EspAllGather { .. } | Op::EspReduceScatter { .. } | Op::EspAllReduce { .. } => {
+            Some(GroupKind::Esp)
+        }
+        Op::MpAllGather { .. } | Op::MpReduceScatter { .. } => Some(GroupKind::Mp),
+        Op::EpAlltoAll { .. } => Some(GroupKind::Ep),
+        Op::FusedAlltoAll { .. } => Some(GroupKind::EpEsp),
+        // SAA/AAS span the product group plus the MP partition — handled
+        // separately by the interpreter.
+        _ => None,
+    }
+}
+
+/// Walk `ops` once over `groups`, executing every op through `transport`
+/// and `machine`. Returns the final per-rank frontier handles (the layer's
+/// completion events on the timing plane).
+pub fn run_program<T, M>(
+    ops: &[Op],
+    groups: &ProcessGroups,
+    transport: &mut T,
+    machine: &mut M,
+) -> Result<Vec<Option<T::Handle>>>
+where
+    T: Transport,
+    M: Machine<T>,
+{
+    let p = groups.par.p;
+    let mut frontier: Vec<Option<T::Handle>> = vec![None; p];
+
+    let deps_of = |frontier: &[Option<T::Handle>], ranks: &[usize]| -> Vec<T::Handle> {
+        ranks.iter().filter_map(|&r| frontier[r].clone()).collect()
+    };
+
+    for op in ops {
+        let tag = op.tag();
+        match *op {
+            Op::EspSplit { .. } | Op::MpSplit { .. } => {
+                // Free on the wire (local view change); the frontier does
+                // not move.
+                machine.apply_local(op)?;
+            }
+            Op::Gate { flops_per_rank }
+            | Op::ExpertFfn { flops_per_rank }
+            | Op::LocalCombine { flops_per_rank }
+            | Op::Ungate { flops_per_rank } => {
+                machine.apply_local(op)?;
+                for r in 0..p {
+                    let dep: Vec<T::Handle> = frontier[r].iter().cloned().collect();
+                    frontier[r] = Some(transport.compute(r, flops_per_rank, &dep, tag));
+                }
+            }
+            Op::SaaCombine { .. } | Op::AasCombine { .. } => {
+                let world = groups.world();
+                let mp_groups = groups.all_groups(GroupKind::Mp);
+                let ins = machine.inputs(op, &world)?;
+                let deps = deps_of(&frontier, &world);
+                let overlap = matches!(*op, Op::SaaCombine { .. });
+                let (outs, ends) = algo::saa(
+                    transport,
+                    &world,
+                    &mp_groups,
+                    &ins,
+                    &deps,
+                    tag,
+                    tags::MP_ALLGATHER,
+                    overlap,
+                );
+                let flat: Vec<Vec<T::Chunk>> = outs
+                    .into_iter()
+                    .map(|per_peer| per_peer.into_iter().flatten().collect())
+                    .collect();
+                machine.accept(op, &world, flat)?;
+                for (k, &r) in world.iter().enumerate() {
+                    frontier[r] = Some(ends[k].clone());
+                }
+                machine.finish(op)?;
+            }
+            _ => {
+                let kind = group_kind(op)
+                    .ok_or_else(|| anyhow::anyhow!("op {op:?} has no interpretation"))?;
+                for grp in groups.all_groups(kind) {
+                    let ins = machine.inputs(op, &grp)?;
+                    ensure!(ins.len() == grp.len(), "one chunk list per member");
+                    let deps = deps_of(&frontier, &grp);
+                    let (outs, ends) = match *op {
+                        Op::EspAllGather { .. } | Op::MpAllGather { .. } => {
+                            let mut flat = Vec::with_capacity(grp.len());
+                            for mut chunks in ins {
+                                ensure!(
+                                    chunks.len() == 1,
+                                    "AllGather takes one chunk per member"
+                                );
+                                flat.push(chunks.pop().expect("checked non-empty"));
+                            }
+                            algo::ring_allgather(transport, &grp, &flat, &deps, tag)
+                        }
+                        Op::EspReduceScatter { .. } | Op::MpReduceScatter { .. } => {
+                            let (reduced, ends) =
+                                algo::ring_reduce_scatter(transport, &grp, &ins, &deps, tag);
+                            (reduced.into_iter().map(|c| vec![c]).collect(), ends)
+                        }
+                        Op::EspAllReduce { .. } => {
+                            algo::ring_allreduce(transport, &grp, &ins, &deps, tag)
+                        }
+                        Op::EpAlltoAll { .. } | Op::FusedAlltoAll { .. } => {
+                            algo::pairwise_alltoall(transport, &grp, &ins, &deps, tag)
+                        }
+                        _ => bail!("unreachable: {op:?} classified as group collective"),
+                    };
+                    machine.accept(op, &grp, outs)?;
+                    for (k, &r) in grp.iter().enumerate() {
+                        frontier[r] = Some(ends[k].clone());
+                    }
+                }
+                machine.finish(op)?;
+            }
+        }
+    }
+    Ok(frontier)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::transport::DataTransport;
+    use crate::config::moe::ParallelDegrees;
+
+    /// A machine that feeds fixed-size lumps and counts op dispatches —
+    /// enough to pin the interpreter's walking order.
+    struct CountingMachine {
+        comm_ops: Vec<&'static str>,
+        local_ops: Vec<&'static str>,
+    }
+
+    impl Machine<DataTransport> for CountingMachine {
+        fn inputs(&mut self, op: &Op, grp: &[usize]) -> Result<Vec<Vec<Vec<f32>>>> {
+            let per = match op {
+                Op::EspAllGather { .. } | Op::MpAllGather { .. } => 1,
+                _ => grp.len(),
+            };
+            Ok(vec![vec![vec![1.0f32; 2]; per]; grp.len()])
+        }
+
+        fn accept(&mut self, op: &Op, _grp: &[usize], _outputs: Vec<Vec<Vec<f32>>>) -> Result<()> {
+            self.comm_ops.push(op.tag());
+            Ok(())
+        }
+
+        fn apply_local(&mut self, op: &Op) -> Result<()> {
+            self.local_ops.push(op.tag());
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn interpreter_visits_every_op_once_per_group() {
+        let groups = ProcessGroups::new(ParallelDegrees { p: 4, n_mp: 2, n_esp: 2 }).unwrap();
+        let ops = vec![
+            Op::MpSplit { bytes_per_rank: 0.0 },
+            Op::Gate { flops_per_rank: 1.0 },
+            Op::EspAllGather { bytes_per_rank: 8.0 },
+            Op::FusedAlltoAll { bytes_per_pair: 8.0 },
+            Op::SaaCombine { bytes_per_pair: 8.0 },
+        ];
+        let mut t = DataTransport::new();
+        let mut m = CountingMachine { comm_ops: Vec::new(), local_ops: Vec::new() };
+        run_program(&ops, &groups, &mut t, &mut m).unwrap();
+        assert_eq!(m.local_ops, vec!["mp.split", "gate"]);
+        // ESP-AllGather runs once per ESP group (2), the fused AlltoAll and
+        // SAA once over the whole world.
+        assert_eq!(
+            m.comm_ops,
+            vec!["esp.allgather", "esp.allgather", "fused.alltoall", "saa.combine"]
+        );
+        // Wire log covers both the a2a and its overlapped AllGather.
+        let tags: Vec<&str> = t.log().iter().map(|(t, _)| *t).collect();
+        assert!(tags.contains(&"saa.combine"));
+        assert!(tags.contains(&"mp.allgather"));
+    }
+}

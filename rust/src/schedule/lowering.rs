@@ -1,29 +1,66 @@
-//! Lowering of a schedule's op program to a [`SimDag`] for the
-//! discrete-event engine.
+//! Timing plane of the unified interpreter: lower a schedule's op program
+//! to a [`SimDag`] for the discrete-event engine.
 //!
 //! Ranks `0..P` of the MoE layer map to GPUs `0..P` of the cluster
-//! (contiguous placement, as DeepSpeed-MoE). Each rank carries a frontier
-//! task; collectives join the frontiers of their group members, compute
-//! chains per rank.
+//! (contiguous placement, as DeepSpeed-MoE). The walking itself — group
+//! selection, algorithm choice, per-rank frontier chaining — lives in
+//! [`crate::schedule::interp`] and is shared verbatim with the data-plane
+//! executor; this module only supplies the byte-lump payloads read off the
+//! op fields ([`DagMachine`]).
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
-use crate::cluster::{GroupKind, ProcessGroups};
-use crate::comm::{lower, saa};
+use crate::cluster::ProcessGroups;
+use crate::comm::transport::{DagTransport, Lump};
 use crate::config::{ClusterProfile, MoeLayerConfig};
-use crate::sim::dag::{SimDag, TaskId};
+use crate::sim::dag::SimDag;
 use crate::sim::engine::{SimReport, Simulator};
 
 use super::builders;
+use super::interp::{run_program, Machine};
 use super::ops::{Op, ScheduleKind};
+
+/// The timing plane's [`Machine`]: chunk sizes come straight from the op's
+/// byte fields; payload contents and local transforms are irrelevant.
+struct DagMachine;
+
+impl Machine<DagTransport<'_>> for DagMachine {
+    fn inputs(&mut self, op: &Op, grp: &[usize]) -> Result<Vec<Vec<Lump>>> {
+        let g = grp.len();
+        Ok(match *op {
+            // AllGathers: each member contributes one chunk of its input.
+            Op::EspAllGather { bytes_per_rank } | Op::MpAllGather { bytes_per_rank } => {
+                vec![vec![Lump(bytes_per_rank)]; g]
+            }
+            // Reductions: each member's buffer splits into g ring chunks.
+            Op::EspReduceScatter { total_bytes }
+            | Op::MpReduceScatter { total_bytes }
+            | Op::EspAllReduce { total_bytes } => {
+                vec![vec![Lump(total_bytes / g as f64); g]; g]
+            }
+            // AlltoAll-likes: one chunk per (src, dst) pair.
+            Op::EpAlltoAll { bytes_per_pair }
+            | Op::FusedAlltoAll { bytes_per_pair }
+            | Op::SaaCombine { bytes_per_pair }
+            | Op::AasCombine { bytes_per_pair } => {
+                vec![vec![Lump(bytes_per_pair); g]; g]
+            }
+            _ => bail!("non-communication op has no chunk inputs: {op:?}"),
+        })
+    }
+
+    fn accept(&mut self, _op: &Op, _grp: &[usize], _outputs: Vec<Vec<Lump>>) -> Result<()> {
+        Ok(()) // the timing plane drops payloads
+    }
+
+    fn apply_local(&mut self, _op: &Op) -> Result<()> {
+        Ok(())
+    }
+}
 
 /// Lower `ops` for `cfg` onto `cluster`; returns the DAG (makespan = the
 /// program's iteration time once simulated).
-pub fn lower_ops(
-    ops: &[Op],
-    cfg: &MoeLayerConfig,
-    cluster: &ClusterProfile,
-) -> Result<SimDag> {
+pub fn lower_ops(ops: &[Op], cfg: &MoeLayerConfig, cluster: &ClusterProfile) -> Result<SimDag> {
     let p = cfg.par.p;
     ensure!(
         p <= cluster.total_gpus(),
@@ -34,131 +71,9 @@ pub fn lower_ops(
     );
     let groups = ProcessGroups::new(cfg.par)?;
     let mut dag = SimDag::new();
-    // Current frontier (last task) per rank; None = start of program.
-    let mut frontier: Vec<Option<TaskId>> = vec![None; p];
-
-    // Join the frontiers of a set of ranks into a dep list.
-    let deps_of = |frontier: &[Option<TaskId>], ranks: &[usize]| -> Vec<TaskId> {
-        ranks.iter().filter_map(|&r| frontier[r]).collect()
-    };
-
-    for op in ops {
-        let tag = op.tag();
-        match *op {
-            Op::EspSplit { .. } | Op::MpSplit { .. } => {
-                // Free in forward (local view change).
-            }
-            Op::Gate { flops_per_rank }
-            | Op::ExpertFfn { flops_per_rank }
-            | Op::LocalCombine { flops_per_rank }
-            | Op::Ungate { flops_per_rank } => {
-                for r in 0..p {
-                    let dep: Vec<TaskId> = frontier[r].into_iter().collect();
-                    let t = dag.compute(r, flops_per_rank, &dep, tag);
-                    frontier[r] = Some(t);
-                }
-            }
-            Op::EspAllGather { bytes_per_rank } => {
-                lower_groups(&mut dag, &groups, GroupKind::Esp, &mut frontier, |dag, grp, deps| {
-                    lower::ring_allgather(dag, grp, bytes_per_rank, deps, tag)
-                });
-            }
-            Op::EspReduceScatter { total_bytes } => {
-                lower_groups(&mut dag, &groups, GroupKind::Esp, &mut frontier, |dag, grp, deps| {
-                    let chunk = total_bytes / grp.len() as f64;
-                    lower::ring_reduce_scatter(dag, grp, chunk, deps, tag)
-                });
-            }
-            Op::EspAllReduce { total_bytes } => {
-                lower_groups(&mut dag, &groups, GroupKind::Esp, &mut frontier, |dag, grp, deps| {
-                    lower::ring_allreduce(dag, grp, total_bytes, deps, tag)
-                });
-            }
-            Op::MpAllGather { bytes_per_rank } => {
-                lower_groups(&mut dag, &groups, GroupKind::Mp, &mut frontier, |dag, grp, deps| {
-                    lower::ring_allgather(dag, grp, bytes_per_rank, deps, tag)
-                });
-            }
-            Op::MpReduceScatter { total_bytes } => {
-                lower_groups(&mut dag, &groups, GroupKind::Mp, &mut frontier, |dag, grp, deps| {
-                    let chunk = total_bytes / grp.len() as f64;
-                    lower::ring_reduce_scatter(dag, grp, chunk, deps, tag)
-                });
-            }
-            Op::EpAlltoAll { bytes_per_pair } => {
-                lower_groups(&mut dag, &groups, GroupKind::Ep, &mut frontier, |dag, grp, deps| {
-                    lower::pairwise_alltoall(dag, cluster, grp, bytes_per_pair, deps, tag)
-                });
-            }
-            Op::FusedAlltoAll { bytes_per_pair } => {
-                lower_groups(
-                    &mut dag,
-                    &groups,
-                    GroupKind::EpEsp,
-                    &mut frontier,
-                    |dag, grp, deps| {
-                        lower::pairwise_alltoall(dag, cluster, grp, bytes_per_pair, deps, tag)
-                    },
-                );
-            }
-            Op::SaaCombine { bytes_per_pair } => {
-                let world: Vec<usize> = groups.world();
-                let mp_groups = groups.all_groups(GroupKind::Mp);
-                let deps = deps_of(&frontier, &world);
-                let ends = saa::saa_lower(
-                    &mut dag,
-                    cluster,
-                    &world,
-                    &mp_groups,
-                    bytes_per_pair,
-                    &deps,
-                    "saa.combine",
-                    "mp.allgather",
-                );
-                for (i, &r) in world.iter().enumerate() {
-                    frontier[r] = Some(ends[i]);
-                }
-            }
-            Op::AasCombine { bytes_per_pair } => {
-                let world: Vec<usize> = groups.world();
-                let mp_groups = groups.all_groups(GroupKind::Mp);
-                let deps = deps_of(&frontier, &world);
-                let ends = saa::aas_lower(
-                    &mut dag,
-                    cluster,
-                    &world,
-                    &mp_groups,
-                    bytes_per_pair,
-                    &deps,
-                    "aas.combine",
-                    "mp.allgather",
-                );
-                for (i, &r) in world.iter().enumerate() {
-                    frontier[r] = Some(ends[i]);
-                }
-            }
-        }
-    }
+    let mut transport = DagTransport::new(&mut dag, cluster);
+    run_program(ops, &groups, &mut transport, &mut DagMachine)?;
     Ok(dag)
-}
-
-/// Lower one collective over every group of `kind`, updating frontiers.
-fn lower_groups<F>(
-    dag: &mut SimDag,
-    groups: &ProcessGroups,
-    kind: GroupKind,
-    frontier: &mut [Option<TaskId>],
-    mut f: F,
-) where
-    F: FnMut(&mut SimDag, &[usize], &[TaskId]) -> Vec<TaskId>,
-{
-    for grp in groups.all_groups(kind) {
-        let deps: Vec<TaskId> = grp.iter().filter_map(|&r| frontier[r]).collect();
-        let ends = f(dag, &grp, &deps);
-        for (i, &r) in grp.iter().enumerate() {
-            frontier[r] = Some(ends[i]);
-        }
-    }
 }
 
 /// Simulate one full training iteration (fwd+bwd) of a MoE layer under a
@@ -293,5 +208,19 @@ mod tests {
             "comm ratio {} should dominate",
             r.comm_ratio()
         );
+    }
+
+    #[test]
+    fn dag_comm_log_uses_canonical_tags() {
+        use crate::comm::tags;
+        let cluster = testbed_b();
+        let c = cfg(8, 2, 2);
+        let ops = builders::forward_ops(ScheduleKind::S2, &c);
+        let dag = lower_ops(&ops, &c, &cluster).unwrap();
+        let log = dag.comm_log();
+        let tags_seen: Vec<&str> = log.iter().map(|(t, _)| *t).collect();
+        assert!(tags_seen.contains(&tags::FUSED_ALLTOALL));
+        assert!(tags_seen.contains(&tags::SAA_COMBINE));
+        assert!(tags_seen.contains(&tags::MP_ALLGATHER));
     }
 }

@@ -1,14 +1,27 @@
 //! The paper's contribution: dedicated MoE-layer schedules.
 //!
-//! * [`ops`] — the schedule IR shared by timing and numerics.
+//! * [`ops`] — the schedule IR: one MoE layer's execution under one
+//!   schedule is a short program of [`ops::Op`]s, and this IR is the ONLY
+//!   place communication structure is defined.
 //! * [`builders`] — Baseline (Fig 3a), S1 (Fig 3b), S2 (Fig 3c, with SAA
 //!   or AAS combine) forward/backward programs.
-//! * [`lowering`] — programs → transfer/compute DAGs → simulated time.
+//! * [`interp`] — the transport-generic interpreter: ONE walker over the
+//!   op program, shared by the timing plane and the data plane. Which
+//!   collective an op is, over which process groups it runs, and how its
+//!   messages chain exists exactly once (here and in
+//!   [`crate::comm::algo`]).
+//! * [`lowering`] — the timing plane: programs → transfer/compute DAGs →
+//!   simulated time, via the interpreter over a
+//!   [`crate::comm::transport::DagTransport`]. (The data plane lives in
+//!   [`crate::moe::exec`], via the same interpreter over a
+//!   [`crate::comm::transport::DataTransport`].)
 
 pub mod builders;
+pub mod interp;
 pub mod lowering;
 pub mod ops;
 
 pub use builders::{backward_ops, forward_ops, iteration_ops};
+pub use interp::{run_program, Machine};
 pub use lowering::{lower_ops, simulate_forward, simulate_iteration};
 pub use ops::{Op, ScheduleKind};

@@ -48,24 +48,27 @@ pub enum Op {
 }
 
 impl Op {
-    /// Short tag for trace/report accounting.
+    /// Canonical tag for trace/report/comm-log accounting — the constants
+    /// of [`crate::comm::tags`], shared verbatim by the simulator's
+    /// per-tag accounting and the data plane's wire log.
     pub fn tag(&self) -> &'static str {
+        use crate::comm::tags;
         match self {
-            Op::EspAllGather { .. } => "esp.allgather",
-            Op::EpAlltoAll { .. } => "ep.alltoall",
-            Op::EspAllReduce { .. } => "esp.allreduce",
-            Op::EspReduceScatter { .. } => "esp.reducescatter",
-            Op::MpReduceScatter { .. } => "mp.reducescatter",
-            Op::EspSplit { .. } => "esp.split",
-            Op::MpSplit { .. } => "mp.split",
-            Op::MpAllGather { .. } => "mp.allgather",
-            Op::FusedAlltoAll { .. } => "fused.alltoall",
-            Op::SaaCombine { .. } => "saa.combine",
-            Op::AasCombine { .. } => "aas.combine",
-            Op::Gate { .. } => "gate",
-            Op::ExpertFfn { .. } => "expert.ffn",
-            Op::LocalCombine { .. } => "local.combine",
-            Op::Ungate { .. } => "ungate",
+            Op::EspAllGather { .. } => tags::ESP_ALLGATHER,
+            Op::EpAlltoAll { .. } => tags::EP_ALLTOALL,
+            Op::EspAllReduce { .. } => tags::ESP_ALLREDUCE,
+            Op::EspReduceScatter { .. } => tags::ESP_REDUCESCATTER,
+            Op::MpReduceScatter { .. } => tags::MP_REDUCESCATTER,
+            Op::EspSplit { .. } => tags::ESP_SPLIT,
+            Op::MpSplit { .. } => tags::MP_SPLIT,
+            Op::MpAllGather { .. } => tags::MP_ALLGATHER,
+            Op::FusedAlltoAll { .. } => tags::FUSED_ALLTOALL,
+            Op::SaaCombine { .. } => tags::SAA_COMBINE,
+            Op::AasCombine { .. } => tags::AAS_COMBINE,
+            Op::Gate { .. } => tags::GATE,
+            Op::ExpertFfn { .. } => tags::EXPERT_FFN,
+            Op::LocalCombine { .. } => tags::LOCAL_COMBINE,
+            Op::Ungate { .. } => tags::UNGATE,
         }
     }
 

@@ -87,6 +87,26 @@ impl SimDag {
             .sum()
     }
 
+    /// The DAG's wire log: aggregated `(tag, total bytes)` over network
+    /// transfers (src ≠ dst), in first-touch order — the same shape the
+    /// data plane's [`crate::comm::transport::DataTransport`] records, so
+    /// the two planes' logs can be compared directly (they use the same
+    /// tag constants from [`crate::comm::tags`]).
+    pub fn comm_log(&self) -> Vec<(&'static str, f64)> {
+        let mut log: Vec<(&'static str, f64)> = Vec::new();
+        for t in &self.tasks {
+            if let TaskKind::Transfer { src, dst, bytes } = t.kind {
+                if src != dst {
+                    match log.iter_mut().find(|(tag, _)| *tag == t.tag) {
+                        Some((_, b)) => *b += bytes,
+                        None => log.push((t.tag, bytes)),
+                    }
+                }
+            }
+        }
+        log
+    }
+
     /// Total compute FLOPs in the DAG.
     pub fn total_flops(&self) -> f64 {
         self.tasks
@@ -113,6 +133,7 @@ mod tests {
         assert_eq!(d.len(), 4);
         assert_eq!(d.total_network_bytes(), 100.0); // local copy excluded
         assert_eq!(d.total_flops(), 500.0);
+        assert_eq!(d.comm_log(), vec![("t", 100.0)]); // local copy excluded
     }
 
     #[test]

@@ -45,7 +45,11 @@ pub struct SimReport {
     /// Busy seconds per node NIC (max of tx/rx).
     pub inter_busy: Vec<f64>,
     /// Aggregated transfer seconds per tag (tags are 'static, so this is
-    /// a small alloc-free association list, not a per-task log).
+    /// a small alloc-free association list, not a per-task log). Tags are
+    /// the canonical constants of [`crate::comm::tags`] — the same strings
+    /// the data plane's comm log uses, so sweep reports and executor logs
+    /// diff mechanically (compare with
+    /// [`crate::sim::dag::SimDag::comm_log`] for volumes).
     pub tag_seconds: Vec<(&'static str, f64)>,
 }
 

@@ -141,6 +141,23 @@ pub fn bench_header(title: &str, paper_ref: &str) {
     println!("{}", "-".repeat(72));
 }
 
+/// Shared entry point for the paper-artifact bench binaries: prints the
+/// standard header, runs the table/figure generator against the reports
+/// directory (`reports/`, overridable via `PARM_REPORTS_DIR`), and prints
+/// its rendered output. Every `benches/<name>.rs` paper stub is exactly
+/// one call to this.
+pub fn run_paper_bench<F>(name: &str, entry: &str, generate: F) -> anyhow::Result<()>
+where
+    F: FnOnce(&std::path::Path) -> anyhow::Result<String>,
+{
+    bench_header(name, entry);
+    let dir = std::env::var("PARM_REPORTS_DIR").unwrap_or_else(|_| "reports".into());
+    let out = generate(std::path::Path::new(&dir))?;
+    println!("{out}");
+    println!("reports written to {dir}/");
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,7 +1,7 @@
 //! Integration: paper-shape assertions over a slice of the Table III
 //! sweep — the qualitative claims of §VI-C must hold in the simulator.
 
-use parm::bench::{run_sweep, ModelCache};
+use parm::bench::{run_sweep, run_sweep_with_threads, ModelCache};
 use parm::config::moe::ParallelDegrees;
 use parm::config::{sweep, ClusterProfile, MoeLayerConfig, SweepFilter};
 use parm::util::stats::mean;
@@ -121,10 +121,29 @@ fn saa_helps_on_average() {
 }
 
 #[test]
+fn parallel_sweep_is_byte_identical_to_sequential() {
+    // The acceptance bar for the parallel runner: identical CaseResult
+    // ordering and contents to the sequential runner, at several widths.
+    let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+    let configs = decimated(&cluster, 31);
+    assert!(configs.len() >= 8, "decimation too aggressive");
+    let seq = run_sweep_with_threads(&configs, &cluster, false, 1).unwrap();
+    for threads in [2usize, 4, 8] {
+        let par = run_sweep_with_threads(&configs, &cluster, false, threads).unwrap();
+        assert_eq!(seq.len(), par.len());
+        assert_eq!(
+            format!("{seq:?}"),
+            format!("{par:?}"),
+            "parallel sweep diverged from sequential at {threads} threads"
+        );
+    }
+}
+
+#[test]
 fn model_cache_covers_all_layouts() {
     let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
     let configs = decimated(&cluster, 29);
-    let mut cache = ModelCache::default();
+    let cache = ModelCache::default();
     for c in &configs {
         cache.get(&cluster, c.par).unwrap();
     }

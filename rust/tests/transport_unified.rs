@@ -1,0 +1,144 @@
+//! Integration: the tentpole invariant of the transport-generic collective
+//! core. The SAME Op-program interpreter drives the timing plane
+//! (`DagTransport` → transfer DAG) and the data plane (`DataTransport` →
+//! real `f32` buffers); therefore, for every schedule, the two planes must
+//! produce IDENTICAL `(tag, volume)` communication logs — and the data
+//! plane must still compute the reference MoE layer function.
+//!
+//! Configs are drawn so the IR's capacity estimates are exact (integral
+//! `k·f·B·L/E` at every gate granularity), which makes the byte agreement
+//! exact rather than capacity-rounded.
+
+use parm::config::moe::ParallelDegrees;
+use parm::config::{ClusterProfile, MoeLayerConfig};
+use parm::moe::{reference_forward, run_schedule, LayerState, NativeBackend};
+use parm::schedule::{forward_ops, lower_ops, ScheduleKind};
+use parm::util::propcheck::{assert_close, check};
+use parm::util::prng::Rng;
+
+/// A random layout whose capacity formulas are exact: `f = 1`, `E = N_EP`,
+/// and `B·L` a multiple of `4·E·N_MP`, so `k·f·tokens/E` is an integer
+/// divisible by `N_MP` at every gate the schedules run.
+fn exact_cfg(rng: &mut Rng) -> MoeLayerConfig {
+    let n_esp = *rng.choice(&[1usize, 2, 4]);
+    let n_ep = *rng.choice(&[2usize, 4]);
+    let p = n_ep * n_esp;
+    let n_mp = (*rng.choice(&[1usize, 2, 4])).min(p);
+    let e = n_ep;
+    let l = 4 * e * n_mp * rng.range(1, 3);
+    MoeLayerConfig {
+        par: ParallelDegrees { p, n_mp, n_esp },
+        b: 1,
+        l,
+        e,
+        m: *rng.choice(&[4usize, 8]),
+        h: 4 * n_esp,
+        k: 2,
+        f: 1.0,
+        dtype_bytes: 4,
+    }
+}
+
+#[test]
+fn prop_both_transports_log_identical_tag_volumes() {
+    let cluster = ClusterProfile::testbed_b();
+    check("dag-data-comm-log-identical", 25, |rng| {
+        let cfg = exact_cfg(rng);
+        cfg.validate().map_err(|e| format!("invalid cfg {cfg:?}: {e}"))?;
+        let state = LayerState::random(&cfg, rng.next_u64()).map_err(|e| e.to_string())?;
+        for kind in [
+            ScheduleKind::Baseline,
+            ScheduleKind::S1,
+            ScheduleKind::S2,
+            ScheduleKind::S2Aas,
+        ] {
+            let ops = forward_ops(kind, &cfg);
+            let dag = lower_ops(&ops, &cfg, &cluster).map_err(|e| e.to_string())?;
+            let dag_log = dag.comm_log();
+            let data_log = run_schedule(kind, &state, &mut NativeBackend)
+                .map_err(|e| e.to_string())?
+                .comm_log;
+            if dag_log.len() != data_log.len() {
+                return Err(format!(
+                    "{kind:?} {}: log shapes differ\n  dag:  {dag_log:?}\n  data: {data_log:?}",
+                    cfg.id()
+                ));
+            }
+            for ((dt, db), (xt, xb)) in dag_log.iter().zip(data_log.iter()) {
+                if dt != xt {
+                    return Err(format!(
+                        "{kind:?} {}: tag order differs — dag {dag_log:?} vs data {data_log:?}",
+                        cfg.id()
+                    ));
+                }
+                let tol = 1e-6 * db.max(*xb).max(1.0);
+                if (db - xb).abs() > tol {
+                    return Err(format!(
+                        "{kind:?} {}: volume for `{dt}` differs — dag {db} vs data {xb}",
+                        cfg.id()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_s2_and_aas_share_wire_volume_per_tag_totals() {
+    // SAA vs AAS may schedule messages differently but must move the same
+    // bytes under each tag family (a2a + allgather).
+    let cluster = ClusterProfile::testbed_b();
+    check("saa-aas-wire-volume", 15, |rng| {
+        let cfg = exact_cfg(rng);
+        let total = |kind: ScheduleKind| -> Result<f64, String> {
+            let ops = forward_ops(kind, &cfg);
+            let dag = lower_ops(&ops, &cfg, &cluster).map_err(|e| e.to_string())?;
+            Ok(dag.comm_log().iter().map(|(_, b)| b).sum())
+        };
+        let saa = total(ScheduleKind::S2)?;
+        let aas = total(ScheduleKind::S2Aas)?;
+        if (saa - aas).abs() > 1e-6 * saa.max(1.0) {
+            return Err(format!("{}: SAA total {saa} vs AAS total {aas}", cfg.id()));
+        }
+        Ok(())
+    });
+}
+
+/// Drop-free variant of [`exact_cfg`] (generous capacity) for numeric
+/// equivalence against the dense single-device reference.
+fn dropfree_cfg(rng: &mut Rng) -> MoeLayerConfig {
+    let mut cfg = exact_cfg(rng);
+    cfg.f = 64.0;
+    cfg
+}
+
+#[test]
+fn prop_s1_s2_match_single_device_reference() {
+    check("unified-interp-matches-reference", 12, |rng| {
+        let cfg = dropfree_cfg(rng);
+        let state = LayerState::random(&cfg, rng.next_u64()).map_err(|e| e.to_string())?;
+        let mut backend = NativeBackend;
+        let cap_ref = cfg.tokens() * cfg.k;
+        for kind in [ScheduleKind::S1, ScheduleKind::S2] {
+            let res = run_schedule(kind, &state, &mut backend).map_err(|e| e.to_string())?;
+            if res.dropped != 0 {
+                return Err(format!("{kind:?} dropped {} tokens", res.dropped));
+            }
+            for r in 0..cfg.par.p {
+                let reference = reference_forward(
+                    &cfg,
+                    &state.weights,
+                    &state.tokens[r],
+                    cfg.tokens(),
+                    cap_ref,
+                    &mut backend,
+                )
+                .map_err(|e| e.to_string())?;
+                assert_close(&res.outputs[r], &reference, 1e-4, 2e-3)
+                    .map_err(|e| format!("{kind:?} rank {r} cfg {}: {e}", cfg.id()))?;
+            }
+        }
+        Ok(())
+    });
+}
