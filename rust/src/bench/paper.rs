@@ -108,8 +108,10 @@ fn cell_results<'a>(
         .collect()
 }
 
-/// Table IV — averaged speedups of S1/S2/Parm over the baseline per
-/// (N_MP, N_ESP) cell, on testbed A and testbed B (8/16/32 GPUs).
+/// Table IV — averaged speedups of S1/S2/SP/Parm over the baseline per
+/// (N_MP, N_ESP) cell, on testbed A and testbed B (8/16/32 GPUs). The SP
+/// row extends the paper's table with the chunk-pipelined schedule at its
+/// predicted-optimal r.
 pub fn table4(reports: &Path) -> Result<String> {
     let tb_a = ClusterProfile::testbed_a();
     let tb_b = ClusterProfile::testbed_b();
@@ -133,6 +135,7 @@ pub fn table4(reports: &Path) -> Result<String> {
     for (sched, f) in [
         ("S1", &CaseResult::speedup_s1 as &dyn Fn(&CaseResult) -> f64),
         ("S2", &CaseResult::speedup_s2),
+        ("SP", &CaseResult::speedup_sp),
         ("Parm", &CaseResult::speedup_parm),
     ] {
         for (n_mp, n_esp) in sweep::table4_cells() {

@@ -18,7 +18,7 @@ use anyhow::Result;
 
 use crate::config::moe::ParallelDegrees;
 use crate::config::{ClusterProfile, MoeLayerConfig};
-use crate::perfmodel::{choose_schedule, PerfModel};
+use crate::perfmodel::{selection, PerfModel};
 use crate::schedule::{lowering, ScheduleKind};
 
 /// One configuration's simulated iteration times.
@@ -29,6 +29,11 @@ pub struct CaseResult {
     pub t_s1: f64,
     pub t_s2: f64,
     pub t_s2_aas: f64,
+    /// Chunk-pipelined schedule at the predicted-optimal `sp_chunks`.
+    pub t_sp: f64,
+    /// The r* the fitted pipeline model picked for this configuration.
+    pub sp_chunks: usize,
+    /// Generalized Algorithm 1's pick among S1, S2 and SP(r*).
     pub parm_choice: ScheduleKind,
     /// Fig 1 quantity: fraction of baseline iteration not covered by
     /// compute.
@@ -39,6 +44,7 @@ impl CaseResult {
     pub fn t_parm(&self) -> f64 {
         match self.parm_choice {
             ScheduleKind::S1 => self.t_s1,
+            ScheduleKind::Pipelined { .. } => self.t_sp,
             _ => self.t_s2,
         }
     }
@@ -51,9 +57,36 @@ impl CaseResult {
         self.t_baseline / self.t_s2
     }
 
+    pub fn speedup_sp(&self) -> f64 {
+        self.t_baseline / self.t_sp
+    }
+
     pub fn speedup_parm(&self) -> f64 {
         self.t_baseline / self.t_parm()
     }
+}
+
+/// Render sweep results as the golden-CSV format: config-ordered rows at
+/// fixed precision, one per case. Shared verbatim by `parm sweep --csv`
+/// and the golden regression test so the CI gate diffs exactly what the
+/// runner produced.
+pub fn sweep_csv(results: &[CaseResult]) -> String {
+    let mut s =
+        String::from("config,t_baseline,t_s1,t_s2,t_s2_aas,t_sp,sp_chunks,parm_choice\n");
+    for r in results {
+        s.push_str(&format!(
+            "{},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{},{}\n",
+            r.cfg.id(),
+            r.t_baseline,
+            r.t_s1,
+            r.t_s2,
+            r.t_s2_aas,
+            r.t_sp,
+            r.sp_chunks,
+            r.parm_choice.name()
+        ));
+    }
+    s
 }
 
 /// Per-layout α-β model cache (fitting is itself a simulation sweep, so
@@ -87,7 +120,8 @@ impl ModelCache {
     }
 }
 
-/// Simulate one configuration under every schedule.
+/// Simulate one configuration under every schedule (SP at the fitted
+/// model's optimal chunk count).
 pub fn run_case(
     cfg: &MoeLayerConfig,
     cluster: &ClusterProfile,
@@ -98,13 +132,23 @@ pub fn run_case(
     let t_s2 = lowering::simulate_iteration(ScheduleKind::S2, cfg, cluster)?.makespan;
     let t_s2_aas = lowering::simulate_iteration(ScheduleKind::S2Aas, cfg, cluster)?.makespan;
     let model = cache.get(cluster, cfg.par)?;
-    let parm_choice = choose_schedule(&model, cfg);
+    let pred = selection::predict(&model, cfg);
+    let sp_chunks = pred.sp_chunks;
+    let t_sp = lowering::simulate_iteration(
+        ScheduleKind::Pipelined { chunks: sp_chunks },
+        cfg,
+        cluster,
+    )?
+    .makespan;
+    let parm_choice = pred.best();
     Ok(CaseResult {
         cfg: cfg.clone(),
         t_baseline: base.makespan,
         t_s1,
         t_s2,
         t_s2_aas,
+        t_sp,
+        sp_chunks,
         parm_choice,
         comm_ratio_baseline: base.comm_ratio(),
     })
@@ -195,8 +239,28 @@ mod tests {
         let r = run_case(&cfg(8, 2, 2), &cluster, &cache).unwrap();
         assert!(r.speedup_s1() > 1.0, "{r:?}");
         assert!(r.speedup_s2() > 1.0, "{r:?}");
-        assert!(r.speedup_parm() >= r.speedup_s1().min(r.speedup_s2()));
+        assert!(r.t_sp > 0.0 && r.sp_chunks >= 1, "{r:?}");
+        assert!(
+            r.speedup_parm() >= r.speedup_s1().min(r.speedup_s2()).min(r.speedup_sp()),
+            "{r:?}"
+        );
         assert!(r.comm_ratio_baseline > 0.0 && r.comm_ratio_baseline < 1.0);
+    }
+
+    #[test]
+    fn sweep_csv_shape_is_stable() {
+        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let cache = ModelCache::default();
+        let r = run_case(&cfg(8, 2, 2), &cluster, &cache).unwrap();
+        let csv = sweep_csv(&[r]);
+        let mut lines = csv.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "config,t_baseline,t_s1,t_s2,t_s2_aas,t_sp,sp_chunks,parm_choice"
+        );
+        let row = lines.next().unwrap();
+        assert_eq!(row.split(',').count(), 8, "{row}");
+        assert!(row.starts_with("p8_mp2_esp2_"), "{row}");
     }
 
     #[test]

@@ -35,6 +35,46 @@ pub const FUSED_ALLTOALL: &str = "fused.alltoall";
 pub const SAA_COMBINE: &str = "saa.combine";
 /// The sequential (non-overlapped) combine — the AAS ablation (§VI-C).
 pub const AAS_COMBINE: &str = "aas.combine";
+/// Upper bound on SP pipeline chunks. Bounded so every chunk keeps a
+/// distinct `'static` tag (the whole tag vocabulary stays allocation-free)
+/// and so the closed-form chunk search in
+/// [`crate::perfmodel::closedform::optimal_chunks`] is a fixed small scan.
+pub const SP_MAX_CHUNKS: usize = 8;
+/// SP dispatch AlltoAll of chunk k (`sp.dispatch.k`) — the fused
+/// EP&ESP-AlltoAll restricted to one capacity span of the pipelined
+/// schedule.
+pub const SP_DISPATCH: [&str; SP_MAX_CHUNKS] = [
+    "sp.dispatch.0",
+    "sp.dispatch.1",
+    "sp.dispatch.2",
+    "sp.dispatch.3",
+    "sp.dispatch.4",
+    "sp.dispatch.5",
+    "sp.dispatch.6",
+    "sp.dispatch.7",
+];
+/// SP expert-FFN compute of chunk k (`sp.ffn.k`).
+pub const SP_FFN: [&str; SP_MAX_CHUNKS] = [
+    "sp.ffn.0",
+    "sp.ffn.1",
+    "sp.ffn.2",
+    "sp.ffn.3",
+    "sp.ffn.4",
+    "sp.ffn.5",
+    "sp.ffn.6",
+    "sp.ffn.7",
+];
+/// SP combine AlltoAll of chunk k (`sp.combine.k`).
+pub const SP_COMBINE: [&str; SP_MAX_CHUNKS] = [
+    "sp.combine.0",
+    "sp.combine.1",
+    "sp.combine.2",
+    "sp.combine.3",
+    "sp.combine.4",
+    "sp.combine.5",
+    "sp.combine.6",
+    "sp.combine.7",
+];
 /// Gating network + top-k routing (compute).
 pub const GATE: &str = "gate";
 /// Expert FFN shards (compute).

@@ -17,9 +17,10 @@ use std::process::ExitCode;
 use anyhow::{anyhow, bail, Result};
 
 use parm::bench::paper;
+use parm::bench::CaseResult;
 use parm::config::moe::ParallelDegrees;
 use parm::config::{sweep as sweepcfg, ClusterProfile, MoeLayerConfig, SweepFilter};
-use parm::perfmodel::{selection, PerfModel};
+use parm::perfmodel::{closedform, selection, PerfModel};
 use parm::schedule::{lowering, ScheduleKind};
 use parm::sim::trace::chrome_trace;
 use parm::sim::Simulator;
@@ -192,7 +193,11 @@ fn cmd_train(rest: &[String]) -> Result<()> {
 
 fn cmd_sim(rest: &[String]) -> Result<()> {
     let mut specs = LAYER_SPECS.to_vec();
-    specs.push(Spec::opt_default("schedule", "parm", "baseline|s1|s2|s2-aas|parm"));
+    specs.push(Spec::opt_default(
+        "schedule",
+        "parm",
+        "baseline|s1|s2|s2-aas|sp|spN|parm (sp = pipelined, N pins the chunk count)",
+    ));
     let a = Args::parse(rest, &specs)?;
     if help_guard(&a, "sim", "simulate one MoE layer iteration", &specs) {
         return Ok(());
@@ -204,7 +209,7 @@ fn cmd_sim(rest: &[String]) -> Result<()> {
     let report = lowering::simulate_iteration(kind, &cfg, &cluster)?;
     println!("config   : {}", cfg.id());
     println!("cluster  : {}", cluster.name);
-    println!("schedule : {}", kind.name());
+    println!("schedule : {}", kind.label());
     println!("iteration: {}", fmt_seconds(report.makespan));
     println!("comm %   : {:.1}", report.comm_ratio() * 100.0);
     Ok(())
@@ -215,11 +220,18 @@ fn resolve(
     cfg: &MoeLayerConfig,
     cluster: &ClusterProfile,
 ) -> Result<ScheduleKind> {
-    if kind == ScheduleKind::Parm {
-        let model = PerfModel::fit(cluster, cfg.par)?;
-        Ok(selection::choose_schedule(&model, cfg))
-    } else {
-        Ok(kind)
+    match kind {
+        // Generalized Algorithm 1 over the fitted α-β models.
+        ScheduleKind::Parm => {
+            let model = PerfModel::fit(cluster, cfg.par)?;
+            Ok(selection::choose_schedule_extended(&model, cfg))
+        }
+        // `sp` with no pinned r: closed-form optimal chunk count.
+        ScheduleKind::Pipelined { chunks: 0 } => {
+            let (r, _) = closedform::optimal_chunks(cluster, cfg);
+            Ok(ScheduleKind::Pipelined { chunks: r })
+        }
+        k => Ok(k),
     }
 }
 
@@ -264,7 +276,7 @@ fn cmd_fit(rest: &[String]) -> Result<()> {
 
 fn cmd_choose(rest: &[String]) -> Result<()> {
     let a = Args::parse(rest, LAYER_SPECS)?;
-    if help_guard(&a, "choose", "Algorithm 1: pick S1 or S2", LAYER_SPECS) {
+    if help_guard(&a, "choose", "Algorithm 1: pick S1, S2 or SP(r*)", LAYER_SPECS) {
         return Ok(());
     }
     let (cfg, cluster) = layer_from(&a)?;
@@ -273,7 +285,13 @@ fn cmd_choose(rest: &[String]) -> Result<()> {
     println!("t_baseline (predicted): {}", fmt_seconds(pred.t_baseline));
     println!("t_D1 (S1, predicted)  : {}", fmt_seconds(pred.t_d1));
     println!("t_D2 (S2, predicted)  : {}", fmt_seconds(pred.t_d2));
-    println!("Algorithm 1 chooses   : {}", pred.better().name());
+    println!("t_FFN (PauseMP exp.)  : {}", fmt_seconds(pred.t_ffn));
+    println!(
+        "t_SP(r*={}) (pred.)    : {} (compute-inclusive)",
+        pred.sp_chunks,
+        fmt_seconds(pred.t_sp)
+    );
+    println!("Algorithm 1 chooses   : {}", pred.best().label());
     Ok(())
 }
 
@@ -283,6 +301,11 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
         Spec::opt("p", "restrict to one P"),
         Spec::opt("limit", "only run the first N configs"),
         Spec::opt("threads", "sweep worker threads (default: all cores)"),
+        Spec::opt("csv", "write per-case results CSV to PATH (golden-gate format)"),
+        Spec::opt(
+            "bench-json",
+            "write sweep throughput + per-schedule mean makespans to PATH (times a sequential re-run of up to 64 cases)",
+        ),
         Spec::flag("help", "show help"),
     ];
     let a = Args::parse(rest, SPECS)?;
@@ -298,15 +321,19 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
         configs.truncate(limit);
     }
     println!("{} feasible configs on {}", configs.len(), cluster.name);
-    let results = match a.get_usize("threads")? {
+    let threads = a.get_usize("threads")?;
+    let t_run = std::time::Instant::now();
+    let results = match threads {
         Some(t) => parm::bench::run_sweep_with_threads(&configs, &cluster, true, t)?,
         None => parm::bench::run_sweep(&configs, &cluster, true)?,
     };
+    let run_secs = t_run.elapsed().as_secs_f64();
     let s1: Vec<f64> = results.iter().map(|r| r.speedup_s1()).collect();
     let s2: Vec<f64> = results.iter().map(|r| r.speedup_s2()).collect();
+    let sp: Vec<f64> = results.iter().map(|r| r.speedup_sp()).collect();
     let pm: Vec<f64> = results.iter().map(|r| r.speedup_parm()).collect();
     let mut t = Table::new(&["schedule", "mean speedup", "min", "max"]).numeric();
-    for (name, v) in [("S1", &s1), ("S2", &s2), ("Parm", &pm)] {
+    for (name, v) in [("S1", &s1), ("S2", &s2), ("SP", &sp), ("Parm", &pm)] {
         t.row(&[
             name.into(),
             format!("{:.2}×", mean(v)),
@@ -315,6 +342,68 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
         ]);
     }
     print!("{}", t.to_text());
+    if let Some(path) = a.get("csv") {
+        std::fs::write(path, parm::bench::sweep_csv(&results))?;
+        eprintln!("wrote per-case CSV to {path}");
+    }
+    if let Some(path) = a.get("bench-json") {
+        write_sweep_bench_json(path, &configs, &cluster, &results, threads, run_secs)?;
+    }
+    Ok(())
+}
+
+/// `BENCH_sweep.json`: cases/sec sequential vs parallel plus per-schedule
+/// mean makespans — the perf-trajectory artifact CI uploads per run. The
+/// parallel measurement reuses the already-timed main run (`par_s`); the
+/// sequential throughput is measured on a bounded prefix sample (≤ 64
+/// cases) so `--bench-json` never multiplies a large grid's runtime, and
+/// its output is cross-checked against the main run's rows (the full
+/// determinism property lives in the sweep tests).
+fn write_sweep_bench_json(
+    path: &str,
+    configs: &[MoeLayerConfig],
+    cluster: &ClusterProfile,
+    results: &[CaseResult],
+    threads: Option<usize>,
+    par_s: f64,
+) -> Result<()> {
+    use parm::util::json::Json;
+    let n = threads
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|v| v.get()).unwrap_or(2));
+    let sample = configs.len().min(64);
+    let t0 = std::time::Instant::now();
+    let seq = parm::bench::run_sweep_with_threads(&configs[..sample], cluster, false, 1)?;
+    let seq_s = t0.elapsed().as_secs_f64();
+    if parm::bench::sweep_csv(&seq) != parm::bench::sweep_csv(&results[..sample]) {
+        bail!("sequential re-run diverged from the sweep's output");
+    }
+    let mean_of = |f: &dyn Fn(&CaseResult) -> f64| -> f64 {
+        mean(&results.iter().map(|r| f(r)).collect::<Vec<f64>>())
+    };
+    let cases = configs.len() as f64;
+    let j = Json::obj(vec![
+        ("cluster", Json::str(&cluster.name)),
+        ("cases", Json::num(cases)),
+        ("threads", Json::num(n as f64)),
+        ("seq_sample_cases", Json::num(sample as f64)),
+        ("seq_sample_seconds", Json::num(seq_s)),
+        ("par_seconds", Json::num(par_s)),
+        ("cases_per_sec_seq", Json::num(sample as f64 / seq_s.max(1e-9))),
+        ("cases_per_sec_par", Json::num(cases / par_s.max(1e-9))),
+        (
+            "mean_makespan",
+            Json::obj(vec![
+                ("baseline", Json::num(mean_of(&|r| r.t_baseline))),
+                ("s1", Json::num(mean_of(&|r| r.t_s1))),
+                ("s2", Json::num(mean_of(&|r| r.t_s2))),
+                ("s2_aas", Json::num(mean_of(&|r| r.t_s2_aas))),
+                ("sp", Json::num(mean_of(&|r| r.t_sp))),
+                ("parm", Json::num(mean_of(&|r| r.t_parm()))),
+            ]),
+        ),
+    ]);
+    std::fs::write(path, j.to_pretty())?;
+    eprintln!("wrote sweep bench JSON to {path}");
     Ok(())
 }
 

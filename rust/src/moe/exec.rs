@@ -87,8 +87,12 @@ pub fn run_schedule(
     state: &LayerState,
     backend: &mut dyn ExpertBackend,
 ) -> Result<ExecResult> {
-    if kind == ScheduleKind::Parm {
-        bail!("resolve Parm to S1/S2 via the perf model first");
+    match kind {
+        ScheduleKind::Parm => bail!("resolve Parm to a concrete schedule via the perf model first"),
+        ScheduleKind::Pipelined { chunks: 0 } => {
+            bail!("resolve SP's chunk count r via the perf model first")
+        }
+        _ => {}
     }
     let ops = forward_ops(kind, &state.cfg);
     let mut transport = DataTransport::new();
@@ -128,6 +132,36 @@ enum Stage {
     Combined,
 }
 
+/// Chunk-indexed staging of the SP pipelined region: the primary tensor
+/// stays at [`Stage::Dispatch`] while each capacity chunk moves through
+/// its own dispatch → FFN → combine lane; the last combine interleaves the
+/// returned chunks back into the full (P, E_local, cap, M) block.
+struct SpStage {
+    /// Capacity spans the chunks cover ([`crate::schedule::ops::chunk_spans`]
+    /// of the rank-local gate capacity).
+    spans: Vec<(usize, usize)>,
+    /// Received dispatch chunks, `[chunk][rank]` → (P, E_local, rows, M).
+    recv: Vec<Vec<Vec<f32>>>,
+    /// Expert outputs per chunk per rank (same shape as `recv`).
+    out: Vec<Vec<Vec<f32>>>,
+    /// Returned combine partials per chunk per rank.
+    ret: Vec<Vec<Vec<f32>>>,
+    /// Combines accepted so far; the region assembles at the last one.
+    combines_done: usize,
+}
+
+impl SpStage {
+    fn new(cap: usize, chunks: usize, p: usize) -> SpStage {
+        SpStage {
+            spans: crate::schedule::ops::chunk_spans(cap, chunks),
+            recv: vec![vec![Vec::new(); p]; chunks],
+            out: vec![vec![Vec::new(); p]; chunks],
+            ret: vec![vec![Vec::new(); p]; chunks],
+            combines_done: 0,
+        }
+    }
+}
+
 /// The data plane's [`Machine`]: rank buffers, gating state, and the
 /// per-op tensor semantics.
 struct DataMachine<'a> {
@@ -152,6 +186,8 @@ struct DataMachine<'a> {
     /// Source blocks in the (sources, E_local, cap, M) layouts: N_EP for
     /// the EP AlltoAll, P for the fused product-group AlltoAll.
     sources: usize,
+    /// In-flight SP pipelined region, if any.
+    sp: Option<SpStage>,
     stage: Stage,
     dropped: usize,
 }
@@ -177,6 +213,7 @@ impl<'a> DataMachine<'a> {
             cap_full: 0,
             gate_cap_multiple: if split_after_gate { state.cfg.par.n_mp } else { 1 },
             sources: 0,
+            sp: None,
             stage: Stage::Tokens,
             dropped: 0,
         }
@@ -194,6 +231,13 @@ impl<'a> DataMachine<'a> {
     /// its EP slot (destination rank `q` receives the experts of `q`'s
     /// slot).
     fn fused_dispatch_chunks(&self, rank: usize) -> Vec<Vec<f32>> {
+        self.fused_dispatch_chunks_span(rank, 0, self.cap)
+    }
+
+    /// [`Self::fused_dispatch_chunks`] restricted to the capacity rows
+    /// `[start, start + rows)` of every expert block — one SP chunk's
+    /// dispatch payload.
+    fn fused_dispatch_chunks_span(&self, rank: usize, start: usize, rows: usize) -> Vec<Vec<f32>> {
         let (e, cap, m) = (self.cfg.e, self.cap, self.cfg.m);
         let d = &self.buf[rank];
         (0..self.cfg.par.p)
@@ -201,7 +245,8 @@ impl<'a> DataMachine<'a> {
                 let slot = self.groups.ep_slot(dst);
                 let mut out = Vec::new();
                 for ex in self.groups.experts_of_slot(slot, e) {
-                    out.extend_from_slice(&d[ex * cap * m..(ex + 1) * cap * m]);
+                    let base = (ex * cap + start) * m;
+                    out.extend_from_slice(&d[base..base + rows * m]);
                 }
                 out
             })
@@ -252,37 +297,107 @@ impl<'a> DataMachine<'a> {
         Ok(())
     }
 
-    /// Expert FFN shards, batched per local expert over all source blocks.
-    fn expert_ffn(&mut self) -> Result<()> {
-        ensure!(self.stage == Stage::Recv, "expert ffn expects received dispatch");
+    /// Expert FFN over one rank's received (sources, E_local, cap, M)
+    /// block, batched per local expert over all source blocks. `cap` may
+    /// be a single SP chunk's row count.
+    fn ffn_block(&mut self, r: usize, recv: &[f32], sources: usize, cap: usize) -> Result<Vec<f32>> {
         let c = self.cfg;
-        let (cap, m) = (self.cap, c.m);
+        let m = c.m;
         let hs = c.h / c.par.n_esp;
         let e_local = c.experts_per_rank();
-        let sources = self.sources;
         let block = e_local * cap * m;
-        for r in 0..c.par.p {
-            let (w1s, w2s) = self.weights.shard_for_rank(c, self.groups, r);
-            let recv = std::mem::take(&mut self.buf[r]);
-            ensure!(recv.len() == sources * block, "expert input shape");
-            let mut out = vec![0.0f32; recv.len()];
-            for le in 0..e_local {
-                // Gather rows of local expert `le` from every source chunk.
-                let mut x = Vec::with_capacity(sources * cap * m);
-                for src in 0..sources {
-                    let base = src * block + le * cap * m;
-                    x.extend_from_slice(&recv[base..base + cap * m]);
-                }
-                let y = self.backend.expert_ffn(&x, &w1s[le], &w2s[le], sources * cap, m, hs)?;
-                for src in 0..sources {
-                    let base = src * block + le * cap * m;
-                    out[base..base + cap * m]
-                        .copy_from_slice(&y[src * cap * m..(src + 1) * cap * m]);
-                }
+        ensure!(recv.len() == sources * block, "expert input shape");
+        let (w1s, w2s) = self.weights.shard_for_rank(c, self.groups, r);
+        let mut out = vec![0.0f32; recv.len()];
+        for le in 0..e_local {
+            // Gather rows of local expert `le` from every source chunk.
+            let mut x = Vec::with_capacity(sources * cap * m);
+            for src in 0..sources {
+                let base = src * block + le * cap * m;
+                x.extend_from_slice(&recv[base..base + cap * m]);
             }
-            self.buf[r] = out;
+            let y = self.backend.expert_ffn(&x, &w1s[le], &w2s[le], sources * cap, m, hs)?;
+            for src in 0..sources {
+                let base = src * block + le * cap * m;
+                out[base..base + cap * m].copy_from_slice(&y[src * cap * m..(src + 1) * cap * m]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Expert FFN shards over the full received block of every rank.
+    fn expert_ffn(&mut self) -> Result<()> {
+        ensure!(self.stage == Stage::Recv, "expert ffn expects received dispatch");
+        let sources = self.sources;
+        let cap = self.cap;
+        for r in 0..self.cfg.par.p {
+            let recv = std::mem::take(&mut self.buf[r]);
+            self.buf[r] = self.ffn_block(r, &recv, sources, cap)?;
         }
         self.stage = Stage::ExpertOut;
+        Ok(())
+    }
+
+    /// SP expert FFN over chunk `index`'s received span on every rank.
+    fn sp_expert_ffn(&mut self, index: usize) -> Result<()> {
+        ensure!(
+            self.stage == Stage::Dispatch,
+            "sp.ffn expects an in-flight pipelined region, got {:?}",
+            self.stage
+        );
+        let p = self.cfg.par.p;
+        let (rows, recv_all) = {
+            let sp = self
+                .sp
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("sp.ffn before any sp.dispatch"))?;
+            ensure!(index < sp.spans.len(), "sp.ffn chunk {index} out of range");
+            (sp.spans[index].1, std::mem::take(&mut sp.recv[index]))
+        };
+        ensure!(recv_all.len() == p, "sp.ffn expects one received block per rank");
+        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(p);
+        for r in 0..p {
+            let out = if rows == 0 {
+                Vec::new()
+            } else {
+                self.ffn_block(r, &recv_all[r], p, rows)?
+            };
+            outs.push(out);
+        }
+        let sp = self.sp.as_mut().expect("sp stage checked above");
+        sp.out[index] = outs;
+        Ok(())
+    }
+
+    /// Interleave the returned SP chunks back into the full
+    /// (P, E_local, cap, M) returned block on every rank and leave the
+    /// machine exactly where a monolithic fused combine would have.
+    fn sp_assemble(&mut self) -> Result<()> {
+        let sp = self
+            .sp
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("sp assembly without a pipelined region"))?;
+        let c = self.cfg;
+        let (p, m, cap) = (c.par.p, c.m, self.cap);
+        let e_local = c.experts_per_rank();
+        for r in 0..p {
+            let mut full = vec![0.0f32; p * e_local * cap * m];
+            for (k, &(start, rows)) in sp.spans.iter().enumerate() {
+                if rows == 0 {
+                    continue;
+                }
+                let part = &sp.ret[k][r];
+                ensure!(part.len() == p * e_local * rows * m, "sp returned chunk shape");
+                for blk in 0..p * e_local {
+                    let sbase = blk * rows * m;
+                    let dbase = (blk * cap + start) * m;
+                    full[dbase..dbase + rows * m].copy_from_slice(&part[sbase..sbase + rows * m]);
+                }
+            }
+            self.buf[r] = full;
+        }
+        self.sources = p;
+        self.stage = Stage::Returned;
         Ok(())
     }
 
@@ -436,6 +551,49 @@ impl Machine<DataTransport> for DataMachine<'_> {
                     other => bail!("fused alltoall has no semantic at stage {other:?}"),
                 }
             }
+            Op::SpDispatch { index, of, .. } => {
+                ensure!(
+                    self.stage == Stage::Dispatch,
+                    "sp.dispatch has no semantic at stage {:?}",
+                    self.stage
+                );
+                if self.sp.is_none() {
+                    self.sp = Some(SpStage::new(self.cap, of, self.cfg.par.p));
+                }
+                let (start, rows) = {
+                    let sp = self.sp.as_ref().expect("sp stage initialized above");
+                    ensure!(
+                        index < of && sp.spans.len() == of,
+                        "sp.dispatch chunk {index} of {of} does not fit the region"
+                    );
+                    sp.spans[index]
+                };
+                Ok(grp
+                    .iter()
+                    .map(|&r| self.fused_dispatch_chunks_span(r, start, rows))
+                    .collect())
+            }
+            Op::SpCombine { index, .. } => {
+                ensure!(
+                    self.stage == Stage::Dispatch,
+                    "sp.combine has no semantic at stage {:?}",
+                    self.stage
+                );
+                let outs = {
+                    let sp = self
+                        .sp
+                        .as_mut()
+                        .ok_or_else(|| anyhow::anyhow!("sp.combine before any sp.dispatch"))?;
+                    ensure!(index < sp.out.len(), "sp.combine chunk {index} out of range");
+                    std::mem::take(&mut sp.out[index])
+                };
+                ensure!(outs.len() == self.cfg.par.p, "sp.combine expects a computed chunk");
+                let mut ins = Vec::with_capacity(g);
+                for &r in grp {
+                    ins.push(Self::equal_chunks(&outs[r], g, "sp.combine")?);
+                }
+                Ok(ins)
+            }
             Op::EspReduceScatter { .. } | Op::MpReduceScatter { .. } => {
                 bail!("backward op {op:?} is not executed on the data plane")
             }
@@ -457,6 +615,28 @@ impl Machine<DataTransport> for DataMachine<'_> {
                 }
                 Ok(())
             }
+            // SP chunks land in their chunk-indexed staging slots, not the
+            // primary buffer (which still holds the dispatch tensor).
+            Op::SpDispatch { index, .. } => {
+                let sp = self
+                    .sp
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("sp.dispatch accepted without a region"))?;
+                for (out, &r) in outputs.into_iter().zip(grp.iter()) {
+                    sp.recv[index][r] = out.concat();
+                }
+                Ok(())
+            }
+            Op::SpCombine { index, .. } => {
+                let sp = self
+                    .sp
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("sp.combine accepted without a region"))?;
+                for (out, &r) in outputs.into_iter().zip(grp.iter()) {
+                    sp.ret[index][r] = out.concat();
+                }
+                Ok(())
+            }
             _ => bail!("non-communication op has no outputs to accept: {op:?}"),
         }
     }
@@ -465,6 +645,7 @@ impl Machine<DataTransport> for DataMachine<'_> {
         match *op {
             Op::Gate { .. } => self.gate(),
             Op::ExpertFfn { .. } => self.expert_ffn(),
+            Op::SpExpertFfn { index, .. } => self.sp_expert_ffn(index),
             Op::MpSplit { .. } => self.mp_split(),
             Op::EspSplit { .. } => self.esp_split(),
             Op::LocalCombine { .. } => self.local_combine(),
@@ -503,6 +684,23 @@ impl Machine<DataTransport> for DataMachine<'_> {
             Op::SaaCombine { .. } | Op::AasCombine { .. } => {
                 ensure!(self.stage == Stage::ExpertOut, "saa/aas combine after experts");
                 self.stage = Stage::Gathered;
+            }
+            Op::SpCombine { of, .. } => {
+                ensure!(
+                    self.stage == Stage::Dispatch,
+                    "sp.combine finished outside the pipelined region"
+                );
+                let done = {
+                    let sp = self
+                        .sp
+                        .as_mut()
+                        .ok_or_else(|| anyhow::anyhow!("sp.combine finished without a region"))?;
+                    sp.combines_done += 1;
+                    sp.combines_done == of
+                };
+                if done {
+                    self.sp_assemble()?;
+                }
             }
             _ => {}
         }
@@ -546,7 +744,15 @@ mod tests {
             })
             .collect();
 
-        for kind in [ScheduleKind::Baseline, ScheduleKind::S1, ScheduleKind::S2] {
+        for kind in [
+            ScheduleKind::Baseline,
+            ScheduleKind::S1,
+            ScheduleKind::S2,
+            // SP with an even and a ragged chunking — numerics must not
+            // depend on how the capacity dimension is pipelined.
+            ScheduleKind::Pipelined { chunks: 2 },
+            ScheduleKind::Pipelined { chunks: 3 },
+        ] {
             let res = run_schedule(kind, &state, &mut backend).unwrap();
             assert_eq!(res.dropped, 0, "{kind:?} dropped tokens");
             for r in 0..c.par.p {
@@ -608,6 +814,34 @@ mod tests {
             tags_seen,
             vec![tags::FUSED_ALLTOALL, tags::SAA_COMBINE, tags::MP_ALLGATHER]
         );
+
+        // SP: one wire-log entry per chunk per direction, in emission
+        // order (D_0, D_1, C_0, C_1), then the MP-AllGather epilogue.
+        let res =
+            run_schedule(ScheduleKind::Pipelined { chunks: 2 }, &state, &mut backend).unwrap();
+        let tags_seen: Vec<&str> = res.comm_log.iter().map(|(t, _)| *t).collect();
+        assert_eq!(
+            tags_seen,
+            vec![
+                "sp.dispatch.0",
+                "sp.dispatch.1",
+                "sp.combine.0",
+                "sp.combine.1",
+                tags::MP_ALLGATHER
+            ]
+        );
+    }
+
+    #[test]
+    fn sp_requires_resolved_chunk_count() {
+        let c = cfg(4, 2, 2);
+        let state = LayerState::random(&c, 2).unwrap();
+        assert!(run_schedule(
+            ScheduleKind::Pipelined { chunks: 0 },
+            &state,
+            &mut NativeBackend
+        )
+        .is_err());
     }
 
     #[test]

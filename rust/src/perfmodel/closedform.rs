@@ -154,6 +154,139 @@ pub fn choose(cluster: &ClusterProfile, c: &MoeLayerConfig) -> crate::schedule::
     }
 }
 
+/// Expert-FFN seconds per rank under PauseMP — the compute term shared by
+/// S1, S2 and SP (the baseline duplicates it N_MP times instead).
+pub fn t_ffn_pausemp(cluster: &ClusterProfile, c: &MoeLayerConfig) -> f64 {
+    ops::expert_flops(c, ops::expert_tokens_per_rank(c, true)) / cluster.gpu_flops
+}
+
+/// Analytical `t_SP(r)`: the chunk-pipelined dispatch→compute→combine
+/// region plus S1's MP-AllGather epilogue.
+///
+/// The region is evaluated by a closed O(r) recurrence over the builder's
+/// emission order (`D_0`, then per chunk k: `[D_{k+1}], F_k, C_k`): the
+/// chunked AlltoAlls serialize on one comm stream, the chunked FFNs on one
+/// compute stream, `F_k` waits for `D_k`, and `C_k` waits for `F_k` —
+/// exactly the dependency structure the interpreter lowers, with each
+/// chunk's AlltoAll costed by the same bottleneck model as [`a2a_pairwise`].
+/// Unlike `t_D1`/`t_D2`, the result is compute-inclusive (the pipeline's
+/// value is hiding communication behind the FFN), so compare it against
+/// `t_D* + t_ffn_pausemp`.
+pub fn t_sp(cluster: &ClusterProfile, c: &MoeLayerConfig, chunks: usize) -> f64 {
+    let ag = ag_ring(cluster, c.par.n_mp, ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64);
+    sp_pipeline(cluster, c, chunks, 1.0) + ag
+}
+
+/// The SP region alone (no AG epilogue), with the chunk FFNs scaled by
+/// `ffn_scale` — `1.0` for the forward pass, `2.0` for backward (dgrad +
+/// wgrad), whose doubled compute is exactly what makes pipelining pay off
+/// earlier there.
+pub fn sp_pipeline(
+    cluster: &ClusterProfile,
+    c: &MoeLayerConfig,
+    chunks: usize,
+    ffn_scale: f64,
+) -> f64 {
+    let groups = ProcessGroups::new(c.par).expect("valid degrees");
+    let world = groups.world();
+    let spans = ops::chunk_spans(c.t_pausemp(), ops::sp_clamp_chunks(c, chunks));
+    let comm = |rows: usize| a2a_pairwise(cluster, &world, ops::bytes_sp_chunk_per_pair(c, rows));
+    let ffn = |rows: usize| ffn_scale * ops::sp_chunk_flops(c, rows) / cluster.gpu_flops;
+    pipeline_makespan(&spans, comm, ffn)
+}
+
+/// The ONE pipeline recurrence, over the builder's emission order (`D_0`,
+/// then per chunk k: `[D_{k+1}], F_k, C_k`) — parameterized by per-chunk
+/// comm/FFN cost functions so the α-β-constant evaluator ([`sp_pipeline`])
+/// and the fitted evaluator ([`crate::perfmodel::selection`]) cannot
+/// diverge structurally.
+pub fn pipeline_makespan(
+    spans: &[(usize, usize)],
+    comm: impl Fn(usize) -> f64,
+    ffn: impl Fn(usize) -> f64,
+) -> f64 {
+    let r = spans.len();
+    if r == 0 {
+        return 0.0;
+    }
+    let mut disp_done = vec![0.0f64; r];
+    let mut comm_t = comm(spans[0].1);
+    disp_done[0] = comm_t;
+    let mut comp_t = 0.0f64;
+    for k in 0..r {
+        if k + 1 < r {
+            comm_t += comm(spans[k + 1].1);
+            disp_done[k + 1] = comm_t;
+        }
+        comp_t = comp_t.max(disp_done[k]) + ffn(spans[k].1);
+        comm_t = comm_t.max(comp_t) + comm(spans[k].1);
+    }
+    comm_t.max(comp_t)
+}
+
+/// Per-iteration (fwd + bwd) SP estimate: the forward pipeline, the
+/// backward pipeline at 2× compute, and both MP-AllGather/ReduceScatter
+/// epilogues (ring RS costs exactly what ring AG does).
+pub fn t_sp_iteration(cluster: &ClusterProfile, c: &MoeLayerConfig, chunks: usize) -> f64 {
+    let ag = ag_ring(cluster, c.par.n_mp, ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64);
+    sp_pipeline(cluster, c, chunks, 1.0) + sp_pipeline(cluster, c, chunks, 2.0) + 2.0 * ag
+}
+
+/// Argmin of a per-iteration SP estimate over the representable chunk
+/// counts `1..=sp_clamp_chunks(c, SP_MAX_CHUNKS)` — the ONE chunk-search
+/// loop, shared by the α-β-constant and fitted evaluators.
+pub fn argmin_chunks(c: &MoeLayerConfig, estimate: impl Fn(usize) -> f64) -> (usize, f64) {
+    let max_r = ops::sp_clamp_chunks(c, crate::comm::tags::SP_MAX_CHUNKS);
+    let mut best = (1usize, estimate(1));
+    for r in 2..=max_r {
+        let t = estimate(r);
+        if t < best.1 {
+            best = (r, t);
+        }
+    }
+    best
+}
+
+/// The ONE generalized Algorithm-1 decision rule, over per-iteration
+/// estimates for S1, S2 and SP(r*): SP wins only when strictly better and
+/// genuinely pipelined (r* > 1 — SP(1) is S1's structure with no
+/// overlap); otherwise the paper's t1 ≤ t2 tie-break. Shared by the
+/// closed-form and fitted selectors so they cannot diverge.
+pub fn decide(t1: f64, t2: f64, r: usize, t_sp_iter: f64) -> (crate::schedule::ScheduleKind, f64) {
+    use crate::schedule::ScheduleKind;
+    if r > 1 && t_sp_iter < t1 && t_sp_iter < t2 {
+        (ScheduleKind::Pipelined { chunks: r }, t_sp_iter)
+    } else if t1 <= t2 {
+        (ScheduleKind::S1, t1)
+    } else {
+        (ScheduleKind::S2, t2)
+    }
+}
+
+/// Closed-form optimal chunk count: argmin of [`t_sp_iteration`] over
+/// `1..=SP_MAX_CHUNKS` (bounded by one capacity row per chunk) — the
+/// objective is per-iteration time, since the backward pass's doubled
+/// compute shifts the optimum relative to forward-only. Returns
+/// `(r*, t_SP_iter(r*))`.
+pub fn optimal_chunks(cluster: &ClusterProfile, c: &MoeLayerConfig) -> (usize, f64) {
+    argmin_chunks(c, |r| t_sp_iteration(cluster, c, r))
+}
+
+/// Algorithm 1 generalized (closed-form): [`decide`] over per-iteration
+/// estimates (`2·t_D* + 3·t_FFN` for the unchunked schedules: comm
+/// mirrors in backward, compute doubles). Returns the pick and its
+/// estimated per-iteration time.
+pub fn choose_extended(
+    cluster: &ClusterProfile,
+    c: &MoeLayerConfig,
+) -> (crate::schedule::ScheduleKind, f64) {
+    let f = t_ffn_pausemp(cluster, c);
+    let t1 = 2.0 * t_d1(cluster, c) + 3.0 * f;
+    let t2 = 2.0 * t_d2(cluster, c) + 3.0 * f;
+    let (r, tsp) = optimal_chunks(cluster, c);
+    decide(t1, t2, r, tsp)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -253,5 +386,60 @@ mod tests {
         assert_eq!(ag_ring(&cluster, 1, 1e9), 0.0);
         assert_eq!(ar_ring(&cluster, 1, 1e9), 0.0);
         assert_eq!(a2a_pairwise(&cluster, &[3], 1e9), 0.0);
+    }
+
+    #[test]
+    fn t_sp_with_one_chunk_equals_t_d1_plus_ffn() {
+        // SP(1) = dispatch, FFN, combine, AG — exactly Eq. 13's structure
+        // with the compute term made explicit.
+        let cluster = ClusterProfile::testbed_b();
+        let c = cfg();
+        let lhs = t_sp(&cluster, &c, 1);
+        let rhs = t_d1(&cluster, &c) + t_ffn_pausemp(&cluster, &c);
+        assert!((lhs - rhs).abs() / rhs < 1e-12, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn chunk_choice_tracks_compute_intensity() {
+        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        // Compute-heavy: huge expert hidden size ⇒ pipelining pays, r* > 1
+        // and the extended Algorithm 1 picks SP.
+        let heavy = MoeLayerConfig {
+            par: ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 },
+            b: 8,
+            l: 2048,
+            e: 4,
+            m: 1024,
+            h: 32768,
+            k: 2,
+            f: 1.2,
+            dtype_bytes: 4,
+        };
+        let (r_heavy, t_heavy) = optimal_chunks(&cluster, &heavy);
+        assert!(r_heavy > 1, "compute-heavy config should pipeline, got r={r_heavy}");
+        assert!(t_heavy < t_sp_iteration(&cluster, &heavy, 1));
+        let (pick, _) = choose_extended(&cluster, &heavy);
+        assert!(
+            matches!(pick, ScheduleKind::Pipelined { chunks } if chunks == r_heavy),
+            "expected SP, got {pick:?}"
+        );
+
+        // Comm-heavy with tiny FFN: the per-chunk α overhead dominates any
+        // overlap, r* = 1, and the pick falls back to S1/S2.
+        let light = MoeLayerConfig {
+            par: ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 },
+            b: 2,
+            l: 256,
+            e: 4,
+            m: 1024,
+            h: 1024,
+            k: 2,
+            f: 1.2,
+            dtype_bytes: 4,
+        };
+        let (r_light, _) = optimal_chunks(&cluster, &light);
+        assert_eq!(r_light, 1, "comm-heavy config should not pipeline");
+        let (pick, _) = choose_extended(&cluster, &light);
+        assert!(!matches!(pick, ScheduleKind::Pipelined { .. }), "got {pick:?}");
     }
 }

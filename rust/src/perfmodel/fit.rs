@@ -117,6 +117,10 @@ pub fn measure_collective(
 pub struct PerfModel {
     pub cluster_name: String,
     pub par: ParallelDegrees,
+    /// Dense throughput of one GPU (FLOP/s), carried from the profile so
+    /// compute-inclusive predictions (SP's pipeline, the `+ t_FFN` terms
+    /// of the generalized Algorithm 1) need no second argument.
+    pub gpu_flops: f64,
     fits: BTreeMap<CollKind, LinearFit>,
 }
 
@@ -139,7 +143,12 @@ impl PerfModel {
                 .ok_or_else(|| anyhow!("degenerate fit for {}", kind.name()))?;
             fits.insert(kind, fit);
         }
-        Ok(PerfModel { cluster_name: cluster.name.clone(), par, fits })
+        Ok(PerfModel {
+            cluster_name: cluster.name.clone(),
+            par,
+            gpu_flops: cluster.gpu_flops,
+            fits,
+        })
     }
 
     pub fn get(&self, kind: CollKind) -> &LinearFit {

@@ -1,15 +1,17 @@
 //! α-β performance models and the automatic schedule selection
-//! (paper §V, Algorithm 1).
+//! (paper §V, Algorithm 1, generalized to the SP family).
 //!
 //! Each collective, in the process-group layout a configuration induces,
 //! is measured in the simulator over a range of message sizes; ordinary
 //! least squares recovers `t(x) = α + β·x` (§V-A / Fig 6). The closed
-//! forms `t_B`, `t_D1`, `t_D2` (Eqs. 1, 13, 14) are then compared online
-//! to pick S1 or S2.
+//! forms `t_B`, `t_D1`, `t_D2` (Eqs. 1, 13, 14) plus the pipelined
+//! `t_SP(r)` recurrence are then compared online to pick S1, S2 or SP(r*)
+//! — SP's chunk count is itself chosen in closed form (argmin over
+//! `1..=SP_MAX_CHUNKS`).
 
 pub mod closedform;
 pub mod fit;
 pub mod selection;
 
 pub use fit::{measure_collective, CollKind, PerfModel};
-pub use selection::choose_schedule;
+pub use selection::{choose_schedule, choose_schedule_extended};

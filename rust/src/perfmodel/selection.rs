@@ -1,4 +1,5 @@
-//! Algorithm 1: find the better schedule from S1 and S2 (paper §V-B).
+//! Algorithm 1: find the best schedule from S1, S2 and SP(r) (paper §V-B,
+//! generalized to the chunk-pipelined family).
 //!
 //! With the fitted α-β models, the closed forms are
 //!
@@ -6,29 +7,44 @@
 //! t_B  = AG_ESP(BLM·N_ESP·d) + AR_ESP(ar_total) + 2·A2A_EP(ETM·N_ESP·d)      (Eq. 1)
 //! t_D1 = 2·A2A_fused(ETM·N_ESP/N_MP·d) + AG_MP(BLM·d)                        (Eq. 13)
 //! t_D2 =   A2A_fused(ETM·N_ESP/N_MP·d) + SAA(ETM·N_ESP/N_MP·d)               (Eq. 14)
+//! t_SP(r) = pipeline(A2A_fused(·/r), FFN/r) + AG_MP(BLM·d)
 //! ```
 //!
 //! where SAA(x) is the fitted model of the *overlapped* combine (the
 //! paper's `Overlap(x) + AG_MP(ETM)` pair, measured as one collective so
-//! its α_o/β_o are grounded in the same engine the schedules run on).
-//! Volumes come from [`crate::schedule::ops`], so predictions and the
-//! simulated/executed schedules always agree on sizes.
+//! its α_o/β_o are grounded in the same engine the schedules run on), and
+//! `pipeline` is the O(r) recurrence of
+//! [`crate::perfmodel::closedform::t_sp`] evaluated with fitted per-chunk
+//! AlltoAll times. `t_SP` is compute-inclusive (the pipeline's value is
+//! hiding communication behind the FFN), so the generalized comparison
+//! adds the common PauseMP FFN term to `t_D1`/`t_D2`. Volumes come from
+//! [`crate::schedule::ops`], so predictions and the simulated/executed
+//! schedules always agree on sizes.
 
 use crate::config::MoeLayerConfig;
 use crate::schedule::ops::{self, ScheduleKind};
 
 use super::fit::{CollKind, PerfModel};
 
-/// Predicted per-layer forward communication times for each schedule.
+/// Predicted times for each schedule: `t_baseline`, `t_d1`, `t_d2` are
+/// forward communication only (the paper's Eqs. 1/13/14); `t_ffn` is the
+/// PauseMP expert compute those share; `t_sp` is the compute-inclusive
+/// pipelined *forward* estimate at the chosen chunk count, and
+/// `t_sp_iter` the per-iteration (fwd + 2×-compute bwd) estimate the
+/// generalized Algorithm 1 actually compares.
 #[derive(Debug, Clone, Copy)]
 pub struct Prediction {
     pub t_baseline: f64,
     pub t_d1: f64,
     pub t_d2: f64,
+    pub t_ffn: f64,
+    pub t_sp: f64,
+    pub t_sp_iter: f64,
+    pub sp_chunks: usize,
 }
 
 impl Prediction {
-    /// Algorithm 1 lines 6-9: the smaller of t_D1/t_D2.
+    /// Algorithm 1 lines 6-9 (paper form): the smaller of t_D1/t_D2.
     pub fn better(&self) -> ScheduleKind {
         if self.t_d1 <= self.t_d2 {
             ScheduleKind::S1
@@ -36,6 +52,37 @@ impl Prediction {
             ScheduleKind::S2
         }
     }
+
+    /// Generalized Algorithm 1: [`super::closedform::decide`] over
+    /// per-iteration estimates — `2·t_D* + 3·t_FFN` for the unchunked
+    /// schedules (comm mirrors in backward, compute doubles) versus
+    /// `t_sp_iter`.
+    pub fn best(&self) -> ScheduleKind {
+        let t1 = 2.0 * self.t_d1 + 3.0 * self.t_ffn;
+        let t2 = 2.0 * self.t_d2 + 3.0 * self.t_ffn;
+        super::closedform::decide(t1, t2, self.sp_chunks, self.t_sp_iter).0
+    }
+}
+
+/// Fitted SP pipeline region (no AG epilogue): the closed-form recurrence
+/// with each chunk's fused AlltoAll costed by the fitted `A2aFused` model
+/// (argument = that chunk's per-member send volume) and the chunk FFNs
+/// scaled by `ffn_scale` (1.0 forward, 2.0 backward).
+fn sp_pipeline_fitted(
+    model: &PerfModel,
+    c: &MoeLayerConfig,
+    chunks: usize,
+    ffn_scale: f64,
+) -> f64 {
+    let spans = ops::chunk_spans(c.t_pausemp(), ops::sp_clamp_chunks(c, chunks));
+    let comm = |rows: usize| {
+        model.predict(
+            CollKind::A2aFused,
+            ops::bytes_sp_chunk_per_pair(c, rows) * c.par.p as f64,
+        )
+    };
+    let ffn = |rows: usize| ffn_scale * ops::sp_chunk_flops(c, rows) / model.gpu_flops;
+    super::closedform::pipeline_makespan(&spans, comm, ffn)
 }
 
 /// Evaluate the closed forms for one configuration.
@@ -55,12 +102,25 @@ pub fn predict(model: &PerfModel, c: &MoeLayerConfig) -> Prediction {
         + model.predict(CollKind::AgMp, x_ag_mp_s1);
     let t_d2 =
         model.predict(CollKind::A2aFused, x_fused) + model.predict(CollKind::SaaS2, x_fused);
-    Prediction { t_baseline, t_d1, t_d2 }
+    let t_ffn = ops::expert_flops(c, ops::expert_tokens_per_rank(c, true)) / model.gpu_flops;
+
+    let ag = model.predict(CollKind::AgMp, ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64);
+    let (sp_chunks, t_sp_iter) = super::closedform::argmin_chunks(c, |r| {
+        sp_pipeline_fitted(model, c, r, 1.0) + sp_pipeline_fitted(model, c, r, 2.0) + 2.0 * ag
+    });
+    let t_sp = sp_pipeline_fitted(model, c, sp_chunks, 1.0) + ag;
+
+    Prediction { t_baseline, t_d1, t_d2, t_ffn, t_sp, t_sp_iter, sp_chunks }
 }
 
-/// Algorithm 1 entry point: choose S1 or S2 for `c`.
+/// Algorithm 1 entry point (paper form): choose S1 or S2 for `c`.
 pub fn choose_schedule(model: &PerfModel, c: &MoeLayerConfig) -> ScheduleKind {
     predict(model, c).better()
+}
+
+/// Generalized Algorithm 1: choose among S1, S2 and SP(r*) for `c`.
+pub fn choose_schedule_extended(model: &PerfModel, c: &MoeLayerConfig) -> ScheduleKind {
+    predict(model, c).best()
 }
 
 #[cfg(test)]
@@ -111,6 +171,48 @@ mod tests {
 
         assert_eq!(p_tiny.better(), ScheduleKind::S2, "{p_tiny:?}");
         assert_eq!(p_huge.better(), ScheduleKind::S1, "{p_huge:?}");
+    }
+
+    #[test]
+    fn extended_prediction_is_well_formed() {
+        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let par = ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 };
+        let model = PerfModel::fit(&cluster, par).unwrap();
+        let c = cfg(8, 2, 2, 1024, 1.2);
+        let pred = predict(&model, &c);
+        assert!(pred.t_ffn > 0.0 && pred.t_sp > 0.0 && pred.t_sp_iter > pred.t_sp, "{pred:?}");
+        assert!(pred.sp_chunks >= 1 && pred.sp_chunks <= crate::comm::tags::SP_MAX_CHUNKS);
+        // The iteration argmin never exceeds SP(1) = 2·t_D1 + 3·t_FFN.
+        assert!(
+            pred.t_sp_iter <= 2.0 * pred.t_d1 + 3.0 * pred.t_ffn + 1e-12,
+            "{pred:?}"
+        );
+        // best() only ever improves on better() at iteration scale.
+        let base = match pred.better() {
+            ScheduleKind::S1 => 2.0 * pred.t_d1 + 3.0 * pred.t_ffn,
+            _ => 2.0 * pred.t_d2 + 3.0 * pred.t_ffn,
+        };
+        let best_t = match pred.best() {
+            ScheduleKind::Pipelined { .. } => pred.t_sp_iter,
+            ScheduleKind::S1 => 2.0 * pred.t_d1 + 3.0 * pred.t_ffn,
+            _ => 2.0 * pred.t_d2 + 3.0 * pred.t_ffn,
+        };
+        assert!(best_t <= base + 1e-12, "{pred:?}");
+    }
+
+    #[test]
+    fn extended_choice_picks_sp_on_compute_heavy_config() {
+        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let par = ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 };
+        let model = PerfModel::fit(&cluster, par).unwrap();
+        let mut c = cfg(8, 2, 2, 2048, 1.2);
+        c.b = 8;
+        c.h = 32768;
+        let pick = choose_schedule_extended(&model, &c);
+        assert!(
+            matches!(pick, ScheduleKind::Pipelined { chunks } if chunks > 1),
+            "expected SP on compute-heavy config, got {pick:?}"
+        );
     }
 
     #[test]

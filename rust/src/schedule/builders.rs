@@ -1,5 +1,6 @@
 //! Schedule builders: the forward (and mirrored backward) op programs for
-//! the Baseline (Fig 3a), S1 (Fig 3b) and S2 (Fig 3c) schedules.
+//! the Baseline (Fig 3a), S1 (Fig 3b), S2 (Fig 3c) and chunk-pipelined SP
+//! schedules.
 
 use crate::config::MoeLayerConfig;
 
@@ -56,6 +57,56 @@ pub fn forward_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
                 Op::Ungate { flops_per_rank: (local_tokens * c.k * c.m) as f64 },
                 Op::MpAllGather { bytes_per_rank: ops::bytes_mp_ag_s1_per_rank(c) },
             ]
+        }
+        ScheduleKind::Pipelined { chunks } => {
+            if chunks == 0 {
+                panic!("resolve SP's chunk count r via the perf model first");
+            }
+            let local_tokens = c.tokens() / c.par.n_mp;
+            let combine_elems =
+                (c.e * c.t_pausemp() * c.m) as f64 * (c.par.n_esp.saturating_sub(1)) as f64;
+            let spans = ops::chunk_spans(c.t_pausemp(), ops::sp_clamp_chunks(c, chunks));
+            let r = spans.len();
+            // S1's prologue/epilogue with the dispatch→FFN→combine middle
+            // split into r capacity chunks. Emission order D_0, then per
+            // chunk k: [D_{k+1}], F_k, C_k — the comm stream chains the
+            // chunked AlltoAlls in this order while F_k only waits on its
+            // own chunk's dispatch, so C_k overlaps F_{k+1}'s compute and
+            // D_{k+1} overlaps F_k's.
+            let mut v = vec![
+                Op::MpSplit {
+                    bytes_per_rank: (c.input_elems() / c.par.n_mp) as f64 * d,
+                },
+                Op::Gate { flops_per_rank: ops::gate_flops(c, local_tokens) },
+                Op::SpDispatch {
+                    bytes_per_pair: ops::bytes_sp_chunk_per_pair(c, spans[0].1),
+                    index: 0,
+                    of: r,
+                },
+            ];
+            for k in 0..r {
+                if k + 1 < r {
+                    v.push(Op::SpDispatch {
+                        bytes_per_pair: ops::bytes_sp_chunk_per_pair(c, spans[k + 1].1),
+                        index: k + 1,
+                        of: r,
+                    });
+                }
+                v.push(Op::SpExpertFfn {
+                    flops_per_rank: ops::sp_chunk_flops(c, spans[k].1),
+                    index: k,
+                    of: r,
+                });
+                v.push(Op::SpCombine {
+                    bytes_per_pair: ops::bytes_sp_chunk_per_pair(c, spans[k].1),
+                    index: k,
+                    of: r,
+                });
+            }
+            v.push(Op::LocalCombine { flops_per_rank: combine_elems });
+            v.push(Op::Ungate { flops_per_rank: (local_tokens * c.k * c.m) as f64 });
+            v.push(Op::MpAllGather { bytes_per_rank: ops::bytes_mp_ag_s1_per_rank(c) });
+            v
         }
         ScheduleKind::S2 | ScheduleKind::S2Aas => {
             let combine_elems =
@@ -129,6 +180,20 @@ pub fn backward_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
                 Op::LocalCombine { flops_per_rank: 2.0 * flops_per_rank }
             }
             Op::Ungate { flops_per_rank } => Op::Ungate { flops_per_rank: 2.0 * flops_per_rank },
+            // SP: the adjoint of a chunk's dispatch AlltoAll is a
+            // combine-direction AlltoAll of the same volume and vice
+            // versa; under the reversal the region stays a well-formed
+            // pipeline (each chunk's gradient FFN still follows its
+            // dispatch and precedes its combine).
+            Op::SpDispatch { bytes_per_pair, index, of } => {
+                Op::SpCombine { bytes_per_pair, index, of }
+            }
+            Op::SpCombine { bytes_per_pair, index, of } => {
+                Op::SpDispatch { bytes_per_pair, index, of }
+            }
+            Op::SpExpertFfn { flops_per_rank, index, of } => {
+                Op::SpExpertFfn { flops_per_rank: 2.0 * flops_per_rank, index, of }
+            }
         })
         .collect()
 }
@@ -248,5 +313,98 @@ mod tests {
     #[should_panic(expected = "resolve Parm")]
     fn parm_must_be_resolved() {
         forward_ops(ScheduleKind::Parm, &cfg());
+    }
+
+    #[test]
+    #[should_panic(expected = "resolve SP")]
+    fn sp_auto_must_be_resolved() {
+        forward_ops(ScheduleKind::Pipelined { chunks: 0 }, &cfg());
+    }
+
+    #[test]
+    fn sp_structure_interleaves_chunks() {
+        let tags: Vec<&str> = forward_ops(ScheduleKind::Pipelined { chunks: 2 }, &cfg())
+            .iter()
+            .map(|o| o.tag())
+            .collect();
+        assert_eq!(
+            tags,
+            vec![
+                "mp.split",
+                "gate",
+                "sp.dispatch.0",
+                "sp.dispatch.1",
+                "sp.ffn.0",
+                "sp.combine.0",
+                "sp.ffn.1",
+                "sp.combine.1",
+                "local.combine",
+                "ungate",
+                "mp.allgather"
+            ]
+        );
+    }
+
+    #[test]
+    fn sp_conserves_s1_volumes_and_flops() {
+        // Chunking must not change what moves or what is computed — only
+        // when. Compare against S1's totals per op family.
+        let c = cfg();
+        let s1 = forward_ops(ScheduleKind::S1, &c);
+        let sp = forward_ops(ScheduleKind::Pipelined { chunks: 3 }, &c);
+        let a2a_total = |ops: &[Op]| {
+            ops.iter()
+                .map(|o| match *o {
+                    Op::FusedAlltoAll { bytes_per_pair } => bytes_per_pair,
+                    Op::SpDispatch { bytes_per_pair, .. }
+                    | Op::SpCombine { bytes_per_pair, .. } => bytes_per_pair,
+                    _ => 0.0,
+                })
+                .sum::<f64>()
+        };
+        let ffn_total = |ops: &[Op]| {
+            ops.iter()
+                .map(|o| match *o {
+                    Op::ExpertFfn { flops_per_rank } => flops_per_rank,
+                    Op::SpExpertFfn { flops_per_rank, .. } => flops_per_rank,
+                    _ => 0.0,
+                })
+                .sum::<f64>()
+        };
+        assert!((a2a_total(&s1) - a2a_total(&sp)).abs() < 1e-9);
+        let (f1, fp) = (ffn_total(&s1), ffn_total(&sp));
+        assert!((f1 - fp).abs() / f1 < 1e-12, "{f1} vs {fp}");
+    }
+
+    #[test]
+    fn sp_backward_stays_a_pipeline() {
+        let c = cfg();
+        let bwd = backward_ops(ScheduleKind::Pipelined { chunks: 2 }, &c);
+        // Starts with the adjoint of the MP-AllGather.
+        assert_eq!(bwd[0].tag(), "mp.reducescatter");
+        // Every chunk keeps dispatch-before-ffn-before-combine order.
+        for k in 0..2usize {
+            let pos = |pred: &dyn Fn(&Op) -> bool| bwd.iter().position(|o| pred(o)).unwrap();
+            let d = pos(&|o| matches!(*o, Op::SpDispatch { index, .. } if index == k));
+            let f = pos(&|o| matches!(*o, Op::SpExpertFfn { index, .. } if index == k));
+            let cb = pos(&|o| matches!(*o, Op::SpCombine { index, .. } if index == k));
+            assert!(d < f && f < cb, "chunk {k}: d={d} f={f} c={cb}");
+        }
+        // Gradient FFN is doubled.
+        let fwd_ffn: f64 = forward_ops(ScheduleKind::Pipelined { chunks: 2 }, &c)
+            .iter()
+            .map(|o| match *o {
+                Op::SpExpertFfn { flops_per_rank, .. } => flops_per_rank,
+                _ => 0.0,
+            })
+            .sum();
+        let bwd_ffn: f64 = bwd
+            .iter()
+            .map(|o| match *o {
+                Op::SpExpertFfn { flops_per_rank, .. } => flops_per_rank,
+                _ => 0.0,
+            })
+            .sum();
+        assert!((bwd_ffn - 2.0 * fwd_ffn).abs() / bwd_ffn < 1e-12);
     }
 }

@@ -58,6 +58,39 @@ pub trait Machine<T: Transport> {
     }
 }
 
+/// In-flight state of an SP pipelined region (a maximal run of
+/// `SpDispatch`/`SpExpertFfn`/`SpCombine` ops). Instead of the single
+/// per-rank frontier, the region runs TWO per-rank streams — chunked
+/// AlltoAlls chain on the comm stream in emission order, chunked FFNs on
+/// the compute stream — so chunk k's combine overlaps chunk k+1's compute
+/// exactly as the builder's emission order intends. Entry forks both
+/// streams from the main frontier; the region's last combine joins them
+/// back.
+struct PipeState<H> {
+    /// Per-rank comm-stream frontier.
+    comm: Vec<Option<H>>,
+    /// Per-rank compute-stream frontier.
+    comp: Vec<Option<H>>,
+    /// Per-chunk per-rank dispatch completion (feeds that chunk's FFN).
+    dispatched: Vec<Vec<Option<H>>>,
+    /// Per-chunk per-rank FFN completion (feeds that chunk's combine).
+    ffn: Vec<Vec<Option<H>>>,
+    /// Combines finished; when it reaches the chunk count the region ends.
+    combines_done: usize,
+}
+
+impl<H: Clone> PipeState<H> {
+    fn new(frontier: &[Option<H>], chunks: usize) -> PipeState<H> {
+        PipeState {
+            comm: frontier.to_vec(),
+            comp: frontier.to_vec(),
+            dispatched: vec![vec![None; frontier.len()]; chunks],
+            ffn: vec![vec![None; frontier.len()]; chunks],
+            combines_done: 0,
+        }
+    }
+}
+
 /// Which process-group kind an op's collective runs over.
 fn group_kind(op: &Op) -> Option<GroupKind> {
     match op {
@@ -88,6 +121,7 @@ where
 {
     let p = groups.par.p;
     let mut frontier: Vec<Option<T::Handle>> = vec![None; p];
+    let mut pipe: Option<PipeState<T::Handle>> = None;
 
     let deps_of = |frontier: &[Option<T::Handle>], ranks: &[usize]| -> Vec<T::Handle> {
         ranks.iter().filter_map(|&r| frontier[r].clone()).collect()
@@ -109,6 +143,71 @@ where
                 for r in 0..p {
                     let dep: Vec<T::Handle> = frontier[r].iter().cloned().collect();
                     frontier[r] = Some(transport.compute(r, flops_per_rank, &dep, tag));
+                }
+            }
+            Op::SpDispatch { index, of, .. } => {
+                let st = pipe.get_or_insert_with(|| PipeState::new(&frontier, of));
+                ensure!(
+                    index < of && st.dispatched.len() == of,
+                    "sp.dispatch chunk {index} of {of} does not fit the pipelined region"
+                );
+                for grp in groups.all_groups(GroupKind::EpEsp) {
+                    let ins = machine.inputs(op, &grp)?;
+                    ensure!(ins.len() == grp.len(), "one chunk list per member");
+                    let deps = deps_of(&st.comm, &grp);
+                    let (outs, ends) = algo::pairwise_alltoall(transport, &grp, &ins, &deps, tag);
+                    machine.accept(op, &grp, outs)?;
+                    for (k, &r) in grp.iter().enumerate() {
+                        st.comm[r] = Some(ends[k].clone());
+                        st.dispatched[index][r] = Some(ends[k].clone());
+                    }
+                }
+                machine.finish(op)?;
+            }
+            Op::SpExpertFfn { flops_per_rank, index, .. } => {
+                machine.apply_local(op)?;
+                let st = pipe
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("sp.ffn outside a pipelined region"))?;
+                ensure!(index < st.dispatched.len(), "sp.ffn chunk {index} out of range");
+                for r in 0..p {
+                    let mut dep: Vec<T::Handle> =
+                        st.dispatched[index][r].iter().cloned().collect();
+                    dep.extend(st.comp[r].iter().cloned());
+                    let h = transport.compute(r, flops_per_rank, &dep, tag);
+                    st.ffn[index][r] = Some(h.clone());
+                    st.comp[r] = Some(h);
+                }
+            }
+            Op::SpCombine { index, of, .. } => {
+                let merge = {
+                    let st = pipe
+                        .as_mut()
+                        .ok_or_else(|| anyhow::anyhow!("sp.combine outside a pipelined region"))?;
+                    ensure!(index < st.ffn.len(), "sp.combine chunk {index} out of range");
+                    for grp in groups.all_groups(GroupKind::EpEsp) {
+                        let ins = machine.inputs(op, &grp)?;
+                        ensure!(ins.len() == grp.len(), "one chunk list per member");
+                        let mut deps = deps_of(&st.comm, &grp);
+                        deps.extend(deps_of(&st.ffn[index], &grp));
+                        let (outs, ends) =
+                            algo::pairwise_alltoall(transport, &grp, &ins, &deps, tag);
+                        machine.accept(op, &grp, outs)?;
+                        for (k, &r) in grp.iter().enumerate() {
+                            st.comm[r] = Some(ends[k].clone());
+                        }
+                    }
+                    machine.finish(op)?;
+                    st.combines_done += 1;
+                    st.combines_done == of
+                };
+                if merge {
+                    let st = pipe.take().expect("pipeline state present at merge");
+                    for r in 0..p {
+                        let dep: Vec<T::Handle> =
+                            st.comm[r].iter().chain(st.comp[r].iter()).cloned().collect();
+                        frontier[r] = Some(transport.join(&dep, tag));
+                    }
                 }
             }
             Op::SaaCombine { .. } | Op::AasCombine { .. } => {
@@ -178,6 +277,10 @@ where
             }
         }
     }
+    ensure!(
+        pipe.is_none(),
+        "SP pipelined region did not complete (a chunk's combine is missing)"
+    );
     Ok(frontier)
 }
 
@@ -238,5 +341,50 @@ mod tests {
         let tags: Vec<&str> = t.log().iter().map(|(t, _)| *t).collect();
         assert!(tags.contains(&"saa.combine"));
         assert!(tags.contains(&"mp.allgather"));
+    }
+
+    #[test]
+    fn sp_region_runs_all_chunks_and_merges() {
+        let groups = ProcessGroups::new(ParallelDegrees { p: 4, n_mp: 2, n_esp: 2 }).unwrap();
+        let ops = vec![
+            Op::Gate { flops_per_rank: 1.0 },
+            Op::SpDispatch { bytes_per_pair: 8.0, index: 0, of: 2 },
+            Op::SpDispatch { bytes_per_pair: 8.0, index: 1, of: 2 },
+            Op::SpExpertFfn { flops_per_rank: 1.0, index: 0, of: 2 },
+            Op::SpCombine { bytes_per_pair: 8.0, index: 0, of: 2 },
+            Op::SpExpertFfn { flops_per_rank: 1.0, index: 1, of: 2 },
+            Op::SpCombine { bytes_per_pair: 8.0, index: 1, of: 2 },
+            Op::Ungate { flops_per_rank: 1.0 },
+        ];
+        let mut t = DataTransport::new();
+        let mut m = CountingMachine { comm_ops: Vec::new(), local_ops: Vec::new() };
+        let frontier = run_program(&ops, &groups, &mut t, &mut m).unwrap();
+        assert!(frontier.iter().all(|h| h.is_some()), "region merged back");
+        assert_eq!(
+            m.comm_ops,
+            vec!["sp.dispatch.0", "sp.dispatch.1", "sp.combine.0", "sp.combine.1"]
+        );
+        assert_eq!(m.local_ops, vec!["gate", "sp.ffn.0", "sp.ffn.1", "ungate"]);
+        // Per-chunk wire-log entries, each a full product-group AlltoAll of
+        // 8-byte pair chunks over 4 ranks (12 off-diagonal sends).
+        let log = t.log().to_vec();
+        for tag in ["sp.dispatch.0", "sp.dispatch.1", "sp.combine.0", "sp.combine.1"] {
+            let bytes: f64 = log.iter().filter(|(t, _)| *t == tag).map(|(_, b)| *b).sum();
+            assert_eq!(bytes, 12.0 * 8.0, "{tag}");
+        }
+    }
+
+    #[test]
+    fn sp_region_must_complete() {
+        let groups = ProcessGroups::new(ParallelDegrees { p: 4, n_mp: 2, n_esp: 2 }).unwrap();
+        let ops = vec![
+            Op::SpDispatch { bytes_per_pair: 8.0, index: 0, of: 2 },
+            Op::SpExpertFfn { flops_per_rank: 1.0, index: 0, of: 2 },
+            Op::SpCombine { bytes_per_pair: 8.0, index: 0, of: 2 },
+            // chunk 1 never runs
+        ];
+        let mut t = DataTransport::new();
+        let mut m = CountingMachine { comm_ops: Vec::new(), local_ops: Vec::new() };
+        assert!(run_program(&ops, &groups, &mut t, &mut m).is_err());
     }
 }

@@ -42,7 +42,9 @@ impl Machine<DagTransport<'_>> for DagMachine {
             Op::EpAlltoAll { bytes_per_pair }
             | Op::FusedAlltoAll { bytes_per_pair }
             | Op::SaaCombine { bytes_per_pair }
-            | Op::AasCombine { bytes_per_pair } => {
+            | Op::AasCombine { bytes_per_pair }
+            | Op::SpDispatch { bytes_per_pair, .. }
+            | Op::SpCombine { bytes_per_pair, .. } => {
                 vec![vec![Lump(bytes_per_pair); g]; g]
             }
             _ => bail!("non-communication op has no chunk inputs: {op:?}"),
@@ -131,10 +133,71 @@ mod tests {
             ScheduleKind::S1,
             ScheduleKind::S2,
             ScheduleKind::S2Aas,
+            ScheduleKind::Pipelined { chunks: 2 },
+            ScheduleKind::Pipelined { chunks: 8 },
         ] {
             let r = simulate_iteration(kind, &c, &cluster).unwrap();
             assert!(r.makespan > 0.0, "{kind:?}");
         }
+    }
+
+    #[test]
+    fn sp_with_one_chunk_times_like_s1() {
+        // SP(1) is S1's op structure with a fork/join around the middle —
+        // no overlap to exploit, so the makespan must match S1's closely.
+        let cluster = testbed_b();
+        for (p, n_mp, n_esp) in [(8usize, 2usize, 2usize), (16, 4, 2)] {
+            let c = cfg(p, n_mp, n_esp);
+            let t1 = simulate_iteration(ScheduleKind::S1, &c, &cluster).unwrap().makespan;
+            let tsp = simulate_iteration(ScheduleKind::Pipelined { chunks: 1 }, &c, &cluster)
+                .unwrap()
+                .makespan;
+            let rel = (t1 - tsp).abs() / t1;
+            assert!(rel < 1e-9, "SP(1) {tsp} vs S1 {t1} at p={p}");
+        }
+    }
+
+    #[test]
+    fn sp_beats_s1_and_s2_on_compute_heavy_config() {
+        // The SP acceptance case: when expert compute is comparable to (or
+        // larger than) the fused-AlltoAll time, pipelining hides most of
+        // the dispatch/combine communication behind the FFN chunks.
+        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let c = MoeLayerConfig {
+            par: ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 },
+            b: 8,
+            l: 2048,
+            e: 4,
+            m: 1024,
+            h: 32768,
+            k: 2,
+            f: 1.2,
+            dtype_bytes: 4,
+        };
+        let (r, _) = crate::perfmodel::closedform::optimal_chunks(&cluster, &c);
+        assert!(r > 1, "closed form should pick pipelining here, got r={r}");
+        let t1 = simulate_iteration(ScheduleKind::S1, &c, &cluster).unwrap().makespan;
+        let t2 = simulate_iteration(ScheduleKind::S2, &c, &cluster).unwrap().makespan;
+        let tsp = simulate_iteration(ScheduleKind::Pipelined { chunks: r }, &c, &cluster)
+            .unwrap()
+            .makespan;
+        assert!(tsp < t1, "SP(r={r}) {tsp} !< S1 {t1}");
+        assert!(tsp < t2, "SP(r={r}) {tsp} !< S2 {t2}");
+    }
+
+    #[test]
+    fn sp_chunks_overlap_compute_with_communication() {
+        // The overlap the pipeline exists to create is visible in the
+        // engine: compute and network transfers in flight simultaneously.
+        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let c = cfg(8, 2, 2);
+        let ops = builders::forward_ops(ScheduleKind::Pipelined { chunks: 4 }, &c);
+        let dag = lower_ops(&ops, &c, &cluster).unwrap();
+        let report = Simulator::new(&cluster).run(&dag);
+        assert!(
+            report.overlap_seconds(&dag) > 0.0,
+            "SP forward shows no compute/comm overlap"
+        );
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //!   schedule is a short program of [`ops::Op`]s, and this IR is the ONLY
 //!   place communication structure is defined.
 //! * [`builders`] — Baseline (Fig 3a), S1 (Fig 3b), S2 (Fig 3c, with SAA
-//!   or AAS combine) forward/backward programs.
+//!   or AAS combine) and SP forward/backward programs.
 //! * [`interp`] — the transport-generic interpreter: ONE walker over the
 //!   op program, shared by the timing plane and the data plane. Which
 //!   collective an op is, over which process groups it runs, and how its
@@ -15,6 +15,25 @@
 //!   [`crate::comm::transport::DagTransport`]. (The data plane lives in
 //!   [`crate::moe::exec`], via the same interpreter over a
 //!   [`crate::comm::transport::DataTransport`].)
+//!
+//! # SP — the chunk-pipelined schedule
+//!
+//! [`ops::ScheduleKind::Pipelined`] (`sp` / `spN` on the CLI) is the first
+//! schedule *family*: S1's op structure with the fused dispatch AlltoAll,
+//! the expert FFN and the combine AlltoAll split into `r` capacity chunks
+//! (FSMoE-style). The builder emits `D_0, [D_{k+1}], F_k, C_k` per chunk
+//! with per-chunk tags (`sp.dispatch.k` / `sp.ffn.k` / `sp.combine.k`);
+//! the interpreter runs the region on two per-rank streams — chunked
+//! AlltoAlls chain on a comm stream, chunked FFNs on a compute stream, so
+//! chunk k's combine overlaps chunk k+1's compute — and joins them back at
+//! the region's last combine. Both planes inherit the pipelining from the
+//! interpreter: the timing plane sees interleaved transfer/compute tasks,
+//! the data plane stages chunk-indexed tensors and reassembles the full
+//! returned block before the local combine. Because the cost of SP depends
+//! on a knob, `r` is chosen in closed form
+//! ([`crate::perfmodel::closedform::optimal_chunks`], fitted variant in
+//! [`crate::perfmodel::selection`]) and Algorithm 1 generalizes to the
+//! argmin over {S1, S2, SP(r*)}.
 
 pub mod builders;
 pub mod interp;

@@ -45,6 +45,19 @@ pub enum Op {
     LocalCombine { flops_per_rank: f64 },
     /// Scatter combined outputs back into token order (un-gate).
     Ungate { flops_per_rank: f64 },
+    /// SP dispatch: chunk `index` of `of` of the fused EP&ESP-AlltoAll,
+    /// restricted to one capacity span (see [`chunk_spans`]). Chunked ops
+    /// run on a dedicated per-rank comm stream so later dispatch chunks
+    /// overlap earlier chunks' expert compute.
+    SpDispatch { bytes_per_pair: f64, index: usize, of: usize },
+    /// SP expert FFN over chunk `index`'s received capacity span; chains
+    /// on the per-rank compute stream, concurrent with the comm stream.
+    SpExpertFfn { flops_per_rank: f64, index: usize, of: usize },
+    /// SP combine: chunk `index`'s expert outputs returned through the
+    /// fused AlltoAll, overlapping chunk `index+1`'s compute. The last
+    /// combine of the region joins the comm and compute streams back into
+    /// the main frontier.
+    SpCombine { bytes_per_pair: f64, index: usize, of: usize },
 }
 
 impl Op {
@@ -69,6 +82,12 @@ impl Op {
             Op::ExpertFfn { .. } => tags::EXPERT_FFN,
             Op::LocalCombine { .. } => tags::LOCAL_COMBINE,
             Op::Ungate { .. } => tags::UNGATE,
+            // Direct indexing: an index past SP_MAX_CHUNKS is an invariant
+            // violation (builders clamp via `sp_clamp_chunks`) — panic at
+            // the source rather than aliasing chunks in the wire log.
+            Op::SpDispatch { index, .. } => tags::SP_DISPATCH[*index],
+            Op::SpExpertFfn { index, .. } => tags::SP_FFN[*index],
+            Op::SpCombine { index, .. } => tags::SP_COMBINE[*index],
         }
     }
 
@@ -84,6 +103,8 @@ impl Op {
                 | Op::FusedAlltoAll { .. }
                 | Op::SaaCombine { .. }
                 | Op::AasCombine { .. }
+                | Op::SpDispatch { .. }
+                | Op::SpCombine { .. }
         )
     }
 }
@@ -99,7 +120,16 @@ pub enum ScheduleKind {
     S2,
     /// S2 without SAA (sequential AlltoAll + AllGather) — §VI-C ablation.
     S2Aas,
-    /// Automatic selection between S1 and S2 (Algorithm 1).
+    /// Chunk-pipelined dispatch/compute/combine (SP): S1's op structure
+    /// with the fused AlltoAlls and the expert FFN split into `chunks`
+    /// capacity chunks so chunk k's combine overlaps chunk k+1's compute
+    /// (FSMoE-style intra-layer pipelining). `chunks == 0` is the
+    /// unresolved "auto" form — resolve r* via
+    /// [`crate::perfmodel::closedform::optimal_chunks`] or the fitted
+    /// prediction first.
+    Pipelined { chunks: usize },
+    /// Automatic selection among S1, S2 and SP(r*) (Algorithm 1,
+    /// generalized).
     Parm,
 }
 
@@ -110,7 +140,16 @@ impl ScheduleKind {
             ScheduleKind::S1 => "s1",
             ScheduleKind::S2 => "s2",
             ScheduleKind::S2Aas => "s2-aas",
+            ScheduleKind::Pipelined { .. } => "sp",
             ScheduleKind::Parm => "parm",
+        }
+    }
+
+    /// Human-readable form carrying the schedule family's parameter.
+    pub fn label(&self) -> String {
+        match self {
+            ScheduleKind::Pipelined { chunks } if *chunks > 0 => format!("sp(r={chunks})"),
+            k => k.name().to_string(),
         }
     }
 
@@ -120,8 +159,12 @@ impl ScheduleKind {
             "s1" => Some(ScheduleKind::S1),
             "s2" => Some(ScheduleKind::S2),
             "s2-aas" | "aas" => Some(ScheduleKind::S2Aas),
+            "sp" | "pipelined" => Some(ScheduleKind::Pipelined { chunks: 0 }),
             "parm" | "auto" => Some(ScheduleKind::Parm),
-            _ => None,
+            _ => s
+                .strip_prefix("sp")
+                .and_then(|n| n.parse::<usize>().ok())
+                .map(|chunks| ScheduleKind::Pipelined { chunks }),
         }
     }
 }
@@ -162,6 +205,49 @@ pub fn bytes_mp_ag_s1_per_rank(c: &MoeLayerConfig) -> f64 {
 /// slice (E, T/N_MP, M) — the AG_MP(ETM) of Eq. (14).
 pub fn bytes_mp_ag_s2_per_rank(c: &MoeLayerConfig) -> f64 {
     (c.e * c.t_pausemp() * c.m * c.dtype_bytes) as f64
+}
+
+// ---- SP chunking (capacity spans shared by builder and data plane) -----
+
+/// Split `cap` capacity rows into exactly `chunks` contiguous spans of
+/// `(start, rows)` whose sizes differ by at most one row (the first
+/// `cap % chunks` spans are one longer; tail spans are empty when
+/// `cap < chunks`). The SAME split is applied to the builder's capacity
+/// estimate `T` and to the data plane's actual gate capacity, so per-chunk
+/// volumes agree wherever the capacity estimate is exact.
+pub fn chunk_spans(cap: usize, chunks: usize) -> Vec<(usize, usize)> {
+    let r = chunks.max(1);
+    let base = cap / r;
+    let rem = cap % r;
+    let mut out = Vec::with_capacity(r);
+    let mut start = 0;
+    for j in 0..r {
+        let len = base + usize::from(j < rem);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// Clamp an SP chunk count to the representable range: at least 1, at most
+/// [`crate::comm::tags::SP_MAX_CHUNKS`], and at most one chunk per
+/// capacity row so no chunk is empty.
+pub fn sp_clamp_chunks(c: &MoeLayerConfig, chunks: usize) -> usize {
+    chunks
+        .clamp(1, crate::comm::tags::SP_MAX_CHUNKS)
+        .min(c.t_pausemp().max(1))
+}
+
+/// SP per-chunk fused-AlltoAll pair chunk: experts-per-slot × span rows ×
+/// M (the [`bytes_fused_a2a_per_pair`] volume restricted to one span).
+pub fn bytes_sp_chunk_per_pair(c: &MoeLayerConfig, span_rows: usize) -> f64 {
+    (c.experts_per_rank() * span_rows * c.m * c.dtype_bytes) as f64
+}
+
+/// SP per-chunk expert FLOPs per rank: the PauseMP FFN restricted to one
+/// capacity span (experts-per-slot × span rows × P source blocks).
+pub fn sp_chunk_flops(c: &MoeLayerConfig, span_rows: usize) -> f64 {
+    expert_flops(c, (c.experts_per_rank() * span_rows * c.par.p) as f64)
 }
 
 // ---- compute volumes (FLOPs per rank) ----------------------------------
@@ -240,10 +326,19 @@ mod tests {
             ScheduleKind::S1,
             ScheduleKind::S2,
             ScheduleKind::S2Aas,
+            ScheduleKind::Pipelined { chunks: 0 },
             ScheduleKind::Parm,
         ] {
             assert_eq!(ScheduleKind::parse(k.name()), Some(k));
         }
+        // The parameterized family: `spN` pins the chunk count.
+        assert_eq!(
+            ScheduleKind::parse("sp4"),
+            Some(ScheduleKind::Pipelined { chunks: 4 })
+        );
+        assert_eq!(ScheduleKind::parse("spx"), None);
+        assert_eq!(ScheduleKind::Pipelined { chunks: 4 }.label(), "sp(r=4)");
+        assert_eq!(ScheduleKind::S1.label(), "s1");
     }
 
     #[test]
@@ -251,5 +346,54 @@ mod tests {
         assert!(Op::FusedAlltoAll { bytes_per_pair: 1.0 }.is_communication());
         assert!(!Op::Gate { flops_per_rank: 1.0 }.is_communication());
         assert_eq!(Op::MpSplit { bytes_per_rank: 0.0 }.tag(), "mp.split");
+        assert!(Op::SpDispatch { bytes_per_pair: 1.0, index: 0, of: 2 }.is_communication());
+        assert!(Op::SpCombine { bytes_per_pair: 1.0, index: 1, of: 2 }.is_communication());
+        assert!(!Op::SpExpertFfn { flops_per_rank: 1.0, index: 0, of: 2 }.is_communication());
+        assert_eq!(
+            Op::SpDispatch { bytes_per_pair: 1.0, index: 1, of: 4 }.tag(),
+            "sp.dispatch.1"
+        );
+        assert_eq!(
+            Op::SpCombine { bytes_per_pair: 1.0, index: 3, of: 4 }.tag(),
+            "sp.combine.3"
+        );
+    }
+
+    #[test]
+    fn chunk_spans_partition_exactly() {
+        // Even split.
+        assert_eq!(chunk_spans(8, 4), vec![(0, 2), (2, 2), (4, 2), (6, 2)]);
+        // Ragged: first `cap % r` spans are one longer.
+        assert_eq!(chunk_spans(7, 3), vec![(0, 3), (3, 2), (5, 2)]);
+        // Degenerate: more chunks than rows ⇒ empty tails, still `chunks`
+        // spans so op counts and span counts agree.
+        assert_eq!(chunk_spans(2, 4), vec![(0, 1), (1, 1), (2, 0), (2, 0)]);
+        // Spans always tile [0, cap).
+        for (cap, r) in [(17usize, 5usize), (64, 8), (3, 3), (1, 1)] {
+            let spans = chunk_spans(cap, r);
+            assert_eq!(spans.len(), r);
+            assert_eq!(spans.iter().map(|s| s.1).sum::<usize>(), cap);
+            let mut pos = 0;
+            for (start, len) in spans {
+                assert_eq!(start, pos);
+                pos += len;
+            }
+        }
+    }
+
+    #[test]
+    fn sp_chunk_volumes_sum_to_fused_totals() {
+        let c = cfg();
+        let t = c.t_pausemp();
+        for r in [1usize, 2, 3, 4] {
+            let spans = chunk_spans(t, r);
+            let bytes: f64 = spans.iter().map(|s| bytes_sp_chunk_per_pair(&c, s.1)).sum();
+            assert!((bytes - bytes_fused_a2a_per_pair(&c)).abs() < 1e-9, "r={r}");
+            let flops: f64 = spans.iter().map(|s| sp_chunk_flops(&c, s.1)).sum();
+            let full = expert_flops(&c, expert_tokens_per_rank(&c, true));
+            assert!((flops - full).abs() / full < 1e-12, "r={r}");
+        }
+        assert_eq!(sp_clamp_chunks(&c, 0), 1);
+        assert_eq!(sp_clamp_chunks(&c, 100), crate::comm::tags::SP_MAX_CHUNKS);
     }
 }

@@ -107,6 +107,17 @@ impl SimDag {
         log
     }
 
+    /// Total network bytes under all tags starting with `prefix` — sums a
+    /// per-chunk tag family (e.g. `sp.dispatch.`) into one figure, the
+    /// chunked-schedule counterpart of a single [`Self::comm_log`] entry.
+    pub fn comm_bytes_with_prefix(&self, prefix: &str) -> f64 {
+        self.comm_log()
+            .iter()
+            .filter(|(tag, _)| tag.starts_with(prefix))
+            .map(|(_, b)| *b)
+            .sum()
+    }
+
     /// Total compute FLOPs in the DAG.
     pub fn total_flops(&self) -> f64 {
         self.tasks
@@ -134,6 +145,8 @@ mod tests {
         assert_eq!(d.total_network_bytes(), 100.0); // local copy excluded
         assert_eq!(d.total_flops(), 500.0);
         assert_eq!(d.comm_log(), vec![("t", 100.0)]); // local copy excluded
+        assert_eq!(d.comm_bytes_with_prefix("t"), 100.0);
+        assert_eq!(d.comm_bytes_with_prefix("nope."), 0.0);
     }
 
     #[test]

@@ -73,6 +73,46 @@ impl SimReport {
             .map(|(_, s)| *s)
             .sum()
     }
+
+    /// Seconds during which at least one compute task and at least one
+    /// network transfer were simultaneously in flight — the quantity the
+    /// chunk-pipelined (SP) schedule exists to maximize. `dag` must be the
+    /// DAG this report was produced from (task ids index `timings`).
+    pub fn overlap_seconds(&self, dag: &SimDag) -> f64 {
+        assert_eq!(dag.len(), self.timings.len(), "report/DAG mismatch");
+        // Interval sweep over (time, Δcompute, Δtransfer) events.
+        let mut events: Vec<(f64, i32, i32)> = Vec::new();
+        for (id, task) in dag.tasks.iter().enumerate() {
+            let TaskTiming { start, end } = self.timings[id];
+            if end <= start {
+                continue;
+            }
+            match task.kind {
+                TaskKind::Compute { .. } => {
+                    events.push((start, 1, 0));
+                    events.push((end, -1, 0));
+                }
+                TaskKind::Transfer { src, dst, .. } if src != dst => {
+                    events.push((start, 0, 1));
+                    events.push((end, 0, -1));
+                }
+                _ => {}
+            }
+        }
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite times"));
+        let (mut n_compute, mut n_comm) = (0i32, 0i32);
+        let mut prev = 0.0f64;
+        let mut overlap = 0.0f64;
+        for (t, dc, dx) in events {
+            if n_compute > 0 && n_comm > 0 {
+                overlap += t - prev;
+            }
+            n_compute += dc;
+            n_comm += dx;
+            prev = t;
+        }
+        overlap
+    }
 }
 
 /// The engine. Holds mutable resource availability during a run.
@@ -366,6 +406,32 @@ mod tests {
         let bottleneck = 4.0 * (1e-5 + 1e6 * 1e-9);
         assert!(r.makespan >= bottleneck);
         assert!(r.makespan >= 1e-3);
+    }
+
+    #[test]
+    fn overlap_accounting() {
+        let c = tiny_cluster();
+        // Independent compute and transfer: full overlap of the shorter.
+        let mut d = SimDag::new();
+        d.compute(0, 1e9, &[], "c"); // 1 ms
+        d.transfer(0, 1, 1e5, &[], "t"); // 1e-5 + 1e-4 ≈ 0.11 ms
+        let r = Simulator::new(&c).run(&d);
+        let t_xfer = 1e-5 + 1e5 * 1e-9;
+        assert!((r.overlap_seconds(&d) - t_xfer).abs() < 1e-12);
+
+        // Chained compute → transfer: zero overlap.
+        let mut d2 = SimDag::new();
+        let a = d2.compute(0, 1e9, &[], "c");
+        d2.transfer(0, 1, 1e5, &[a], "t");
+        let r2 = Simulator::new(&c).run(&d2);
+        assert_eq!(r2.overlap_seconds(&d2), 0.0);
+
+        // Local copies (free) never count as communication.
+        let mut d3 = SimDag::new();
+        d3.compute(0, 1e9, &[], "c");
+        d3.transfer(1, 1, 1e9, &[], "local");
+        let r3 = Simulator::new(&c).run(&d3);
+        assert_eq!(r3.overlap_seconds(&d3), 0.0);
     }
 
     #[test]

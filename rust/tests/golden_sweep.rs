@@ -1,0 +1,62 @@
+//! Golden-sweep regression gate: a pinned 24-case slice of the Table III
+//! grid on testbed A, run through the parallel sweep runner (2 workers)
+//! and rendered with the same CSV writer `parm sweep --csv` uses, must be
+//! byte-identical to the checked-in `tests/golden/sweep_smoke.csv`.
+//!
+//! Any change to schedule builders, the interpreter, the collective
+//! algorithms, the engine's resource model or the α-β fit shows up here
+//! as a diff — schedule-timing changes must update the golden file
+//! explicitly. Bless flow: `GOLDEN_BLESS=1 cargo test golden_sweep`
+//! rewrites the file (it is also written on first run when missing, with
+//! a notice to commit it); once the golden is committed, a stale file
+//! fails this test AND the CI binary-gate diff, so timing changes cannot
+//! merge silently.
+
+use std::path::Path;
+
+use parm::bench::{run_sweep_with_threads, sweep_csv};
+use parm::config::{sweep, ClusterProfile, SweepFilter};
+
+const GOLDEN: &str = "tests/golden/sweep_smoke.csv";
+const CASES: usize = 24;
+const THREADS: usize = 2;
+
+fn smoke_csv() -> String {
+    let cluster = ClusterProfile::testbed_a();
+    let mut configs = sweep::sweep_table3(&cluster, SweepFilter::Feasible);
+    assert!(configs.len() >= CASES, "grid shrank below the pinned slice");
+    configs.truncate(CASES);
+    let results = run_sweep_with_threads(&configs, &cluster, false, THREADS).unwrap();
+    sweep_csv(&results)
+}
+
+#[test]
+fn golden_sweep_smoke() {
+    let got = smoke_csv();
+    assert_eq!(got.lines().count(), CASES + 1, "header + one row per case");
+    let path = Path::new(GOLDEN);
+    if std::env::var_os("GOLDEN_BLESS").is_some() || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(path, &got).unwrap();
+        eprintln!("golden_sweep: blessed {GOLDEN} ({CASES} cases) — commit it");
+        return;
+    }
+    let want = std::fs::read_to_string(path).unwrap();
+    assert_eq!(
+        want, got,
+        "sweep output diverged from {GOLDEN}; if the schedule-timing change \
+         is intentional, regenerate with `GOLDEN_BLESS=1 cargo test \
+         golden_sweep` and commit the updated golden file"
+    );
+}
+
+#[test]
+fn golden_slice_is_deterministic_across_thread_counts() {
+    // The golden gate pins --threads 2; the CSV must not depend on that.
+    let cluster = ClusterProfile::testbed_a();
+    let mut configs = sweep::sweep_table3(&cluster, SweepFilter::Feasible);
+    configs.truncate(8);
+    let seq = sweep_csv(&run_sweep_with_threads(&configs, &cluster, false, 1).unwrap());
+    let par = sweep_csv(&run_sweep_with_threads(&configs, &cluster, false, 4).unwrap());
+    assert_eq!(seq, par);
+}

@@ -1,0 +1,81 @@
+//! Selection-accuracy property (paper §VI's selection-accuracy analogue,
+//! extended to the SP family): over a seeded random configuration grid,
+//! the generalized Algorithm 1's pick among {S1, S2, SP(r*)} must match
+//! the simulated argmin on ≥ 95% of cases — where "match" tolerates
+//! near-ties (a pick within 5% of the simulated best is not a
+//! misprediction the user could feel).
+
+use parm::bench::ModelCache;
+use parm::config::moe::ParallelDegrees;
+use parm::config::{ClusterProfile, MoeLayerConfig};
+use parm::perfmodel::selection;
+use parm::schedule::{lowering, ScheduleKind};
+use parm::util::prng::Rng;
+
+#[test]
+fn algorithm1_extended_matches_simulated_argmin() {
+    let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+    let cache = ModelCache::default();
+    let mut rng = Rng::new(0x5EED_CA5E);
+    let layouts = [(8usize, 2usize, 2usize), (8, 4, 2), (8, 2, 4), (8, 1, 2)];
+    let mut total = 0usize;
+    let mut good = 0usize;
+    let mut worst: f64 = 0.0;
+    for i in 0..40 {
+        let (p, n_mp, n_esp) = layouts[i % layouts.len()];
+        let par = ParallelDegrees { p, n_mp, n_esp };
+        let cfg = MoeLayerConfig {
+            par,
+            b: *rng.choice(&[2usize, 4, 8]),
+            l: *rng.choice(&[512usize, 1024, 2048]),
+            e: p / n_esp,
+            m: *rng.choice(&[1024usize, 2048]),
+            h: *rng.choice(&[1024usize, 4096, 16384]),
+            k: 2,
+            f: *rng.choice(&[1.2f64, 2.4]),
+            dtype_bytes: 4,
+        };
+        if cfg.validate().is_err() {
+            continue;
+        }
+        let model = cache.get(&cluster, par).unwrap();
+        let pred = selection::predict(&model, &cfg);
+        let pick = pred.best();
+        let t1 = lowering::simulate_iteration(ScheduleKind::S1, &cfg, &cluster)
+            .unwrap()
+            .makespan;
+        let t2 = lowering::simulate_iteration(ScheduleKind::S2, &cfg, &cluster)
+            .unwrap()
+            .makespan;
+        let sp_kind = ScheduleKind::Pipelined { chunks: pred.sp_chunks };
+        let tsp = lowering::simulate_iteration(sp_kind, &cfg, &cluster).unwrap().makespan;
+        let t_pick = match pick {
+            ScheduleKind::S1 => t1,
+            ScheduleKind::S2 => t2,
+            ScheduleKind::Pipelined { .. } => tsp,
+            other => panic!("unexpected pick {other:?}"),
+        };
+        let best = t1.min(t2).min(tsp);
+        let regret = (t_pick - best) / best;
+        worst = worst.max(regret);
+        total += 1;
+        if regret <= 0.05 {
+            good += 1;
+        } else {
+            eprintln!(
+                "mispick at {}: chose {} ({t_pick:.4}s) vs best {best:.4}s \
+                 (s1 {t1:.4}, s2 {t2:.4}, sp {tsp:.4}, regret {:.1}%)",
+                cfg.id(),
+                pick.label(),
+                regret * 100.0
+            );
+        }
+    }
+    assert!(total >= 30, "random grid drew too few valid configs: {total}");
+    let acc = good as f64 / total as f64;
+    eprintln!("selection accuracy: {good}/{total} ({acc:.3}), worst regret {worst:.3}");
+    assert!(
+        acc >= 0.95,
+        "generalized Algorithm 1 accuracy {acc:.2} ({good}/{total}) below 0.95"
+    );
+}

@@ -51,6 +51,10 @@ fn prop_both_transports_log_identical_tag_volumes() {
             ScheduleKind::S1,
             ScheduleKind::S2,
             ScheduleKind::S2Aas,
+            // SP: the per-chunk `(tag, volume)` entries must also agree —
+            // exact configs make T divisible by these chunk counts.
+            ScheduleKind::Pipelined { chunks: 2 },
+            ScheduleKind::Pipelined { chunks: 4 },
         ] {
             let ops = forward_ops(kind, &cfg);
             let dag = lower_ops(&ops, &cfg, &cluster).map_err(|e| e.to_string())?;
@@ -114,13 +118,48 @@ fn dropfree_cfg(rng: &mut Rng) -> MoeLayerConfig {
 }
 
 #[test]
-fn prop_s1_s2_match_single_device_reference() {
+fn prop_sp_chunk_volumes_match_the_monolithic_fused_alltoall() {
+    // Chunking redistributes the fused AlltoAll's bytes across per-chunk
+    // tags without creating or losing any: on the timing plane, the
+    // sp.dispatch.* family must total exactly one fused AlltoAll (and
+    // likewise sp.combine.*), for every chunk count.
+    let cluster = ClusterProfile::testbed_b();
+    check("sp-chunk-volume-conservation", 15, |rng| {
+        let cfg = exact_cfg(rng);
+        let fused_total = {
+            let ops = forward_ops(ScheduleKind::S1, &cfg);
+            let dag = lower_ops(&ops, &cfg, &cluster).map_err(|e| e.to_string())?;
+            dag.comm_bytes_with_prefix("fused.alltoall") / 2.0
+        };
+        for chunks in [1usize, 2, 4] {
+            let ops = forward_ops(ScheduleKind::Pipelined { chunks }, &cfg);
+            let dag = lower_ops(&ops, &cfg, &cluster).map_err(|e| e.to_string())?;
+            let dispatch = dag.comm_bytes_with_prefix("sp.dispatch.");
+            let combine = dag.comm_bytes_with_prefix("sp.combine.");
+            let tol = 1e-6 * fused_total.max(1.0);
+            if (dispatch - fused_total).abs() > tol || (combine - fused_total).abs() > tol {
+                return Err(format!(
+                    "{} r={chunks}: dispatch {dispatch} / combine {combine} vs fused {fused_total}",
+                    cfg.id()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_s1_s2_sp_match_single_device_reference() {
     check("unified-interp-matches-reference", 12, |rng| {
         let cfg = dropfree_cfg(rng);
         let state = LayerState::random(&cfg, rng.next_u64()).map_err(|e| e.to_string())?;
         let mut backend = NativeBackend;
         let cap_ref = cfg.tokens() * cfg.k;
-        for kind in [ScheduleKind::S1, ScheduleKind::S2] {
+        for kind in [
+            ScheduleKind::S1,
+            ScheduleKind::S2,
+            ScheduleKind::Pipelined { chunks: 3 },
+        ] {
             let res = run_schedule(kind, &state, &mut backend).map_err(|e| e.to_string())?;
             if res.dropped != 0 {
                 return Err(format!("{kind:?} dropped {} tokens", res.dropped));
