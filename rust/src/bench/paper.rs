@@ -111,7 +111,9 @@ fn cell_results<'a>(
 /// Table IV — averaged speedups of S1/S2/SP/Parm over the baseline per
 /// (N_MP, N_ESP) cell, on testbed A and testbed B (8/16/32 GPUs). The SP
 /// row extends the paper's table with the chunk-pipelined schedule at its
-/// predicted-optimal r.
+/// predicted-optimal r; SP-uni is the uniform-span ablation (identical to
+/// SP on the paper's uniform-routing grid, and the contrast column for
+/// skewed sweeps).
 pub fn table4(reports: &Path) -> Result<String> {
     let tb_a = ClusterProfile::testbed_a();
     let tb_b = ClusterProfile::testbed_b();
@@ -136,6 +138,7 @@ pub fn table4(reports: &Path) -> Result<String> {
         ("S1", &CaseResult::speedup_s1 as &dyn Fn(&CaseResult) -> f64),
         ("S2", &CaseResult::speedup_s2),
         ("SP", &CaseResult::speedup_sp),
+        ("SP-uni", &CaseResult::speedup_sp_uniform),
         ("Parm", &CaseResult::speedup_parm),
     ] {
         for (n_mp, n_esp) in sweep::table4_cells() {

@@ -29,8 +29,13 @@ pub struct CaseResult {
     pub t_s1: f64,
     pub t_s2: f64,
     pub t_s2_aas: f64,
-    /// Chunk-pipelined schedule at the predicted-optimal `sp_chunks`.
+    /// Chunk-pipelined schedule at the predicted-optimal `sp_chunks`
+    /// (load-aware spans when the config's routing skew is set).
     pub t_sp: f64,
+    /// SP with uniform capacity spans at the same chunk count — the
+    /// ablation column for the load-aware spans (equals `t_sp` when
+    /// `skew == 0`).
+    pub t_sp_uniform: f64,
     /// The r* the fitted pipeline model picked for this configuration.
     pub sp_chunks: usize,
     /// Generalized Algorithm 1's pick among S1, S2 and SP(r*).
@@ -61,6 +66,10 @@ impl CaseResult {
         self.t_baseline / self.t_sp
     }
 
+    pub fn speedup_sp_uniform(&self) -> f64 {
+        self.t_baseline / self.t_sp_uniform
+    }
+
     pub fn speedup_parm(&self) -> f64 {
         self.t_baseline / self.t_parm()
     }
@@ -71,17 +80,19 @@ impl CaseResult {
 /// and the golden regression test so the CI gate diffs exactly what the
 /// runner produced.
 pub fn sweep_csv(results: &[CaseResult]) -> String {
-    let mut s =
-        String::from("config,t_baseline,t_s1,t_s2,t_s2_aas,t_sp,sp_chunks,parm_choice\n");
+    let mut s = String::from(
+        "config,t_baseline,t_s1,t_s2,t_s2_aas,t_sp,t_sp_uniform,sp_chunks,parm_choice\n",
+    );
     for r in results {
         s.push_str(&format!(
-            "{},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{},{}\n",
+            "{},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{},{}\n",
             r.cfg.id(),
             r.t_baseline,
             r.t_s1,
             r.t_s2,
             r.t_s2_aas,
             r.t_sp,
+            r.t_sp_uniform,
             r.sp_chunks,
             r.parm_choice.name()
         ));
@@ -140,6 +151,18 @@ pub fn run_case(
         cluster,
     )?
     .makespan;
+    // Uniform spans only differ from the load-aware ones under skew — skip
+    // the extra simulation on the (dominant) uniform grid.
+    let t_sp_uniform = if cfg.skew > 0.0 {
+        lowering::simulate_iteration(
+            ScheduleKind::PipelinedUniform { chunks: sp_chunks },
+            cfg,
+            cluster,
+        )?
+        .makespan
+    } else {
+        t_sp
+    };
     let parm_choice = pred.best();
     Ok(CaseResult {
         cfg: cfg.clone(),
@@ -148,6 +171,7 @@ pub fn run_case(
         t_s2,
         t_s2_aas,
         t_sp,
+        t_sp_uniform,
         sp_chunks,
         parm_choice,
         comm_ratio_baseline: base.comm_ratio(),
@@ -229,6 +253,7 @@ mod tests {
             k: 2,
             f: 1.2,
             dtype_bytes: 4,
+            skew: 0.0,
         }
     }
 
@@ -256,11 +281,27 @@ mod tests {
         let mut lines = csv.lines();
         assert_eq!(
             lines.next().unwrap(),
-            "config,t_baseline,t_s1,t_s2,t_s2_aas,t_sp,sp_chunks,parm_choice"
+            "config,t_baseline,t_s1,t_s2,t_s2_aas,t_sp,t_sp_uniform,sp_chunks,parm_choice"
         );
         let row = lines.next().unwrap();
-        assert_eq!(row.split(',').count(), 8, "{row}");
+        assert_eq!(row.split(',').count(), 9, "{row}");
         assert!(row.starts_with("p8_mp2_esp2_"), "{row}");
+    }
+
+    #[test]
+    fn skewed_case_carries_the_uniform_span_column() {
+        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let cache = ModelCache::default();
+        let mut c = cfg(8, 2, 2);
+        let uniform = run_case(&c, &cluster, &cache).unwrap();
+        assert_eq!(uniform.t_sp_uniform, uniform.t_sp, "no skew ⇒ identical spans");
+        c.skew = 1.5;
+        let skewed = run_case(&c, &cluster, &cache).unwrap();
+        assert!(skewed.t_sp_uniform > 0.0 && skewed.t_sp > 0.0);
+        assert!(skewed.cfg.id().ends_with("_s1.5"));
+        // The CSV row carries both SP variants.
+        let csv = sweep_csv(&[skewed]);
+        assert!(csv.lines().nth(1).unwrap().contains("_s1.5,"));
     }
 
     #[test]

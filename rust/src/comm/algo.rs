@@ -175,6 +175,12 @@ pub fn pairwise_alltoall<T: Transport>(
     for r in 1..g {
         for i in 0..g {
             let dst = (i + r) % g;
+            // Empty chunks (a zero-width SP capacity span) put nothing on
+            // the wire on either plane: no transfer task, no log entry, no
+            // per-message α cost.
+            if inputs[i][dst].bytes() == 0.0 {
+                continue;
+            }
             let intra = t.same_node(group[i], group[dst]);
             let prev = if intra { &mut prev_intra } else { &mut prev_inter };
             let dep: Vec<T::Handle> = match &prev[i] {
@@ -187,7 +193,18 @@ pub fn pairwise_alltoall<T: Transport>(
             incident[dst].push(h);
         }
     }
-    let done = (0..g).map(|i| t.join(&incident[i], tag)).collect();
+    let done = (0..g)
+        .map(|i| {
+            // A member whose chunks were ALL empty sent and received
+            // nothing — its completion must still carry the caller's
+            // deps, or the frontier would detach from the comm stream.
+            if incident[i].is_empty() {
+                t.join(deps, tag)
+            } else {
+                t.join(&incident[i], tag)
+            }
+        })
+        .collect();
     (outputs, done)
 }
 

@@ -131,6 +131,7 @@ impl ModelConfig {
             k: self.top_k,
             f: self.capacity_factor,
             dtype_bytes: 4,
+            skew: 0.0,
         }
     }
 

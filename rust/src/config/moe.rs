@@ -66,6 +66,12 @@ pub struct MoeLayerConfig {
     pub f: f64,
     /// Bytes per element (4 = fp32; the paper trains fp32 on 2080Ti/4090).
     pub dtype_bytes: usize,
+    /// Zipf-style routing-skew exponent: `0.0` = the uniform router the
+    /// paper assumes; `s > 0` biases the gate's logits by `-s·ln(j+1)` for
+    /// expert `j`, so expert popularity follows a Zipf law (expert 0
+    /// hottest). Drives the load-aware SP chunk spans and the skewed
+    /// sweep family (`parm sweep --skew`).
+    pub skew: f64,
 }
 
 impl MoeLayerConfig {
@@ -81,6 +87,7 @@ impl MoeLayerConfig {
             k: 2,
             f: 1.2,
             dtype_bytes: 4,
+            skew: 0.0,
         }
     }
 
@@ -143,6 +150,9 @@ impl MoeLayerConfig {
         if (self.b * self.l) % self.par.n_mp != 0 {
             bail!("B·L={} not divisible by N_MP={}", self.b * self.l, self.par.n_mp);
         }
+        if !self.skew.is_finite() || self.skew < 0.0 {
+            bail!("routing skew must be finite and ≥ 0, got {}", self.skew);
+        }
         Ok(())
     }
 
@@ -179,17 +189,24 @@ impl MoeLayerConfig {
         tokens * per_token
     }
 
-    /// Short human id, e.g. `p8_mp2_esp2_b2_l64_e4_m32_h64_k2_f1.2`.
+    /// Short human id, e.g. `p8_mp2_esp2_b2_l64_e4_m32_h64_k2_f1.2`
+    /// (suffixed `_s{skew}` only for skewed-routing configs, so uniform
+    /// ids — and the golden sweep CSV built from them — are unchanged).
     pub fn id(&self) -> String {
-        format!(
+        let base = format!(
             "p{}_mp{}_esp{}_b{}_l{}_e{}_m{}_h{}_k{}_f{}",
             self.par.p, self.par.n_mp, self.par.n_esp, self.b, self.l, self.e, self.m, self.h,
             self.k, self.f
-        )
+        );
+        if self.skew > 0.0 {
+            format!("{base}_s{}", self.skew)
+        } else {
+            base
+        }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("p", Json::num(self.par.p as f64)),
             ("n_mp", Json::num(self.par.n_mp as f64)),
             ("n_esp", Json::num(self.par.n_esp as f64)),
@@ -201,7 +218,11 @@ impl MoeLayerConfig {
             ("k", Json::num(self.k as f64)),
             ("f", Json::num(self.f)),
             ("dtype_bytes", Json::num(self.dtype_bytes as f64)),
-        ])
+        ];
+        if self.skew > 0.0 {
+            fields.push(("skew", Json::num(self.skew)));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<MoeLayerConfig> {
@@ -219,6 +240,7 @@ impl MoeLayerConfig {
             k: j.req_usize("k")?,
             f: j.req_f64("f")?,
             dtype_bytes: j.get("dtype_bytes").as_usize().unwrap_or(4),
+            skew: j.get("skew").as_f64().unwrap_or(0.0),
         };
         cfg.validate()?;
         Ok(cfg)

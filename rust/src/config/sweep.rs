@@ -59,6 +59,7 @@ pub fn sweep_table3(cluster: &ClusterProfile, filter: SweepFilter) -> Vec<MoeLay
                                         k: 2,
                                         f,
                                         dtype_bytes: 4,
+                                        skew: 0.0,
                                     };
                                     if cfg.validate().is_err() {
                                         continue;

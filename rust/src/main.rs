@@ -23,7 +23,6 @@ use parm::config::{sweep as sweepcfg, ClusterProfile, MoeLayerConfig, SweepFilte
 use parm::perfmodel::{closedform, selection, PerfModel};
 use parm::schedule::{lowering, ScheduleKind};
 use parm::sim::trace::chrome_trace;
-use parm::sim::Simulator;
 use parm::train::{train_lm, TrainOptions};
 use parm::util::cli::{render_help, Args, Spec};
 use parm::util::stats::mean;
@@ -92,6 +91,7 @@ const LAYER_SPECS: &[Spec] = &[
     Spec::opt_default("hidden", "2048", "expert hidden size H"),
     Spec::opt_default("k", "2", "top-k"),
     Spec::opt_default("f", "1.2", "capacity factor"),
+    Spec::opt_default("skew", "0", "Zipf routing-skew exponent (0 = uniform routing)"),
     Spec::opt("e", "number of experts (default: P / N_ESP)"),
     Spec::flag("help", "show help"),
 ];
@@ -110,6 +110,7 @@ fn layer_from(a: &Args) -> Result<(MoeLayerConfig, ClusterProfile)> {
         k: a.get_usize("k")?.unwrap(),
         f: a.get_f64("f")?.unwrap(),
         dtype_bytes: 4,
+        skew: a.get_f64("skew")?.unwrap(),
     };
     cfg.validate()?;
     Ok((cfg, cluster))
@@ -196,7 +197,7 @@ fn cmd_sim(rest: &[String]) -> Result<()> {
     specs.push(Spec::opt_default(
         "schedule",
         "parm",
-        "baseline|s1|s2|s2-aas|sp|spN|parm (sp = pipelined, N pins the chunk count)",
+        "baseline|s1|s2|s2-aas|sp|spN|spuN|parm (sp = pipelined, N pins the chunk count, spu = uniform spans)",
     ));
     let a = Args::parse(rest, &specs)?;
     if help_guard(&a, "sim", "simulate one MoE layer iteration", &specs) {
@@ -206,12 +207,20 @@ fn cmd_sim(rest: &[String]) -> Result<()> {
     let kind = ScheduleKind::parse(a.req("schedule")?)
         .ok_or_else(|| anyhow!("bad --schedule"))?;
     let kind = resolve(kind, &cfg, &cluster)?;
-    let report = lowering::simulate_iteration(kind, &cfg, &cluster)?;
+    let (report, dag) = lowering::simulate_iteration_with_dag(kind, &cfg, &cluster)?;
     println!("config   : {}", cfg.id());
     println!("cluster  : {}", cluster.name);
     println!("schedule : {}", kind.label());
     println!("iteration: {}", fmt_seconds(report.makespan));
     println!("comm %   : {:.1}", report.comm_ratio() * 100.0);
+    // Comm/compute overlap — the quantity the pipelined schedules exist to
+    // create, and what skewed routing erodes without load-aware spans.
+    let overlap = report.overlap_seconds(&dag);
+    println!(
+        "overlap  : {} ({:.1}% of iteration)",
+        fmt_seconds(overlap),
+        overlap / report.makespan.max(1e-30) * 100.0
+    );
     Ok(())
 }
 
@@ -230,6 +239,10 @@ fn resolve(
         ScheduleKind::Pipelined { chunks: 0 } => {
             let (r, _) = closedform::optimal_chunks(cluster, cfg);
             Ok(ScheduleKind::Pipelined { chunks: r })
+        }
+        ScheduleKind::PipelinedUniform { chunks: 0 } => {
+            let (r, _) = closedform::optimal_chunks(cluster, cfg);
+            Ok(ScheduleKind::PipelinedUniform { chunks: r })
         }
         k => Ok(k),
     }
@@ -300,6 +313,7 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
         Spec::opt_default("cluster", "testbed_b", "cluster profile"),
         Spec::opt("p", "restrict to one P"),
         Spec::opt("limit", "only run the first N configs"),
+        Spec::opt("skew", "run the grid with a Zipf routing-skew exponent (imbalanced traffic)"),
         Spec::opt("threads", "sweep worker threads (default: all cores)"),
         Spec::opt("csv", "write per-case results CSV to PATH (golden-gate format)"),
         Spec::opt(
@@ -320,6 +334,17 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
     if let Some(limit) = a.get_usize("limit")? {
         configs.truncate(limit);
     }
+    if let Some(skew) = a.get_f64("skew")? {
+        if !skew.is_finite() || skew < 0.0 {
+            bail!("routing skew must be finite and ≥ 0, got {skew}");
+        }
+        // Skewed-routing workload family: the same grid under imbalanced
+        // traffic (Zipf gate bias); SP's spans become load-aware and the
+        // SP-uniform column shows what uniform chunking would have cost.
+        for c in &mut configs {
+            c.skew = skew;
+        }
+    }
     println!("{} feasible configs on {}", configs.len(), cluster.name);
     let threads = a.get_usize("threads")?;
     let t_run = std::time::Instant::now();
@@ -331,9 +356,10 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
     let s1: Vec<f64> = results.iter().map(|r| r.speedup_s1()).collect();
     let s2: Vec<f64> = results.iter().map(|r| r.speedup_s2()).collect();
     let sp: Vec<f64> = results.iter().map(|r| r.speedup_sp()).collect();
+    let spu: Vec<f64> = results.iter().map(|r| r.speedup_sp_uniform()).collect();
     let pm: Vec<f64> = results.iter().map(|r| r.speedup_parm()).collect();
     let mut t = Table::new(&["schedule", "mean speedup", "min", "max"]).numeric();
-    for (name, v) in [("S1", &s1), ("S2", &s2), ("SP", &sp), ("Parm", &pm)] {
+    for (name, v) in [("S1", &s1), ("S2", &s2), ("SP", &sp), ("SP-uni", &spu), ("Parm", &pm)] {
         t.row(&[
             name.into(),
             format!("{:.2}×", mean(v)),
@@ -398,6 +424,7 @@ fn write_sweep_bench_json(
                 ("s2", Json::num(mean_of(&|r| r.t_s2))),
                 ("s2_aas", Json::num(mean_of(&|r| r.t_s2_aas))),
                 ("sp", Json::num(mean_of(&|r| r.t_sp))),
+                ("sp_uniform", Json::num(mean_of(&|r| r.t_sp_uniform))),
                 ("parm", Json::num(mean_of(&|r| r.t_parm()))),
             ]),
         ),
@@ -461,9 +488,7 @@ fn cmd_trace(rest: &[String]) -> Result<()> {
     let kind = ScheduleKind::parse(a.req("schedule")?)
         .ok_or_else(|| anyhow!("bad --schedule"))?;
     let kind = resolve(kind, &cfg, &cluster)?;
-    let ops = parm::schedule::iteration_ops(kind, &cfg);
-    let dag = lowering::lower_ops(&ops, &cfg, &cluster)?;
-    let report = Simulator::new(&cluster).run(&dag);
+    let (report, dag) = lowering::simulate_iteration_with_dag(kind, &cfg, &cluster)?;
     let trace = chrome_trace(&dag, &report);
     std::fs::write(a.req("out")?, trace.to_string())?;
     println!(

@@ -89,7 +89,7 @@ pub fn run_schedule(
 ) -> Result<ExecResult> {
     match kind {
         ScheduleKind::Parm => bail!("resolve Parm to a concrete schedule via the perf model first"),
-        ScheduleKind::Pipelined { chunks: 0 } => {
+        ScheduleKind::Pipelined { chunks: 0 } | ScheduleKind::PipelinedUniform { chunks: 0 } => {
             bail!("resolve SP's chunk count r via the perf model first")
         }
         _ => {}
@@ -136,10 +136,23 @@ enum Stage {
 /// stays at [`Stage::Dispatch`] while each capacity chunk moves through
 /// its own dispatch → FFN → combine lane; the last combine interleaves the
 /// returned chunks back into the full (P, E_local, cap, M) block.
+///
+/// Spans are NOT re-derived from a span policy here: each `sp.dispatch`
+/// op's byte field is decoded back into its row count (exactly — the
+/// fields are integer products), so the data plane pipelines on literally
+/// the spans the builder emitted, load-weighted or uniform alike. Every
+/// span is clamped against the gate's **actual** capacity: when the
+/// builder's capacity estimate exceeds it, the overhanging spans shrink
+/// (possibly to zero width) instead of slicing out of bounds, and empty
+/// spans stage empty chunks whose AlltoAlls put nothing on the wire.
 struct SpStage {
-    /// Capacity spans the chunks cover ([`crate::schedule::ops::chunk_spans`]
-    /// of the rank-local gate capacity).
+    /// Capacity spans chunk k covers, filled as its dispatch arrives.
     spans: Vec<(usize, usize)>,
+    /// Whether chunk k's dispatch has been staged.
+    seen: Vec<bool>,
+    /// Capacity rows the program claimed so far (pre-clamp) — the next
+    /// chunk's span start in the builder's estimated capacity.
+    claimed_rows: usize,
     /// Received dispatch chunks, `[chunk][rank]` → (P, E_local, rows, M).
     recv: Vec<Vec<Vec<f32>>>,
     /// Expert outputs per chunk per rank (same shape as `recv`).
@@ -151,9 +164,11 @@ struct SpStage {
 }
 
 impl SpStage {
-    fn new(cap: usize, chunks: usize, p: usize) -> SpStage {
+    fn new(chunks: usize, p: usize) -> SpStage {
         SpStage {
-            spans: crate::schedule::ops::chunk_spans(cap, chunks),
+            spans: vec![(0, 0); chunks],
+            seen: vec![false; chunks],
+            claimed_rows: 0,
             recv: vec![vec![Vec::new(); p]; chunks],
             out: vec![vec![Vec::new(); p]; chunks],
             ret: vec![vec![Vec::new(); p]; chunks],
@@ -276,15 +291,25 @@ impl<'a> DataMachine<'a> {
         out
     }
 
-    /// Gate the current token buffers into dense dispatch tensors.
+    /// Gate the current token buffers into dense dispatch tensors (the
+    /// router bias realizes the config's routing-skew knob).
     fn gate(&mut self) -> Result<()> {
         ensure!(self.stage == Stage::Tokens, "gate expects token stage, got {:?}", self.stage);
         let c = self.cfg;
         let cap = gating::capacity(self.n_tok, c.e, c.k, c.f, self.gate_cap_multiple);
+        let bias = gating::skew_bias(c.e, c.skew);
         let mut infos = Vec::with_capacity(c.par.p);
         for r in 0..c.par.p {
-            let info =
-                gating::gate(&self.buf[r], &self.weights.wg, self.n_tok, c.m, c.e, c.k, cap);
+            let info = gating::gate_biased(
+                &self.buf[r],
+                &self.weights.wg,
+                bias.as_deref(),
+                self.n_tok,
+                c.m,
+                c.e,
+                c.k,
+                cap,
+            );
             let dispatch = gating::build_dispatch(&info, &self.buf[r], c.m);
             self.buf[r] = dispatch;
             infos.push(info);
@@ -352,6 +377,7 @@ impl<'a> DataMachine<'a> {
                 .as_mut()
                 .ok_or_else(|| anyhow::anyhow!("sp.ffn before any sp.dispatch"))?;
             ensure!(index < sp.spans.len(), "sp.ffn chunk {index} out of range");
+            ensure!(sp.seen[index], "sp.ffn chunk {index} before its dispatch");
             (sp.spans[index].1, std::mem::take(&mut sp.recv[index]))
         };
         ensure!(recv_all.len() == p, "sp.ffn expects one received block per rank");
@@ -379,6 +405,11 @@ impl<'a> DataMachine<'a> {
             .ok_or_else(|| anyhow::anyhow!("sp assembly without a pipelined region"))?;
         let c = self.cfg;
         let (p, m, cap) = (c.par.p, c.m, self.cap);
+        ensure!(
+            sp.claimed_rows >= cap,
+            "SP program covers {} capacity rows but the gate produced {cap}",
+            sp.claimed_rows
+        );
         let e_local = c.experts_per_rank();
         for r in 0..p {
             let mut full = vec![0.0f32; p * e_local * cap * m];
@@ -551,22 +582,43 @@ impl Machine<DataTransport> for DataMachine<'_> {
                     other => bail!("fused alltoall has no semantic at stage {other:?}"),
                 }
             }
-            Op::SpDispatch { index, of, .. } => {
+            Op::SpDispatch { index, of, bytes_per_pair } => {
                 ensure!(
                     self.stage == Stage::Dispatch,
                     "sp.dispatch has no semantic at stage {:?}",
                     self.stage
                 );
                 if self.sp.is_none() {
-                    self.sp = Some(SpStage::new(self.cap, of, self.cfg.par.p));
+                    self.sp = Some(SpStage::new(of, self.cfg.par.p));
                 }
                 let (start, rows) = {
-                    let sp = self.sp.as_ref().expect("sp stage initialized above");
+                    let cap = self.cap;
+                    // Exact decode: the op field is the integer product
+                    // experts_per_rank · rows · M · dtype_bytes as f64.
+                    let row_bytes =
+                        (self.cfg.experts_per_rank() * self.cfg.m * self.cfg.dtype_bytes) as f64;
+                    let sp = self.sp.as_mut().expect("sp stage initialized above");
                     ensure!(
                         index < of && sp.spans.len() == of,
                         "sp.dispatch chunk {index} of {of} does not fit the region"
                     );
-                    sp.spans[index]
+                    ensure!(!sp.seen[index], "sp.dispatch chunk {index} staged twice");
+                    ensure!(
+                        index == 0 || sp.seen[index - 1],
+                        "sp.dispatch chunk {index} arrived before chunk {}",
+                        index - 1
+                    );
+                    let claimed = (bytes_per_pair / row_bytes).round() as usize;
+                    // Clamp the builder's capacity-estimate span against
+                    // the gate's ACTUAL capacity: overhanging spans shrink
+                    // (to zero width at the tail) instead of slicing the
+                    // dispatch tensor out of bounds.
+                    let start = sp.claimed_rows.min(cap);
+                    let rows = claimed.min(cap - start);
+                    sp.claimed_rows += claimed;
+                    sp.seen[index] = true;
+                    sp.spans[index] = (start, rows);
+                    (start, rows)
                 };
                 Ok(grp
                     .iter()
@@ -728,6 +780,7 @@ mod tests {
             k: 2,
             f: 64.0, // generous: no drops anywhere
             dtype_bytes: 4,
+            skew: 0.0,
         }
     }
 
@@ -829,6 +882,125 @@ mod tests {
                 "sp.combine.1",
                 tags::MP_ALLGATHER
             ]
+        );
+    }
+
+    #[test]
+    fn skewed_routing_matches_reference_on_every_sp_variant() {
+        // The routing-skew knob biases the gate identically in the dense
+        // reference and every schedule, so equivalence still holds under
+        // imbalanced traffic — including the load-weighted spans (which
+        // differ from uniform ones precisely because of the skew).
+        let mut c = cfg(8, 2, 2);
+        c.skew = 1.5;
+        let state = LayerState::random(&c, 21).unwrap();
+        let mut backend = NativeBackend;
+        let cap_ref = c.tokens() * c.k;
+        let refs: Vec<Vec<f32>> = (0..c.par.p)
+            .map(|r| {
+                let toks = &state.tokens[r];
+                reference_forward(&c, &state.weights, toks, c.tokens(), cap_ref, &mut backend)
+                    .unwrap()
+            })
+            .collect();
+        for kind in [
+            ScheduleKind::S1,
+            ScheduleKind::S2,
+            ScheduleKind::Pipelined { chunks: 2 },
+            ScheduleKind::Pipelined { chunks: 4 },
+            ScheduleKind::PipelinedUniform { chunks: 4 },
+        ] {
+            let res = run_schedule(kind, &state, &mut backend).unwrap();
+            assert_eq!(res.dropped, 0, "{kind:?} dropped under generous capacity");
+            for r in 0..c.par.p {
+                assert_close(&res.outputs[r], &refs[r], 1e-4, 1e-3).unwrap_or_else(|e| {
+                    panic!("{kind:?} rank {r} mismatch under skew: {e}");
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn sp_program_clamps_spans_to_actual_capacity() {
+        // Regression: `sp_clamp_chunks` clamps on the builder's capacity
+        // ESTIMATE; a program whose estimate exceeds the gate's actual
+        // capacity used to stage empty chunks and emit zero-byte
+        // AlltoAlls. The data plane must clamp every span against the
+        // actual capacity, keep the overhanging chunks off the wire, and
+        // still produce the exact schedule outputs.
+        use crate::comm::transport::DataTransport;
+        use crate::schedule::interp::run_program;
+        use crate::schedule::ops;
+
+        let c = MoeLayerConfig {
+            par: ParallelDegrees { p: 4, n_mp: 1, n_esp: 1 },
+            b: 1,
+            l: 8,
+            e: 4,
+            m: 4,
+            h: 4,
+            k: 1,
+            f: 1.0,
+            dtype_bytes: 4,
+            skew: 0.0,
+        };
+        c.validate().unwrap();
+        assert_eq!(c.t_pausemp(), 2, "actual gate capacity for this layout");
+        let state = LayerState::random(&c, 33).unwrap();
+        let mut backend = NativeBackend;
+        // Ground truth from the builder's (correctly clamped) 2-chunk
+        // program: same routing, same spans [ (0,1), (1,1) ].
+        let want = run_schedule(ScheduleKind::Pipelined { chunks: 2 }, &state, &mut backend)
+            .unwrap()
+            .outputs;
+
+        // Hand-built program claiming FOUR one-row chunks (capacity
+        // estimate 4 > actual 2), in the builder's emission order.
+        let row1 = ops::bytes_sp_chunk_per_pair(&c, 1);
+        let d = |index| Op::SpDispatch { bytes_per_pair: row1, index, of: 4 };
+        let f = |index| Op::SpExpertFfn { flops_per_rank: 1.0, index, of: 4 };
+        let cb = |index| Op::SpCombine { bytes_per_pair: row1, index, of: 4 };
+        let prog = vec![
+            Op::MpSplit { bytes_per_rank: 0.0 },
+            Op::Gate { flops_per_rank: 1.0 },
+            d(0),
+            d(1),
+            f(0),
+            cb(0),
+            d(2),
+            f(1),
+            cb(1),
+            d(3),
+            f(2),
+            cb(2),
+            f(3),
+            cb(3),
+            Op::LocalCombine { flops_per_rank: 1.0 },
+            Op::Ungate { flops_per_rank: 1.0 },
+            Op::MpAllGather { bytes_per_rank: 0.0 },
+        ];
+        let mut transport = DataTransport::new();
+        let mut machine = DataMachine::new(&state, &mut backend, &prog);
+        run_program(&prog, &state.groups, &mut transport, &mut machine).unwrap();
+        assert!(matches!(machine.stage, Stage::Tokens));
+        for r in 0..c.par.p {
+            assert_close(&machine.buf[r], &want[r], 1e-6, 1e-5).unwrap_or_else(|e| {
+                panic!("clamped program rank {r} diverged: {e}");
+            });
+        }
+        // The overhanging chunks moved nothing: no zero-byte wire entries,
+        // no tags for the empty spans.
+        let log = transport.log();
+        assert!(log.iter().all(|(_, b)| *b > 0.0), "zero-byte wire entries: {log:?}");
+        let tags: Vec<&str> = log.iter().map(|(t, _)| *t).collect();
+        assert!(tags.contains(&"sp.dispatch.0") && tags.contains(&"sp.combine.1"), "{tags:?}");
+        assert!(
+            !tags.contains(&"sp.dispatch.2") && !tags.contains(&"sp.dispatch.3"),
+            "empty spans must stay off the wire: {tags:?}"
+        );
+        assert!(
+            !tags.contains(&"sp.combine.2") && !tags.contains(&"sp.combine.3"),
+            "empty combines must stay off the wire: {tags:?}"
         );
     }
 

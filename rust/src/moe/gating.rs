@@ -20,6 +20,25 @@ pub struct DispatchInfo {
     pub assignments: Vec<(usize, usize, usize, f32)>,
     /// Tokens whose k-th choice overflowed an expert's capacity.
     pub dropped: usize,
+    /// Per-expert load statistics: slots actually filled in each expert's
+    /// capacity block (`expert_loads[j] ≤ capacity`). This is the gate-side
+    /// signal the load-aware SP chunk spans consume — under skewed routing
+    /// the filled prefixes are unequal, and spans balanced on these counts
+    /// recover the dispatch/compute overlap uniform spans lose.
+    pub expert_loads: Vec<usize>,
+}
+
+impl DispatchInfo {
+    /// Largest per-expert load divided by the mean load — 1.0 for perfectly
+    /// balanced routing, `E` when one expert takes everything.
+    pub fn load_imbalance(&self) -> f64 {
+        let max = self.expert_loads.iter().copied().max().unwrap_or(0);
+        let total: usize = self.expert_loads.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        max as f64 * self.e as f64 / total as f64
+    }
 }
 
 /// Capacity per expert: `C = ceil(k·f·n/E)`, floored at 1, optionally
@@ -29,6 +48,18 @@ pub fn capacity(n_tokens: usize, e: usize, k: usize, f: f64, multiple_of: usize)
     let c = (k as f64 * f * n_tokens as f64 / e as f64).ceil() as usize;
     let c = c.max(1);
     c.div_ceil(multiple_of) * multiple_of
+}
+
+/// Zipf-style router bias for a skew exponent: expert `j` gets
+/// `-skew·ln(j+1)` added to its logit before the softmax, so expert
+/// popularity follows `(j+1)^{-skew}` (expert 0 hottest). `None` for
+/// `skew == 0` — the unbiased router. Shared by the data plane and the
+/// dense reference so every schedule routes identically under skew.
+pub fn skew_bias(e: usize, skew: f64) -> Option<Vec<f32>> {
+    if skew <= 0.0 {
+        return None;
+    }
+    Some((0..e).map(|j| (-skew * ((j + 1) as f64).ln()) as f32).collect())
 }
 
 /// Route `tokens` ((n, m) row-major) through the gate `wg` ((m, e)).
@@ -41,8 +72,32 @@ pub fn gate(
     k: usize,
     cap: usize,
 ) -> DispatchInfo {
+    gate_biased(tokens, wg, None, n, m, e, k, cap)
+}
+
+/// [`gate`] with an optional per-expert logit bias (the routing-skew knob;
+/// see [`skew_bias`]).
+#[allow(clippy::too_many_arguments)]
+pub fn gate_biased(
+    tokens: &[f32],
+    wg: &[f32],
+    bias: Option<&[f32]>,
+    n: usize,
+    m: usize,
+    e: usize,
+    k: usize,
+    cap: usize,
+) -> DispatchInfo {
     assert!(k <= e, "top-{k} of {e} experts");
     let mut logits = linalg::matmul(tokens, wg, n, m, e);
+    if let Some(b) = bias {
+        assert_eq!(b.len(), e, "one bias per expert");
+        for t in 0..n {
+            for (j, &bj) in b.iter().enumerate() {
+                logits[t * e + j] += bj;
+            }
+        }
+    }
     linalg::softmax_rows(&mut logits, n, e);
 
     let mut counts = vec![0usize; e];
@@ -66,17 +121,29 @@ pub fn gate(
                     best_p = p;
                 }
             }
-            let expert = best;
+            // NaN logits compare false against NEG_INFINITY, so the scan
+            // can finish with no winner. Route such tokens to the
+            // lowest-index untaken expert with zero combine weight instead
+            // of indexing `taken[usize::MAX]`.
+            let (expert, w) = if best == usize::MAX {
+                let fallback = taken
+                    .iter()
+                    .position(|t| !*t)
+                    .expect("k ≤ e leaves an untaken expert");
+                (fallback, 0.0)
+            } else {
+                (best, probs[best])
+            };
             taken[expert] = true;
             if counts[expert] < cap {
-                assignments.push((t, expert, counts[expert], probs[expert]));
+                assignments.push((t, expert, counts[expert], w));
                 counts[expert] += 1;
             } else {
                 dropped += 1;
             }
         }
     }
-    DispatchInfo { n_tokens: n, e, capacity: cap, assignments, dropped }
+    DispatchInfo { n_tokens: n, e, capacity: cap, assignments, dropped, expert_loads: counts }
 }
 
 /// Build the dense (E, C, M) dispatch tensor (zero-padded).
@@ -216,6 +283,81 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn nan_logits_fall_back_instead_of_panicking() {
+        // Regression: NaN router logits compare false against
+        // NEG_INFINITY, leaving `best == usize::MAX` and panicking with an
+        // index out of bounds. NaN tokens must route to the lowest-index
+        // untaken experts with zero weight.
+        let tokens = vec![f32::NAN, 1.0, 0.5, f32::NAN]; // (2, 2); token 0 NaN
+        let wg = vec![1.0, 0.0, 0.0, 1.0];
+        let info = gate(&tokens, &wg, 2, 2, 2, 2, 4);
+        assert_eq!(info.assignments.len(), 4);
+        // NaN tokens take experts 0 then 1 (lowest untaken first), weight 0.
+        let t0: Vec<(usize, f32)> = info
+            .assignments
+            .iter()
+            .filter(|(t, ..)| *t == 0)
+            .map(|&(_, e, _, w)| (e, w))
+            .collect();
+        assert_eq!(t0, vec![(0, 0.0), (1, 0.0)]);
+        // The finite token still routes normally with finite weights.
+        assert!(info
+            .assignments
+            .iter()
+            .filter(|(t, ..)| *t == 1)
+            .all(|&(_, _, _, w)| w.is_finite()));
+        assert_eq!(info.dropped, 0);
+    }
+
+    #[test]
+    fn nan_logits_respect_capacity() {
+        // All-NaN tokens all fall back to expert 0 first; capacity still
+        // limits the slots and counts drops as usual.
+        let tokens = vec![f32::NAN; 3 * 2];
+        let wg = vec![1.0, 0.0, 0.0, 1.0];
+        let info = gate(&tokens, &wg, 3, 2, 2, 1, 1);
+        assert_eq!(info.dropped, 2);
+        assert_eq!(info.expert_loads, vec![1, 0]);
+    }
+
+    #[test]
+    fn expert_loads_count_filled_slots() {
+        // Every token prefers expert 0; capacity 2 fills two slots there.
+        let tokens = vec![5.0, 0.0, 5.0, 0.0, 5.0, 0.0];
+        let wg = vec![1.0, 0.0, 0.0, 1.0];
+        let info = gate(&tokens, &wg, 3, 2, 2, 1, 2);
+        assert_eq!(info.expert_loads, vec![2, 0]);
+        assert_eq!(info.dropped, 1);
+        assert!((info.load_imbalance() - 2.0).abs() < 1e-12);
+        // Loads always agree with the assignment multiset.
+        let mut counts = vec![0usize; 2];
+        for &(_, e, ..) in &info.assignments {
+            counts[e] += 1;
+        }
+        assert_eq!(counts, info.expert_loads);
+    }
+
+    #[test]
+    fn skew_bias_concentrates_routing_on_low_experts() {
+        let mut rng = Rng::new(7);
+        let (n, m, e) = (64usize, 8usize, 4usize);
+        let tokens = rng.f32_vec(n * m);
+        // Weak random router: the bias dominates.
+        let wg: Vec<f32> = rng.f32_vec(m * e).iter().map(|v| v * 0.01).collect();
+        let bias = skew_bias(e, 2.0).unwrap();
+        let info = gate_biased(&tokens, &wg, Some(&bias), n, m, e, 1, n);
+        // Expert 0 is the Zipf head: it must take the majority of tokens.
+        assert!(
+            info.expert_loads[0] > n / 2,
+            "expected skewed routing, loads {:?}",
+            info.expert_loads
+        );
+        assert!(info.load_imbalance() > 1.5);
+        // skew = 0 means no bias.
+        assert!(skew_bias(e, 0.0).is_none());
     }
 
     #[test]

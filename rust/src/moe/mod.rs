@@ -1,6 +1,13 @@
 //! The MoE layer itself: gating, expert weights, the distributed
 //! data-plane executor (numerics of each schedule over real rank buffers),
 //! and the single-device reference the schedules are verified against.
+//!
+//! The gate carries the imbalanced-traffic axis: an optional Zipf logit
+//! bias ([`gating::skew_bias`], driven by
+//! [`crate::config::MoeLayerConfig::skew`]) skews expert popularity
+//! identically in every schedule AND the dense reference, and
+//! [`gating::DispatchInfo::expert_loads`] reports the per-expert slot
+//! fills the load-aware SP chunk spans are built from.
 
 pub mod backend;
 pub mod exec;

@@ -11,7 +11,9 @@ use crate::moe::weights::GlobalWeights;
 
 /// Forward one rank's tokens ((n, M) row-major) through the dense layer.
 /// `cap` is the per-expert capacity to emulate (schedules differ here);
-/// pass a generous value for drop-free comparison.
+/// pass a generous value for drop-free comparison. Honors the config's
+/// routing-skew knob with the same gate bias the distributed schedules
+/// apply, so skewed routing stays reference-checkable.
 pub fn reference_forward(
     c: &MoeLayerConfig,
     w: &GlobalWeights,
@@ -20,7 +22,8 @@ pub fn reference_forward(
     cap: usize,
     backend: &mut dyn ExpertBackend,
 ) -> Result<Vec<f32>> {
-    let info = gating::gate(tokens, &w.wg, n, c.m, c.e, c.k, cap);
+    let bias = gating::skew_bias(c.e, c.skew);
+    let info = gating::gate_biased(tokens, &w.wg, bias.as_deref(), n, c.m, c.e, c.k, cap);
     let dispatch = gating::build_dispatch(&info, tokens, c.m);
     let mut expert_out = vec![0.0f32; c.e * cap * c.m];
     for e in 0..c.e {
@@ -49,6 +52,7 @@ mod tests {
             k: 2,
             f: 4.0,
             dtype_bytes: 4,
+            skew: 0.0,
         }
     }
 

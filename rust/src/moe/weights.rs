@@ -82,6 +82,7 @@ mod tests {
             k: 1,
             f: 2.0,
             dtype_bytes: 4,
+            skew: 0.0,
         }
     }
 

@@ -155,9 +155,14 @@ pub fn choose(cluster: &ClusterProfile, c: &MoeLayerConfig) -> crate::schedule::
 }
 
 /// Expert-FFN seconds per rank under PauseMP — the compute term shared by
-/// S1, S2 and SP (the baseline duplicates it N_MP times instead).
+/// S1, S2 and SP (the baseline duplicates it N_MP times instead). Scaled
+/// by the routing-load model ([`ops::ffn_load_scale`]) so skewed configs
+/// price only the actually-routed tokens (zero padding does no FFN work),
+/// matching the builders.
 pub fn t_ffn_pausemp(cluster: &ClusterProfile, c: &MoeLayerConfig) -> f64 {
-    ops::expert_flops(c, ops::expert_tokens_per_rank(c, true)) / cluster.gpu_flops
+    ops::expert_flops(c, ops::expert_tokens_per_rank(c, true))
+        * ops::ffn_load_scale(c, c.t_pausemp())
+        / cluster.gpu_flops
 }
 
 /// Analytical `t_SP(r)`: the chunk-pipelined dispatch→compute→combine
@@ -189,37 +194,44 @@ pub fn sp_pipeline(
 ) -> f64 {
     let groups = ProcessGroups::new(c.par).expect("valid degrees");
     let world = groups.world();
-    let spans = ops::chunk_spans(c.t_pausemp(), ops::sp_clamp_chunks(c, chunks));
-    let comm = |rows: usize| a2a_pairwise(cluster, &world, ops::bytes_sp_chunk_per_pair(c, rows));
-    let ffn = |rows: usize| ffn_scale * ops::sp_chunk_flops(c, rows) / cluster.gpu_flops;
+    let cap = c.t_pausemp();
+    let spans = ops::sp_spans(c, cap, ops::sp_clamp_chunks(c, chunks));
+    let comm = |span: (usize, usize)| {
+        a2a_pairwise(cluster, &world, ops::bytes_sp_chunk_per_pair(c, span.1))
+    };
+    let ffn = |span: (usize, usize)| {
+        ffn_scale * ops::sp_chunk_flops_span(c, cap, span) / cluster.gpu_flops
+    };
     pipeline_makespan(&spans, comm, ffn)
 }
 
 /// The ONE pipeline recurrence, over the builder's emission order (`D_0`,
 /// then per chunk k: `[D_{k+1}], F_k, C_k`) — parameterized by per-chunk
-/// comm/FFN cost functions so the α-β-constant evaluator ([`sp_pipeline`])
-/// and the fitted evaluator ([`crate::perfmodel::selection`]) cannot
-/// diverge structurally.
+/// comm/FFN cost functions over the full `(start, rows)` span (per-chunk
+/// row counts AND offsets, so load-aware evaluators can weight each chunk
+/// by its filled rows) so the α-β-constant evaluator ([`sp_pipeline`]) and
+/// the fitted evaluator ([`crate::perfmodel::selection`]) cannot diverge
+/// structurally.
 pub fn pipeline_makespan(
     spans: &[(usize, usize)],
-    comm: impl Fn(usize) -> f64,
-    ffn: impl Fn(usize) -> f64,
+    comm: impl Fn((usize, usize)) -> f64,
+    ffn: impl Fn((usize, usize)) -> f64,
 ) -> f64 {
     let r = spans.len();
     if r == 0 {
         return 0.0;
     }
     let mut disp_done = vec![0.0f64; r];
-    let mut comm_t = comm(spans[0].1);
+    let mut comm_t = comm(spans[0]);
     disp_done[0] = comm_t;
     let mut comp_t = 0.0f64;
     for k in 0..r {
         if k + 1 < r {
-            comm_t += comm(spans[k + 1].1);
+            comm_t += comm(spans[k + 1]);
             disp_done[k + 1] = comm_t;
         }
-        comp_t = comp_t.max(disp_done[k]) + ffn(spans[k].1);
-        comm_t = comm_t.max(comp_t) + comm(spans[k].1);
+        comp_t = comp_t.max(disp_done[k]) + ffn(spans[k]);
+        comm_t = comm_t.max(comp_t) + comm(spans[k]);
     }
     comm_t.max(comp_t)
 }
@@ -309,6 +321,7 @@ mod tests {
             k: 2,
             f: 1.2,
             dtype_bytes: 4,
+            skew: 0.0,
         }
     }
 
@@ -414,6 +427,7 @@ mod tests {
             k: 2,
             f: 1.2,
             dtype_bytes: 4,
+            skew: 0.0,
         };
         let (r_heavy, t_heavy) = optimal_chunks(&cluster, &heavy);
         assert!(r_heavy > 1, "compute-heavy config should pipeline, got r={r_heavy}");
@@ -436,6 +450,7 @@ mod tests {
             k: 2,
             f: 1.2,
             dtype_bytes: 4,
+            skew: 0.0,
         };
         let (r_light, _) = optimal_chunks(&cluster, &light);
         assert_eq!(r_light, 1, "comm-heavy config should not pipeline");

@@ -74,14 +74,17 @@ fn sp_pipeline_fitted(
     chunks: usize,
     ffn_scale: f64,
 ) -> f64 {
-    let spans = ops::chunk_spans(c.t_pausemp(), ops::sp_clamp_chunks(c, chunks));
-    let comm = |rows: usize| {
+    let cap = c.t_pausemp();
+    let spans = ops::sp_spans(c, cap, ops::sp_clamp_chunks(c, chunks));
+    let comm = |span: (usize, usize)| {
         model.predict(
             CollKind::A2aFused,
-            ops::bytes_sp_chunk_per_pair(c, rows) * c.par.p as f64,
+            ops::bytes_sp_chunk_per_pair(c, span.1) * c.par.p as f64,
         )
     };
-    let ffn = |rows: usize| ffn_scale * ops::sp_chunk_flops(c, rows) / model.gpu_flops;
+    let ffn = |span: (usize, usize)| {
+        ffn_scale * ops::sp_chunk_flops_span(c, cap, span) / model.gpu_flops
+    };
     super::closedform::pipeline_makespan(&spans, comm, ffn)
 }
 
@@ -102,7 +105,9 @@ pub fn predict(model: &PerfModel, c: &MoeLayerConfig) -> Prediction {
         + model.predict(CollKind::AgMp, x_ag_mp_s1);
     let t_d2 =
         model.predict(CollKind::A2aFused, x_fused) + model.predict(CollKind::SaaS2, x_fused);
-    let t_ffn = ops::expert_flops(c, ops::expert_tokens_per_rank(c, true)) / model.gpu_flops;
+    let t_ffn = ops::expert_flops(c, ops::expert_tokens_per_rank(c, true))
+        * ops::ffn_load_scale(c, c.t_pausemp())
+        / model.gpu_flops;
 
     let ag = model.predict(CollKind::AgMp, ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64);
     let (sp_chunks, t_sp_iter) = super::closedform::argmin_chunks(c, |r| {
@@ -140,6 +145,7 @@ mod tests {
             k: 2,
             f,
             dtype_bytes: 4,
+            skew: 0.0,
         }
     }
 

@@ -24,7 +24,8 @@ pub fn forward_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
                 Op::Gate { flops_per_rank: ops::gate_flops(c, gathered_tokens) },
                 Op::EpAlltoAll { bytes_per_pair: ops::bytes_ep_a2a_per_pair(c) },
                 Op::ExpertFfn {
-                    flops_per_rank: ops::expert_flops(c, ops::expert_tokens_per_rank(c, false)),
+                    flops_per_rank: ops::expert_flops(c, ops::expert_tokens_per_rank(c, false))
+                        * ops::ffn_load_scale(c, c.t()),
                 },
                 Op::EspAllReduce { total_bytes: ops::bytes_esp_ar_total(c) },
                 Op::EpAlltoAll { bytes_per_pair: ops::bytes_ep_a2a_per_pair(c) },
@@ -50,7 +51,8 @@ pub fn forward_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
                 Op::Gate { flops_per_rank: ops::gate_flops(c, local_tokens) },
                 Op::FusedAlltoAll { bytes_per_pair: ops::bytes_fused_a2a_per_pair(c) },
                 Op::ExpertFfn {
-                    flops_per_rank: ops::expert_flops(c, ops::expert_tokens_per_rank(c, true)),
+                    flops_per_rank: ops::expert_flops(c, ops::expert_tokens_per_rank(c, true))
+                        * ops::ffn_load_scale(c, c.t_pausemp()),
                 },
                 Op::FusedAlltoAll { bytes_per_pair: ops::bytes_fused_a2a_per_pair(c) },
                 Op::LocalCombine { flops_per_rank: combine_elems },
@@ -58,14 +60,25 @@ pub fn forward_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
                 Op::MpAllGather { bytes_per_rank: ops::bytes_mp_ag_s1_per_rank(c) },
             ]
         }
-        ScheduleKind::Pipelined { chunks } => {
+        ScheduleKind::Pipelined { chunks } | ScheduleKind::PipelinedUniform { chunks } => {
             if chunks == 0 {
                 panic!("resolve SP's chunk count r via the perf model first");
             }
             let local_tokens = c.tokens() / c.par.n_mp;
             let combine_elems =
                 (c.e * c.t_pausemp() * c.m) as f64 * (c.par.n_esp.saturating_sub(1)) as f64;
-            let spans = ops::chunk_spans(c.t_pausemp(), ops::sp_clamp_chunks(c, chunks));
+            // Load-aware spans for the Pipelined family (FLOPs-balanced
+            // from the gate's expected loads when the skew knob is on);
+            // the PipelinedUniform ablation keeps raw-row spans but still
+            // prices compute by the load model, so the two variants differ
+            // only in where the chunk boundaries fall.
+            let cap = c.t_pausemp();
+            let clamped = ops::sp_clamp_chunks(c, chunks);
+            let spans = if matches!(kind, ScheduleKind::Pipelined { .. }) {
+                ops::sp_spans(c, cap, clamped)
+            } else {
+                ops::chunk_spans(cap, clamped)
+            };
             let r = spans.len();
             // S1's prologue/epilogue with the dispatch→FFN→combine middle
             // split into r capacity chunks. Emission order D_0, then per
@@ -93,7 +106,7 @@ pub fn forward_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
                     });
                 }
                 v.push(Op::SpExpertFfn {
-                    flops_per_rank: ops::sp_chunk_flops(c, spans[k].1),
+                    flops_per_rank: ops::sp_chunk_flops_span(c, cap, spans[k]),
                     index: k,
                     of: r,
                 });
@@ -124,7 +137,8 @@ pub fn forward_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
                 },
                 Op::FusedAlltoAll { bytes_per_pair: ops::bytes_fused_a2a_per_pair(c) },
                 Op::ExpertFfn {
-                    flops_per_rank: ops::expert_flops(c, ops::expert_tokens_per_rank(c, true)),
+                    flops_per_rank: ops::expert_flops(c, ops::expert_tokens_per_rank(c, true))
+                        * ops::ffn_load_scale(c, c.t_pausemp()),
                 },
                 // Second fused AlltoAll overlapped with the MP-AllGather of
                 // the (E, T/N_MP, M) combine output — AG_MP(ETM) in Eq. 14.
@@ -374,6 +388,63 @@ mod tests {
         assert!((a2a_total(&s1) - a2a_total(&sp)).abs() < 1e-9);
         let (f1, fp) = (ffn_total(&s1), ffn_total(&sp));
         assert!((f1 - fp).abs() / f1 < 1e-12, "{f1} vs {fp}");
+    }
+
+    #[test]
+    fn skewed_sp_conserves_scaled_volumes_and_flops() {
+        // Under the routing-skew knob, chunking must still move exactly
+        // the fused-AlltoAll bytes (dense slabs) and compute exactly the
+        // load-scaled FFN — for BOTH the weighted and the uniform span
+        // variants (they differ only in where the boundaries fall).
+        let mut c = cfg();
+        c.skew = 1.3;
+        let s1 = forward_ops(ScheduleKind::S1, &c);
+        let a2a_total = |ops: &[Op]| {
+            ops.iter()
+                .map(|o| match *o {
+                    Op::FusedAlltoAll { bytes_per_pair } => bytes_per_pair,
+                    Op::SpDispatch { bytes_per_pair, .. }
+                    | Op::SpCombine { bytes_per_pair, .. } => bytes_per_pair,
+                    _ => 0.0,
+                })
+                .sum::<f64>()
+        };
+        let ffn_total = |ops: &[Op]| {
+            ops.iter()
+                .map(|o| match *o {
+                    Op::ExpertFfn { flops_per_rank } => flops_per_rank,
+                    Op::SpExpertFfn { flops_per_rank, .. } => flops_per_rank,
+                    _ => 0.0,
+                })
+                .sum::<f64>()
+        };
+        // The load scale strictly discounts the dense FFN under skew.
+        let dense = ops::expert_flops(&c, ops::expert_tokens_per_rank(&c, true));
+        assert!(ffn_total(&s1) < dense, "skew must discount the dense FFN");
+        for kind in [
+            ScheduleKind::Pipelined { chunks: 3 },
+            ScheduleKind::PipelinedUniform { chunks: 3 },
+        ] {
+            let sp = forward_ops(kind, &c);
+            assert!((a2a_total(&s1) - a2a_total(&sp)).abs() < 1e-9, "{kind:?}");
+            let (f1, fp) = (ffn_total(&s1), ffn_total(&sp));
+            assert!((f1 - fp).abs() / f1 < 1e-9, "{kind:?}: {f1} vs {fp}");
+        }
+        // The two variants place boundaries differently under skew.
+        let dispatch_bytes = |kind| -> Vec<f64> {
+            forward_ops(kind, &c)
+                .iter()
+                .filter_map(|o| match *o {
+                    Op::SpDispatch { bytes_per_pair, .. } => Some(bytes_per_pair),
+                    _ => None,
+                })
+                .collect()
+        };
+        assert_ne!(
+            dispatch_bytes(ScheduleKind::Pipelined { chunks: 3 }),
+            dispatch_bytes(ScheduleKind::PipelinedUniform { chunks: 3 }),
+            "weighted spans should differ from uniform under skew"
+        );
     }
 
     #[test]

@@ -303,7 +303,15 @@ mod tests {
                 Op::EspAllGather { .. } | Op::MpAllGather { .. } => 1,
                 _ => grp.len(),
             };
-            Ok(vec![vec![vec![1.0f32; 2]; per]; grp.len()])
+            // Chunked SP ops honor their byte fields so tests can drive
+            // ragged (and zero-width) capacity spans through the region.
+            let elems = match op {
+                Op::SpDispatch { bytes_per_pair, .. } | Op::SpCombine { bytes_per_pair, .. } => {
+                    (*bytes_per_pair / 4.0) as usize
+                }
+                _ => 2,
+            };
+            Ok(vec![vec![vec![1.0f32; elems]; per]; grp.len()])
         }
 
         fn accept(&mut self, op: &Op, _grp: &[usize], _outputs: Vec<Vec<Vec<f32>>>) -> Result<()> {
@@ -372,6 +380,42 @@ mod tests {
             let bytes: f64 = log.iter().filter(|(t, _)| *t == tag).map(|(_, b)| *b).sum();
             assert_eq!(bytes, 12.0 * 8.0, "{tag}");
         }
+    }
+
+    #[test]
+    fn sp_region_supports_ragged_and_empty_chunks() {
+        // Load-aware spans make the chunked AlltoAlls unequal — and a
+        // capacity clamp can make a tail chunk empty. The interpreter
+        // walks both unchanged: per-chunk volumes land under per-chunk
+        // tags, and an empty chunk's AlltoAll puts nothing on the wire
+        // while the region still merges.
+        let groups = ProcessGroups::new(ParallelDegrees { p: 4, n_mp: 2, n_esp: 2 }).unwrap();
+        let ops = vec![
+            Op::SpDispatch { bytes_per_pair: 8.0, index: 0, of: 3 },
+            Op::SpDispatch { bytes_per_pair: 16.0, index: 1, of: 3 },
+            Op::SpExpertFfn { flops_per_rank: 1.0, index: 0, of: 3 },
+            Op::SpCombine { bytes_per_pair: 8.0, index: 0, of: 3 },
+            Op::SpDispatch { bytes_per_pair: 0.0, index: 2, of: 3 },
+            Op::SpExpertFfn { flops_per_rank: 1.0, index: 1, of: 3 },
+            Op::SpCombine { bytes_per_pair: 16.0, index: 1, of: 3 },
+            Op::SpExpertFfn { flops_per_rank: 0.0, index: 2, of: 3 },
+            Op::SpCombine { bytes_per_pair: 0.0, index: 2, of: 3 },
+        ];
+        let mut t = DataTransport::new();
+        let mut m = CountingMachine { comm_ops: Vec::new(), local_ops: Vec::new() };
+        let frontier = run_program(&ops, &groups, &mut t, &mut m).unwrap();
+        assert!(frontier.iter().all(|h| h.is_some()), "region merged back");
+        let log = t.log().to_vec();
+        let vol = |tag: &str| -> f64 {
+            log.iter().filter(|(t, _)| *t == tag).map(|(_, b)| *b).sum()
+        };
+        // 12 off-diagonal pairs over the 4-rank product group.
+        assert_eq!(vol("sp.dispatch.0"), 12.0 * 8.0);
+        assert_eq!(vol("sp.dispatch.1"), 12.0 * 16.0);
+        assert_eq!(vol("sp.combine.1"), 12.0 * 16.0);
+        let tags: Vec<&str> = log.iter().map(|(t, _)| *t).collect();
+        assert!(!tags.contains(&"sp.dispatch.2"), "empty chunk on the wire: {tags:?}");
+        assert!(!tags.contains(&"sp.combine.2"), "empty combine on the wire: {tags:?}");
     }
 
     #[test]

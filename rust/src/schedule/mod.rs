@@ -34,6 +34,27 @@
 //! ([`crate::perfmodel::closedform::optimal_chunks`], fitted variant in
 //! [`crate::perfmodel::selection`]) and Algorithm 1 generalizes to the
 //! argmin over {S1, S2, SP(r*)}.
+//!
+//! # Load-aware spans (skewed routing)
+//!
+//! Real gates route unevenly. The routing-skew knob
+//! ([`crate::config::MoeLayerConfig::skew`], `--skew` on the CLI) biases
+//! the router's logits by `-s·ln(j+1)` so expert popularity follows a Zipf
+//! law, and the span policy becomes **load-aware**: instead of splitting
+//! capacity rows uniformly, [`ops::chunk_spans_weighted`] balances
+//! *estimated per-chunk FLOPs* from the gate's expected per-expert loads
+//! ([`ops::expected_loads`]) — hot head rows get short spans, the sparse
+//! tail long ones, so per-chunk FFN times equalize and chunk k's combine
+//! stays hidden behind chunk k+1's compute. [`ops::sp_spans`] is the ONE
+//! policy shared by the builder, both perf-model evaluators (the pipeline
+//! recurrence takes full `(start, rows)` spans) and — by decoding the op
+//! byte fields, clamped against the gate's actual capacity — the data
+//! plane. [`ops::ScheduleKind::PipelinedUniform`] (`spu` / `spuN`) keeps
+//! uniform spans as the ablation: identical to SP at `skew == 0`, the
+//! contrast column (`SP-uni`) in skewed sweeps. Every schedule's
+//! monolithic FFN term is scaled by the same load model
+//! ([`ops::ffn_load_scale`]) so S1/S2/baseline and the SP chunks price
+//! compute consistently.
 
 pub mod builders;
 pub mod interp;

@@ -123,11 +123,18 @@ pub enum ScheduleKind {
     /// Chunk-pipelined dispatch/compute/combine (SP): S1's op structure
     /// with the fused AlltoAlls and the expert FFN split into `chunks`
     /// capacity chunks so chunk k's combine overlaps chunk k+1's compute
-    /// (FSMoE-style intra-layer pipelining). `chunks == 0` is the
-    /// unresolved "auto" form — resolve r* via
-    /// [`crate::perfmodel::closedform::optimal_chunks`] or the fitted
-    /// prediction first.
+    /// (FSMoE-style intra-layer pipelining). Spans are **load-aware**: with
+    /// a routing-skew knob set ([`crate::config::MoeLayerConfig::skew`]),
+    /// chunk boundaries balance estimated per-chunk FLOPs from the gate's
+    /// expected expert loads ([`chunk_spans_weighted`]) rather than raw
+    /// capacity rows. `chunks == 0` is the unresolved "auto" form —
+    /// resolve r* via [`crate::perfmodel::closedform::optimal_chunks`] or
+    /// the fitted prediction first.
     Pipelined { chunks: usize },
+    /// SP with **uniform** capacity spans regardless of routing skew — the
+    /// ablation column for the load-aware spans (identical to
+    /// [`ScheduleKind::Pipelined`] when `skew == 0`).
+    PipelinedUniform { chunks: usize },
     /// Automatic selection among S1, S2 and SP(r*) (Algorithm 1,
     /// generalized).
     Parm,
@@ -141,6 +148,7 @@ impl ScheduleKind {
             ScheduleKind::S2 => "s2",
             ScheduleKind::S2Aas => "s2-aas",
             ScheduleKind::Pipelined { .. } => "sp",
+            ScheduleKind::PipelinedUniform { .. } => "sp-uniform",
             ScheduleKind::Parm => "parm",
         }
     }
@@ -149,6 +157,9 @@ impl ScheduleKind {
     pub fn label(&self) -> String {
         match self {
             ScheduleKind::Pipelined { chunks } if *chunks > 0 => format!("sp(r={chunks})"),
+            ScheduleKind::PipelinedUniform { chunks } if *chunks > 0 => {
+                format!("sp-uniform(r={chunks})")
+            }
             k => k.name().to_string(),
         }
     }
@@ -160,11 +171,16 @@ impl ScheduleKind {
             "s2" => Some(ScheduleKind::S2),
             "s2-aas" | "aas" => Some(ScheduleKind::S2Aas),
             "sp" | "pipelined" => Some(ScheduleKind::Pipelined { chunks: 0 }),
+            "sp-uniform" | "spu" => Some(ScheduleKind::PipelinedUniform { chunks: 0 }),
             "parm" | "auto" => Some(ScheduleKind::Parm),
-            _ => s
-                .strip_prefix("sp")
-                .and_then(|n| n.parse::<usize>().ok())
-                .map(|chunks| ScheduleKind::Pipelined { chunks }),
+            _ => {
+                if let Some(n) = s.strip_prefix("spu").and_then(|n| n.parse::<usize>().ok()) {
+                    return Some(ScheduleKind::PipelinedUniform { chunks: n });
+                }
+                s.strip_prefix("sp")
+                    .and_then(|n| n.parse::<usize>().ok())
+                    .map(|chunks| ScheduleKind::Pipelined { chunks })
+            }
         }
     }
 }
@@ -240,6 +256,8 @@ pub fn sp_clamp_chunks(c: &MoeLayerConfig, chunks: usize) -> usize {
 
 /// SP per-chunk fused-AlltoAll pair chunk: experts-per-slot × span rows ×
 /// M (the [`bytes_fused_a2a_per_pair`] volume restricted to one span).
+/// Volumes stay **dense** under skew: the dispatch ships each expert's
+/// zero-padded capacity rows either way — only compute is load-dependent.
 pub fn bytes_sp_chunk_per_pair(c: &MoeLayerConfig, span_rows: usize) -> f64 {
     (c.experts_per_rank() * span_rows * c.m * c.dtype_bytes) as f64
 }
@@ -248,6 +266,167 @@ pub fn bytes_sp_chunk_per_pair(c: &MoeLayerConfig, span_rows: usize) -> f64 {
 /// capacity span (experts-per-slot × span rows × P source blocks).
 pub fn sp_chunk_flops(c: &MoeLayerConfig, span_rows: usize) -> f64 {
     expert_flops(c, (c.experts_per_rank() * span_rows * c.par.p) as f64)
+}
+
+// ---- routing-skew load model (gate statistics → span weights) ----------
+
+/// Expected per-expert load as a fraction of the hottest expert's load,
+/// derived from the Zipf router bias (`MoeLayerConfig::skew`): expert `j`
+/// carries Zipf weight `(j+1)^{-skew}`, each expert's fill is capped at
+/// its capacity, and the vector is normalized so the hottest expert reads
+/// 1.0 (skew → 0 degrades continuously to all-ones). `None` when the knob
+/// is off — the uniform model the rest of the IR assumed before
+/// load-aware chunking.
+pub fn expert_load_fractions(c: &MoeLayerConfig) -> Option<Vec<f64>> {
+    if c.skew <= 0.0 {
+        return None;
+    }
+    let w: Vec<f64> = (0..c.e).map(|j| ((j + 1) as f64).powf(-c.skew)).collect();
+    // Expected pick mass per expert over the gate's k without-replacement
+    // rounds, by iterative renormalization: each round distributes one
+    // pick per token in proportion to the weight mass earlier rounds have
+    // not yet retired (`w_j·(1 - inc_j)`). Exact at k = 1; for k ≥ 2 it
+    // captures what independent Zipf shares would miss — a token cannot
+    // take the same expert twice, so under strong skew the k hottest
+    // experts ALL saturate (the gate's top-k max-scan does exactly that).
+    let mut inc = vec![0.0f64; c.e];
+    for _ in 0..c.k {
+        let denom: f64 = w.iter().zip(&inc).map(|(wj, ij)| wj * (1.0 - ij)).sum();
+        if denom <= 0.0 {
+            break;
+        }
+        for (ij, wj) in inc.iter_mut().zip(&w) {
+            *ij = (*ij + wj * (1.0 - *ij) / denom).min(1.0);
+        }
+    }
+    // Fill fraction of expert j's capacity rows: expected picks `n·inc_j`
+    // over the capacity budget ceil(n·k·f/E) ≈ inc_j·E/(k·f), saturating
+    // at a full block.
+    let kf = c.k as f64 * c.f;
+    let fills: Vec<f64> = inc.iter().map(|i| (i * c.e as f64 / kf).min(1.0)).collect();
+    let max = fills.iter().cloned().fold(0.0f64, f64::max).max(1e-12);
+    Some(fills.iter().map(|f| f / max).collect())
+}
+
+/// Expected filled rows per expert at capacity `cap` (the integer loads
+/// the weighted spans and the per-chunk FLOPs model share — deterministic
+/// rounding, so the builders, the perf-model evaluators and the data plane
+/// all see the same profile). `None` when `skew == 0`.
+pub fn expected_loads(c: &MoeLayerConfig, cap: usize) -> Option<Vec<usize>> {
+    expert_load_fractions(c)
+        .map(|fr| fr.iter().map(|f| (f * cap as f64 + 0.5).floor() as usize).collect())
+}
+
+/// Filled rows across ALL experts within capacity rows
+/// `[start, start + rows)` — the tokens a span actually carries under the
+/// load profile (each expert fills the prefix of its capacity block).
+fn total_filled(loads: &[usize], start: usize, rows: usize) -> usize {
+    loads.iter().map(|&l| l.saturating_sub(start).min(rows)).sum()
+}
+
+/// Split `cap` capacity rows into `chunks` contiguous spans whose
+/// **estimated FLOPs** (not raw rows) are balanced: row `j`'s weight is
+/// the number of experts whose filled prefix extends past row `j`, so
+/// under a skewed load profile the hot head rows get short spans and the
+/// sparse tail gets long ones — equalizing per-chunk FFN time, which is
+/// what keeps chunk k's combine hidden behind chunk k+1's compute. With a
+/// flat (or empty) profile — every row carrying the same weight — this
+/// reduces exactly to [`chunk_spans`].
+pub fn chunk_spans_weighted(cap: usize, chunks: usize, loads: &[usize]) -> Vec<(usize, usize)> {
+    let r = chunks.max(1);
+    // Prefix weights: pre[i] = Σ_{row < i} (#experts with load > row).
+    let mut pre = Vec::with_capacity(cap + 1);
+    pre.push(0.0f64);
+    for row in 0..cap {
+        let w = loads.iter().filter(|&&l| l > row).count() as f64;
+        pre.push(pre[row] + w);
+    }
+    let total = *pre.last().unwrap_or(&0.0);
+    if cap == 0 || total <= 0.0 {
+        return chunk_spans(cap, r);
+    }
+    // Flat profile (all loads saturate the capacity): every row weighs the
+    // same, so defer to chunk_spans' exact front-loaded-remainder split
+    // rather than the target walk (which rounds boundaries differently).
+    if (1..=cap).all(|i| pre[i] - pre[i - 1] == pre[1]) {
+        return chunk_spans(cap, r);
+    }
+    let mut out = Vec::with_capacity(r);
+    let mut start = 0usize;
+    for k in 0..r {
+        if k + 1 == r {
+            out.push((start, cap - start));
+            break;
+        }
+        if start >= cap {
+            out.push((cap, 0));
+            continue;
+        }
+        let left = r - 1 - k; // spans still owed after this one
+        let rows_left = cap - start;
+        // Give this span at least one row; keep one row per later span
+        // while rows remain (the degenerate cap < chunks case tails off
+        // with zero-width spans exactly like `chunk_spans`).
+        let max_end = if rows_left > left { cap - left } else { start + 1 };
+        let target = total * (k + 1) as f64 / r as f64;
+        let mut end = start + 1;
+        while end < max_end && pre[end] < target {
+            end += 1;
+        }
+        out.push((start, end - start));
+        start = end;
+    }
+    out
+}
+
+/// The spans one SP region pipelines over: FLOPs-balanced from the
+/// expected gate loads when the routing-skew knob is on, the uniform
+/// [`chunk_spans`] otherwise. The ONE span policy shared by the schedule
+/// builder (capacity estimate) and the data plane (actual gate capacity),
+/// so both transports stage identical chunks.
+pub fn sp_spans(c: &MoeLayerConfig, cap: usize, chunks: usize) -> Vec<(usize, usize)> {
+    match expected_loads(c, cap) {
+        Some(loads) => chunk_spans_weighted(cap, chunks, &loads),
+        None => chunk_spans(cap, chunks),
+    }
+}
+
+/// Load-aware per-chunk expert FLOPs per rank: only the *filled* rows of
+/// a span do useful FFN work (a load-aware kernel skips the zero
+/// padding). The engine charges ONE flops-per-rank scalar per op, so the
+/// chunk is priced at the mean per-rank share of its filled rows — note
+/// that pricing by the *busiest* slot instead would make capacity-span
+/// chunking blind to skew (the hottest expert fills every span evenly);
+/// it is the aggregate token mass per span that is front-loaded, and that
+/// is what the weighted spans rebalance. Reduces to [`sp_chunk_flops`]
+/// when `skew == 0`.
+pub fn sp_chunk_flops_span(c: &MoeLayerConfig, cap: usize, span: (usize, usize)) -> f64 {
+    let (start, rows) = span;
+    match expected_loads(c, cap) {
+        Some(loads) => {
+            let mean_rows = total_filled(&loads, start, rows) as f64 / c.par.n_ep() as f64;
+            expert_flops(c, mean_rows * c.par.p as f64)
+        }
+        None => sp_chunk_flops(c, rows),
+    }
+}
+
+/// Fraction of the dense expert FFN actually computed under the load
+/// profile (1.0 with the skew knob off). Scales every schedule's
+/// monolithic `ExpertFfn` term so S1/S2/baseline and the SP chunks price
+/// compute consistently: by linearity the scaled monolithic FFN equals
+/// the sum of [`sp_chunk_flops_span`] over ANY span partition, exactly.
+pub fn ffn_load_scale(c: &MoeLayerConfig, cap: usize) -> f64 {
+    match expected_loads(c, cap) {
+        Some(loads) => {
+            let dense = c.par.n_ep() * c.experts_per_rank() * cap;
+            if dense == 0 {
+                return 1.0;
+            }
+            total_filled(&loads, 0, cap) as f64 / dense as f64
+        }
+        None => 1.0,
+    }
 }
 
 // ---- compute volumes (FLOPs per rank) ----------------------------------
@@ -339,6 +518,23 @@ mod tests {
         assert_eq!(ScheduleKind::parse("spx"), None);
         assert_eq!(ScheduleKind::Pipelined { chunks: 4 }.label(), "sp(r=4)");
         assert_eq!(ScheduleKind::S1.label(), "s1");
+        // The uniform-span ablation variant.
+        assert_eq!(
+            ScheduleKind::parse("spu3"),
+            Some(ScheduleKind::PipelinedUniform { chunks: 3 })
+        );
+        assert_eq!(
+            ScheduleKind::parse("sp-uniform"),
+            Some(ScheduleKind::PipelinedUniform { chunks: 0 })
+        );
+        assert_eq!(
+            ScheduleKind::parse(ScheduleKind::PipelinedUniform { chunks: 0 }.name()),
+            Some(ScheduleKind::PipelinedUniform { chunks: 0 })
+        );
+        assert_eq!(
+            ScheduleKind::PipelinedUniform { chunks: 2 }.label(),
+            "sp-uniform(r=2)"
+        );
     }
 
     #[test]
@@ -379,6 +575,102 @@ mod tests {
                 pos += len;
             }
         }
+    }
+
+    #[test]
+    fn weighted_spans_reduce_to_uniform_without_skew() {
+        // Full (or equal) loads make every row weigh the same, so the
+        // weighted split must reproduce chunk_spans exactly — including
+        // the ragged and degenerate cases.
+        for (cap, r) in [(8usize, 4usize), (7, 3), (17, 5), (2, 4), (1, 1)] {
+            let full = vec![cap; 6];
+            assert_eq!(chunk_spans_weighted(cap, r, &full), chunk_spans(cap, r), "cap={cap} r={r}");
+        }
+        // And sp_spans dispatches on the knob.
+        let c = cfg();
+        assert_eq!(sp_spans(&c, 10, 3), chunk_spans(10, 3));
+        let mut skewed = cfg();
+        skewed.skew = 1.5;
+        assert_ne!(sp_spans(&skewed, 64, 4), chunk_spans(64, 4));
+    }
+
+    #[test]
+    fn weighted_spans_balance_flops_not_rows() {
+        // Loads concentrated on the head rows: the first span must be
+        // short (hot rows) and the tail span long (cold rows), while all
+        // spans still tile [0, cap).
+        let loads = vec![16usize, 8, 4, 2]; // Zipf-ish, cap 16
+        let spans = chunk_spans_weighted(16, 4, &loads);
+        assert_eq!(spans.len(), 4);
+        assert_eq!(spans.iter().map(|s| s.1).sum::<usize>(), 16);
+        let mut pos = 0;
+        for &(start, len) in &spans {
+            assert_eq!(start, pos);
+            assert!(len >= 1);
+            pos += len;
+        }
+        assert!(
+            spans[0].1 < spans[3].1,
+            "head span {spans:?} should be shorter than the tail span"
+        );
+        // Per-span weights are balanced within one max row weight.
+        let weight = |(start, len): (usize, usize)| -> usize {
+            (start..start + len).map(|row| loads.iter().filter(|&&l| l > row).count()).sum()
+        };
+        let ws: Vec<usize> = spans.iter().map(|&s| weight(s)).collect();
+        let (lo, hi) = (ws.iter().min().unwrap(), ws.iter().max().unwrap());
+        assert!(hi - lo <= loads.len(), "span weights {ws:?} unbalanced");
+    }
+
+    #[test]
+    fn weighted_spans_keep_chunk_count_when_cap_small() {
+        // cap < chunks: zero-width tails, same shape contract as
+        // chunk_spans so op counts and span counts agree.
+        let spans = chunk_spans_weighted(2, 4, &[2, 1]);
+        assert_eq!(spans.len(), 4);
+        assert_eq!(spans.iter().map(|s| s.1).sum::<usize>(), 2);
+        assert_eq!(&spans[2..], &[(2, 0), (2, 0)]);
+    }
+
+    #[test]
+    fn loaded_chunk_flops_conserve_the_scaled_ffn() {
+        // Σ_k flops(span_k) must equal ffn_load_scale · dense FFN for any
+        // span partition (exact, by linearity of the mean-share pricing).
+        let mut c = cfg();
+        c.skew = 1.2;
+        let cap = c.t_pausemp();
+        let full = expert_flops(&c, expert_tokens_per_rank(&c, true)) * ffn_load_scale(&c, cap);
+        for r in [1usize, 2, 3, 5] {
+            for spans in [sp_spans(&c, cap, r), chunk_spans(cap, r)] {
+                let sum: f64 =
+                    spans.iter().map(|&s| sp_chunk_flops_span(&c, cap, s)).sum();
+                assert!(
+                    (sum - full).abs() / full < 1e-9,
+                    "r={r}: per-chunk sum {sum} vs scaled dense {full}"
+                );
+            }
+        }
+        // Without skew the scale is 1 and the span model is the old one.
+        let u = cfg();
+        assert_eq!(ffn_load_scale(&u, u.t_pausemp()), 1.0);
+        assert_eq!(sp_chunk_flops_span(&u, 10, (3, 4)), sp_chunk_flops(&u, 4));
+    }
+
+    #[test]
+    fn load_fractions_follow_zipf_and_degrade_continuously() {
+        let mut c = cfg();
+        c.skew = 2.0;
+        let fr = expert_load_fractions(&c).unwrap();
+        assert_eq!(fr.len(), c.e);
+        assert!((fr[0] - 1.0).abs() < 1e-12, "hottest expert normalized to 1");
+        assert!(fr.windows(2).all(|w| w[0] >= w[1]), "monotone loads {fr:?}");
+        assert!(fr[c.e - 1] < 0.5, "tail expert should be cold: {fr:?}");
+        // skew → 0+: every expert approaches the head's load.
+        c.skew = 1e-6;
+        let fr = expert_load_fractions(&c).unwrap();
+        assert!(fr.iter().all(|&f| f > 0.999), "near-uniform at tiny skew: {fr:?}");
+        c.skew = 0.0;
+        assert!(expert_load_fractions(&c).is_none());
     }
 
     #[test]

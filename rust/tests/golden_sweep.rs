@@ -8,9 +8,10 @@
 //! as a diff — schedule-timing changes must update the golden file
 //! explicitly. Bless flow: `GOLDEN_BLESS=1 cargo test golden_sweep`
 //! rewrites the file (it is also written on first run when missing, with
-//! a notice to commit it); once the golden is committed, a stale file
-//! fails this test AND the CI binary-gate diff, so timing changes cannot
-//! merge silently.
+//! a notice to commit it); a stale file fails this test AND the CI
+//! binary-gate diff, and CI hard-fails while the golden is not committed
+//! (uploading the generated CSV to commit verbatim), so timing changes
+//! cannot merge silently.
 
 use std::path::Path;
 

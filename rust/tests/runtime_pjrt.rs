@@ -36,6 +36,7 @@ fn xlang_cfg() -> MoeLayerConfig {
         k: 2,
         f: 1.2,
         dtype_bytes: 4,
+        skew: 0.0,
     }
 }
 
@@ -104,6 +105,7 @@ fn jax_moe_layer_ref_matches_rust_reference() {
         k,
         f: 64.0,
         dtype_bytes: 4,
+        skew: 0.0,
     };
     let w = GlobalWeights::random(&cfg, 5);
     let mut rng = Rng::new(6);

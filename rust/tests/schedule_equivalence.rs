@@ -32,6 +32,7 @@ fn random_cfg(rng: &mut parm::util::prng::Rng) -> MoeLayerConfig {
         k: 2.min(e),
         f: 64.0, // generous: drop-free
         dtype_bytes: 4,
+        skew: 0.0,
     }
 }
 
@@ -105,6 +106,7 @@ fn s2_aas_shares_s2_data_plane() {
         k: 2,
         f: 8.0,
         dtype_bytes: 4,
+        skew: 0.0,
     };
     let state = LayerState::random(&cfg, 77).unwrap();
     let a = run_schedule(ScheduleKind::S2, &state, &mut NativeBackend).unwrap();

@@ -3,7 +3,10 @@
 //! the generalized Algorithm 1's pick among {S1, S2, SP(r*)} must match
 //! the simulated argmin on ≥ 95% of cases — where "match" tolerates
 //! near-ties (a pick within 5% of the simulated best is not a
-//! misprediction the user could feel).
+//! misprediction the user could feel). Checked for the paper's uniform
+//! routing AND with the Zipf skew knob enabled (load-aware spans + the
+//! load-scaled FFN model must stay consistent between the fitted
+//! predictions and the simulated schedules).
 
 use parm::bench::ModelCache;
 use parm::config::moe::ParallelDegrees;
@@ -12,11 +15,10 @@ use parm::perfmodel::selection;
 use parm::schedule::{lowering, ScheduleKind};
 use parm::util::prng::Rng;
 
-#[test]
-fn algorithm1_extended_matches_simulated_argmin() {
+fn selection_accuracy(skews: &[f64], seed: u64, label: &str) {
     let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
     let cache = ModelCache::default();
-    let mut rng = Rng::new(0x5EED_CA5E);
+    let mut rng = Rng::new(seed);
     let layouts = [(8usize, 2usize, 2usize), (8, 4, 2), (8, 2, 4), (8, 1, 2)];
     let mut total = 0usize;
     let mut good = 0usize;
@@ -34,6 +36,7 @@ fn algorithm1_extended_matches_simulated_argmin() {
             k: 2,
             f: *rng.choice(&[1.2f64, 2.4]),
             dtype_bytes: 4,
+            skew: *rng.choice(skews),
         };
         if cfg.validate().is_err() {
             continue;
@@ -63,7 +66,7 @@ fn algorithm1_extended_matches_simulated_argmin() {
             good += 1;
         } else {
             eprintln!(
-                "mispick at {}: chose {} ({t_pick:.4}s) vs best {best:.4}s \
+                "[{label}] mispick at {}: chose {} ({t_pick:.4}s) vs best {best:.4}s \
                  (s1 {t1:.4}, s2 {t2:.4}, sp {tsp:.4}, regret {:.1}%)",
                 cfg.id(),
                 pick.label(),
@@ -71,11 +74,21 @@ fn algorithm1_extended_matches_simulated_argmin() {
             );
         }
     }
-    assert!(total >= 30, "random grid drew too few valid configs: {total}");
+    assert!(total >= 30, "[{label}] random grid drew too few valid configs: {total}");
     let acc = good as f64 / total as f64;
-    eprintln!("selection accuracy: {good}/{total} ({acc:.3}), worst regret {worst:.3}");
+    eprintln!("[{label}] selection accuracy: {good}/{total} ({acc:.3}), worst regret {worst:.3}");
     assert!(
         acc >= 0.95,
-        "generalized Algorithm 1 accuracy {acc:.2} ({good}/{total}) below 0.95"
+        "[{label}] generalized Algorithm 1 accuracy {acc:.2} ({good}/{total}) below 0.95"
     );
+}
+
+#[test]
+fn algorithm1_extended_matches_simulated_argmin() {
+    selection_accuracy(&[0.0], 0x5EED_CA5E, "uniform");
+}
+
+#[test]
+fn algorithm1_extended_matches_simulated_argmin_under_skew() {
+    selection_accuracy(&[0.8, 1.5], 0x5EED_5C3D, "skewed");
 }

@@ -36,6 +36,7 @@ fn exact_cfg(rng: &mut Rng) -> MoeLayerConfig {
         k: 2,
         f: 1.0,
         dtype_bytes: 4,
+        skew: 0.0,
     }
 }
 
@@ -115,6 +116,106 @@ fn dropfree_cfg(rng: &mut Rng) -> MoeLayerConfig {
     let mut cfg = exact_cfg(rng);
     cfg.f = 64.0;
     cfg
+}
+
+#[test]
+fn prop_skewed_routing_keeps_logs_identical_and_drops_consistent() {
+    // The imbalanced-traffic axis: with the Zipf skew knob on, SP spans
+    // become load-weighted (non-uniform per-chunk volumes) — and BOTH
+    // transports must still log identical `(tag, volume)` sequences, for
+    // the weighted and the uniform-span variants alike. Routing (and so
+    // capacity drops) must not depend on which PauseMP schedule ran, and
+    // must match a direct per-slice gate accounting (the dense reference
+    // of the drop behavior).
+    use parm::moe::gating;
+
+    let cluster = ClusterProfile::testbed_b();
+    check("skewed-dag-data-log-identical", 15, |rng| {
+        let mut cfg = exact_cfg(rng);
+        cfg.skew = *rng.choice(&[0.6f64, 1.2, 2.0]);
+        cfg.validate().map_err(|e| format!("invalid cfg {cfg:?}: {e}"))?;
+        let state = LayerState::random(&cfg, rng.next_u64()).map_err(|e| e.to_string())?;
+        let mut dropped = Vec::new();
+        for kind in [
+            ScheduleKind::S1,
+            ScheduleKind::Pipelined { chunks: 2 },
+            ScheduleKind::Pipelined { chunks: 4 },
+            ScheduleKind::PipelinedUniform { chunks: 4 },
+        ] {
+            let ops = forward_ops(kind, &cfg);
+            let dag = lower_ops(&ops, &cfg, &cluster).map_err(|e| e.to_string())?;
+            let dag_log = dag.comm_log();
+            let res = run_schedule(kind, &state, &mut NativeBackend).map_err(|e| e.to_string())?;
+            let data_log = res.comm_log;
+            if dag_log.len() != data_log.len() {
+                return Err(format!(
+                    "{kind:?} {}: skewed log shapes differ\n  dag:  {dag_log:?}\n  data: {data_log:?}",
+                    cfg.id()
+                ));
+            }
+            for ((dt, db), (xt, xb)) in dag_log.iter().zip(data_log.iter()) {
+                if dt != xt {
+                    return Err(format!(
+                        "{kind:?} {}: skewed tag order differs — dag {dag_log:?} vs data {data_log:?}",
+                        cfg.id()
+                    ));
+                }
+                let tol = 1e-6 * db.max(*xb).max(1.0);
+                if (db - xb).abs() > tol {
+                    return Err(format!(
+                        "{kind:?} {}: skewed volume for `{dt}` differs — dag {db} vs data {xb}",
+                        cfg.id()
+                    ));
+                }
+            }
+            dropped.push(res.dropped);
+        }
+        if !dropped.windows(2).all(|w| w[0] == w[1]) {
+            return Err(format!(
+                "{}: drop counts differ across PauseMP schedules: {dropped:?}",
+                cfg.id()
+            ));
+        }
+        // Dense reference of the drop accounting: every rank gates its own
+        // MP token slice with the same bias and capacity.
+        let n_local = cfg.tokens() / cfg.par.n_mp;
+        let cap = gating::capacity(n_local, cfg.e, cfg.k, cfg.f, 1);
+        let bias = gating::skew_bias(cfg.e, cfg.skew);
+        let mut want = 0usize;
+        for r in 0..cfg.par.p {
+            let mi = state.groups.mp_index(r);
+            let slice = &state.tokens[r][mi * n_local * cfg.m..(mi + 1) * n_local * cfg.m];
+            let info = gating::gate_biased(
+                slice,
+                &state.weights.wg,
+                bias.as_deref(),
+                n_local,
+                cfg.m,
+                cfg.e,
+                cfg.k,
+                cap,
+            );
+            want += info.dropped;
+            // Load statistics always account for every undropped routing.
+            let placed: usize = info.expert_loads.iter().sum();
+            if placed + info.dropped != n_local * cfg.k {
+                return Err(format!(
+                    "{}: expert_loads {placed} + dropped {} ≠ n·k {}",
+                    cfg.id(),
+                    info.dropped,
+                    n_local * cfg.k
+                ));
+            }
+        }
+        if dropped[0] != want {
+            return Err(format!(
+                "{}: schedules dropped {} but the dense gate accounting says {want}",
+                cfg.id(),
+                dropped[0]
+            ));
+        }
+        Ok(())
+    });
 }
 
 #[test]
