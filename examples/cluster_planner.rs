@@ -5,10 +5,12 @@
 //!
 //! Run: `cargo run --release --example cluster_planner -- [model] [cluster]`
 //! models: bert_base_moe_a|bert_base_moe_b|gpt2_moe_a|gpt2_moe_b|tiny_moe_lm
-//! clusters: testbed_a|testbed_b|testbed_b_8gpu|testbed_b_16gpu
+//! clusters: testbed_a|testbed_b|testbed_b_8gpu|testbed_b_16gpu, or a
+//! topology JSON path (e.g. examples/cluster_hetero.json for a mixed
+//! two-node-class fleet)
 
 use parm::config::moe::ParallelDegrees;
-use parm::config::{ClusterProfile, ModelConfig};
+use parm::config::{ClusterTopology, ModelConfig};
 use parm::perfmodel::{selection, PerfModel};
 use parm::schedule::ScheduleKind;
 use parm::train::model_iteration_time;
@@ -19,7 +21,7 @@ fn main() -> anyhow::Result<()> {
     let model_name = args.first().map(|s| s.as_str()).unwrap_or("gpt2_moe_b");
     let cluster_name = args.get(1).map(|s| s.as_str()).unwrap_or("testbed_b");
     let model = ModelConfig::builtin(model_name)?;
-    let cluster = ClusterProfile::load(cluster_name)?;
+    let cluster = ClusterTopology::load(cluster_name)?;
     let p = cluster.total_gpus();
     println!(
         "planning {} ({} params) on {} ({} GPUs)\n",
@@ -38,14 +40,15 @@ fn main() -> anyhow::Result<()> {
         for n_esp in [1usize, 2, 4] {
             let par = ParallelDegrees { p, n_mp, n_esp };
             if par.validate().is_err()
-                || n_esp > cluster.gpus_per_node
-                || n_mp > cluster.gpus_per_node
+                || n_esp > cluster.min_gpus_per_node()
+                || n_mp > cluster.min_gpus_per_node()
             {
                 continue;
             }
             let layer = model.moe_layer(par);
             if layer.validate().is_err()
-                || layer.memory_bytes_per_gpu() > cluster.gpu_mem_bytes
+                // On a mixed fleet the smallest hosting GPU gates memory.
+                || layer.memory_bytes_per_gpu() > cluster.min_mem(p)
             {
                 continue;
             }

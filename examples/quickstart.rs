@@ -9,7 +9,7 @@
 //! Run: `cargo run --release --example quickstart`
 
 use parm::config::moe::ParallelDegrees;
-use parm::config::{ClusterProfile, MoeLayerConfig};
+use parm::config::{ClusterTopology, MoeLayerConfig};
 use parm::moe::{run_schedule, LayerState, NativeBackend};
 use parm::perfmodel::{selection, PerfModel};
 use parm::schedule::{lowering, ScheduleKind};
@@ -17,7 +17,7 @@ use parm::util::table::{fmt_seconds, fmt_speedup};
 
 fn main() -> anyhow::Result<()> {
     // -- 1. a 32-GPU cluster (paper testbed B) and a MoE layer on it ------
-    let cluster = ClusterProfile::testbed_b();
+    let cluster = ClusterTopology::testbed_b();
     let cfg = MoeLayerConfig {
         par: ParallelDegrees { p: 32, n_mp: 4, n_esp: 4 },
         b: 4,

@@ -5,13 +5,13 @@
 //! Run: `cargo run --release --example schedule_explorer`
 
 use parm::config::moe::ParallelDegrees;
-use parm::config::{ClusterProfile, MoeLayerConfig};
+use parm::config::{ClusterTopology, MoeLayerConfig};
 use parm::perfmodel::{selection, PerfModel};
 use parm::schedule::{lowering, ScheduleKind};
 use parm::util::table::Table;
 
 fn main() -> anyhow::Result<()> {
-    let cluster = ClusterProfile::testbed_b();
+    let cluster = ClusterTopology::testbed_b();
     let par = ParallelDegrees { p: 32, n_mp: 4, n_esp: 4 };
     let model = PerfModel::fit(&cluster, par)?;
 

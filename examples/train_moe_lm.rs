@@ -9,7 +9,7 @@
 use std::path::PathBuf;
 
 use parm::config::moe::ParallelDegrees;
-use parm::config::{ClusterProfile, ModelConfig};
+use parm::config::{ClusterTopology, ModelConfig};
 use parm::schedule::ScheduleKind;
 use parm::train::{model_iteration_time, train_lm, TrainOptions};
 use parm::util::table::{fmt_speedup, Table};
@@ -56,8 +56,8 @@ fn main() -> anyhow::Result<()> {
     let model = ModelConfig::tiny_moe_lm();
     let mut t = Table::new(&["testbed", "baseline (ms)", "parm-best (ms)", "speedup"]).numeric();
     for (cluster, par) in [
-        (ClusterProfile::testbed_a(), ParallelDegrees { p: 8, n_mp: 2, n_esp: 4 }),
-        (ClusterProfile::testbed_b(), ParallelDegrees { p: 32, n_mp: 4, n_esp: 4 }),
+        (ClusterTopology::testbed_a(), ParallelDegrees { p: 8, n_mp: 2, n_esp: 4 }),
+        (ClusterTopology::testbed_b(), ParallelDegrees { p: 32, n_mp: 4, n_esp: 4 }),
     ] {
         let base = model_iteration_time(&model, par, &cluster, ScheduleKind::Baseline)?;
         let s1 = model_iteration_time(&model, par, &cluster, ScheduleKind::S1)?;

@@ -5,7 +5,7 @@
 
 use parm::comm::data;
 use parm::config::moe::ParallelDegrees;
-use parm::config::{ClusterProfile, MoeLayerConfig};
+use parm::config::{ClusterTopology, MoeLayerConfig};
 use parm::moe::{gating, ExpertBackend, LayerState, NativeBackend, PjrtExpertBackend};
 use parm::runtime::Runtime;
 use parm::schedule::{iteration_ops, lowering, ScheduleKind};
@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     let mut b = Bencher::new();
 
     // -- simulator engine: one 32-GPU S2 iteration, lower + run ----------
-    let cluster = ClusterProfile::testbed_b();
+    let cluster = ClusterTopology::testbed_b();
     let cfg32 = MoeLayerConfig {
         par: ParallelDegrees { p: 32, n_mp: 4, n_esp: 4 },
         b: 4,

@@ -8,7 +8,7 @@
 use std::time::Instant;
 
 use parm::bench::run_sweep_with_threads;
-use parm::config::{sweep, ClusterProfile, SweepFilter};
+use parm::config::{sweep, ClusterTopology, SweepFilter};
 use parm::util::benchmark::bench_header;
 
 fn main() -> anyhow::Result<()> {
@@ -16,7 +16,7 @@ fn main() -> anyhow::Result<()> {
         "sweep_parallel",
         "parm::bench::runner::run_sweep_with_threads (thread scaling; deterministic output)",
     );
-    let cluster = ClusterProfile::testbed_b_subset(8)?;
+    let cluster = ClusterTopology::testbed_b_subset(8)?;
     let step = if std::env::var("PARM_BENCH_FAST").is_ok() { 11 } else { 3 };
     let configs: Vec<_> = sweep::sweep_table3(&cluster, SweepFilter::Feasible)
         .into_iter()

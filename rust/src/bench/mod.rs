@@ -6,4 +6,6 @@ pub mod paper;
 pub mod runner;
 
 pub use paper::{fig1, fig6, fig7, saa_ablation, selection_accuracy, table4, table5};
-pub use runner::{run_sweep, run_sweep_with_threads, sweep_csv, CaseResult, ModelCache};
+pub use runner::{
+    run_sweep, run_sweep_with_threads, sweep_csv, CaseResult, ModelCache, MAX_SWEEP_THREADS,
+};

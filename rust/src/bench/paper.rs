@@ -9,7 +9,7 @@ use anyhow::Result;
 
 use crate::bench::runner::{self, CaseResult};
 use crate::config::moe::ParallelDegrees;
-use crate::config::{sweep, ClusterProfile, ModelConfig, SweepFilter};
+use crate::config::{sweep, ClusterTopology, ModelConfig, SweepFilter};
 use crate::perfmodel::fit::{measure_collective, CollKind, PerfModel, FIT_SIZES};
 use crate::schedule::ScheduleKind;
 use crate::train::simtime::model_iteration_time;
@@ -26,7 +26,7 @@ fn write_report(dir: &Path, name: &str, table: &Table) -> Result<()> {
 /// Fig 1 — communication-time ratio of the baseline schedule over the
 /// Table III grid at P = 32 on the 32-GPU cluster (paper: 67.9%–96.0%).
 pub fn fig1(reports: &Path) -> Result<String> {
-    let cluster = ClusterProfile::testbed_b();
+    let cluster = ClusterTopology::testbed_b();
     let configs = sweep::sweep_at_p(&cluster, 32, SweepFilter::Feasible);
     let results = runner::run_sweep(&configs, &cluster, true)?;
     let ratios: Vec<f64> = results.iter().map(|r| r.comm_ratio_baseline * 100.0).collect();
@@ -60,8 +60,8 @@ pub fn fig6(reports: &Path) -> Result<String> {
     let mut t = Table::new(&["testbed", "collective", "alpha (s)", "beta (s/B)", "r²"]).numeric();
     let mut detail = Table::new(&["testbed", "collective", "bytes", "seconds"]).numeric();
     for (cluster, par) in [
-        (ClusterProfile::testbed_a(), ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 }),
-        (ClusterProfile::testbed_b(), ParallelDegrees { p: 32, n_mp: 4, n_esp: 4 }),
+        (ClusterTopology::testbed_a(), ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 }),
+        (ClusterTopology::testbed_b(), ParallelDegrees { p: 32, n_mp: 4, n_esp: 4 }),
     ] {
         let model = PerfModel::fit(&cluster, par)?;
         for kind in CollKind::ALL {
@@ -115,8 +115,8 @@ fn cell_results<'a>(
 /// SP on the paper's uniform-routing grid, and the contrast column for
 /// skewed sweeps).
 pub fn table4(reports: &Path) -> Result<String> {
-    let tb_a = ClusterProfile::testbed_a();
-    let tb_b = ClusterProfile::testbed_b();
+    let tb_a = ClusterTopology::testbed_a();
+    let tb_b = ClusterTopology::testbed_b();
     let sweep_a = sweep::sweep_table3(&tb_a, SweepFilter::Feasible);
     let sweep_b = sweep::sweep_table3(&tb_b, SweepFilter::Feasible);
     eprintln!("table4: {} cases on A, {} on B", sweep_a.len(), sweep_b.len());
@@ -179,7 +179,7 @@ pub fn table4(reports: &Path) -> Result<String> {
 /// Fig 7 — Parm speedup distribution at P=32, N_MP=N_ESP=4 (paper: avg
 /// 4.91×, ≥4× in ~89% of cases).
 pub fn fig7(reports: &Path) -> Result<String> {
-    let cluster = ClusterProfile::testbed_b();
+    let cluster = ClusterTopology::testbed_b();
     let configs: Vec<_> = sweep::sweep_at_p(&cluster, 32, SweepFilter::Feasible)
         .into_iter()
         .filter(|c| c.par.n_mp == 4 && c.par.n_esp == 4)
@@ -219,8 +219,8 @@ pub fn table5(reports: &Path) -> Result<String> {
         (&ModelConfig::gpt2_moe, "GPT-2"),
     ] {
         for (cluster, experts, tb) in [
-            (ClusterProfile::testbed_a(), 2usize, "A"),
-            (ClusterProfile::testbed_b(), 8, "B"),
+            (ClusterTopology::testbed_a(), 2usize, "A"),
+            (ClusterTopology::testbed_b(), 8, "B"),
         ] {
             let model = model_ctor(experts);
             let par = ParallelDegrees { p: cluster.total_gpus(), n_mp: 4, n_esp: 4 };
@@ -249,7 +249,7 @@ pub fn table5(reports: &Path) -> Result<String> {
 /// §VI-C SAA-vs-AAS ablation (paper: SAA ≈ 1.09%/1.12% better).
 pub fn saa_ablation(reports: &Path) -> Result<String> {
     let mut t = Table::new(&["testbed", "cases", "mean gain %", "max gain %"]).numeric();
-    for cluster in [ClusterProfile::testbed_a(), ClusterProfile::testbed_b()] {
+    for cluster in [ClusterTopology::testbed_a(), ClusterTopology::testbed_b()] {
         let configs: Vec<_> = sweep::sweep_table3(&cluster, SweepFilter::Feasible)
             .into_iter()
             .filter(|c| c.par.n_mp >= 2)
@@ -279,7 +279,7 @@ pub fn saa_ablation(reports: &Path) -> Result<String> {
 pub fn selection_accuracy(reports: &Path) -> Result<String> {
     let mut t =
         Table::new(&["testbed", "cases", "accuracy %", "mean regret %", "max regret %"]).numeric();
-    for cluster in [ClusterProfile::testbed_a(), ClusterProfile::testbed_b()] {
+    for cluster in [ClusterTopology::testbed_a(), ClusterTopology::testbed_b()] {
         let configs: Vec<_> = sweep::sweep_table3(&cluster, SweepFilter::Feasible)
             .into_iter()
             .filter(|c| c.par.n_mp >= 2)
@@ -314,7 +314,7 @@ pub fn selection_accuracy(reports: &Path) -> Result<String> {
 /// Per-(N_MP, N_ESP) breakdown of Parm's choices — which schedule wins
 /// where (the §IV-B "not mutually exclusive" claim, quantified).
 pub fn choice_breakdown(reports: &Path) -> Result<String> {
-    let cluster = ClusterProfile::testbed_b();
+    let cluster = ClusterTopology::testbed_b();
     let configs: Vec<_> = sweep::sweep_table3(&cluster, SweepFilter::Feasible)
         .into_iter()
         .filter(|c| c.par.n_mp >= 2)

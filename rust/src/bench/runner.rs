@@ -14,10 +14,10 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::config::moe::ParallelDegrees;
-use crate::config::{ClusterProfile, MoeLayerConfig};
+use crate::config::{ClusterTopology, MoeLayerConfig};
 use crate::perfmodel::{selection, PerfModel};
 use crate::schedule::{lowering, ScheduleKind};
 
@@ -112,7 +112,7 @@ impl ModelCache {
     /// Fetch (or fit) the model for a layout. Fitting runs outside the
     /// lock — two workers may race to fit the same layout; the first
     /// insert wins and the fit is deterministic, so both see equal models.
-    pub fn get(&self, cluster: &ClusterProfile, par: ParallelDegrees) -> Result<PerfModel> {
+    pub fn get(&self, cluster: &ClusterTopology, par: ParallelDegrees) -> Result<PerfModel> {
         let key = (cluster.name.clone(), par.p, par.n_mp, par.n_esp);
         if let Some(m) = self.map.lock().unwrap().get(&key) {
             return Ok(m.clone());
@@ -135,7 +135,7 @@ impl ModelCache {
 /// model's optimal chunk count).
 pub fn run_case(
     cfg: &MoeLayerConfig,
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
     cache: &ModelCache,
 ) -> Result<CaseResult> {
     let base = lowering::simulate_iteration(ScheduleKind::Baseline, cfg, cluster)?;
@@ -183,23 +183,39 @@ pub fn run_case(
 /// sequential runner's.
 pub fn run_sweep(
     configs: &[MoeLayerConfig],
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
     verbose: bool,
 ) -> Result<Vec<CaseResult>> {
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(MAX_SWEEP_THREADS);
     run_sweep_with_threads(configs, cluster, verbose, threads)
 }
 
-/// Run the sweep on exactly `threads` workers (1 = sequential).
+/// Hard cap on sweep workers: far above any real machine, low enough that
+/// a mistyped `--threads` value errors instead of attempting to spawn an
+/// absurd scope.
+pub const MAX_SWEEP_THREADS: usize = 1024;
+
+/// Run the sweep on exactly `threads` workers (1 = sequential). Errors on
+/// degenerate worker counts (`0`, or beyond [`MAX_SWEEP_THREADS`]) rather
+/// than silently clamping them; counts above the case count are reduced
+/// to it (extra workers would only spin on an empty queue).
 pub fn run_sweep_with_threads(
     configs: &[MoeLayerConfig],
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
     verbose: bool,
     threads: usize,
 ) -> Result<Vec<CaseResult>> {
+    ensure!(threads >= 1, "sweep needs at least one worker thread (got --threads 0)");
+    ensure!(
+        threads <= MAX_SWEEP_THREADS,
+        "sweep worker count {threads} exceeds the {MAX_SWEEP_THREADS}-thread cap"
+    );
     let cache = ModelCache::default();
     let tick = (configs.len() / 10).max(1);
-    let threads = threads.clamp(1, configs.len().max(1));
+    let threads = threads.min(configs.len().max(1));
 
     if threads <= 1 {
         let mut out = Vec::with_capacity(configs.len());
@@ -259,7 +275,7 @@ mod tests {
 
     #[test]
     fn case_speedups_exceed_one() {
-        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
         let cache = ModelCache::default();
         let r = run_case(&cfg(8, 2, 2), &cluster, &cache).unwrap();
         assert!(r.speedup_s1() > 1.0, "{r:?}");
@@ -274,7 +290,7 @@ mod tests {
 
     #[test]
     fn sweep_csv_shape_is_stable() {
-        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
         let cache = ModelCache::default();
         let r = run_case(&cfg(8, 2, 2), &cluster, &cache).unwrap();
         let csv = sweep_csv(&[r]);
@@ -290,7 +306,7 @@ mod tests {
 
     #[test]
     fn skewed_case_carries_the_uniform_span_column() {
-        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
         let cache = ModelCache::default();
         let mut c = cfg(8, 2, 2);
         let uniform = run_case(&c, &cluster, &cache).unwrap();
@@ -306,7 +322,7 @@ mod tests {
 
     #[test]
     fn model_cache_reused() {
-        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
         let cache = ModelCache::default();
         run_case(&cfg(8, 2, 2), &cluster, &cache).unwrap();
         run_case(&cfg(8, 2, 2), &cluster, &cache).unwrap();
@@ -315,15 +331,26 @@ mod tests {
 
     #[test]
     fn sweep_runs_small_batch() {
-        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
         let configs = vec![cfg(8, 2, 2), cfg(8, 4, 2), cfg(8, 1, 2)];
         let res = run_sweep(&configs, &cluster, false).unwrap();
         assert_eq!(res.len(), 3);
     }
 
     #[test]
+    fn rejects_degenerate_worker_counts() {
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+        let configs = vec![cfg(8, 2, 2)];
+        let err = run_sweep_with_threads(&configs, &cluster, false, 0).unwrap_err();
+        assert!(err.to_string().contains("worker"), "{err}");
+        assert!(run_sweep_with_threads(&configs, &cluster, false, MAX_SWEEP_THREADS + 1).is_err());
+        // Counts above the case count still run (reduced to the queue).
+        assert_eq!(run_sweep_with_threads(&configs, &cluster, false, 64).unwrap().len(), 1);
+    }
+
+    #[test]
     fn parallel_sweep_matches_sequential_byte_for_byte() {
-        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
         let configs = vec![cfg(8, 2, 2), cfg(8, 4, 2), cfg(8, 1, 2), cfg(8, 2, 4), cfg(8, 4, 4)];
         let seq = run_sweep_with_threads(&configs, &cluster, false, 1).unwrap();
         for threads in [2usize, 4] {

@@ -22,7 +22,7 @@
 use anyhow::Result;
 
 use crate::config::moe::ParallelDegrees;
-use crate::config::ClusterProfile;
+use crate::config::ClusterTopology;
 
 /// The collective-communication domains used by the schedules.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -136,7 +136,7 @@ impl ProcessGroups {
     }
 
     /// True when every rank of the group lies on one node of `cluster`.
-    pub fn group_intra_node(&self, kind: GroupKind, rank: usize, cluster: &ClusterProfile) -> bool {
+    pub fn group_intra_node(&self, kind: GroupKind, rank: usize, cluster: &ClusterTopology) -> bool {
         let g = self.group(kind, rank);
         let first = cluster.node_of(g[0]);
         g.iter().all(|&r| cluster.node_of(r) == first)
@@ -218,7 +218,7 @@ mod tests {
 
     #[test]
     fn intra_node_detection() {
-        let cluster = ClusterProfile::testbed_b(); // 4 GPUs/node
+        let cluster = ClusterTopology::testbed_b(); // 4 GPUs/node
         let g = pg(32, 4, 4);
         for r in 0..32 {
             assert!(g.group_intra_node(GroupKind::Esp, r, &cluster));

@@ -1,5 +1,18 @@
 //! Cluster-side abstractions: process-group construction for the hybrid
-//! MP+EP+ESP parallelism and placement reasoning over a [`ClusterProfile`].
+//! MP+EP+ESP parallelism and placement reasoning over a
+//! [`crate::config::ClusterTopology`].
+//!
+//! The topology object owns the hardware facts — per-node GPU counts,
+//! per-GPU throughput/memory ([`crate::config::NodeSpec`]) and the
+//! per-link α-β lookup ([`crate::config::ClusterTopology::link`], with
+//! stable [`crate::config::LinkClass`] identities for fitting and
+//! reporting). This module owns the *logical* side: which ranks form the
+//! MP/EP/ESP/EP&ESP groups ([`ProcessGroups`]), and placement predicates
+//! such as [`ProcessGroups::group_intra_node`] that the sweep feasibility
+//! filter and the schedules' §IV assumptions (ESP and MP groups
+//! intra-node) are checked against — per group against the actual
+//! topology, so mixed per-node GPU counts are handled, not just a uniform
+//! `gpus_per_node` bound.
 
 pub mod groups;
 

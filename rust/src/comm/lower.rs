@@ -11,7 +11,7 @@
 //! order), so schedules can chain per-rank dependencies without global
 //! barriers.
 
-use crate::config::ClusterProfile;
+use crate::config::ClusterTopology;
 use crate::sim::dag::{SimDag, TaskId};
 
 use super::algo;
@@ -21,7 +21,7 @@ use super::transport::{DagTransport, Lump};
 /// step moves one such chunk).
 pub fn ring_allgather(
     dag: &mut SimDag,
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
     group: &[usize],
     bytes_per_rank: f64,
     deps: &[TaskId],
@@ -36,7 +36,7 @@ pub fn ring_allgather(
 /// (= total bytes / g).
 pub fn ring_reduce_scatter(
     dag: &mut SimDag,
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
     group: &[usize],
     chunk_bytes: f64,
     deps: &[TaskId],
@@ -51,7 +51,7 @@ pub fn ring_reduce_scatter(
 /// AllReduce = ReduceScatter ∘ AllGather over `total_bytes` per member.
 pub fn ring_allreduce(
     dag: &mut SimDag,
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
     group: &[usize],
     total_bytes: f64,
     deps: &[TaskId],
@@ -68,7 +68,7 @@ pub fn ring_allreduce(
 /// [`algo::pairwise_alltoall`].
 pub fn pairwise_alltoall(
     dag: &mut SimDag,
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
     group: &[usize],
     bytes_per_pair: f64,
     deps: &[TaskId],
@@ -92,21 +92,19 @@ pub fn transfer_count(dag: &SimDag) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ClusterProfile;
+    use crate::config::ClusterTopology;
     use crate::sim::engine::Simulator;
 
-    fn cluster(nodes: usize, gpn: usize) -> ClusterProfile {
-        ClusterProfile {
-            name: "t".into(),
+    fn cluster(nodes: usize, gpn: usize) -> ClusterTopology {
+        ClusterTopology::homogeneous(
+            "t",
             nodes,
-            gpus_per_node: gpn,
-            alpha_intra: 1e-5,
-            beta_intra: 1e-9,
-            alpha_inter: 1e-4,
-            beta_inter: 1e-8,
-            gpu_flops: 1e12,
-            gpu_mem_bytes: 1 << 30,
-        }
+            gpn,
+            crate::config::AlphaBeta::new(1e-5, 1e-9),
+            crate::config::AlphaBeta::new(1e-4, 1e-8),
+            1e12,
+            1 << 30,
+        )
     }
 
     #[test]

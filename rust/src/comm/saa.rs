@@ -13,7 +13,7 @@
 //! The data result must equal `alltoall(group)` followed by
 //! `allgather(mp_group)` — [`saa_reference`] — which the tests assert.
 
-use crate::config::ClusterProfile;
+use crate::config::ClusterTopology;
 use crate::sim::dag::{SimDag, TaskId};
 
 use super::algo;
@@ -66,7 +66,7 @@ pub fn saa_reference(world: &mut [Vec<f32>], a2a_group: &[usize], mp_groups: &[V
 #[allow(clippy::too_many_arguments)]
 pub fn saa_lower(
     dag: &mut SimDag,
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
     a2a_group: &[usize],
     mp_groups: &[Vec<usize>],
     bytes_per_pair: f64,
@@ -85,7 +85,7 @@ pub fn saa_lower(
 #[allow(clippy::too_many_arguments)]
 pub fn aas_lower(
     dag: &mut SimDag,
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
     a2a_group: &[usize],
     mp_groups: &[Vec<usize>],
     bytes_per_pair: f64,
@@ -102,7 +102,7 @@ pub fn aas_lower(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ClusterProfile;
+    use crate::config::ClusterTopology;
     use crate::sim::engine::Simulator;
     use crate::util::propcheck::{assert_close, check};
 
@@ -131,21 +131,23 @@ mod tests {
         });
     }
 
-    fn two_node_cluster() -> ClusterProfile {
-        ClusterProfile {
-            name: "t".into(),
-            nodes: 2,
-            gpus_per_node: 4,
-            alpha_intra: 1e-5,
-            beta_intra: 1e-9,
-            alpha_inter: 1e-4,
-            beta_inter: 1e-8,
-            gpu_flops: 1e12,
-            gpu_mem_bytes: 1 << 30,
-        }
+    fn two_node_cluster_with_inter(inter: crate::config::AlphaBeta) -> ClusterTopology {
+        ClusterTopology::homogeneous(
+            "t",
+            2,
+            4,
+            crate::config::AlphaBeta::new(1e-5, 1e-9),
+            inter,
+            1e12,
+            1 << 30,
+        )
     }
 
-    fn saa_vs_aas_on(c: &ClusterProfile, mp_size: usize, bytes: f64) -> (f64, f64) {
+    fn two_node_cluster() -> ClusterTopology {
+        two_node_cluster_with_inter(crate::config::AlphaBeta::new(1e-4, 1e-8))
+    }
+
+    fn saa_vs_aas_on(c: &ClusterTopology, mp_size: usize, bytes: f64) -> (f64, f64) {
         let a2a: Vec<usize> = (0..8).collect();
         let mp: Vec<Vec<usize>> = (0..8 / mp_size)
             .map(|b| (b * mp_size..(b + 1) * mp_size).collect())
@@ -169,8 +171,8 @@ mod tests {
         // When the inter-node class is much slower than intra (NIC-bound
         // AlltoAll), the MP forwards hide entirely inside NIC gaps while
         // AAS pays its full AllGather after the AlltoAll completes.
-        let mut c = two_node_cluster();
-        c.beta_inter = 1e-7; // 100× slower than intra
+        // Inter β = 1e-7: 100× slower than intra.
+        let c = two_node_cluster_with_inter(crate::config::AlphaBeta::new(1e-4, 1e-7));
         let (t_saa, t_aas) = saa_vs_aas_on(&c, 4, 2.0e5);
         assert!(
             t_saa < t_aas,

@@ -18,7 +18,7 @@
 //! ([`crate::comm::tags`]) means the schedule we time is — by construction,
 //! not by cross-check — the schedule we execute.
 
-use crate::config::ClusterProfile;
+use crate::config::ClusterTopology;
 use crate::sim::dag::{SimDag, TaskId};
 
 /// Payload of one point-to-point message inside a generic collective.
@@ -131,14 +131,14 @@ pub trait Transport {
 }
 
 /// Timing plane: emit the collective as transfer/compute tasks of a
-/// [`SimDag`], classified against a [`ClusterProfile`] topology.
+/// [`SimDag`], classified against a [`ClusterTopology`] topology.
 pub struct DagTransport<'a> {
     dag: &'a mut SimDag,
-    cluster: &'a ClusterProfile,
+    cluster: &'a ClusterTopology,
 }
 
 impl<'a> DagTransport<'a> {
-    pub fn new(dag: &'a mut SimDag, cluster: &'a ClusterProfile) -> DagTransport<'a> {
+    pub fn new(dag: &'a mut SimDag, cluster: &'a ClusterTopology) -> DagTransport<'a> {
         DagTransport { dag, cluster }
     }
 }
@@ -250,7 +250,7 @@ mod tests {
 
     #[test]
     fn dag_transport_emits_tasks() {
-        let cluster = ClusterProfile::testbed_a();
+        let cluster = ClusterTopology::testbed_a();
         let mut dag = SimDag::new();
         let mut t = DagTransport::new(&mut dag, &cluster);
         let a = t.send(0, 1, &Lump(100.0), &[], "x");

@@ -1,67 +1,100 @@
-//! Cluster profiles: the hardware description the simulator runs against.
+//! Cluster topology: the hardware description the simulator, the closed
+//! forms and the fitted performance models all run against.
 //!
-//! The paper's testbeds are reduced to link-class α-β parameters — exactly
-//! the reduction the paper itself applies for Algorithm 1 (§V-A, Fig 6).
-//! Built-in profiles `testbed_a` / `testbed_b` are calibrated from the
-//! constants the paper publishes (and PCIe/IB nominal bandwidths for the
-//! classes it does not).
+//! The paper's testbeds are homogeneous, and the old API hard-coded that
+//! assumption as one `(α_intra, β_intra, α_inter, β_inter, gpu_flops)`
+//! tuple for the whole fleet. Production MoE fleets are not homogeneous —
+//! they mix node generations, NIC speeds and GPU bins — so the cluster is
+//! now a **topology object**:
+//!
+//! * [`NodeSpec`] — one node's hardware: GPU count, per-GPU dense
+//!   throughput and memory, the intra-node link's [`AlphaBeta`] and the
+//!   node's NIC [`AlphaBeta`].
+//! * [`ClusterTopology`] — an ordered list of `NodeSpec`s (ranks are
+//!   placed contiguously, node by node) with the per-link lookup
+//!   [`ClusterTopology::link`]`(src, dst) -> AlphaBeta`. A cross-node
+//!   transfer is priced by the element-wise bottleneck of the two ends'
+//!   NICs (the slower end dominates both latency and bandwidth).
+//! * [`LinkClass`] — the stable identity of a link's cost class
+//!   (`intra` of one node class, `inter` between two node classes), so
+//!   per-class α-β fitting and sweep/report ids survive re-shaping of the
+//!   node list.
+//!
+//! [`ClusterTopology::homogeneous`] reproduces the old scalar profiles
+//! exactly (same link costs for every pair, same flops on every rank), so
+//! testbed A/B timings — and the golden sweep CSV — are bit-identical to
+//! the pre-topology API. Mixed fleets load from JSON
+//! ([`ClusterTopology::from_json`], CLI `--cluster-json`); see
+//! `examples/cluster_hetero.json`.
 
 use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
-/// Static description of a homogeneous GPU cluster (paper §IV assumptions:
-/// homogeneous nodes, homogeneous devices, β_intra > β_inter).
-#[derive(Debug, Clone, PartialEq)]
-pub struct ClusterProfile {
-    pub name: String,
-    pub nodes: usize,
-    pub gpus_per_node: usize,
-    /// Startup latency of an intra-node p2p transfer (seconds).
-    pub alpha_intra: f64,
-    /// Per-byte time of an intra-node p2p transfer (seconds/byte).
-    pub beta_intra: f64,
-    /// Startup latency of an inter-node p2p transfer (seconds).
-    pub alpha_inter: f64,
-    /// Per-byte time of an inter-node p2p transfer (seconds/byte).
-    pub beta_inter: f64,
-    /// Dense fp32 throughput of one GPU (FLOP/s) — times expert compute.
-    pub gpu_flops: f64,
-    /// Device memory (bytes) — drives the sweep feasibility filter.
-    pub gpu_mem_bytes: usize,
+/// One point-to-point link cost model: `seconds(x) = α + x·β`.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub struct AlphaBeta {
+    /// Startup latency of one transfer (seconds).
+    pub alpha: f64,
+    /// Per-byte time (seconds/byte).
+    pub beta: f64,
 }
 
-impl ClusterProfile {
-    pub fn total_gpus(&self) -> usize {
-        self.nodes * self.gpus_per_node
+impl AlphaBeta {
+    pub const fn new(alpha: f64, beta: f64) -> AlphaBeta {
+        AlphaBeta { alpha, beta }
     }
 
-    /// Node index hosting `rank`.
-    pub fn node_of(&self, rank: usize) -> usize {
-        rank / self.gpus_per_node
+    /// A free link (device-local copies).
+    pub const ZERO: AlphaBeta = AlphaBeta::new(0.0, 0.0);
+
+    /// Seconds to move `bytes` over this link.
+    pub fn seconds(&self, bytes: f64) -> f64 {
+        self.alpha + bytes * self.beta
     }
 
-    pub fn same_node(&self, a: usize, b: usize) -> bool {
-        self.node_of(a) == self.node_of(b)
+    /// Element-wise bottleneck of two link models. Used for cross-node
+    /// transfers: the slower NIC end dominates both the per-message
+    /// latency and the per-byte time.
+    pub fn bottleneck(a: AlphaBeta, b: AlphaBeta) -> AlphaBeta {
+        AlphaBeta { alpha: a.alpha.max(b.alpha), beta: a.beta.max(b.beta) }
     }
+}
 
+/// Hardware description of one node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeSpec {
+    /// GPUs hosted by this node (ranks are placed contiguously).
+    pub gpus: usize,
+    /// Dense fp32 throughput of one GPU on this node (FLOP/s).
+    pub gpu_flops: f64,
+    /// Device memory per GPU (bytes) — drives the sweep feasibility filter.
+    pub gpu_mem_bytes: usize,
+    /// Intra-node p2p link (PCIe/NVLink) α-β.
+    pub intra: AlphaBeta,
+    /// This node's NIC α-β; a cross-node transfer is bottlenecked by the
+    /// slower of the two endpoint NICs.
+    pub inter: AlphaBeta,
+}
+
+impl NodeSpec {
     pub fn validate(&self) -> Result<()> {
-        if self.nodes == 0 || self.gpus_per_node == 0 {
-            bail!("cluster must have at least one node and one GPU");
+        if self.gpus == 0 {
+            bail!("node must host at least one GPU");
         }
-        if self.beta_intra <= 0.0 || self.beta_inter <= 0.0 {
+        if self.intra.beta <= 0.0 || self.inter.beta <= 0.0 {
             bail!("β must be positive");
         }
-        if self.alpha_intra < 0.0 || self.alpha_inter < 0.0 {
+        if self.intra.alpha < 0.0 || self.inter.alpha < 0.0 {
             bail!("α must be non-negative");
         }
-        if self.beta_intra > self.beta_inter {
+        if self.intra.beta > self.inter.beta {
             // Paper §IV: β_intra > β_inter refers to SPEED; our fields are
             // per-byte TIME, so intra must be <= inter.
             bail!(
                 "intra-node per-byte time ({}) must not exceed inter-node ({})",
-                self.beta_intra,
-                self.beta_inter
+                self.intra.beta,
+                self.inter.beta
             );
         }
         if self.gpu_flops <= 0.0 || self.gpu_mem_bytes == 0 {
@@ -69,6 +102,119 @@ impl ClusterProfile {
         }
         Ok(())
     }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("gpus", Json::num(self.gpus as f64)),
+            ("gpu_flops", Json::num(self.gpu_flops)),
+            ("gpu_mem_bytes", Json::num(self.gpu_mem_bytes as f64)),
+            ("alpha_intra", Json::num(self.intra.alpha)),
+            ("beta_intra", Json::num(self.intra.beta)),
+            ("alpha_inter", Json::num(self.inter.alpha)),
+            ("beta_inter", Json::num(self.inter.beta)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<NodeSpec> {
+        Ok(NodeSpec {
+            gpus: j.req_usize("gpus")?,
+            gpu_flops: j.req_f64("gpu_flops")?,
+            gpu_mem_bytes: j.req_f64("gpu_mem_bytes")? as usize,
+            intra: AlphaBeta::new(j.req_f64("alpha_intra")?, j.req_f64("beta_intra")?),
+            inter: AlphaBeta::new(j.req_f64("alpha_inter")?, j.req_f64("beta_inter")?),
+        })
+    }
+}
+
+/// Stable identity of a link's cost class inside one topology. Node
+/// *classes* are deduplicated [`NodeSpec`]s (the class id is the index of
+/// the first node carrying that spec), so ids do not change when a fleet
+/// adds more nodes of an existing kind — which keeps per-class α-β fit
+/// keys and sweep/report ids stable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LinkClass {
+    /// Intra-node link of node class `c`.
+    Intra(usize),
+    /// Inter-node link between node classes `(a, b)`, normalized `a ≤ b`
+    /// (the bottleneck combination is symmetric).
+    Inter(usize, usize),
+}
+
+impl LinkClass {
+    /// Stable string id, e.g. `intra.c0` / `inter.c0.c1` — used as fit-map
+    /// and JSON keys.
+    pub fn id(&self) -> String {
+        match self {
+            LinkClass::Intra(c) => format!("intra.c{c}"),
+            LinkClass::Inter(a, b) => format!("inter.c{a}.c{b}"),
+        }
+    }
+}
+
+/// Static description of a (possibly heterogeneous) GPU cluster: the
+/// ordered node list plus derived rank→node and node→class tables.
+///
+/// Ranks `0..total_gpus()` map onto nodes contiguously: node 0 hosts
+/// ranks `0..nodes[0].gpus`, node 1 the next block, and so on (DeepSpeed-
+/// MoE's contiguous placement, which the paper's observations assume).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterTopology {
+    pub name: String,
+    nodes: Vec<NodeSpec>,
+    /// rank → hosting node (derived; kept so the engine's hot path is a
+    /// table lookup, not a scan over node extents).
+    node_of_rank: Vec<usize>,
+    /// node → node-class id (index of the first node with an identical
+    /// spec).
+    class_of_node: Vec<usize>,
+}
+
+impl ClusterTopology {
+    /// Build a topology from an explicit node list.
+    pub fn new(name: &str, nodes: Vec<NodeSpec>) -> Result<ClusterTopology> {
+        if name.is_empty() {
+            bail!("cluster needs a name");
+        }
+        if nodes.is_empty() {
+            bail!("cluster must have at least one node");
+        }
+        for (i, n) in nodes.iter().enumerate() {
+            n.validate().with_context(|| format!("node {i} of cluster `{name}`"))?;
+        }
+        let mut node_of_rank = Vec::with_capacity(nodes.iter().map(|n| n.gpus).sum());
+        for (i, n) in nodes.iter().enumerate() {
+            node_of_rank.resize(node_of_rank.len() + n.gpus, i);
+        }
+        let mut class_of_node = Vec::with_capacity(nodes.len());
+        for (i, n) in nodes.iter().enumerate() {
+            let class = nodes[..i].iter().position(|m| m == n).unwrap_or(i);
+            class_of_node.push(class);
+        }
+        Ok(ClusterTopology { name: name.to_string(), nodes, node_of_rank, class_of_node })
+    }
+
+    /// A uniform fleet: `node_count` identical nodes of `gpus_per_node`
+    /// GPUs each. Reproduces the old scalar `ClusterProfile` semantics
+    /// exactly: every intra-node pair costs `intra`, every cross-node pair
+    /// `inter`, every rank computes at `gpu_flops`.
+    ///
+    /// Panics on invalid constants (the arguments are programmer-supplied
+    /// literals, as the old struct literals were); use [`Self::new`] for
+    /// data-driven construction.
+    pub fn homogeneous(
+        name: &str,
+        node_count: usize,
+        gpus_per_node: usize,
+        intra: AlphaBeta,
+        inter: AlphaBeta,
+        gpu_flops: f64,
+        gpu_mem_bytes: usize,
+    ) -> ClusterTopology {
+        let spec = NodeSpec { gpus: gpus_per_node, gpu_flops, gpu_mem_bytes, intra, inter };
+        Self::new(name, vec![spec; node_count]).expect("homogeneous topology constants")
+    }
+
+    // ---- built-in testbeds ------------------------------------------------
 
     /// Testbed A (paper Table II): one node, 8× RTX 4090 on PCIe 4.0 x16.
     ///
@@ -79,18 +225,16 @@ impl ClusterProfile {
     /// (8-GPU ring ⇒ 7 steps): α_msg ≈ 9.5e-5. β is per byte on the wire
     /// and carries over directly. There is no inter-node fabric; we keep a
     /// virtual inter class (unused at P=8) equal to PCIe for robustness.
-    pub fn testbed_a() -> ClusterProfile {
-        ClusterProfile {
-            name: "testbed_a".into(),
-            nodes: 1,
-            gpus_per_node: 8,
-            alpha_intra: 9.5e-5,
-            beta_intra: 5.38e-10,
-            alpha_inter: 9.5e-5,
-            beta_inter: 5.38e-10,
-            gpu_flops: 82.6e12 * 0.35, // RTX4090 peak fp32, derated to achievable GEMM
-            gpu_mem_bytes: 24 * (1 << 30),
-        }
+    pub fn testbed_a() -> ClusterTopology {
+        Self::homogeneous(
+            "testbed_a",
+            1,
+            8,
+            AlphaBeta::new(9.5e-5, 5.38e-10),
+            AlphaBeta::new(9.5e-5, 5.38e-10),
+            82.6e12 * 0.35, // RTX4090 peak fp32, derated to achievable GEMM
+            24 * (1 << 30),
+        )
     }
 
     /// Testbed B (paper Table II): 8 nodes × 4× RTX 2080Ti, PCIe 3.0 x16
@@ -100,92 +244,296 @@ impl ClusterProfile {
     /// 1.09e-4 over a 4-GPU ring ⇒ α_msg ≈ 3.6e-5; β = 7.14e-10). Inter β
     /// from 100 Gb/s ≈ 12.5 GB/s line rate derated to ~9 GB/s effective;
     /// inter α_msg ≈ 5e-5 (IB verbs + NCCL proxy per message).
-    pub fn testbed_b() -> ClusterProfile {
-        ClusterProfile {
-            name: "testbed_b".into(),
-            nodes: 8,
-            gpus_per_node: 4,
-            alpha_intra: 3.6e-5,
-            beta_intra: 7.14e-10,
-            alpha_inter: 5.0e-5,
-            beta_inter: 1.11e-9,
-            gpu_flops: 13.4e12 * 0.35, // RTX2080Ti peak fp32, derated
-            gpu_mem_bytes: 11 * (1 << 30),
-        }
+    pub fn testbed_b() -> ClusterTopology {
+        Self::homogeneous(
+            "testbed_b",
+            8,
+            4,
+            AlphaBeta::new(3.6e-5, 7.14e-10),
+            AlphaBeta::new(5.0e-5, 1.11e-9),
+            13.4e12 * 0.35, // RTX2080Ti peak fp32, derated
+            11 * (1 << 30),
+        )
     }
 
     /// Testbed B truncated to `gpus` total GPUs (the paper reports 8-, 16-
     /// and 32-GPU columns for testbed B in Table IV).
-    pub fn testbed_b_subset(gpus: usize) -> Result<ClusterProfile> {
+    pub fn testbed_b_subset(gpus: usize) -> Result<ClusterTopology> {
         let full = Self::testbed_b();
-        if gpus % full.gpus_per_node != 0 || gpus > full.total_gpus() || gpus == 0 {
-            bail!(
-                "testbed B subset must be a positive multiple of {} ≤ {}",
-                full.gpus_per_node,
-                full.total_gpus()
-            );
+        let gpn = full.nodes[0].gpus;
+        if gpus % gpn != 0 || gpus > full.total_gpus() || gpus == 0 {
+            bail!("testbed B subset must be a positive multiple of {gpn} ≤ {}", full.total_gpus());
         }
-        Ok(ClusterProfile {
-            name: format!("testbed_b_{gpus}gpu"),
-            nodes: gpus / full.gpus_per_node,
-            ..full
-        })
+        Self::new(&format!("testbed_b_{gpus}gpu"), full.nodes[..gpus / gpn].to_vec())
     }
 
-    /// Look up a built-in profile by name.
-    pub fn builtin(name: &str) -> Result<ClusterProfile> {
+    /// Look up a built-in topology by name.
+    pub fn builtin(name: &str) -> Result<ClusterTopology> {
         match name {
             "testbed_a" => Ok(Self::testbed_a()),
             "testbed_b" | "testbed_b_32gpu" => Ok(Self::testbed_b()),
             "testbed_b_8gpu" => Self::testbed_b_subset(8),
             "testbed_b_16gpu" => Self::testbed_b_subset(16),
             other => bail!(
-                "unknown cluster profile `{other}` (builtins: testbed_a, testbed_b, \
+                "unknown cluster `{other}` (builtins: testbed_a, testbed_b, \
                  testbed_b_8gpu, testbed_b_16gpu); or pass a JSON file path"
             ),
         }
     }
 
-    /// Load from a JSON file or fall back to a builtin name.
-    pub fn load(name_or_path: &str) -> Result<ClusterProfile> {
+    /// Load from a JSON file (`*.json`, either format — see
+    /// [`Self::from_json`]) or fall back to a builtin name.
+    pub fn load(name_or_path: &str) -> Result<ClusterTopology> {
         if name_or_path.ends_with(".json") {
-            let text = std::fs::read_to_string(name_or_path)
-                .with_context(|| format!("reading cluster profile {name_or_path}"))?;
-            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
-            Self::from_json(&j)
+            Self::from_json_file(name_or_path)
         } else {
             Self::builtin(name_or_path)
         }
     }
 
+    /// Load a topology JSON document from `path` (used by `--cluster-json`,
+    /// which accepts any path, suffixed or not).
+    pub fn from_json_file(path: &str) -> Result<ClusterTopology> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading cluster topology {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&j).with_context(|| format!("parsing cluster topology {path}"))
+    }
+
+    // ---- shape ------------------------------------------------------------
+
+    pub fn total_gpus(&self) -> usize {
+        self.node_of_rank.len()
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The node list (ordered; ranks are placed contiguously over it).
+    pub fn node_specs(&self) -> &[NodeSpec] {
+        &self.nodes
+    }
+
+    pub fn node(&self, node: usize) -> &NodeSpec {
+        &self.nodes[node]
+    }
+
+    /// Node index hosting `rank`.
+    pub fn node_of(&self, rank: usize) -> usize {
+        self.node_of_rank[rank]
+    }
+
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Nodes hosting ranks `0..p` (contiguous placement ⇒ a prefix).
+    pub fn nodes_for(&self, p: usize) -> std::ops::Range<usize> {
+        assert!(
+            (1..=self.total_gpus()).contains(&p),
+            "layer of {p} ranks on this cluster of {}",
+            self.total_gpus()
+        );
+        let end = self.node_of(p - 1) + 1;
+        0..end
+    }
+
+    /// True when every node carries an identical spec (the paper's §IV
+    /// assumption; [`Self::homogeneous`] always satisfies it).
+    pub fn is_homogeneous(&self) -> bool {
+        self.class_of_node.iter().all(|&c| c == 0)
+    }
+
+    /// Smallest per-node GPU count — the coarse placement bound examples
+    /// and planners use for intra-node group sizing.
+    pub fn min_gpus_per_node(&self) -> usize {
+        self.nodes.iter().map(|n| n.gpus).min().unwrap_or(0)
+    }
+
+    // ---- per-rank hardware ------------------------------------------------
+
+    /// Dense throughput of `rank`'s GPU (FLOP/s).
+    pub fn flops_of(&self, rank: usize) -> f64 {
+        self.nodes[self.node_of(rank)].gpu_flops
+    }
+
+    /// Device memory of `rank`'s GPU (bytes).
+    pub fn mem_of(&self, rank: usize) -> usize {
+        self.nodes[self.node_of(rank)].gpu_mem_bytes
+    }
+
+    /// Bottleneck (slowest) per-GPU throughput over ranks `0..p` — what a
+    /// synchronous collective step effectively computes at.
+    pub fn min_flops(&self, p: usize) -> f64 {
+        self.nodes_for(p).map(|n| self.nodes[n].gpu_flops).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Smallest per-GPU memory over ranks `0..p`.
+    pub fn min_mem(&self, p: usize) -> usize {
+        self.nodes_for(p).map(|n| self.nodes[n].gpu_mem_bytes).min().unwrap_or(0)
+    }
+
+    // ---- links ------------------------------------------------------------
+
+    /// The α-β cost of a `src → dst` transfer: free for device-local
+    /// copies, the hosting node's intra link within a node, and the
+    /// element-wise bottleneck of the two endpoint NICs across nodes.
+    pub fn link(&self, src: usize, dst: usize) -> AlphaBeta {
+        if src == dst {
+            return AlphaBeta::ZERO;
+        }
+        let (sn, dn) = (self.node_of(src), self.node_of(dst));
+        if sn == dn {
+            self.nodes[sn].intra
+        } else {
+            AlphaBeta::bottleneck(self.nodes[sn].inter, self.nodes[dn].inter)
+        }
+    }
+
+    /// Node-class id of `node` (index of the first node with an identical
+    /// spec).
+    pub fn node_class(&self, node: usize) -> usize {
+        self.class_of_node[node]
+    }
+
+    /// The [`LinkClass`] of a `src → dst` pair (src ≠ dst, non-local).
+    pub fn link_class(&self, src: usize, dst: usize) -> LinkClass {
+        let (sn, dn) = (self.node_of(src), self.node_of(dst));
+        if sn == dn {
+            LinkClass::Intra(self.class_of_node[sn])
+        } else {
+            let (a, b) = (self.class_of_node[sn], self.class_of_node[dn]);
+            LinkClass::Inter(a.min(b), b.max(a))
+        }
+    }
+
+    /// Every distinct link class realizable in this topology, sorted.
+    /// `Intra(c)` appears only when some class-`c` node hosts ≥ 2 GPUs;
+    /// `Inter(a, b)` only when distinct nodes of classes `a` and `b`
+    /// exist.
+    pub fn link_classes(&self) -> Vec<LinkClass> {
+        let mut out = std::collections::BTreeSet::new();
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.gpus >= 2 {
+                out.insert(LinkClass::Intra(self.class_of_node[i]));
+            }
+        }
+        for i in 0..self.nodes.len() {
+            for j in 0..self.nodes.len() {
+                if i != j {
+                    let (a, b) = (self.class_of_node[i], self.class_of_node[j]);
+                    out.insert(LinkClass::Inter(a.min(b), b.max(a)));
+                }
+            }
+        }
+        out.into_iter().collect()
+    }
+
+    /// The α-β model of one link class (what [`Self::link`] returns for
+    /// any representative pair of the class).
+    pub fn link_of_class(&self, class: LinkClass) -> Option<AlphaBeta> {
+        self.representative_pair(class).map(|(s, d)| self.link(s, d))
+    }
+
+    /// A concrete `(src, dst)` rank pair whose link belongs to `class`,
+    /// if the class is realizable here — used to fit one α-β per class.
+    pub fn representative_pair(&self, class: LinkClass) -> Option<(usize, usize)> {
+        let first_rank = |node: usize| self.node_of_rank.iter().position(|&n| n == node);
+        match class {
+            LinkClass::Intra(c) => {
+                let node = (0..self.nodes.len())
+                    .find(|&n| self.class_of_node[n] == c && self.nodes[n].gpus >= 2)?;
+                let r = first_rank(node)?;
+                Some((r, r + 1))
+            }
+            LinkClass::Inter(a, b) => {
+                for i in 0..self.nodes.len() {
+                    for j in 0..self.nodes.len() {
+                        if i == j {
+                            continue;
+                        }
+                        let (ca, cb) = (self.class_of_node[i], self.class_of_node[j]);
+                        if (ca.min(cb), cb.max(ca)) == (a, b) {
+                            return Some((first_rank(i)?, first_rank(j)?));
+                        }
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    // ---- validation & serialization ---------------------------------------
+
+    pub fn validate(&self) -> Result<()> {
+        // `new` validates on construction; re-validate for callers that
+        // deserialized or cloned-and-patched a topology.
+        Self::new(&self.name, self.nodes.clone()).map(|_| ())
+    }
+
+    /// Serialize as the per-node topology document. Runs of identical
+    /// consecutive nodes are compressed with a `count` field.
     pub fn to_json(&self) -> Json {
+        let mut entries: Vec<Json> = Vec::new();
+        let mut i = 0;
+        while i < self.nodes.len() {
+            let mut run = 1;
+            while i + run < self.nodes.len() && self.nodes[i + run] == self.nodes[i] {
+                run += 1;
+            }
+            let mut obj = self.nodes[i].to_json();
+            if run > 1 {
+                if let Json::Obj(map) = &mut obj {
+                    map.insert("count".to_string(), Json::num(run as f64));
+                }
+            }
+            entries.push(obj);
+            i += run;
+        }
         Json::obj(vec![
             ("name", Json::str(&self.name)),
-            ("nodes", Json::num(self.nodes as f64)),
-            ("gpus_per_node", Json::num(self.gpus_per_node as f64)),
-            ("alpha_intra", Json::num(self.alpha_intra)),
-            ("beta_intra", Json::num(self.beta_intra)),
-            ("alpha_inter", Json::num(self.alpha_inter)),
-            ("beta_inter", Json::num(self.beta_inter)),
-            ("gpu_flops", Json::num(self.gpu_flops)),
-            ("gpu_mem_bytes", Json::num(self.gpu_mem_bytes as f64)),
+            ("nodes", Json::Arr(entries)),
         ])
     }
 
-    pub fn from_json(j: &Json) -> Result<ClusterProfile> {
-        let p = ClusterProfile {
-            name: j.req_str("name")?.to_string(),
-            nodes: j.req_usize("nodes")?,
-            gpus_per_node: j.req_usize("gpus_per_node")?,
-            alpha_intra: j.req_f64("alpha_intra")?,
-            beta_intra: j.req_f64("beta_intra")?,
-            alpha_inter: j.req_f64("alpha_inter")?,
-            beta_inter: j.req_f64("beta_inter")?,
-            gpu_flops: j.req_f64("gpu_flops")?,
-            gpu_mem_bytes: j.req_f64("gpu_mem_bytes")? as usize,
-        };
-        p.validate()?;
-        Ok(p)
+    /// Parse either topology format:
+    ///
+    /// * **Per-node** (the native form): `{"name", "nodes": [{"gpus",
+    ///   "gpu_flops", "gpu_mem_bytes", "alpha_intra", "beta_intra",
+    ///   "alpha_inter", "beta_inter", "count"?}, ...]}` — `count` repeats
+    ///   a node spec.
+    /// * **Legacy flat** (the pre-topology `ClusterProfile` document):
+    ///   `{"name", "nodes": N, "gpus_per_node", "alpha_intra", ...,
+    ///   "gpu_flops", "gpu_mem_bytes"}` — expanded to `N` identical
+    ///   nodes, so existing profile files keep loading.
+    pub fn from_json(j: &Json) -> Result<ClusterTopology> {
+        let name = j.req_str("name")?.to_string();
+        if j.get("nodes").as_arr().is_some() {
+            let mut nodes = Vec::new();
+            for entry in j.req_arr("nodes")? {
+                let spec = NodeSpec::from_json(entry)?;
+                let count = match entry.get("count") {
+                    Json::Null => 1,
+                    v => v
+                        .as_usize()
+                        .filter(|&n| n >= 1)
+                        .ok_or_else(|| anyhow::anyhow!("node `count` must be an integer ≥ 1"))?,
+                };
+                nodes.resize(nodes.len() + count, spec);
+            }
+            Self::new(&name, nodes)
+        } else {
+            // Legacy flat profile document.
+            let spec = NodeSpec {
+                gpus: j.req_usize("gpus_per_node")?,
+                gpu_flops: j.req_f64("gpu_flops")?,
+                gpu_mem_bytes: j.req_f64("gpu_mem_bytes")? as usize,
+                intra: AlphaBeta::new(j.req_f64("alpha_intra")?, j.req_f64("beta_intra")?),
+                inter: AlphaBeta::new(j.req_f64("alpha_inter")?, j.req_f64("beta_inter")?),
+            };
+            Self::new(&name, vec![spec; j.req_usize("nodes")?])
+        }
     }
 }
 
@@ -193,44 +541,182 @@ impl ClusterProfile {
 mod tests {
     use super::*;
 
+    fn hetero_two_class() -> ClusterTopology {
+        let fast = NodeSpec {
+            gpus: 4,
+            gpu_flops: 4.0e12,
+            gpu_mem_bytes: 16 << 30,
+            intra: AlphaBeta::new(1e-5, 1e-9),
+            inter: AlphaBeta::new(1e-4, 1e-8),
+        };
+        let slow = NodeSpec {
+            gpus: 4,
+            gpu_flops: 1.0e12,
+            gpu_mem_bytes: 8 << 30,
+            intra: AlphaBeta::new(2e-5, 2e-9),
+            inter: AlphaBeta::new(2e-4, 2e-8),
+        };
+        ClusterTopology::new("mixed", vec![fast, slow]).unwrap()
+    }
+
     #[test]
     fn builtins_valid() {
         for name in ["testbed_a", "testbed_b", "testbed_b_8gpu", "testbed_b_16gpu"] {
-            let p = ClusterProfile::builtin(name).unwrap();
-            p.validate().unwrap();
+            let t = ClusterTopology::builtin(name).unwrap();
+            t.validate().unwrap();
+            assert!(t.is_homogeneous());
         }
-        assert!(ClusterProfile::builtin("nope").is_err());
+        assert!(ClusterTopology::builtin("nope").is_err());
     }
 
     #[test]
     fn topology_helpers() {
-        let b = ClusterProfile::testbed_b();
+        let b = ClusterTopology::testbed_b();
         assert_eq!(b.total_gpus(), 32);
+        assert_eq!(b.num_nodes(), 8);
         assert_eq!(b.node_of(0), 0);
         assert_eq!(b.node_of(4), 1);
         assert!(b.same_node(0, 3));
         assert!(!b.same_node(3, 4));
+        assert_eq!(b.nodes_for(8), 0..2);
+        assert_eq!(b.nodes_for(9), 0..3);
+        assert_eq!(b.min_gpus_per_node(), 4);
     }
 
     #[test]
     fn subset_bounds() {
-        assert!(ClusterProfile::testbed_b_subset(16).is_ok());
-        assert!(ClusterProfile::testbed_b_subset(6).is_err());
-        assert!(ClusterProfile::testbed_b_subset(64).is_err());
-        assert_eq!(ClusterProfile::testbed_b_subset(8).unwrap().nodes, 2);
+        assert!(ClusterTopology::testbed_b_subset(16).is_ok());
+        assert!(ClusterTopology::testbed_b_subset(6).is_err());
+        assert!(ClusterTopology::testbed_b_subset(64).is_err());
+        assert_eq!(ClusterTopology::testbed_b_subset(8).unwrap().num_nodes(), 2);
+    }
+
+    #[test]
+    fn homogeneous_links_match_scalars() {
+        // The old scalar rule: α_intra/β_intra within a node,
+        // α_inter/β_inter across — reproduced exactly by link().
+        let b = ClusterTopology::testbed_b();
+        let intra = AlphaBeta::new(3.6e-5, 7.14e-10);
+        let inter = AlphaBeta::new(5.0e-5, 1.11e-9);
+        assert_eq!(b.link(0, 1), intra);
+        assert_eq!(b.link(3, 4), inter);
+        assert_eq!(b.link(2, 2), AlphaBeta::ZERO);
+        assert_eq!(b.link(0, 1).seconds(1e6), 3.6e-5 + 1e6 * 7.14e-10);
     }
 
     #[test]
     fn intra_faster_than_inter_enforced() {
-        let mut p = ClusterProfile::testbed_b();
-        p.beta_intra = p.beta_inter * 2.0;
-        assert!(p.validate().is_err());
+        let mut spec = ClusterTopology::testbed_b().node_specs()[0];
+        spec.intra = AlphaBeta::new(spec.intra.alpha, spec.inter.beta * 2.0);
+        assert!(ClusterTopology::new("bad", vec![spec]).is_err());
     }
 
     #[test]
-    fn json_roundtrip() {
-        let p = ClusterProfile::testbed_b();
-        let back = ClusterProfile::from_json(&p.to_json()).unwrap();
-        assert_eq!(p, back);
+    fn json_roundtrip_topology() {
+        for t in [ClusterTopology::testbed_b(), hetero_two_class()] {
+            let back = ClusterTopology::from_json(&t.to_json()).unwrap();
+            assert_eq!(t, back);
+        }
+    }
+
+    #[test]
+    fn legacy_flat_json_loads_as_homogeneous() {
+        let doc = Json::parse(
+            r#"{"name":"legacy","nodes":2,"gpus_per_node":4,
+                "alpha_intra":1e-5,"beta_intra":1e-9,
+                "alpha_inter":1e-4,"beta_inter":1e-8,
+                "gpu_flops":1e12,"gpu_mem_bytes":1073741824}"#,
+        )
+        .unwrap();
+        let t = ClusterTopology::from_json(&doc).unwrap();
+        let want = ClusterTopology::homogeneous(
+            "legacy",
+            2,
+            4,
+            AlphaBeta::new(1e-5, 1e-9),
+            AlphaBeta::new(1e-4, 1e-8),
+            1e12,
+            1 << 30,
+        );
+        assert_eq!(t, want);
+    }
+
+    #[test]
+    fn link_classes_homogeneous() {
+        let b = ClusterTopology::testbed_b();
+        assert_eq!(
+            b.link_classes(),
+            vec![LinkClass::Intra(0), LinkClass::Inter(0, 0)]
+        );
+        // Single-node testbed A has no inter class at all.
+        assert_eq!(ClusterTopology::testbed_a().link_classes(), vec![LinkClass::Intra(0)]);
+    }
+
+    #[test]
+    fn link_classes_heterogeneous() {
+        let t = hetero_two_class();
+        assert_eq!(t.node_class(0), 0);
+        assert_eq!(t.node_class(1), 1);
+        assert_eq!(
+            t.link_classes(),
+            vec![
+                LinkClass::Intra(0),
+                LinkClass::Intra(1),
+                LinkClass::Inter(0, 1),
+            ]
+        );
+        // Cross-node link is the element-wise NIC bottleneck (slow end).
+        assert_eq!(t.link(0, 4), AlphaBeta::new(2e-4, 2e-8));
+        assert_eq!(t.link(4, 0), t.link(0, 4));
+        // Each class has a representative pair whose link matches.
+        for class in t.link_classes() {
+            let (s, d) = t.representative_pair(class).unwrap();
+            assert_eq!(t.link_class(s, d), class);
+            assert_eq!(t.link_of_class(class).unwrap(), t.link(s, d));
+        }
+        assert_eq!(LinkClass::Inter(0, 1).id(), "inter.c0.c1");
+    }
+
+    #[test]
+    fn per_rank_hardware_lookup() {
+        let t = hetero_two_class();
+        assert_eq!(t.flops_of(0), 4.0e12);
+        assert_eq!(t.flops_of(7), 1.0e12);
+        assert_eq!(t.mem_of(5), 8 << 30);
+        assert_eq!(t.min_flops(4), 4.0e12);
+        assert_eq!(t.min_flops(8), 1.0e12);
+        assert_eq!(t.min_mem(8), 8 << 30);
+        assert!(!t.is_homogeneous());
+    }
+
+    #[test]
+    fn count_field_repeats_nodes() {
+        let doc = Json::parse(
+            r#"{"name":"fleet","nodes":[
+                {"gpus":4,"gpu_flops":1e12,"gpu_mem_bytes":1073741824,
+                 "alpha_intra":1e-5,"beta_intra":1e-9,
+                 "alpha_inter":1e-4,"beta_inter":1e-8,"count":3}]}"#,
+        )
+        .unwrap();
+        let t = ClusterTopology::from_json(&doc).unwrap();
+        assert_eq!(t.num_nodes(), 3);
+        assert_eq!(t.total_gpus(), 12);
+        assert!(t.is_homogeneous());
+    }
+
+    #[test]
+    fn malformed_count_rejected() {
+        // count must be an integer ≥ 1 — a string or fractional value is
+        // an error, not a silent single node.
+        for bad in [r#""8""#, "8.5", "0"] {
+            let doc = Json::parse(&format!(
+                r#"{{"name":"fleet","nodes":[
+                    {{"gpus":4,"gpu_flops":1e12,"gpu_mem_bytes":1073741824,
+                     "alpha_intra":1e-5,"beta_intra":1e-9,
+                     "alpha_inter":1e-4,"beta_inter":1e-8,"count":{bad}}}]}}"#,
+            ))
+            .unwrap();
+            assert!(ClusterTopology::from_json(&doc).is_err(), "count {bad} must error");
+        }
     }
 }

@@ -1,12 +1,13 @@
-//! Configuration layer: MoE layer hyper-parameters, cluster profiles,
-//! real-world model descriptions, and the Table III sweep grid.
+//! Configuration layer: MoE layer hyper-parameters, cluster topologies
+//! (per-node hardware + per-link α-β), real-world model descriptions, and
+//! the Table III sweep grid.
 
 pub mod cluster;
 pub mod model;
 pub mod moe;
 pub mod sweep;
 
-pub use cluster::ClusterProfile;
+pub use cluster::{AlphaBeta, ClusterTopology, LinkClass, NodeSpec};
 pub use model::ModelConfig;
 pub use moe::{MoeLayerConfig, ParallelDegrees};
 pub use sweep::{sweep_table3, SweepFilter};

@@ -10,7 +10,7 @@
 //! cluster profile (memory capacity + placement constraints); the bench
 //! harness prints the retained count so the filter is auditable.
 
-use super::cluster::ClusterProfile;
+use super::cluster::ClusterTopology;
 use super::moe::{MoeLayerConfig, ParallelDegrees};
 
 /// Which rows of the grid survive for a given cluster.
@@ -38,7 +38,7 @@ pub const TABLE3_F: [f64; 2] = [1.2, 2.4];
 /// The number of experts is not in Table III; as in DeepSpeed-MoE's layer
 /// benchmarks we place one expert per EP slot (`E = N_EP = P / N_ESP`) and
 /// use top-2 gating (the GShard/Switch default the paper's models use).
-pub fn sweep_table3(cluster: &ClusterProfile, filter: SweepFilter) -> Vec<MoeLayerConfig> {
+pub fn sweep_table3(cluster: &ClusterTopology, filter: SweepFilter) -> Vec<MoeLayerConfig> {
     let mut out = Vec::new();
     for &p in &TABLE3_P {
         for &n_mp in &TABLE3_NMP {
@@ -83,25 +83,36 @@ pub fn sweep_table3(cluster: &ClusterProfile, filter: SweepFilter) -> Vec<MoeLay
 
 /// Feasibility on a concrete cluster: fits on the machine and respects the
 /// placement assumptions of §IV (ESP and MP groups intra-node).
-pub fn is_feasible(cfg: &MoeLayerConfig, cluster: &ClusterProfile) -> bool {
-    if cfg.par.p > cluster.total_gpus() {
+pub fn is_feasible(cfg: &MoeLayerConfig, cluster: &ClusterTopology) -> bool {
+    let p = cfg.par.p;
+    if p > cluster.total_gpus() {
         return false;
     }
     // ESP groups (and MP groups, which the schedules treat as intra-node
     // collectives) must fit within a node — paper §IV Case 2/Case 4 place
     // them intra-node; larger groups would violate Observation 1's premise.
-    if cfg.par.n_esp > cluster.gpus_per_node || cfg.par.n_mp > cluster.gpus_per_node {
-        return false;
+    // Both kinds are contiguous rank blocks, so a block is intra-node iff
+    // its first and last member share a node — checked against the actual
+    // topology, which under mixed per-node GPU counts is stricter than the
+    // old uniform `size ≤ gpus_per_node` bound.
+    for size in [cfg.par.n_esp, cfg.par.n_mp] {
+        for start in (0..p).step_by(size) {
+            if !cluster.same_node(start, start + size - 1) {
+                return false;
+            }
+        }
     }
     // k ≤ E (top-2 gating needs at least 2 experts).
     if cfg.k > cfg.e {
         return false;
     }
-    cfg.memory_bytes_per_gpu() <= cluster.gpu_mem_bytes
+    // Every hosting GPU must fit the layer (on a mixed fleet the smallest
+    // node gates feasibility).
+    cfg.memory_bytes_per_gpu() <= cluster.min_mem(p)
 }
 
 /// The Fig 1 slice: all grid rows at a fixed `P` on the given cluster.
-pub fn sweep_at_p(cluster: &ClusterProfile, p: usize, filter: SweepFilter) -> Vec<MoeLayerConfig> {
+pub fn sweep_at_p(cluster: &ClusterTopology, p: usize, filter: SweepFilter) -> Vec<MoeLayerConfig> {
     sweep_table3(cluster, filter)
         .into_iter()
         .filter(|c| c.par.p == p)
@@ -122,7 +133,7 @@ mod tests {
         // 3 P × 3 N_MP × 3 N_ESP × 3 B × 3 L × 3 M × 3 H × 2 f = 4374 rows
         // before validity; syntactic validity keeps those with divisibility
         // and k ≤ E.
-        let all = sweep_table3(&ClusterProfile::testbed_b(), SweepFilter::All);
+        let all = sweep_table3(&ClusterTopology::testbed_b(), SweepFilter::All);
         assert!(!all.is_empty());
         assert!(all.len() <= 4374);
         for c in &all {
@@ -133,26 +144,47 @@ mod tests {
 
     #[test]
     fn feasible_subset_smaller_and_within_memory() {
-        let cluster = ClusterProfile::testbed_b();
+        let cluster = ClusterTopology::testbed_b();
         let all = sweep_table3(&cluster, SweepFilter::All);
         let feasible = sweep_table3(&cluster, SweepFilter::Feasible);
         assert!(feasible.len() < all.len());
         assert!(!feasible.is_empty());
         for c in &feasible {
-            assert!(c.memory_bytes_per_gpu() <= cluster.gpu_mem_bytes);
+            assert!(c.memory_bytes_per_gpu() <= cluster.min_mem(c.par.p));
             assert!(c.par.p <= cluster.total_gpus());
         }
     }
 
     #[test]
+    fn heterogeneous_feasibility_uses_hosting_nodes() {
+        use super::super::cluster::{AlphaBeta, NodeSpec};
+        // Node 0 roomy, node 1 tiny: a P=8 layer is gated by the tiny
+        // node's memory, a P=4 layer only by node 0's.
+        let roomy = NodeSpec {
+            gpus: 4,
+            gpu_flops: 1e12,
+            gpu_mem_bytes: 64 << 30,
+            intra: AlphaBeta::new(1e-5, 1e-9),
+            inter: AlphaBeta::new(1e-4, 1e-8),
+        };
+        let tiny = NodeSpec { gpu_mem_bytes: 1 << 10, ..roomy };
+        let t = ClusterTopology::new("mixed", vec![roomy, tiny]).unwrap();
+        let mut cfg = MoeLayerConfig::test_default();
+        cfg.par = ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 };
+        assert!(!is_feasible(&cfg, &t), "tiny node must gate the P=8 layer");
+        cfg.par = ParallelDegrees { p: 4, n_mp: 2, n_esp: 2 };
+        assert!(is_feasible(&cfg, &t), "P=4 stays on the roomy node");
+    }
+
+    #[test]
     fn testbed_a_caps_p_at_8() {
-        let feasible = sweep_table3(&ClusterProfile::testbed_a(), SweepFilter::Feasible);
+        let feasible = sweep_table3(&ClusterTopology::testbed_a(), SweepFilter::Feasible);
         assert!(feasible.iter().all(|c| c.par.p <= 8));
     }
 
     #[test]
     fn p_slice() {
-        let cluster = ClusterProfile::testbed_b();
+        let cluster = ClusterTopology::testbed_b();
         let s = sweep_at_p(&cluster, 32, SweepFilter::Feasible);
         assert!(!s.is_empty());
         assert!(s.iter().all(|c| c.par.p == 32));
@@ -160,7 +192,7 @@ mod tests {
 
     #[test]
     fn deterministic_order() {
-        let cluster = ClusterProfile::testbed_b();
+        let cluster = ClusterTopology::testbed_b();
         let a = sweep_table3(&cluster, SweepFilter::Feasible);
         let b = sweep_table3(&cluster, SweepFilter::Feasible);
         assert_eq!(a, b);

@@ -19,7 +19,7 @@ use anyhow::{anyhow, bail, Result};
 use parm::bench::paper;
 use parm::bench::CaseResult;
 use parm::config::moe::ParallelDegrees;
-use parm::config::{sweep as sweepcfg, ClusterProfile, MoeLayerConfig, SweepFilter};
+use parm::config::{sweep as sweepcfg, ClusterTopology, MoeLayerConfig, SweepFilter};
 use parm::perfmodel::{closedform, selection, PerfModel};
 use parm::schedule::{lowering, ScheduleKind};
 use parm::sim::trace::chrome_trace;
@@ -81,7 +81,11 @@ fn print_usage() {
 // ---- shared option groups ------------------------------------------------
 
 const LAYER_SPECS: &[Spec] = &[
-    Spec::opt_default("cluster", "testbed_b", "cluster profile name or JSON path"),
+    Spec::opt_default("cluster", "testbed_b", "cluster name or JSON path"),
+    Spec::opt(
+        "cluster-json",
+        "cluster topology JSON (per-node specs for mixed fleets; overrides --cluster)",
+    ),
     Spec::opt_default("p", "8", "total GPUs for the layer"),
     Spec::opt_default("mp", "2", "N_MP (model-parallel degree)"),
     Spec::opt_default("esp", "2", "N_ESP (expert-sharding degree)"),
@@ -96,8 +100,17 @@ const LAYER_SPECS: &[Spec] = &[
     Spec::flag("help", "show help"),
 ];
 
-fn layer_from(a: &Args) -> Result<(MoeLayerConfig, ClusterProfile)> {
-    let cluster = ClusterProfile::load(a.req("cluster")?)?;
+/// Resolve the cluster topology from `--cluster-json` (explicit per-node
+/// topology document) or `--cluster` (builtin name / legacy JSON path).
+fn cluster_from(a: &Args) -> Result<ClusterTopology> {
+    match a.get("cluster-json") {
+        Some(path) => ClusterTopology::from_json_file(path),
+        None => ClusterTopology::load(a.req("cluster")?),
+    }
+}
+
+fn layer_from(a: &Args) -> Result<(MoeLayerConfig, ClusterTopology)> {
+    let cluster = cluster_from(a)?;
     let p = a.get_usize("p")?.unwrap();
     let n_esp = a.get_usize("esp")?.unwrap();
     let cfg = MoeLayerConfig {
@@ -113,6 +126,13 @@ fn layer_from(a: &Args) -> Result<(MoeLayerConfig, ClusterProfile)> {
         skew: a.get_f64("skew")?.unwrap(),
     };
     cfg.validate()?;
+    anyhow::ensure!(
+        cfg.par.p <= cluster.total_gpus(),
+        "layer needs {} GPUs but cluster {} has {}",
+        cfg.par.p,
+        cluster.name,
+        cluster.total_gpus()
+    );
     Ok((cfg, cluster))
 }
 
@@ -199,6 +219,11 @@ fn cmd_sim(rest: &[String]) -> Result<()> {
         "parm",
         "baseline|s1|s2|s2-aas|sp|spN|spuN|parm (sp = pipelined, N pins the chunk count, spu = uniform spans)",
     ));
+    specs.push(Spec::opt_default(
+        "spans",
+        "expected",
+        "SP chunk-span source: expected (load model) | measured (two-pass: run the real gate once, re-balance spans on its measured expert loads)",
+    ));
     let a = Args::parse(rest, &specs)?;
     if help_guard(&a, "sim", "simulate one MoE layer iteration", &specs) {
         return Ok(());
@@ -207,7 +232,21 @@ fn cmd_sim(rest: &[String]) -> Result<()> {
     let kind = ScheduleKind::parse(a.req("schedule")?)
         .ok_or_else(|| anyhow!("bad --schedule"))?;
     let kind = resolve(kind, &cfg, &cluster)?;
-    let (report, dag) = lowering::simulate_iteration_with_dag(kind, &cfg, &cluster)?;
+    let measured: Option<Vec<usize>> = match a.req("spans")? {
+        "expected" => None,
+        "measured" => {
+            // Two-pass span selection: run the data-plane gate once on a
+            // synthetic batch and feed its measured per-expert loads back
+            // into the span policy (covers organic, non-Zipf imbalance).
+            let state = parm::moe::exec::LayerState::random(&cfg, 42)?;
+            let loads = parm::moe::exec::measure_expert_loads(&state);
+            eprintln!("measured expert loads (max over ranks): {loads:?}");
+            Some(loads)
+        }
+        other => bail!("--spans must be `expected` or `measured`, got `{other}`"),
+    };
+    let (report, dag) =
+        lowering::simulate_iteration_measured_with_dag(kind, &cfg, &cluster, measured.as_deref())?;
     println!("config   : {}", cfg.id());
     println!("cluster  : {}", cluster.name);
     println!("schedule : {}", kind.label());
@@ -227,7 +266,7 @@ fn cmd_sim(rest: &[String]) -> Result<()> {
 fn resolve(
     kind: ScheduleKind,
     cfg: &MoeLayerConfig,
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
 ) -> Result<ScheduleKind> {
     match kind {
         // Generalized Algorithm 1 over the fitted α-β models.
@@ -250,7 +289,8 @@ fn resolve(
 
 fn cmd_fit(rest: &[String]) -> Result<()> {
     const SPECS: &[Spec] = &[
-        Spec::opt_default("cluster", "testbed_b", "cluster profile"),
+        Spec::opt_default("cluster", "testbed_b", "cluster name or JSON path"),
+        Spec::opt("cluster-json", "cluster topology JSON (overrides --cluster)"),
         Spec::opt_default("p", "32", "total GPUs"),
         Spec::opt_default("mp", "4", "N_MP"),
         Spec::opt_default("esp", "4", "N_ESP"),
@@ -261,12 +301,19 @@ fn cmd_fit(rest: &[String]) -> Result<()> {
     if help_guard(&a, "fit", "fit α-β models for a layout", SPECS) {
         return Ok(());
     }
-    let cluster = ClusterProfile::load(a.req("cluster")?)?;
+    let cluster = cluster_from(&a)?;
     let par = ParallelDegrees {
         p: a.get_usize("p")?.unwrap(),
         n_mp: a.get_usize("mp")?.unwrap(),
         n_esp: a.get_usize("esp")?.unwrap(),
     };
+    anyhow::ensure!(
+        par.p <= cluster.total_gpus(),
+        "layout needs {} GPUs but cluster {} has {}",
+        par.p,
+        cluster.name,
+        cluster.total_gpus()
+    );
     let model = PerfModel::fit(&cluster, par)?;
     if a.has_flag("json") {
         println!("{}", model.to_json().to_pretty());
@@ -283,6 +330,18 @@ fn cmd_fit(rest: &[String]) -> Result<()> {
             ]);
         }
         print!("{}", t.to_text());
+        // One α-β pair per link class of the topology (all of them on a
+        // mixed fleet; two on a homogeneous multi-node cluster).
+        let mut lt = Table::new(&["link class", "alpha (s)", "beta (s/B)", "r²"]).numeric();
+        for (class, f) in model.link_fits() {
+            lt.row(&[
+                class.id(),
+                format!("{:.3e}", f.intercept),
+                format!("{:.3e}", f.slope),
+                format!("{:.6}", f.r2),
+            ]);
+        }
+        print!("{}", lt.to_text());
     }
     Ok(())
 }
@@ -304,17 +363,31 @@ fn cmd_choose(rest: &[String]) -> Result<()> {
         pred.sp_chunks,
         fmt_seconds(pred.t_sp)
     );
+    if !cluster.is_homogeneous() {
+        // Per-node view: on a mixed fleet the straggler paces the fleet
+        // and its r* (even its pick) can differ from the fast nodes'.
+        println!("bottleneck node       : {}", pred.bottleneck_node);
+        for node in cluster.nodes_for(cfg.par.p) {
+            let (pick, t) = closedform::choose_extended_on(&cluster, &cfg, node);
+            println!(
+                "  node {node}: closed-form pick {} ({}/iter)",
+                pick.label(),
+                fmt_seconds(t)
+            );
+        }
+    }
     println!("Algorithm 1 chooses   : {}", pred.best().label());
     Ok(())
 }
 
 fn cmd_sweep(rest: &[String]) -> Result<()> {
     const SPECS: &[Spec] = &[
-        Spec::opt_default("cluster", "testbed_b", "cluster profile"),
+        Spec::opt_default("cluster", "testbed_b", "cluster name or JSON path"),
+        Spec::opt("cluster-json", "cluster topology JSON (overrides --cluster)"),
         Spec::opt("p", "restrict to one P"),
         Spec::opt("limit", "only run the first N configs"),
         Spec::opt("skew", "run the grid with a Zipf routing-skew exponent (imbalanced traffic)"),
-        Spec::opt("threads", "sweep worker threads (default: all cores)"),
+        Spec::opt("threads", "sweep worker threads, 1..=1024 (default: all cores)"),
         Spec::opt("csv", "write per-case results CSV to PATH (golden-gate format)"),
         Spec::opt(
             "bench-json",
@@ -326,7 +399,7 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
     if help_guard(&a, "sweep", "Table III sweep summary", SPECS) {
         return Ok(());
     }
-    let cluster = ClusterProfile::load(a.req("cluster")?)?;
+    let cluster = cluster_from(&a)?;
     let mut configs = match a.get_usize("p")? {
         Some(p) => sweepcfg::sweep_at_p(&cluster, p, SweepFilter::Feasible),
         None => sweepcfg::sweep_table3(&cluster, SweepFilter::Feasible),
@@ -388,7 +461,7 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
 fn write_sweep_bench_json(
     path: &str,
     configs: &[MoeLayerConfig],
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
     results: &[CaseResult],
     threads: Option<usize>,
     par_s: f64,

@@ -24,6 +24,7 @@ use crate::config::MoeLayerConfig;
 use crate::moe::backend::ExpertBackend;
 use crate::moe::gating::{self, DispatchInfo};
 use crate::moe::weights::GlobalWeights;
+use crate::schedule::builders::forward_ops_measured;
 use crate::schedule::interp::{run_program, Machine};
 use crate::schedule::{forward_ops, Op, ScheduleKind};
 use crate::util::prng::Rng;
@@ -87,17 +88,45 @@ pub fn run_schedule(
     state: &LayerState,
     backend: &mut dyn ExpertBackend,
 ) -> Result<ExecResult> {
+    let ops = forward_ops(resolved(kind)?, &state.cfg);
+    run_ops(kind, &ops, state, backend)
+}
+
+/// Two-pass variant of [`run_schedule`]: first run ONLY the gate to
+/// measure the actual per-expert loads ([`measure_expert_loads`]), then
+/// execute the schedule with chunk spans re-balanced from that
+/// measurement ([`crate::schedule::ops::sp_spans_measured`]) — covering
+/// organic, non-Zipf imbalance. Numerics are unaffected (spans only move
+/// chunk boundaries); only the SP family's pipelining changes.
+pub fn run_schedule_measured(
+    kind: ScheduleKind,
+    state: &LayerState,
+    backend: &mut dyn ExpertBackend,
+) -> Result<ExecResult> {
+    let measured = measure_expert_loads(state);
+    let ops = forward_ops_measured(resolved(kind)?, &state.cfg, Some(&measured[..]));
+    run_ops(kind, &ops, state, backend)
+}
+
+fn resolved(kind: ScheduleKind) -> Result<ScheduleKind> {
     match kind {
         ScheduleKind::Parm => bail!("resolve Parm to a concrete schedule via the perf model first"),
         ScheduleKind::Pipelined { chunks: 0 } | ScheduleKind::PipelinedUniform { chunks: 0 } => {
             bail!("resolve SP's chunk count r via the perf model first")
         }
-        _ => {}
+        k => Ok(k),
     }
-    let ops = forward_ops(kind, &state.cfg);
+}
+
+fn run_ops(
+    kind: ScheduleKind,
+    ops: &[Op],
+    state: &LayerState,
+    backend: &mut dyn ExpertBackend,
+) -> Result<ExecResult> {
     let mut transport = DataTransport::new();
-    let mut machine = DataMachine::new(state, backend, &ops);
-    run_program(&ops, &state.groups, &mut transport, &mut machine)?;
+    let mut machine = DataMachine::new(state, backend, ops);
+    run_program(ops, &state.groups, &mut transport, &mut machine)?;
     ensure!(
         matches!(machine.stage, Stage::Tokens),
         "schedule {kind:?} did not return to token stage"
@@ -107,6 +136,39 @@ pub fn run_schedule(
         comm_log: transport.into_log(),
         dropped: machine.dropped,
     })
+}
+
+/// Run ONLY the gate pass of the PauseMP schedules (each rank gates its
+/// MP-split token slice at the capacity the SP builders assume) and
+/// return the per-expert loads, **max-aggregated over ranks** — the
+/// conservative profile for a global span policy: a row is hot if any
+/// rank fills it. This is the measurement half of the two-pass span
+/// selection (`--spans measured`).
+pub fn measure_expert_loads(state: &LayerState) -> Vec<usize> {
+    let c = &state.cfg;
+    let n_local = c.tokens() / c.par.n_mp;
+    let m = c.m;
+    let cap = gating::capacity(n_local, c.e, c.k, c.f, 1);
+    let bias = gating::skew_bias(c.e, c.skew);
+    let mut max_loads = vec![0usize; c.e];
+    for r in 0..c.par.p {
+        let mi = state.groups.mp_index(r);
+        let slice = &state.tokens[r][mi * n_local * m..(mi + 1) * n_local * m];
+        let info = gating::gate_biased(
+            slice,
+            &state.weights.wg,
+            bias.as_deref(),
+            n_local,
+            m,
+            c.e,
+            c.k,
+            cap,
+        );
+        for (mx, &l) in max_loads.iter_mut().zip(&info.expert_loads) {
+            *mx = (*mx).max(l);
+        }
+    }
+    max_loads
 }
 
 /// Where the layer's per-rank primary tensor currently lives in the
@@ -1002,6 +1064,34 @@ mod tests {
             !tags.contains(&"sp.combine.2") && !tags.contains(&"sp.combine.3"),
             "empty combines must stay off the wire: {tags:?}"
         );
+    }
+
+    #[test]
+    fn measured_spans_preserve_schedule_numerics() {
+        // Two-pass span selection moves chunk boundaries from the gate's
+        // MEASURED loads (organic imbalance — no skew knob), which must
+        // not change any output value.
+        let c = cfg(8, 2, 2);
+        let state = LayerState::random(&c, 29).unwrap();
+        let mut backend = NativeBackend;
+        let loads = measure_expert_loads(&state);
+        assert_eq!(loads.len(), c.e);
+        let cap = gating::capacity(c.tokens() / c.par.n_mp, c.e, c.k, c.f, 1);
+        assert!(loads.iter().all(|&l| l <= cap), "{loads:?} vs cap {cap}");
+        assert!(loads.iter().sum::<usize>() > 0, "gate routed nothing");
+        for kind in [
+            ScheduleKind::S1,
+            ScheduleKind::Pipelined { chunks: 2 },
+            ScheduleKind::Pipelined { chunks: 3 },
+        ] {
+            let plain = run_schedule(kind, &state, &mut backend).unwrap();
+            let measured = run_schedule_measured(kind, &state, &mut backend).unwrap();
+            assert_eq!(measured.dropped, plain.dropped, "{kind:?}");
+            for r in 0..c.par.p {
+                assert_close(&measured.outputs[r], &plain.outputs[r], 1e-5, 1e-4)
+                    .unwrap_or_else(|e| panic!("{kind:?} rank {r}: {e}"));
+            }
+        }
     }
 
     #[test]

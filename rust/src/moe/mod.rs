@@ -17,7 +17,7 @@ pub mod reference;
 pub mod weights;
 
 pub use backend::{ExpertBackend, NativeBackend, PjrtExpertBackend};
-pub use exec::{run_schedule, LayerState};
+pub use exec::{measure_expert_loads, run_schedule, run_schedule_measured, LayerState};
 pub use gating::{gate, DispatchInfo};
 pub use reference::reference_forward;
 pub use weights::GlobalWeights;

@@ -7,36 +7,55 @@
 //! algorithms' structure:
 //!
 //! ```text
-//! AG_ring(g, x)  = (g-1) · (α_link + (x/g)·β_link)         x = gathered output
-//! RS_ring(g, x)  = (g-1) · (α_link + (x/g)·β_link)         x = per-member buffer
-//! AR_ring(g, x)  = 2 · RS_ring(g, x)                        (RS ∘ AG, [21,22])
-//! A2A_pair(g, x) = bottleneck-class chain over x/g chunks   x = per-member send
+//! AG_ring(G, x)  = (|G|-1) · max_step(α_link + (x/|G|)·β_link)    x = gathered output
+//! RS_ring(G, x)  = (|G|-1) · max_step(α_link + (x/|G|)·β_link)    x = per-member buffer
+//! AR_ring(G, x)  = 2 · RS_ring(G, x)                              (RS ∘ AG, [21,22])
+//! A2A_pair(G, x) = bottleneck-class chain over x/|G| chunks       x = per-member send
 //! ```
 //!
-//! For AlltoAlls whose group straddles nodes, the bottleneck is the NIC:
-//! each node's NIC carries `(members on node) × (members elsewhere)`
-//! chunks each way. The tests pin this model to the discrete-event
-//! simulator within a small tolerance — the "theory matches practice"
-//! check the paper argues informally in §IV.
+//! Every term is priced over the **actual endpoint pairs** of the group
+//! via [`ClusterTopology::link`] — not two global scalars — so mixed
+//! fleets (straggler nodes, asymmetric NICs) cost what the engine would
+//! charge. For AlltoAlls whose group straddles nodes, the bottleneck is
+//! the busiest NIC: each node's NIC carries that node's members'
+//! cross-node chunks each way.
+//!
+//! Compute-inclusive terms come in two forms: the fleet-level functions
+//! (`t_ffn_pausemp`, `sp_pipeline`, `optimal_chunks`, `choose_extended`)
+//! evaluate the **bottleneck node** (max over the nodes hosting the
+//! layer), and `*_on`-suffixed variants evaluate one node — on a
+//! heterogeneous fleet the SP chunk count r* and even Algorithm 1's pick
+//! can differ per node, which the per-node API exposes
+//! ([`optimal_chunks_on`], [`choose_extended_on`],
+//! [`sp_bottleneck_node`]). The tests pin this model to the
+//! discrete-event simulator within a small tolerance — the "theory
+//! matches practice" check the paper argues informally in §IV.
 
 use crate::cluster::{GroupKind, ProcessGroups};
-use crate::config::{ClusterProfile, MoeLayerConfig};
+use crate::config::{ClusterTopology, MoeLayerConfig};
 use crate::schedule::ops;
 
-/// Ring AllGather over an intra-node group: `x` = gathered output bytes.
-pub fn ag_ring(cluster: &ClusterProfile, g: usize, x: f64) -> f64 {
+/// Ring AllGather over a group: `x` = gathered output bytes. Each of the
+/// `|G|-1` steps moves one `x/|G|` chunk along every ring edge at once, so
+/// a step lasts as long as the slowest edge.
+pub fn ag_ring(cluster: &ClusterTopology, group: &[usize], x: f64) -> f64 {
+    let g = group.len();
     if g <= 1 {
         return 0.0;
     }
-    (g - 1) as f64 * (cluster.alpha_intra + x / g as f64 * cluster.beta_intra)
+    let chunk = x / g as f64;
+    let step = group
+        .iter()
+        .enumerate()
+        .map(|(i, &src)| cluster.link(src, group[(i + 1) % g]).seconds(chunk))
+        .fold(0.0, f64::max);
+    (g - 1) as f64 * step
 }
 
-/// Ring AllReduce over an intra-node group: `x` = per-member buffer bytes.
-pub fn ar_ring(cluster: &ClusterProfile, g: usize, x: f64) -> f64 {
-    if g <= 1 {
-        return 0.0;
-    }
-    2.0 * (g - 1) as f64 * (cluster.alpha_intra + x / g as f64 * cluster.beta_intra)
+/// Ring AllReduce over a group: `x` = per-member buffer bytes
+/// (ReduceScatter ∘ AllGather — exactly twice the AllGather's steps).
+pub fn ar_ring(cluster: &ClusterTopology, group: &[usize], x: f64) -> f64 {
+    2.0 * ag_ring(cluster, group, x)
 }
 
 /// Pairwise AlltoAll over a (possibly multi-node) group.
@@ -45,7 +64,7 @@ pub fn ar_ring(cluster: &ClusterProfile, g: usize, x: f64) -> f64 {
 /// bytes. The cost is the max of (a) the slowest member's per-class send
 /// chains and (b) the busiest NIC, the two serialization sources in the
 /// simulator's resource model.
-pub fn a2a_pairwise(cluster: &ClusterProfile, group: &[usize], per_pair: f64) -> f64 {
+pub fn a2a_pairwise(cluster: &ClusterTopology, group: &[usize], per_pair: f64) -> f64 {
     a2a_pairwise_concurrent(cluster, group, per_pair, 1)
 }
 
@@ -54,71 +73,101 @@ pub fn a2a_pairwise(cluster: &ClusterProfile, group: &[usize], per_pair: f64) ->
 /// simultaneously, multiplying every NIC's load — the §III-A
 /// inefficiency the fused collective removes).
 pub fn a2a_pairwise_concurrent(
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
     group: &[usize],
     per_pair: f64,
     concurrency: usize,
 ) -> f64 {
-    let g = group.len();
-    if g <= 1 {
+    let mut worst = 0.0f64;
+    let mut seen: Vec<usize> = Vec::new();
+    for &r in group {
+        let n = cluster.node_of(r);
+        if !seen.contains(&n) {
+            seen.push(n);
+            worst = worst.max(a2a_pairwise_on_node(cluster, group, per_pair, concurrency, n));
+        }
+    }
+    worst
+}
+
+/// The AlltoAll bottleneck as seen from one node: the slowest send chain
+/// among that node's members and the node's own NIC serialization. The
+/// fleet-level [`a2a_pairwise_concurrent`] is the max of this over the
+/// nodes with members.
+pub fn a2a_pairwise_on_node(
+    cluster: &ClusterTopology,
+    group: &[usize],
+    per_pair: f64,
+    concurrency: usize,
+    node: usize,
+) -> f64 {
+    if group.len() <= 1 {
         return 0.0;
     }
-    let intra_chunk = cluster.alpha_intra + per_pair * cluster.beta_intra;
-    let inter_chunk = cluster.alpha_inter + per_pair * cluster.beta_inter;
-
     // (a) per-member chains: intra sends and inter sends progress on
     // independent classes; the member finishes when the slower chain does.
-    let mut member_worst: f64 = 0.0;
-    // (b) NIC load: inter-node chunks traversing each node's NIC (tx).
-    let mut nic_chunks: std::collections::BTreeMap<usize, usize> = Default::default();
+    let mut member_worst = 0.0f64;
+    // (b) NIC load: cross-node chunk seconds traversing this node's NIC
+    // (tx) — per-link costs, so a slow peer NIC lengthens the chain.
+    let mut nic_secs = 0.0f64;
     for &src in group {
-        let mut intra = 0usize;
-        let mut inter = 0usize;
+        if cluster.node_of(src) != node {
+            continue;
+        }
+        let mut intra = 0.0f64;
+        let mut inter = 0.0f64;
         for &dst in group {
             if dst == src {
                 continue;
             }
+            let t = cluster.link(src, dst).seconds(per_pair);
             if cluster.same_node(src, dst) {
-                intra += 1;
+                intra += t;
             } else {
-                inter += 1;
+                inter += t;
             }
         }
-        member_worst = member_worst
-            .max(intra as f64 * intra_chunk)
-            .max(inter as f64 * inter_chunk);
-        *nic_chunks.entry(cluster.node_of(src)).or_default() += inter;
+        member_worst = member_worst.max(intra).max(inter);
+        nic_secs += inter;
     }
-    let nic_worst = nic_chunks
-        .values()
-        .map(|&n| (n * concurrency) as f64 * inter_chunk)
-        .fold(0.0, f64::max);
-    member_worst.max(nic_worst)
+    member_worst.max(nic_secs * concurrency as f64)
+}
+
+/// Worst cost over the groups of one kind — the synchronous-layer view: a
+/// collective step finishes when its slowest group does.
+fn worst_group(groups: &[Vec<usize>], cost: impl Fn(&[usize]) -> f64) -> f64 {
+    groups.iter().map(|g| cost(g)).fold(0.0, f64::max)
 }
 
 /// Analytical `t_B` (Eq. 1): baseline communication per forward pass.
-pub fn t_baseline(cluster: &ClusterProfile, c: &MoeLayerConfig) -> f64 {
+pub fn t_baseline(cluster: &ClusterTopology, c: &MoeLayerConfig) -> f64 {
     let par = c.par;
     let groups = ProcessGroups::new(par).expect("valid degrees");
-    let ep_group = groups.group(GroupKind::Ep, 0);
-    let ag = ag_ring(cluster, par.n_esp, ops::bytes_esp_ag_per_rank(c) * par.n_esp as f64);
-    let ar = ar_ring(cluster, par.n_esp, ops::bytes_esp_ar_total(c));
+    let esp = groups.all_groups(GroupKind::Esp);
+    let ag = worst_group(&esp, |g| {
+        ag_ring(cluster, g, ops::bytes_esp_ag_per_rank(c) * par.n_esp as f64)
+    });
+    let ar = worst_group(&esp, |g| ar_ring(cluster, g, ops::bytes_esp_ar_total(c)));
     // All N_ESP EP-group AlltoAlls fire at once, sharing every NIC.
-    let a2a = a2a_pairwise_concurrent(
-        cluster,
-        &ep_group,
-        ops::bytes_ep_a2a_per_pair(c),
-        par.n_esp,
-    );
+    let ep = groups.all_groups(GroupKind::Ep);
+    let a2a = worst_group(&ep, |g| {
+        a2a_pairwise_concurrent(cluster, g, ops::bytes_ep_a2a_per_pair(c), par.n_esp)
+    });
     ag + ar + 2.0 * a2a
 }
 
+/// Worst MP-group AllGather of `x` gathered bytes over the layer.
+fn ag_mp(cluster: &ClusterTopology, c: &MoeLayerConfig, x: f64) -> f64 {
+    let groups = ProcessGroups::new(c.par).expect("valid degrees");
+    worst_group(&groups.all_groups(GroupKind::Mp), |g| ag_ring(cluster, g, x))
+}
+
 /// Analytical `t_D1` (Eq. 13).
-pub fn t_d1(cluster: &ClusterProfile, c: &MoeLayerConfig) -> f64 {
+pub fn t_d1(cluster: &ClusterTopology, c: &MoeLayerConfig) -> f64 {
     let groups = ProcessGroups::new(c.par).expect("valid degrees");
     let world = groups.world();
     let fused = a2a_pairwise(cluster, &world, ops::bytes_fused_a2a_per_pair(c));
-    let ag = ag_ring(cluster, c.par.n_mp, ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64);
+    let ag = ag_mp(cluster, c, ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64);
     2.0 * fused + ag
 }
 
@@ -127,11 +176,11 @@ pub fn t_d1(cluster: &ClusterProfile, c: &MoeLayerConfig) -> f64 {
 /// above by the AAS sequence; we take the paper's assumption that the
 /// AllGather hides except for its non-overlappable tail on single-node
 /// groups (where SAA degrades to AAS — see `comm::saa`).
-pub fn t_d2(cluster: &ClusterProfile, c: &MoeLayerConfig) -> f64 {
+pub fn t_d2(cluster: &ClusterTopology, c: &MoeLayerConfig) -> f64 {
     let groups = ProcessGroups::new(c.par).expect("valid degrees");
     let world = groups.world();
     let fused = a2a_pairwise(cluster, &world, ops::bytes_fused_a2a_per_pair(c));
-    let ag = ag_ring(cluster, c.par.n_mp, ops::bytes_mp_ag_s2_per_rank(c) * c.par.n_mp as f64);
+    let ag = ag_mp(cluster, c, ops::bytes_mp_ag_s2_per_rank(c) * c.par.n_mp as f64);
     let single_node = world
         .iter()
         .all(|&r| cluster.node_of(r) == cluster.node_of(world[0]));
@@ -146,7 +195,7 @@ pub fn t_d2(cluster: &ClusterProfile, c: &MoeLayerConfig) -> f64 {
 }
 
 /// Closed-form Algorithm 1: no fitting, no simulation.
-pub fn choose(cluster: &ClusterProfile, c: &MoeLayerConfig) -> crate::schedule::ScheduleKind {
+pub fn choose(cluster: &ClusterTopology, c: &MoeLayerConfig) -> crate::schedule::ScheduleKind {
     if t_d1(cluster, c) <= t_d2(cluster, c) {
         crate::schedule::ScheduleKind::S1
     } else {
@@ -154,19 +203,28 @@ pub fn choose(cluster: &ClusterProfile, c: &MoeLayerConfig) -> crate::schedule::
     }
 }
 
-/// Expert-FFN seconds per rank under PauseMP — the compute term shared by
-/// S1, S2 and SP (the baseline duplicates it N_MP times instead). Scaled
-/// by the routing-load model ([`ops::ffn_load_scale`]) so skewed configs
-/// price only the actually-routed tokens (zero padding does no FFN work),
-/// matching the builders.
-pub fn t_ffn_pausemp(cluster: &ClusterProfile, c: &MoeLayerConfig) -> f64 {
+/// Expert-FFN seconds per rank under PauseMP on one node's GPUs — the
+/// compute term shared by S1, S2 and SP (the baseline duplicates it N_MP
+/// times instead). Scaled by the routing-load model
+/// ([`ops::ffn_load_scale`]) so skewed configs price only the
+/// actually-routed tokens (zero padding does no FFN work), matching the
+/// builders.
+pub fn t_ffn_pausemp_on(cluster: &ClusterTopology, c: &MoeLayerConfig, node: usize) -> f64 {
     ops::expert_flops(c, ops::expert_tokens_per_rank(c, true))
         * ops::ffn_load_scale(c, c.t_pausemp())
-        / cluster.gpu_flops
+        / cluster.node(node).gpu_flops
+}
+
+/// [`t_ffn_pausemp_on`] at the layer's bottleneck (slowest) node — what a
+/// synchronous step waits for.
+pub fn t_ffn_pausemp(cluster: &ClusterTopology, c: &MoeLayerConfig) -> f64 {
+    ops::expert_flops(c, ops::expert_tokens_per_rank(c, true))
+        * ops::ffn_load_scale(c, c.t_pausemp())
+        / cluster.min_flops(c.par.p)
 }
 
 /// Analytical `t_SP(r)`: the chunk-pipelined dispatch→compute→combine
-/// region plus S1's MP-AllGather epilogue.
+/// region plus S1's MP-AllGather epilogue, at the bottleneck node.
 ///
 /// The region is evaluated by a closed O(r) recurrence over the builder's
 /// emission order (`D_0`, then per chunk k: `[D_{k+1}], F_k, C_k`): the
@@ -177,31 +235,50 @@ pub fn t_ffn_pausemp(cluster: &ClusterProfile, c: &MoeLayerConfig) -> f64 {
 /// Unlike `t_D1`/`t_D2`, the result is compute-inclusive (the pipeline's
 /// value is hiding communication behind the FFN), so compare it against
 /// `t_D* + t_ffn_pausemp`.
-pub fn t_sp(cluster: &ClusterProfile, c: &MoeLayerConfig, chunks: usize) -> f64 {
-    let ag = ag_ring(cluster, c.par.n_mp, ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64);
+pub fn t_sp(cluster: &ClusterTopology, c: &MoeLayerConfig, chunks: usize) -> f64 {
+    let ag = ag_mp(cluster, c, ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64);
     sp_pipeline(cluster, c, chunks, 1.0) + ag
 }
 
-/// The SP region alone (no AG epilogue), with the chunk FFNs scaled by
-/// `ffn_scale` — `1.0` for the forward pass, `2.0` for backward (dgrad +
-/// wgrad), whose doubled compute is exactly what makes pipelining pay off
-/// earlier there.
+/// The SP region alone (no AG epilogue) at the bottleneck node, with the
+/// chunk FFNs scaled by `ffn_scale` — `1.0` for the forward pass, `2.0`
+/// for backward (dgrad + wgrad), whose doubled compute is exactly what
+/// makes pipelining pay off earlier there.
+///
+/// Evaluating the bottleneck node alone IS the fleet max: the chunk
+/// AlltoAlls are global (identical for every node) and the pipeline
+/// recurrence is monotone in the FFN durations, so the slowest-GPU node
+/// dominates every other node's estimate.
 pub fn sp_pipeline(
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
     c: &MoeLayerConfig,
     chunks: usize,
     ffn_scale: f64,
+) -> f64 {
+    sp_pipeline_on(cluster, c, chunks, ffn_scale, sp_bottleneck_node(cluster, c))
+}
+
+/// The SP region as one node experiences it: every chunk's AlltoAll is the
+/// *global* collective (all ranks synchronize on it), but the chunk FFNs
+/// run at this node's per-GPU throughput — on a mixed fleet a straggler
+/// node's deeper compute makes more chunks worthwhile there.
+pub fn sp_pipeline_on(
+    cluster: &ClusterTopology,
+    c: &MoeLayerConfig,
+    chunks: usize,
+    ffn_scale: f64,
+    node: usize,
 ) -> f64 {
     let groups = ProcessGroups::new(c.par).expect("valid degrees");
     let world = groups.world();
     let cap = c.t_pausemp();
     let spans = ops::sp_spans(c, cap, ops::sp_clamp_chunks(c, chunks));
+    let flops = cluster.node(node).gpu_flops;
     let comm = |span: (usize, usize)| {
         a2a_pairwise(cluster, &world, ops::bytes_sp_chunk_per_pair(c, span.1))
     };
-    let ffn = |span: (usize, usize)| {
-        ffn_scale * ops::sp_chunk_flops_span(c, cap, span) / cluster.gpu_flops
-    };
+    let ffn =
+        |span: (usize, usize)| ffn_scale * ops::sp_chunk_flops_span(c, cap, span) / flops;
     pipeline_makespan(&spans, comm, ffn)
 }
 
@@ -236,12 +313,26 @@ pub fn pipeline_makespan(
     comm_t.max(comp_t)
 }
 
-/// Per-iteration (fwd + bwd) SP estimate: the forward pipeline, the
-/// backward pipeline at 2× compute, and both MP-AllGather/ReduceScatter
-/// epilogues (ring RS costs exactly what ring AG does).
-pub fn t_sp_iteration(cluster: &ClusterProfile, c: &MoeLayerConfig, chunks: usize) -> f64 {
-    let ag = ag_ring(cluster, c.par.n_mp, ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64);
-    sp_pipeline(cluster, c, chunks, 1.0) + sp_pipeline(cluster, c, chunks, 2.0) + 2.0 * ag
+/// Per-iteration (fwd + bwd) SP estimate at one node: that node's forward
+/// pipeline, its backward pipeline at 2× compute, and both MP-AllGather/
+/// ReduceScatter epilogues (ring RS costs exactly what ring AG does).
+pub fn t_sp_iteration_on(
+    cluster: &ClusterTopology,
+    c: &MoeLayerConfig,
+    chunks: usize,
+    node: usize,
+) -> f64 {
+    let ag = ag_mp(cluster, c, ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64);
+    sp_pipeline_on(cluster, c, chunks, 1.0, node)
+        + sp_pipeline_on(cluster, c, chunks, 2.0, node)
+        + 2.0 * ag
+}
+
+/// [`t_sp_iteration_on`] at the bottleneck node — the fleet-level
+/// per-iteration SP estimate (see [`sp_pipeline`] for why one node
+/// suffices).
+pub fn t_sp_iteration(cluster: &ClusterTopology, c: &MoeLayerConfig, chunks: usize) -> f64 {
+    t_sp_iteration_on(cluster, c, chunks, sp_bottleneck_node(cluster, c))
 }
 
 /// Argmin of a per-iteration SP estimate over the representable chunk
@@ -275,21 +366,50 @@ pub fn decide(t1: f64, t2: f64, r: usize, t_sp_iter: f64) -> (crate::schedule::S
     }
 }
 
-/// Closed-form optimal chunk count: argmin of [`t_sp_iteration`] over
-/// `1..=SP_MAX_CHUNKS` (bounded by one capacity row per chunk) — the
-/// objective is per-iteration time, since the backward pass's doubled
-/// compute shifts the optimum relative to forward-only. Returns
+/// Closed-form optimal chunk count for the fleet: argmin of
+/// [`t_sp_iteration`] (bottleneck-node estimate) over `1..=SP_MAX_CHUNKS`
+/// — the objective is per-iteration time, since the backward pass's
+/// doubled compute shifts the optimum relative to forward-only. Returns
 /// `(r*, t_SP_iter(r*))`.
-pub fn optimal_chunks(cluster: &ClusterProfile, c: &MoeLayerConfig) -> (usize, f64) {
+pub fn optimal_chunks(cluster: &ClusterTopology, c: &MoeLayerConfig) -> (usize, f64) {
     argmin_chunks(c, |r| t_sp_iteration(cluster, c, r))
 }
 
-/// Algorithm 1 generalized (closed-form): [`decide`] over per-iteration
-/// estimates (`2·t_D* + 3·t_FFN` for the unchunked schedules: comm
-/// mirrors in backward, compute doubles). Returns the pick and its
-/// estimated per-iteration time.
+/// Per-node optimal chunk count: what r* would be if `node`'s compute
+/// throughput paced the whole pipeline. On a homogeneous fleet every node
+/// returns [`optimal_chunks`]; on a mixed fleet a straggler node's deeper
+/// effective compute typically wants more chunks.
+pub fn optimal_chunks_on(
+    cluster: &ClusterTopology,
+    c: &MoeLayerConfig,
+    node: usize,
+) -> (usize, f64) {
+    argmin_chunks(c, |r| t_sp_iteration_on(cluster, c, r, node))
+}
+
+/// The straggler node that paces the fleet: the first slowest-GPU node
+/// among the layer's nodes (node 0 on a homogeneous cluster). Because
+/// communication terms are global, this node maximizes every per-node
+/// compute-inclusive estimate (when compute is fully hidden the
+/// estimates tie and the choice is nominal).
+pub fn sp_bottleneck_node(cluster: &ClusterTopology, c: &MoeLayerConfig) -> usize {
+    let mut best = (0usize, f64::INFINITY);
+    for n in cluster.nodes_for(c.par.p) {
+        let flops = cluster.node(n).gpu_flops;
+        if flops < best.1 {
+            best = (n, flops);
+        }
+    }
+    best.0
+}
+
+/// Algorithm 1 generalized (closed-form): [`decide`] over fleet-level
+/// per-iteration estimates (`2·t_D* + 3·t_FFN` for the unchunked
+/// schedules: comm mirrors in backward, compute doubles; t_FFN at the
+/// bottleneck node). Returns the pick and its estimated per-iteration
+/// time.
 pub fn choose_extended(
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
     c: &MoeLayerConfig,
 ) -> (crate::schedule::ScheduleKind, f64) {
     let f = t_ffn_pausemp(cluster, c);
@@ -299,9 +419,26 @@ pub fn choose_extended(
     decide(t1, t2, r, tsp)
 }
 
+/// Algorithm 1 as one node would run it: same communication terms (the
+/// collectives are global), that node's compute. On a mixed fleet the
+/// pick can genuinely differ per node — e.g. a straggler node's higher
+/// compute share makes SP(r) win where the fast nodes' pick is S1.
+pub fn choose_extended_on(
+    cluster: &ClusterTopology,
+    c: &MoeLayerConfig,
+    node: usize,
+) -> (crate::schedule::ScheduleKind, f64) {
+    let f = t_ffn_pausemp_on(cluster, c, node);
+    let t1 = 2.0 * t_d1(cluster, c) + 3.0 * f;
+    let t2 = 2.0 * t_d2(cluster, c) + 3.0 * f;
+    let (r, tsp) = optimal_chunks_on(cluster, c, node);
+    decide(t1, t2, r, tsp)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::cluster::NodeSpec;
     use crate::config::moe::ParallelDegrees;
     use crate::perfmodel::fit::{measure_collective, CollKind};
     use crate::schedule::{lowering, ScheduleKind};
@@ -327,10 +464,10 @@ mod tests {
 
     #[test]
     fn ag_matches_simulator() {
-        let cluster = ClusterProfile::testbed_b();
+        let cluster = ClusterTopology::testbed_b();
         for x in [1e6, 1e7, 6e7] {
             let sim = measure_collective(&cluster, par(), CollKind::AgMp, x).unwrap();
-            let cf = ag_ring(&cluster, 4, x);
+            let cf = ag_ring(&cluster, &[0, 1, 2, 3], x);
             let rel = (sim - cf).abs() / sim;
             assert!(rel < 0.02, "x={x}: sim {sim} vs closed-form {cf}");
         }
@@ -338,10 +475,10 @@ mod tests {
 
     #[test]
     fn ar_matches_simulator() {
-        let cluster = ClusterProfile::testbed_b();
+        let cluster = ClusterTopology::testbed_b();
         for x in [1e6, 1e7] {
             let sim = measure_collective(&cluster, par(), CollKind::ArEsp, x).unwrap();
-            let cf = ar_ring(&cluster, 4, x);
+            let cf = ar_ring(&cluster, &[0, 1, 2, 3], x);
             let rel = (sim - cf).abs() / sim;
             assert!(rel < 0.05, "x={x}: sim {sim} vs closed-form {cf}");
         }
@@ -350,7 +487,7 @@ mod tests {
     #[test]
     fn a2a_matches_simulator() {
         // Fused AlltoAll over the full 32-rank world (8 nodes × 4).
-        let cluster = ClusterProfile::testbed_b();
+        let cluster = ClusterTopology::testbed_b();
         let groups = ProcessGroups::new(par()).unwrap();
         let world = groups.world();
         for x in [1e6, 1e7, 6e7] {
@@ -363,7 +500,7 @@ mod tests {
 
     #[test]
     fn closed_form_ranks_schedules_like_simulator() {
-        let cluster = ClusterProfile::testbed_b();
+        let cluster = ClusterTopology::testbed_b();
         let c = cfg();
         // Closed forms are forward-comm only; the simulator runs fwd+bwd
         // with compute. Compare *ratios*, which is what Algorithm 1 uses.
@@ -384,7 +521,7 @@ mod tests {
     fn closed_form_choice_tracks_capacity_extremes() {
         // §IV-B: T → 0 favors S2, T → ∞ favors S1 — same flip the fitted
         // selector shows, now derivable with zero measurements.
-        let cluster = ClusterProfile::testbed_b();
+        let cluster = ClusterTopology::testbed_b();
         let mut tiny = cfg();
         tiny.f = 0.01;
         let mut huge = cfg();
@@ -395,9 +532,9 @@ mod tests {
 
     #[test]
     fn degenerate_groups_cost_nothing() {
-        let cluster = ClusterProfile::testbed_b();
-        assert_eq!(ag_ring(&cluster, 1, 1e9), 0.0);
-        assert_eq!(ar_ring(&cluster, 1, 1e9), 0.0);
+        let cluster = ClusterTopology::testbed_b();
+        assert_eq!(ag_ring(&cluster, &[3], 1e9), 0.0);
+        assert_eq!(ar_ring(&cluster, &[3], 1e9), 0.0);
         assert_eq!(a2a_pairwise(&cluster, &[3], 1e9), 0.0);
     }
 
@@ -405,7 +542,7 @@ mod tests {
     fn t_sp_with_one_chunk_equals_t_d1_plus_ffn() {
         // SP(1) = dispatch, FFN, combine, AG — exactly Eq. 13's structure
         // with the compute term made explicit.
-        let cluster = ClusterProfile::testbed_b();
+        let cluster = ClusterTopology::testbed_b();
         let c = cfg();
         let lhs = t_sp(&cluster, &c, 1);
         let rhs = t_d1(&cluster, &c) + t_ffn_pausemp(&cluster, &c);
@@ -414,7 +551,7 @@ mod tests {
 
     #[test]
     fn chunk_choice_tracks_compute_intensity() {
-        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
         // Compute-heavy: huge expert hidden size ⇒ pipelining pays, r* > 1
         // and the extended Algorithm 1 picks SP.
         let heavy = MoeLayerConfig {
@@ -456,5 +593,59 @@ mod tests {
         assert_eq!(r_light, 1, "comm-heavy config should not pipeline");
         let (pick, _) = choose_extended(&cluster, &light);
         assert!(!matches!(pick, ScheduleKind::Pipelined { .. }), "got {pick:?}");
+    }
+
+    /// testbed-B-subset(8)'s shape with node 1 slowed down by `factor`.
+    fn hetero_b8(factor: f64) -> ClusterTopology {
+        let homo = ClusterTopology::testbed_b_subset(8).unwrap();
+        let fast = homo.node_specs()[0];
+        let slow = NodeSpec { gpu_flops: fast.gpu_flops / factor, ..fast };
+        ClusterTopology::new("testbed_b_8gpu_hetero", vec![fast, slow]).unwrap()
+    }
+
+    #[test]
+    fn per_node_terms_reduce_to_fleet_terms_when_homogeneous() {
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+        let c = MoeLayerConfig {
+            par: ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 },
+            ..cfg()
+        };
+        for node in cluster.nodes_for(8) {
+            assert_eq!(t_ffn_pausemp_on(&cluster, &c, node), t_ffn_pausemp(&cluster, &c));
+            assert_eq!(
+                t_sp_iteration_on(&cluster, &c, 3, node),
+                t_sp_iteration(&cluster, &c, 3)
+            );
+            assert_eq!(optimal_chunks_on(&cluster, &c, node), optimal_chunks(&cluster, &c));
+        }
+        assert_eq!(sp_bottleneck_node(&cluster, &c), 0);
+    }
+
+    #[test]
+    fn straggler_node_dominates_fleet_estimates() {
+        let het = hetero_b8(4.0);
+        // Compute-heavy shape: the FFN term is on the critical path, so a
+        // straggler node's slower compute must show up in the estimate.
+        let c = MoeLayerConfig {
+            par: ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 },
+            b: 8,
+            l: 2048,
+            e: 4,
+            m: 1024,
+            h: 32768,
+            k: 2,
+            f: 1.2,
+            dtype_bytes: 4,
+            skew: 0.0,
+        };
+        // The fleet estimate equals the slow node's, exceeds the fast one's.
+        let fast = t_sp_iteration_on(&het, &c, 2, 0);
+        let slow = t_sp_iteration_on(&het, &c, 2, 1);
+        assert!(slow > fast);
+        assert_eq!(t_sp_iteration(&het, &c, 2), slow);
+        assert_eq!(sp_bottleneck_node(&het, &c), 1);
+        // And the fast node's view equals the homogeneous cluster's.
+        let homo = ClusterTopology::testbed_b_subset(8).unwrap();
+        assert_eq!(fast, t_sp_iteration(&homo, &c, 2));
     }
 }

@@ -7,6 +7,14 @@
 //! for AllGathers, and the **per-member buffer volume** for AllReduce —
 //! one convention, used identically at fit time and at prediction time,
 //! so Algorithm 1's inputs are self-consistent.
+//!
+//! Besides the per-collective fits, a [`PerfModel`] carries one α-β pair
+//! **per [`LinkClass`]** of the topology (fitted from single-transfer
+//! measurements over a representative rank pair of each class) and the
+//! per-node GPU throughputs of the layout — replacing the two global
+//! scalar pairs and the single `gpu_flops` the flat profile used to
+//! supply, so a fitted model is as topology-aware as the simulator it
+//! was measured on.
 
 use std::collections::BTreeMap;
 
@@ -15,7 +23,7 @@ use anyhow::{anyhow, Result};
 use crate::cluster::{GroupKind, ProcessGroups};
 use crate::comm::{lower, saa};
 use crate::config::moe::ParallelDegrees;
-use crate::config::ClusterProfile;
+use crate::config::{ClusterTopology, LinkClass};
 use crate::sim::dag::SimDag;
 use crate::sim::engine::Simulator;
 use crate::util::json::Json;
@@ -66,7 +74,7 @@ impl CollKind {
 /// Build the measurement DAG for one collective kind at argument `x`
 /// (bytes, per the convention above) and return its simulated makespan.
 pub fn measure_collective(
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
     par: ParallelDegrees,
     kind: CollKind,
     x: f64,
@@ -117,11 +125,20 @@ pub fn measure_collective(
 pub struct PerfModel {
     pub cluster_name: String,
     pub par: ParallelDegrees,
-    /// Dense throughput of one GPU (FLOP/s), carried from the profile so
-    /// compute-inclusive predictions (SP's pipeline, the `+ t_FFN` terms
-    /// of the generalized Algorithm 1) need no second argument.
+    /// Bottleneck (slowest) per-GPU throughput over the ranks this layout
+    /// uses (FLOP/s) — what a synchronous step effectively computes at,
+    /// carried from the topology so compute-inclusive predictions (SP's
+    /// pipeline, the `+ t_FFN` terms of the generalized Algorithm 1) need
+    /// no second argument.
     pub gpu_flops: f64,
+    /// Per-node `(node id, per-GPU FLOP/s)` over the nodes hosting ranks
+    /// `0..par.p` — the per-node axis the selection layer scans to find
+    /// the bottleneck node and its r*.
+    node_flops: Vec<(usize, f64)>,
     fits: BTreeMap<CollKind, LinearFit>,
+    /// One α-β pair per realizable [`LinkClass`] of the topology, fitted
+    /// from single-transfer measurements over a representative pair.
+    link_fits: BTreeMap<LinkClass, LinearFit>,
 }
 
 /// Message sizes used for fitting (bytes): 64 KiB … 64 MiB, ×4 steps —
@@ -132,7 +149,7 @@ impl PerfModel {
     /// Fit all collective models for `par` on `cluster` (paper §V-A:
     /// "measure the elapsed time over various message sizes … least
     /// square fitting").
-    pub fn fit(cluster: &ClusterProfile, par: ParallelDegrees) -> Result<PerfModel> {
+    pub fn fit(cluster: &ClusterTopology, par: ParallelDegrees) -> Result<PerfModel> {
         let mut fits = BTreeMap::new();
         for kind in CollKind::ALL {
             let mut points = Vec::with_capacity(FIT_SIZES.len());
@@ -143,11 +160,17 @@ impl PerfModel {
                 .ok_or_else(|| anyhow!("degenerate fit for {}", kind.name()))?;
             fits.insert(kind, fit);
         }
+        let node_flops: Vec<(usize, f64)> = cluster
+            .nodes_for(par.p)
+            .map(|n| (n, cluster.node(n).gpu_flops))
+            .collect();
         Ok(PerfModel {
             cluster_name: cluster.name.clone(),
             par,
-            gpu_flops: cluster.gpu_flops,
+            gpu_flops: cluster.min_flops(par.p),
+            node_flops,
             fits,
+            link_fits: fit_link_classes(cluster)?,
         })
     }
 
@@ -160,7 +183,31 @@ impl PerfModel {
         self.get(kind).predict(x)
     }
 
+    /// Per-node `(node id, per-GPU FLOP/s)` over the fitted layout's
+    /// ranks.
+    pub fn node_flops(&self) -> &[(usize, f64)] {
+        &self.node_flops
+    }
+
+    /// The fitted α-β of one link class (`None` when the class is not
+    /// realizable on the fitted topology).
+    pub fn link_fit(&self, class: LinkClass) -> Option<&LinearFit> {
+        self.link_fits.get(&class)
+    }
+
+    /// All per-link-class fits, keyed by [`LinkClass`].
+    pub fn link_fits(&self) -> &BTreeMap<LinkClass, LinearFit> {
+        &self.link_fits
+    }
+
     pub fn to_json(&self) -> Json {
+        let fit_obj = |f: &LinearFit| {
+            Json::obj(vec![
+                ("alpha", Json::num(f.intercept)),
+                ("beta", Json::num(f.slope)),
+                ("r2", Json::num(f.r2)),
+            ])
+        };
         Json::obj(vec![
             ("cluster", Json::str(&self.cluster_name)),
             ("p", Json::num(self.par.p as f64)),
@@ -171,21 +218,46 @@ impl PerfModel {
                 Json::Obj(
                     self.fits
                         .iter()
-                        .map(|(k, f)| {
-                            (
-                                k.name().to_string(),
-                                Json::obj(vec![
-                                    ("alpha", Json::num(f.intercept)),
-                                    ("beta", Json::num(f.slope)),
-                                    ("r2", Json::num(f.r2)),
-                                ]),
-                            )
-                        })
+                        .map(|(k, f)| (k.name().to_string(), fit_obj(f)))
+                        .collect(),
+                ),
+            ),
+            (
+                "link_fits",
+                Json::Obj(
+                    self.link_fits
+                        .iter()
+                        .map(|(class, f)| (class.id(), fit_obj(f)))
                         .collect(),
                 ),
             ),
         ])
     }
+}
+
+/// Fit one α-β pair per realizable [`LinkClass`]: measure a single
+/// point-to-point transfer over a representative rank pair of each class
+/// at the Fig 6 sizes and least-square it. On the simulator these recover
+/// the topology's own link constants (r² = 1) — the self-consistency the
+/// tests pin; on a real harness the same procedure would regress measured
+/// wire times.
+fn fit_link_classes(cluster: &ClusterTopology) -> Result<BTreeMap<LinkClass, LinearFit>> {
+    let mut out = BTreeMap::new();
+    for class in cluster.link_classes() {
+        let (src, dst) = cluster
+            .representative_pair(class)
+            .expect("link_classes only lists realizable classes");
+        let mut points = Vec::with_capacity(FIT_SIZES.len());
+        for &x in &FIT_SIZES {
+            let mut dag = SimDag::new();
+            dag.transfer(src, dst, x, &[], "fit.link");
+            points.push((x, Simulator::new(cluster).run(&dag).makespan));
+        }
+        let fit = least_squares(&points)
+            .ok_or_else(|| anyhow!("degenerate link fit for {}", class.id()))?;
+        out.insert(class, fit);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -198,7 +270,7 @@ mod tests {
 
     #[test]
     fn measurement_monotone_in_size() {
-        let c = ClusterProfile::testbed_b_subset(8).unwrap();
+        let c = ClusterTopology::testbed_b_subset(8).unwrap();
         for kind in CollKind::ALL {
             let small = measure_collective(&c, par(), kind, 1e5).unwrap();
             let large = measure_collective(&c, par(), kind, 1e7).unwrap();
@@ -211,7 +283,7 @@ mod tests {
         // The simulated collectives are α-β by construction, so the fit
         // must be near-perfect — this is the Fig 6 "linear model well
         // fits" observation.
-        let c = ClusterProfile::testbed_b_subset(8).unwrap();
+        let c = ClusterTopology::testbed_b_subset(8).unwrap();
         let m = PerfModel::fit(&c, par()).unwrap();
         for kind in CollKind::ALL {
             let f = m.get(kind);
@@ -223,7 +295,7 @@ mod tests {
 
     #[test]
     fn prediction_matches_direct_measurement() {
-        let c = ClusterProfile::testbed_b_subset(8).unwrap();
+        let c = ClusterTopology::testbed_b_subset(8).unwrap();
         let m = PerfModel::fit(&c, par()).unwrap();
         for kind in [CollKind::AgMp, CollKind::A2aFused] {
             let x = 2.5e6; // off the fit grid
@@ -242,7 +314,7 @@ mod tests {
         // per rank cost more α than the baseline's (N_EP-1)+(N_ESP-1), so
         // we assert the inequality where the analysis applies — the
         // bandwidth-dominated sizes real MoE layers use (≥ 1 MiB).
-        let c = ClusterProfile::testbed_b_subset(8).unwrap();
+        let c = ClusterTopology::testbed_b_subset(8).unwrap();
         let m = PerfModel::fit(&c, par()).unwrap();
         for &x in FIT_SIZES.iter().filter(|&&x| x >= 1048576.0) {
             let fused = m.predict(CollKind::A2aFused, x);
@@ -257,11 +329,67 @@ mod tests {
 
     #[test]
     fn json_report_has_all_fits() {
-        let c = ClusterProfile::testbed_b_subset(8).unwrap();
+        let c = ClusterTopology::testbed_b_subset(8).unwrap();
         let m = PerfModel::fit(&c, par()).unwrap();
         let j = m.to_json();
         for kind in CollKind::ALL {
             assert!(j.get("fits").get(kind.name()).get("beta").as_f64().unwrap() > 0.0);
         }
+        // Link-class fits are reported under their stable ids.
+        assert!(j.get("link_fits").get("intra.c0").get("beta").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn link_class_fits_recover_topology_constants() {
+        // On the simulator a single transfer costs exactly α + x·β of its
+        // link, so the per-class regression must recover the topology's
+        // own constants (r² = 1) — one pair per LinkClass, not two global
+        // scalars.
+        let c = ClusterTopology::testbed_b_subset(8).unwrap();
+        let m = PerfModel::fit(&c, par()).unwrap();
+        assert_eq!(m.link_fits().len(), c.link_classes().len());
+        for class in c.link_classes() {
+            let fit = m.link_fit(class).unwrap();
+            let link = c.link_of_class(class).unwrap();
+            assert!(fit.r2 > 0.999999, "{}: r2 {}", class.id(), fit.r2);
+            assert!(
+                (fit.intercept - link.alpha).abs() / link.alpha < 1e-9,
+                "{}: α {} vs {}",
+                class.id(),
+                fit.intercept,
+                link.alpha
+            );
+            assert!(
+                (fit.slope - link.beta).abs() / link.beta < 1e-9,
+                "{}: β {} vs {}",
+                class.id(),
+                fit.slope,
+                link.beta
+            );
+        }
+        assert!(m.link_fit(crate::config::LinkClass::Intra(7)).is_none());
+    }
+
+    #[test]
+    fn heterogeneous_model_carries_per_class_and_per_node_axes() {
+        use crate::config::cluster::NodeSpec;
+        let homo = ClusterTopology::testbed_b_subset(8).unwrap();
+        let fast = homo.node_specs()[0];
+        let slow = NodeSpec {
+            gpu_flops: fast.gpu_flops / 2.0,
+            inter: crate::config::AlphaBeta::new(fast.inter.alpha * 4.0, fast.inter.beta * 4.0),
+            ..fast
+        };
+        let het = ClusterTopology::new("het", vec![fast, slow]).unwrap();
+        let m = PerfModel::fit(&het, par()).unwrap();
+        // Bottleneck flops = the slow node's; both nodes reported.
+        assert_eq!(m.gpu_flops, slow.gpu_flops);
+        assert_eq!(m.node_flops(), &[(0, fast.gpu_flops), (1, slow.gpu_flops)]);
+        // Three link classes: two intra kinds + the mixed inter pair, each
+        // recovering its own constants (the inter pair at the bottleneck
+        // NIC, i.e. the slow node's).
+        assert_eq!(m.link_fits().len(), 3);
+        let inter = m.link_fit(crate::config::LinkClass::Inter(0, 1)).unwrap();
+        assert!((inter.slope - slow.inter.beta).abs() / slow.inter.beta < 1e-9);
     }
 }

@@ -1,13 +1,27 @@
 //! α-β performance models and the automatic schedule selection
-//! (paper §V, Algorithm 1, generalized to the SP family).
+//! (paper §V, Algorithm 1, generalized to the SP family and to
+//! heterogeneous topologies).
 //!
 //! Each collective, in the process-group layout a configuration induces,
 //! is measured in the simulator over a range of message sizes; ordinary
-//! least squares recovers `t(x) = α + β·x` (§V-A / Fig 6). The closed
-//! forms `t_B`, `t_D1`, `t_D2` (Eqs. 1, 13, 14) plus the pipelined
-//! `t_SP(r)` recurrence are then compared online to pick S1, S2 or SP(r*)
-//! — SP's chunk count is itself chosen in closed form (argmin over
-//! `1..=SP_MAX_CHUNKS`).
+//! least squares recovers `t(x) = α + β·x` (§V-A / Fig 6). The fitted
+//! [`PerfModel`] is **topology-aware**: besides the per-collective fits
+//! it carries one α-β pair per [`crate::config::LinkClass`] of the
+//! cluster (fitted from single-transfer measurements over a
+//! representative pair of each class — not two global scalars) and the
+//! per-node GPU throughputs of the layout.
+//!
+//! The closed forms `t_B`, `t_D1`, `t_D2` (Eqs. 1, 13, 14) plus the
+//! pipelined `t_SP(r)` recurrence are then compared online to pick S1, S2
+//! or SP(r*) — SP's chunk count is itself chosen in closed form (argmin
+//! over `1..=SP_MAX_CHUNKS`). On a mixed fleet the compute-inclusive
+//! terms are evaluated **per node** (the collectives are global, the FFN
+//! runs at each node's own throughput): the fleet-level pick minimizes
+//! the worst node's estimate, [`selection::Prediction`] reports which
+//! node that is (`bottleneck_node`), and the `*_on` variants in
+//! [`closedform`] expose the per-node view — where r* and even the
+//! Algorithm 1 pick can genuinely differ between a fast node and a
+//! straggler.
 
 pub mod closedform;
 pub mod fit;

@@ -28,10 +28,13 @@ use super::fit::{CollKind, PerfModel};
 
 /// Predicted times for each schedule: `t_baseline`, `t_d1`, `t_d2` are
 /// forward communication only (the paper's Eqs. 1/13/14); `t_ffn` is the
-/// PauseMP expert compute those share; `t_sp` is the compute-inclusive
-/// pipelined *forward* estimate at the chosen chunk count, and
-/// `t_sp_iter` the per-iteration (fwd + 2×-compute bwd) estimate the
-/// generalized Algorithm 1 actually compares.
+/// PauseMP expert compute those share, at the bottleneck node; `t_sp` is
+/// the compute-inclusive pipelined *forward* estimate at the chosen chunk
+/// count, and `t_sp_iter` the per-iteration (fwd + 2×-compute bwd)
+/// estimate the generalized Algorithm 1 actually compares. On a
+/// heterogeneous topology each compute-inclusive term is the max over the
+/// layer's nodes, and `bottleneck_node` names the node that set it — the
+/// straggler whose per-node r* the fleet-level `sp_chunks` optimizes for.
 #[derive(Debug, Clone, Copy)]
 pub struct Prediction {
     pub t_baseline: f64,
@@ -41,6 +44,9 @@ pub struct Prediction {
     pub t_sp: f64,
     pub t_sp_iter: f64,
     pub sp_chunks: usize,
+    /// Node whose per-iteration estimate paces the fleet (0 on a
+    /// homogeneous cluster).
+    pub bottleneck_node: usize,
 }
 
 impl Prediction {
@@ -67,12 +73,14 @@ impl Prediction {
 /// Fitted SP pipeline region (no AG epilogue): the closed-form recurrence
 /// with each chunk's fused AlltoAll costed by the fitted `A2aFused` model
 /// (argument = that chunk's per-member send volume) and the chunk FFNs
-/// scaled by `ffn_scale` (1.0 forward, 2.0 backward).
+/// scaled by `ffn_scale` (1.0 forward, 2.0 backward) at `gpu_flops` —
+/// the caller picks whose node's throughput to evaluate.
 fn sp_pipeline_fitted(
     model: &PerfModel,
     c: &MoeLayerConfig,
     chunks: usize,
     ffn_scale: f64,
+    gpu_flops: f64,
 ) -> f64 {
     let cap = c.t_pausemp();
     let spans = ops::sp_spans(c, cap, ops::sp_clamp_chunks(c, chunks));
@@ -82,9 +90,8 @@ fn sp_pipeline_fitted(
             ops::bytes_sp_chunk_per_pair(c, span.1) * c.par.p as f64,
         )
     };
-    let ffn = |span: (usize, usize)| {
-        ffn_scale * ops::sp_chunk_flops_span(c, cap, span) / model.gpu_flops
-    };
+    let ffn =
+        |span: (usize, usize)| ffn_scale * ops::sp_chunk_flops_span(c, cap, span) / gpu_flops;
     super::closedform::pipeline_makespan(&spans, comm, ffn)
 }
 
@@ -105,17 +112,40 @@ pub fn predict(model: &PerfModel, c: &MoeLayerConfig) -> Prediction {
         + model.predict(CollKind::AgMp, x_ag_mp_s1);
     let t_d2 =
         model.predict(CollKind::A2aFused, x_fused) + model.predict(CollKind::SaaS2, x_fused);
+    // Bottleneck-node FFN: `model.gpu_flops` is the min over used nodes.
     let t_ffn = ops::expert_flops(c, ops::expert_tokens_per_rank(c, true))
         * ops::ffn_load_scale(c, c.t_pausemp())
         / model.gpu_flops;
 
     let ag = model.predict(CollKind::AgMp, ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64);
-    let (sp_chunks, t_sp_iter) = super::closedform::argmin_chunks(c, |r| {
-        sp_pipeline_fitted(model, c, r, 1.0) + sp_pipeline_fitted(model, c, r, 2.0) + 2.0 * ag
-    });
-    let t_sp = sp_pipeline_fitted(model, c, sp_chunks, 1.0) + ag;
+    // The AlltoAll chunks are global collectives (one fitted model) and
+    // the pipeline recurrence is monotone in the FFN durations, so the
+    // fleet pays exactly the slowest-GPU node's estimate — evaluate that
+    // node once instead of scanning the fleet per chunk count.
+    let mut bottleneck = model.node_flops()[0];
+    for &(node, flops) in model.node_flops() {
+        if flops < bottleneck.1 {
+            bottleneck = (node, flops);
+        }
+    }
+    let sp_iter_at = |r: usize| {
+        sp_pipeline_fitted(model, c, r, 1.0, bottleneck.1)
+            + sp_pipeline_fitted(model, c, r, 2.0, bottleneck.1)
+            + 2.0 * ag
+    };
+    let (sp_chunks, t_sp_iter) = super::closedform::argmin_chunks(c, sp_iter_at);
+    let t_sp = sp_pipeline_fitted(model, c, sp_chunks, 1.0, bottleneck.1) + ag;
 
-    Prediction { t_baseline, t_d1, t_d2, t_ffn, t_sp, t_sp_iter, sp_chunks }
+    Prediction {
+        t_baseline,
+        t_d1,
+        t_d2,
+        t_ffn,
+        t_sp,
+        t_sp_iter,
+        sp_chunks,
+        bottleneck_node: bottleneck.0,
+    }
 }
 
 /// Algorithm 1 entry point (paper form): choose S1 or S2 for `c`.
@@ -132,7 +162,7 @@ pub fn choose_schedule_extended(model: &PerfModel, c: &MoeLayerConfig) -> Schedu
 mod tests {
     use super::*;
     use crate::config::moe::ParallelDegrees;
-    use crate::config::ClusterProfile;
+    use crate::config::ClusterTopology;
 
     fn cfg(p: usize, n_mp: usize, n_esp: usize, l: usize, f: f64) -> MoeLayerConfig {
         MoeLayerConfig {
@@ -150,8 +180,30 @@ mod tests {
     }
 
     #[test]
+    fn heterogeneous_prediction_reports_the_straggler_node() {
+        use crate::config::cluster::NodeSpec;
+        let homo = ClusterTopology::testbed_b_subset(8).unwrap();
+        let fast = homo.node_specs()[0];
+        let slow = NodeSpec { gpu_flops: fast.gpu_flops / 4.0, ..fast };
+        let het = ClusterTopology::new("het8", vec![fast, slow]).unwrap();
+        let par = ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 };
+        let m_homo = PerfModel::fit(&homo, par).unwrap();
+        let m_het = PerfModel::fit(&het, par).unwrap();
+        // Compute-heavy shape so the FFN term is load-bearing.
+        let mut c = cfg(8, 2, 2, 2048, 1.2);
+        c.b = 8;
+        c.h = 32768;
+        let p_homo = predict(&m_homo, &c);
+        let p_het = predict(&m_het, &c);
+        assert_eq!(p_homo.bottleneck_node, 0, "{p_homo:?}");
+        assert_eq!(p_het.bottleneck_node, 1, "{p_het:?}");
+        assert!(p_het.t_ffn > p_homo.t_ffn, "straggler FFN must be slower");
+        assert!(p_het.t_sp_iter > p_homo.t_sp_iter);
+    }
+
+    #[test]
     fn dedicated_schedules_predicted_faster_than_baseline() {
-        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
         let par = ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 };
         let model = PerfModel::fit(&cluster, par).unwrap();
         let c = cfg(8, 2, 2, 1024, 1.2);
@@ -164,7 +216,7 @@ mod tests {
     fn capacity_extremes_flip_the_choice() {
         // §IV-B: T → 0 favors S2 (t_D2 → 0 while t_D1 keeps AG_MP(BLM));
         // T → ∞ favors S1 (AG_MP(BLM) is constant in T).
-        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
         let par = ParallelDegrees { p: 8, n_mp: 4, n_esp: 2 };
         let model = PerfModel::fit(&cluster, par).unwrap();
 
@@ -181,7 +233,7 @@ mod tests {
 
     #[test]
     fn extended_prediction_is_well_formed() {
-        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
         let par = ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 };
         let model = PerfModel::fit(&cluster, par).unwrap();
         let c = cfg(8, 2, 2, 1024, 1.2);
@@ -208,7 +260,7 @@ mod tests {
 
     #[test]
     fn extended_choice_picks_sp_on_compute_heavy_config() {
-        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
         let par = ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 };
         let model = PerfModel::fit(&cluster, par).unwrap();
         let mut c = cfg(8, 2, 2, 2048, 1.2);
@@ -227,7 +279,7 @@ mod tests {
         // finds faster (selection accuracy; the bench quantifies this over
         // the whole grid).
         use crate::schedule::lowering::simulate_iteration;
-        let cluster = ClusterProfile::testbed_b_subset(16).unwrap();
+        let cluster = ClusterTopology::testbed_b_subset(16).unwrap();
         let par = ParallelDegrees { p: 16, n_mp: 2, n_esp: 4 };
         let model = PerfModel::fit(&cluster, par).unwrap();
         let mut agree = 0;

@@ -11,6 +11,22 @@ use super::ops::{self, Op, ScheduleKind};
 /// `kind` must be concrete (not [`ScheduleKind::Parm`]) — resolve Parm via
 /// [`crate::perfmodel::PerfModel::choose`] first.
 pub fn forward_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
+    forward_ops_measured(kind, c, None)
+}
+
+/// [`forward_ops`] with an optional **measured** per-expert load profile
+/// (the two-pass span mode, `--spans measured`): when provided and the
+/// schedule is the load-aware SP family, chunk spans are FLOPs-balanced
+/// from the measurement ([`ops::sp_spans_measured`]) and the chunk FFNs
+/// priced by it ([`ops::sp_chunk_flops_measured`]) — covering organic
+/// imbalance the expected Zipf profile cannot see. All-zero measurements
+/// are ignored (expected-profile behaviour).
+pub fn forward_ops_measured(
+    kind: ScheduleKind,
+    c: &MoeLayerConfig,
+    measured: Option<&[usize]>,
+) -> Vec<Op> {
+    let measured = measured.filter(|l| l.iter().sum::<usize>() > 0);
     let d = c.dtype_bytes as f64;
     match kind {
         ScheduleKind::Parm => panic!("resolve Parm to S1/S2 via the perf model first"),
@@ -75,9 +91,16 @@ pub fn forward_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
             let cap = c.t_pausemp();
             let clamped = ops::sp_clamp_chunks(c, chunks);
             let spans = if matches!(kind, ScheduleKind::Pipelined { .. }) {
-                ops::sp_spans(c, cap, clamped)
+                match measured {
+                    Some(loads) => ops::sp_spans_measured(cap, clamped, loads),
+                    None => ops::sp_spans(c, cap, clamped),
+                }
             } else {
                 ops::chunk_spans(cap, clamped)
+            };
+            let chunk_flops = |span: (usize, usize)| match measured {
+                Some(loads) => ops::sp_chunk_flops_measured(c, cap, span, loads),
+                None => ops::sp_chunk_flops_span(c, cap, span),
             };
             let r = spans.len();
             // S1's prologue/epilogue with the dispatch→FFN→combine middle
@@ -106,7 +129,7 @@ pub fn forward_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
                     });
                 }
                 v.push(Op::SpExpertFfn {
-                    flops_per_rank: ops::sp_chunk_flops_span(c, cap, spans[k]),
+                    flops_per_rank: chunk_flops(spans[k]),
                     index: k,
                     of: r,
                 });
@@ -163,7 +186,17 @@ pub fn forward_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
 /// | SAA/AAS combine    | same, reversed direction  |
 /// | compute f          | 2·f                       |
 pub fn backward_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
-    forward_ops(kind, c)
+    backward_ops_measured(kind, c, None)
+}
+
+/// [`backward_ops`] under an optional measured load profile (see
+/// [`forward_ops_measured`]).
+pub fn backward_ops_measured(
+    kind: ScheduleKind,
+    c: &MoeLayerConfig,
+    measured: Option<&[usize]>,
+) -> Vec<Op> {
+    forward_ops_measured(kind, c, measured)
         .into_iter()
         .rev()
         .map(|op| match op {
@@ -216,8 +249,18 @@ pub fn backward_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
 /// all-reduce of parameters is excluded, matching the paper's measurement
 /// protocol ("the time for the allreduce of gradients is excluded").
 pub fn iteration_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
-    let mut v = forward_ops(kind, c);
-    v.extend(backward_ops(kind, c));
+    iteration_ops_measured(kind, c, None)
+}
+
+/// [`iteration_ops`] under an optional measured load profile (see
+/// [`forward_ops_measured`]).
+pub fn iteration_ops_measured(
+    kind: ScheduleKind,
+    c: &MoeLayerConfig,
+    measured: Option<&[usize]>,
+) -> Vec<Op> {
+    let mut v = forward_ops_measured(kind, c, measured);
+    v.extend(backward_ops_measured(kind, c, measured));
     v
 }
 
@@ -445,6 +488,35 @@ mod tests {
             dispatch_bytes(ScheduleKind::PipelinedUniform { chunks: 3 }),
             "weighted spans should differ from uniform under skew"
         );
+    }
+
+    #[test]
+    fn measured_loads_reshape_sp_spans() {
+        // Two-pass mode: a head-heavy measured profile moves the chunk
+        // boundaries (and FFN pricing) even with the skew knob off —
+        // that's the organic-imbalance coverage. An all-zero measurement
+        // is ignored.
+        let c = cfg();
+        assert_eq!(c.skew, 0.0);
+        let cap = c.t_pausemp();
+        let loads: Vec<usize> = (0..c.e).map(|j| cap / (j + 1)).collect();
+        let kind = ScheduleKind::Pipelined { chunks: 3 };
+        let plain = forward_ops(kind, &c);
+        let measured = forward_ops_measured(kind, &c, Some(&loads[..]));
+        let dispatch_bytes = |ops: &[Op]| -> Vec<f64> {
+            ops.iter()
+                .filter_map(|o| match *o {
+                    Op::SpDispatch { bytes_per_pair, .. } => Some(bytes_per_pair),
+                    _ => None,
+                })
+                .collect()
+        };
+        assert_ne!(dispatch_bytes(&plain), dispatch_bytes(&measured));
+        let zeros = vec![0usize; c.e];
+        assert_eq!(plain, forward_ops_measured(kind, &c, Some(&zeros[..])));
+        // The measured iteration program mirrors like the plain one.
+        let it = iteration_ops_measured(kind, &c, Some(&loads[..]));
+        assert_eq!(it.len(), 2 * measured.len());
     }
 
     #[test]

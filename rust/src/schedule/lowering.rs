@@ -12,7 +12,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::cluster::ProcessGroups;
 use crate::comm::transport::{DagTransport, Lump};
-use crate::config::{ClusterProfile, MoeLayerConfig};
+use crate::config::{ClusterTopology, MoeLayerConfig};
 use crate::sim::dag::SimDag;
 use crate::sim::engine::{SimReport, Simulator};
 
@@ -62,7 +62,7 @@ impl Machine<DagTransport<'_>> for DagMachine {
 
 /// Lower `ops` for `cfg` onto `cluster`; returns the DAG (makespan = the
 /// program's iteration time once simulated).
-pub fn lower_ops(ops: &[Op], cfg: &MoeLayerConfig, cluster: &ClusterProfile) -> Result<SimDag> {
+pub fn lower_ops(ops: &[Op], cfg: &MoeLayerConfig, cluster: &ClusterTopology) -> Result<SimDag> {
     let p = cfg.par.p;
     ensure!(
         p <= cluster.total_gpus(),
@@ -83,7 +83,7 @@ pub fn lower_ops(ops: &[Op], cfg: &MoeLayerConfig, cluster: &ClusterProfile) -> 
 pub fn simulate_iteration(
     kind: ScheduleKind,
     cfg: &MoeLayerConfig,
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
 ) -> Result<SimReport> {
     Ok(simulate_iteration_with_dag(kind, cfg, cluster)?.0)
 }
@@ -93,9 +93,22 @@ pub fn simulate_iteration(
 pub fn simulate_iteration_with_dag(
     kind: ScheduleKind,
     cfg: &MoeLayerConfig,
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
 ) -> Result<(SimReport, SimDag)> {
-    let ops = builders::iteration_ops(kind, cfg);
+    simulate_iteration_measured_with_dag(kind, cfg, cluster, None)
+}
+
+/// [`simulate_iteration_with_dag`] under an optional **measured**
+/// per-expert load profile: the SP family's chunk spans are re-balanced
+/// from the measurement (two-pass span selection — see
+/// [`crate::schedule::builders::forward_ops_measured`]) before lowering.
+pub fn simulate_iteration_measured_with_dag(
+    kind: ScheduleKind,
+    cfg: &MoeLayerConfig,
+    cluster: &ClusterTopology,
+    measured: Option<&[usize]>,
+) -> Result<(SimReport, SimDag)> {
+    let ops = builders::iteration_ops_measured(kind, cfg, measured);
     let dag = lower_ops(&ops, cfg, cluster)?;
     let report = Simulator::new(cluster).run(&dag);
     Ok((report, dag))
@@ -105,7 +118,7 @@ pub fn simulate_iteration_with_dag(
 pub fn simulate_forward(
     kind: ScheduleKind,
     cfg: &MoeLayerConfig,
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
 ) -> Result<SimReport> {
     let ops = builders::forward_ops(kind, cfg);
     let dag = lower_ops(&ops, cfg, cluster)?;
@@ -132,8 +145,8 @@ mod tests {
         }
     }
 
-    fn testbed_b() -> ClusterProfile {
-        ClusterProfile::testbed_b()
+    fn testbed_b() -> ClusterTopology {
+        ClusterTopology::testbed_b()
     }
 
     #[test]
@@ -174,7 +187,7 @@ mod tests {
         // The SP acceptance case: when expert compute is comparable to (or
         // larger than) the fused-AlltoAll time, pipelining hides most of
         // the dispatch/combine communication behind the FFN chunks.
-        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
         let c = MoeLayerConfig {
             par: ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 },
             b: 8,
@@ -207,7 +220,7 @@ mod tests {
         // effect peaks where chunk comm ≈ chunk compute, so sweep a small
         // pinned bracket around that parity point and require a strict,
         // measurable win at the same chunk count.
-        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
         let mut best: Option<(String, usize, f64)> = None;
         for (e, h, skew) in [
             (4usize, 32768usize, 2.0f64),
@@ -256,7 +269,7 @@ mod tests {
     fn uniform_and_weighted_spans_agree_without_skew() {
         // With the skew knob off the two SP variants emit identical
         // programs — the ablation column is exactly zero-cost then.
-        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
         let c = cfg(8, 2, 2);
         for r in [2usize, 4] {
             let tw = simulate_iteration(ScheduleKind::Pipelined { chunks: r }, &c, &cluster)
@@ -273,7 +286,7 @@ mod tests {
     fn sp_chunks_overlap_compute_with_communication() {
         // The overlap the pipeline exists to create is visible in the
         // engine: compute and network transfers in flight simultaneously.
-        let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
         let c = cfg(8, 2, 2);
         let ops = builders::forward_ops(ScheduleKind::Pipelined { chunks: 4 }, &c);
         let dag = lower_ops(&ops, &c, &cluster).unwrap();
@@ -339,7 +352,7 @@ mod tests {
 
     #[test]
     fn rejects_oversized_layer() {
-        let cluster = ClusterProfile::testbed_a(); // 8 GPUs
+        let cluster = ClusterTopology::testbed_a(); // 8 GPUs
         let c = cfg(16, 2, 2);
         assert!(simulate_iteration(ScheduleKind::Baseline, &c, &cluster).is_err());
     }

@@ -55,6 +55,15 @@
 //! monolithic FFN term is scaled by the same load model
 //! ([`ops::ffn_load_scale`]) so S1/S2/baseline and the SP chunks price
 //! compute consistently.
+//!
+//! Besides the expected-profile policy there is a **two-pass** variant:
+//! [`ops::sp_spans_measured`] re-balances the spans from the gate's
+//! *measured* per-expert loads (max-aggregated over ranks —
+//! [`crate::moe::exec::measure_expert_loads`]), covering organic,
+//! non-Zipf imbalance the skew knob cannot model. The builders take the
+//! measurement through [`builders::forward_ops_measured`]; on the CLI it
+//! is `parm sim --spans measured`, and on the data plane
+//! [`crate::moe::exec::run_schedule_measured`].
 
 pub mod builders;
 pub mod interp;

@@ -391,6 +391,39 @@ pub fn sp_spans(c: &MoeLayerConfig, cap: usize, chunks: usize) -> Vec<(usize, us
     }
 }
 
+/// Two-pass span selection: FLOPs-balance the chunk spans from the gate's
+/// **measured** per-expert loads
+/// ([`crate::moe::gating::DispatchInfo::expert_loads`], max-aggregated
+/// over ranks) instead of the expected Zipf profile — this covers
+/// organic, non-Zipf imbalance the skew knob cannot model (hot experts
+/// that emerge from the data, not from a configured bias). Loads are
+/// clamped to `cap`; an empty or all-zero measurement falls back to the
+/// uniform split. Exposed on the CLI as `parm sim --spans measured`.
+pub fn sp_spans_measured(cap: usize, chunks: usize, measured: &[usize]) -> Vec<(usize, usize)> {
+    let clamped: Vec<usize> = measured.iter().map(|&l| l.min(cap)).collect();
+    if clamped.iter().all(|&l| l == 0) {
+        return chunk_spans(cap, chunks);
+    }
+    chunk_spans_weighted(cap, chunks, &clamped)
+}
+
+/// [`sp_chunk_flops_span`]'s pricing under a **measured** load profile:
+/// only the measured filled rows of a span do FFN work, priced at the
+/// mean per-rank share exactly like the expected-profile variant — so a
+/// two-pass program's per-chunk FFN ops sum to the measured total over
+/// any span partition.
+pub fn sp_chunk_flops_measured(
+    c: &MoeLayerConfig,
+    cap: usize,
+    span: (usize, usize),
+    measured: &[usize],
+) -> f64 {
+    let (start, rows) = span;
+    let clamped: Vec<usize> = measured.iter().map(|&l| l.min(cap)).collect();
+    let mean_rows = total_filled(&clamped, start, rows) as f64 / c.par.n_ep() as f64;
+    expert_flops(c, mean_rows * c.par.p as f64)
+}
+
 /// Load-aware per-chunk expert FLOPs per rank: only the *filled* rows of
 /// a span do useful FFN work (a load-aware kernel skips the zero
 /// padding). The engine charges ONE flops-per-rank scalar per op, so the
@@ -671,6 +704,54 @@ mod tests {
         assert!(fr.iter().all(|&f| f > 0.999), "near-uniform at tiny skew: {fr:?}");
         c.skew = 0.0;
         assert!(expert_load_fractions(&c).is_none());
+    }
+
+    #[test]
+    fn measured_spans_balance_on_measured_loads() {
+        // A head-heavy measured profile (organic imbalance, skew knob off)
+        // must shorten the head span exactly like the expected-profile
+        // weighted split would; flat or empty measurements reduce to the
+        // uniform split; overhanging loads clamp to the capacity.
+        let loads = vec![16usize, 8, 4, 2];
+        assert_eq!(
+            sp_spans_measured(16, 4, &loads),
+            chunk_spans_weighted(16, 4, &loads)
+        );
+        assert_eq!(sp_spans_measured(16, 4, &[0, 0, 0]), chunk_spans(16, 4));
+        assert_eq!(sp_spans_measured(16, 4, &[]), chunk_spans(16, 4));
+        // Loads beyond cap behave like saturated experts.
+        assert_eq!(
+            sp_spans_measured(8, 2, &[100, 100]),
+            chunk_spans(8, 2),
+            "uniformly saturated loads are a flat profile"
+        );
+        let spans = sp_spans_measured(16, 4, &loads);
+        assert_eq!(spans.iter().map(|s| s.1).sum::<usize>(), 16);
+        assert!(spans[0].1 < spans[3].1, "{spans:?}");
+    }
+
+    #[test]
+    fn measured_chunk_flops_conserve_the_measured_total() {
+        // Σ_k flops(span_k) over ANY partition equals the flops of the
+        // full measured fill — the same linearity contract the expected
+        // profile keeps.
+        let c = cfg();
+        let cap = c.t_pausemp();
+        let measured: Vec<usize> = (0..c.e).map(|j| cap / (j + 1)).collect();
+        let full = sp_chunk_flops_measured(&c, cap, (0, cap), &measured);
+        assert!(full > 0.0);
+        for r in [1usize, 2, 3, 5] {
+            for spans in [sp_spans_measured(cap, r, &measured), chunk_spans(cap, r)] {
+                let sum: f64 = spans
+                    .iter()
+                    .map(|&s| sp_chunk_flops_measured(&c, cap, s, &measured))
+                    .sum();
+                assert!(
+                    (sum - full).abs() / full < 1e-9,
+                    "r={r}: per-chunk sum {sum} vs full {full}"
+                );
+            }
+        }
     }
 
     #[test]

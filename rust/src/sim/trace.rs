@@ -37,12 +37,12 @@ pub fn chrome_trace(dag: &SimDag, report: &SimReport) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ClusterProfile;
+    use crate::config::ClusterTopology;
     use crate::sim::engine::Simulator;
 
     #[test]
     fn trace_has_events_with_positive_durations() {
-        let c = ClusterProfile::testbed_a();
+        let c = ClusterTopology::testbed_a();
         let mut d = SimDag::new();
         let a = d.transfer(0, 1, 1e6, &[], "ag");
         d.compute(1, 1e9, &[a], "ffn");

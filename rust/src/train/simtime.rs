@@ -5,7 +5,7 @@
 use anyhow::Result;
 
 use crate::config::moe::ParallelDegrees;
-use crate::config::{ClusterProfile, ModelConfig};
+use crate::config::{ClusterTopology, ModelConfig};
 use crate::schedule::{lowering, ScheduleKind};
 
 /// Breakdown of one training iteration of a full model.
@@ -31,14 +31,16 @@ impl ModelTiming {
 pub fn model_iteration_time(
     model: &ModelConfig,
     par: ParallelDegrees,
-    cluster: &ClusterProfile,
+    cluster: &ClusterTopology,
     kind: ScheduleKind,
 ) -> Result<ModelTiming> {
     let layer = model.moe_layer(par);
     layer.validate()?;
     let report = lowering::simulate_iteration(kind, &layer, cluster)?;
     let moe_seconds = report.makespan * model.n_moe_layers() as f64;
-    let dense_seconds = model.dense_flops_per_gpu(par.n_mp) / cluster.gpu_flops;
+    // Synchronous data parallelism paces the dense blocks at the slowest
+    // participating GPU (the bottleneck node of a mixed fleet).
+    let dense_seconds = model.dense_flops_per_gpu(par.n_mp) / cluster.min_flops(par.p);
     Ok(ModelTiming {
         moe_seconds,
         dense_seconds,
@@ -55,7 +57,7 @@ mod tests {
         // Table V shape: Parm ≈ 3× over DeepSpeed-MoE on BERT/GPT-2 with
         // N_MP = N_ESP = 4. We assert the direction and a sane magnitude
         // (1.5×–8×); the bench prints the exact numbers.
-        let cluster = ClusterProfile::testbed_b();
+        let cluster = ClusterTopology::testbed_b();
         let model = ModelConfig::bert_base_moe(8);
         let par = ParallelDegrees { p: 32, n_mp: 4, n_esp: 4 };
         let base = model_iteration_time(&model, par, &cluster, ScheduleKind::Baseline).unwrap();
@@ -71,7 +73,7 @@ mod tests {
     fn moe_layers_dominate_baseline() {
         // Fig 1: communication (in the MoE layers) dominates iteration
         // time under the baseline schedule on the cluster testbed.
-        let cluster = ClusterProfile::testbed_b();
+        let cluster = ClusterTopology::testbed_b();
         let model = ModelConfig::gpt2_moe(8);
         let par = ParallelDegrees { p: 32, n_mp: 4, n_esp: 4 };
         let t = model_iteration_time(&model, par, &cluster, ScheduleKind::Baseline).unwrap();
@@ -81,7 +83,7 @@ mod tests {
 
     #[test]
     fn invalid_layout_rejected() {
-        let cluster = ClusterProfile::testbed_a();
+        let cluster = ClusterTopology::testbed_a();
         let model = ModelConfig::bert_base_moe(7); // 7 experts won't divide slots
         let par = ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 };
         assert!(model_iteration_time(&model, par, &cluster, ScheduleKind::S1).is_err());

@@ -1,63 +1,124 @@
-//! Golden-sweep regression gate: a pinned 24-case slice of the Table III
-//! grid on testbed A, run through the parallel sweep runner (2 workers)
-//! and rendered with the same CSV writer `parm sweep --csv` uses, must be
-//! byte-identical to the checked-in `tests/golden/sweep_smoke.csv`.
+//! Golden-sweep regression gate: pinned slices of the Table III grid, run
+//! through the parallel sweep runner (2 workers) and rendered with the
+//! same CSV writer `parm sweep --csv` uses, must be byte-identical to the
+//! checked-in goldens under `tests/golden/`:
+//!
+//! * `sweep_smoke.csv` — 24 cases on testbed A (single node; the original
+//!   gate, format unchanged by the topology redesign —
+//!   `ClusterTopology::homogeneous` reproduces the flat-profile timings
+//!   exactly).
+//! * `sweep_smoke_b.csv` — 8 multi-node cases on testbed B at P = 16
+//!   (4 nodes), so NIC-contention regressions gate too.
+//! * `sweep_smoke_hetero.csv` — 8 cases on the two-node-class example
+//!   fleet (`examples/cluster_hetero.json`: one testbed-B-class node plus
+//!   a slower straggler node), so mixed-fleet pricing regressions gate.
 //!
 //! Any change to schedule builders, the interpreter, the collective
 //! algorithms, the engine's resource model or the α-β fit shows up here
-//! as a diff — schedule-timing changes must update the golden file
+//! as a diff — schedule-timing changes must update the golden files
 //! explicitly. Bless flow: `GOLDEN_BLESS=1 cargo test golden_sweep`
-//! rewrites the file (it is also written on first run when missing, with
-//! a notice to commit it); a stale file fails this test AND the CI
-//! binary-gate diff, and CI hard-fails while the golden is not committed
-//! (uploading the generated CSV to commit verbatim), so timing changes
+//! rewrites the files (they are also written on first run when missing,
+//! with a notice to commit them); a stale file fails this test AND the CI
+//! binary-gate diff, and CI hard-fails while a golden is not committed
+//! (uploading the generated CSVs to commit verbatim), so timing changes
 //! cannot merge silently.
 
 use std::path::Path;
 
 use parm::bench::{run_sweep_with_threads, sweep_csv};
-use parm::config::{sweep, ClusterProfile, SweepFilter};
+use parm::config::{sweep, ClusterTopology, SweepFilter};
 
-const GOLDEN: &str = "tests/golden/sweep_smoke.csv";
-const CASES: usize = 24;
 const THREADS: usize = 2;
+const HETERO_JSON: &str = "../examples/cluster_hetero.json";
 
-fn smoke_csv() -> String {
-    let cluster = ClusterProfile::testbed_a();
-    let mut configs = sweep::sweep_table3(&cluster, SweepFilter::Feasible);
-    assert!(configs.len() >= CASES, "grid shrank below the pinned slice");
-    configs.truncate(CASES);
-    let results = run_sweep_with_threads(&configs, &cluster, false, THREADS).unwrap();
+struct Slice {
+    golden: &'static str,
+    cases: usize,
+    cluster: ClusterTopology,
+    /// Restrict to one P before truncating (None = full grid order).
+    p: Option<usize>,
+}
+
+fn slices() -> Vec<Slice> {
+    vec![
+        Slice {
+            golden: "tests/golden/sweep_smoke.csv",
+            cases: 24,
+            cluster: ClusterTopology::testbed_a(),
+            p: None,
+        },
+        Slice {
+            golden: "tests/golden/sweep_smoke_b.csv",
+            cases: 8,
+            cluster: ClusterTopology::testbed_b(),
+            p: Some(16),
+        },
+        Slice {
+            golden: "tests/golden/sweep_smoke_hetero.csv",
+            cases: 8,
+            cluster: ClusterTopology::from_json_file(HETERO_JSON).expect("example topology"),
+            p: None,
+        },
+    ]
+}
+
+fn slice_csv(s: &Slice) -> String {
+    let mut configs = match s.p {
+        Some(p) => sweep::sweep_at_p(&s.cluster, p, SweepFilter::Feasible),
+        None => sweep::sweep_table3(&s.cluster, SweepFilter::Feasible),
+    };
+    assert!(
+        configs.len() >= s.cases,
+        "{}: grid shrank below the pinned slice ({} < {})",
+        s.golden,
+        configs.len(),
+        s.cases
+    );
+    configs.truncate(s.cases);
+    let results = run_sweep_with_threads(&configs, &s.cluster, false, THREADS).unwrap();
     sweep_csv(&results)
 }
 
 #[test]
 fn golden_sweep_smoke() {
-    let got = smoke_csv();
-    assert_eq!(got.lines().count(), CASES + 1, "header + one row per case");
-    let path = Path::new(GOLDEN);
-    if std::env::var_os("GOLDEN_BLESS").is_some() || !path.exists() {
-        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
-        std::fs::write(path, &got).unwrap();
-        eprintln!("golden_sweep: blessed {GOLDEN} ({CASES} cases) — commit it");
-        return;
+    for s in slices() {
+        let got = slice_csv(&s);
+        assert_eq!(
+            got.lines().count(),
+            s.cases + 1,
+            "{}: header + one row per case",
+            s.golden
+        );
+        let path = Path::new(s.golden);
+        if std::env::var_os("GOLDEN_BLESS").is_some() || !path.exists() {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(path, &got).unwrap();
+            eprintln!("golden_sweep: blessed {} ({} cases) — commit it", s.golden, s.cases);
+            continue;
+        }
+        let want = std::fs::read_to_string(path).unwrap();
+        assert_eq!(
+            want, got,
+            "sweep output diverged from {}; if the schedule-timing change \
+             is intentional, regenerate with `GOLDEN_BLESS=1 cargo test \
+             golden_sweep` and commit the updated golden files",
+            s.golden
+        );
     }
-    let want = std::fs::read_to_string(path).unwrap();
-    assert_eq!(
-        want, got,
-        "sweep output diverged from {GOLDEN}; if the schedule-timing change \
-         is intentional, regenerate with `GOLDEN_BLESS=1 cargo test \
-         golden_sweep` and commit the updated golden file"
-    );
 }
 
 #[test]
 fn golden_slice_is_deterministic_across_thread_counts() {
-    // The golden gate pins --threads 2; the CSV must not depend on that.
-    let cluster = ClusterProfile::testbed_a();
-    let mut configs = sweep::sweep_table3(&cluster, SweepFilter::Feasible);
-    configs.truncate(8);
-    let seq = sweep_csv(&run_sweep_with_threads(&configs, &cluster, false, 1).unwrap());
-    let par = sweep_csv(&run_sweep_with_threads(&configs, &cluster, false, 4).unwrap());
-    assert_eq!(seq, par);
+    // The golden gate pins --threads 2; the CSV must not depend on that —
+    // including on the heterogeneous fleet.
+    for cluster in [
+        ClusterTopology::testbed_a(),
+        ClusterTopology::from_json_file(HETERO_JSON).unwrap(),
+    ] {
+        let mut configs = sweep::sweep_table3(&cluster, SweepFilter::Feasible);
+        configs.truncate(6);
+        let seq = sweep_csv(&run_sweep_with_threads(&configs, &cluster, false, 1).unwrap());
+        let par = sweep_csv(&run_sweep_with_threads(&configs, &cluster, false, 4).unwrap());
+        assert_eq!(seq, par, "{}", cluster.name);
+    }
 }

@@ -10,13 +10,13 @@
 
 use parm::bench::ModelCache;
 use parm::config::moe::ParallelDegrees;
-use parm::config::{ClusterProfile, MoeLayerConfig};
+use parm::config::{ClusterTopology, MoeLayerConfig};
 use parm::perfmodel::selection;
 use parm::schedule::{lowering, ScheduleKind};
 use parm::util::prng::Rng;
 
 fn selection_accuracy(skews: &[f64], seed: u64, label: &str) {
-    let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+    let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
     let cache = ModelCache::default();
     let mut rng = Rng::new(seed);
     let layouts = [(8usize, 2usize, 2usize), (8, 4, 2), (8, 2, 4), (8, 1, 2)];

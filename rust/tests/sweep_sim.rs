@@ -3,10 +3,10 @@
 
 use parm::bench::{run_sweep, run_sweep_with_threads, ModelCache};
 use parm::config::moe::ParallelDegrees;
-use parm::config::{sweep, ClusterProfile, MoeLayerConfig, SweepFilter};
+use parm::config::{sweep, ClusterTopology, MoeLayerConfig, SweepFilter};
 use parm::util::stats::mean;
 
-fn decimated(cluster: &ClusterProfile, step: usize) -> Vec<MoeLayerConfig> {
+fn decimated(cluster: &ClusterTopology, step: usize) -> Vec<MoeLayerConfig> {
     sweep::sweep_table3(cluster, SweepFilter::Feasible)
         .into_iter()
         .step_by(step)
@@ -17,7 +17,7 @@ fn decimated(cluster: &ClusterProfile, step: usize) -> Vec<MoeLayerConfig> {
 fn dedicated_schedules_always_beat_baseline() {
     // §IV-B: "the S2 schedule is always better than the baseline" (and S1
     // likewise) — checked across a decimated grid on both testbeds.
-    for cluster in [ClusterProfile::testbed_a(), ClusterProfile::testbed_b()] {
+    for cluster in [ClusterTopology::testbed_a(), ClusterTopology::testbed_b()] {
         let configs = decimated(&cluster, 23);
         assert!(configs.len() > 20, "decimation too aggressive");
         let results = run_sweep(&configs, &cluster, false).unwrap();
@@ -49,7 +49,7 @@ fn dedicated_schedules_always_beat_baseline() {
 #[test]
 fn speedups_grow_with_mp_and_esp() {
     // Table IV trend: larger N_MP / N_ESP ⇒ larger average speedup.
-    let cluster = ClusterProfile::testbed_b();
+    let cluster = ClusterTopology::testbed_b();
     let configs = decimated(&cluster, 11);
     let results = run_sweep(&configs, &cluster, false).unwrap();
     let avg = |n_mp: usize| {
@@ -68,7 +68,7 @@ fn speedups_grow_with_mp_and_esp() {
 fn comm_ratio_dominates_at_scale() {
     // Fig 1: 32-GPU baseline comm ratios live in the paper's 60–100%
     // band for the bulk of configs.
-    let cluster = ClusterProfile::testbed_b();
+    let cluster = ClusterTopology::testbed_b();
     let configs: Vec<MoeLayerConfig> = sweep::sweep_at_p(&cluster, 32, SweepFilter::Feasible)
         .into_iter()
         .step_by(17)
@@ -82,7 +82,7 @@ fn comm_ratio_dominates_at_scale() {
 #[test]
 fn parm_never_much_worse_than_best() {
     // Algorithm 1's pick must track min(S1, S2) with bounded regret.
-    let cluster = ClusterProfile::testbed_b();
+    let cluster = ClusterTopology::testbed_b();
     let configs = decimated(&cluster, 19);
     let results = run_sweep(&configs, &cluster, false).unwrap();
     for r in &results {
@@ -103,7 +103,7 @@ fn parm_never_much_worse_than_best() {
 #[test]
 fn saa_helps_on_average() {
     // §VI-C: S2-with-SAA ≥ S2-with-AAS on average (~1% in the paper).
-    let cluster = ClusterProfile::testbed_b();
+    let cluster = ClusterTopology::testbed_b();
     let configs: Vec<MoeLayerConfig> = decimated(&cluster, 13)
         .into_iter()
         .filter(|c| c.par.n_mp >= 2)
@@ -124,7 +124,7 @@ fn saa_helps_on_average() {
 fn parallel_sweep_is_byte_identical_to_sequential() {
     // The acceptance bar for the parallel runner: identical CaseResult
     // ordering and contents to the sequential runner, at several widths.
-    let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+    let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
     let configs = decimated(&cluster, 31);
     assert!(configs.len() >= 8, "decimation too aggressive");
     let seq = run_sweep_with_threads(&configs, &cluster, false, 1).unwrap();
@@ -141,7 +141,7 @@ fn parallel_sweep_is_byte_identical_to_sequential() {
 
 #[test]
 fn model_cache_covers_all_layouts() {
-    let cluster = ClusterProfile::testbed_b_subset(8).unwrap();
+    let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
     let configs = decimated(&cluster, 29);
     let cache = ModelCache::default();
     for c in &configs {
@@ -158,9 +158,9 @@ fn model_cache_covers_all_layouts() {
 fn table3_grid_counts_are_plausible() {
     // The paper reports 1296 valid runnable cases across its testbeds; our
     // feasibility filter should land in the same order of magnitude.
-    let b_all = sweep::sweep_table3(&ClusterProfile::testbed_b(), SweepFilter::All).len();
-    let a = sweep::sweep_table3(&ClusterProfile::testbed_a(), SweepFilter::Feasible).len();
-    let b = sweep::sweep_table3(&ClusterProfile::testbed_b(), SweepFilter::Feasible).len();
+    let b_all = sweep::sweep_table3(&ClusterTopology::testbed_b(), SweepFilter::All).len();
+    let a = sweep::sweep_table3(&ClusterTopology::testbed_a(), SweepFilter::Feasible).len();
+    let b = sweep::sweep_table3(&ClusterTopology::testbed_b(), SweepFilter::Feasible).len();
     let p = ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 };
     p.validate().unwrap();
     println!("feasible: A={a} B={b} (B unfiltered: {b_all})");

@@ -1,0 +1,214 @@
+//! Topology-redesign equivalence and heterogeneity acceptance tests.
+//!
+//! 1. **Homogeneous equivalence** — `ClusterTopology::homogeneous` must
+//!    reproduce the pre-redesign flat-`ClusterProfile` semantics exactly:
+//!    the per-pair link lookup equals the old two-scalar rule, and a
+//!    topology round-tripped through the per-node JSON document yields
+//!    byte-identical sweep CSV, identical `SimReport` timings and
+//!    identical `Prediction` values. This is what keeps the golden sweep
+//!    CSV stable across the API redesign.
+//! 2. **Heterogeneity acceptance** — a two-node-class fleet (fast +
+//!    straggler node) must produce a *different* `optimal_chunks` /
+//!    Algorithm-1 pick on the slow node than the homogeneous baseline,
+//!    pinned via the closed-form per-node API and the fitted
+//!    `Prediction`.
+
+use parm::bench::{run_sweep_with_threads, sweep_csv};
+use parm::config::cluster::NodeSpec;
+use parm::config::{
+    sweep, AlphaBeta, ClusterTopology, MoeLayerConfig, ParallelDegrees, SweepFilter,
+};
+use parm::perfmodel::{closedform, selection, PerfModel};
+use parm::schedule::{lowering, ScheduleKind};
+use parm::sim::dag::SimDag;
+use parm::sim::engine::Simulator;
+
+// ---- 1a. link lookup reproduces the old two-scalar rule ------------------
+
+#[test]
+fn homogeneous_link_rule_matches_flat_profile_scalars() {
+    // The pre-redesign cost rule: α_intra/β_intra iff rank/gpn matches,
+    // α_inter/β_inter otherwise, gpu_flops constant. Sweep a few shapes.
+    let (ai, bi) = (1.25e-5, 7.5e-10);
+    let (ax, bx) = (9.0e-5, 6.0e-9);
+    for (nodes, gpn) in [(1usize, 8usize), (2, 2), (2, 4), (3, 2), (8, 4)] {
+        let t = ClusterTopology::homogeneous(
+            "flat",
+            nodes,
+            gpn,
+            AlphaBeta::new(ai, bi),
+            AlphaBeta::new(ax, bx),
+            2.0e12,
+            4 << 30,
+        );
+        assert_eq!(t.total_gpus(), nodes * gpn);
+        for a in 0..t.total_gpus() {
+            assert_eq!(t.node_of(a), a / gpn, "old node_of rule");
+            assert_eq!(t.flops_of(a), 2.0e12);
+            for b in 0..t.total_gpus() {
+                let link = t.link(a, b);
+                if a == b {
+                    assert_eq!(link, AlphaBeta::ZERO);
+                } else if a / gpn == b / gpn {
+                    assert_eq!(link, AlphaBeta::new(ai, bi), "{a}->{b} intra");
+                } else {
+                    assert_eq!(link, AlphaBeta::new(ax, bx), "{a}->{b} inter");
+                }
+            }
+        }
+        // And the engine prices a transfer exactly as α + bytes·β of the
+        // matching class — the old engine's literal expression.
+        if t.total_gpus() >= 3 && nodes >= 2 {
+            let mut d = SimDag::new();
+            d.transfer(0, 1, 3e5, &[], "intra");
+            let r = Simulator::new(&t).run(&d);
+            assert_eq!(r.makespan, ai + 3e5 * bi);
+            let mut d2 = SimDag::new();
+            d2.transfer(0, gpn, 3e5, &[], "inter");
+            let r2 = Simulator::new(&t).run(&d2);
+            assert_eq!(r2.makespan, ax + 3e5 * bx);
+        }
+    }
+}
+
+// ---- 1b. per-node JSON spelling is behaviour-identical -------------------
+
+fn roundtrip(t: &ClusterTopology) -> ClusterTopology {
+    // Through the serialized per-node document — the same path
+    // `--cluster-json` files take.
+    ClusterTopology::from_json(&t.to_json()).expect("roundtrip parse")
+}
+
+#[test]
+fn json_spelling_yields_identical_sweep_csv_timings_and_prediction() {
+    for homo in [
+        ClusterTopology::testbed_a(),
+        ClusterTopology::testbed_b_subset(8).unwrap(),
+    ] {
+        let explicit = roundtrip(&homo);
+        assert_eq!(homo, explicit);
+
+        // Byte-identical sweep CSV over a pinned slice.
+        let mut configs = sweep::sweep_table3(&homo, SweepFilter::Feasible);
+        configs.truncate(6);
+        let a = sweep_csv(&run_sweep_with_threads(&configs, &homo, false, 2).unwrap());
+        let b = sweep_csv(&run_sweep_with_threads(&configs, &explicit, false, 2).unwrap());
+        assert_eq!(a, b, "{}", homo.name);
+
+        // Identical SimReport timings, task by task.
+        let c = MoeLayerConfig {
+            par: ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 },
+            b: 2,
+            l: 512,
+            e: 4,
+            m: 1024,
+            h: 1024,
+            k: 2,
+            f: 1.2,
+            dtype_bytes: 4,
+            skew: 0.0,
+        };
+        for kind in [
+            ScheduleKind::Baseline,
+            ScheduleKind::S1,
+            ScheduleKind::S2,
+            ScheduleKind::Pipelined { chunks: 3 },
+        ] {
+            let ra = lowering::simulate_iteration(kind, &c, &homo).unwrap();
+            let rb = lowering::simulate_iteration(kind, &c, &explicit).unwrap();
+            assert_eq!(ra.makespan, rb.makespan, "{kind:?}");
+            assert_eq!(ra.timings, rb.timings, "{kind:?}");
+        }
+
+        // Identical Prediction values from independently fitted models.
+        let par = c.par;
+        let ma = PerfModel::fit(&homo, par).unwrap();
+        let mb = PerfModel::fit(&explicit, par).unwrap();
+        let pa = selection::predict(&ma, &c);
+        let pb = selection::predict(&mb, &c);
+        assert_eq!(pa.t_baseline, pb.t_baseline);
+        assert_eq!(pa.t_d1, pb.t_d1);
+        assert_eq!(pa.t_d2, pb.t_d2);
+        assert_eq!(pa.t_ffn, pb.t_ffn);
+        assert_eq!(pa.t_sp, pb.t_sp);
+        assert_eq!(pa.t_sp_iter, pb.t_sp_iter);
+        assert_eq!(pa.sp_chunks, pb.sp_chunks);
+        assert_eq!(pa.bottleneck_node, pb.bottleneck_node);
+        assert_eq!(pa.best(), pb.best());
+    }
+}
+
+// ---- 2. heterogeneity changes the per-node selection ---------------------
+
+/// testbed-B-subset(8) with node 1 replaced by a 64× slower straggler.
+fn straggler_fleet(factor: f64) -> ClusterTopology {
+    let homo = ClusterTopology::testbed_b_subset(8).unwrap();
+    let fast = homo.node_specs()[0];
+    let slow = NodeSpec { gpu_flops: fast.gpu_flops / factor, ..fast };
+    ClusterTopology::new("b8_straggler", vec![fast, slow]).unwrap()
+}
+
+/// The comm-heavy shape the closed-form tests pin to r* = 1 / non-SP on
+/// the homogeneous testbed: tiny FFN, so pipelining has nothing to hide.
+fn light_cfg() -> MoeLayerConfig {
+    MoeLayerConfig {
+        par: ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 },
+        b: 2,
+        l: 256,
+        e: 4,
+        m: 1024,
+        h: 1024,
+        k: 2,
+        f: 1.2,
+        dtype_bytes: 4,
+        skew: 0.0,
+    }
+}
+
+#[test]
+fn straggler_node_flips_optimal_chunks_and_the_pick() {
+    let homo = ClusterTopology::testbed_b_subset(8).unwrap();
+    let het = straggler_fleet(64.0);
+    let c = light_cfg();
+
+    // Homogeneous baseline: no pipelining worth doing.
+    let (r_homo, _) = closedform::optimal_chunks(&homo, &c);
+    assert_eq!(r_homo, 1, "baseline should not pipeline this shape");
+    let (pick_homo, _) = closedform::choose_extended(&homo, &c);
+    assert!(!matches!(pick_homo, ScheduleKind::Pipelined { .. }), "{pick_homo:?}");
+
+    // The fast node of the mixed fleet agrees with the homogeneous
+    // baseline exactly (same links, same flops).
+    let (r_fast, t_fast) = closedform::optimal_chunks_on(&het, &c, 0);
+    assert_eq!((r_fast, t_fast), closedform::optimal_chunks(&homo, &c));
+    let (pick_fast, _) = closedform::choose_extended_on(&het, &c, 0);
+    assert_eq!(pick_fast, pick_homo);
+
+    // The straggler node's 64× deeper compute makes chunked overlap pay:
+    // a DIFFERENT r* and a DIFFERENT Algorithm-1 pick than the baseline.
+    let (r_slow, _) = closedform::optimal_chunks_on(&het, &c, 1);
+    assert!(r_slow > 1, "straggler should pipeline, got r={r_slow}");
+    assert_ne!(r_slow, r_homo, "slow-node r* must differ from the baseline");
+    let (pick_slow, _) = closedform::choose_extended_on(&het, &c, 1);
+    assert!(
+        matches!(pick_slow, ScheduleKind::Pipelined { .. }),
+        "straggler pick should be SP, got {pick_slow:?}"
+    );
+    assert_ne!(pick_slow, pick_homo);
+
+    // Fleet-level views follow the straggler.
+    assert_eq!(closedform::sp_bottleneck_node(&het, &c), 1);
+    let (r_fleet, _) = closedform::optimal_chunks(&het, &c);
+    assert!(r_fleet > 1, "fleet r* follows the straggler, got {r_fleet}");
+
+    // And the fitted path reports the straggler too.
+    let model = PerfModel::fit(&het, c.par).unwrap();
+    let pred = selection::predict(&model, &c);
+    assert_eq!(pred.bottleneck_node, 1, "{pred:?}");
+    assert!(pred.sp_chunks > 1, "{pred:?}");
+    assert!(
+        matches!(pred.best(), ScheduleKind::Pipelined { .. }),
+        "fitted fleet pick should be SP on the straggler fleet, got {:?}",
+        pred.best()
+    );
+}

@@ -10,7 +10,7 @@
 //! exact rather than capacity-rounded.
 
 use parm::config::moe::ParallelDegrees;
-use parm::config::{ClusterProfile, MoeLayerConfig};
+use parm::config::{ClusterTopology, MoeLayerConfig};
 use parm::moe::{reference_forward, run_schedule, LayerState, NativeBackend};
 use parm::schedule::{forward_ops, lower_ops, ScheduleKind};
 use parm::util::propcheck::{assert_close, check};
@@ -42,7 +42,7 @@ fn exact_cfg(rng: &mut Rng) -> MoeLayerConfig {
 
 #[test]
 fn prop_both_transports_log_identical_tag_volumes() {
-    let cluster = ClusterProfile::testbed_b();
+    let cluster = ClusterTopology::testbed_b();
     check("dag-data-comm-log-identical", 25, |rng| {
         let cfg = exact_cfg(rng);
         cfg.validate().map_err(|e| format!("invalid cfg {cfg:?}: {e}"))?;
@@ -93,7 +93,7 @@ fn prop_both_transports_log_identical_tag_volumes() {
 fn prop_s2_and_aas_share_wire_volume_per_tag_totals() {
     // SAA vs AAS may schedule messages differently but must move the same
     // bytes under each tag family (a2a + allgather).
-    let cluster = ClusterProfile::testbed_b();
+    let cluster = ClusterTopology::testbed_b();
     check("saa-aas-wire-volume", 15, |rng| {
         let cfg = exact_cfg(rng);
         let total = |kind: ScheduleKind| -> Result<f64, String> {
@@ -129,7 +129,7 @@ fn prop_skewed_routing_keeps_logs_identical_and_drops_consistent() {
     // of the drop behavior).
     use parm::moe::gating;
 
-    let cluster = ClusterProfile::testbed_b();
+    let cluster = ClusterTopology::testbed_b();
     check("skewed-dag-data-log-identical", 15, |rng| {
         let mut cfg = exact_cfg(rng);
         cfg.skew = *rng.choice(&[0.6f64, 1.2, 2.0]);
@@ -224,7 +224,7 @@ fn prop_sp_chunk_volumes_match_the_monolithic_fused_alltoall() {
     // tags without creating or losing any: on the timing plane, the
     // sp.dispatch.* family must total exactly one fused AlltoAll (and
     // likewise sp.combine.*), for every chunk count.
-    let cluster = ClusterProfile::testbed_b();
+    let cluster = ClusterTopology::testbed_b();
     check("sp-chunk-volume-conservation", 15, |rng| {
         let cfg = exact_cfg(rng);
         let fused_total = {
