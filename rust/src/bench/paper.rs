@@ -108,12 +108,13 @@ fn cell_results<'a>(
         .collect()
 }
 
-/// Table IV — averaged speedups of S1/S2/SP/Parm over the baseline per
-/// (N_MP, N_ESP) cell, on testbed A and testbed B (8/16/32 GPUs). The SP
-/// row extends the paper's table with the chunk-pipelined schedule at its
-/// predicted-optimal r; SP-uni is the uniform-span ablation (identical to
-/// SP on the paper's uniform-routing grid, and the contrast column for
-/// skewed sweeps).
+/// Table IV — averaged speedups of S1/S2/SP/SP2/Parm over the baseline
+/// per (N_MP, N_ESP) cell, on testbed A and testbed B (8/16/32 GPUs). The
+/// SP row extends the paper's table with the chunk-pipelined schedule at
+/// its predicted-optimal r; SP-uni is the uniform-span ablation
+/// (identical to SP on the paper's uniform-routing grid, and the contrast
+/// column for skewed sweeps); SP2 is the chunk-pipelined S2 whose
+/// per-chunk combine runs as a chunked SAA (SP × SAA composition).
 pub fn table4(reports: &Path) -> Result<String> {
     let tb_a = ClusterTopology::testbed_a();
     let tb_b = ClusterTopology::testbed_b();
@@ -139,6 +140,7 @@ pub fn table4(reports: &Path) -> Result<String> {
         ("S2", &CaseResult::speedup_s2),
         ("SP", &CaseResult::speedup_sp),
         ("SP-uni", &CaseResult::speedup_sp_uniform),
+        ("SP2", &CaseResult::speedup_sp2),
         ("Parm", &CaseResult::speedup_parm),
     ] {
         for (n_mp, n_esp) in sweep::table4_cells() {

@@ -38,7 +38,12 @@ pub struct CaseResult {
     pub t_sp_uniform: f64,
     /// The r* the fitted pipeline model picked for this configuration.
     pub sp_chunks: usize,
-    /// Generalized Algorithm 1's pick among S1, S2 and SP(r*).
+    /// Chunk-pipelined S2 (SP × SAA) at the predicted-optimal
+    /// `sp2_chunks` — the fourth schedule family.
+    pub t_sp2: f64,
+    /// The r* the fitted chunked-SAA pipeline model picked.
+    pub sp2_chunks: usize,
+    /// Generalized Algorithm 1's pick among S1, S2, SP(r*) and SP2(r*).
     pub parm_choice: ScheduleKind,
     /// Fig 1 quantity: fraction of baseline iteration not covered by
     /// compute.
@@ -50,6 +55,7 @@ impl CaseResult {
         match self.parm_choice {
             ScheduleKind::S1 => self.t_s1,
             ScheduleKind::Pipelined { .. } => self.t_sp,
+            ScheduleKind::PipelinedS2 { .. } => self.t_sp2,
             _ => self.t_s2,
         }
     }
@@ -70,6 +76,10 @@ impl CaseResult {
         self.t_baseline / self.t_sp_uniform
     }
 
+    pub fn speedup_sp2(&self) -> f64 {
+        self.t_baseline / self.t_sp2
+    }
+
     pub fn speedup_parm(&self) -> f64 {
         self.t_baseline / self.t_parm()
     }
@@ -81,11 +91,11 @@ impl CaseResult {
 /// runner produced.
 pub fn sweep_csv(results: &[CaseResult]) -> String {
     let mut s = String::from(
-        "config,t_baseline,t_s1,t_s2,t_s2_aas,t_sp,t_sp_uniform,sp_chunks,parm_choice\n",
+        "config,t_baseline,t_s1,t_s2,t_s2_aas,t_sp,t_sp_uniform,sp_chunks,t_sp2,sp2_chunks,parm_choice\n",
     );
     for r in results {
         s.push_str(&format!(
-            "{},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{},{}\n",
+            "{},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{},{:.6e},{},{}\n",
             r.cfg.id(),
             r.t_baseline,
             r.t_s1,
@@ -94,6 +104,8 @@ pub fn sweep_csv(results: &[CaseResult]) -> String {
             r.t_sp,
             r.t_sp_uniform,
             r.sp_chunks,
+            r.t_sp2,
+            r.sp2_chunks,
             r.parm_choice.name()
         ));
     }
@@ -163,6 +175,13 @@ pub fn run_case(
     } else {
         t_sp
     };
+    let sp2_chunks = pred.sp2_chunks;
+    let t_sp2 = lowering::simulate_iteration(
+        ScheduleKind::PipelinedS2 { chunks: sp2_chunks },
+        cfg,
+        cluster,
+    )?
+    .makespan;
     let parm_choice = pred.best();
     Ok(CaseResult {
         cfg: cfg.clone(),
@@ -173,6 +192,8 @@ pub fn run_case(
         t_sp,
         t_sp_uniform,
         sp_chunks,
+        t_sp2,
+        sp2_chunks,
         parm_choice,
         comm_ratio_baseline: base.comm_ratio(),
     })
@@ -281,8 +302,10 @@ mod tests {
         assert!(r.speedup_s1() > 1.0, "{r:?}");
         assert!(r.speedup_s2() > 1.0, "{r:?}");
         assert!(r.t_sp > 0.0 && r.sp_chunks >= 1, "{r:?}");
+        assert!(r.t_sp2 > 0.0 && r.sp2_chunks >= 1, "{r:?}");
         assert!(
-            r.speedup_parm() >= r.speedup_s1().min(r.speedup_s2()).min(r.speedup_sp()),
+            r.speedup_parm()
+                >= r.speedup_s1().min(r.speedup_s2()).min(r.speedup_sp()).min(r.speedup_sp2()),
             "{r:?}"
         );
         assert!(r.comm_ratio_baseline > 0.0 && r.comm_ratio_baseline < 1.0);
@@ -297,10 +320,10 @@ mod tests {
         let mut lines = csv.lines();
         assert_eq!(
             lines.next().unwrap(),
-            "config,t_baseline,t_s1,t_s2,t_s2_aas,t_sp,t_sp_uniform,sp_chunks,parm_choice"
+            "config,t_baseline,t_s1,t_s2,t_s2_aas,t_sp,t_sp_uniform,sp_chunks,t_sp2,sp2_chunks,parm_choice"
         );
         let row = lines.next().unwrap();
-        assert_eq!(row.split(',').count(), 9, "{row}");
+        assert_eq!(row.split(',').count(), 11, "{row}");
         assert!(row.starts_with("p8_mp2_esp2_"), "{row}");
     }
 

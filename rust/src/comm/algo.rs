@@ -237,6 +237,12 @@ fn saa_forward<T: Transport>(
         .find(|grp| grp.contains(&me))
         .expect("rank missing from mp partition");
     let payload = T::Chunk::concat(block);
+    // A fully-empty accumulated block (every slice zero bytes — a ragged
+    // or clamped-away SP2 chunk) stays off the wire, matching
+    // `pairwise_alltoall`'s empty-chunk rule.
+    if payload.bytes() == 0.0 {
+        return;
+    }
     for &peer in grp {
         if peer == me {
             continue;
@@ -338,7 +344,15 @@ pub fn saa<T: Transport>(
             let own = [inputs[i][i].clone()];
             saa_forward(t, a2a_group, mp_groups, &mut incident, i, &own, deps, tag_ag);
         }
-        let done = (0..g).map(|i| t.join(&incident[i], tag_a2a)).collect();
+        let done = (0..g)
+            .map(|i| {
+                if incident[i].is_empty() {
+                    t.join(deps, tag_a2a)
+                } else {
+                    t.join(&incident[i], tag_a2a)
+                }
+            })
+            .collect();
         return (outputs, done);
     }
 
@@ -359,6 +373,16 @@ pub fn saa<T: Transport>(
         for p in round..round + in_phase {
             for i in 0..g {
                 let dst = (i + p) % g;
+                // Ragged chunk partitions can carry zero-byte slices
+                // (buffers smaller than the group, clamped SP2 spans) —
+                // keep them off the wire like `pairwise_alltoall` does.
+                // The slice still joins the receiver's forward block (it
+                // contributes nothing to the payload) so the AllGather
+                // semantics are unchanged.
+                if inputs[i][dst].bytes() == 0.0 {
+                    phase_chunks[dst].push(inputs[i][dst].clone());
+                    continue;
+                }
                 let intra = t.same_node(a2a_group[i], a2a_group[dst]);
                 let prev = if intra { &mut prev_intra } else { &mut prev_inter };
                 let dep: Vec<T::Handle> = match &prev[i] {
@@ -375,17 +399,35 @@ pub fn saa<T: Transport>(
         }
         round += in_phase;
         // Forward the accumulated block (+ own slice in the first phase).
+        // When every receive of the phase was an off-the-wire empty slice,
+        // the forward falls back to the caller's deps so it cannot detach
+        // from the comm frontier.
         for i in 0..g {
             let mut block = std::mem::take(&mut phase_chunks[i]);
             if phase == 0 {
                 block.insert(0, inputs[i][i].clone());
             }
             let ready = std::mem::take(&mut phase_recv[i]);
-            saa_forward(t, a2a_group, mp_groups, &mut incident, i, &block, &ready, tag_ag);
+            if ready.is_empty() {
+                saa_forward(t, a2a_group, mp_groups, &mut incident, i, &block, deps, tag_ag);
+            } else {
+                saa_forward(t, a2a_group, mp_groups, &mut incident, i, &block, &ready, tag_ag);
+            }
         }
     }
 
-    let done = (0..g).map(|i| t.join(&incident[i], tag_a2a)).collect();
+    let done = (0..g)
+        .map(|i| {
+            // A member that touched no wire at all (every chunk empty)
+            // still carries the caller's deps, exactly like
+            // `pairwise_alltoall`'s all-empty completion.
+            if incident[i].is_empty() {
+                t.join(deps, tag_a2a)
+            } else {
+                t.join(&incident[i], tag_a2a)
+            }
+        })
+        .collect();
     (outputs, done)
 }
 

@@ -42,10 +42,13 @@ fn check_equal_lengths(world: &[Vec<f32>], group: &[usize]) -> usize {
     n
 }
 
-/// AllGather within `group` (in-place on the world).
+/// AllGather within `group` (in-place on the world). Member buffers may
+/// have unequal lengths (the ring is payload-opaque): every member ends
+/// with the group-order concatenation of whatever each member held —
+/// which is what a ragged SAA's MP-AllGather of unequal AlltoAll outputs
+/// needs.
 pub fn allgather(world: &mut [Vec<f32>], group: &[usize]) {
     check_group(world.len(), group);
-    check_equal_lengths(world, group);
     let mut t = DataTransport::new();
     let inputs: Vec<Vec<f32>> = group.iter().map(|&r| world[r].clone()).collect();
     let (outs, _) = algo::ring_allgather(&mut t, group, &inputs, &[], "allgather");
@@ -84,12 +87,16 @@ pub fn allreduce(world: &mut [Vec<f32>], group: &[usize]) {
     }
 }
 
-/// AlltoAll within `group`.
+/// AlltoAll within `group`. Buffers need not divide the group size: the
+/// split is ragged (chunk sizes differ by at most one element, the first
+/// `n % g` chunks one longer — [`split_chunks`]), zero-byte chunks stay
+/// off the wire inside [`algo::pairwise_alltoall`], and member `j` ends
+/// with `g` copies of chunk-`j`-sized data (an involution only when the
+/// chunk sizes are uniform).
 pub fn alltoall(world: &mut [Vec<f32>], group: &[usize]) {
     check_group(world.len(), group);
-    let n = check_equal_lengths(world, group);
+    check_equal_lengths(world, group);
     let g = group.len();
-    assert_eq!(n % g, 0, "alltoall needs length divisible by group size");
     let mut t = DataTransport::new();
     let inputs: Vec<Vec<Vec<f32>>> = group.iter().map(|&r| split_chunks(&world[r], g)).collect();
     let (outs, _) = algo::pairwise_alltoall(&mut t, group, &inputs, &[], "alltoall");
@@ -289,9 +296,20 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "divisible")]
-    fn alltoall_divisibility_checked() {
+    fn alltoall_supports_ragged_buffers() {
+        // n = 3, g = 2: ragged split [2, 1] — member 0 collects the two
+        // 2-element head chunks, member 1 the two 1-element tail chunks.
         let mut w = world_of(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
         alltoall(&mut w, &[0, 1]);
+        assert_eq!(w[0], vec![1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(w[1], vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn allgather_supports_unequal_member_buffers() {
+        let mut w = world_of(&[&[1.0, 2.0], &[9.0]]);
+        allgather(&mut w, &[0, 1]);
+        assert_eq!(w[0], vec![1.0, 2.0, 9.0]);
+        assert_eq!(w[1], vec![1.0, 2.0, 9.0]);
     }
 }

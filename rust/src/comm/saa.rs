@@ -12,6 +12,32 @@
 //! buffers, [`saa_lower`]/[`aas_lower`] over the simulator's transfer DAG.
 //! The data result must equal `alltoall(group)` followed by
 //! `allgather(mp_group)` — [`saa_reference`] — which the tests assert.
+//!
+//! # Phase structure, monolithic and chunked
+//!
+//! The phased algorithm groups the AlltoAll's `g-1` pairwise rounds into
+//! at most [`SAA_PHASES`] contiguous phases; when a member has received
+//! every slice of a phase it forwards the accumulated block to its MP
+//! peers, so the forwards (intra-node class) run concurrently with the
+//! next phase's AlltoAll rounds (inter-node dominant class). Buffers need
+//! NOT divide the group size: chunk partitions may be ragged (and a
+//! zero-byte slice stays off the wire, exactly like
+//! [`algo::pairwise_alltoall`]'s empty-chunk rule) — which is what lets
+//! chunked and load-skewed capacity spans compose with SAA.
+//!
+//! The SP2 schedule ([`crate::schedule::ops::ScheduleKind::PipelinedS2`])
+//! runs this same algorithm once per capacity chunk (`sp2.saa.k`): each
+//! chunk's combine AlltoAll phases forward into the MP-AllGather while
+//! the next chunk's expert FFN computes, composing the intra/inter
+//! link-class overlap with SP's compute/comm pipeline. The per-chunk SAA
+//! is the ONE algorithm below — the interpreter merely calls it with a
+//! chunk-sized payload and the pipelined region's frontiers.
+//!
+//! Every entry point validates that `mp_groups` PARTITIONS `a2a_group`
+//! ([`validate_mp_partition`]): an overlapping or incomplete partition
+//! would silently corrupt data-plane buffers (a rank would receive a
+//! peer's block twice, or never), so it panics with a clear message
+//! instead.
 
 use crate::config::ClusterTopology;
 use crate::sim::dag::{SimDag, TaskId};
@@ -19,26 +45,61 @@ use crate::sim::dag::{SimDag, TaskId};
 use super::algo;
 pub use super::algo::SAA_PHASES;
 use super::data;
-use super::transport::{DagTransport, DataTransport, Lump};
+use super::transport::{split_chunks, DagTransport, DataTransport, Lump};
+
+/// Check that `mp_groups` is a partition of `a2a_group`: every member of
+/// `a2a_group` appears in exactly one MP group, and no MP group contains a
+/// rank outside `a2a_group`. Anything else would corrupt the data plane
+/// (double-received or never-received AllGather blocks), so the SAA entry
+/// points refuse it up front.
+pub fn validate_mp_partition(a2a_group: &[usize], mp_groups: &[Vec<usize>]) -> Result<(), String> {
+    let mut seen: Vec<usize> = Vec::new();
+    for grp in mp_groups {
+        for &r in grp {
+            if !a2a_group.contains(&r) {
+                return Err(format!(
+                    "mp group member {r} is not in the a2a group — mp_groups must partition it"
+                ));
+            }
+            if seen.contains(&r) {
+                return Err(format!(
+                    "rank {r} appears in more than one mp group — overlapping partition"
+                ));
+            }
+            seen.push(r);
+        }
+    }
+    for &r in a2a_group {
+        if !seen.contains(&r) {
+            return Err(format!(
+                "a2a group member {r} is missing from the mp partition — incomplete partition"
+            ));
+        }
+    }
+    Ok(())
+}
 
 /// Data-plane SAA: the phased algorithm over real buffers. The result
 /// equals `alltoall(a2a_group)` then `allgather(mp_group)` for every
 /// member.
 ///
-/// `mp_groups` partitions `a2a_group` (each member appears in exactly one).
+/// `mp_groups` must partition `a2a_group` (validated — each member appears
+/// in exactly one group). Buffers need not divide the group size: the
+/// chunk split is ragged ([`split_chunks`] — sizes differ by at most one
+/// element), matching [`data::alltoall`]'s convention, and zero-byte
+/// chunks stay off the wire.
 pub fn saa_data(world: &mut [Vec<f32>], a2a_group: &[usize], mp_groups: &[Vec<usize>]) {
     let g = a2a_group.len();
     assert!(g > 0);
+    if let Err(e) = validate_mp_partition(a2a_group, mp_groups) {
+        panic!("saa_data: {e}");
+    }
     let n = world[a2a_group[0]].len();
     assert!(a2a_group.iter().all(|&r| world[r].len() == n));
-    assert_eq!(n % g, 0, "saa needs buffer divisible by a2a group size");
-    let chunk = n / g;
 
     let mut t = DataTransport::new();
-    let inputs: Vec<Vec<Vec<f32>>> = a2a_group
-        .iter()
-        .map(|&r| (0..g).map(|j| world[r][j * chunk..(j + 1) * chunk].to_vec()).collect())
-        .collect();
+    let inputs: Vec<Vec<Vec<f32>>> =
+        a2a_group.iter().map(|&r| split_chunks(&world[r], g)).collect();
     let (outs, _) = algo::saa(&mut t, a2a_group, mp_groups, &inputs, &[], "saa.a2a", "saa.ag", true);
     for (out, &r) in outs.into_iter().zip(a2a_group.iter()) {
         // out = per MP peer (MP order), that peer's AlltoAll output chunks.
@@ -74,6 +135,9 @@ pub fn saa_lower(
     tag_a2a: &'static str,
     tag_ag: &'static str,
 ) -> Vec<TaskId> {
+    if let Err(e) = validate_mp_partition(a2a_group, mp_groups) {
+        panic!("saa_lower: {e}");
+    }
     let mut t = DagTransport::new(dag, cluster);
     let g = a2a_group.len();
     let inputs = vec![vec![Lump(bytes_per_pair); g]; g];
@@ -93,6 +157,9 @@ pub fn aas_lower(
     tag_a2a: &'static str,
     tag_ag: &'static str,
 ) -> Vec<TaskId> {
+    if let Err(e) = validate_mp_partition(a2a_group, mp_groups) {
+        panic!("aas_lower: {e}");
+    }
     let mut t = DagTransport::new(dag, cluster);
     let g = a2a_group.len();
     let inputs = vec![vec![Lump(bytes_per_pair); g]; g];
@@ -129,6 +196,108 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn saa_data_supports_indivisible_buffers() {
+        // Regression: buffers NOT divisible by the AlltoAll group used to
+        // hard-panic (`assert_eq!(n % g, 0)`). The ragged split must still
+        // equal the composed reference collectives (which share the same
+        // ragged chunk convention) for every member.
+        for (g, n, m) in [(4usize, 7usize, 2usize), (4, 3, 2), (2, 5, 1), (4, 10, 4)] {
+            let world0: Vec<Vec<f32>> =
+                (0..g).map(|i| (0..n).map(|j| (i * 100 + j) as f32).collect()).collect();
+            let a2a_group: Vec<usize> = (0..g).collect();
+            let mp_groups: Vec<Vec<usize>> =
+                (0..g / m).map(|b| (b * m..(b + 1) * m).collect()).collect();
+            let mut via_saa = world0.clone();
+            saa_data(&mut via_saa, &a2a_group, &mp_groups);
+            let mut via_ref = world0.clone();
+            saa_reference(&mut via_ref, &a2a_group, &mp_groups);
+            for r in 0..g {
+                assert_eq!(via_saa[r], via_ref[r], "g={g} n={n} m={m} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn saa_all_empty_chunks_keep_completions_chained() {
+        // Zero-byte chunks stay off the wire (phased path, multi-node
+        // DAG), but an all-empty member's completion must still carry the
+        // caller's deps — a follow-up task chained on it cannot start
+        // before them (no detached frontier). This is the clamped-away
+        // SP2 tail chunk's shape.
+        let c = two_node_cluster();
+        let mut dag = SimDag::new();
+        let root = dag.transfer(0, 1, 1.0e6, &[], "seed");
+        let a2a: Vec<usize> = (0..8).collect();
+        let mp: Vec<Vec<usize>> = (0..4).map(|b| vec![2 * b, 2 * b + 1]).collect();
+        let done = {
+            let mut t = DagTransport::new(&mut dag, &c);
+            let inputs = vec![vec![Lump(0.0); 8]; 8];
+            algo::saa(&mut t, &a2a, &mp, &inputs, &[root], "a2a", "ag", true).1
+        };
+        assert_eq!(done.len(), 8);
+        // Follow-up on a DIFFERENT link so only the dependency (not link
+        // contention) can serialize it behind the seed transfer.
+        dag.transfer(2, 3, 1.0e6, &[done[0]], "after");
+        let log = dag.comm_log();
+        assert!(
+            log.iter().all(|(tag, _)| *tag == "seed" || *tag == "after"),
+            "empty SAA chunks must stay off the wire: {log:?}"
+        );
+        let r = Simulator::new(&c).run(&dag);
+        let mut solo = SimDag::new();
+        solo.transfer(0, 1, 1.0e6, &[], "seed");
+        let t_one = Simulator::new(&c).run(&solo).makespan;
+        assert!(
+            (r.makespan - 2.0 * t_one).abs() < 1e-12,
+            "all-empty SAA completion detached from its deps: {} vs {}",
+            r.makespan,
+            2.0 * t_one
+        );
+    }
+
+    #[test]
+    fn mp_partition_validation() {
+        let grp = [0usize, 1, 2, 3];
+        // Valid partitions.
+        assert!(validate_mp_partition(&grp, &[vec![0, 1], vec![2, 3]]).is_ok());
+        assert!(validate_mp_partition(&grp, &[vec![0], vec![1], vec![2], vec![3]]).is_ok());
+        // Overlapping: rank 1 in two groups.
+        let err = validate_mp_partition(&grp, &[vec![0, 1], vec![1, 2, 3]]).unwrap_err();
+        assert!(err.contains("overlapping"), "{err}");
+        // Duplicate within one group is also an overlap.
+        assert!(validate_mp_partition(&grp, &[vec![0, 0], vec![1, 2, 3]]).is_err());
+        // Incomplete: rank 3 uncovered.
+        let err = validate_mp_partition(&grp, &[vec![0, 1], vec![2]]).unwrap_err();
+        assert!(err.contains("incomplete"), "{err}");
+        // Foreign rank: 9 is not in the a2a group.
+        let err = validate_mp_partition(&grp, &[vec![0, 1], vec![2, 3, 9]]).unwrap_err();
+        assert!(err.contains("not in the a2a group"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping partition")]
+    fn saa_data_rejects_overlapping_partition() {
+        let mut world: Vec<Vec<f32>> = (0..4).map(|_| vec![0.0; 4]).collect();
+        saa_data(&mut world, &[0, 1, 2, 3], &[vec![0, 1], vec![1, 2, 3]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "incomplete partition")]
+    fn saa_lower_rejects_incomplete_partition() {
+        let c = two_node_cluster();
+        let mut dag = SimDag::new();
+        saa_lower(&mut dag, &c, &[0, 1, 2, 3], &[vec![0, 1]], 8.0, &[], "a2a", "ag");
+    }
+
+    #[test]
+    #[should_panic(expected = "not in the a2a group")]
+    fn aas_lower_rejects_foreign_rank() {
+        let c = two_node_cluster();
+        let mut dag = SimDag::new();
+        aas_lower(&mut dag, &c, &[0, 1], &[vec![0, 1, 5]], 8.0, &[], "a2a", "ag");
     }
 
     fn two_node_cluster_with_inter(inter: crate::config::AlphaBeta) -> ClusterTopology {

@@ -75,6 +75,43 @@ pub const SP_COMBINE: [&str; SP_MAX_CHUNKS] = [
     "sp.combine.6",
     "sp.combine.7",
 ];
+/// SP2 dispatch AlltoAll of chunk k (`sp2.dispatch.k`) — the pipelined-S2
+/// schedule's fused EP&ESP-AlltoAll restricted to one capacity span of the
+/// MP-split dispatch tensor.
+pub const SP2_DISPATCH: [&str; SP_MAX_CHUNKS] = [
+    "sp2.dispatch.0",
+    "sp2.dispatch.1",
+    "sp2.dispatch.2",
+    "sp2.dispatch.3",
+    "sp2.dispatch.4",
+    "sp2.dispatch.5",
+    "sp2.dispatch.6",
+    "sp2.dispatch.7",
+];
+/// SP2 expert-FFN compute of chunk k (`sp2.ffn.k`).
+pub const SP2_FFN: [&str; SP_MAX_CHUNKS] = [
+    "sp2.ffn.0",
+    "sp2.ffn.1",
+    "sp2.ffn.2",
+    "sp2.ffn.3",
+    "sp2.ffn.4",
+    "sp2.ffn.5",
+    "sp2.ffn.6",
+    "sp2.ffn.7",
+];
+/// SP2 chunked-SAA combine of chunk k (`sp2.saa.k`): the chunk's combine
+/// AlltoAll, whose phases forward into the MP-AllGather (the forwards are
+/// logged under [`MP_ALLGATHER`], exactly like the monolithic SAA).
+pub const SP2_SAA: [&str; SP_MAX_CHUNKS] = [
+    "sp2.saa.0",
+    "sp2.saa.1",
+    "sp2.saa.2",
+    "sp2.saa.3",
+    "sp2.saa.4",
+    "sp2.saa.5",
+    "sp2.saa.6",
+    "sp2.saa.7",
+];
 /// Gating network + top-k routing (compute).
 pub const GATE: &str = "gate";
 /// Expert FFN shards (compute).

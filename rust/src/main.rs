@@ -217,7 +217,7 @@ fn cmd_sim(rest: &[String]) -> Result<()> {
     specs.push(Spec::opt_default(
         "schedule",
         "parm",
-        "baseline|s1|s2|s2-aas|sp|spN|spuN|parm (sp = pipelined, N pins the chunk count, spu = uniform spans)",
+        "baseline|s1|s2|s2-aas|sp|spN|spuN|sp2|sp2N|parm (sp = pipelined, N pins the chunk count, spu = uniform spans, sp2 = pipelined S2 with chunked-SAA combines)",
     ));
     specs.push(Spec::opt_default(
         "spans",
@@ -282,6 +282,11 @@ fn resolve(
         ScheduleKind::PipelinedUniform { chunks: 0 } => {
             let (r, _) = closedform::optimal_chunks(cluster, cfg);
             Ok(ScheduleKind::PipelinedUniform { chunks: r })
+        }
+        // `sp2` with no pinned r: closed-form optimal chunked-SAA count.
+        ScheduleKind::PipelinedS2 { chunks: 0 } => {
+            let (r, _) = closedform::optimal_chunks_sp2(cluster, cfg);
+            Ok(ScheduleKind::PipelinedS2 { chunks: r })
         }
         k => Ok(k),
     }
@@ -363,6 +368,11 @@ fn cmd_choose(rest: &[String]) -> Result<()> {
         pred.sp_chunks,
         fmt_seconds(pred.t_sp)
     );
+    println!(
+        "t_SP2(r*={}) (pred.)   : {} (compute-inclusive, chunked-SAA combine)",
+        pred.sp2_chunks,
+        fmt_seconds(pred.t_sp2)
+    );
     if !cluster.is_homogeneous() {
         // Per-node view: on a mixed fleet the straggler paces the fleet
         // and its r* (even its pick) can differ from the fast nodes'.
@@ -430,9 +440,12 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
     let s2: Vec<f64> = results.iter().map(|r| r.speedup_s2()).collect();
     let sp: Vec<f64> = results.iter().map(|r| r.speedup_sp()).collect();
     let spu: Vec<f64> = results.iter().map(|r| r.speedup_sp_uniform()).collect();
+    let sp2: Vec<f64> = results.iter().map(|r| r.speedup_sp2()).collect();
     let pm: Vec<f64> = results.iter().map(|r| r.speedup_parm()).collect();
     let mut t = Table::new(&["schedule", "mean speedup", "min", "max"]).numeric();
-    for (name, v) in [("S1", &s1), ("S2", &s2), ("SP", &sp), ("SP-uni", &spu), ("Parm", &pm)] {
+    let rows =
+        [("S1", &s1), ("S2", &s2), ("SP", &sp), ("SP-uni", &spu), ("SP2", &sp2), ("Parm", &pm)];
+    for (name, v) in rows {
         t.row(&[
             name.into(),
             format!("{:.2}×", mean(v)),
@@ -498,6 +511,7 @@ fn write_sweep_bench_json(
                 ("s2_aas", Json::num(mean_of(&|r| r.t_s2_aas))),
                 ("sp", Json::num(mean_of(&|r| r.t_sp))),
                 ("sp_uniform", Json::num(mean_of(&|r| r.t_sp_uniform))),
+                ("sp2", Json::num(mean_of(&|r| r.t_sp2))),
                 ("parm", Json::num(mean_of(&|r| r.t_parm()))),
             ]),
         ),

@@ -111,7 +111,9 @@ pub fn run_schedule_measured(
 fn resolved(kind: ScheduleKind) -> Result<ScheduleKind> {
     match kind {
         ScheduleKind::Parm => bail!("resolve Parm to a concrete schedule via the perf model first"),
-        ScheduleKind::Pipelined { chunks: 0 } | ScheduleKind::PipelinedUniform { chunks: 0 } => {
+        ScheduleKind::Pipelined { chunks: 0 }
+        | ScheduleKind::PipelinedUniform { chunks: 0 }
+        | ScheduleKind::PipelinedS2 { chunks: 0 } => {
             bail!("resolve SP's chunk count r via the perf model first")
         }
         k => Ok(k),
@@ -219,14 +221,20 @@ struct SpStage {
     recv: Vec<Vec<Vec<f32>>>,
     /// Expert outputs per chunk per rank (same shape as `recv`).
     out: Vec<Vec<Vec<f32>>>,
-    /// Returned combine partials per chunk per rank.
+    /// Returned combine partials per chunk per rank: the (P, E_local,
+    /// rows, M) returned block for plain SP, the MP-peer-major
+    /// (N_MP, P, E_local, rows, M) gathered block for SP2 (each chunk's
+    /// SAA already all-gathered it).
     ret: Vec<Vec<Vec<f32>>>,
     /// Combines accepted so far; the region assembles at the last one.
     combines_done: usize,
+    /// Whether this is an SP2 (chunked-SAA) region — assembly then lands
+    /// at [`Stage::Gathered`] instead of [`Stage::Returned`].
+    saa: bool,
 }
 
 impl SpStage {
-    fn new(chunks: usize, p: usize) -> SpStage {
+    fn new(chunks: usize, p: usize, saa: bool) -> SpStage {
         SpStage {
             spans: vec![(0, 0); chunks],
             seen: vec![false; chunks],
@@ -235,6 +243,7 @@ impl SpStage {
             out: vec![vec![Vec::new(); p]; chunks],
             ret: vec![vec![Vec::new(); p]; chunks],
             combines_done: 0,
+            saa,
         }
     }
 }
@@ -465,6 +474,7 @@ impl<'a> DataMachine<'a> {
             .sp
             .take()
             .ok_or_else(|| anyhow::anyhow!("sp assembly without a pipelined region"))?;
+        ensure!(!sp.saa, "plain SP assembly on a chunked-SAA region");
         let c = self.cfg;
         let (p, m, cap) = (c.par.p, c.m, self.cap);
         ensure!(
@@ -491,6 +501,48 @@ impl<'a> DataMachine<'a> {
         }
         self.sources = p;
         self.stage = Stage::Returned;
+        Ok(())
+    }
+
+    /// Interleave the per-chunk gathered SAA blocks back into the full
+    /// MP-peer-major (N_MP, P, E_local, cap, M) buffer on every rank and
+    /// leave the machine exactly where a monolithic SAA combine would
+    /// have — at [`Stage::Gathered`], ready for S2's LocalCombine.
+    fn sp2_assemble(&mut self) -> Result<()> {
+        let sp = self
+            .sp
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("sp2 assembly without a pipelined region"))?;
+        ensure!(sp.saa, "sp2 assembly on a plain SP region");
+        let c = self.cfg;
+        let (p, m, cap) = (c.par.p, c.m, self.cap);
+        ensure!(
+            sp.claimed_rows >= cap,
+            "SP2 program covers {} capacity rows but the gate produced {cap}",
+            sp.claimed_rows
+        );
+        let e_local = c.experts_per_rank();
+        // Blocks of `rows·M` per chunk: one per (MP peer, source rank,
+        // local expert) triple, in that (MP-peer-major) order.
+        let blocks = c.par.n_mp * p * e_local;
+        for r in 0..p {
+            let mut full = vec![0.0f32; blocks * cap * m];
+            for (k, &(start, rows)) in sp.spans.iter().enumerate() {
+                if rows == 0 {
+                    continue;
+                }
+                let part = &sp.ret[k][r];
+                ensure!(part.len() == blocks * rows * m, "sp2 gathered chunk shape");
+                for blk in 0..blocks {
+                    let sbase = blk * rows * m;
+                    let dbase = (blk * cap + start) * m;
+                    full[dbase..dbase + rows * m].copy_from_slice(&part[sbase..sbase + rows * m]);
+                }
+            }
+            self.buf[r] = full;
+        }
+        self.sources = p;
+        self.stage = Stage::Gathered;
         Ok(())
     }
 
@@ -644,14 +696,16 @@ impl Machine<DataTransport> for DataMachine<'_> {
                     other => bail!("fused alltoall has no semantic at stage {other:?}"),
                 }
             }
-            Op::SpDispatch { index, of, bytes_per_pair } => {
+            Op::SpDispatch { index, of, bytes_per_pair }
+            | Op::Sp2Dispatch { index, of, bytes_per_pair } => {
                 ensure!(
                     self.stage == Stage::Dispatch,
-                    "sp.dispatch has no semantic at stage {:?}",
+                    "sp dispatch has no semantic at stage {:?}",
                     self.stage
                 );
                 if self.sp.is_none() {
-                    self.sp = Some(SpStage::new(of, self.cfg.par.p));
+                    let saa = matches!(op, Op::Sp2Dispatch { .. });
+                    self.sp = Some(SpStage::new(of, self.cfg.par.p, saa));
                 }
                 let (start, rows) = {
                     let cap = self.cap;
@@ -687,24 +741,24 @@ impl Machine<DataTransport> for DataMachine<'_> {
                     .map(|&r| self.fused_dispatch_chunks_span(r, start, rows))
                     .collect())
             }
-            Op::SpCombine { index, .. } => {
+            Op::SpCombine { index, .. } | Op::Sp2Saa { index, .. } => {
                 ensure!(
                     self.stage == Stage::Dispatch,
-                    "sp.combine has no semantic at stage {:?}",
+                    "sp combine has no semantic at stage {:?}",
                     self.stage
                 );
                 let outs = {
                     let sp = self
                         .sp
                         .as_mut()
-                        .ok_or_else(|| anyhow::anyhow!("sp.combine before any sp.dispatch"))?;
-                    ensure!(index < sp.out.len(), "sp.combine chunk {index} out of range");
+                        .ok_or_else(|| anyhow::anyhow!("sp combine before any dispatch"))?;
+                    ensure!(index < sp.out.len(), "sp combine chunk {index} out of range");
                     std::mem::take(&mut sp.out[index])
                 };
-                ensure!(outs.len() == self.cfg.par.p, "sp.combine expects a computed chunk");
+                ensure!(outs.len() == self.cfg.par.p, "sp combine expects a computed chunk");
                 let mut ins = Vec::with_capacity(g);
                 for &r in grp {
-                    ins.push(Self::equal_chunks(&outs[r], g, "sp.combine")?);
+                    ins.push(Self::equal_chunks(&outs[r], g, op.tag())?);
                 }
                 Ok(ins)
             }
@@ -729,23 +783,26 @@ impl Machine<DataTransport> for DataMachine<'_> {
                 }
                 Ok(())
             }
-            // SP chunks land in their chunk-indexed staging slots, not the
-            // primary buffer (which still holds the dispatch tensor).
-            Op::SpDispatch { index, .. } => {
+            // SP/SP2 chunks land in their chunk-indexed staging slots, not
+            // the primary buffer (which still holds the dispatch tensor).
+            Op::SpDispatch { index, .. } | Op::Sp2Dispatch { index, .. } => {
                 let sp = self
                     .sp
                     .as_mut()
-                    .ok_or_else(|| anyhow::anyhow!("sp.dispatch accepted without a region"))?;
+                    .ok_or_else(|| anyhow::anyhow!("sp dispatch accepted without a region"))?;
                 for (out, &r) in outputs.into_iter().zip(grp.iter()) {
                     sp.recv[index][r] = out.concat();
                 }
                 Ok(())
             }
-            Op::SpCombine { index, .. } => {
+            // For Sp2Saa the accepted block is the interpreter's MP-peer-
+            // major flattening of the chunked SAA's AllGather result —
+            // (N_MP, P, E_local, rows, M) — stored as-is for assembly.
+            Op::SpCombine { index, .. } | Op::Sp2Saa { index, .. } => {
                 let sp = self
                     .sp
                     .as_mut()
-                    .ok_or_else(|| anyhow::anyhow!("sp.combine accepted without a region"))?;
+                    .ok_or_else(|| anyhow::anyhow!("sp combine accepted without a region"))?;
                 for (out, &r) in outputs.into_iter().zip(grp.iter()) {
                     sp.ret[index][r] = out.concat();
                 }
@@ -759,7 +816,9 @@ impl Machine<DataTransport> for DataMachine<'_> {
         match *op {
             Op::Gate { .. } => self.gate(),
             Op::ExpertFfn { .. } => self.expert_ffn(),
-            Op::SpExpertFfn { index, .. } => self.sp_expert_ffn(index),
+            Op::SpExpertFfn { index, .. } | Op::Sp2ExpertFfn { index, .. } => {
+                self.sp_expert_ffn(index)
+            }
             Op::MpSplit { .. } => self.mp_split(),
             Op::EspSplit { .. } => self.esp_split(),
             Op::LocalCombine { .. } => self.local_combine(),
@@ -799,21 +858,25 @@ impl Machine<DataTransport> for DataMachine<'_> {
                 ensure!(self.stage == Stage::ExpertOut, "saa/aas combine after experts");
                 self.stage = Stage::Gathered;
             }
-            Op::SpCombine { of, .. } => {
+            Op::SpCombine { of, .. } | Op::Sp2Saa { of, .. } => {
                 ensure!(
                     self.stage == Stage::Dispatch,
-                    "sp.combine finished outside the pipelined region"
+                    "sp combine finished outside the pipelined region"
                 );
                 let done = {
                     let sp = self
                         .sp
                         .as_mut()
-                        .ok_or_else(|| anyhow::anyhow!("sp.combine finished without a region"))?;
+                        .ok_or_else(|| anyhow::anyhow!("sp combine finished without a region"))?;
                     sp.combines_done += 1;
                     sp.combines_done == of
                 };
                 if done {
-                    self.sp_assemble()?;
+                    if matches!(*op, Op::Sp2Saa { .. }) {
+                        self.sp2_assemble()?;
+                    } else {
+                        self.sp_assemble()?;
+                    }
                 }
             }
             _ => {}
@@ -867,6 +930,10 @@ mod tests {
             // depend on how the capacity dimension is pipelined.
             ScheduleKind::Pipelined { chunks: 2 },
             ScheduleKind::Pipelined { chunks: 3 },
+            // SP2: the chunked-SAA composition must be just as invisible
+            // to the numerics, even and ragged alike.
+            ScheduleKind::PipelinedS2 { chunks: 2 },
+            ScheduleKind::PipelinedS2 { chunks: 3 },
         ] {
             let res = run_schedule(kind, &state, &mut backend).unwrap();
             assert_eq!(res.dropped, 0, "{kind:?} dropped tokens");
@@ -945,6 +1012,23 @@ mod tests {
                 tags::MP_ALLGATHER
             ]
         );
+
+        // SP2: per-chunk dispatch and SAA entries in emission order; every
+        // chunk's MP forwards aggregate under the one mp.allgather tag,
+        // first touched by chunk 0's SAA.
+        let res =
+            run_schedule(ScheduleKind::PipelinedS2 { chunks: 2 }, &state, &mut backend).unwrap();
+        let tags_seen: Vec<&str> = res.comm_log.iter().map(|(t, _)| *t).collect();
+        assert_eq!(
+            tags_seen,
+            vec![
+                "sp2.dispatch.0",
+                "sp2.dispatch.1",
+                "sp2.saa.0",
+                tags::MP_ALLGATHER,
+                "sp2.saa.1"
+            ]
+        );
     }
 
     #[test]
@@ -971,6 +1055,7 @@ mod tests {
             ScheduleKind::Pipelined { chunks: 2 },
             ScheduleKind::Pipelined { chunks: 4 },
             ScheduleKind::PipelinedUniform { chunks: 4 },
+            ScheduleKind::PipelinedS2 { chunks: 3 },
         ] {
             let res = run_schedule(kind, &state, &mut backend).unwrap();
             assert_eq!(res.dropped, 0, "{kind:?} dropped under generous capacity");
@@ -1083,6 +1168,7 @@ mod tests {
             ScheduleKind::S1,
             ScheduleKind::Pipelined { chunks: 2 },
             ScheduleKind::Pipelined { chunks: 3 },
+            ScheduleKind::PipelinedS2 { chunks: 3 },
         ] {
             let plain = run_schedule(kind, &state, &mut backend).unwrap();
             let measured = run_schedule_measured(kind, &state, &mut backend).unwrap();

@@ -21,15 +21,18 @@
 //! cross-node chunks each way.
 //!
 //! Compute-inclusive terms come in two forms: the fleet-level functions
-//! (`t_ffn_pausemp`, `sp_pipeline`, `optimal_chunks`, `choose_extended`)
-//! evaluate the **bottleneck node** (max over the nodes hosting the
-//! layer), and `*_on`-suffixed variants evaluate one node — on a
-//! heterogeneous fleet the SP chunk count r* and even Algorithm 1's pick
-//! can differ per node, which the per-node API exposes
-//! ([`optimal_chunks_on`], [`choose_extended_on`],
-//! [`sp_bottleneck_node`]). The tests pin this model to the
-//! discrete-event simulator within a small tolerance — the "theory
-//! matches practice" check the paper argues informally in §IV.
+//! (`t_ffn_pausemp`, `sp_pipeline`, `sp2_pipeline`, `optimal_chunks`,
+//! `optimal_chunks_sp2`, `choose_extended`) evaluate the **bottleneck
+//! node** (max over the nodes hosting the layer), and `*_on`-suffixed
+//! variants evaluate one node — on a heterogeneous fleet the chunk counts
+//! r* and even Algorithm 1's pick can differ per node, which the per-node
+//! API exposes ([`optimal_chunks_on`], [`optimal_chunks_sp2_on`],
+//! [`choose_extended_on`], [`sp_bottleneck_node`]). Algorithm 1 is the
+//! argmin over the four-member family {S1, S2, SP(r*), SP2(r*)} — SP2
+//! being the chunk-pipelined S2 whose per-chunk combine is a chunked SAA.
+//! The tests pin this model to the discrete-event simulator within a
+//! small tolerance — the "theory matches practice" check the paper argues
+//! informally in §IV.
 
 use crate::cluster::{GroupKind, ProcessGroups};
 use crate::config::{ClusterTopology, MoeLayerConfig};
@@ -171,27 +174,34 @@ pub fn t_d1(cluster: &ClusterTopology, c: &MoeLayerConfig) -> f64 {
     2.0 * fused + ag
 }
 
+/// Exposed fraction of an SAA-overlapped MP-AllGather: on a single-node
+/// group there is no second link class (SAA degrades to AAS — see
+/// `comm::saa`) so the whole AllGather is exposed; across nodes only the
+/// last phase's forwards are (1/[`crate::comm::saa::SAA_PHASES`]). Shared
+/// by `t_D2` and the chunked-SAA terms of `t_SP2` so the monolithic and
+/// pipelined S2 estimates cannot diverge on the overlap assumption.
+fn saa_exposed_fraction(cluster: &ClusterTopology, world: &[usize]) -> f64 {
+    let single_node = world
+        .iter()
+        .all(|&r| cluster.node_of(r) == cluster.node_of(world[0]));
+    if single_node {
+        1.0
+    } else {
+        1.0 / crate::comm::saa::SAA_PHASES as f64
+    }
+}
+
 /// Analytical `t_D2` (Eq. 14): dispatch AlltoAll + overlapped combine.
 /// The overlap term is bounded below by the fused AlltoAll alone and
 /// above by the AAS sequence; we take the paper's assumption that the
-/// AllGather hides except for its non-overlappable tail on single-node
-/// groups (where SAA degrades to AAS — see `comm::saa`).
+/// AllGather hides except for its non-overlappable tail
+/// ([`saa_exposed_fraction`]).
 pub fn t_d2(cluster: &ClusterTopology, c: &MoeLayerConfig) -> f64 {
     let groups = ProcessGroups::new(c.par).expect("valid degrees");
     let world = groups.world();
     let fused = a2a_pairwise(cluster, &world, ops::bytes_fused_a2a_per_pair(c));
     let ag = ag_mp(cluster, c, ops::bytes_mp_ag_s2_per_rank(c) * c.par.n_mp as f64);
-    let single_node = world
-        .iter()
-        .all(|&r| cluster.node_of(r) == cluster.node_of(world[0]));
-    if single_node {
-        // No second link class: combine = fused A2A then AG (AAS).
-        2.0 * fused + ag
-    } else {
-        // AG overlaps the inter-dominant combine; only the last phase's
-        // forwards are exposed (1/SAA_PHASES of the AG).
-        2.0 * fused + ag / crate::comm::saa::SAA_PHASES as f64
-    }
+    2.0 * fused + saa_exposed_fraction(cluster, &world) * ag
 }
 
 /// Closed-form Algorithm 1: no fitting, no simulation.
@@ -294,23 +304,126 @@ pub fn pipeline_makespan(
     comm: impl Fn((usize, usize)) -> f64,
     ffn: impl Fn((usize, usize)) -> f64,
 ) -> f64 {
+    pipeline_makespan_asym(spans, &comm, &comm, ffn)
+}
+
+/// [`pipeline_makespan`] with *asymmetric* per-chunk communication costs:
+/// `dispatch` prices chunk k's dispatch AlltoAll and `combine` its return
+/// leg. SP uses one cost for both (the fused AlltoAll is symmetric); SP2's
+/// combine leg is the chunked SAA — the AlltoAll plus its exposed
+/// MP-AllGather tail — so the two directions genuinely differ there.
+pub fn pipeline_makespan_asym(
+    spans: &[(usize, usize)],
+    dispatch: impl Fn((usize, usize)) -> f64,
+    combine: impl Fn((usize, usize)) -> f64,
+    ffn: impl Fn((usize, usize)) -> f64,
+) -> f64 {
     let r = spans.len();
     if r == 0 {
         return 0.0;
     }
     let mut disp_done = vec![0.0f64; r];
-    let mut comm_t = comm(spans[0]);
+    let mut comm_t = dispatch(spans[0]);
     disp_done[0] = comm_t;
     let mut comp_t = 0.0f64;
     for k in 0..r {
         if k + 1 < r {
-            comm_t += comm(spans[k + 1]);
+            comm_t += dispatch(spans[k + 1]);
             disp_done[k + 1] = comm_t;
         }
         comp_t = comp_t.max(disp_done[k]) + ffn(spans[k]);
-        comm_t = comm_t.max(comp_t) + comm(spans[k]);
+        comm_t = comm_t.max(comp_t) + combine(spans[k]);
     }
     comm_t.max(comp_t)
+}
+
+/// Analytical `t_SP2(r)`: the chunk-pipelined S2 region — dispatch,
+/// compute and *chunked-SAA* combine — at the bottleneck node. Unlike
+/// [`t_sp`] there is no AG epilogue: each chunk's SAA already forwards its
+/// combine output into the MP-AllGather, so the only AllGather cost is the
+/// per-chunk exposed tail ([`saa_exposed_fraction`]). At `r = 1` this is
+/// exactly `t_D2 + t_FFN` — SP2(1) is S2's structure with the compute
+/// term made explicit.
+pub fn t_sp2(cluster: &ClusterTopology, c: &MoeLayerConfig, chunks: usize) -> f64 {
+    sp2_pipeline(cluster, c, chunks, 1.0)
+}
+
+/// The SP2 region at the bottleneck node (see [`sp_pipeline`] for why one
+/// node suffices).
+pub fn sp2_pipeline(
+    cluster: &ClusterTopology,
+    c: &MoeLayerConfig,
+    chunks: usize,
+    ffn_scale: f64,
+) -> f64 {
+    sp2_pipeline_on(cluster, c, chunks, ffn_scale, sp_bottleneck_node(cluster, c))
+}
+
+/// The SP2 region as one node experiences it: the chunk AlltoAlls and SAA
+/// forwards are global collectives, the chunk FFNs run at this node's
+/// throughput. Each chunk's combine leg is priced as its AlltoAll plus
+/// the exposed fraction of its MP-AllGather slice (the chunk's share of
+/// S2's AG volume, α included per chunk — phased forwards hide the rest
+/// on the second link class).
+pub fn sp2_pipeline_on(
+    cluster: &ClusterTopology,
+    c: &MoeLayerConfig,
+    chunks: usize,
+    ffn_scale: f64,
+    node: usize,
+) -> f64 {
+    let groups = ProcessGroups::new(c.par).expect("valid degrees");
+    let world = groups.world();
+    let cap = c.t_pausemp();
+    let spans = ops::sp_spans(c, cap, ops::sp_clamp_chunks(c, chunks));
+    let flops = cluster.node(node).gpu_flops;
+    let frac = saa_exposed_fraction(cluster, &world);
+    let x_ag_full = ops::bytes_mp_ag_s2_per_rank(c) * c.par.n_mp as f64;
+    let dispatch = |span: (usize, usize)| {
+        a2a_pairwise(cluster, &world, ops::bytes_sp_chunk_per_pair(c, span.1))
+    };
+    let combine = |span: (usize, usize)| {
+        let ag_chunk = ag_mp(cluster, c, x_ag_full * span.1 as f64 / cap.max(1) as f64);
+        dispatch(span) + frac * ag_chunk
+    };
+    let ffn =
+        |span: (usize, usize)| ffn_scale * ops::sp_chunk_flops_span(c, cap, span) / flops;
+    pipeline_makespan_asym(&spans, &dispatch, &combine, ffn)
+}
+
+/// Per-iteration (fwd + bwd) SP2 estimate at one node: forward pipeline
+/// plus backward pipeline at 2× compute. No AG epilogues — the chunked
+/// SAAs carry the (mirrored) AllGather/ReduceScatter cost inside the
+/// region on both passes.
+pub fn t_sp2_iteration_on(
+    cluster: &ClusterTopology,
+    c: &MoeLayerConfig,
+    chunks: usize,
+    node: usize,
+) -> f64 {
+    sp2_pipeline_on(cluster, c, chunks, 1.0, node) + sp2_pipeline_on(cluster, c, chunks, 2.0, node)
+}
+
+/// [`t_sp2_iteration_on`] at the bottleneck node.
+pub fn t_sp2_iteration(cluster: &ClusterTopology, c: &MoeLayerConfig, chunks: usize) -> f64 {
+    t_sp2_iteration_on(cluster, c, chunks, sp_bottleneck_node(cluster, c))
+}
+
+/// Closed-form optimal SP2 chunk count for the fleet: argmin of
+/// [`t_sp2_iteration`] over `1..=SP_MAX_CHUNKS`. Returns
+/// `(r*, t_SP2_iter(r*))`.
+pub fn optimal_chunks_sp2(cluster: &ClusterTopology, c: &MoeLayerConfig) -> (usize, f64) {
+    argmin_chunks(c, |r| t_sp2_iteration(cluster, c, r))
+}
+
+/// Per-node optimal SP2 chunk count — the `*_on` variant of
+/// [`optimal_chunks_sp2`], mirroring [`optimal_chunks_on`].
+pub fn optimal_chunks_sp2_on(
+    cluster: &ClusterTopology,
+    c: &MoeLayerConfig,
+    node: usize,
+) -> (usize, f64) {
+    argmin_chunks(c, |r| t_sp2_iteration_on(cluster, c, r, node))
 }
 
 /// Per-iteration (fwd + bwd) SP estimate at one node: that node's forward
@@ -351,19 +464,29 @@ pub fn argmin_chunks(c: &MoeLayerConfig, estimate: impl Fn(usize) -> f64) -> (us
 }
 
 /// The ONE generalized Algorithm-1 decision rule, over per-iteration
-/// estimates for S1, S2 and SP(r*): SP wins only when strictly better and
-/// genuinely pipelined (r* > 1 — SP(1) is S1's structure with no
-/// overlap); otherwise the paper's t1 ≤ t2 tie-break. Shared by the
+/// estimates for S1, S2, SP(r*) and SP2(r*): a pipelined family wins only
+/// when strictly better than every unchunked candidate and genuinely
+/// pipelined (r* > 1 — SP(1)/SP2(1) are S1/S2's structures with no
+/// overlap); among the two pipelined winners the faster takes it, SP on a
+/// tie; otherwise the paper's t1 ≤ t2 tie-break. Shared by the
 /// closed-form and fitted selectors so they cannot diverge.
-pub fn decide(t1: f64, t2: f64, r: usize, t_sp_iter: f64) -> (crate::schedule::ScheduleKind, f64) {
+pub fn decide(
+    t1: f64,
+    t2: f64,
+    r_sp: usize,
+    t_sp_iter: f64,
+    r_sp2: usize,
+    t_sp2_iter: f64,
+) -> (crate::schedule::ScheduleKind, f64) {
     use crate::schedule::ScheduleKind;
-    if r > 1 && t_sp_iter < t1 && t_sp_iter < t2 {
-        (ScheduleKind::Pipelined { chunks: r }, t_sp_iter)
-    } else if t1 <= t2 {
-        (ScheduleKind::S1, t1)
-    } else {
-        (ScheduleKind::S2, t2)
+    let mut best = if t1 <= t2 { (ScheduleKind::S1, t1) } else { (ScheduleKind::S2, t2) };
+    if r_sp > 1 && t_sp_iter < best.1 {
+        best = (ScheduleKind::Pipelined { chunks: r_sp }, t_sp_iter);
     }
+    if r_sp2 > 1 && t_sp2_iter < best.1 {
+        best = (ScheduleKind::PipelinedS2 { chunks: r_sp2 }, t_sp2_iter);
+    }
+    best
 }
 
 /// Closed-form optimal chunk count for the fleet: argmin of
@@ -416,7 +539,8 @@ pub fn choose_extended(
     let t1 = 2.0 * t_d1(cluster, c) + 3.0 * f;
     let t2 = 2.0 * t_d2(cluster, c) + 3.0 * f;
     let (r, tsp) = optimal_chunks(cluster, c);
-    decide(t1, t2, r, tsp)
+    let (r2, tsp2) = optimal_chunks_sp2(cluster, c);
+    decide(t1, t2, r, tsp, r2, tsp2)
 }
 
 /// Algorithm 1 as one node would run it: same communication terms (the
@@ -432,7 +556,8 @@ pub fn choose_extended_on(
     let t1 = 2.0 * t_d1(cluster, c) + 3.0 * f;
     let t2 = 2.0 * t_d2(cluster, c) + 3.0 * f;
     let (r, tsp) = optimal_chunks_on(cluster, c, node);
-    decide(t1, t2, r, tsp)
+    let (r2, tsp2) = optimal_chunks_sp2_on(cluster, c, node);
+    decide(t1, t2, r, tsp, r2, tsp2)
 }
 
 #[cfg(test)]
@@ -550,6 +675,36 @@ mod tests {
     }
 
     #[test]
+    fn t_sp2_with_one_chunk_equals_t_d2_plus_ffn() {
+        // SP2(1) = dispatch, FFN, SAA combine — exactly Eq. 14's structure
+        // with the compute term made explicit (the exposed-AG assumption
+        // is shared through `saa_exposed_fraction`).
+        let cluster = ClusterTopology::testbed_b();
+        let c = cfg();
+        let lhs = t_sp2(&cluster, &c, 1);
+        let rhs = t_d2(&cluster, &c) + t_ffn_pausemp(&cluster, &c);
+        assert!((lhs - rhs).abs() / rhs < 1e-12, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn sp2_per_node_terms_reduce_on_homogeneous_fleet() {
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+        let c = MoeLayerConfig {
+            par: ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 },
+            ..cfg()
+        };
+        let fleet = (t_sp2_iteration(&cluster, &c, 3), optimal_chunks_sp2(&cluster, &c));
+        for node in cluster.nodes_for(8) {
+            assert_eq!(t_sp2_iteration_on(&cluster, &c, 3, node), fleet.0);
+            assert_eq!(optimal_chunks_sp2_on(&cluster, &c, node), fleet.1);
+        }
+        // The SP2 iteration argmin never exceeds SP2(1) = t_D2-structured.
+        let (r2, t2) = optimal_chunks_sp2(&cluster, &c);
+        assert!(r2 >= 1 && r2 <= crate::comm::tags::SP_MAX_CHUNKS);
+        assert!(t2 <= t_sp2_iteration(&cluster, &c, 1) + 1e-12);
+    }
+
+    #[test]
     fn chunk_choice_tracks_compute_intensity() {
         let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
         // Compute-heavy: huge expert hidden size ⇒ pipelining pays, r* > 1
@@ -569,10 +724,15 @@ mod tests {
         let (r_heavy, t_heavy) = optimal_chunks(&cluster, &heavy);
         assert!(r_heavy > 1, "compute-heavy config should pipeline, got r={r_heavy}");
         assert!(t_heavy < t_sp_iteration(&cluster, &heavy, 1));
+        // With SP2 in the candidate set the pick may be either pipelined
+        // family — what matters here is that a chunked schedule wins.
         let (pick, _) = choose_extended(&cluster, &heavy);
         assert!(
-            matches!(pick, ScheduleKind::Pipelined { chunks } if chunks == r_heavy),
-            "expected SP, got {pick:?}"
+            matches!(
+                pick,
+                ScheduleKind::Pipelined { chunks } if chunks == r_heavy
+            ) || matches!(pick, ScheduleKind::PipelinedS2 { chunks } if chunks > 1),
+            "expected a pipelined pick, got {pick:?}"
         );
 
         // Comm-heavy with tiny FFN: the per-chunk α overhead dominates any
@@ -592,7 +752,13 @@ mod tests {
         let (r_light, _) = optimal_chunks(&cluster, &light);
         assert_eq!(r_light, 1, "comm-heavy config should not pipeline");
         let (pick, _) = choose_extended(&cluster, &light);
-        assert!(!matches!(pick, ScheduleKind::Pipelined { .. }), "got {pick:?}");
+        assert!(
+            !matches!(
+                pick,
+                ScheduleKind::Pipelined { .. } | ScheduleKind::PipelinedS2 { .. }
+            ),
+            "got {pick:?}"
+        );
     }
 
     /// testbed-B-subset(8)'s shape with node 1 slowed down by `factor`.

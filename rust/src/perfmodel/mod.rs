@@ -1,6 +1,6 @@
 //! α-β performance models and the automatic schedule selection
-//! (paper §V, Algorithm 1, generalized to the SP family and to
-//! heterogeneous topologies).
+//! (paper §V, Algorithm 1, generalized to the chunk-pipelined SP/SP2
+//! families and to heterogeneous topologies).
 //!
 //! Each collective, in the process-group layout a configuration induces,
 //! is measured in the simulator over a range of message sizes; ordinary
@@ -12,9 +12,11 @@
 //! per-node GPU throughputs of the layout.
 //!
 //! The closed forms `t_B`, `t_D1`, `t_D2` (Eqs. 1, 13, 14) plus the
-//! pipelined `t_SP(r)` recurrence are then compared online to pick S1, S2
-//! or SP(r*) — SP's chunk count is itself chosen in closed form (argmin
-//! over `1..=SP_MAX_CHUNKS`). On a mixed fleet the compute-inclusive
+//! pipelined `t_SP(r)` and `t_SP2(r)` recurrences (the latter with an
+//! asymmetric combine leg — the chunked SAA's AlltoAll plus its exposed
+//! MP-AllGather tail) are then compared online to pick S1, S2, SP(r*) or
+//! SP2(r*) — each pipelined family's chunk count is itself chosen in
+//! closed form (argmin over `1..=SP_MAX_CHUNKS`). On a mixed fleet the compute-inclusive
 //! terms are evaluated **per node** (the collectives are global, the FFN
 //! runs at each node's own throughput): the fleet-level pick minimizes
 //! the worst node's estimate, [`selection::Prediction`] reports which

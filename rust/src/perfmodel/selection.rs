@@ -1,5 +1,7 @@
-//! Algorithm 1: find the best schedule from S1, S2 and SP(r) (paper §V-B,
-//! generalized to the chunk-pipelined family).
+//! Algorithm 1: find the best schedule from S1, S2, SP(r) and SP2(r)
+//! (paper §V-B, generalized to the chunk-pipelined families — SP2 is the
+//! SP × SAA composition whose per-chunk combine overlaps the
+//! MP-AllGather).
 //!
 //! With the fitted α-β models, the closed forms are
 //!
@@ -7,7 +9,8 @@
 //! t_B  = AG_ESP(BLM·N_ESP·d) + AR_ESP(ar_total) + 2·A2A_EP(ETM·N_ESP·d)      (Eq. 1)
 //! t_D1 = 2·A2A_fused(ETM·N_ESP/N_MP·d) + AG_MP(BLM·d)                        (Eq. 13)
 //! t_D2 =   A2A_fused(ETM·N_ESP/N_MP·d) + SAA(ETM·N_ESP/N_MP·d)               (Eq. 14)
-//! t_SP(r) = pipeline(A2A_fused(·/r), FFN/r) + AG_MP(BLM·d)
+//! t_SP(r)  = pipeline(A2A_fused(·/r), FFN/r) + AG_MP(BLM·d)
+//! t_SP2(r) = pipeline(A2A_fused(·/r) ∥ SAA(·/r), FFN/r)
 //! ```
 //!
 //! where SAA(x) is the fitted model of the *overlapped* combine (the
@@ -44,6 +47,14 @@ pub struct Prediction {
     pub t_sp: f64,
     pub t_sp_iter: f64,
     pub sp_chunks: usize,
+    /// Compute-inclusive pipelined-S2 (SP × SAA) *forward* estimate at
+    /// `sp2_chunks` — the chunked-SAA combine folds the MP-AllGather into
+    /// the region, so there is no AG epilogue term.
+    pub t_sp2: f64,
+    /// Per-iteration SP2 estimate the generalized Algorithm 1 compares.
+    pub t_sp2_iter: f64,
+    /// The r* the fitted chunked-SAA pipeline model picked.
+    pub sp2_chunks: usize,
     /// Node whose per-iteration estimate paces the fleet (0 on a
     /// homogeneous cluster).
     pub bottleneck_node: usize,
@@ -62,11 +73,20 @@ impl Prediction {
     /// Generalized Algorithm 1: [`super::closedform::decide`] over
     /// per-iteration estimates — `2·t_D* + 3·t_FFN` for the unchunked
     /// schedules (comm mirrors in backward, compute doubles) versus
-    /// `t_sp_iter`.
+    /// `t_sp_iter` and `t_sp2_iter` — the argmin over the four-member
+    /// family {S1, S2, SP(r*), SP2(r*)}.
     pub fn best(&self) -> ScheduleKind {
         let t1 = 2.0 * self.t_d1 + 3.0 * self.t_ffn;
         let t2 = 2.0 * self.t_d2 + 3.0 * self.t_ffn;
-        super::closedform::decide(t1, t2, self.sp_chunks, self.t_sp_iter).0
+        super::closedform::decide(
+            t1,
+            t2,
+            self.sp_chunks,
+            self.t_sp_iter,
+            self.sp2_chunks,
+            self.t_sp2_iter,
+        )
+        .0
     }
 }
 
@@ -93,6 +113,38 @@ fn sp_pipeline_fitted(
     let ffn =
         |span: (usize, usize)| ffn_scale * ops::sp_chunk_flops_span(c, cap, span) / gpu_flops;
     super::closedform::pipeline_makespan(&spans, comm, ffn)
+}
+
+/// Fitted SP2 pipeline region: the asymmetric recurrence with each chunk's
+/// dispatch costed by the fitted `A2aFused` model and its combine leg by
+/// the fitted `SaaS2` model (the overlapped AlltoAll + MP-AllGather,
+/// measured as one collective at that chunk's per-member send volume) —
+/// so the fitted SP2 estimate inherits exactly the overlap behaviour the
+/// engine showed at fit time. No AG epilogue: the chunked SAAs carry it.
+fn sp2_pipeline_fitted(
+    model: &PerfModel,
+    c: &MoeLayerConfig,
+    chunks: usize,
+    ffn_scale: f64,
+    gpu_flops: f64,
+) -> f64 {
+    let cap = c.t_pausemp();
+    let spans = ops::sp_spans(c, cap, ops::sp_clamp_chunks(c, chunks));
+    let dispatch = |span: (usize, usize)| {
+        model.predict(
+            CollKind::A2aFused,
+            ops::bytes_sp_chunk_per_pair(c, span.1) * c.par.p as f64,
+        )
+    };
+    let combine = |span: (usize, usize)| {
+        model.predict(
+            CollKind::SaaS2,
+            ops::bytes_sp_chunk_per_pair(c, span.1) * c.par.p as f64,
+        )
+    };
+    let ffn =
+        |span: (usize, usize)| ffn_scale * ops::sp_chunk_flops_span(c, cap, span) / gpu_flops;
+    super::closedform::pipeline_makespan_asym(&spans, &dispatch, &combine, ffn)
 }
 
 /// Evaluate the closed forms for one configuration.
@@ -136,6 +188,15 @@ pub fn predict(model: &PerfModel, c: &MoeLayerConfig) -> Prediction {
     let (sp_chunks, t_sp_iter) = super::closedform::argmin_chunks(c, sp_iter_at);
     let t_sp = sp_pipeline_fitted(model, c, sp_chunks, 1.0, bottleneck.1) + ag;
 
+    // SP2: same bottleneck-node argument — the chunked SAAs are global
+    // collectives, so the slowest-GPU node's estimate is the fleet max.
+    let sp2_iter_at = |r: usize| {
+        sp2_pipeline_fitted(model, c, r, 1.0, bottleneck.1)
+            + sp2_pipeline_fitted(model, c, r, 2.0, bottleneck.1)
+    };
+    let (sp2_chunks, t_sp2_iter) = super::closedform::argmin_chunks(c, sp2_iter_at);
+    let t_sp2 = sp2_pipeline_fitted(model, c, sp2_chunks, 1.0, bottleneck.1);
+
     Prediction {
         t_baseline,
         t_d1,
@@ -144,6 +205,9 @@ pub fn predict(model: &PerfModel, c: &MoeLayerConfig) -> Prediction {
         t_sp,
         t_sp_iter,
         sp_chunks,
+        t_sp2,
+        t_sp2_iter,
+        sp2_chunks,
         bottleneck_node: bottleneck.0,
     }
 }
@@ -153,7 +217,8 @@ pub fn choose_schedule(model: &PerfModel, c: &MoeLayerConfig) -> ScheduleKind {
     predict(model, c).better()
 }
 
-/// Generalized Algorithm 1: choose among S1, S2 and SP(r*) for `c`.
+/// Generalized Algorithm 1: choose among S1, S2, SP(r*) and SP2(r*) for
+/// `c`.
 pub fn choose_schedule_extended(model: &PerfModel, c: &MoeLayerConfig) -> ScheduleKind {
     predict(model, c).best()
 }
@@ -240,7 +305,13 @@ mod tests {
         let pred = predict(&model, &c);
         assert!(pred.t_ffn > 0.0 && pred.t_sp > 0.0 && pred.t_sp_iter > pred.t_sp, "{pred:?}");
         assert!(pred.sp_chunks >= 1 && pred.sp_chunks <= crate::comm::tags::SP_MAX_CHUNKS);
-        // The iteration argmin never exceeds SP(1) = 2·t_D1 + 3·t_FFN.
+        // SP2 terms are well-formed too: positive, iteration > forward,
+        // chunk count representable.
+        assert!(pred.t_sp2 > 0.0 && pred.t_sp2_iter > pred.t_sp2, "{pred:?}");
+        assert!(pred.sp2_chunks >= 1 && pred.sp2_chunks <= crate::comm::tags::SP_MAX_CHUNKS);
+        // The iteration argmins never exceed their r = 1 degenerations:
+        // SP(1) = 2·t_D1 + 3·t_FFN, SP2(1) ≈ S2's structure (fitted SAA
+        // per-chunk model, so compare against its own r = 1 evaluation).
         assert!(
             pred.t_sp_iter <= 2.0 * pred.t_d1 + 3.0 * pred.t_ffn + 1e-12,
             "{pred:?}"
@@ -252,6 +323,7 @@ mod tests {
         };
         let best_t = match pred.best() {
             ScheduleKind::Pipelined { .. } => pred.t_sp_iter,
+            ScheduleKind::PipelinedS2 { .. } => pred.t_sp2_iter,
             ScheduleKind::S1 => 2.0 * pred.t_d1 + 3.0 * pred.t_ffn,
             _ => 2.0 * pred.t_d2 + 3.0 * pred.t_ffn,
         };
@@ -268,8 +340,9 @@ mod tests {
         c.h = 32768;
         let pick = choose_schedule_extended(&model, &c);
         assert!(
-            matches!(pick, ScheduleKind::Pipelined { chunks } if chunks > 1),
-            "expected SP on compute-heavy config, got {pick:?}"
+            matches!(pick, ScheduleKind::Pipelined { chunks } if chunks > 1)
+                || matches!(pick, ScheduleKind::PipelinedS2 { chunks } if chunks > 1),
+            "expected a pipelined family on compute-heavy config, got {pick:?}"
         );
     }
 

@@ -1,6 +1,6 @@
 //! Schedule builders: the forward (and mirrored backward) op programs for
-//! the Baseline (Fig 3a), S1 (Fig 3b), S2 (Fig 3c) and chunk-pipelined SP
-//! schedules.
+//! the Baseline (Fig 3a), S1 (Fig 3b), S2 (Fig 3c) and the chunk-pipelined
+//! SP and SP2 (SP × SAA) schedules.
 
 use crate::config::MoeLayerConfig;
 
@@ -12,6 +12,34 @@ use super::ops::{self, Op, ScheduleKind};
 /// [`crate::perfmodel::PerfModel::choose`] first.
 pub fn forward_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
     forward_ops_measured(kind, c, None)
+}
+
+/// The ONE load-aware span policy shared by the SP and SP2 builder arms:
+/// FLOPs-balanced from the gate's **measured** loads when a two-pass
+/// measurement is present, from the expected profile otherwise
+/// ([`ops::sp_spans`]). `chunks` is clamped here so callers cannot
+/// desynchronize span counts from op counts.
+fn sp_policy_spans(
+    c: &MoeLayerConfig,
+    chunks: usize,
+    measured: Option<&[usize]>,
+) -> Vec<(usize, usize)> {
+    let cap = c.t_pausemp();
+    let clamped = ops::sp_clamp_chunks(c, chunks);
+    match measured {
+        Some(loads) => ops::sp_spans_measured(cap, clamped, loads),
+        None => ops::sp_spans(c, cap, clamped),
+    }
+}
+
+/// The matching per-chunk FFN pricing: measured filled rows when the
+/// two-pass profile is present, the expected load model otherwise.
+fn sp_policy_flops(c: &MoeLayerConfig, span: (usize, usize), measured: Option<&[usize]>) -> f64 {
+    let cap = c.t_pausemp();
+    match measured {
+        Some(loads) => ops::sp_chunk_flops_measured(c, cap, span, loads),
+        None => ops::sp_chunk_flops_span(c, cap, span),
+    }
 }
 
 /// [`forward_ops`] with an optional **measured** per-expert load profile
@@ -88,20 +116,12 @@ pub fn forward_ops_measured(
             // the PipelinedUniform ablation keeps raw-row spans but still
             // prices compute by the load model, so the two variants differ
             // only in where the chunk boundaries fall.
-            let cap = c.t_pausemp();
-            let clamped = ops::sp_clamp_chunks(c, chunks);
             let spans = if matches!(kind, ScheduleKind::Pipelined { .. }) {
-                match measured {
-                    Some(loads) => ops::sp_spans_measured(cap, clamped, loads),
-                    None => ops::sp_spans(c, cap, clamped),
-                }
+                sp_policy_spans(c, chunks, measured)
             } else {
-                ops::chunk_spans(cap, clamped)
+                ops::chunk_spans(c.t_pausemp(), ops::sp_clamp_chunks(c, chunks))
             };
-            let chunk_flops = |span: (usize, usize)| match measured {
-                Some(loads) => ops::sp_chunk_flops_measured(c, cap, span, loads),
-                None => ops::sp_chunk_flops_span(c, cap, span),
-            };
+            let chunk_flops = |span: (usize, usize)| sp_policy_flops(c, span, measured);
             let r = spans.len();
             // S1's prologue/epilogue with the dispatch→FFN→combine middle
             // split into r capacity chunks. Emission order D_0, then per
@@ -142,6 +162,55 @@ pub fn forward_ops_measured(
             v.push(Op::LocalCombine { flops_per_rank: combine_elems });
             v.push(Op::Ungate { flops_per_rank: (local_tokens * c.k * c.m) as f64 });
             v.push(Op::MpAllGather { bytes_per_rank: ops::bytes_mp_ag_s1_per_rank(c) });
+            v
+        }
+        ScheduleKind::PipelinedS2 { chunks } => {
+            if chunks == 0 {
+                panic!("resolve SP2's chunk count r via the perf model first");
+            }
+            // S2's prologue/epilogue (gate on the full MP-duplicated token
+            // set, MpSplit of the capacity dimension, no trailing
+            // MP-AllGather — each chunk's SAA already gathers) with the
+            // dispatch→FFN→combine middle split into r capacity chunks.
+            // Emission order mirrors SP: D_0, then per chunk k:
+            // [D_{k+1}], F_k, SAA_k — the chunked AlltoAlls chain on the
+            // comm stream while each chunk's SAA forwards its combine
+            // output into the MP-AllGather on the intra-node class.
+            let combine_elems =
+                (c.e * c.t_pausemp() * c.m) as f64 * (c.par.n_esp.saturating_sub(1)) as f64;
+            let spans = sp_policy_spans(c, chunks, measured);
+            let chunk_flops = |span: (usize, usize)| sp_policy_flops(c, span, measured);
+            let r = spans.len();
+            let mut v = vec![
+                Op::Gate { flops_per_rank: ops::gate_flops(c, c.tokens()) },
+                Op::MpSplit { bytes_per_rank: ops::bytes_mp_ag_s2_per_rank(c) },
+                Op::Sp2Dispatch {
+                    bytes_per_pair: ops::bytes_sp_chunk_per_pair(c, spans[0].1),
+                    index: 0,
+                    of: r,
+                },
+            ];
+            for k in 0..r {
+                if k + 1 < r {
+                    v.push(Op::Sp2Dispatch {
+                        bytes_per_pair: ops::bytes_sp_chunk_per_pair(c, spans[k + 1].1),
+                        index: k + 1,
+                        of: r,
+                    });
+                }
+                v.push(Op::Sp2ExpertFfn {
+                    flops_per_rank: chunk_flops(spans[k]),
+                    index: k,
+                    of: r,
+                });
+                v.push(Op::Sp2Saa {
+                    bytes_per_pair: ops::bytes_sp_chunk_per_pair(c, spans[k].1),
+                    index: k,
+                    of: r,
+                });
+            }
+            v.push(Op::LocalCombine { flops_per_rank: combine_elems });
+            v.push(Op::Ungate { flops_per_rank: (c.tokens() * c.k * c.m) as f64 });
             v
         }
         ScheduleKind::S2 | ScheduleKind::S2Aas => {
@@ -240,6 +309,20 @@ pub fn backward_ops_measured(
             }
             Op::SpExpertFfn { flops_per_rank, index, of } => {
                 Op::SpExpertFfn { flops_per_rank: 2.0 * flops_per_rank, index, of }
+            }
+            // SP2: like SP, the adjoint of a chunk's dispatch AlltoAll is
+            // its combine-direction counterpart of the same volume — here
+            // the chunked SAA (whose adjoint, ReduceScatter then AlltoAll,
+            // moves the same bytes in mirrored direction) — so the
+            // reversed region stays a well-formed pipeline.
+            Op::Sp2Dispatch { bytes_per_pair, index, of } => {
+                Op::Sp2Saa { bytes_per_pair, index, of }
+            }
+            Op::Sp2Saa { bytes_per_pair, index, of } => {
+                Op::Sp2Dispatch { bytes_per_pair, index, of }
+            }
+            Op::Sp2ExpertFfn { flops_per_rank, index, of } => {
+                Op::Sp2ExpertFfn { flops_per_rank: 2.0 * flops_per_rank, index, of }
             }
         })
         .collect()
@@ -517,6 +600,87 @@ mod tests {
         // The measured iteration program mirrors like the plain one.
         let it = iteration_ops_measured(kind, &c, Some(&loads[..]));
         assert_eq!(it.len(), 2 * measured.len());
+    }
+
+    #[test]
+    fn sp2_structure_interleaves_chunks_with_saa_combines() {
+        let tags: Vec<&str> = forward_ops(ScheduleKind::PipelinedS2 { chunks: 2 }, &cfg())
+            .iter()
+            .map(|o| o.tag())
+            .collect();
+        assert_eq!(
+            tags,
+            vec![
+                "gate",
+                "mp.split",
+                "sp2.dispatch.0",
+                "sp2.dispatch.1",
+                "sp2.ffn.0",
+                "sp2.saa.0",
+                "sp2.ffn.1",
+                "sp2.saa.1",
+                "local.combine",
+                "ungate"
+            ]
+        );
+    }
+
+    #[test]
+    fn sp2_conserves_s2_volumes_and_flops() {
+        // Chunking the SAA combine must not change what moves or what is
+        // computed — per op family, SP2's totals equal S2's.
+        let c = cfg();
+        let s2 = forward_ops(ScheduleKind::S2, &c);
+        let sp2 = forward_ops(ScheduleKind::PipelinedS2 { chunks: 3 }, &c);
+        let a2a_total = |ops: &[Op]| {
+            ops.iter()
+                .map(|o| match *o {
+                    Op::FusedAlltoAll { bytes_per_pair } | Op::SaaCombine { bytes_per_pair } => {
+                        bytes_per_pair
+                    }
+                    Op::Sp2Dispatch { bytes_per_pair, .. }
+                    | Op::Sp2Saa { bytes_per_pair, .. } => bytes_per_pair,
+                    _ => 0.0,
+                })
+                .sum::<f64>()
+        };
+        let ffn_total = |ops: &[Op]| {
+            ops.iter()
+                .map(|o| match *o {
+                    Op::ExpertFfn { flops_per_rank } => flops_per_rank,
+                    Op::Sp2ExpertFfn { flops_per_rank, .. } => flops_per_rank,
+                    _ => 0.0,
+                })
+                .sum::<f64>()
+        };
+        assert!((a2a_total(&s2) - a2a_total(&sp2)).abs() < 1e-9);
+        let (f2, fp) = (ffn_total(&s2), ffn_total(&sp2));
+        assert!((f2 - fp).abs() / f2 < 1e-12, "{f2} vs {fp}");
+    }
+
+    #[test]
+    fn sp2_backward_stays_a_pipeline() {
+        let c = cfg();
+        let bwd = backward_ops(ScheduleKind::PipelinedS2 { chunks: 2 }, &c);
+        // Starts with the adjoint of the Ungate (S2 has no trailing AG —
+        // the SAA chunks carry it).
+        assert_eq!(bwd[0].tag(), "ungate");
+        // Every chunk keeps dispatch-before-ffn-before-saa order.
+        for k in 0..2usize {
+            let pos = |pred: &dyn Fn(&Op) -> bool| bwd.iter().position(|o| pred(o)).unwrap();
+            let d = pos(&|o| matches!(*o, Op::Sp2Dispatch { index, .. } if index == k));
+            let f = pos(&|o| matches!(*o, Op::Sp2ExpertFfn { index, .. } if index == k));
+            let s = pos(&|o| matches!(*o, Op::Sp2Saa { index, .. } if index == k));
+            assert!(d < f && f < s, "chunk {k}: d={d} f={f} s={s}");
+        }
+        // MpSplit's adjoint (MP-AllGather) is still present.
+        assert!(bwd.iter().any(|o| o.tag() == "mp.allgather"));
+    }
+
+    #[test]
+    #[should_panic(expected = "resolve SP2")]
+    fn sp2_auto_must_be_resolved() {
+        forward_ops(ScheduleKind::PipelinedS2 { chunks: 0 }, &cfg());
     }
 
     #[test]

@@ -58,12 +58,15 @@ pub trait Machine<T: Transport> {
     }
 }
 
-/// In-flight state of an SP pipelined region (a maximal run of
-/// `SpDispatch`/`SpExpertFfn`/`SpCombine` ops). Instead of the single
+/// In-flight state of a pipelined region (a maximal run of
+/// `SpDispatch`/`SpExpertFfn`/`SpCombine` ops, or their SP2 counterparts
+/// `Sp2Dispatch`/`Sp2ExpertFfn`/`Sp2Saa`). Instead of the single
 /// per-rank frontier, the region runs TWO per-rank streams — chunked
 /// AlltoAlls chain on the comm stream in emission order, chunked FFNs on
 /// the compute stream — so chunk k's combine overlaps chunk k+1's compute
-/// exactly as the builder's emission order intends. Entry forks both
+/// exactly as the builder's emission order intends. For SP2 the combine
+/// is a chunked SAA whose MP-AllGather forwards additionally overlap the
+/// inter-node AlltoAll on the second link class. Entry forks both
 /// streams from the main frontier; the region's last combine joins them
 /// back.
 struct PipeState<H> {
@@ -89,6 +92,63 @@ impl<H: Clone> PipeState<H> {
             combines_done: 0,
         }
     }
+}
+
+/// Close a pipelined region: join each rank's comm and compute stream
+/// frontiers back into the main frontier. The ONE merge epilogue shared by
+/// the last `SpCombine` and the last `Sp2Saa` of a region.
+fn merge_region<T: Transport>(
+    st: PipeState<T::Handle>,
+    frontier: &mut [Option<T::Handle>],
+    transport: &mut T,
+    tag: &'static str,
+) {
+    for (r, slot) in frontier.iter_mut().enumerate() {
+        let dep: Vec<T::Handle> = st.comm[r].iter().chain(st.comp[r].iter()).cloned().collect();
+        *slot = Some(transport.join(&dep, tag));
+    }
+}
+
+/// Run one SAA/AAS collective over the whole world: marshal the machine's
+/// inputs, execute [`algo::saa`] (AlltoAll tagged with the op's tag, the
+/// MP-AllGather forwards with the canonical [`tags::MP_ALLGATHER`]), hand
+/// the MP-peer-major flattening of the result to the machine, and return
+/// the per-member completion handles in world order. The ONE invocation
+/// shared by the monolithic S2 combine and SP2's per-chunk SAA — only the
+/// dependency source and the frontier the completions land on differ
+/// between the two call sites.
+fn run_saa<T, M>(
+    op: &Op,
+    groups: &ProcessGroups,
+    transport: &mut T,
+    machine: &mut M,
+    deps: &[T::Handle],
+    overlap: bool,
+) -> Result<Vec<T::Handle>>
+where
+    T: Transport,
+    M: Machine<T>,
+{
+    let world = groups.world();
+    let mp_groups = groups.all_groups(GroupKind::Mp);
+    let ins = machine.inputs(op, &world)?;
+    ensure!(ins.len() == world.len(), "one chunk list per member");
+    let (outs, ends) = algo::saa(
+        transport,
+        &world,
+        &mp_groups,
+        &ins,
+        deps,
+        op.tag(),
+        tags::MP_ALLGATHER,
+        overlap,
+    );
+    let flat: Vec<Vec<T::Chunk>> = outs
+        .into_iter()
+        .map(|per_peer| per_peer.into_iter().flatten().collect())
+        .collect();
+    machine.accept(op, &world, flat)?;
+    Ok(ends)
 }
 
 /// Which process-group kind an op's collective runs over.
@@ -145,11 +205,11 @@ where
                     frontier[r] = Some(transport.compute(r, flops_per_rank, &dep, tag));
                 }
             }
-            Op::SpDispatch { index, of, .. } => {
+            Op::SpDispatch { index, of, .. } | Op::Sp2Dispatch { index, of, .. } => {
                 let st = pipe.get_or_insert_with(|| PipeState::new(&frontier, of));
                 ensure!(
                     index < of && st.dispatched.len() == of,
-                    "sp.dispatch chunk {index} of {of} does not fit the pipelined region"
+                    "sp dispatch chunk {index} of {of} does not fit the pipelined region"
                 );
                 for grp in groups.all_groups(GroupKind::EpEsp) {
                     let ins = machine.inputs(op, &grp)?;
@@ -164,7 +224,8 @@ where
                 }
                 machine.finish(op)?;
             }
-            Op::SpExpertFfn { flops_per_rank, index, .. } => {
+            Op::SpExpertFfn { flops_per_rank, index, .. }
+            | Op::Sp2ExpertFfn { flops_per_rank, index, .. } => {
                 machine.apply_local(op)?;
                 let st = pipe
                     .as_mut()
@@ -203,34 +264,41 @@ where
                 };
                 if merge {
                     let st = pipe.take().expect("pipeline state present at merge");
-                    for r in 0..p {
-                        let dep: Vec<T::Handle> =
-                            st.comm[r].iter().chain(st.comp[r].iter()).cloned().collect();
-                        frontier[r] = Some(transport.join(&dep, tag));
+                    merge_region(st, &mut frontier, transport, tag);
+                }
+            }
+            Op::Sp2Saa { index, of, .. } => {
+                // A chunk's combine as a chunked SAA: the AlltoAll runs on
+                // the comm-stream frontier (after the chunk's FFN), and its
+                // phases forward into the MP-AllGather — same dual-stream
+                // region as SpCombine, with the second link-class overlap
+                // inside each chunk.
+                let merge = {
+                    let st = pipe
+                        .as_mut()
+                        .ok_or_else(|| anyhow::anyhow!("sp2.saa outside a pipelined region"))?;
+                    ensure!(index < st.ffn.len(), "sp2.saa chunk {index} out of range");
+                    let world = groups.world();
+                    let mut deps = deps_of(&st.comm, &world);
+                    deps.extend(deps_of(&st.ffn[index], &world));
+                    let ends = run_saa(op, groups, transport, machine, &deps, true)?;
+                    for (k, &r) in world.iter().enumerate() {
+                        st.comm[r] = Some(ends[k].clone());
                     }
+                    machine.finish(op)?;
+                    st.combines_done += 1;
+                    st.combines_done == of
+                };
+                if merge {
+                    let st = pipe.take().expect("pipeline state present at merge");
+                    merge_region(st, &mut frontier, transport, tag);
                 }
             }
             Op::SaaCombine { .. } | Op::AasCombine { .. } => {
                 let world = groups.world();
-                let mp_groups = groups.all_groups(GroupKind::Mp);
-                let ins = machine.inputs(op, &world)?;
                 let deps = deps_of(&frontier, &world);
                 let overlap = matches!(*op, Op::SaaCombine { .. });
-                let (outs, ends) = algo::saa(
-                    transport,
-                    &world,
-                    &mp_groups,
-                    &ins,
-                    &deps,
-                    tag,
-                    tags::MP_ALLGATHER,
-                    overlap,
-                );
-                let flat: Vec<Vec<T::Chunk>> = outs
-                    .into_iter()
-                    .map(|per_peer| per_peer.into_iter().flatten().collect())
-                    .collect();
-                machine.accept(op, &world, flat)?;
+                let ends = run_saa(op, groups, transport, machine, &deps, overlap)?;
                 for (k, &r) in world.iter().enumerate() {
                     frontier[r] = Some(ends[k].clone());
                 }
@@ -306,9 +374,10 @@ mod tests {
             // Chunked SP ops honor their byte fields so tests can drive
             // ragged (and zero-width) capacity spans through the region.
             let elems = match op {
-                Op::SpDispatch { bytes_per_pair, .. } | Op::SpCombine { bytes_per_pair, .. } => {
-                    (*bytes_per_pair / 4.0) as usize
-                }
+                Op::SpDispatch { bytes_per_pair, .. }
+                | Op::SpCombine { bytes_per_pair, .. }
+                | Op::Sp2Dispatch { bytes_per_pair, .. }
+                | Op::Sp2Saa { bytes_per_pair, .. } => (*bytes_per_pair / 4.0) as usize,
                 _ => 2,
             };
             Ok(vec![vec![vec![1.0f32; elems]; per]; grp.len()])
@@ -416,6 +485,45 @@ mod tests {
         let tags: Vec<&str> = log.iter().map(|(t, _)| *t).collect();
         assert!(!tags.contains(&"sp.dispatch.2"), "empty chunk on the wire: {tags:?}");
         assert!(!tags.contains(&"sp.combine.2"), "empty combine on the wire: {tags:?}");
+    }
+
+    #[test]
+    fn sp2_region_runs_chunked_saa_and_merges() {
+        // The SP×SAA region: each chunk's combine is a chunked SAA whose
+        // MP-AllGather forwards share the canonical mp.allgather tag; the
+        // region still merges both streams at the last SAA.
+        let groups = ProcessGroups::new(ParallelDegrees { p: 4, n_mp: 2, n_esp: 2 }).unwrap();
+        let ops = vec![
+            Op::Gate { flops_per_rank: 1.0 },
+            Op::Sp2Dispatch { bytes_per_pair: 8.0, index: 0, of: 2 },
+            Op::Sp2Dispatch { bytes_per_pair: 16.0, index: 1, of: 2 },
+            Op::Sp2ExpertFfn { flops_per_rank: 1.0, index: 0, of: 2 },
+            Op::Sp2Saa { bytes_per_pair: 8.0, index: 0, of: 2 },
+            Op::Sp2ExpertFfn { flops_per_rank: 1.0, index: 1, of: 2 },
+            Op::Sp2Saa { bytes_per_pair: 16.0, index: 1, of: 2 },
+            Op::Ungate { flops_per_rank: 1.0 },
+        ];
+        let mut t = DataTransport::new();
+        let mut m = CountingMachine { comm_ops: Vec::new(), local_ops: Vec::new() };
+        let frontier = run_program(&ops, &groups, &mut t, &mut m).unwrap();
+        assert!(frontier.iter().all(|h| h.is_some()), "region merged back");
+        assert_eq!(
+            m.comm_ops,
+            vec!["sp2.dispatch.0", "sp2.dispatch.1", "sp2.saa.0", "sp2.saa.1"]
+        );
+        assert_eq!(m.local_ops, vec!["gate", "sp2.ffn.0", "sp2.ffn.1", "ungate"]);
+        let log = t.log().to_vec();
+        // Per-chunk a2a volume: 12 off-diagonal pairs over the 4-rank
+        // product group.
+        let vol = |tag: &str| -> f64 {
+            log.iter().filter(|(t, _)| *t == tag).map(|(_, b)| *b).sum()
+        };
+        assert_eq!(vol("sp2.saa.0"), 12.0 * 8.0);
+        assert_eq!(vol("sp2.saa.1"), 12.0 * 16.0);
+        // The chunked SAAs' MP forwards all land under mp.allgather: each
+        // member forwards its 4-chunk AlltoAll output to 1 MP peer, per
+        // chunk — 4·4·(2 + 4) f32.
+        assert_eq!(vol(tags::MP_ALLGATHER), (4 * 4 * (2 + 4) * 4) as f64);
     }
 
     #[test]

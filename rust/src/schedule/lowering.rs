@@ -44,7 +44,9 @@ impl Machine<DagTransport<'_>> for DagMachine {
             | Op::SaaCombine { bytes_per_pair }
             | Op::AasCombine { bytes_per_pair }
             | Op::SpDispatch { bytes_per_pair, .. }
-            | Op::SpCombine { bytes_per_pair, .. } => {
+            | Op::SpCombine { bytes_per_pair, .. }
+            | Op::Sp2Dispatch { bytes_per_pair, .. }
+            | Op::Sp2Saa { bytes_per_pair, .. } => {
                 vec![vec![Lump(bytes_per_pair); g]; g]
             }
             _ => bail!("non-communication op has no chunk inputs: {op:?}"),
@@ -160,9 +162,50 @@ mod tests {
             ScheduleKind::S2Aas,
             ScheduleKind::Pipelined { chunks: 2 },
             ScheduleKind::Pipelined { chunks: 8 },
+            ScheduleKind::PipelinedS2 { chunks: 2 },
+            ScheduleKind::PipelinedS2 { chunks: 8 },
         ] {
             let r = simulate_iteration(kind, &c, &cluster).unwrap();
             assert!(r.makespan > 0.0, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn sp2_with_one_chunk_times_like_s2() {
+        // SP2(1) is S2's op structure with a fork/join around the middle —
+        // the single chunk's SAA is the monolithic SAA, so the makespan
+        // must match S2's closely.
+        let cluster = testbed_b();
+        for (p, n_mp, n_esp) in [(8usize, 2usize, 2usize), (16, 4, 2)] {
+            let c = cfg(p, n_mp, n_esp);
+            let t2 = simulate_iteration(ScheduleKind::S2, &c, &cluster).unwrap().makespan;
+            let tsp2 = simulate_iteration(ScheduleKind::PipelinedS2 { chunks: 1 }, &c, &cluster)
+                .unwrap()
+                .makespan;
+            let rel = (t2 - tsp2).abs() / t2;
+            assert!(rel < 1e-9, "SP2(1) {tsp2} vs S2 {t2} at p={p}");
+        }
+    }
+
+    #[test]
+    fn measured_zero_loads_fall_back_to_expected_spans() {
+        // Regression for the degenerate-gate case of `--spans measured`:
+        // an all-zero measured load vector must be ignored (uniform /
+        // expected-profile spans), not turned into NaN span weights — the
+        // measured run then times identically to the plain one.
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+        let c = cfg(8, 2, 2);
+        let zeros = vec![0usize; c.e];
+        for kind in [
+            ScheduleKind::Pipelined { chunks: 3 },
+            ScheduleKind::PipelinedS2 { chunks: 3 },
+        ] {
+            let (plain, _) =
+                simulate_iteration_measured_with_dag(kind, &c, &cluster, None).unwrap();
+            let (zeroed, _) =
+                simulate_iteration_measured_with_dag(kind, &c, &cluster, Some(&zeros)).unwrap();
+            assert!(zeroed.makespan.is_finite() && zeroed.makespan > 0.0, "{kind:?}");
+            assert_eq!(plain.makespan, zeroed.makespan, "{kind:?}");
         }
     }
 
@@ -209,6 +252,100 @@ mod tests {
             .makespan;
         assert!(tsp < t1, "SP(r={r}) {tsp} !< S1 {t1}");
         assert!(tsp < t2, "SP(r={r}) {tsp} !< S2 {t2}");
+    }
+
+    #[test]
+    fn sp2_beats_s1_s2_and_sp_on_inter_dominant_bracket() {
+        // The SP2 acceptance case: on an inter-dominant fleet (slow NIC,
+        // ~15-40× slower than intra) with MP > 1 and a SMALL capacity
+        // factor (T below the token count — the §IV-B regime that favors
+        // S2's capacity-based AG over S1's token-based one), the chunk
+        // pipeline hides the FFN behind the NIC-bound AlltoAll chain
+        // (beating S1/S2) AND each chunk's SAA hides its smaller
+        // MP-AllGather inside the NIC gaps (beating SP, whose full
+        // token-based AG epilogue stays exposed). Sweep a small pinned
+        // bracket of that regime and require a strict simulated win —
+        // with the fitted Algorithm 1 picking SP2 at the same
+        // configuration. (At generous capacity factors the SAA forwards
+        // instead contend with the intra-node a2a traffic and plain SP
+        // stays ahead — that is expected, and the selection property
+        // keeps those near-ties within tolerance.)
+        use crate::config::AlphaBeta;
+        use crate::perfmodel::{selection, PerfModel};
+
+        let mut best: Option<(String, String, f64)> = None;
+        let links = [(7.14e-10f64, 1.0e-8f64), (7.14e-10, 3.0e-8)];
+        for (beta_intra, beta_inter) in links {
+            let cluster = ClusterTopology::homogeneous(
+                "slow_nic_2node",
+                2,
+                4,
+                AlphaBeta::new(3.6e-5, beta_intra),
+                AlphaBeta::new(5.0e-5, beta_inter),
+                13.4e12 * 0.35,
+                11 * (1 << 30),
+            );
+            for n_mp in [2usize, 4] {
+                let mut model: Option<PerfModel> = None;
+                for h in [16384usize, 49152] {
+                    let c = MoeLayerConfig {
+                        par: ParallelDegrees { p: 8, n_mp, n_esp: 2 },
+                        b: 8,
+                        l: 2048,
+                        e: 4,
+                        m: 1024,
+                        h,
+                        k: 2,
+                        f: 0.6,
+                        dtype_bytes: 4,
+                        skew: 0.0,
+                    };
+                    let m = match &model {
+                        Some(m) => m.clone(),
+                        None => {
+                            let fitted = PerfModel::fit(&cluster, c.par).unwrap();
+                            model = Some(fitted.clone());
+                            fitted
+                        }
+                    };
+                    let pred = selection::predict(&m, &c);
+                    if pred.sp2_chunks <= 1 {
+                        continue;
+                    }
+                    let t1 = simulate_iteration(ScheduleKind::S1, &c, &cluster).unwrap().makespan;
+                    let t2 = simulate_iteration(ScheduleKind::S2, &c, &cluster).unwrap().makespan;
+                    let tsp = simulate_iteration(
+                        ScheduleKind::Pipelined { chunks: pred.sp_chunks },
+                        &c,
+                        &cluster,
+                    )
+                    .unwrap()
+                    .makespan;
+                    let tsp2 = simulate_iteration(
+                        ScheduleKind::PipelinedS2 { chunks: pred.sp2_chunks },
+                        &c,
+                        &cluster,
+                    )
+                    .unwrap()
+                    .makespan;
+                    let others = t1.min(t2).min(tsp);
+                    let picked_sp2 = matches!(pred.best(), ScheduleKind::PipelinedS2 { .. });
+                    if tsp2 < others && picked_sp2 {
+                        let gain = others / tsp2;
+                        if best.as_ref().map(|b| gain > b.2).unwrap_or(true) {
+                            let link = format!("bi={beta_intra:e} be={beta_inter:e}");
+                            best = Some((c.id(), link, gain));
+                        }
+                    }
+                }
+            }
+        }
+        let (id, link, gain) = best.expect(
+            "no pinned inter-dominant config where SP2 strictly beats S1, S2 and SP \
+             with Algorithm 1 selecting it",
+        );
+        eprintln!("SP2 wins at {id} ({link}): {gain:.4}× over best of {{S1,S2,SP}}");
+        assert!(gain > 1.0, "SP2 win at {id} must be strict, got {gain:.6}×");
     }
 
     #[test]

@@ -33,7 +33,31 @@
 //! on a knob, `r` is chosen in closed form
 //! ([`crate::perfmodel::closedform::optimal_chunks`], fitted variant in
 //! [`crate::perfmodel::selection`]) and Algorithm 1 generalizes to the
-//! argmin over {S1, S2, SP(r*)}.
+//! argmin over {S1, S2, SP(r*), SP2(r*)}.
+//!
+//! # SP2 — the chunk-pipelined S2 (SP × SAA)
+//!
+//! [`ops::ScheduleKind::PipelinedS2`] (`sp2` / `sp2N` on the CLI) is the
+//! fourth family member and the first schedule composing TWO overlap
+//! mechanisms. It is S2's op structure (gate on full tokens, MpSplit of
+//! the capacity dimension, no trailing MP-AllGather) with the dispatch
+//! AlltoAll, the expert FFN and the SAA-overlapped combine split into `r`
+//! capacity chunks (per-chunk tags `sp2.dispatch.k` / `sp2.ffn.k` /
+//! `sp2.saa.k`). Each chunk's combine runs as a **chunked SAA**
+//! ([`crate::comm::algo::saa`] with a chunk-sized payload): the chunk's
+//! EP&ESP-AlltoAll phases forward its combine output into the
+//! MP-AllGather on the intra-node link class (S2's overlap) while the
+//! next chunk's FFN computes on the pipelined region's compute stream
+//! (SP's overlap). The interpreter runs the region on the same dual
+//! per-rank streams as SP; the data plane stages per-chunk gathered
+//! blocks and reassembles the MP-peer-major buffer S2's LocalCombine
+//! expects, so SP2's numerics equal the dense reference exactly like the
+//! monolithic S2. `r` is chosen by
+//! [`crate::perfmodel::closedform::optimal_chunks_sp2`] (fitted variant
+//! priced per chunk by the `SaaS2` collective model). SP2 wins where the
+//! fleet is inter-dominant (slow NIC) with MP > 1 and compute comparable
+//! to the per-chunk communication — there SP's exposed AG epilogue and
+//! S2's unhidden FFN both cost more than the composed overlap.
 //!
 //! # Load-aware spans (skewed routing)
 //!

@@ -58,6 +58,20 @@ pub enum Op {
     /// combine of the region joins the comm and compute streams back into
     /// the main frontier.
     SpCombine { bytes_per_pair: f64, index: usize, of: usize },
+    /// SP2 dispatch: chunk `index` of `of` of S2's capacity-split fused
+    /// EP&ESP-AlltoAll, restricted to one capacity span — the pipelined-S2
+    /// (SP × SAA) region's comm-stream dispatch.
+    Sp2Dispatch { bytes_per_pair: f64, index: usize, of: usize },
+    /// SP2 expert FFN over chunk `index`'s received capacity span; chains
+    /// on the per-rank compute stream like [`Op::SpExpertFfn`].
+    Sp2ExpertFfn { flops_per_rank: f64, index: usize, of: usize },
+    /// SP2 combine: chunk `index`'s expert outputs returned through a
+    /// *chunked SAA* — the chunk's combine AlltoAll phases forward into
+    /// the MP-AllGather on the second link class while chunk `index+1`'s
+    /// FFN computes, composing SP's compute/comm overlap with S2's
+    /// intra/inter link-class overlap. The last SAA of the region joins
+    /// the comm and compute streams back into the main frontier.
+    Sp2Saa { bytes_per_pair: f64, index: usize, of: usize },
 }
 
 impl Op {
@@ -88,6 +102,9 @@ impl Op {
             Op::SpDispatch { index, .. } => tags::SP_DISPATCH[*index],
             Op::SpExpertFfn { index, .. } => tags::SP_FFN[*index],
             Op::SpCombine { index, .. } => tags::SP_COMBINE[*index],
+            Op::Sp2Dispatch { index, .. } => tags::SP2_DISPATCH[*index],
+            Op::Sp2ExpertFfn { index, .. } => tags::SP2_FFN[*index],
+            Op::Sp2Saa { index, .. } => tags::SP2_SAA[*index],
         }
     }
 
@@ -105,6 +122,8 @@ impl Op {
                 | Op::AasCombine { .. }
                 | Op::SpDispatch { .. }
                 | Op::SpCombine { .. }
+                | Op::Sp2Dispatch { .. }
+                | Op::Sp2Saa { .. }
         )
     }
 }
@@ -135,7 +154,19 @@ pub enum ScheduleKind {
     /// ablation column for the load-aware spans (identical to
     /// [`ScheduleKind::Pipelined`] when `skew == 0`).
     PipelinedUniform { chunks: usize },
-    /// Automatic selection among S1, S2 and SP(r*) (Algorithm 1,
+    /// Chunk-pipelined S2 (`sp2`/`sp2N`): S2's op structure with the
+    /// capacity-split dispatch AlltoAll, the expert FFN and the
+    /// SAA-overlapped combine split into `chunks` capacity chunks — each
+    /// chunk's combine runs as a *chunked SAA* whose EP&ESP-AlltoAll
+    /// phases forward into the MP-AllGather while the next chunk's FFN
+    /// computes. The first schedule composing two overlap mechanisms:
+    /// SP's compute/comm pipeline and S2's intra/inter link-class
+    /// overlap (the ROADMAP's "SP × SAA" item). Spans follow the same
+    /// load-aware policy as [`ScheduleKind::Pipelined`]. `chunks == 0`
+    /// is the unresolved "auto" form — resolve r* via
+    /// [`crate::perfmodel::closedform::optimal_chunks_sp2`] first.
+    PipelinedS2 { chunks: usize },
+    /// Automatic selection among S1, S2, SP(r*) and SP2(r*) (Algorithm 1,
     /// generalized).
     Parm,
 }
@@ -149,6 +180,7 @@ impl ScheduleKind {
             ScheduleKind::S2Aas => "s2-aas",
             ScheduleKind::Pipelined { .. } => "sp",
             ScheduleKind::PipelinedUniform { .. } => "sp-uniform",
+            ScheduleKind::PipelinedS2 { .. } => "sp2",
             ScheduleKind::Parm => "parm",
         }
     }
@@ -160,6 +192,7 @@ impl ScheduleKind {
             ScheduleKind::PipelinedUniform { chunks } if *chunks > 0 => {
                 format!("sp-uniform(r={chunks})")
             }
+            ScheduleKind::PipelinedS2 { chunks } if *chunks > 0 => format!("sp2(r={chunks})"),
             k => k.name().to_string(),
         }
     }
@@ -172,10 +205,21 @@ impl ScheduleKind {
             "s2-aas" | "aas" => Some(ScheduleKind::S2Aas),
             "sp" | "pipelined" => Some(ScheduleKind::Pipelined { chunks: 0 }),
             "sp-uniform" | "spu" => Some(ScheduleKind::PipelinedUniform { chunks: 0 }),
+            // NOTE: `sp2` is the pipelined-S2 FAMILY, not SP at r = 2 —
+            // SP with a pinned chunk count of 2 is spelled `pipelined2`
+            // (the `pipelinedN` form pins any SP chunk count).
+            "sp2" | "pipelined-s2" => Some(ScheduleKind::PipelinedS2 { chunks: 0 }),
             "parm" | "auto" => Some(ScheduleKind::Parm),
             _ => {
                 if let Some(n) = s.strip_prefix("spu").and_then(|n| n.parse::<usize>().ok()) {
                     return Some(ScheduleKind::PipelinedUniform { chunks: n });
+                }
+                if let Some(n) = s.strip_prefix("pipelined").and_then(|n| n.parse::<usize>().ok())
+                {
+                    return Some(ScheduleKind::Pipelined { chunks: n });
+                }
+                if let Some(n) = s.strip_prefix("sp2").and_then(|n| n.parse::<usize>().ok()) {
+                    return Some(ScheduleKind::PipelinedS2 { chunks: n });
                 }
                 s.strip_prefix("sp")
                     .and_then(|n| n.parse::<usize>().ok())
@@ -342,6 +386,10 @@ pub fn chunk_spans_weighted(cap: usize, chunks: usize, loads: &[usize]) -> Vec<(
         pre.push(pre[row] + w);
     }
     let total = *pre.last().unwrap_or(&0.0);
+    // Zero total estimated load (an all-zero `loads` vector — e.g. measured
+    // spans on a degenerate gate that routed nothing) would make every
+    // span-boundary target NaN/meaningless; fall back to the uniform split
+    // instead of dividing by it.
     if cap == 0 || total <= 0.0 {
         return chunk_spans(cap, r);
     }
@@ -551,6 +599,30 @@ mod tests {
         assert_eq!(ScheduleKind::parse("spx"), None);
         assert_eq!(ScheduleKind::Pipelined { chunks: 4 }.label(), "sp(r=4)");
         assert_eq!(ScheduleKind::S1.label(), "s1");
+        // The pipelined-S2 family: `sp2` is SP×SAA, NOT SP at r = 2.
+        assert_eq!(
+            ScheduleKind::parse("sp2"),
+            Some(ScheduleKind::PipelinedS2 { chunks: 0 })
+        );
+        assert_eq!(
+            ScheduleKind::parse("sp24"),
+            Some(ScheduleKind::PipelinedS2 { chunks: 4 })
+        );
+        assert_eq!(
+            ScheduleKind::parse(ScheduleKind::PipelinedS2 { chunks: 0 }.name()),
+            Some(ScheduleKind::PipelinedS2 { chunks: 0 })
+        );
+        assert_eq!(ScheduleKind::PipelinedS2 { chunks: 3 }.label(), "sp2(r=3)");
+        assert_eq!(ScheduleKind::parse("sp2x"), None);
+        // SP at a pinned r = 2 remains spellable via the pipelinedN form.
+        assert_eq!(
+            ScheduleKind::parse("pipelined2"),
+            Some(ScheduleKind::Pipelined { chunks: 2 })
+        );
+        assert_eq!(
+            ScheduleKind::parse("pipelined5"),
+            Some(ScheduleKind::Pipelined { chunks: 5 })
+        );
         // The uniform-span ablation variant.
         assert_eq!(
             ScheduleKind::parse("spu3"),
@@ -585,6 +657,19 @@ mod tests {
         assert_eq!(
             Op::SpCombine { bytes_per_pair: 1.0, index: 3, of: 4 }.tag(),
             "sp.combine.3"
+        );
+        // The SP2 (chunked-SAA) family.
+        assert!(Op::Sp2Dispatch { bytes_per_pair: 1.0, index: 0, of: 2 }.is_communication());
+        assert!(Op::Sp2Saa { bytes_per_pair: 1.0, index: 1, of: 2 }.is_communication());
+        assert!(!Op::Sp2ExpertFfn { flops_per_rank: 1.0, index: 0, of: 2 }.is_communication());
+        assert_eq!(
+            Op::Sp2Dispatch { bytes_per_pair: 1.0, index: 1, of: 4 }.tag(),
+            "sp2.dispatch.1"
+        );
+        assert_eq!(Op::Sp2Saa { bytes_per_pair: 1.0, index: 3, of: 4 }.tag(), "sp2.saa.3");
+        assert_eq!(
+            Op::Sp2ExpertFfn { flops_per_rank: 1.0, index: 2, of: 4 }.tag(),
+            "sp2.ffn.2"
         );
     }
 
@@ -704,6 +789,23 @@ mod tests {
         assert!(fr.iter().all(|&f| f > 0.999), "near-uniform at tiny skew: {fr:?}");
         c.skew = 0.0;
         assert!(expert_load_fractions(&c).is_none());
+    }
+
+    #[test]
+    fn all_zero_loads_fall_back_to_uniform_spans_without_nan() {
+        // Regression: an all-zero expert-load vector (degenerate gate under
+        // `--spans measured`) must not produce NaN span weights — the
+        // weighted split falls back to the uniform one, and every span is
+        // a well-formed (start, rows) pair tiling [0, cap).
+        for (cap, r) in [(16usize, 4usize), (7, 3), (2, 4), (1, 1)] {
+            let zeros = vec![0usize; 6];
+            let spans = chunk_spans_weighted(cap, r, &zeros);
+            assert_eq!(spans, chunk_spans(cap, r), "cap={cap} r={r}");
+            assert_eq!(spans.iter().map(|s| s.1).sum::<usize>(), cap);
+            // Empty load vector behaves identically.
+            assert_eq!(chunk_spans_weighted(cap, r, &[]), chunk_spans(cap, r));
+            assert_eq!(sp_spans_measured(cap, r, &zeros), chunk_spans(cap, r));
+        }
     }
 
     #[test]

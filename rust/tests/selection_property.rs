@@ -1,7 +1,8 @@
 //! Selection-accuracy property (paper §VI's selection-accuracy analogue,
-//! extended to the SP family): over a seeded random configuration grid,
-//! the generalized Algorithm 1's pick among {S1, S2, SP(r*)} must match
-//! the simulated argmin on ≥ 95% of cases — where "match" tolerates
+//! extended to the chunk-pipelined families): over a seeded random
+//! configuration grid, the generalized Algorithm 1's pick among
+//! {S1, S2, SP(r*), SP2(r*)} must match the simulated argmin on ≥ 95% of
+//! cases — where "match" tolerates
 //! near-ties (a pick within 5% of the simulated best is not a
 //! misprediction the user could feel). Checked for the paper's uniform
 //! routing AND with the Zipf skew knob enabled (load-aware spans + the
@@ -52,13 +53,16 @@ fn selection_accuracy(skews: &[f64], seed: u64, label: &str) {
             .makespan;
         let sp_kind = ScheduleKind::Pipelined { chunks: pred.sp_chunks };
         let tsp = lowering::simulate_iteration(sp_kind, &cfg, &cluster).unwrap().makespan;
+        let sp2_kind = ScheduleKind::PipelinedS2 { chunks: pred.sp2_chunks };
+        let tsp2 = lowering::simulate_iteration(sp2_kind, &cfg, &cluster).unwrap().makespan;
         let t_pick = match pick {
             ScheduleKind::S1 => t1,
             ScheduleKind::S2 => t2,
             ScheduleKind::Pipelined { .. } => tsp,
+            ScheduleKind::PipelinedS2 { .. } => tsp2,
             other => panic!("unexpected pick {other:?}"),
         };
-        let best = t1.min(t2).min(tsp);
+        let best = t1.min(t2).min(tsp).min(tsp2);
         let regret = (t_pick - best) / best;
         worst = worst.max(regret);
         total += 1;
@@ -67,7 +71,7 @@ fn selection_accuracy(skews: &[f64], seed: u64, label: &str) {
         } else {
             eprintln!(
                 "[{label}] mispick at {}: chose {} ({t_pick:.4}s) vs best {best:.4}s \
-                 (s1 {t1:.4}, s2 {t2:.4}, sp {tsp:.4}, regret {:.1}%)",
+                 (s1 {t1:.4}, s2 {t2:.4}, sp {tsp:.4}, sp2 {tsp2:.4}, regret {:.1}%)",
                 cfg.id(),
                 pick.label(),
                 regret * 100.0

@@ -133,6 +133,9 @@ fn json_spelling_yields_identical_sweep_csv_timings_and_prediction() {
         assert_eq!(pa.t_sp, pb.t_sp);
         assert_eq!(pa.t_sp_iter, pb.t_sp_iter);
         assert_eq!(pa.sp_chunks, pb.sp_chunks);
+        assert_eq!(pa.t_sp2, pb.t_sp2);
+        assert_eq!(pa.t_sp2_iter, pb.t_sp2_iter);
+        assert_eq!(pa.sp2_chunks, pb.sp2_chunks);
         assert_eq!(pa.bottleneck_node, pb.bottleneck_node);
         assert_eq!(pa.best(), pb.best());
     }
@@ -175,7 +178,13 @@ fn straggler_node_flips_optimal_chunks_and_the_pick() {
     let (r_homo, _) = closedform::optimal_chunks(&homo, &c);
     assert_eq!(r_homo, 1, "baseline should not pipeline this shape");
     let (pick_homo, _) = closedform::choose_extended(&homo, &c);
-    assert!(!matches!(pick_homo, ScheduleKind::Pipelined { .. }), "{pick_homo:?}");
+    assert!(
+        !matches!(
+            pick_homo,
+            ScheduleKind::Pipelined { .. } | ScheduleKind::PipelinedS2 { .. }
+        ),
+        "{pick_homo:?}"
+    );
 
     // The fast node of the mixed fleet agrees with the homogeneous
     // baseline exactly (same links, same flops).
@@ -191,8 +200,11 @@ fn straggler_node_flips_optimal_chunks_and_the_pick() {
     assert_ne!(r_slow, r_homo, "slow-node r* must differ from the baseline");
     let (pick_slow, _) = closedform::choose_extended_on(&het, &c, 1);
     assert!(
-        matches!(pick_slow, ScheduleKind::Pipelined { .. }),
-        "straggler pick should be SP, got {pick_slow:?}"
+        matches!(
+            pick_slow,
+            ScheduleKind::Pipelined { .. } | ScheduleKind::PipelinedS2 { .. }
+        ),
+        "straggler pick should be a pipelined family, got {pick_slow:?}"
     );
     assert_ne!(pick_slow, pick_homo);
 
@@ -207,8 +219,11 @@ fn straggler_node_flips_optimal_chunks_and_the_pick() {
     assert_eq!(pred.bottleneck_node, 1, "{pred:?}");
     assert!(pred.sp_chunks > 1, "{pred:?}");
     assert!(
-        matches!(pred.best(), ScheduleKind::Pipelined { .. }),
-        "fitted fleet pick should be SP on the straggler fleet, got {:?}",
+        matches!(
+            pred.best(),
+            ScheduleKind::Pipelined { .. } | ScheduleKind::PipelinedS2 { .. }
+        ),
+        "fitted fleet pick should be a pipelined family on the straggler fleet, got {:?}",
         pred.best()
     );
 }
