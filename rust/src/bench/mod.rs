@@ -7,5 +7,6 @@ pub mod runner;
 
 pub use paper::{fig1, fig6, fig7, saa_ablation, selection_accuracy, table4, table5};
 pub use runner::{
-    run_sweep, run_sweep_with_threads, sweep_csv, CaseResult, ModelCache, MAX_SWEEP_THREADS,
+    case_key, run_sweep, run_sweep_cached, run_sweep_with_threads, sweep_csv, CaseResult,
+    ModelCache, SweepCache, SweepOutcome, SweepStats, MAX_SWEEP_THREADS,
 };

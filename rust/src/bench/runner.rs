@@ -7,19 +7,37 @@
 //! indices from a shared atomic counter and write into per-index slots —
 //! the result vector is byte-identical to the sequential runner's,
 //! config-ordered, regardless of thread count or interleaving. The α-β
-//! model cache is shared (mutex-guarded map; fitting happens outside the
-//! lock, first insert wins).
+//! model cache is shared: one slot per layout, with the fit running under
+//! the slot's own lock so concurrent requests for the same layout
+//! coalesce into a single fit.
+//!
+//! ## Incremental re-runs (`--cache-dir`)
+//!
+//! With a [`SweepCache`], results persist across invocations as
+//! content-addressed JSONL: each case is keyed by [`case_key`] — the
+//! stable FNV-1a of the plan schema version, the topology's canonical
+//! JSON, and the configuration's canonical JSON — so editing one knob
+//! only re-simulates the cases whose keys changed, and any topology or
+//! schema change invalidates everything at once. Floats round-trip
+//! bit-exactly through the JSON layer (shortest-representation printing),
+//! so a warm sweep's CSV is byte-identical to the cold run's. The shared
+//! fit cache persists through the same directory (`models.jsonl`), keyed
+//! the same way.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::config::moe::ParallelDegrees;
 use crate::config::{ClusterTopology, MoeLayerConfig};
-use crate::perfmodel::{selection, PerfModel};
+use crate::perfmodel::{selection, PerfModel, PLAN_SCHEMA_VERSION};
 use crate::schedule::{lowering, ScheduleKind};
+use crate::util::hash::fnv64_hex;
+use crate::util::json::Json;
 
 /// One configuration's simulated iteration times.
 #[derive(Debug, Clone)]
@@ -48,6 +66,33 @@ pub struct CaseResult {
     /// Fig 1 quantity: fraction of baseline iteration not covered by
     /// compute.
     pub comm_ratio_baseline: f64,
+}
+
+/// Serialize a schedule kind as `{"kind", "chunks"}` — the family name
+/// and the chunk count as separate fields, because the concatenated
+/// string form is ambiguous (`"sp23"` parses as the sp2 family at r = 3,
+/// not SP at r = 23).
+fn kind_to_json(k: ScheduleKind) -> Json {
+    let chunks = match k {
+        ScheduleKind::Pipelined { chunks }
+        | ScheduleKind::PipelinedUniform { chunks }
+        | ScheduleKind::PipelinedS2 { chunks } => chunks,
+        _ => 0,
+    };
+    Json::obj(vec![("kind", Json::str(k.name())), ("chunks", Json::num(chunks as f64))])
+}
+
+fn kind_from_json(j: &Json) -> Result<ScheduleKind> {
+    let name = j.req_str("kind")?;
+    let chunks = j.req_usize("chunks")?;
+    let kind =
+        ScheduleKind::parse(name).ok_or_else(|| anyhow!("unknown schedule kind `{name}`"))?;
+    Ok(match kind {
+        ScheduleKind::Pipelined { .. } => ScheduleKind::Pipelined { chunks },
+        ScheduleKind::PipelinedUniform { .. } => ScheduleKind::PipelinedUniform { chunks },
+        ScheduleKind::PipelinedS2 { .. } => ScheduleKind::PipelinedS2 { chunks },
+        k => k,
+    })
 }
 
 impl CaseResult {
@@ -83,6 +128,44 @@ impl CaseResult {
     pub fn speedup_parm(&self) -> f64 {
         self.t_baseline / self.t_parm()
     }
+
+    /// Serialize for the on-disk case cache. Every float survives the
+    /// roundtrip bit-exactly, so a cached case renders the same CSV row
+    /// as the simulation that produced it.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cfg", self.cfg.to_json()),
+            ("t_baseline", Json::num(self.t_baseline)),
+            ("t_s1", Json::num(self.t_s1)),
+            ("t_s2", Json::num(self.t_s2)),
+            ("t_s2_aas", Json::num(self.t_s2_aas)),
+            ("t_sp", Json::num(self.t_sp)),
+            ("t_sp_uniform", Json::num(self.t_sp_uniform)),
+            ("sp_chunks", Json::num(self.sp_chunks as f64)),
+            ("t_sp2", Json::num(self.t_sp2)),
+            ("sp2_chunks", Json::num(self.sp2_chunks as f64)),
+            ("parm_choice", kind_to_json(self.parm_choice)),
+            ("comm_ratio_baseline", Json::num(self.comm_ratio_baseline)),
+        ])
+    }
+
+    /// Inverse of [`CaseResult::to_json`].
+    pub fn from_json(j: &Json) -> Result<CaseResult> {
+        Ok(CaseResult {
+            cfg: MoeLayerConfig::from_json(j.get("cfg"))?,
+            t_baseline: j.req_f64("t_baseline")?,
+            t_s1: j.req_f64("t_s1")?,
+            t_s2: j.req_f64("t_s2")?,
+            t_s2_aas: j.req_f64("t_s2_aas")?,
+            t_sp: j.req_f64("t_sp")?,
+            t_sp_uniform: j.req_f64("t_sp_uniform")?,
+            sp_chunks: j.req_usize("sp_chunks")?,
+            t_sp2: j.req_f64("t_sp2")?,
+            sp2_chunks: j.req_usize("sp2_chunks")?,
+            parm_choice: kind_from_json(j.get("parm_choice"))?,
+            comm_ratio_baseline: j.req_f64("comm_ratio_baseline")?,
+        })
+    }
 }
 
 /// Render sweep results as the golden-CSV format: config-ordered rows at
@@ -112,35 +195,290 @@ pub fn sweep_csv(results: &[CaseResult]) -> String {
     s
 }
 
+/// Content-addressed cache key for one sweep case: FNV-1a over the plan
+/// schema version, the topology's content hash, and the configuration's
+/// canonical JSON. Any schema bump, topology edit, or config change moves
+/// the key — a cache can go stale only by *missing*, never by lying.
+pub fn case_key(cluster_hash: &str, cfg: &MoeLayerConfig) -> String {
+    let version = format!("parmcase.v{PLAN_SCHEMA_VERSION}");
+    fnv64_hex(&[&version, cluster_hash, &cfg.to_json().to_string()])
+}
+
+/// Cache key for one persisted α-β fit (same derivation as [`case_key`],
+/// over the parallel layout instead of a full layer config).
+fn fit_key(cluster_hash: &str, par: ParallelDegrees) -> String {
+    let version = format!("parmfit.v{PLAN_SCHEMA_VERSION}");
+    let layout = format!("p{}_mp{}_esp{}", par.p, par.n_mp, par.n_esp);
+    fnv64_hex(&[&version, cluster_hash, &layout])
+}
+
+type ModelSlot = Arc<Mutex<Option<PerfModel>>>;
+
 /// Per-layout α-β model cache (fitting is itself a simulation sweep, so
 /// reuse across the hundreds of grid rows sharing a layout). Thread-safe:
 /// shared by the sweep workers.
 #[derive(Default)]
 pub struct ModelCache {
-    map: Mutex<BTreeMap<(String, usize, usize, usize), PerfModel>>,
+    map: Mutex<BTreeMap<(String, usize, usize, usize), ModelSlot>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    fit_nanos: AtomicU64,
 }
 
 impl ModelCache {
-    /// Fetch (or fit) the model for a layout. Fitting runs outside the
-    /// lock — two workers may race to fit the same layout; the first
-    /// insert wins and the fit is deterministic, so both see equal models.
+    /// Fetch (or fit) the model for a layout. The map lock is held only
+    /// long enough to clone the layout's slot; the fit runs under the
+    /// slot's own lock, so concurrent requests for the *same* layout
+    /// coalesce into one fit (latecomers block on the slot and reuse it)
+    /// while distinct layouts still fit in parallel.
     pub fn get(&self, cluster: &ClusterTopology, par: ParallelDegrees) -> Result<PerfModel> {
         let key = (cluster.name.clone(), par.p, par.n_mp, par.n_esp);
-        if let Some(m) = self.map.lock().unwrap().get(&key) {
+        let slot = Arc::clone(self.map.lock().unwrap().entry(key).or_default());
+        let mut resolved = slot.lock().unwrap();
+        if let Some(m) = resolved.as_ref() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(m.clone());
         }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let start = Instant::now();
         let fitted = PerfModel::fit(cluster, par)?;
-        let mut map = self.map.lock().unwrap();
-        Ok(map.entry(key).or_insert(fitted).clone())
+        self.fit_nanos.fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        *resolved = Some(fitted.clone());
+        Ok(fitted)
     }
 
+    /// Pre-populate a layout's slot with an already-fitted model (from a
+    /// plan artifact or the persisted fit cache). A model someone already
+    /// fitted wins over the seed — they are equal anyway (fitting is
+    /// deterministic) and the resolved slot must never change.
+    pub fn seed(&self, model: PerfModel) {
+        let key = (model.cluster_name.clone(), model.par.p, model.par.n_mp, model.par.n_esp);
+        let slot = Arc::clone(self.map.lock().unwrap().entry(key).or_default());
+        let mut resolved = slot.lock().unwrap();
+        if resolved.is_none() {
+            *resolved = Some(model);
+        }
+    }
+
+    /// Snapshot of every resolved model, in key order.
+    pub fn models(&self) -> Vec<PerfModel> {
+        let map = self.map.lock().unwrap();
+        map.values().filter_map(|s| s.lock().unwrap().clone()).collect()
+    }
+
+    /// Number of layouts with a resolved (fitted or seeded) model.
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        let map = self.map.lock().unwrap();
+        map.values().filter(|s| s.lock().unwrap().is_some()).count()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Lookups answered from a resolved slot.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to fit (seeding counts as neither).
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Total time spent inside [`PerfModel::fit`], in seconds — summed
+    /// over workers, so it can exceed the wall time of a parallel sweep.
+    pub fn fit_seconds(&self) -> f64 {
+        self.fit_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+}
+
+/// File names inside a `--cache-dir`.
+pub const CASES_FILE: &str = "cases.jsonl";
+pub const MODELS_FILE: &str = "models.jsonl";
+
+/// The on-disk, content-addressed sweep cache behind `--cache-dir`:
+/// `cases.jsonl` holds one simulated [`CaseResult`] per line under its
+/// [`case_key`]; `models.jsonl` persists the shared fit cache the same
+/// way. See the module doc for the invalidation story.
+pub struct SweepCache {
+    dir: PathBuf,
+    cases: BTreeMap<String, CaseResult>,
+}
+
+impl SweepCache {
+    /// Open a cache directory (creating it if needed) and load any prior
+    /// case entries. A malformed line is a hard error naming the file and
+    /// line — a corrupt cache should be deleted, never half-trusted.
+    pub fn open(dir: &Path) -> Result<SweepCache> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        let mut cases = BTreeMap::new();
+        let path = dir.join(CASES_FILE);
+        if path.exists() {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            for (lineno, line) in text.lines().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let bad = |e: &dyn std::fmt::Display| {
+                    anyhow!(
+                        "{}:{}: {e} — delete the cache dir to rebuild",
+                        path.display(),
+                        lineno + 1
+                    )
+                };
+                let j = Json::parse(line).map_err(|e| bad(&e))?;
+                let key = j.req_str("key").map_err(|e| bad(&e))?.to_string();
+                cases.insert(key, CaseResult::from_json(j.get("case")).map_err(|e| bad(&e))?);
+            }
+        }
+        Ok(SweepCache { dir: dir.to_path_buf(), cases })
+    }
+
+    pub fn lookup(&self, key: &str) -> Option<&CaseResult> {
+        self.cases.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.cases.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cases.is_empty()
+    }
+
+    /// Append newly simulated cases. The sweep appends its misses in grid
+    /// order from the coordinating thread, so the file stays deterministic
+    /// for a given history of runs.
+    pub fn append_cases(&mut self, entries: &[(String, CaseResult)]) -> Result<()> {
+        if entries.is_empty() {
+            return Ok(());
+        }
+        let mut buf = String::new();
+        for (key, case) in entries {
+            let line = Json::obj(vec![("key", Json::str(key)), ("case", case.to_json())]);
+            buf.push_str(&line.to_string());
+            buf.push('\n');
+            self.cases.insert(key.clone(), case.clone());
+        }
+        let path = self.dir.join(CASES_FILE);
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        f.write_all(buf.as_bytes()).with_context(|| format!("appending {}", path.display()))
+    }
+
+    /// Seed `cache` with persisted fits whose keys still match the current
+    /// topology. A topology edit changes the expected key, so stale models
+    /// are skipped (they'll be refitted and rewritten), never trusted.
+    /// Returns how many models were seeded.
+    pub fn seed_models(&self, cluster: &ClusterTopology, cache: &ModelCache) -> Result<usize> {
+        let path = self.dir.join(MODELS_FILE);
+        if !path.exists() {
+            return Ok(0);
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let hash = cluster.content_hash();
+        let mut seeded = 0;
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line)
+                .map_err(|e| anyhow!("{}:{}: {e}", path.display(), lineno + 1))?;
+            let key = j.req_str("key")?.to_string();
+            let model = PerfModel::from_json(j.get("model"))
+                .map_err(|e| anyhow!("{}:{}: {e}", path.display(), lineno + 1))?;
+            if key == fit_key(&hash, model.par) {
+                cache.seed(model);
+                seeded += 1;
+            }
+        }
+        Ok(seeded)
+    }
+
+    /// Rewrite the persisted fit cache from the in-memory one (whole-file:
+    /// the model set is small and BTreeMap order keeps it deterministic).
+    pub fn store_models(&self, cluster: &ClusterTopology, cache: &ModelCache) -> Result<()> {
+        let hash = cluster.content_hash();
+        let mut buf = String::new();
+        for m in cache.models() {
+            let key = fit_key(&hash, m.par);
+            let line = Json::obj(vec![("key", Json::str(&key)), ("model", m.to_json())]);
+            buf.push_str(&line.to_string());
+            buf.push('\n');
+        }
+        let path = self.dir.join(MODELS_FILE);
+        std::fs::write(&path, buf).with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+/// Cache-effectiveness counters and the fit/sim timing breakdown a sweep
+/// reports (`parm sweep` prints these; `BENCH_sweep.json` carries them).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SweepStats {
+    /// Cases answered from the on-disk cache (0 when it is disabled).
+    pub case_hits: usize,
+    /// Cases that had to be simulated.
+    pub case_misses: usize,
+    /// α-β model lookups answered from the in-memory cache.
+    pub fit_hits: usize,
+    /// α-β model lookups that had to fit.
+    pub fit_misses: usize,
+    /// Models pre-seeded from a plan artifact or the persisted fit cache.
+    pub seeded_models: usize,
+    /// Time inside [`PerfModel::fit`], seconds (summed over workers).
+    pub fit_seconds: f64,
+    /// Wall time of the simulate phase — cache misses only, fitting
+    /// included (fits happen lazily inside the first case of a layout).
+    pub sim_seconds: f64,
+}
+
+/// A sweep's results plus the counters describing how they were obtained.
+pub struct SweepOutcome {
+    /// Config-ordered case results — byte-identical CSV regardless of
+    /// thread count or cache state.
+    pub results: Vec<CaseResult>,
+    pub stats: SweepStats,
+}
+
+/// Run the whole sweep across all available cores (progress printed every
+/// ~10% when `verbose`). Output order is config order — identical to the
+/// sequential runner's.
+pub fn run_sweep(
+    configs: &[MoeLayerConfig],
+    cluster: &ClusterTopology,
+    verbose: bool,
+) -> Result<Vec<CaseResult>> {
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(MAX_SWEEP_THREADS);
+    run_sweep_with_threads(configs, cluster, verbose, threads)
+}
+
+/// Hard cap on sweep workers: far above any real machine, low enough that
+/// a mistyped `--threads` value errors instead of attempting to spawn an
+/// absurd scope.
+pub const MAX_SWEEP_THREADS: usize = 1024;
+
+/// Run the sweep on exactly `threads` workers (1 = sequential), with no
+/// on-disk cache. Errors on degenerate worker counts (`0`, or beyond
+/// [`MAX_SWEEP_THREADS`]) rather than silently clamping them; counts
+/// above the case count are reduced to it.
+pub fn run_sweep_with_threads(
+    configs: &[MoeLayerConfig],
+    cluster: &ClusterTopology,
+    verbose: bool,
+    threads: usize,
+) -> Result<Vec<CaseResult>> {
+    Ok(run_sweep_cached(configs, cluster, verbose, threads, None, &[])?.results)
 }
 
 /// Simulate one configuration under every schedule (SP at the fitted
@@ -199,80 +537,102 @@ pub fn run_case(
     })
 }
 
-/// Run the whole sweep across all available cores (progress printed every
-/// ~10% when `verbose`). Output order is config order — identical to the
-/// sequential runner's.
-pub fn run_sweep(
-    configs: &[MoeLayerConfig],
-    cluster: &ClusterTopology,
-    verbose: bool,
-) -> Result<Vec<CaseResult>> {
-    let threads = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(MAX_SWEEP_THREADS);
-    run_sweep_with_threads(configs, cluster, verbose, threads)
-}
-
-/// Hard cap on sweep workers: far above any real machine, low enough that
-/// a mistyped `--threads` value errors instead of attempting to spawn an
-/// absurd scope.
-pub const MAX_SWEEP_THREADS: usize = 1024;
-
-/// Run the sweep on exactly `threads` workers (1 = sequential). Errors on
-/// degenerate worker counts (`0`, or beyond [`MAX_SWEEP_THREADS`]) rather
-/// than silently clamping them; counts above the case count are reduced
-/// to it (extra workers would only spin on an empty queue).
-pub fn run_sweep_with_threads(
+/// The full incremental sweep: resolve what the on-disk cache already
+/// knows, simulate only the misses (on `threads` workers), persist the
+/// new cases and fitted models, and report hit/miss + timing counters.
+/// `seed_models` pre-populates the fit cache (e.g. from a plan artifact)
+/// so those layouts are never refitted.
+pub fn run_sweep_cached(
     configs: &[MoeLayerConfig],
     cluster: &ClusterTopology,
     verbose: bool,
     threads: usize,
-) -> Result<Vec<CaseResult>> {
+    cache_dir: Option<&Path>,
+    seed_models: &[PerfModel],
+) -> Result<SweepOutcome> {
     ensure!(threads >= 1, "sweep needs at least one worker thread (got --threads 0)");
     ensure!(
         threads <= MAX_SWEEP_THREADS,
         "sweep worker count {threads} exceeds the {MAX_SWEEP_THREADS}-thread cap"
     );
     let cache = ModelCache::default();
-    let tick = (configs.len() / 10).max(1);
-    let threads = threads.min(configs.len().max(1));
-
-    if threads <= 1 {
-        let mut out = Vec::with_capacity(configs.len());
-        for (i, cfg) in configs.iter().enumerate() {
-            out.push(run_case(cfg, cluster, &cache)?);
-            if verbose && (i + 1) % tick == 0 {
-                eprintln!("  sweep {}/{} on {}", i + 1, configs.len(), cluster.name);
-            }
-        }
-        return Ok(out);
+    for m in seed_models {
+        cache.seed(m.clone());
+    }
+    let mut seeded = seed_models.len();
+    let mut disk = cache_dir.map(SweepCache::open).transpose()?;
+    if let Some(d) = &disk {
+        seeded += d.seed_models(cluster, &cache)?;
     }
 
-    let next = AtomicUsize::new(0);
-    let done = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<Result<CaseResult>>>> =
-        (0..configs.len()).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= configs.len() {
-                    break;
-                }
-                let r = run_case(&configs[i], cluster, &cache);
-                *slots[i].lock().unwrap() = Some(r);
-                let d = done.fetch_add(1, Ordering::Relaxed) + 1;
-                if verbose && d % tick == 0 {
-                    eprintln!("  sweep {}/{} on {}", d, configs.len(), cluster.name);
-                }
-            });
+    // Resolve hits up front; the workers only ever see the miss list.
+    let cluster_hash = cluster.content_hash();
+    let keys: Vec<String> = configs.iter().map(|c| case_key(&cluster_hash, c)).collect();
+    let mut slots: Vec<Option<CaseResult>> = keys
+        .iter()
+        .map(|k| disk.as_ref().and_then(|d| d.lookup(k)).cloned())
+        .collect();
+    let misses: Vec<usize> = (0..configs.len()).filter(|&i| slots[i].is_none()).collect();
+    let case_hits = configs.len() - misses.len();
+
+    let sim_start = Instant::now();
+    let workers = threads.min(misses.len().max(1));
+    let tick = (misses.len() / 10).max(1);
+    if workers <= 1 {
+        for (done, &i) in misses.iter().enumerate() {
+            slots[i] = Some(run_case(&configs[i], cluster, &cache)?);
+            if verbose && (done + 1) % tick == 0 {
+                eprintln!("  sweep {}/{} on {}", done + 1, misses.len(), cluster.name);
+            }
         }
-    });
-    slots
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("every claimed case completes"))
-        .collect()
+    } else {
+        let next = AtomicUsize::new(0);
+        let done = AtomicUsize::new(0);
+        let sim_slots: Vec<Mutex<Option<Result<CaseResult>>>> =
+            misses.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let j = next.fetch_add(1, Ordering::Relaxed);
+                    if j >= misses.len() {
+                        break;
+                    }
+                    let r = run_case(&configs[misses[j]], cluster, &cache);
+                    *sim_slots[j].lock().unwrap() = Some(r);
+                    let d = done.fetch_add(1, Ordering::Relaxed) + 1;
+                    if verbose && d % tick == 0 {
+                        eprintln!("  sweep {}/{} on {}", d, misses.len(), cluster.name);
+                    }
+                });
+            }
+        });
+        for (j, slot) in sim_slots.into_iter().enumerate() {
+            let r = slot.into_inner().unwrap().expect("every claimed case completes")?;
+            slots[misses[j]] = Some(r);
+        }
+    }
+    let sim_seconds = sim_start.elapsed().as_secs_f64();
+
+    if let Some(d) = &mut disk {
+        let fresh: Vec<(String, CaseResult)> = misses
+            .iter()
+            .map(|&i| (keys[i].clone(), slots[i].clone().expect("miss was simulated")))
+            .collect();
+        d.append_cases(&fresh)?;
+        d.store_models(cluster, &cache)?;
+    }
+
+    let stats = SweepStats {
+        case_hits,
+        case_misses: misses.len(),
+        fit_hits: cache.hits(),
+        fit_misses: cache.misses(),
+        seeded_models: seeded,
+        fit_seconds: cache.fit_seconds(),
+        sim_seconds,
+    };
+    let results = slots.into_iter().map(|s| s.expect("every slot resolved")).collect();
+    Ok(SweepOutcome { results, stats })
 }
 
 #[cfg(test)]
@@ -292,6 +652,12 @@ mod tests {
             dtype_bytes: 4,
             skew: 0.0,
         }
+    }
+
+    fn temp_cache_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("parm_runner_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
     }
 
     #[test]
@@ -350,6 +716,67 @@ mod tests {
         run_case(&cfg(8, 2, 2), &cluster, &cache).unwrap();
         run_case(&cfg(8, 2, 2), &cluster, &cache).unwrap();
         assert_eq!(cache.len(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+        assert!(cache.fit_seconds() > 0.0);
+    }
+
+    #[test]
+    fn model_cache_coalesces_concurrent_fits() {
+        // Four workers race for the same layout: exactly one fit happens,
+        // the rest block on the slot and reuse it.
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+        let cache = ModelCache::default();
+        let par = ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 };
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| cache.get(&cluster, par).unwrap());
+            }
+        });
+        assert_eq!(cache.misses(), 1, "duplicate in-flight fits must coalesce");
+        assert_eq!(cache.hits(), 3);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn seeded_model_is_a_hit_not_a_fit() {
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+        let par = ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 };
+        let fitted = PerfModel::fit(&cluster, par).unwrap();
+        let cache = ModelCache::default();
+        cache.seed(fitted);
+        assert_eq!(cache.len(), 1);
+        cache.get(&cluster, par).unwrap();
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 0);
+    }
+
+    #[test]
+    fn case_result_json_roundtrip_is_exact() {
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+        let cache = ModelCache::default();
+        let mut c = cfg(8, 2, 2);
+        c.skew = 1.5; // exercise the skew field and load-aware columns
+        let r = run_case(&c, &cluster, &cache).unwrap();
+        let back = CaseResult::from_json(&r.to_json()).unwrap();
+        assert_eq!(format!("{back:?}"), format!("{r:?}"));
+        // Bit-exact floats ⇒ identical CSV bytes, the cache's contract.
+        assert_eq!(sweep_csv(&[back]), sweep_csv(&[r]));
+    }
+
+    #[test]
+    fn schedule_kind_json_disambiguates_chunked_families() {
+        // "sp" at r = 23 and "sp2" at r = 3 collide in the concatenated
+        // string form; the {kind, chunks} object keeps them distinct.
+        for k in [
+            ScheduleKind::Pipelined { chunks: 23 },
+            ScheduleKind::PipelinedS2 { chunks: 3 },
+            ScheduleKind::PipelinedUniform { chunks: 4 },
+            ScheduleKind::S1,
+            ScheduleKind::S2,
+        ] {
+            assert_eq!(kind_from_json(&kind_to_json(k)).unwrap(), k, "{k:?}");
+        }
     }
 
     #[test]
@@ -384,5 +811,48 @@ mod tests {
                 "parallel sweep diverged at {threads} threads"
             );
         }
+    }
+
+    #[test]
+    fn warm_cache_sweep_is_all_hits_and_byte_identical() {
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+        let configs = vec![cfg(8, 2, 2), cfg(8, 4, 2), cfg(8, 2, 4)];
+        let dir = temp_cache_dir("warm");
+        let cold = run_sweep_cached(&configs, &cluster, false, 2, Some(&dir), &[]).unwrap();
+        assert_eq!(cold.stats.case_hits, 0);
+        assert_eq!(cold.stats.case_misses, 3);
+        let warm = run_sweep_cached(&configs, &cluster, false, 2, Some(&dir), &[]).unwrap();
+        assert_eq!(warm.stats.case_hits, 3);
+        assert_eq!(warm.stats.case_misses, 0);
+        assert_eq!(warm.stats.fit_misses, 0, "persisted fits must seed the model cache");
+        assert_eq!(sweep_csv(&warm.results), sweep_csv(&cold.results));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn cache_key_tracks_schema_topology_and_config() {
+        let a = ClusterTopology::testbed_b_subset(8).unwrap();
+        let b = ClusterTopology::testbed_b_subset(16).unwrap();
+        let c1 = cfg(8, 2, 2);
+        let mut c2 = cfg(8, 2, 2);
+        c2.b *= 2;
+        assert_eq!(case_key(&a.content_hash(), &c1), case_key(&a.content_hash(), &c1));
+        assert_ne!(case_key(&a.content_hash(), &c1), case_key(&b.content_hash(), &c1));
+        assert_ne!(case_key(&a.content_hash(), &c1), case_key(&a.content_hash(), &c2));
+    }
+
+    #[test]
+    fn partial_cache_only_simulates_the_new_cases() {
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+        let dir = temp_cache_dir("partial");
+        let first = vec![cfg(8, 2, 2), cfg(8, 4, 2)];
+        run_sweep_cached(&first, &cluster, false, 1, Some(&dir), &[]).unwrap();
+        // One knob edited ⇒ exactly one new key misses.
+        let mut edited = first.clone();
+        edited[1].b *= 2;
+        let second = run_sweep_cached(&edited, &cluster, false, 1, Some(&dir), &[]).unwrap();
+        assert_eq!(second.stats.case_hits, 1);
+        assert_eq!(second.stats.case_misses, 1);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -149,6 +149,17 @@ impl LinkClass {
             LinkClass::Inter(a, b) => format!("inter.c{a}.c{b}"),
         }
     }
+
+    /// Inverse of [`LinkClass::id`] — used when deserializing per-class
+    /// α-β fits out of a plan artifact.
+    pub fn parse(id: &str) -> Option<LinkClass> {
+        if let Some(c) = id.strip_prefix("intra.c") {
+            return c.parse().ok().map(LinkClass::Intra);
+        }
+        let rest = id.strip_prefix("inter.c")?;
+        let (a, b) = rest.split_once(".c")?;
+        Some(LinkClass::Inter(a.parse().ok()?, b.parse().ok()?))
+    }
 }
 
 /// Static description of a (possibly heterogeneous) GPU cluster: the
@@ -497,6 +508,16 @@ impl ClusterTopology {
         ])
     }
 
+    /// Stable content hash of the topology: FNV-1a over the canonical
+    /// compact JSON encoding ([`Self::to_json`]), so two topologies hash
+    /// equal iff their documents are identical (name, node list, link and
+    /// compute constants). This is the hash plan artifacts and the sweep's
+    /// content-addressed case cache key on — editing any node spec (or
+    /// renaming the fleet) invalidates both.
+    pub fn content_hash(&self) -> String {
+        crate::util::hash::fnv64_hex(&["cluster", &self.to_json().to_string()])
+    }
+
     /// Parse either topology format:
     ///
     /// * **Per-node** (the native form): `{"name", "nodes": [{"gpus",
@@ -702,6 +723,37 @@ mod tests {
         assert_eq!(t.num_nodes(), 3);
         assert_eq!(t.total_gpus(), 12);
         assert!(t.is_homogeneous());
+    }
+
+    #[test]
+    fn link_class_id_roundtrips() {
+        let classes = [
+            LinkClass::Intra(0),
+            LinkClass::Intra(7),
+            LinkClass::Inter(0, 1),
+            LinkClass::Inter(3, 12),
+        ];
+        for class in classes {
+            assert_eq!(LinkClass::parse(&class.id()), Some(class));
+        }
+        for bad in ["intra", "intra.cX", "inter.c1", "inter.c1.cX", "nvlink.c0", ""] {
+            assert_eq!(LinkClass::parse(bad), None, "{bad}");
+        }
+    }
+
+    #[test]
+    fn content_hash_tracks_topology_edits() {
+        let b = ClusterTopology::testbed_b();
+        assert_eq!(b.content_hash(), ClusterTopology::testbed_b().content_hash());
+        assert_eq!(b.content_hash().len(), 16);
+        // Any node-spec edit — or a rename — changes the hash.
+        assert_ne!(b.content_hash(), hetero_two_class().content_hash());
+        let mut slow = b.node_specs().to_vec();
+        slow[0].gpu_flops /= 2.0;
+        let edited = ClusterTopology::new("testbed_b", slow).unwrap();
+        assert_ne!(b.content_hash(), edited.content_hash());
+        let renamed = ClusterTopology::new("testbed_c", b.node_specs().to_vec()).unwrap();
+        assert_ne!(b.content_hash(), renamed.content_hash());
     }
 
     #[test]

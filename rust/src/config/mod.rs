@@ -10,4 +10,4 @@ pub mod sweep;
 pub use cluster::{AlphaBeta, ClusterTopology, LinkClass, NodeSpec};
 pub use model::ModelConfig;
 pub use moe::{MoeLayerConfig, ParallelDegrees};
-pub use sweep::{sweep_table3, SweepFilter};
+pub use sweep::{sweep_table3, sweep_table3_scaled, GridAxes, SweepFilter};

@@ -9,6 +9,13 @@
 //! exactly and apply the analogous feasibility filter against the target
 //! cluster profile (memory capacity + placement constraints); the bench
 //! harness prints the retained count so the filter is auditable.
+//!
+//! Beyond the paper's grid, [`sweep_table3_scaled`] densifies the
+//! hyper-parameter axes (B, L, M, H, f — the layout axes are pinned by
+//! the hardware) by repeatedly inserting midpoints of the widest value
+//! gaps, multiplying the per-layout row count by `scale` — the
+//! `parm sweep --scale K` axis that drives the planner to 10⁵+ cases
+//! while keeping the number of distinct α-β fits unchanged.
 
 use super::cluster::ClusterTopology;
 use super::moe::{MoeLayerConfig, ParallelDegrees};
@@ -33,21 +40,146 @@ pub const TABLE3_L: [usize; 3] = [512, 1024, 2048];
 pub const TABLE3_MH: [usize; 3] = [1024, 2048, 4096];
 pub const TABLE3_F: [f64; 2] = [1.2, 2.4];
 
+/// The per-layer hyper-parameter axes of a (possibly densified) Table III
+/// grid. The parallel-layout axes (P, N_MP, N_ESP) are not part of this:
+/// they are pinned by the hardware, which also pins the number of α-β
+/// fits a sweep needs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridAxes {
+    pub b: Vec<usize>,
+    pub l: Vec<usize>,
+    pub m: Vec<usize>,
+    pub h: Vec<usize>,
+    pub f: Vec<f64>,
+}
+
+impl GridAxes {
+    /// The paper's own candidate values.
+    pub fn table3() -> GridAxes {
+        GridAxes {
+            b: TABLE3_B.to_vec(),
+            l: TABLE3_L.to_vec(),
+            m: TABLE3_MH.to_vec(),
+            h: TABLE3_MH.to_vec(),
+            f: TABLE3_F.to_vec(),
+        }
+    }
+
+    /// Candidate rows per parallel layout (before validity filtering).
+    pub fn rows(&self) -> usize {
+        self.b.len() * self.l.len() * self.m.len() * self.h.len() * self.f.len()
+    }
+
+    /// Densify the axes until the per-layout row count reaches `scale`
+    /// times Table III's, inserting the midpoint of each axis's widest
+    /// value gap round-robin. Every Table III value stays in the grid, so
+    /// a scaled sweep is a superset of the paper's; `scale <= 1` returns
+    /// the paper's axes unchanged.
+    pub fn densified(scale: usize) -> GridAxes {
+        let mut axes = GridAxes::table3();
+        if scale <= 1 {
+            return axes;
+        }
+        let target = axes.rows().saturating_mul(scale);
+        let mut stalled = 0;
+        let mut turn = 0usize;
+        while axes.rows() < target && stalled < 5 {
+            let grown = match turn % 5 {
+                0 => grow_usize(&mut axes.b),
+                1 => grow_usize(&mut axes.l),
+                2 => grow_usize(&mut axes.m),
+                3 => grow_usize(&mut axes.h),
+                _ => grow_f64(&mut axes.f),
+            };
+            stalled = if grown { 0 } else { stalled + 1 };
+            turn += 1;
+        }
+        axes
+    }
+}
+
+/// Insert the integer midpoint of the widest gap (ties: the leftmost).
+/// Returns false when no gap admits a new distinct value.
+fn grow_usize(axis: &mut Vec<usize>) -> bool {
+    let mut best: Option<(usize, usize)> = None;
+    for (i, w) in axis.windows(2).enumerate() {
+        let gap = w[1] - w[0];
+        let wider = match best {
+            Some((_, g)) => gap > g,
+            None => true,
+        };
+        if gap >= 2 && wider {
+            best = Some((i, gap));
+        }
+    }
+    if let Some((i, gap)) = best {
+        axis.insert(i + 1, axis[i] + gap / 2);
+        true
+    } else {
+        false
+    }
+}
+
+/// Insert the widest gap's midpoint, rounded to 4 decimals so config ids
+/// stay readable (`f` prints via `Display` in [`MoeLayerConfig::id`]).
+fn grow_f64(axis: &mut Vec<f64>) -> bool {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, w) in axis.windows(2).enumerate() {
+        let gap = w[1] - w[0];
+        let wider = match best {
+            Some((_, g)) => gap > g,
+            None => true,
+        };
+        if wider {
+            best = Some((i, gap));
+        }
+    }
+    if let Some((i, _)) = best {
+        let mid = ((axis[i] + axis[i + 1]) / 2.0 * 1e4).round() / 1e4;
+        if mid <= axis[i] || mid >= axis[i + 1] {
+            return false;
+        }
+        axis.insert(i + 1, mid);
+        true
+    } else {
+        false
+    }
+}
+
 /// Enumerate the Table III grid for one cluster, in deterministic order.
 ///
 /// The number of experts is not in Table III; as in DeepSpeed-MoE's layer
 /// benchmarks we place one expert per EP slot (`E = N_EP = P / N_ESP`) and
 /// use top-2 gating (the GShard/Switch default the paper's models use).
 pub fn sweep_table3(cluster: &ClusterTopology, filter: SweepFilter) -> Vec<MoeLayerConfig> {
+    enumerate_grid(cluster, filter, &GridAxes::table3())
+}
+
+/// [`sweep_table3`] over [`GridAxes::densified`]`(scale)` — the
+/// `--scale K` grid multiplier. `scale == 1` is bit-identical to the
+/// paper's grid.
+pub fn sweep_table3_scaled(
+    cluster: &ClusterTopology,
+    filter: SweepFilter,
+    scale: usize,
+) -> Vec<MoeLayerConfig> {
+    enumerate_grid(cluster, filter, &GridAxes::densified(scale))
+}
+
+fn enumerate_grid(
+    cluster: &ClusterTopology,
+    filter: SweepFilter,
+    axes: &GridAxes,
+) -> Vec<MoeLayerConfig> {
     let mut out = Vec::new();
     for &p in &TABLE3_P {
         for &n_mp in &TABLE3_NMP {
             for &n_esp in &TABLE3_NESP {
-                for &b in &TABLE3_B {
-                    for &l in &TABLE3_L {
-                        for &m in &TABLE3_MH {
-                            for &h in &TABLE3_MH {
-                                for &f in &TABLE3_F {
+                for &b in &axes.b {
+                    for &l in &axes.l {
+                        for &m in &axes.m {
+                            for &h in &axes.h {
+                                for &f in &axes.f {
                                     let par = ParallelDegrees { p, n_mp, n_esp };
                                     let cfg = MoeLayerConfig {
                                         par,
@@ -196,5 +328,59 @@ mod tests {
         let a = sweep_table3(&cluster, SweepFilter::Feasible);
         let b = sweep_table3(&cluster, SweepFilter::Feasible);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scale_one_is_the_paper_grid() {
+        let cluster = ClusterTopology::testbed_b();
+        assert_eq!(
+            sweep_table3_scaled(&cluster, SweepFilter::Feasible, 1),
+            sweep_table3(&cluster, SweepFilter::Feasible)
+        );
+        assert_eq!(GridAxes::densified(0), GridAxes::table3());
+    }
+
+    #[test]
+    fn densified_axes_reach_the_target_and_keep_the_originals() {
+        let base = GridAxes::table3();
+        for scale in [2usize, 8, 64] {
+            let axes = GridAxes::densified(scale);
+            assert!(
+                axes.rows() >= base.rows() * scale,
+                "scale {scale}: {} rows < {}",
+                axes.rows(),
+                base.rows() * scale
+            );
+            for (dense, orig) in [
+                (&axes.b, &base.b),
+                (&axes.l, &base.l),
+                (&axes.m, &base.m),
+                (&axes.h, &base.h),
+            ] {
+                assert!(dense.windows(2).all(|w| w[0] < w[1]), "axis must stay sorted");
+                assert!(orig.iter().all(|v| dense.contains(v)), "paper values must survive");
+            }
+            assert!(axes.f.windows(2).all(|w| w[0] < w[1]));
+            assert!(base.f.iter().all(|v| axes.f.contains(v)));
+        }
+    }
+
+    #[test]
+    fn scaled_grid_is_valid_and_larger() {
+        let cluster = ClusterTopology::testbed_b();
+        let base = sweep_table3(&cluster, SweepFilter::Feasible);
+        let scaled = sweep_table3_scaled(&cluster, SweepFilter::Feasible, 2);
+        assert!(scaled.len() > base.len());
+        for c in &scaled {
+            c.validate().unwrap();
+        }
+        // Same layout axes ⇒ the α-β fit count is unchanged.
+        let layouts = |cs: &[MoeLayerConfig]| {
+            let mut set: Vec<_> = cs.iter().map(|c| (c.par.p, c.par.n_mp, c.par.n_esp)).collect();
+            set.sort_unstable();
+            set.dedup();
+            set
+        };
+        assert_eq!(layouts(&base), layouts(&scaled));
     }
 }

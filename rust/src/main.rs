@@ -6,10 +6,16 @@
 //!   sim         simulate one MoE layer config under a schedule
 //!   fit         fit and print the α-β performance models (Fig 6 style)
 //!   choose      Algorithm 1: pick S1 or S2 for a config
+//!   plan        compile a plan artifact (fitted models + decisions)
 //!   sweep       Table III sweep on a cluster; summary per schedule
 //!   bench       regenerate paper tables/figures (fig1|fig6|table4|fig7|
 //!               table5|saa|selection|choices|all)
 //!   trace       emit a Chrome trace of one simulated schedule
+//!
+//! `sim`, `choose` and `sweep` accept `--plan <file>` to load a compiled
+//! plan instead of refitting; `sweep` accepts `--cache-dir` for
+//! content-addressed incremental re-runs and `--scale K` to densify the
+//! grid.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -17,10 +23,10 @@ use std::process::ExitCode;
 use anyhow::{anyhow, bail, Result};
 
 use parm::bench::paper;
-use parm::bench::CaseResult;
+use parm::bench::{CaseResult, SweepStats};
 use parm::config::moe::ParallelDegrees;
 use parm::config::{sweep as sweepcfg, ClusterTopology, MoeLayerConfig, SweepFilter};
-use parm::perfmodel::{closedform, selection, PerfModel};
+use parm::perfmodel::{closedform, selection, PerfModel, Plan};
 use parm::schedule::{lowering, ScheduleKind};
 use parm::sim::trace::chrome_trace;
 use parm::train::{train_lm, TrainOptions};
@@ -43,6 +49,7 @@ fn main() -> ExitCode {
         "sim" => cmd_sim(&rest),
         "fit" => cmd_fit(&rest),
         "choose" => cmd_choose(&rest),
+        "plan" => cmd_plan(&rest),
         "sweep" => cmd_sweep(&rest),
         "bench" => cmd_bench(&rest),
         "trace" => cmd_trace(&rest),
@@ -71,6 +78,7 @@ fn print_usage() {
          sim      simulate one MoE layer under a schedule\n  \
          fit      fit α-β performance models (Fig 6)\n  \
          choose   Algorithm 1 schedule selection for a config\n  \
+         plan     compile a plan artifact (parm plan build)\n  \
          sweep    Table III sweep summary on a cluster\n  \
          bench    regenerate paper tables/figures\n  \
          trace    emit Chrome trace of a simulated schedule\n\n\
@@ -97,6 +105,10 @@ const LAYER_SPECS: &[Spec] = &[
     Spec::opt_default("f", "1.2", "capacity factor"),
     Spec::opt_default("skew", "0", "Zipf routing-skew exponent (0 = uniform routing)"),
     Spec::opt("e", "number of experts (default: P / N_ESP)"),
+    Spec::opt(
+        "plan",
+        "compiled plan artifact (`parm plan build`); predictions load without refitting",
+    ),
     Spec::flag("help", "show help"),
 ];
 
@@ -135,6 +147,47 @@ fn layer_from(a: &Args) -> Result<(MoeLayerConfig, ClusterTopology)> {
     );
     Ok((cfg, cluster))
 }
+
+/// Load `--plan` (hash-checked against the resolved topology) when given.
+fn plan_from(a: &Args, cluster: &ClusterTopology) -> Result<Option<Plan>> {
+    match a.get("plan") {
+        Some(path) => Ok(Some(Plan::load_checked(Path::new(path), cluster)?)),
+        None => Ok(None),
+    }
+}
+
+/// The sweep/plan grid options: `--scale` densifies Table III, `--p`
+/// restricts the layout axis, `--limit` truncates, `--skew` sets the
+/// routing-skew knob on every retained config.
+fn sweep_configs(a: &Args, cluster: &ClusterTopology) -> Result<Vec<MoeLayerConfig>> {
+    let scale = a.get_usize("scale")?.unwrap_or(1);
+    let mut configs = sweepcfg::sweep_table3_scaled(cluster, SweepFilter::Feasible, scale);
+    if let Some(p) = a.get_usize("p")? {
+        configs.retain(|c| c.par.p == p);
+    }
+    if let Some(limit) = a.get_usize("limit")? {
+        configs.truncate(limit);
+    }
+    if let Some(skew) = a.get_f64("skew")? {
+        if !skew.is_finite() || skew < 0.0 {
+            bail!("routing skew must be finite and ≥ 0, got {skew}");
+        }
+        // Skewed-routing workload family: the same grid under imbalanced
+        // traffic (Zipf gate bias); SP's spans become load-aware and the
+        // SP-uniform column shows what uniform chunking would have cost.
+        for c in &mut configs {
+            c.skew = skew;
+        }
+    }
+    Ok(configs)
+}
+
+const GRID_SPECS: &[Spec] = &[
+    Spec::opt("p", "restrict to one P"),
+    Spec::opt("limit", "only run the first N configs"),
+    Spec::opt("skew", "run the grid with a Zipf routing-skew exponent (imbalanced traffic)"),
+    Spec::opt("scale", "grid multiplier K: densify the Table III axes to ≥ K× the rows"),
+];
 
 fn help_guard(a: &Args, cmd: &str, about: &str, specs: &[Spec]) -> bool {
     if a.has_flag("help") {
@@ -229,9 +282,9 @@ fn cmd_sim(rest: &[String]) -> Result<()> {
         return Ok(());
     }
     let (cfg, cluster) = layer_from(&a)?;
-    let kind = ScheduleKind::parse(a.req("schedule")?)
-        .ok_or_else(|| anyhow!("bad --schedule"))?;
-    let kind = resolve(kind, &cfg, &cluster)?;
+    let plan = plan_from(&a, &cluster)?;
+    let kind = ScheduleKind::parse(a.req("schedule")?).ok_or_else(|| anyhow!("bad --schedule"))?;
+    let kind = resolve(kind, &cfg, &cluster, plan.as_ref())?;
     let measured: Option<Vec<usize>> = match a.req("spans")? {
         "expected" => None,
         "measured" => {
@@ -267,13 +320,18 @@ fn resolve(
     kind: ScheduleKind,
     cfg: &MoeLayerConfig,
     cluster: &ClusterTopology,
+    plan: Option<&Plan>,
 ) -> Result<ScheduleKind> {
     match kind {
-        // Generalized Algorithm 1 over the fitted α-β models.
-        ScheduleKind::Parm => {
-            let model = PerfModel::fit(cluster, cfg.par)?;
-            Ok(selection::choose_schedule_extended(&model, cfg))
-        }
+        // Generalized Algorithm 1 — from the plan artifact when given
+        // (no refit), else over freshly fitted α-β models.
+        ScheduleKind::Parm => match plan {
+            Some(p) => Ok(p.predict(cfg)?.best()),
+            None => {
+                let model = PerfModel::fit(cluster, cfg.par)?;
+                Ok(selection::choose_schedule_extended(&model, cfg))
+            }
+        },
         // `sp` with no pinned r: closed-form optimal chunk count.
         ScheduleKind::Pipelined { chunks: 0 } => {
             let (r, _) = closedform::optimal_chunks(cluster, cfg);
@@ -357,8 +415,12 @@ fn cmd_choose(rest: &[String]) -> Result<()> {
         return Ok(());
     }
     let (cfg, cluster) = layer_from(&a)?;
-    let model = PerfModel::fit(&cluster, cfg.par)?;
-    let pred = selection::predict(&model, &cfg);
+    let pred = match plan_from(&a, &cluster)? {
+        // From the artifact: the stored decision (or the stored layout
+        // model for an off-grid config) — no fitting happens.
+        Some(plan) => plan.predict(&cfg)?,
+        None => selection::predict(&PerfModel::fit(&cluster, cfg.par)?, &cfg),
+    };
     println!("t_baseline (predicted): {}", fmt_seconds(pred.t_baseline));
     println!("t_D1 (S1, predicted)  : {}", fmt_seconds(pred.t_d1));
     println!("t_D2 (S2, predicted)  : {}", fmt_seconds(pred.t_d2));
@@ -390,52 +452,127 @@ fn cmd_choose(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_sweep(rest: &[String]) -> Result<()> {
-    const SPECS: &[Spec] = &[
+fn cmd_plan(rest: &[String]) -> Result<()> {
+    let mut specs = vec![
         Spec::opt_default("cluster", "testbed_b", "cluster name or JSON path"),
         Spec::opt("cluster-json", "cluster topology JSON (overrides --cluster)"),
-        Spec::opt("p", "restrict to one P"),
-        Spec::opt("limit", "only run the first N configs"),
-        Spec::opt("skew", "run the grid with a Zipf routing-skew exponent (imbalanced traffic)"),
+    ];
+    specs.extend_from_slice(GRID_SPECS);
+    specs.push(Spec::opt_default("out", "plan.json", "plan artifact output path"));
+    specs.push(Spec::flag("help", "show help"));
+    let a = Args::parse(rest, &specs)?;
+    if help_guard(
+        &a,
+        "plan",
+        "compile a plan artifact: fitted α-β models + Algorithm-1 decisions (parm plan build)",
+        &specs,
+    ) {
+        return Ok(());
+    }
+    match a.positional.first().map(|s| s.as_str()) {
+        Some("build") => {}
+        Some(other) => bail!("unknown plan action `{other}` (try `parm plan build`)"),
+        None => bail!("usage: parm plan build [options] --out plan.json"),
+    }
+    let cluster = cluster_from(&a)?;
+    let configs = sweep_configs(&a, &cluster)?;
+    anyhow::ensure!(!configs.is_empty(), "no feasible configs to plan on {}", cluster.name);
+    let t0 = std::time::Instant::now();
+    let plan = Plan::build(&cluster, &configs)?;
+    let path = Path::new(a.req("out")?);
+    plan.save(path)?;
+    println!(
+        "plan: {} decisions over {} fitted layouts on {} in {:.3}s → {}",
+        plan.decisions().len(),
+        plan.num_models(),
+        cluster.name,
+        t0.elapsed().as_secs_f64(),
+        path.display()
+    );
+    println!("cluster hash {} · grid hash {}", plan.cluster_hash, plan.grid_hash);
+    Ok(())
+}
+
+/// The fixed-format cache/timing trailer `parm sweep` always prints (the
+/// CI cache-reuse job greps these lines verbatim).
+fn print_sweep_stats(stats: &SweepStats, cache_enabled: bool) {
+    println!("sweep timing: fit {:.3}s · sim {:.3}s", stats.fit_seconds, stats.sim_seconds);
+    println!(
+        "fit cache: {} hits / {} misses ({} seeded)",
+        stats.fit_hits, stats.fit_misses, stats.seeded_models
+    );
+    if cache_enabled {
+        println!("case cache: {} hits / {} misses", stats.case_hits, stats.case_misses);
+    } else {
+        println!("case cache: disabled (no --cache-dir)");
+    }
+}
+
+fn cmd_sweep(rest: &[String]) -> Result<()> {
+    let mut specs = vec![
+        Spec::opt_default("cluster", "testbed_b", "cluster name or JSON path"),
+        Spec::opt("cluster-json", "cluster topology JSON (overrides --cluster)"),
+    ];
+    specs.extend_from_slice(GRID_SPECS);
+    specs.extend_from_slice(&[
         Spec::opt("threads", "sweep worker threads, 1..=1024 (default: all cores)"),
+        Spec::opt("plan", "compiled plan artifact: seed every fit from it, never refit"),
+        Spec::opt("cache-dir", "content-addressed case/fit cache dir (incremental re-runs)"),
         Spec::opt("csv", "write per-case results CSV to PATH (golden-gate format)"),
         Spec::opt(
             "bench-json",
             "write sweep throughput + per-schedule mean makespans to PATH (times a sequential re-run of up to 64 cases)",
         ),
         Spec::flag("help", "show help"),
-    ];
-    let a = Args::parse(rest, SPECS)?;
-    if help_guard(&a, "sweep", "Table III sweep summary", SPECS) {
+    ]);
+    let a = Args::parse(rest, &specs)?;
+    if help_guard(&a, "sweep", "Table III sweep summary", &specs) {
         return Ok(());
     }
     let cluster = cluster_from(&a)?;
-    let mut configs = match a.get_usize("p")? {
-        Some(p) => sweepcfg::sweep_at_p(&cluster, p, SweepFilter::Feasible),
-        None => sweepcfg::sweep_table3(&cluster, SweepFilter::Feasible),
-    };
-    if let Some(limit) = a.get_usize("limit")? {
-        configs.truncate(limit);
-    }
-    if let Some(skew) = a.get_f64("skew")? {
-        if !skew.is_finite() || skew < 0.0 {
-            bail!("routing skew must be finite and ≥ 0, got {skew}");
-        }
-        // Skewed-routing workload family: the same grid under imbalanced
-        // traffic (Zipf gate bias); SP's spans become load-aware and the
-        // SP-uniform column shows what uniform chunking would have cost.
-        for c in &mut configs {
-            c.skew = skew;
-        }
-    }
+    let configs = sweep_configs(&a, &cluster)?;
     println!("{} feasible configs on {}", configs.len(), cluster.name);
-    let threads = a.get_usize("threads")?;
-    let t_run = std::time::Instant::now();
-    let results = match threads {
-        Some(t) => parm::bench::run_sweep_with_threads(&configs, &cluster, true, t)?,
-        None => parm::bench::run_sweep(&configs, &cluster, true)?,
+    // The `--plan` contract is "no refitting": every layout of the grid
+    // must be covered by the artifact, or the run fails up front.
+    let seed_models: Vec<PerfModel> = match plan_from(&a, &cluster)? {
+        Some(plan) => {
+            let mut layouts: Vec<_> =
+                configs.iter().map(|c| (c.par.p, c.par.n_mp, c.par.n_esp)).collect();
+            layouts.sort_unstable();
+            layouts.dedup();
+            for &(p, n_mp, n_esp) in &layouts {
+                let par = ParallelDegrees { p, n_mp, n_esp };
+                if plan.model_for(par).is_none() {
+                    bail!(
+                        "--plan artifact lacks a fitted model for layout p={p} mp={n_mp} \
+                         esp={n_esp} — rebuild it with `parm plan build` over this grid"
+                    );
+                }
+            }
+            plan.models().cloned().collect()
+        }
+        None => Vec::new(),
     };
+    let cache_dir = a.get("cache-dir").map(PathBuf::from);
+    let threads = match a.get_usize("threads")? {
+        Some(t) => t,
+        None => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(parm::bench::MAX_SWEEP_THREADS),
+    };
+    let t_run = std::time::Instant::now();
+    let outcome = parm::bench::run_sweep_cached(
+        &configs,
+        &cluster,
+        true,
+        threads,
+        cache_dir.as_deref(),
+        &seed_models,
+    )?;
     let run_secs = t_run.elapsed().as_secs_f64();
+    let stats = outcome.stats;
+    let results = outcome.results;
     let s1: Vec<f64> = results.iter().map(|r| r.speedup_s1()).collect();
     let s2: Vec<f64> = results.iter().map(|r| r.speedup_s2()).collect();
     let sp: Vec<f64> = results.iter().map(|r| r.speedup_sp()).collect();
@@ -454,12 +591,13 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
         ]);
     }
     print!("{}", t.to_text());
+    print_sweep_stats(&stats, cache_dir.is_some());
     if let Some(path) = a.get("csv") {
         std::fs::write(path, parm::bench::sweep_csv(&results))?;
         eprintln!("wrote per-case CSV to {path}");
     }
     if let Some(path) = a.get("bench-json") {
-        write_sweep_bench_json(path, &configs, &cluster, &results, threads, run_secs)?;
+        write_sweep_bench_json(path, &configs, &cluster, &results, threads, run_secs, &stats)?;
     }
     Ok(())
 }
@@ -476,12 +614,11 @@ fn write_sweep_bench_json(
     configs: &[MoeLayerConfig],
     cluster: &ClusterTopology,
     results: &[CaseResult],
-    threads: Option<usize>,
+    threads: usize,
     par_s: f64,
+    stats: &SweepStats,
 ) -> Result<()> {
     use parm::util::json::Json;
-    let n = threads
-        .unwrap_or_else(|| std::thread::available_parallelism().map(|v| v.get()).unwrap_or(2));
     let sample = configs.len().min(64);
     let t0 = std::time::Instant::now();
     let seq = parm::bench::run_sweep_with_threads(&configs[..sample], cluster, false, 1)?;
@@ -496,12 +633,18 @@ fn write_sweep_bench_json(
     let j = Json::obj(vec![
         ("cluster", Json::str(&cluster.name)),
         ("cases", Json::num(cases)),
-        ("threads", Json::num(n as f64)),
+        ("threads", Json::num(threads as f64)),
         ("seq_sample_cases", Json::num(sample as f64)),
         ("seq_sample_seconds", Json::num(seq_s)),
         ("par_seconds", Json::num(par_s)),
         ("cases_per_sec_seq", Json::num(sample as f64 / seq_s.max(1e-9))),
         ("cases_per_sec_par", Json::num(cases / par_s.max(1e-9))),
+        ("case_cache_hits", Json::num(stats.case_hits as f64)),
+        ("case_cache_misses", Json::num(stats.case_misses as f64)),
+        ("fit_cache_hits", Json::num(stats.fit_hits as f64)),
+        ("fit_cache_misses", Json::num(stats.fit_misses as f64)),
+        ("fit_seconds", Json::num(stats.fit_seconds)),
+        ("sim_seconds", Json::num(stats.sim_seconds)),
         (
             "mean_makespan",
             Json::obj(vec![
@@ -572,9 +715,9 @@ fn cmd_trace(rest: &[String]) -> Result<()> {
         return Ok(());
     }
     let (cfg, cluster) = layer_from(&a)?;
-    let kind = ScheduleKind::parse(a.req("schedule")?)
-        .ok_or_else(|| anyhow!("bad --schedule"))?;
-    let kind = resolve(kind, &cfg, &cluster)?;
+    let plan = plan_from(&a, &cluster)?;
+    let kind = ScheduleKind::parse(a.req("schedule")?).ok_or_else(|| anyhow!("bad --schedule"))?;
+    let kind = resolve(kind, &cfg, &cluster, plan.as_ref())?;
     let (report, dag) = lowering::simulate_iteration_with_dag(kind, &cfg, &cluster)?;
     let trace = chrome_trace(&dag, &report);
     std::fs::write(a.req("out")?, trace.to_string())?;

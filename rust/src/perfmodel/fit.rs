@@ -69,6 +69,12 @@ impl CollKind {
             CollKind::SaaS2 => "saa_s2",
         }
     }
+
+    /// Inverse of [`CollKind::name`] — used when loading fitted models out
+    /// of plan artifacts and the persisted fit cache.
+    pub fn parse(name: &str) -> Option<CollKind> {
+        CollKind::ALL.into_iter().find(|k| k.name() == name)
+    }
 }
 
 /// Build the measurement DAG for one collective kind at argument `x`
@@ -213,6 +219,15 @@ impl PerfModel {
             ("p", Json::num(self.par.p as f64)),
             ("n_mp", Json::num(self.par.n_mp as f64)),
             ("n_esp", Json::num(self.par.n_esp as f64)),
+            ("gpu_flops", Json::num(self.gpu_flops)),
+            (
+                "node_flops",
+                Json::arr(
+                    self.node_flops
+                        .iter()
+                        .map(|&(n, f)| Json::arr([Json::num(n as f64), Json::num(f)])),
+                ),
+            ),
             (
                 "fits",
                 Json::Obj(
@@ -232,6 +247,55 @@ impl PerfModel {
                 ),
             ),
         ])
+    }
+
+    /// Reconstruct a fitted model from its [`PerfModel::to_json`] document
+    /// — the load path plan artifacts and the persisted fit cache go
+    /// through, so `--plan` / warm-cache runs never refit. Rejects
+    /// documents missing any of [`CollKind::ALL`]'s fits.
+    pub fn from_json(j: &Json) -> Result<PerfModel> {
+        let fit_from = |f: &Json, what: &str| -> Result<LinearFit> {
+            let field = |key: &str| f.req_f64(key).map_err(|e| anyhow!("fit `{what}`: {e}"));
+            Ok(LinearFit { intercept: field("alpha")?, slope: field("beta")?, r2: field("r2")? })
+        };
+        let mut fits = BTreeMap::new();
+        for kind in CollKind::ALL {
+            fits.insert(kind, fit_from(j.get("fits").get(kind.name()), kind.name())?);
+        }
+        let mut link_fits = BTreeMap::new();
+        let link_obj = j
+            .get("link_fits")
+            .as_obj()
+            .ok_or_else(|| anyhow!("model document lacks a `link_fits` object"))?;
+        for (id, f) in link_obj {
+            let class = LinkClass::parse(id)
+                .ok_or_else(|| anyhow!("unrecognized link-class id `{id}` in model document"))?;
+            link_fits.insert(class, fit_from(f, id)?);
+        }
+        let mut node_flops = Vec::new();
+        for entry in j.req_arr("node_flops")? {
+            let pair = entry.at(0).as_usize().zip(entry.at(1).as_f64());
+            let (node, flops) =
+                pair.ok_or_else(|| anyhow!("node_flops entries must be [node, flops] pairs"))?;
+            node_flops.push((node, flops));
+        }
+        if node_flops.is_empty() {
+            return Err(anyhow!("model document lists no node_flops"));
+        }
+        let par = ParallelDegrees {
+            p: j.req_usize("p")?,
+            n_mp: j.req_usize("n_mp")?,
+            n_esp: j.req_usize("n_esp")?,
+        };
+        par.validate()?;
+        Ok(PerfModel {
+            cluster_name: j.req_str("cluster")?.to_string(),
+            par,
+            gpu_flops: j.req_f64("gpu_flops")?,
+            node_flops,
+            fits,
+            link_fits,
+        })
     }
 }
 
@@ -337,6 +401,45 @@ mod tests {
         }
         // Link-class fits are reported under their stable ids.
         assert!(j.get("link_fits").get("intra.c0").get("beta").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        // Rust's f64 Display prints the shortest round-trip representation,
+        // so serialize → parse → serialize must be a fixed point — the
+        // property the plan artifact and fit cache rely on.
+        let c = ClusterTopology::testbed_b_subset(8).unwrap();
+        let m = PerfModel::fit(&c, par()).unwrap();
+        let doc = m.to_json();
+        let back = PerfModel::from_json(&doc).unwrap();
+        assert_eq!(back.to_json().to_string(), doc.to_string());
+        assert_eq!(back.gpu_flops, m.gpu_flops);
+        assert_eq!(back.node_flops(), m.node_flops());
+        for kind in CollKind::ALL {
+            assert_eq!(back.get(kind), m.get(kind), "{}", kind.name());
+        }
+        assert_eq!(back.link_fits(), m.link_fits());
+    }
+
+    #[test]
+    fn from_json_rejects_incomplete_documents() {
+        let c = ClusterTopology::testbed_b_subset(8).unwrap();
+        let m = PerfModel::fit(&c, par()).unwrap();
+        let mut doc = m.to_json();
+        if let Json::Obj(o) = &mut doc {
+            let Some(Json::Obj(fits)) = o.get_mut("fits") else { panic!("fits object") };
+            fits.remove("saa_s2");
+        }
+        let err = PerfModel::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("saa_s2"), "{err}");
+    }
+
+    #[test]
+    fn coll_kind_parse_roundtrips() {
+        for kind in CollKind::ALL {
+            assert_eq!(CollKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(CollKind::parse("nope"), None);
     }
 
     #[test]

@@ -24,10 +24,17 @@
 //! [`closedform`] expose the per-node view — where r* and even the
 //! Algorithm 1 pick can genuinely differ between a fast node and a
 //! straggler.
+//!
+//! Fitting is the expensive step, so its products are deployable: a
+//! [`plan::Plan`] artifact freezes the fitted tables and per-config
+//! decisions behind content hashes (`parm plan build` writes one,
+//! `--plan` consumers load it without refitting).
 
 pub mod closedform;
 pub mod fit;
+pub mod plan;
 pub mod selection;
 
 pub use fit::{measure_collective, CollKind, PerfModel};
+pub use plan::{Plan, PLAN_SCHEMA_VERSION};
 pub use selection::{choose_schedule, choose_schedule_extended};

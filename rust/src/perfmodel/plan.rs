@@ -1,0 +1,360 @@
+//! Compiled plan artifacts: the planner's output as a versioned,
+//! deployable document.
+//!
+//! A [`Plan`] captures everything `parm sim/choose/sweep` would otherwise
+//! recompute on every invocation: the fitted per-collective and
+//! per-[`crate::config::LinkClass`] α-β tables and per-node throughputs of
+//! every parallel layout in a sweep grid ([`PerfModel`]), plus the
+//! per-configuration Algorithm-1 decision ([`Prediction`] — the closed-form
+//! times, both pipelined chunk counts, and the bottleneck node). Building
+//! the plan is the expensive step (`parm plan build`); loading one is pure
+//! deserialization, so a `--plan` run never refits.
+//!
+//! ## Schema (version [`PLAN_SCHEMA_VERSION`])
+//!
+//! ```text
+//! { "schema":       1,
+//!   "cluster_hash": "<fnv64 hex of the topology's canonical JSON>",
+//!   "grid_hash":    "<fnv64 hex over each config's canonical JSON, in order>",
+//!   "cluster":      { ... ClusterTopology::to_json ... },
+//!   "models":       [ { ... PerfModel::to_json ... }, ... ],   // one per layout
+//!   "decisions":    [ { "config": {...}, "prediction": {...} }, ... ] }
+//! ```
+//!
+//! All hashes are the stable FNV-1a of [`crate::util::hash`] over
+//! *canonical encodings* — the compact JSON the structs themselves emit —
+//! so a plan matches a topology iff their documents are identical, and any
+//! edit (a node's flops, a link constant, a rename) changes the hash.
+//! Loading verifies the schema version and, via [`Plan::load_checked`],
+//! the topology hash: a mismatch is a hard error naming both hashes,
+//! never a silent stale read. The same `(schema, cluster_hash, config)`
+//! triple keys the sweep's on-disk case cache in
+//! [`crate::bench::runner`], so plan artifacts and warm caches invalidate
+//! together.
+//!
+//! Floats survive the roundtrip bit-exactly (Rust's `Display` prints the
+//! shortest representation that reparses to the same f64), which is what
+//! lets a plan-seeded or cache-warm sweep reproduce its CSV byte for byte.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::moe::ParallelDegrees;
+use crate::config::{ClusterTopology, MoeLayerConfig};
+use crate::util::hash::Fnv64;
+use crate::util::json::Json;
+
+use super::fit::PerfModel;
+use super::selection::{self, Prediction};
+
+/// Bumped whenever the plan document or anything it embeds changes shape;
+/// also part of the sweep case-cache key, so caches invalidate with it.
+pub const PLAN_SCHEMA_VERSION: u64 = 1;
+
+/// Stable content hash of a sweep grid: FNV-1a over each configuration's
+/// canonical JSON, in grid order — reordering or editing any config
+/// changes it.
+pub fn grid_hash(configs: &[MoeLayerConfig]) -> String {
+    let mut h = Fnv64::new();
+    h.write_str("grid");
+    for c in configs {
+        h.write_str(&c.to_json().to_string());
+    }
+    h.hex()
+}
+
+type LayoutKey = (usize, usize, usize);
+
+fn layout_key(par: ParallelDegrees) -> LayoutKey {
+    (par.p, par.n_mp, par.n_esp)
+}
+
+/// A compiled plan: fitted models for every layout of a grid plus the
+/// per-config Algorithm-1 decisions. See the module doc for the schema.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// The topology the plan was fitted on (embedded whole, so a plan is
+    /// self-describing even off the machine it was built on).
+    pub cluster: ClusterTopology,
+    /// [`ClusterTopology::content_hash`] at build time.
+    pub cluster_hash: String,
+    /// [`grid_hash`] of the grid the decisions cover.
+    pub grid_hash: String,
+    models: BTreeMap<LayoutKey, PerfModel>,
+    decisions: Vec<(MoeLayerConfig, Prediction)>,
+    /// Canonical config JSON → index into `decisions`.
+    index: BTreeMap<String, usize>,
+}
+
+impl Plan {
+    /// Fit every distinct layout of `configs` on `cluster` and predict
+    /// each configuration — the expensive step `parm plan build` runs
+    /// once so `--plan` consumers never have to.
+    pub fn build(cluster: &ClusterTopology, configs: &[MoeLayerConfig]) -> Result<Plan> {
+        let mut models: BTreeMap<LayoutKey, PerfModel> = BTreeMap::new();
+        let mut decisions = Vec::with_capacity(configs.len());
+        let mut index = BTreeMap::new();
+        for c in configs {
+            let key = layout_key(c.par);
+            if !models.contains_key(&key) {
+                models.insert(key, PerfModel::fit(cluster, c.par)?);
+            }
+            let pred = selection::predict(&models[&key], c);
+            index.insert(c.to_json().to_string(), decisions.len());
+            decisions.push((c.clone(), pred));
+        }
+        Ok(Plan {
+            cluster: cluster.clone(),
+            cluster_hash: cluster.content_hash(),
+            grid_hash: grid_hash(configs),
+            models,
+            decisions,
+            index,
+        })
+    }
+
+    /// The fitted model for one parallel layout, if the plan covers it.
+    pub fn model_for(&self, par: ParallelDegrees) -> Option<&PerfModel> {
+        self.models.get(&layout_key(par))
+    }
+
+    /// All fitted models, in layout order.
+    pub fn models(&self) -> impl Iterator<Item = &PerfModel> {
+        self.models.values()
+    }
+
+    pub fn num_models(&self) -> usize {
+        self.models.len()
+    }
+
+    /// The per-config decisions, in grid order.
+    pub fn decisions(&self) -> &[(MoeLayerConfig, Prediction)] {
+        &self.decisions
+    }
+
+    /// The stored decision for exactly this configuration (matched by
+    /// canonical JSON), if it was on the plan's grid.
+    pub fn prediction_for(&self, c: &MoeLayerConfig) -> Option<Prediction> {
+        self.index.get(&c.to_json().to_string()).map(|&i| self.decisions[i].1)
+    }
+
+    /// Predict `c` from the plan without refitting: the stored decision
+    /// when `c` was on the grid, else a fresh closed-form evaluation
+    /// against the stored model for `c`'s layout. Errors when the plan
+    /// has no model for that layout — the caller must rebuild, never
+    /// silently refit.
+    pub fn predict(&self, c: &MoeLayerConfig) -> Result<Prediction> {
+        if let Some(p) = self.prediction_for(c) {
+            return Ok(p);
+        }
+        let model = self.model_for(c.par).ok_or_else(|| {
+            anyhow!(
+                "plan has no fitted model for layout p={} n_mp={} n_esp={} — \
+                 rebuild it with `parm plan build` over a grid that includes this layout",
+                c.par.p,
+                c.par.n_mp,
+                c.par.n_esp
+            )
+        })?;
+        Ok(selection::predict(model, c))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::num(PLAN_SCHEMA_VERSION as f64)),
+            ("cluster_hash", Json::str(&self.cluster_hash)),
+            ("grid_hash", Json::str(&self.grid_hash)),
+            ("cluster", self.cluster.to_json()),
+            ("models", Json::arr(self.models.values().map(|m| m.to_json()))),
+            (
+                "decisions",
+                Json::arr(self.decisions.iter().map(|(c, p)| {
+                    Json::obj(vec![("config", c.to_json()), ("prediction", p.to_json())])
+                })),
+            ),
+        ])
+    }
+
+    /// Parse a plan document, rejecting unknown schema versions and
+    /// internally inconsistent artifacts (embedded topology not matching
+    /// its recorded hash — a hand-edited or corrupted file).
+    pub fn from_json(j: &Json) -> Result<Plan> {
+        let schema = j.req_usize("schema")?;
+        if schema as u64 != PLAN_SCHEMA_VERSION {
+            bail!(
+                "plan schema v{schema} unsupported (this build reads v{PLAN_SCHEMA_VERSION}) \
+                 — rebuild the artifact with `parm plan build`"
+            );
+        }
+        let cluster = ClusterTopology::from_json(j.get("cluster"))?;
+        let cluster_hash = j.req_str("cluster_hash")?.to_string();
+        if cluster.content_hash() != cluster_hash {
+            bail!(
+                "plan artifact is corrupt: embedded topology `{}` hashes to {} but the \
+                 document records {cluster_hash}",
+                cluster.name,
+                cluster.content_hash()
+            );
+        }
+        let grid_hash = j.req_str("grid_hash")?.to_string();
+        let mut models = BTreeMap::new();
+        for m in j.req_arr("models")? {
+            let model = PerfModel::from_json(m)?;
+            models.insert(layout_key(model.par), model);
+        }
+        let mut decisions = Vec::new();
+        let mut index = BTreeMap::new();
+        for d in j.req_arr("decisions")? {
+            let cfg = MoeLayerConfig::from_json(d.get("config"))?;
+            let pred = Prediction::from_json(d.get("prediction"))?;
+            index.insert(cfg.to_json().to_string(), decisions.len());
+            decisions.push((cfg, pred));
+        }
+        Ok(Plan { cluster, cluster_hash, grid_hash, models, decisions, index })
+    }
+
+    /// Write the compact document (a plan can hold 10⁵+ decisions; the
+    /// pretty form would triple the size for no reader).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing plan artifact {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Plan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan artifact {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("plan artifact {}: {e}", path.display()))?;
+        Plan::from_json(&j).with_context(|| format!("loading plan artifact {}", path.display()))
+    }
+
+    /// Load and verify the plan was built for *this* topology — a hash
+    /// mismatch is a hard error naming both hashes, never a silent stale
+    /// read.
+    pub fn load_checked(path: &Path, cluster: &ClusterTopology) -> Result<Plan> {
+        let plan = Plan::load(path)?;
+        let want = cluster.content_hash();
+        if plan.cluster_hash != want {
+            bail!(
+                "plan artifact {} was built for topology `{}` (hash {}) but the current \
+                 topology `{}` hashes to {want} — rebuild it with `parm plan build`",
+                path.display(),
+                plan.cluster.name,
+                plan.cluster_hash,
+                cluster.name
+            );
+        }
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> Vec<MoeLayerConfig> {
+        let base = MoeLayerConfig::test_default();
+        [(2usize, 2usize), (2, 4), (4, 2)]
+            .into_iter()
+            .map(|(n_mp, b)| {
+                let mut c = base.clone();
+                c.par.n_mp = n_mp;
+                c.b = b;
+                c
+            })
+            .collect()
+    }
+
+    #[test]
+    fn build_fits_each_layout_once_and_roundtrips() {
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+        let configs = grid();
+        let plan = Plan::build(&cluster, &configs).unwrap();
+        // Two distinct layouts (n_mp 2 and 4) across three configs.
+        assert_eq!(plan.num_models(), 2);
+        assert_eq!(plan.decisions().len(), 3);
+        let doc = plan.to_json();
+        let back = Plan::from_json(&doc).unwrap();
+        assert_eq!(back.to_json().to_string(), doc.to_string());
+        for c in &configs {
+            let a = plan.prediction_for(c).unwrap();
+            let b = back.prediction_for(c).unwrap();
+            assert_eq!(format!("{a:?}"), format!("{b:?}"), "{}", c.id());
+        }
+    }
+
+    #[test]
+    fn predict_off_grid_uses_stored_model_without_refit() {
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+        let configs = grid();
+        let plan = Plan::build(&cluster, &configs).unwrap();
+        // Same layout as the grid, different batch: not a stored decision,
+        // but predictable from the stored model — and bit-identical to a
+        // fresh fit because fitting is deterministic.
+        let mut off = configs[0].clone();
+        off.b = 16;
+        assert!(plan.prediction_for(&off).is_none());
+        let from_plan = plan.predict(&off).unwrap();
+        let fresh = PerfModel::fit(&cluster, off.par).unwrap();
+        let direct = selection::predict(&fresh, &off);
+        assert_eq!(format!("{from_plan:?}"), format!("{direct:?}"));
+        // Unknown layout: hard error, not a silent refit.
+        let mut alien = configs[0].clone();
+        alien.par.n_mp = 8;
+        let err = plan.predict(&alien).unwrap_err().to_string();
+        assert!(err.contains("no fitted model"), "{err}");
+    }
+
+    #[test]
+    fn grid_hash_tracks_order_and_content() {
+        let configs = grid();
+        let mut reordered = configs.clone();
+        reordered.swap(0, 1);
+        let mut edited = configs.clone();
+        edited[0].b *= 2;
+        assert_eq!(grid_hash(&configs), grid_hash(&configs));
+        assert_ne!(grid_hash(&configs), grid_hash(&reordered));
+        assert_ne!(grid_hash(&configs), grid_hash(&edited));
+    }
+
+    #[test]
+    fn schema_and_hash_mismatches_are_rejected() {
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+        let plan = Plan::build(&cluster, &grid()).unwrap();
+        // Wrong schema version.
+        let mut doc = plan.to_json();
+        if let Json::Obj(o) = &mut doc {
+            o.insert("schema".into(), Json::num(99.0));
+        }
+        let err = Plan::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("schema v99"), "{err}");
+        // Corrupt artifact: embedded topology edited after hashing.
+        let mut doc = plan.to_json();
+        if let Json::Obj(o) = &mut doc {
+            let tampered = ClusterTopology::testbed_b_subset(16).unwrap();
+            o.insert("cluster".into(), tampered.to_json());
+        }
+        let err = Plan::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("corrupt"), "{err}");
+    }
+
+    #[test]
+    fn load_checked_rejects_a_different_topology() {
+        let built_on = ClusterTopology::testbed_b_subset(8).unwrap();
+        let plan = Plan::build(&built_on, &grid()).unwrap();
+        let dir = std::env::temp_dir().join(format!("parm_plan_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        plan.save(&path).unwrap();
+        // Same topology: loads and reproduces the decisions.
+        let loaded = Plan::load_checked(&path, &built_on).unwrap();
+        assert_eq!(loaded.grid_hash, plan.grid_hash);
+        // Different topology: clear error naming the rebuild command.
+        let other = ClusterTopology::testbed_b_subset(16).unwrap();
+        let err = Plan::load_checked(&path, &other).unwrap_err().to_string();
+        assert!(err.contains("parm plan build"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -24,8 +24,11 @@
 //! [`crate::schedule::ops`], so predictions and the simulated/executed
 //! schedules always agree on sizes.
 
+use anyhow::Result;
+
 use crate::config::MoeLayerConfig;
 use crate::schedule::ops::{self, ScheduleKind};
+use crate::util::json::Json;
 
 use super::fit::{CollKind, PerfModel};
 
@@ -87,6 +90,42 @@ impl Prediction {
             self.t_sp2_iter,
         )
         .0
+    }
+
+    /// Serialize the prediction for a plan artifact. Every field is a raw
+    /// f64/usize and Rust's float Display round-trips exactly, so
+    /// [`Prediction::from_json`] reconstructs a bit-identical value.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("t_baseline", Json::num(self.t_baseline)),
+            ("t_d1", Json::num(self.t_d1)),
+            ("t_d2", Json::num(self.t_d2)),
+            ("t_ffn", Json::num(self.t_ffn)),
+            ("t_sp", Json::num(self.t_sp)),
+            ("t_sp_iter", Json::num(self.t_sp_iter)),
+            ("sp_chunks", Json::num(self.sp_chunks as f64)),
+            ("t_sp2", Json::num(self.t_sp2)),
+            ("t_sp2_iter", Json::num(self.t_sp2_iter)),
+            ("sp2_chunks", Json::num(self.sp2_chunks as f64)),
+            ("bottleneck_node", Json::num(self.bottleneck_node as f64)),
+        ])
+    }
+
+    /// Inverse of [`Prediction::to_json`].
+    pub fn from_json(j: &Json) -> Result<Prediction> {
+        Ok(Prediction {
+            t_baseline: j.req_f64("t_baseline")?,
+            t_d1: j.req_f64("t_d1")?,
+            t_d2: j.req_f64("t_d2")?,
+            t_ffn: j.req_f64("t_ffn")?,
+            t_sp: j.req_f64("t_sp")?,
+            t_sp_iter: j.req_f64("t_sp_iter")?,
+            sp_chunks: j.req_usize("sp_chunks")?,
+            t_sp2: j.req_f64("t_sp2")?,
+            t_sp2_iter: j.req_f64("t_sp2_iter")?,
+            sp2_chunks: j.req_usize("sp2_chunks")?,
+            bottleneck_node: j.req_usize("bottleneck_node")?,
+        })
     }
 }
 
@@ -312,10 +351,7 @@ mod tests {
         // The iteration argmins never exceed their r = 1 degenerations:
         // SP(1) = 2·t_D1 + 3·t_FFN, SP2(1) ≈ S2's structure (fitted SAA
         // per-chunk model, so compare against its own r = 1 evaluation).
-        assert!(
-            pred.t_sp_iter <= 2.0 * pred.t_d1 + 3.0 * pred.t_ffn + 1e-12,
-            "{pred:?}"
-        );
+        assert!(pred.t_sp_iter <= 2.0 * pred.t_d1 + 3.0 * pred.t_ffn + 1e-12, "{pred:?}");
         // best() only ever improves on better() at iteration scale.
         let base = match pred.better() {
             ScheduleKind::S1 => 2.0 * pred.t_d1 + 3.0 * pred.t_ffn,
@@ -328,6 +364,19 @@ mod tests {
             _ => 2.0 * pred.t_d2 + 3.0 * pred.t_ffn,
         };
         assert!(best_t <= base + 1e-12, "{pred:?}");
+    }
+
+    #[test]
+    fn prediction_json_roundtrip_is_bit_exact() {
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+        let par = ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 };
+        let model = PerfModel::fit(&cluster, par).unwrap();
+        let pred = predict(&model, &cfg(8, 2, 2, 1024, 1.2));
+        let back = Prediction::from_json(&pred.to_json()).unwrap();
+        // Copy struct of plain floats/usizes: field-by-field bit equality.
+        assert_eq!(format!("{back:?}"), format!("{pred:?}"));
+        assert_eq!(back.best(), pred.best());
+        assert_eq!(back.to_json().to_string(), pred.to_json().to_string());
     }
 
     #[test]
@@ -365,9 +414,7 @@ mod tests {
                 let t2 = simulate_iteration(ScheduleKind::S2, &c, &cluster).unwrap().makespan;
                 let sim_best = if t1 <= t2 { ScheduleKind::S1 } else { ScheduleKind::S2 };
                 total += 1;
-                if choice == sim_best
-                    || (t1 - t2).abs() / t1.max(t2) < 0.03
-                {
+                if choice == sim_best || (t1 - t2).abs() / t1.max(t2) < 0.03 {
                     agree += 1;
                 }
             }

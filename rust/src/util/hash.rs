@@ -1,0 +1,92 @@
+//! Stable content hashing for cache keys and plan manifests.
+//!
+//! The std `Hasher` machinery is randomized per process (SipHash keys) and
+//! its output is explicitly not stable across Rust versions, so anything
+//! written to disk — plan-artifact manifests, the sweep's content-addressed
+//! case cache — hashes through this module instead: FNV-1a over bytes,
+//! 64-bit, rendered as a fixed-width lowercase hex id. The inputs are
+//! always *canonical encodings* (the compact JSON form of a config or
+//! topology), so two values hash equal iff their documents are identical.
+
+/// Incremental FNV-1a 64-bit hasher.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv64(u64);
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+impl Default for Fnv64 {
+    fn default() -> Fnv64 {
+        Fnv64::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64(FNV_OFFSET)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    /// Feed a string plus a `\x1f` unit separator, so concatenated fields
+    /// cannot collide by boundary shifting (`"ab" + "c"` vs `"a" + "bc"`).
+    pub fn write_str(&mut self, s: &str) {
+        self.write(s.as_bytes());
+        self.write(&[0x1f]);
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+
+    /// Fixed-width lowercase hex rendering of the digest.
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+/// Hash a sequence of string fields (each separator-delimited) to a hex id.
+pub fn fnv64_hex(parts: &[&str]) -> String {
+    let mut h = Fnv64::new();
+    for p in parts {
+        h.write_str(p);
+    }
+    h.hex()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vector() {
+        // FNV-1a("") = offset basis; FNV-1a("a") = 0xaf63dc4c8601ec8c.
+        assert_eq!(Fnv64::new().finish(), FNV_OFFSET);
+        let mut h = Fnv64::new();
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn hex_is_fixed_width() {
+        let id = fnv64_hex(&["x"]);
+        assert_eq!(id.len(), 16);
+        assert!(id.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn field_boundaries_matter() {
+        assert_ne!(fnv64_hex(&["ab", "c"]), fnv64_hex(&["a", "bc"]));
+        assert_ne!(fnv64_hex(&["ab"]), fnv64_hex(&["ab", ""]));
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        assert_eq!(fnv64_hex(&["stable", "key"]), fnv64_hex(&["stable", "key"]));
+    }
+}

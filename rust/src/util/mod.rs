@@ -7,6 +7,7 @@
 
 pub mod benchmark;
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod prng;
 pub mod propcheck;

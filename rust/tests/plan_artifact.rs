@@ -1,0 +1,92 @@
+//! Plan-artifact contract tests: a compiled plan (`parm plan build`) must
+//! reproduce Algorithm 1's decisions exactly — without refitting — across
+//! a save/load roundtrip, and must refuse to load against a topology or
+//! schema it was not built for. Exact equality (not tolerance) is the
+//! point: fits are deterministic and the artifact stores full-precision
+//! floats, so `--plan` is a pure cache, never an approximation.
+
+use std::path::{Path, PathBuf};
+
+use parm::config::{sweep, ClusterTopology, MoeLayerConfig, SweepFilter};
+use parm::perfmodel::{selection, PerfModel, Plan};
+
+const HETERO_JSON: &str = "../examples/cluster_hetero.json";
+
+fn temp_plan_path(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("parm_plan_it_{}_{}", tag, std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join("plan.json")
+}
+
+fn grid(cluster: &ClusterTopology, cases: usize) -> Vec<MoeLayerConfig> {
+    let mut configs = sweep::sweep_table3(cluster, SweepFilter::Feasible);
+    assert!(configs.len() >= cases, "grid shrank below {cases} cases");
+    configs.truncate(cases);
+    configs
+}
+
+/// The fresh-fit prediction the plan must reproduce bit-for-bit.
+fn fresh(cluster: &ClusterTopology, cfg: &MoeLayerConfig) -> String {
+    let model = PerfModel::fit(cluster, cfg.par).unwrap();
+    format!("{:?}", selection::predict(&model, cfg))
+}
+
+#[test]
+fn roundtrip_reproduces_every_prediction() {
+    let cluster = ClusterTopology::testbed_b();
+    let configs = grid(&cluster, 12);
+    let plan = Plan::build(&cluster, &configs).unwrap();
+    let path = temp_plan_path("roundtrip");
+    plan.save(&path).unwrap();
+
+    let loaded = Plan::load_checked(&path, &cluster).unwrap();
+    assert_eq!(plan.to_json().to_string(), loaded.to_json().to_string());
+    for cfg in &configs {
+        let want = fresh(&cluster, cfg);
+        let got = format!("{:?}", loaded.predict(cfg).unwrap());
+        assert_eq!(want, got, "plan diverged from a fresh fit on {}", cfg.id());
+    }
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+#[test]
+fn topology_hash_mismatch_is_rejected() {
+    let built_on = ClusterTopology::testbed_b();
+    let plan = Plan::build(&built_on, &grid(&built_on, 4)).unwrap();
+    let path = temp_plan_path("mismatch");
+    plan.save(&path).unwrap();
+
+    // Same file, different fleet: the load must fail loudly, never fall
+    // back to the stale fits.
+    let other = ClusterTopology::testbed_a();
+    let err = Plan::load_checked(&path, &other).unwrap_err().to_string();
+    assert!(err.contains("rebuild"), "unhelpful mismatch error: {err}");
+    // And the artifact still loads fine against the topology it names.
+    Plan::load_checked(&path, &built_on).unwrap();
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+#[test]
+fn choose_with_plan_matches_fresh_fit_on_hetero_fleet() {
+    // `parm choose --plan` equivalence on the mixed-fleet example: the
+    // stored per-layout models price the straggler exactly like a fresh
+    // fit would, on- and off-grid.
+    let cluster = ClusterTopology::from_json_file(HETERO_JSON).unwrap();
+    let configs = grid(&cluster, 8);
+    let plan = Plan::build(&cluster, &configs).unwrap();
+    for cfg in &configs {
+        assert_eq!(fresh(&cluster, cfg), format!("{:?}", plan.predict(cfg).unwrap()));
+    }
+    // Off-grid config on a fitted layout: answered from the stored model.
+    let mut off = configs[0].clone();
+    off.b *= 2;
+    assert!(plan.prediction_for(&off).is_none(), "off-grid config must not be a stored decision");
+    assert_eq!(fresh(&cluster, &off), format!("{:?}", plan.predict(&off).unwrap()));
+}
+
+#[test]
+fn hetero_example_fixture_exists() {
+    // The CLI docs and CI point at this fixture; losing it would silently
+    // skip the mixed-fleet coverage above.
+    assert!(Path::new(HETERO_JSON).exists(), "{HETERO_JSON} missing");
+}

@@ -1,0 +1,87 @@
+//! Sweep-cache determinism property: with a `--cache-dir`, a warm re-run
+//! answers every case from disk and renders a CSV byte-identical to the
+//! cold sequential reference — at every thread count. This is the load-
+//! bearing contract behind the golden gate and the CI cache-reuse job:
+//! the cache can make a sweep faster, never different.
+
+use std::path::PathBuf;
+
+use parm::bench::{run_sweep_cached, sweep_csv};
+use parm::config::{sweep, ClusterTopology, MoeLayerConfig, SweepFilter};
+use parm::perfmodel::Plan;
+
+fn temp_cache_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("parm_sweep_it_{}_{}", tag, std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn grid(cluster: &ClusterTopology, cases: usize) -> Vec<MoeLayerConfig> {
+    let mut configs = sweep::sweep_table3(cluster, SweepFilter::Feasible);
+    assert!(configs.len() >= cases, "grid shrank below {cases} cases");
+    configs.truncate(cases);
+    configs
+}
+
+#[test]
+fn warm_sweep_is_byte_identical_at_every_thread_count() {
+    let cluster = ClusterTopology::testbed_a();
+    let configs = grid(&cluster, 10);
+    let n = configs.len();
+    // Cold sequential run, no cache: the reference bytes.
+    let reference =
+        sweep_csv(&run_sweep_cached(&configs, &cluster, false, 1, None, &[]).unwrap().results);
+
+    for threads in [1, 2, 4] {
+        let dir = temp_cache_dir(&format!("t{threads}"));
+        let cold = run_sweep_cached(&configs, &cluster, false, threads, Some(&dir), &[]).unwrap();
+        assert_eq!(cold.stats.case_hits, 0, "threads={threads}");
+        assert_eq!(cold.stats.case_misses, n, "threads={threads}");
+        assert_eq!(reference, sweep_csv(&cold.results), "cold cached run, threads={threads}");
+
+        let warm = run_sweep_cached(&configs, &cluster, false, threads, Some(&dir), &[]).unwrap();
+        assert_eq!(warm.stats.case_hits, n, "threads={threads}");
+        assert_eq!(warm.stats.case_misses, 0, "threads={threads}");
+        assert_eq!(warm.stats.fit_misses, 0, "warm run must not fit, threads={threads}");
+        assert_eq!(reference, sweep_csv(&warm.results), "warm cached run, threads={threads}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn plan_seeded_sweep_never_fits_and_matches_the_reference() {
+    // `parm sweep --plan`: the artifact's models seed the fit cache, so
+    // the sweep simulates without a single fresh fit — and the rows still
+    // match the fit-from-scratch reference exactly.
+    let cluster = ClusterTopology::testbed_b();
+    let configs = grid(&cluster, 8);
+    let reference =
+        sweep_csv(&run_sweep_cached(&configs, &cluster, false, 2, None, &[]).unwrap().results);
+
+    let plan = Plan::build(&cluster, &configs).unwrap();
+    let seeds: Vec<_> = plan.models().cloned().collect();
+    let seeded = run_sweep_cached(&configs, &cluster, false, 2, None, &seeds).unwrap();
+    assert_eq!(seeded.stats.fit_misses, 0, "a seeded sweep must never refit");
+    assert_eq!(seeded.stats.seeded_models, seeds.len());
+    assert_eq!(reference, sweep_csv(&seeded.results));
+}
+
+#[test]
+fn grid_edit_invalidates_only_the_new_cases() {
+    // Content-addressed keys: growing the grid re-simulates only the new
+    // rows; the old rows stay hits and the combined CSV is still exact.
+    let cluster = ClusterTopology::testbed_a();
+    let all = grid(&cluster, 8);
+    let first = &all[..6];
+    let dir = temp_cache_dir("partial");
+
+    let cold = run_sweep_cached(first, &cluster, false, 2, Some(&dir), &[]).unwrap();
+    assert_eq!(cold.stats.case_misses, 6);
+
+    let grown = run_sweep_cached(&all, &cluster, false, 2, Some(&dir), &[]).unwrap();
+    assert_eq!(grown.stats.case_hits, 6);
+    assert_eq!(grown.stats.case_misses, 2);
+    let reference = run_sweep_cached(&all, &cluster, false, 1, None, &[]).unwrap();
+    assert_eq!(sweep_csv(&reference.results), sweep_csv(&grown.results));
+    std::fs::remove_dir_all(&dir).ok();
+}
