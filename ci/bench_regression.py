@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate.
+
+Usage: bench_regression.py BASELINE.json CURRENT.json
+
+Compares the sweep-throughput numbers `parm sweep --bench-json` writes
+(BENCH_sweep.json) against the committed baseline:
+
+* `cases_per_sec_par` — the gated metric. A drop of more than
+  MAX_REGRESSION (25%) against the baseline fails the job. Faster-than-
+  baseline runs pass (the baseline is a floor, not a pin; re-bless it to
+  ratchet).
+* `fit_seconds` / `sim_seconds` — compared and printed for the record,
+  not gated: they scale with the grid, and runner jitter on shared CI
+  hardware makes them too noisy for a hard threshold.
+
+A baseline carrying `"seeded": true` is the placeholder committed from
+an environment with no Rust toolchain; the gate then passes with a note
+and the CI golden-bless job replaces the file with measured values on
+the next main push, arming the gate for real.
+"""
+
+import json
+import sys
+
+MAX_REGRESSION = 0.25
+
+
+def fmt(x):
+    return f"{x:.3f}" if isinstance(x, (int, float)) else str(x)
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    base_path, cur_path = argv[1], argv[2]
+    with open(base_path) as f:
+        base = json.load(f)
+    with open(cur_path) as f:
+        cur = json.load(f)
+
+    if base.get("seeded"):
+        print(
+            f"bench gate: {base_path} is the seeded placeholder — passing "
+            "with a note. The golden-bless job commits measured values on "
+            "the next main push; the >25% throughput gate arms then."
+        )
+        return 0
+
+    rows = []
+    for key in ("cases_per_sec_par", "cases_per_sec_seq", "fit_seconds", "sim_seconds"):
+        b, c = base.get(key), cur.get(key)
+        ratio = c / b if isinstance(b, (int, float)) and isinstance(c, (int, float)) and b else None
+        rows.append((key, b, c, ratio))
+        print(
+            f"bench gate: {key:>18}  baseline {fmt(b):>10}  current {fmt(c):>10}"
+            + (f"  ({ratio:.2f}x)" if ratio is not None else "")
+        )
+
+    key, b, c, ratio = rows[0]
+    if not isinstance(b, (int, float)) or b <= 0:
+        print(f"::error::{base_path} has no usable {key} — re-bless the baseline")
+        return 1
+    if not isinstance(c, (int, float)) or c <= 0:
+        print(f"::error::{cur_path} has no usable {key} — did the sweep run?")
+        return 1
+    if c < b * (1.0 - MAX_REGRESSION):
+        print(
+            f"::error::sweep throughput regressed: {key} {fmt(c)} vs baseline "
+            f"{fmt(b)} (>{MAX_REGRESSION:.0%} drop). If the slowdown is an "
+            "intentional trade (e.g. a bigger per-case workload), re-bless by "
+            "deleting BENCH_baseline.json's measured values: commit the seeded "
+            'marker {"seeded": true} and let golden-bless re-measure on main.'
+        )
+        return 1
+    print(f"bench gate: OK — {key} within {MAX_REGRESSION:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

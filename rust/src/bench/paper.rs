@@ -161,6 +161,38 @@ pub fn table4(reports: &Path) -> Result<String> {
     }
     write_report(reports, "table4_speedups", &t)?;
 
+    // Companion backward-pass table: the same cells, averaged speedup of
+    // each family's simulated backward share over the baseline backward
+    // (wgrad-AllReduce overlap included). This is the column set the
+    // whole-iteration argmin added over the forward-only Table IV.
+    let mut tb = Table::new(&[
+        "Schedule", "N_MP", "N_ESP", "Bwd speedup (T-A)", "T-B 8-GPU", "T-B 16-GPU", "T-B 32-GPU",
+    ])
+    .numeric();
+    for (sched, f) in [
+        ("S1", &(|r: &CaseResult| r.t_bwd_baseline / r.t_bwd_s1) as &dyn Fn(&CaseResult) -> f64),
+        ("S2", &|r: &CaseResult| r.t_bwd_baseline / r.t_bwd_s2),
+        ("SP", &|r: &CaseResult| r.t_bwd_baseline / r.t_bwd_sp),
+        ("SP2", &|r: &CaseResult| r.t_bwd_baseline / r.t_bwd_sp2),
+    ] {
+        for (n_mp, n_esp) in sweep::table4_cells() {
+            let a = cell_results(&res_a, n_mp, n_esp, Some(8));
+            let b8 = cell_results(&res_b, n_mp, n_esp, Some(8));
+            let b16 = cell_results(&res_b, n_mp, n_esp, Some(16));
+            let b32 = cell_results(&res_b, n_mp, n_esp, Some(32));
+            tb.row(&[
+                sched.into(),
+                format!("{n_mp}"),
+                format!("{n_esp}"),
+                avg(&a, f),
+                avg(&b8, f),
+                avg(&b16, f),
+                avg(&b32, f),
+            ]);
+        }
+    }
+    write_report(reports, "table4_backward_speedups", &tb)?;
+
     // Overall range (the paper's 1.13×–5.77× headline).
     let all: Vec<f64> = res_a
         .iter()
@@ -170,8 +202,9 @@ pub fn table4(reports: &Path) -> Result<String> {
     let lo = all.iter().cloned().fold(f64::MAX, f64::min);
     let hi = all.iter().cloned().fold(0.0, f64::max);
     Ok(format!(
-        "Table IV — averaged speedups vs baseline (paper: 1.13×–5.77× overall)\n{}\noverall Parm speedup range: {:.2}×–{:.2}× over {} cases\n",
+        "Table IV — averaged speedups vs baseline (paper: 1.13×–5.77× overall)\n{}\nbackward-pass speedups (overlapped wgrad-AllReduce)\n{}\noverall Parm speedup range: {:.2}×–{:.2}× over {} cases\n",
         t.to_text(),
+        tb.to_text(),
         lo,
         hi,
         all.len()

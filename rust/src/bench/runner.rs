@@ -61,6 +61,16 @@ pub struct CaseResult {
     pub t_sp2: f64,
     /// The r* the fitted chunked-SAA pipeline model picked.
     pub sp2_chunks: usize,
+    /// Simulated backward-pass time per family (iteration minus forward):
+    /// the overlapped wgrad-AllReduce backward programs the whole-iteration
+    /// argmin compares.
+    pub t_bwd_baseline: f64,
+    pub t_bwd_s1: f64,
+    pub t_bwd_s2: f64,
+    /// Backward share of SP at `sp_chunks`.
+    pub t_bwd_sp: f64,
+    /// Backward share of SP2 at `sp2_chunks`.
+    pub t_bwd_sp2: f64,
     /// Generalized Algorithm 1's pick among S1, S2, SP(r*) and SP2(r*).
     pub parm_choice: ScheduleKind,
     /// Fig 1 quantity: fraction of baseline iteration not covered by
@@ -144,6 +154,11 @@ impl CaseResult {
             ("sp_chunks", Json::num(self.sp_chunks as f64)),
             ("t_sp2", Json::num(self.t_sp2)),
             ("sp2_chunks", Json::num(self.sp2_chunks as f64)),
+            ("t_bwd_baseline", Json::num(self.t_bwd_baseline)),
+            ("t_bwd_s1", Json::num(self.t_bwd_s1)),
+            ("t_bwd_s2", Json::num(self.t_bwd_s2)),
+            ("t_bwd_sp", Json::num(self.t_bwd_sp)),
+            ("t_bwd_sp2", Json::num(self.t_bwd_sp2)),
             ("parm_choice", kind_to_json(self.parm_choice)),
             ("comm_ratio_baseline", Json::num(self.comm_ratio_baseline)),
         ])
@@ -162,6 +177,11 @@ impl CaseResult {
             sp_chunks: j.req_usize("sp_chunks")?,
             t_sp2: j.req_f64("t_sp2")?,
             sp2_chunks: j.req_usize("sp2_chunks")?,
+            t_bwd_baseline: j.req_f64("t_bwd_baseline")?,
+            t_bwd_s1: j.req_f64("t_bwd_s1")?,
+            t_bwd_s2: j.req_f64("t_bwd_s2")?,
+            t_bwd_sp: j.req_f64("t_bwd_sp")?,
+            t_bwd_sp2: j.req_f64("t_bwd_sp2")?,
             parm_choice: kind_from_json(j.get("parm_choice"))?,
             comm_ratio_baseline: j.req_f64("comm_ratio_baseline")?,
         })
@@ -174,11 +194,11 @@ impl CaseResult {
 /// runner produced.
 pub fn sweep_csv(results: &[CaseResult]) -> String {
     let mut s = String::from(
-        "config,t_baseline,t_s1,t_s2,t_s2_aas,t_sp,t_sp_uniform,sp_chunks,t_sp2,sp2_chunks,parm_choice\n",
+        "config,t_baseline,t_s1,t_s2,t_s2_aas,t_sp,t_sp_uniform,sp_chunks,t_sp2,sp2_chunks,t_bwd_baseline,t_bwd_s1,t_bwd_s2,t_bwd_sp,t_bwd_sp2,parm_choice\n",
     );
     for r in results {
         s.push_str(&format!(
-            "{},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{},{:.6e},{},{}\n",
+            "{},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{},{:.6e},{},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{}\n",
             r.cfg.id(),
             r.t_baseline,
             r.t_s1,
@@ -189,6 +209,11 @@ pub fn sweep_csv(results: &[CaseResult]) -> String {
             r.sp_chunks,
             r.t_sp2,
             r.sp2_chunks,
+            r.t_bwd_baseline,
+            r.t_bwd_s1,
+            r.t_bwd_s2,
+            r.t_bwd_sp,
+            r.t_bwd_sp2,
             r.parm_choice.name()
         ));
     }
@@ -492,6 +517,13 @@ pub fn run_case(
     let t_s1 = lowering::simulate_iteration(ScheduleKind::S1, cfg, cluster)?.makespan;
     let t_s2 = lowering::simulate_iteration(ScheduleKind::S2, cfg, cluster)?.makespan;
     let t_s2_aas = lowering::simulate_iteration(ScheduleKind::S2Aas, cfg, cluster)?.makespan;
+    // Backward share per family: iteration minus the forward-only makespan
+    // of the same schedule. This is the simulated ground truth the
+    // whole-iteration argmin (and its closed forms) is judged against.
+    let fwd_of = |kind| Ok::<f64, anyhow::Error>(lowering::simulate_forward(kind, cfg, cluster)?.makespan);
+    let t_bwd_baseline = base.makespan - fwd_of(ScheduleKind::Baseline)?;
+    let t_bwd_s1 = t_s1 - fwd_of(ScheduleKind::S1)?;
+    let t_bwd_s2 = t_s2 - fwd_of(ScheduleKind::S2)?;
     let model = cache.get(cluster, cfg.par)?;
     let pred = selection::predict(&model, cfg);
     let sp_chunks = pred.sp_chunks;
@@ -520,6 +552,8 @@ pub fn run_case(
         cluster,
     )?
     .makespan;
+    let t_bwd_sp = t_sp - fwd_of(ScheduleKind::Pipelined { chunks: sp_chunks })?;
+    let t_bwd_sp2 = t_sp2 - fwd_of(ScheduleKind::PipelinedS2 { chunks: sp2_chunks })?;
     let parm_choice = pred.best();
     Ok(CaseResult {
         cfg: cfg.clone(),
@@ -532,6 +566,11 @@ pub fn run_case(
         sp_chunks,
         t_sp2,
         sp2_chunks,
+        t_bwd_baseline,
+        t_bwd_s1,
+        t_bwd_s2,
+        t_bwd_sp,
+        t_bwd_sp2,
         parm_choice,
         comm_ratio_baseline: base.comm_ratio(),
     })
@@ -669,6 +708,19 @@ mod tests {
         assert!(r.speedup_s2() > 1.0, "{r:?}");
         assert!(r.t_sp > 0.0 && r.sp_chunks >= 1, "{r:?}");
         assert!(r.t_sp2 > 0.0 && r.sp2_chunks >= 1, "{r:?}");
+        // Backward dominates forward (dgrad + wgrad ≈ 2× the flops, plus
+        // the adjoint AllGathers), so every backward column is positive
+        // and at least the family's forward share.
+        for (t_iter, t_bwd) in [
+            (r.t_baseline, r.t_bwd_baseline),
+            (r.t_s1, r.t_bwd_s1),
+            (r.t_s2, r.t_bwd_s2),
+            (r.t_sp, r.t_bwd_sp),
+            (r.t_sp2, r.t_bwd_sp2),
+        ] {
+            assert!(t_bwd > 0.0 && t_bwd < t_iter, "{r:?}");
+            assert!(t_bwd >= t_iter - t_bwd, "backward should dominate: {r:?}");
+        }
         assert!(
             r.speedup_parm()
                 >= r.speedup_s1().min(r.speedup_s2()).min(r.speedup_sp()).min(r.speedup_sp2()),
@@ -686,10 +738,10 @@ mod tests {
         let mut lines = csv.lines();
         assert_eq!(
             lines.next().unwrap(),
-            "config,t_baseline,t_s1,t_s2,t_s2_aas,t_sp,t_sp_uniform,sp_chunks,t_sp2,sp2_chunks,parm_choice"
+            "config,t_baseline,t_s1,t_s2,t_s2_aas,t_sp,t_sp_uniform,sp_chunks,t_sp2,sp2_chunks,t_bwd_baseline,t_bwd_s1,t_bwd_s2,t_bwd_sp,t_bwd_sp2,parm_choice"
         );
         let row = lines.next().unwrap();
-        assert_eq!(row.split(',').count(), 11, "{row}");
+        assert_eq!(row.split(',').count(), 16, "{row}");
         assert!(row.starts_with("p8_mp2_esp2_"), "{row}");
     }
 

@@ -112,6 +112,125 @@ pub const SP2_SAA: [&str; SP_MAX_CHUNKS] = [
     "sp2.saa.6",
     "sp2.saa.7",
 ];
+/// Backward EP-group AlltoAll, dispatch direction (`bwd.ep.dispatch`):
+/// the transpose of the baseline's forward *combine* AlltoAll, carrying
+/// the output gradients dY back to the expert-hosting ranks. Same
+/// per-pair volume as its forward counterpart — transposition reverses
+/// direction, not bytes.
+pub const BWD_EP_DISPATCH: &str = "bwd.ep.dispatch";
+/// Backward EP-group AlltoAll, combine direction (`bwd.ep.combine`): the
+/// transpose of the baseline's forward *dispatch* AlltoAll, returning the
+/// input gradients dX to the token-owning ranks.
+pub const BWD_EP_COMBINE: &str = "bwd.ep.combine";
+/// Backward fused EP&ESP-AlltoAll, dispatch direction — the transpose of
+/// S1/S2's forward combine leg (carries dY to the experts).
+pub const BWD_FUSED_DISPATCH: &str = "bwd.fused.dispatch";
+/// Backward fused EP&ESP-AlltoAll, combine direction — the transpose of
+/// S1/S2's forward dispatch leg (returns dX).
+pub const BWD_FUSED_COMBINE: &str = "bwd.fused.combine";
+/// Expert FFN activation-gradient (dgrad) compute of the backward pass.
+pub const BWD_EXPERT_DGRAD: &str = "bwd.expert.dgrad";
+/// Expert FFN weight-gradient (wgrad) compute of the backward pass.
+pub const BWD_EXPERT_WGRAD: &str = "bwd.expert.wgrad";
+/// ESP-group AllReduce of the expert weight gradients. Scheduled to
+/// overlap the remaining backward ops (the deferred-completion path in
+/// [`crate::schedule::interp`]) unless the builder asked for the
+/// non-overlapped lowering.
+pub const BWD_WGRAD_ALLREDUCE: &str = "bwd.wgrad.allreduce";
+/// Backward SP dispatch AlltoAll of chunk k (`bwd.sp.dispatch.k`) — the
+/// transpose of forward `sp.combine.k`, carrying that chunk's dY.
+pub const BWD_SP_DISPATCH: [&str; SP_MAX_CHUNKS] = [
+    "bwd.sp.dispatch.0",
+    "bwd.sp.dispatch.1",
+    "bwd.sp.dispatch.2",
+    "bwd.sp.dispatch.3",
+    "bwd.sp.dispatch.4",
+    "bwd.sp.dispatch.5",
+    "bwd.sp.dispatch.6",
+    "bwd.sp.dispatch.7",
+];
+/// Backward SP dgrad compute of chunk k (`bwd.sp.dgrad.k`).
+pub const BWD_SP_DGRAD: [&str; SP_MAX_CHUNKS] = [
+    "bwd.sp.dgrad.0",
+    "bwd.sp.dgrad.1",
+    "bwd.sp.dgrad.2",
+    "bwd.sp.dgrad.3",
+    "bwd.sp.dgrad.4",
+    "bwd.sp.dgrad.5",
+    "bwd.sp.dgrad.6",
+    "bwd.sp.dgrad.7",
+];
+/// Backward SP wgrad compute of chunk k (`bwd.sp.wgrad.k`) — chains the
+/// compute stream only; the chunk's combine does not wait on it.
+pub const BWD_SP_WGRAD: [&str; SP_MAX_CHUNKS] = [
+    "bwd.sp.wgrad.0",
+    "bwd.sp.wgrad.1",
+    "bwd.sp.wgrad.2",
+    "bwd.sp.wgrad.3",
+    "bwd.sp.wgrad.4",
+    "bwd.sp.wgrad.5",
+    "bwd.sp.wgrad.6",
+    "bwd.sp.wgrad.7",
+];
+/// Backward SP combine AlltoAll of chunk k (`bwd.sp.combine.k`) — the
+/// transpose of forward `sp.dispatch.k`, returning that chunk's dX.
+pub const BWD_SP_COMBINE: [&str; SP_MAX_CHUNKS] = [
+    "bwd.sp.combine.0",
+    "bwd.sp.combine.1",
+    "bwd.sp.combine.2",
+    "bwd.sp.combine.3",
+    "bwd.sp.combine.4",
+    "bwd.sp.combine.5",
+    "bwd.sp.combine.6",
+    "bwd.sp.combine.7",
+];
+/// Backward SP2 dispatch AlltoAll of chunk k — the transpose of forward
+/// `sp2.saa.k`'s AlltoAll phase (the SAA's MP-AllGather adjoint runs once
+/// up front as an MP-ReduceScatter).
+pub const BWD_SP2_DISPATCH: [&str; SP_MAX_CHUNKS] = [
+    "bwd.sp2.dispatch.0",
+    "bwd.sp2.dispatch.1",
+    "bwd.sp2.dispatch.2",
+    "bwd.sp2.dispatch.3",
+    "bwd.sp2.dispatch.4",
+    "bwd.sp2.dispatch.5",
+    "bwd.sp2.dispatch.6",
+    "bwd.sp2.dispatch.7",
+];
+/// Backward SP2 dgrad compute of chunk k (`bwd.sp2.dgrad.k`).
+pub const BWD_SP2_DGRAD: [&str; SP_MAX_CHUNKS] = [
+    "bwd.sp2.dgrad.0",
+    "bwd.sp2.dgrad.1",
+    "bwd.sp2.dgrad.2",
+    "bwd.sp2.dgrad.3",
+    "bwd.sp2.dgrad.4",
+    "bwd.sp2.dgrad.5",
+    "bwd.sp2.dgrad.6",
+    "bwd.sp2.dgrad.7",
+];
+/// Backward SP2 wgrad compute of chunk k (`bwd.sp2.wgrad.k`).
+pub const BWD_SP2_WGRAD: [&str; SP_MAX_CHUNKS] = [
+    "bwd.sp2.wgrad.0",
+    "bwd.sp2.wgrad.1",
+    "bwd.sp2.wgrad.2",
+    "bwd.sp2.wgrad.3",
+    "bwd.sp2.wgrad.4",
+    "bwd.sp2.wgrad.5",
+    "bwd.sp2.wgrad.6",
+    "bwd.sp2.wgrad.7",
+];
+/// Backward SP2 combine AlltoAll of chunk k — the transpose of forward
+/// `sp2.dispatch.k`.
+pub const BWD_SP2_COMBINE: [&str; SP_MAX_CHUNKS] = [
+    "bwd.sp2.combine.0",
+    "bwd.sp2.combine.1",
+    "bwd.sp2.combine.2",
+    "bwd.sp2.combine.3",
+    "bwd.sp2.combine.4",
+    "bwd.sp2.combine.5",
+    "bwd.sp2.combine.6",
+    "bwd.sp2.combine.7",
+];
 /// Gating network + top-k routing (compute).
 pub const GATE: &str = "gate";
 /// Expert FFN shards (compute).

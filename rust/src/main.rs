@@ -435,6 +435,13 @@ fn cmd_choose(rest: &[String]) -> Result<()> {
         pred.sp2_chunks,
         fmt_seconds(pred.t_sp2)
     );
+    // Whole-iteration terms (schema v2): the argmin compares these, not
+    // the forward-only dispatch times above.
+    println!("t_wgradAR (predicted) : {}", fmt_seconds(pred.t_wgrad_ar));
+    println!("t_iter S1 (predicted) : {}", fmt_seconds(pred.t_iter_s1));
+    println!("t_iter S2 (predicted) : {}", fmt_seconds(pred.t_iter_s2));
+    println!("t_iter SP (predicted) : {}", fmt_seconds(pred.t_sp_iter));
+    println!("t_iter SP2 (pred.)    : {}", fmt_seconds(pred.t_sp2_iter));
     if !cluster.is_homogeneous() {
         // Per-node view: on a mixed fleet the straggler paces the fleet
         // and its r* (even its pick) can differ from the fast nodes'.
@@ -658,6 +665,18 @@ fn write_sweep_bench_json(
                 ("parm", Json::num(mean_of(&|r| r.t_parm()))),
             ]),
         ),
+        // Backward share per family (iteration minus forward) — the
+        // columns the whole-iteration argmin added in plan schema v2.
+        (
+            "mean_backward",
+            Json::obj(vec![
+                ("baseline", Json::num(mean_of(&|r| r.t_bwd_baseline))),
+                ("s1", Json::num(mean_of(&|r| r.t_bwd_s1))),
+                ("s2", Json::num(mean_of(&|r| r.t_bwd_s2))),
+                ("sp", Json::num(mean_of(&|r| r.t_bwd_sp))),
+                ("sp2", Json::num(mean_of(&|r| r.t_bwd_sp2))),
+            ]),
+        ),
     ]);
     std::fs::write(path, j.to_pretty())?;
     eprintln!("wrote sweep bench JSON to {path}");
@@ -719,6 +738,25 @@ fn cmd_trace(rest: &[String]) -> Result<()> {
     let kind = ScheduleKind::parse(a.req("schedule")?).ok_or_else(|| anyhow!("bad --schedule"))?;
     let kind = resolve(kind, &cfg, &cluster, plan.as_ref())?;
     let (report, dag) = lowering::simulate_iteration_with_dag(kind, &cfg, &cluster)?;
+    // The trace covers the whole iteration: the backward region's
+    // transposed AlltoAlls and dgrad/wgrad lanes carry `bwd.*` tags. An
+    // iteration program without them means the backward builder was
+    // bypassed — fail loudly rather than emit a forward-only trace.
+    use parm::sim::TaskKind;
+    let bwd_comm = dag
+        .tasks
+        .iter()
+        .filter(|t| t.tag.starts_with("bwd.") && matches!(t.kind, TaskKind::Transfer { .. }))
+        .count();
+    let bwd_compute = dag
+        .tasks
+        .iter()
+        .filter(|t| t.tag.starts_with("bwd.") && matches!(t.kind, TaskKind::Compute { .. }))
+        .count();
+    anyhow::ensure!(
+        bwd_comm + bwd_compute > 0,
+        "iteration trace has no bwd.* tasks — backward program missing"
+    );
     let trace = chrome_trace(&dag, &report);
     std::fs::write(a.req("out")?, trace.to_string())?;
     println!(
@@ -727,5 +765,6 @@ fn cmd_trace(rest: &[String]) -> Result<()> {
         fmt_seconds(report.makespan),
         a.req("out")?
     );
+    println!("backward region: {bwd_comm} comm + {bwd_compute} compute bwd.* tasks");
     Ok(())
 }

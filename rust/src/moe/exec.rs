@@ -762,7 +762,15 @@ impl Machine<DataTransport> for DataMachine<'_> {
                 }
                 Ok(ins)
             }
-            Op::EspReduceScatter { .. } | Op::MpReduceScatter { .. } => {
+            Op::EspReduceScatter { .. }
+            | Op::MpReduceScatter { .. }
+            | Op::BwdEpAlltoAll { .. }
+            | Op::BwdFusedAlltoAll { .. }
+            | Op::BwdWgradAllReduce { .. }
+            | Op::BwdSpDispatch { .. }
+            | Op::BwdSpCombine { .. }
+            | Op::BwdSp2Dispatch { .. }
+            | Op::BwdSp2Combine { .. } => {
                 bail!("backward op {op:?} is not executed on the data plane")
             }
             _ => bail!("non-communication op has no chunk inputs: {op:?}"),
@@ -823,6 +831,14 @@ impl Machine<DataTransport> for DataMachine<'_> {
             Op::EspSplit { .. } => self.esp_split(),
             Op::LocalCombine { .. } => self.local_combine(),
             Op::Ungate { .. } => self.ungate(),
+            Op::BwdExpertDgrad { .. }
+            | Op::BwdExpertWgrad { .. }
+            | Op::BwdSpDgrad { .. }
+            | Op::BwdSpWgrad { .. }
+            | Op::BwdSp2Dgrad { .. }
+            | Op::BwdSp2Wgrad { .. } => {
+                bail!("backward op {op:?} is not executed on the data plane")
+            }
             _ => bail!("communication op {op:?} reached apply_local"),
         }
     }

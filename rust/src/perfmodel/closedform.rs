@@ -27,9 +27,14 @@
 //! variants evaluate one node — on a heterogeneous fleet the chunk counts
 //! r* and even Algorithm 1's pick can differ per node, which the per-node
 //! API exposes ([`optimal_chunks_on`], [`optimal_chunks_sp2_on`],
-//! [`choose_extended_on`], [`sp_bottleneck_node`]). Algorithm 1 is the
-//! argmin over the four-member family {S1, S2, SP(r*), SP2(r*)} — SP2
-//! being the chunk-pipelined S2 whose per-chunk combine is a chunked SAA.
+//! [`choose_extended_on`], [`t_bwd_d1_on`], [`t_iter_s1_on`],
+//! [`sp_bottleneck_node`]). Algorithm 1 is the **full-iteration** argmin
+//! over the four-member family {S1, S2, SP(r*), SP2(r*)} — SP2 being the
+//! chunk-pipelined S2 whose per-chunk combine is a chunked SAA. Each
+//! family carries a true `t_bwd` term (adjoint communication, doubled
+//! gradient FFN, and the exposed share of the overlapped wgrad
+//! AllReduce — [`t_wgrad_ar`], [`exposed_wgrad_ar`]) instead of the old
+//! double-the-forward heuristic.
 //! The tests pin this model to the discrete-event simulator within a
 //! small tolerance — the "theory matches practice" check the paper argues
 //! informally in §IV.
@@ -213,6 +218,90 @@ pub fn choose(cluster: &ClusterTopology, c: &MoeLayerConfig) -> crate::schedule:
     }
 }
 
+/// ESP-group ring AllReduce of the expert weight gradients
+/// ([`ops::bytes_wgrad_per_rank`]) — the backward synchronization every
+/// family pays: the N_ESP replicas of each expert shard compute wgrads
+/// from different token slices and must agree before the optimizer step.
+pub fn t_wgrad_ar(cluster: &ClusterTopology, c: &MoeLayerConfig) -> f64 {
+    let groups = ProcessGroups::new(c.par).expect("valid degrees");
+    worst_group(&groups.all_groups(GroupKind::Esp), |g| {
+        ar_ring(cluster, g, ops::bytes_wgrad_per_rank(c))
+    })
+}
+
+/// Exposed seconds of the overlapped wgrad AllReduce: the deferred
+/// completion lowering rides the reduction under `tail` seconds of
+/// remaining backward work, so only the excess lands on the critical
+/// path. The non-overlapped ablation pays the full `ar` instead.
+pub fn exposed_wgrad_ar(ar: f64, tail: f64) -> f64 {
+    (ar - tail).max(0.0)
+}
+
+/// Analytical backward time of S1 at one node — the **true** `t_bwd`
+/// term (the former model doubled the forward): adjoint communication
+/// (MP-ReduceScatter of the token AllGather, two transposed fused
+/// AlltoAlls, the adjoint-of-split MP-AllGather), the doubled gradient
+/// FFN (dgrad + wgrad), and the exposed share of the wgrad AllReduce —
+/// its hiding tail is the transposed combine AlltoAll plus the final
+/// MP-AllGather it is deferred across.
+pub fn t_bwd_d1_on(cluster: &ClusterTopology, c: &MoeLayerConfig, node: usize) -> f64 {
+    let groups = ProcessGroups::new(c.par).expect("valid degrees");
+    let world = groups.world();
+    let fused = a2a_pairwise(cluster, &world, ops::bytes_fused_a2a_per_pair(c));
+    let ag = ag_mp(cluster, c, ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64);
+    2.0 * fused
+        + 2.0 * ag
+        + 2.0 * t_ffn_pausemp_on(cluster, c, node)
+        + exposed_wgrad_ar(t_wgrad_ar(cluster, c), fused + ag)
+}
+
+/// [`t_bwd_d1_on`] at the bottleneck node.
+pub fn t_bwd_d1(cluster: &ClusterTopology, c: &MoeLayerConfig) -> f64 {
+    t_bwd_d1_on(cluster, c, sp_bottleneck_node(cluster, c))
+}
+
+/// Analytical backward time of S2 at one node (see [`t_bwd_d1_on`]).
+/// Both MP collectives are the capacity-based (E, T/N_MP, M) volume and
+/// both are fully exposed — the backward has no SAA to hide the restore
+/// behind (its adjoint is the up-front ReduceScatter).
+pub fn t_bwd_d2_on(cluster: &ClusterTopology, c: &MoeLayerConfig, node: usize) -> f64 {
+    let groups = ProcessGroups::new(c.par).expect("valid degrees");
+    let world = groups.world();
+    let fused = a2a_pairwise(cluster, &world, ops::bytes_fused_a2a_per_pair(c));
+    let ag = ag_mp(cluster, c, ops::bytes_mp_ag_s2_per_rank(c) * c.par.n_mp as f64);
+    2.0 * fused
+        + 2.0 * ag
+        + 2.0 * t_ffn_pausemp_on(cluster, c, node)
+        + exposed_wgrad_ar(t_wgrad_ar(cluster, c), fused + ag)
+}
+
+/// [`t_bwd_d2_on`] at the bottleneck node.
+pub fn t_bwd_d2(cluster: &ClusterTopology, c: &MoeLayerConfig) -> f64 {
+    t_bwd_d2_on(cluster, c, sp_bottleneck_node(cluster, c))
+}
+
+/// Full-iteration S1 estimate at one node: forward (`t_D1` + FFN) plus
+/// the true backward term.
+pub fn t_iter_s1_on(cluster: &ClusterTopology, c: &MoeLayerConfig, node: usize) -> f64 {
+    t_d1(cluster, c) + t_ffn_pausemp_on(cluster, c, node) + t_bwd_d1_on(cluster, c, node)
+}
+
+/// [`t_iter_s1_on`] at the bottleneck node.
+pub fn t_iter_s1(cluster: &ClusterTopology, c: &MoeLayerConfig) -> f64 {
+    t_iter_s1_on(cluster, c, sp_bottleneck_node(cluster, c))
+}
+
+/// Full-iteration S2 estimate at one node: forward (`t_D2` + FFN) plus
+/// the true backward term.
+pub fn t_iter_s2_on(cluster: &ClusterTopology, c: &MoeLayerConfig, node: usize) -> f64 {
+    t_d2(cluster, c) + t_ffn_pausemp_on(cluster, c, node) + t_bwd_d2_on(cluster, c, node)
+}
+
+/// [`t_iter_s2_on`] at the bottleneck node.
+pub fn t_iter_s2(cluster: &ClusterTopology, c: &MoeLayerConfig) -> f64 {
+    t_iter_s2_on(cluster, c, sp_bottleneck_node(cluster, c))
+}
+
 /// Expert-FFN seconds per rank under PauseMP on one node's GPUs — the
 /// compute term shared by S1, S2 and SP (the baseline duplicates it N_MP
 /// times instead). Scaled by the routing-load model
@@ -391,17 +480,24 @@ pub fn sp2_pipeline_on(
     pipeline_makespan_asym(&spans, &dispatch, &combine, ffn)
 }
 
-/// Per-iteration (fwd + bwd) SP2 estimate at one node: forward pipeline
-/// plus backward pipeline at 2× compute. No AG epilogues — the chunked
-/// SAAs carry the (mirrored) AllGather/ReduceScatter cost inside the
-/// region on both passes.
+/// Per-iteration (fwd + bwd) SP2 estimate at one node: the forward
+/// chunked-SAA pipeline, then the true backward — an up-front
+/// MP-ReduceScatter (the adjoint of the aggregated SAA AllGather
+/// forwards), the transposed region with **plain** per-chunk AlltoAlls
+/// at 2× compute (structurally an SP region — the backward has no SAA),
+/// the adjoint-of-split MP-AllGather, and the exposed share of the wgrad
+/// AllReduce deferred across that AllGather.
 pub fn t_sp2_iteration_on(
     cluster: &ClusterTopology,
     c: &MoeLayerConfig,
     chunks: usize,
     node: usize,
 ) -> f64 {
-    sp2_pipeline_on(cluster, c, chunks, 1.0, node) + sp2_pipeline_on(cluster, c, chunks, 2.0, node)
+    let ag = ag_mp(cluster, c, ops::bytes_mp_ag_s2_per_rank(c) * c.par.n_mp as f64);
+    sp2_pipeline_on(cluster, c, chunks, 1.0, node)
+        + sp_pipeline_on(cluster, c, chunks, 2.0, node)
+        + 2.0 * ag
+        + exposed_wgrad_ar(t_wgrad_ar(cluster, c), ag)
 }
 
 /// [`t_sp2_iteration_on`] at the bottleneck node.
@@ -427,8 +523,11 @@ pub fn optimal_chunks_sp2_on(
 }
 
 /// Per-iteration (fwd + bwd) SP estimate at one node: that node's forward
-/// pipeline, its backward pipeline at 2× compute, and both MP-AllGather/
-/// ReduceScatter epilogues (ring RS costs exactly what ring AG does).
+/// pipeline and AG epilogue, then the true backward — the MP-ReduceScatter
+/// prologue (ring RS costs exactly what ring AG does), the transposed
+/// region at 2× compute (dgrad + wgrad), the adjoint-of-split
+/// MP-AllGather, and the exposed share of the wgrad AllReduce deferred
+/// across that AllGather.
 pub fn t_sp_iteration_on(
     cluster: &ClusterTopology,
     c: &MoeLayerConfig,
@@ -438,7 +537,8 @@ pub fn t_sp_iteration_on(
     let ag = ag_mp(cluster, c, ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64);
     sp_pipeline_on(cluster, c, chunks, 1.0, node)
         + sp_pipeline_on(cluster, c, chunks, 2.0, node)
-        + 2.0 * ag
+        + 3.0 * ag
+        + exposed_wgrad_ar(t_wgrad_ar(cluster, c), ag)
 }
 
 /// [`t_sp_iteration_on`] at the bottleneck node — the fleet-level
@@ -527,17 +627,17 @@ pub fn sp_bottleneck_node(cluster: &ClusterTopology, c: &MoeLayerConfig) -> usiz
 }
 
 /// Algorithm 1 generalized (closed-form): [`decide`] over fleet-level
-/// per-iteration estimates (`2·t_D* + 3·t_FFN` for the unchunked
-/// schedules: comm mirrors in backward, compute doubles; t_FFN at the
-/// bottleneck node). Returns the pick and its estimated per-iteration
-/// time.
+/// **full-iteration** estimates — the true per-family backward terms
+/// ([`t_iter_s1`], [`t_iter_s2`], and the SP/SP2 iteration forms with
+/// their exposed wgrad-AllReduce shares) replace the former
+/// `2·t_D* + 3·t_FFN` doubling heuristic. Returns the pick and its
+/// estimated per-iteration time.
 pub fn choose_extended(
     cluster: &ClusterTopology,
     c: &MoeLayerConfig,
 ) -> (crate::schedule::ScheduleKind, f64) {
-    let f = t_ffn_pausemp(cluster, c);
-    let t1 = 2.0 * t_d1(cluster, c) + 3.0 * f;
-    let t2 = 2.0 * t_d2(cluster, c) + 3.0 * f;
+    let t1 = t_iter_s1(cluster, c);
+    let t2 = t_iter_s2(cluster, c);
     let (r, tsp) = optimal_chunks(cluster, c);
     let (r2, tsp2) = optimal_chunks_sp2(cluster, c);
     decide(t1, t2, r, tsp, r2, tsp2)
@@ -552,9 +652,8 @@ pub fn choose_extended_on(
     c: &MoeLayerConfig,
     node: usize,
 ) -> (crate::schedule::ScheduleKind, f64) {
-    let f = t_ffn_pausemp_on(cluster, c, node);
-    let t1 = 2.0 * t_d1(cluster, c) + 3.0 * f;
-    let t2 = 2.0 * t_d2(cluster, c) + 3.0 * f;
+    let t1 = t_iter_s1_on(cluster, c, node);
+    let t2 = t_iter_s2_on(cluster, c, node);
     let (r, tsp) = optimal_chunks_on(cluster, c, node);
     let (r2, tsp2) = optimal_chunks_sp2_on(cluster, c, node);
     decide(t1, t2, r, tsp, r2, tsp2)
@@ -684,6 +783,51 @@ mod tests {
         let lhs = t_sp2(&cluster, &c, 1);
         let rhs = t_d2(&cluster, &c) + t_ffn_pausemp(&cluster, &c);
         assert!((lhs - rhs).abs() / rhs < 1e-12, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn backward_terms_extend_the_forward_forms() {
+        let cluster = ClusterTopology::testbed_b();
+        let c = cfg();
+        let f = t_ffn_pausemp(&cluster, &c);
+        let ar = t_wgrad_ar(&cluster, &c);
+        assert!(ar > 0.0, "N_ESP > 1 must cost a wgrad AllReduce");
+        // Overlap clamps the exposure to the excess over the hiding tail.
+        assert_eq!(exposed_wgrad_ar(ar, ar + 1.0), 0.0);
+        assert!((exposed_wgrad_ar(2.0 * ar, ar) - ar).abs() <= 1e-15 * ar);
+        // The true backward is never cheaper than the old double-the-
+        // forward heuristic's backward half: it adds the adjoint-of-split
+        // AllGather and the exposed AR on top of mirrored comm + 2×FFN.
+        assert!(t_bwd_d1(&cluster, &c) >= t_d1(&cluster, &c) + 2.0 * f);
+        assert!(t_bwd_d2(&cluster, &c) >= t_d2(&cluster, &c) + 2.0 * f);
+        // And the iteration forms decompose exactly as fwd + bwd.
+        assert_eq!(t_iter_s1(&cluster, &c), t_d1(&cluster, &c) + f + t_bwd_d1(&cluster, &c));
+        assert_eq!(t_iter_s2(&cluster, &c), t_d2(&cluster, &c) + f + t_bwd_d2(&cluster, &c));
+    }
+
+    #[test]
+    fn wgrad_ar_exposure_is_chunk_invariant_for_sp() {
+        // The SP iteration's AR exposure does not depend on r (the AR
+        // launches after the region either way), so it shifts every
+        // t_SP(r) equally and cannot move the argmin.
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+        let c = MoeLayerConfig {
+            par: ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 },
+            ..cfg()
+        };
+        let ag = ag_ring(
+            &cluster,
+            &ProcessGroups::new(c.par).unwrap().all_groups(GroupKind::Mp)[0],
+            ops::bytes_mp_ag_s1_per_rank(&c) * c.par.n_mp as f64,
+        );
+        let exposed = exposed_wgrad_ar(t_wgrad_ar(&cluster, &c), ag);
+        for r in [1usize, 2, 4] {
+            let with = t_sp_iteration(&cluster, &c, r);
+            let without = sp_pipeline(&cluster, &c, r, 1.0)
+                + sp_pipeline(&cluster, &c, r, 2.0)
+                + 3.0 * ag_mp(&cluster, &c, ops::bytes_mp_ag_s1_per_rank(&c) * c.par.n_mp as f64);
+            assert!((with - without - exposed).abs() <= 1e-12 * with, "r={r}");
+        }
     }
 
     #[test]

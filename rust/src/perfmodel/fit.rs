@@ -36,7 +36,13 @@ pub enum CollKind {
     AgMp,
     /// ESP-group AllGather (x = gathered output bytes).
     AgEsp,
-    /// ESP-group AllReduce (x = per-member buffer bytes).
+    /// ESP-group AllReduce (x = per-member buffer bytes). Prices both
+    /// the baseline's activation AllReduce and — since the whole-iteration
+    /// argmin — every family's expert wgrad-gradient AllReduce
+    /// ([`crate::schedule::ops::bytes_wgrad_per_rank`] feeds it in
+    /// [`super::selection`]); only the *exposed* share of the latter ends
+    /// up in a backward term, mirroring the deferred-completion overlap
+    /// the interpreter schedules.
     ArEsp,
     /// EP-group AlltoAll (x = per-member send bytes).
     A2aEp,

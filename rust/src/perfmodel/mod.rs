@@ -16,7 +16,16 @@
 //! asymmetric combine leg — the chunked SAA's AlltoAll plus its exposed
 //! MP-AllGather tail) are then compared online to pick S1, S2, SP(r*) or
 //! SP2(r*) — each pipelined family's chunk count is itself chosen in
-//! closed form (argmin over `1..=SP_MAX_CHUNKS`). On a mixed fleet the compute-inclusive
+//! closed form (argmin over `1..=SP_MAX_CHUNKS`), and the comparison is
+//! over **whole iterations**, not forward passes: each family carries a
+//! true backward term (`closedform::t_bwd_d1`/`t_bwd_d2` — transposed
+//! AlltoAlls, dgrad + wgrad FFN, the adjoint AllGathers of the forward's
+//! free splits) plus the exposed tail of the expert wgrad AllReduce
+//! after overlap (`closedform::exposed_wgrad_ar`), mirroring the
+//! backward op programs the simulator runs
+//! ([`crate::schedule::builders::backward_ops`]).
+//! [`selection::Prediction::best_forward_only`] keeps the old
+//! forward-only pick as the ablation. On a mixed fleet the compute-inclusive
 //! terms are evaluated **per node** (the collectives are global, the FFN
 //! runs at each node's own throughput): the fleet-level pick minimizes
 //! the worst node's estimate, [`selection::Prediction`] reports which

@@ -13,7 +13,7 @@
 //! ## Schema (version [`PLAN_SCHEMA_VERSION`])
 //!
 //! ```text
-//! { "schema":       1,
+//! { "schema":       2,
 //!   "cluster_hash": "<fnv64 hex of the topology's canonical JSON>",
 //!   "grid_hash":    "<fnv64 hex over each config's canonical JSON, in order>",
 //!   "cluster":      { ... ClusterTopology::to_json ... },
@@ -51,7 +51,11 @@ use super::selection::{self, Prediction};
 
 /// Bumped whenever the plan document or anything it embeds changes shape;
 /// also part of the sweep case-cache key, so caches invalidate with it.
-pub const PLAN_SCHEMA_VERSION: u64 = 1;
+/// v2: [`Prediction`] gained the backward fields (`t_wgrad_ar`,
+/// `t_iter_s1`, `t_iter_s2`) and the sweep's cached cases the `t_bwd_*`
+/// columns — v1 artifacts fail loudly instead of deserializing stale
+/// forward-only decisions.
+pub const PLAN_SCHEMA_VERSION: u64 = 2;
 
 /// Stable content hash of a sweep grid: FNV-1a over each configuration's
 /// canonical JSON, in grid order — reordering or editing any config

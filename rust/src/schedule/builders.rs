@@ -1,6 +1,9 @@
-//! Schedule builders: the forward (and mirrored backward) op programs for
-//! the Baseline (Fig 3a), S1 (Fig 3b), S2 (Fig 3c) and the chunk-pipelined
-//! SP and SP2 (SP × SAA) schedules.
+//! Schedule builders: the forward and backward op programs for the
+//! Baseline (Fig 3a), S1 (Fig 3b), S2 (Fig 3c) and the chunk-pipelined
+//! SP and SP2 (SP × SAA) schedules. The backward pass is a first-class
+//! program per family — transposed dispatch/combine AlltoAlls, split
+//! dgrad/wgrad expert compute, and the wgrad AllReduce scheduled to
+//! overlap the remaining backward ops (see [`backward_ops`]).
 
 use crate::config::MoeLayerConfig;
 
@@ -242,18 +245,30 @@ pub fn forward_ops_measured(
     }
 }
 
-/// Backward op program: the forward reversed, with each collective
-/// replaced by its adjoint and compute doubled (dgrad + wgrad):
+/// Backward op program: a first-class per-family program (NOT a mechanical
+/// reversal of the forward). Each forward collective appears as its
+/// adjoint, in reverse program order, under the `bwd.*` tag vocabulary of
+/// [`crate::comm::tags`]:
 ///
-/// | forward            | backward                  |
-/// |--------------------|---------------------------|
-/// | AllGather(x)       | ReduceScatter(x)          |
-/// | ReduceScatter(x)   | AllGather(x)              |
-/// | AlltoAll           | AlltoAll (same volume)    |
-/// | AllReduce          | AllReduce (same volume)   |
-/// | Split              | AllGather (Fig 3 note)    |
-/// | SAA/AAS combine    | same, reversed direction  |
-/// | compute f          | 2·f                       |
+/// | forward                  | backward                                  |
+/// |--------------------------|-------------------------------------------|
+/// | AllGather(x)             | ReduceScatter(x)                          |
+/// | Split (free)             | AllGather (Fig 3 note)                    |
+/// | dispatch AlltoAll        | `bwd.*.combine` AlltoAll (returns dX)     |
+/// | combine AlltoAll / SAA   | `bwd.*.dispatch` AlltoAll (carries dY)    |
+/// | AllReduce                | AllReduce (same volume)                   |
+/// | expert FFN f             | dgrad f + wgrad f + wgrad-AllReduce       |
+/// | other compute f          | 2·f (adjoint of the local op)             |
+///
+/// The expert weight gradients the ESP replicas compute from different
+/// token shards are synchronized by a dedicated
+/// [`Op::BwdWgradAllReduce`], emitted right after the wgrad compute and
+/// **overlapped** with the remaining backward ops (the epilogue's
+/// transposed combine AlltoAll, gate adjoint and MP collectives) via the
+/// interpreter's deferred-completion path — the FSMoE-style backward win.
+/// The SP/SP2 regions additionally split the gradient FFN per chunk into
+/// dgrad (feeds that chunk's combine) and wgrad (compute-stream only, so
+/// the combine AlltoAll overlaps it).
 pub fn backward_ops(kind: ScheduleKind, c: &MoeLayerConfig) -> Vec<Op> {
     backward_ops_measured(kind, c, None)
 }
@@ -265,67 +280,218 @@ pub fn backward_ops_measured(
     c: &MoeLayerConfig,
     measured: Option<&[usize]>,
 ) -> Vec<Op> {
-    forward_ops_measured(kind, c, measured)
-        .into_iter()
-        .rev()
-        .map(|op| match op {
-            Op::EspAllGather { bytes_per_rank } => Op::EspReduceScatter {
-                total_bytes: bytes_per_rank * c.par.n_esp as f64,
-            },
-            Op::MpAllGather { bytes_per_rank } => Op::MpReduceScatter {
-                total_bytes: bytes_per_rank * c.par.n_mp as f64,
-            },
-            Op::EspReduceScatter { total_bytes } => Op::EspAllGather {
-                bytes_per_rank: total_bytes / c.par.n_esp as f64,
-            },
-            Op::MpReduceScatter { total_bytes } => Op::MpAllGather {
-                bytes_per_rank: total_bytes / c.par.n_mp as f64,
-            },
-            Op::EspSplit { bytes_per_rank } => Op::EspAllGather { bytes_per_rank },
-            Op::MpSplit { bytes_per_rank } => Op::MpAllGather { bytes_per_rank },
-            Op::EpAlltoAll { bytes_per_pair } => Op::EpAlltoAll { bytes_per_pair },
-            Op::FusedAlltoAll { bytes_per_pair } => Op::FusedAlltoAll { bytes_per_pair },
-            Op::SaaCombine { bytes_per_pair } => Op::SaaCombine { bytes_per_pair },
-            Op::AasCombine { bytes_per_pair } => Op::AasCombine { bytes_per_pair },
-            Op::EspAllReduce { total_bytes } => Op::EspAllReduce { total_bytes },
-            Op::Gate { flops_per_rank } => Op::Gate { flops_per_rank: 2.0 * flops_per_rank },
-            Op::ExpertFfn { flops_per_rank } => {
-                Op::ExpertFfn { flops_per_rank: 2.0 * flops_per_rank }
+    backward_ops_overlap(kind, c, measured, true)
+}
+
+/// [`backward_ops_measured`] with an explicit wgrad-AllReduce scheduling
+/// knob: `overlap == true` (the default everywhere) defers the
+/// reduction's completion so it rides under the remaining backward ops;
+/// `overlap == false` chains it on the main frontier — the non-overlapped
+/// ablation lowering the acceptance tests compare against.
+pub fn backward_ops_overlap(
+    kind: ScheduleKind,
+    c: &MoeLayerConfig,
+    measured: Option<&[usize]>,
+    overlap: bool,
+) -> Vec<Op> {
+    let measured = measured.filter(|l| l.iter().sum::<usize>() > 0);
+    let d = c.dtype_bytes as f64;
+    let wgrad_ar = Op::BwdWgradAllReduce { bytes_per_rank: ops::bytes_wgrad_per_rank(c), overlap };
+    match kind {
+        ScheduleKind::Parm => panic!("resolve Parm to S1/S2 via the perf model first"),
+        ScheduleKind::Baseline => {
+            let gathered_tokens = c.tokens() * c.par.n_esp;
+            let split_bytes = (gathered_tokens * c.m) as f64 * d / c.par.n_esp as f64;
+            let ffn = ops::expert_flops(c, ops::expert_tokens_per_rank(c, false))
+                * ops::ffn_load_scale(c, c.t());
+            vec![
+                // Adjoint of the ESP-Split: gather the output-gradient
+                // slices back to the gathered-token view (Fig 3 note).
+                Op::EspAllGather { bytes_per_rank: split_bytes },
+                Op::Ungate { flops_per_rank: 2.0 * (c.tokens() * c.k * c.m) as f64 },
+                // Transpose of the forward combine AlltoAll: dY to the
+                // expert-hosting ranks.
+                Op::BwdEpAlltoAll {
+                    bytes_per_pair: ops::bytes_ep_a2a_per_pair(c),
+                    combine: false,
+                },
+                Op::EspAllReduce { total_bytes: ops::bytes_esp_ar_total(c) },
+                Op::BwdExpertDgrad { flops_per_rank: ffn },
+                Op::BwdExpertWgrad { flops_per_rank: ffn },
+                wgrad_ar,
+                // Transpose of the forward dispatch AlltoAll: dX back to
+                // the token-owning ranks — overlapped by the wgrad AR.
+                Op::BwdEpAlltoAll {
+                    bytes_per_pair: ops::bytes_ep_a2a_per_pair(c),
+                    combine: true,
+                },
+                Op::Gate { flops_per_rank: 2.0 * ops::gate_flops(c, gathered_tokens) },
+                Op::EspReduceScatter {
+                    total_bytes: ops::bytes_esp_ag_per_rank(c) * c.par.n_esp as f64,
+                },
+            ]
+        }
+        ScheduleKind::S1 => {
+            let local_tokens = c.tokens() / c.par.n_mp;
+            let combine_elems =
+                (c.e * c.t_pausemp() * c.m) as f64 * (c.par.n_esp.saturating_sub(1)) as f64;
+            let ffn = ops::expert_flops(c, ops::expert_tokens_per_rank(c, true))
+                * ops::ffn_load_scale(c, c.t_pausemp());
+            vec![
+                Op::MpReduceScatter {
+                    total_bytes: ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64,
+                },
+                Op::Ungate { flops_per_rank: 2.0 * (local_tokens * c.k * c.m) as f64 },
+                Op::LocalCombine { flops_per_rank: 2.0 * combine_elems },
+                Op::BwdFusedAlltoAll {
+                    bytes_per_pair: ops::bytes_fused_a2a_per_pair(c),
+                    combine: false,
+                },
+                Op::BwdExpertDgrad { flops_per_rank: ffn },
+                Op::BwdExpertWgrad { flops_per_rank: ffn },
+                wgrad_ar,
+                Op::BwdFusedAlltoAll {
+                    bytes_per_pair: ops::bytes_fused_a2a_per_pair(c),
+                    combine: true,
+                },
+                Op::Gate { flops_per_rank: 2.0 * ops::gate_flops(c, local_tokens) },
+                // Adjoint of the MpSplit: gather the input gradients.
+                Op::MpAllGather { bytes_per_rank: (c.input_elems() / c.par.n_mp) as f64 * d },
+            ]
+        }
+        ScheduleKind::S2 | ScheduleKind::S2Aas => {
+            let combine_elems =
+                (c.e * c.t_pausemp() * c.m) as f64 * (c.par.n_esp.saturating_sub(1)) as f64;
+            let ffn = ops::expert_flops(c, ops::expert_tokens_per_rank(c, true))
+                * ops::ffn_load_scale(c, c.t_pausemp());
+            vec![
+                Op::Ungate { flops_per_rank: 2.0 * (c.tokens() * c.k * c.m) as f64 },
+                Op::LocalCombine { flops_per_rank: 2.0 * combine_elems },
+                // Adjoint of the SAA/AAS combine: ReduceScatter of the
+                // MP-AllGather leg, then the transposed fused AlltoAll
+                // carrying dY to the experts.
+                Op::MpReduceScatter {
+                    total_bytes: ops::bytes_mp_ag_s2_per_rank(c) * c.par.n_mp as f64,
+                },
+                Op::BwdFusedAlltoAll {
+                    bytes_per_pair: ops::bytes_fused_a2a_per_pair(c),
+                    combine: false,
+                },
+                Op::BwdExpertDgrad { flops_per_rank: ffn },
+                Op::BwdExpertWgrad { flops_per_rank: ffn },
+                wgrad_ar,
+                Op::BwdFusedAlltoAll {
+                    bytes_per_pair: ops::bytes_fused_a2a_per_pair(c),
+                    combine: true,
+                },
+                // Adjoint of the MpSplit (capacity restore), then the gate
+                // adjoint on the full token set — S2 gates before the
+                // split, so its adjoint closes the program.
+                Op::MpAllGather { bytes_per_rank: ops::bytes_mp_ag_s2_per_rank(c) },
+                Op::Gate { flops_per_rank: 2.0 * ops::gate_flops(c, c.tokens()) },
+            ]
+        }
+        ScheduleKind::Pipelined { chunks } | ScheduleKind::PipelinedUniform { chunks } => {
+            if chunks == 0 {
+                panic!("resolve SP's chunk count r via the perf model first");
             }
-            Op::LocalCombine { flops_per_rank } => {
-                Op::LocalCombine { flops_per_rank: 2.0 * flops_per_rank }
+            let local_tokens = c.tokens() / c.par.n_mp;
+            let combine_elems =
+                (c.e * c.t_pausemp() * c.m) as f64 * (c.par.n_esp.saturating_sub(1)) as f64;
+            let spans = if matches!(kind, ScheduleKind::Pipelined { .. }) {
+                sp_policy_spans(c, chunks, measured)
+            } else {
+                ops::chunk_spans(c.t_pausemp(), ops::sp_clamp_chunks(c, chunks))
+            };
+            let chunk_flops = |span: (usize, usize)| sp_policy_flops(c, span, measured);
+            let r = spans.len();
+            // The region transposed: backward dispatch k moves the bytes of
+            // forward combine k (dY in), backward combine k the bytes of
+            // forward dispatch k (dX out) — identical per-chunk volumes,
+            // mirrored direction. Per chunk the gradient FFN splits into
+            // dgrad (feeds the chunk's combine) and wgrad (compute stream
+            // only), so the combine AlltoAll overlaps the wgrad compute.
+            let mut v = vec![
+                Op::MpReduceScatter {
+                    total_bytes: ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64,
+                },
+                Op::Ungate { flops_per_rank: 2.0 * (local_tokens * c.k * c.m) as f64 },
+                Op::LocalCombine { flops_per_rank: 2.0 * combine_elems },
+                Op::BwdSpDispatch {
+                    bytes_per_pair: ops::bytes_sp_chunk_per_pair(c, spans[0].1),
+                    index: 0,
+                    of: r,
+                },
+            ];
+            for k in 0..r {
+                if k + 1 < r {
+                    v.push(Op::BwdSpDispatch {
+                        bytes_per_pair: ops::bytes_sp_chunk_per_pair(c, spans[k + 1].1),
+                        index: k + 1,
+                        of: r,
+                    });
+                }
+                v.push(Op::BwdSpDgrad { flops_per_rank: chunk_flops(spans[k]), index: k, of: r });
+                v.push(Op::BwdSpWgrad { flops_per_rank: chunk_flops(spans[k]), index: k, of: r });
+                v.push(Op::BwdSpCombine {
+                    bytes_per_pair: ops::bytes_sp_chunk_per_pair(c, spans[k].1),
+                    index: k,
+                    of: r,
+                });
             }
-            Op::Ungate { flops_per_rank } => Op::Ungate { flops_per_rank: 2.0 * flops_per_rank },
-            // SP: the adjoint of a chunk's dispatch AlltoAll is a
-            // combine-direction AlltoAll of the same volume and vice
-            // versa; under the reversal the region stays a well-formed
-            // pipeline (each chunk's gradient FFN still follows its
-            // dispatch and precedes its combine).
-            Op::SpDispatch { bytes_per_pair, index, of } => {
-                Op::SpCombine { bytes_per_pair, index, of }
+            v.push(wgrad_ar);
+            v.push(Op::Gate { flops_per_rank: 2.0 * ops::gate_flops(c, local_tokens) });
+            v.push(Op::MpAllGather { bytes_per_rank: (c.input_elems() / c.par.n_mp) as f64 * d });
+            v
+        }
+        ScheduleKind::PipelinedS2 { chunks } => {
+            if chunks == 0 {
+                panic!("resolve SP2's chunk count r via the perf model first");
             }
-            Op::SpCombine { bytes_per_pair, index, of } => {
-                Op::SpDispatch { bytes_per_pair, index, of }
+            let combine_elems =
+                (c.e * c.t_pausemp() * c.m) as f64 * (c.par.n_esp.saturating_sub(1)) as f64;
+            let spans = sp_policy_spans(c, chunks, measured);
+            let chunk_flops = |span: (usize, usize)| sp_policy_flops(c, span, measured);
+            let r = spans.len();
+            // Adjoint of the chunked SAA: ONE up-front MP-ReduceScatter
+            // (the aggregate of the per-chunk MP-AllGather forwards), then
+            // the region with plain transposed AlltoAlls per chunk —
+            // backward dispatch k moves forward sp2.saa.k's AlltoAll
+            // bytes, backward combine k forward sp2.dispatch.k's.
+            let mut v = vec![
+                Op::Ungate { flops_per_rank: 2.0 * (c.tokens() * c.k * c.m) as f64 },
+                Op::LocalCombine { flops_per_rank: 2.0 * combine_elems },
+                Op::MpReduceScatter {
+                    total_bytes: ops::bytes_mp_ag_s2_per_rank(c) * c.par.n_mp as f64,
+                },
+                Op::BwdSp2Dispatch {
+                    bytes_per_pair: ops::bytes_sp_chunk_per_pair(c, spans[0].1),
+                    index: 0,
+                    of: r,
+                },
+            ];
+            for k in 0..r {
+                if k + 1 < r {
+                    v.push(Op::BwdSp2Dispatch {
+                        bytes_per_pair: ops::bytes_sp_chunk_per_pair(c, spans[k + 1].1),
+                        index: k + 1,
+                        of: r,
+                    });
+                }
+                v.push(Op::BwdSp2Dgrad { flops_per_rank: chunk_flops(spans[k]), index: k, of: r });
+                v.push(Op::BwdSp2Wgrad { flops_per_rank: chunk_flops(spans[k]), index: k, of: r });
+                v.push(Op::BwdSp2Combine {
+                    bytes_per_pair: ops::bytes_sp_chunk_per_pair(c, spans[k].1),
+                    index: k,
+                    of: r,
+                });
             }
-            Op::SpExpertFfn { flops_per_rank, index, of } => {
-                Op::SpExpertFfn { flops_per_rank: 2.0 * flops_per_rank, index, of }
-            }
-            // SP2: like SP, the adjoint of a chunk's dispatch AlltoAll is
-            // its combine-direction counterpart of the same volume — here
-            // the chunked SAA (whose adjoint, ReduceScatter then AlltoAll,
-            // moves the same bytes in mirrored direction) — so the
-            // reversed region stays a well-formed pipeline.
-            Op::Sp2Dispatch { bytes_per_pair, index, of } => {
-                Op::Sp2Saa { bytes_per_pair, index, of }
-            }
-            Op::Sp2Saa { bytes_per_pair, index, of } => {
-                Op::Sp2Dispatch { bytes_per_pair, index, of }
-            }
-            Op::Sp2ExpertFfn { flops_per_rank, index, of } => {
-                Op::Sp2ExpertFfn { flops_per_rank: 2.0 * flops_per_rank, index, of }
-            }
-        })
-        .collect()
+            v.push(wgrad_ar);
+            v.push(Op::MpAllGather { bytes_per_rank: ops::bytes_mp_ag_s2_per_rank(c) });
+            v.push(Op::Gate { flops_per_rank: 2.0 * ops::gate_flops(c, c.tokens()) });
+            v
+        }
+    }
 }
 
 /// Full training-iteration program (forward + backward). Gradient
@@ -429,24 +595,99 @@ mod tests {
     }
 
     #[test]
-    fn backward_mirrors_forward() {
+    fn s1_backward_structure() {
         let c = cfg();
-        let fwd = forward_ops(ScheduleKind::S1, &c);
         let bwd = backward_ops(ScheduleKind::S1, &c);
-        assert_eq!(fwd.len(), bwd.len());
-        // First backward op is the adjoint of the last forward op.
-        assert_eq!(bwd[0].tag(), "mp.reducescatter");
-        // Splits become AllGathers (the Fig 3 note).
-        assert!(bwd.iter().any(|o| o.tag() == "mp.allgather"));
+        let bwd_tags: Vec<&str> = bwd.iter().map(|o| o.tag()).collect();
+        assert_eq!(
+            bwd_tags,
+            vec![
+                "mp.reducescatter",
+                "ungate",
+                "local.combine",
+                "bwd.fused.dispatch",
+                "bwd.expert.dgrad",
+                "bwd.expert.wgrad",
+                "bwd.wgrad.allreduce",
+                "bwd.fused.combine",
+                "gate",
+                "mp.allgather"
+            ]
+        );
+        // The transposed AlltoAlls move exactly the forward legs' volumes.
+        let fused = ops::bytes_fused_a2a_per_pair(&c);
+        for o in &bwd {
+            if let Op::BwdFusedAlltoAll { bytes_per_pair, .. } = *o {
+                assert_eq!(bytes_per_pair, fused);
+            }
+        }
+        // dgrad + wgrad together double the forward expert FFN.
+        let fwd_ffn: f64 = forward_ops(ScheduleKind::S1, &c)
+            .iter()
+            .map(|o| match *o {
+                Op::ExpertFfn { flops_per_rank } => flops_per_rank,
+                _ => 0.0,
+            })
+            .sum();
+        let grad_ffn: f64 = bwd
+            .iter()
+            .map(|o| match *o {
+                Op::BwdExpertDgrad { flops_per_rank } | Op::BwdExpertWgrad { flops_per_rank } => {
+                    flops_per_rank
+                }
+                _ => 0.0,
+            })
+            .sum();
+        assert!((grad_ffn - 2.0 * fwd_ffn).abs() / grad_ffn < 1e-12);
+    }
+
+    #[test]
+    fn every_family_reduces_wgrad_once() {
+        let c = cfg();
+        for kind in [
+            ScheduleKind::Baseline,
+            ScheduleKind::S1,
+            ScheduleKind::S2,
+            ScheduleKind::S2Aas,
+            ScheduleKind::Pipelined { chunks: 2 },
+            ScheduleKind::PipelinedUniform { chunks: 2 },
+            ScheduleKind::PipelinedS2 { chunks: 2 },
+        ] {
+            let bwd = backward_ops(kind, &c);
+            let ars: Vec<&Op> = bwd
+                .iter()
+                .filter(|o| matches!(o, Op::BwdWgradAllReduce { .. }))
+                .collect();
+            assert_eq!(ars.len(), 1, "{kind:?}");
+            match ars[0] {
+                Op::BwdWgradAllReduce { bytes_per_rank, overlap } => {
+                    assert_eq!(*bytes_per_rank, ops::bytes_wgrad_per_rank(&c), "{kind:?}");
+                    assert!(*overlap, "{kind:?}: overlap is the default");
+                }
+                _ => unreachable!(),
+            }
+            // The ablation knob turns the overlap off without touching
+            // anything else in the program.
+            let flat = backward_ops_overlap(kind, &c, None, false);
+            assert_eq!(flat.len(), bwd.len(), "{kind:?}");
+            assert!(
+                flat.iter()
+                    .any(|o| matches!(o, Op::BwdWgradAllReduce { overlap: false, .. })),
+                "{kind:?}"
+            );
+        }
     }
 
     #[test]
     fn iteration_concatenates() {
         let c = cfg();
         let it = iteration_ops(ScheduleKind::Baseline, &c);
-        assert_eq!(it.len(), 2 * forward_ops(ScheduleKind::Baseline, &c).len());
+        let fwd_len = forward_ops(ScheduleKind::Baseline, &c).len();
+        assert_eq!(it.len(), fwd_len + backward_ops(ScheduleKind::Baseline, &c).len());
         // Baseline backward contains the ESP-AllGather from the ESP-Split.
-        assert!(it[8..].iter().any(|o| o.tag() == "esp.allgather"));
+        assert!(it[fwd_len..].iter().any(|o| o.tag() == "esp.allgather"));
+        // ... and ends on the adjoint of the forward's opening AllGather.
+        assert_eq!(it.last().unwrap().tag(), "esp.reducescatter");
     }
 
     #[test]
@@ -597,9 +838,12 @@ mod tests {
         assert_ne!(dispatch_bytes(&plain), dispatch_bytes(&measured));
         let zeros = vec![0usize; c.e];
         assert_eq!(plain, forward_ops_measured(kind, &c, Some(&zeros[..])));
-        // The measured iteration program mirrors like the plain one.
+        // The measured iteration program concatenates like the plain one.
         let it = iteration_ops_measured(kind, &c, Some(&loads[..]));
-        assert_eq!(it.len(), 2 * measured.len());
+        assert_eq!(
+            it.len(),
+            measured.len() + backward_ops_measured(kind, &c, Some(&loads[..])).len()
+        );
     }
 
     #[test]
@@ -663,18 +907,30 @@ mod tests {
         let c = cfg();
         let bwd = backward_ops(ScheduleKind::PipelinedS2 { chunks: 2 }, &c);
         // Starts with the adjoint of the Ungate (S2 has no trailing AG —
-        // the SAA chunks carry it).
+        // the SAA chunks carried it; its adjoint is the one up-front
+        // MP-ReduceScatter before the region).
         assert_eq!(bwd[0].tag(), "ungate");
-        // Every chunk keeps dispatch-before-ffn-before-saa order.
+        assert!(bwd.iter().any(|o| o.tag() == "mp.reducescatter"));
+        // Every chunk keeps dispatch-before-dgrad-before-combine order,
+        // with the wgrad emitted between dgrad and combine (compute
+        // stream only — the combine does not wait on it).
         for k in 0..2usize {
             let pos = |pred: &dyn Fn(&Op) -> bool| bwd.iter().position(|o| pred(o)).unwrap();
-            let d = pos(&|o| matches!(*o, Op::Sp2Dispatch { index, .. } if index == k));
-            let f = pos(&|o| matches!(*o, Op::Sp2ExpertFfn { index, .. } if index == k));
-            let s = pos(&|o| matches!(*o, Op::Sp2Saa { index, .. } if index == k));
-            assert!(d < f && f < s, "chunk {k}: d={d} f={f} s={s}");
+            let di = pos(&|o| matches!(*o, Op::BwdSp2Dispatch { index, .. } if index == k));
+            let dg = pos(&|o| matches!(*o, Op::BwdSp2Dgrad { index, .. } if index == k));
+            let wg = pos(&|o| matches!(*o, Op::BwdSp2Wgrad { index, .. } if index == k));
+            let cb = pos(&|o| matches!(*o, Op::BwdSp2Combine { index, .. } if index == k));
+            assert!(di < dg && dg < wg && wg < cb, "chunk {k}: d={di} g={dg} w={wg} c={cb}");
         }
-        // MpSplit's adjoint (MP-AllGather) is still present.
+        // MpSplit's adjoint (MP-AllGather) is still present, and the wgrad
+        // AllReduce lands after the region.
         assert!(bwd.iter().any(|o| o.tag() == "mp.allgather"));
+        let ar = bwd.iter().position(|o| matches!(o, Op::BwdWgradAllReduce { .. })).unwrap();
+        let last_cb = bwd
+            .iter()
+            .rposition(|o| matches!(o, Op::BwdSp2Combine { .. }))
+            .unwrap();
+        assert!(ar > last_cb, "wgrad AR after the region: ar={ar} last_combine={last_cb}");
     }
 
     #[test]
@@ -689,15 +945,17 @@ mod tests {
         let bwd = backward_ops(ScheduleKind::Pipelined { chunks: 2 }, &c);
         // Starts with the adjoint of the MP-AllGather.
         assert_eq!(bwd[0].tag(), "mp.reducescatter");
-        // Every chunk keeps dispatch-before-ffn-before-combine order.
+        // Every chunk keeps dispatch-before-dgrad-before-combine order,
+        // with the wgrad between dgrad and combine (compute stream only).
         for k in 0..2usize {
             let pos = |pred: &dyn Fn(&Op) -> bool| bwd.iter().position(|o| pred(o)).unwrap();
-            let d = pos(&|o| matches!(*o, Op::SpDispatch { index, .. } if index == k));
-            let f = pos(&|o| matches!(*o, Op::SpExpertFfn { index, .. } if index == k));
-            let cb = pos(&|o| matches!(*o, Op::SpCombine { index, .. } if index == k));
-            assert!(d < f && f < cb, "chunk {k}: d={d} f={f} c={cb}");
+            let di = pos(&|o| matches!(*o, Op::BwdSpDispatch { index, .. } if index == k));
+            let dg = pos(&|o| matches!(*o, Op::BwdSpDgrad { index, .. } if index == k));
+            let wg = pos(&|o| matches!(*o, Op::BwdSpWgrad { index, .. } if index == k));
+            let cb = pos(&|o| matches!(*o, Op::BwdSpCombine { index, .. } if index == k));
+            assert!(di < dg && dg < wg && wg < cb, "chunk {k}: d={di} g={dg} w={wg} c={cb}");
         }
-        // Gradient FFN is doubled.
+        // dgrad + wgrad together double the forward chunk FFN.
         let fwd_ffn: f64 = forward_ops(ScheduleKind::Pipelined { chunks: 2 }, &c)
             .iter()
             .map(|o| match *o {
@@ -708,10 +966,35 @@ mod tests {
         let bwd_ffn: f64 = bwd
             .iter()
             .map(|o| match *o {
-                Op::SpExpertFfn { flops_per_rank, .. } => flops_per_rank,
+                Op::BwdSpDgrad { flops_per_rank, .. }
+                | Op::BwdSpWgrad { flops_per_rank, .. } => flops_per_rank,
                 _ => 0.0,
             })
             .sum();
         assert!((bwd_ffn - 2.0 * fwd_ffn).abs() / bwd_ffn < 1e-12);
+        // Per-chunk transposition: backward dispatch k moves forward
+        // combine k's bytes, backward combine k forward dispatch k's.
+        let fwd = forward_ops(ScheduleKind::Pipelined { chunks: 2 }, &c);
+        for k in 0..2usize {
+            let fwd_dispatch = fwd
+                .iter()
+                .find_map(|o| match *o {
+                    Op::SpDispatch { bytes_per_pair, index, .. } if index == k => {
+                        Some(bytes_per_pair)
+                    }
+                    _ => None,
+                })
+                .unwrap();
+            let bwd_combine = bwd
+                .iter()
+                .find_map(|o| match *o {
+                    Op::BwdSpCombine { bytes_per_pair, index, .. } if index == k => {
+                        Some(bytes_per_pair)
+                    }
+                    _ => None,
+                })
+                .unwrap();
+            assert_eq!(fwd_dispatch, bwd_combine, "chunk {k}");
+        }
     }
 }

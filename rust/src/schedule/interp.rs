@@ -158,10 +158,11 @@ fn group_kind(op: &Op) -> Option<GroupKind> {
             Some(GroupKind::Esp)
         }
         Op::MpAllGather { .. } | Op::MpReduceScatter { .. } => Some(GroupKind::Mp),
-        Op::EpAlltoAll { .. } => Some(GroupKind::Ep),
-        Op::FusedAlltoAll { .. } => Some(GroupKind::EpEsp),
-        // SAA/AAS span the product group plus the MP partition — handled
-        // separately by the interpreter.
+        Op::EpAlltoAll { .. } | Op::BwdEpAlltoAll { .. } => Some(GroupKind::Ep),
+        Op::FusedAlltoAll { .. } | Op::BwdFusedAlltoAll { .. } => Some(GroupKind::EpEsp),
+        // SAA/AAS span the product group plus the MP partition, and the
+        // wgrad AllReduce carries its own deferred-completion scheduling —
+        // both handled separately by the interpreter.
         _ => None,
     }
 }
@@ -182,6 +183,11 @@ where
     let p = groups.par.p;
     let mut frontier: Vec<Option<T::Handle>> = vec![None; p];
     let mut pipe: Option<PipeState<T::Handle>> = None;
+    // Completions of overlap-scheduled collectives (the backward wgrad
+    // AllReduce): the ops that follow proceed from the pre-collective
+    // frontier, and the deferred handles are joined back in at program
+    // end — so the reduction rides under the remaining backward ops.
+    let mut deferred: Vec<Vec<T::Handle>> = vec![Vec::new(); p];
 
     let deps_of = |frontier: &[Option<T::Handle>], ranks: &[usize]| -> Vec<T::Handle> {
         ranks.iter().filter_map(|&r| frontier[r].clone()).collect()
@@ -198,14 +204,19 @@ where
             Op::Gate { flops_per_rank }
             | Op::ExpertFfn { flops_per_rank }
             | Op::LocalCombine { flops_per_rank }
-            | Op::Ungate { flops_per_rank } => {
+            | Op::Ungate { flops_per_rank }
+            | Op::BwdExpertDgrad { flops_per_rank }
+            | Op::BwdExpertWgrad { flops_per_rank } => {
                 machine.apply_local(op)?;
                 for r in 0..p {
                     let dep: Vec<T::Handle> = frontier[r].iter().cloned().collect();
                     frontier[r] = Some(transport.compute(r, flops_per_rank, &dep, tag));
                 }
             }
-            Op::SpDispatch { index, of, .. } | Op::Sp2Dispatch { index, of, .. } => {
+            Op::SpDispatch { index, of, .. }
+            | Op::Sp2Dispatch { index, of, .. }
+            | Op::BwdSpDispatch { index, of, .. }
+            | Op::BwdSp2Dispatch { index, of, .. } => {
                 let st = pipe.get_or_insert_with(|| PipeState::new(&frontier, of));
                 ensure!(
                     index < of && st.dispatched.len() == of,
@@ -225,7 +236,9 @@ where
                 machine.finish(op)?;
             }
             Op::SpExpertFfn { flops_per_rank, index, .. }
-            | Op::Sp2ExpertFfn { flops_per_rank, index, .. } => {
+            | Op::Sp2ExpertFfn { flops_per_rank, index, .. }
+            | Op::BwdSpDgrad { flops_per_rank, index, .. }
+            | Op::BwdSp2Dgrad { flops_per_rank, index, .. } => {
                 machine.apply_local(op)?;
                 let st = pipe
                     .as_mut()
@@ -240,7 +253,27 @@ where
                     st.comp[r] = Some(h);
                 }
             }
-            Op::SpCombine { index, of, .. } => {
+            Op::BwdSpWgrad { flops_per_rank, index, .. }
+            | Op::BwdSp2Wgrad { flops_per_rank, index, .. } => {
+                // Weight-gradient compute chains the COMPUTE stream only:
+                // it does not write the chunk's ffn slot, so the chunk's
+                // backward combine (which reads the dgrad completion)
+                // overlaps it on the comm stream.
+                machine.apply_local(op)?;
+                let st = pipe
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("bwd wgrad outside a pipelined region"))?;
+                ensure!(index < st.dispatched.len(), "bwd wgrad chunk {index} out of range");
+                for r in 0..p {
+                    let mut dep: Vec<T::Handle> =
+                        st.dispatched[index][r].iter().cloned().collect();
+                    dep.extend(st.comp[r].iter().cloned());
+                    st.comp[r] = Some(transport.compute(r, flops_per_rank, &dep, tag));
+                }
+            }
+            Op::SpCombine { index, of, .. }
+            | Op::BwdSpCombine { index, of, .. }
+            | Op::BwdSp2Combine { index, of, .. } => {
                 let merge = {
                     let st = pipe
                         .as_mut()
@@ -304,6 +337,30 @@ where
                 }
                 machine.finish(op)?;
             }
+            Op::BwdWgradAllReduce { overlap, .. } => {
+                // The expert wgrad AllReduce over each ESP group. With
+                // `overlap` the completions are DEFERRED: subsequent ops
+                // chain from the pre-AllReduce frontier, so the reduction
+                // overlaps the remaining backward ops; the deferred
+                // handles join the frontier once the walk finishes.
+                // Without it the completions chain the main frontier —
+                // the non-overlapped ablation lowering.
+                for grp in groups.all_groups(GroupKind::Esp) {
+                    let ins = machine.inputs(op, &grp)?;
+                    ensure!(ins.len() == grp.len(), "one chunk list per member");
+                    let deps = deps_of(&frontier, &grp);
+                    let (outs, ends) = algo::ring_allreduce(transport, &grp, &ins, &deps, tag);
+                    machine.accept(op, &grp, outs)?;
+                    for (k, &r) in grp.iter().enumerate() {
+                        if overlap {
+                            deferred[r].push(ends[k].clone());
+                        } else {
+                            frontier[r] = Some(ends[k].clone());
+                        }
+                    }
+                }
+                machine.finish(op)?;
+            }
             _ => {
                 let kind = group_kind(op)
                     .ok_or_else(|| anyhow::anyhow!("op {op:?} has no interpretation"))?;
@@ -331,7 +388,10 @@ where
                         Op::EspAllReduce { .. } => {
                             algo::ring_allreduce(transport, &grp, &ins, &deps, tag)
                         }
-                        Op::EpAlltoAll { .. } | Op::FusedAlltoAll { .. } => {
+                        Op::EpAlltoAll { .. }
+                        | Op::FusedAlltoAll { .. }
+                        | Op::BwdEpAlltoAll { .. }
+                        | Op::BwdFusedAlltoAll { .. } => {
                             algo::pairwise_alltoall(transport, &grp, &ins, &deps, tag)
                         }
                         _ => bail!("unreachable: {op:?} classified as group collective"),
@@ -349,6 +409,16 @@ where
         pipe.is_none(),
         "SP pipelined region did not complete (a chunk's combine is missing)"
     );
+    // Join any deferred (overlap-scheduled) completions back into the
+    // frontier: the program is not done until the wgrad AllReduce is.
+    for (r, slot) in frontier.iter_mut().enumerate() {
+        if deferred[r].is_empty() {
+            continue;
+        }
+        let mut dep: Vec<T::Handle> = slot.iter().cloned().collect();
+        dep.append(&mut deferred[r]);
+        *slot = Some(transport.join(&dep, tags::BWD_WGRAD_ALLREDUCE));
+    }
     Ok(frontier)
 }
 
@@ -377,7 +447,11 @@ mod tests {
                 Op::SpDispatch { bytes_per_pair, .. }
                 | Op::SpCombine { bytes_per_pair, .. }
                 | Op::Sp2Dispatch { bytes_per_pair, .. }
-                | Op::Sp2Saa { bytes_per_pair, .. } => (*bytes_per_pair / 4.0) as usize,
+                | Op::Sp2Saa { bytes_per_pair, .. }
+                | Op::BwdSpDispatch { bytes_per_pair, .. }
+                | Op::BwdSpCombine { bytes_per_pair, .. }
+                | Op::BwdSp2Dispatch { bytes_per_pair, .. }
+                | Op::BwdSp2Combine { bytes_per_pair, .. } => (*bytes_per_pair / 4.0) as usize,
                 _ => 2,
             };
             Ok(vec![vec![vec![1.0f32; elems]; per]; grp.len()])
@@ -524,6 +598,68 @@ mod tests {
         // member forwards its 4-chunk AlltoAll output to 1 MP peer, per
         // chunk — 4·4·(2 + 4) f32.
         assert_eq!(vol(tags::MP_ALLGATHER), (4 * 4 * (2 + 4) * 4) as f64);
+    }
+
+    #[test]
+    fn wgrad_allreduce_runs_on_both_scheduling_paths() {
+        // The deferred (overlap) path must still complete the frontier —
+        // the program is not done until the reduction is — and the
+        // non-overlapped path chains it like any other collective. Either
+        // way the AllReduce runs once per ESP group and lands on the wire
+        // under its canonical tag.
+        let groups = ProcessGroups::new(ParallelDegrees { p: 4, n_mp: 2, n_esp: 2 }).unwrap();
+        for overlap in [true, false] {
+            let ops = vec![
+                Op::Gate { flops_per_rank: 1.0 },
+                Op::BwdWgradAllReduce { bytes_per_rank: 8.0, overlap },
+                Op::Ungate { flops_per_rank: 1.0 },
+            ];
+            let mut t = DataTransport::new();
+            let mut m = CountingMachine { comm_ops: Vec::new(), local_ops: Vec::new() };
+            let frontier = run_program(&ops, &groups, &mut t, &mut m).unwrap();
+            assert!(frontier.iter().all(|h| h.is_some()), "overlap={overlap}");
+            // One accept per ESP group (two groups of two ranks).
+            assert_eq!(
+                m.comm_ops,
+                vec!["bwd.wgrad.allreduce", "bwd.wgrad.allreduce"],
+                "overlap={overlap}"
+            );
+            let tags: Vec<&str> = t.log().iter().map(|(t, _)| *t).collect();
+            assert!(tags.contains(&"bwd.wgrad.allreduce"), "overlap={overlap}");
+        }
+    }
+
+    #[test]
+    fn bwd_sp_region_wgrad_chains_compute_only() {
+        // A backward SP region: per chunk, dispatch → dgrad → wgrad →
+        // combine. The region must merge even though the wgrads never
+        // touch the per-chunk ffn slots, and per-chunk volumes land under
+        // the bwd.* tags.
+        let groups = ProcessGroups::new(ParallelDegrees { p: 4, n_mp: 2, n_esp: 2 }).unwrap();
+        let ops = vec![
+            Op::BwdSpDispatch { bytes_per_pair: 8.0, index: 0, of: 2 },
+            Op::BwdSpDispatch { bytes_per_pair: 16.0, index: 1, of: 2 },
+            Op::BwdSpDgrad { flops_per_rank: 1.0, index: 0, of: 2 },
+            Op::BwdSpWgrad { flops_per_rank: 1.0, index: 0, of: 2 },
+            Op::BwdSpCombine { bytes_per_pair: 8.0, index: 0, of: 2 },
+            Op::BwdSpDgrad { flops_per_rank: 1.0, index: 1, of: 2 },
+            Op::BwdSpWgrad { flops_per_rank: 1.0, index: 1, of: 2 },
+            Op::BwdSpCombine { bytes_per_pair: 16.0, index: 1, of: 2 },
+        ];
+        let mut t = DataTransport::new();
+        let mut m = CountingMachine { comm_ops: Vec::new(), local_ops: Vec::new() };
+        let frontier = run_program(&ops, &groups, &mut t, &mut m).unwrap();
+        assert!(frontier.iter().all(|h| h.is_some()), "region merged back");
+        assert_eq!(
+            m.local_ops,
+            vec!["bwd.sp.dgrad.0", "bwd.sp.wgrad.0", "bwd.sp.dgrad.1", "bwd.sp.wgrad.1"]
+        );
+        let log = t.log().to_vec();
+        let vol = |tag: &str| -> f64 {
+            log.iter().filter(|(t, _)| *t == tag).map(|(_, b)| *b).sum()
+        };
+        assert_eq!(vol("bwd.sp.dispatch.1"), 12.0 * 16.0);
+        assert_eq!(vol("bwd.sp.combine.0"), 12.0 * 8.0);
     }
 
     #[test]

@@ -38,7 +38,14 @@ impl Machine<DagTransport<'_>> for DagMachine {
             | Op::EspAllReduce { total_bytes } => {
                 vec![vec![Lump(total_bytes / g as f64); g]; g]
             }
-            // AlltoAll-likes: one chunk per (src, dst) pair.
+            // The wgrad AllReduce carries each member's expert-weight
+            // gradient shard; same ring chunking as the reductions above.
+            Op::BwdWgradAllReduce { bytes_per_rank, .. } => {
+                vec![vec![Lump(bytes_per_rank / g as f64); g]; g]
+            }
+            // AlltoAll-likes: one chunk per (src, dst) pair. The backward
+            // legs are transposes of their forward counterparts — identical
+            // per-pair volumes, reversed direction.
             Op::EpAlltoAll { bytes_per_pair }
             | Op::FusedAlltoAll { bytes_per_pair }
             | Op::SaaCombine { bytes_per_pair }
@@ -46,7 +53,13 @@ impl Machine<DagTransport<'_>> for DagMachine {
             | Op::SpDispatch { bytes_per_pair, .. }
             | Op::SpCombine { bytes_per_pair, .. }
             | Op::Sp2Dispatch { bytes_per_pair, .. }
-            | Op::Sp2Saa { bytes_per_pair, .. } => {
+            | Op::Sp2Saa { bytes_per_pair, .. }
+            | Op::BwdEpAlltoAll { bytes_per_pair, .. }
+            | Op::BwdFusedAlltoAll { bytes_per_pair, .. }
+            | Op::BwdSpDispatch { bytes_per_pair, .. }
+            | Op::BwdSpCombine { bytes_per_pair, .. }
+            | Op::BwdSp2Dispatch { bytes_per_pair, .. }
+            | Op::BwdSp2Combine { bytes_per_pair, .. } => {
                 vec![vec![Lump(bytes_per_pair); g]; g]
             }
             _ => bail!("non-communication op has no chunk inputs: {op:?}"),
@@ -127,6 +140,21 @@ pub fn simulate_forward(
     Ok(Simulator::new(cluster).run(&dag))
 }
 
+/// Simulate the backward pass only, with the wgrad-AllReduce either
+/// overlapping the remaining backward ops (the production lowering) or
+/// serialized before them (the ablation).
+pub fn simulate_backward_overlap(
+    kind: ScheduleKind,
+    cfg: &MoeLayerConfig,
+    cluster: &ClusterTopology,
+    overlap: bool,
+) -> Result<(SimReport, SimDag)> {
+    let ops = builders::backward_ops_overlap(kind, cfg, None, overlap);
+    let dag = lower_ops(&ops, cfg, cluster)?;
+    let report = Simulator::new(cluster).run(&dag);
+    Ok((report, dag))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,18 +200,28 @@ mod tests {
 
     #[test]
     fn sp2_with_one_chunk_times_like_s2() {
-        // SP2(1) is S2's op structure with a fork/join around the middle —
-        // the single chunk's SAA is the monolithic SAA, so the makespan
-        // must match S2's closely.
+        // SP2(1)'s forward is S2's op structure with a fork/join around the
+        // middle — the single chunk's SAA is the monolithic SAA, so the
+        // forward makespan must match S2's exactly. The backward lowerings
+        // legitimately differ (the region form overlaps the chunk's wgrad
+        // with its combine AlltoAll, and the wgrad-AllReduce defers from a
+        // different frontier), so the full iteration only matches loosely —
+        // and never from above by more than round-off.
         let cluster = testbed_b();
         for (p, n_mp, n_esp) in [(8usize, 2usize, 2usize), (16, 4, 2)] {
             let c = cfg(p, n_mp, n_esp);
+            let f2 = simulate_forward(ScheduleKind::S2, &c, &cluster).unwrap().makespan;
+            let fsp2 = simulate_forward(ScheduleKind::PipelinedS2 { chunks: 1 }, &c, &cluster)
+                .unwrap()
+                .makespan;
+            let rel = (f2 - fsp2).abs() / f2;
+            assert!(rel < 1e-9, "fwd SP2(1) {fsp2} vs S2 {f2} at p={p}");
             let t2 = simulate_iteration(ScheduleKind::S2, &c, &cluster).unwrap().makespan;
             let tsp2 = simulate_iteration(ScheduleKind::PipelinedS2 { chunks: 1 }, &c, &cluster)
                 .unwrap()
                 .makespan;
             let rel = (t2 - tsp2).abs() / t2;
-            assert!(rel < 1e-9, "SP2(1) {tsp2} vs S2 {t2} at p={p}");
+            assert!(rel < 0.05, "iter SP2(1) {tsp2} vs S2 {t2} at p={p}");
         }
     }
 
@@ -211,17 +249,26 @@ mod tests {
 
     #[test]
     fn sp_with_one_chunk_times_like_s1() {
-        // SP(1) is S1's op structure with a fork/join around the middle —
-        // no overlap to exploit, so the makespan must match S1's closely.
+        // SP(1)'s forward is S1's op structure with a fork/join around the
+        // middle — no overlap to exploit, so the forward makespan must
+        // match S1's exactly. The backward lowerings legitimately differ
+        // (see `sp2_with_one_chunk_times_like_s2`), so the full iteration
+        // only matches loosely.
         let cluster = testbed_b();
         for (p, n_mp, n_esp) in [(8usize, 2usize, 2usize), (16, 4, 2)] {
             let c = cfg(p, n_mp, n_esp);
+            let f1 = simulate_forward(ScheduleKind::S1, &c, &cluster).unwrap().makespan;
+            let fsp = simulate_forward(ScheduleKind::Pipelined { chunks: 1 }, &c, &cluster)
+                .unwrap()
+                .makespan;
+            let rel = (f1 - fsp).abs() / f1;
+            assert!(rel < 1e-9, "fwd SP(1) {fsp} vs S1 {f1} at p={p}");
             let t1 = simulate_iteration(ScheduleKind::S1, &c, &cluster).unwrap().makespan;
             let tsp = simulate_iteration(ScheduleKind::Pipelined { chunks: 1 }, &c, &cluster)
                 .unwrap()
                 .makespan;
             let rel = (t1 - tsp).abs() / t1;
-            assert!(rel < 1e-9, "SP(1) {tsp} vs S1 {t1} at p={p}");
+            assert!(rel < 0.05, "iter SP(1) {tsp} vs S1 {t1} at p={p}");
         }
     }
 
@@ -432,6 +479,55 @@ mod tests {
             report.overlap_seconds(&dag) > 0.0,
             "SP forward shows no compute/comm overlap"
         );
+    }
+
+    #[test]
+    fn wgrad_allreduce_overlap_beats_serialized_backward() {
+        // The whole-iteration acceptance case: deferring the expert
+        // wgrad-AllReduce's completion lets the remaining backward ops
+        // (combine AlltoAll, gate backward, the MP/ESP restore) run
+        // concurrently with the reduction, so the overlapped lowering
+        // strictly beats the serialized one at equal config — and the
+        // engine sees the concurrency as nonzero compute/comm overlap in
+        // the backward region.
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+        let mut c = cfg(8, 2, 2);
+        c.h = 16384; // sizable expert shards → a wgrad AllReduce worth hiding
+        for kind in [
+            ScheduleKind::Baseline,
+            ScheduleKind::S1,
+            ScheduleKind::S2,
+            ScheduleKind::Pipelined { chunks: 4 },
+            ScheduleKind::PipelinedS2 { chunks: 4 },
+        ] {
+            let (ov, dag) = simulate_backward_overlap(kind, &c, &cluster, true).unwrap();
+            let (seq, _) = simulate_backward_overlap(kind, &c, &cluster, false).unwrap();
+            assert!(
+                ov.makespan < seq.makespan,
+                "{kind:?}: overlapped bwd {} !< serialized {}",
+                ov.makespan,
+                seq.makespan
+            );
+            assert!(
+                ov.overlap_seconds(&dag) > 0.0,
+                "{kind:?}: overlapped backward shows no compute/comm overlap"
+            );
+        }
+    }
+
+    #[test]
+    fn backward_comm_log_uses_bwd_tags() {
+        use crate::comm::tags;
+        let cluster = testbed_b();
+        let c = cfg(8, 2, 2);
+        let ops = builders::backward_ops(ScheduleKind::S1, &c);
+        let dag = lower_ops(&ops, &c, &cluster).unwrap();
+        let log = dag.comm_log();
+        let tags_seen: Vec<&str> = log.iter().map(|(t, _)| *t).collect();
+        assert!(tags_seen.contains(&tags::BWD_FUSED_DISPATCH));
+        assert!(tags_seen.contains(&tags::BWD_FUSED_COMBINE));
+        assert!(tags_seen.contains(&tags::BWD_WGRAD_ALLREDUCE));
+        assert!(tags_seen.contains(&tags::MP_REDUCESCATTER));
     }
 
     #[test]

@@ -80,6 +80,31 @@
 //! ([`ops::ffn_load_scale`]) so S1/S2/baseline and the SP chunks price
 //! compute consistently.
 //!
+//! # The backward program (whole-iteration schedules)
+//!
+//! Every family's backward pass is a first-class op program
+//! ([`builders::backward_ops`]), not a scalar heuristic: the adjoint of
+//! each forward op, emitted in reverse. Dispatch and combine swap roles
+//! under transposition — the backward *dispatch* AlltoAll carries dY along
+//! the forward combine's pairs and the backward *combine* carries dX along
+//! the forward dispatch's pairs, with per-pair volumes identical to the
+//! forward ones (tags `bwd.ep.*` / `bwd.fused.*` / `bwd.sp.*` /
+//! `bwd.sp2.*` in [`crate::comm::tags`]). The expert FFN splits into
+//! **dgrad** (feeds the backward combine) and **wgrad** (a pure
+//! compute-stream sink), and the forward's free MpSplit/EspSplit ops
+//! become real AllGathers in reverse — which is why a family's backward
+//! is strictly more than a mirrored forward. The expert **wgrad
+//! AllReduce** ([`ops::Op::BwdWgradAllReduce`], sized by
+//! [`ops::bytes_wgrad_per_rank`]) is scheduled onto the same dual
+//! comm/compute stream frontiers the SP/SP2 regions use: with
+//! `overlap == true` (the default) the interpreter defers its completion
+//! handles so the reduction rides under the remaining backward ops and
+//! only its *exposed* tail (if any) extends the makespan;
+//! [`builders::backward_ops_overlap`] exposes the serialized ablation.
+//! The perf model mirrors all of this in closed form (`t_bwd_*`,
+//! `t_iter_*` in [`crate::perfmodel::closedform`]) and Algorithm 1's
+//! argmin compares **whole iterations**, not forward passes.
+//!
 //! Besides the expected-profile policy there is a **two-pass** variant:
 //! [`ops::sp_spans_measured`] re-balances the spans from the gate's
 //! *measured* per-expert loads (max-aggregated over ranks —
@@ -94,7 +119,7 @@ pub mod interp;
 pub mod lowering;
 pub mod ops;
 
-pub use builders::{backward_ops, forward_ops, iteration_ops};
+pub use builders::{backward_ops, backward_ops_overlap, forward_ops, iteration_ops};
 pub use interp::{run_program, Machine};
-pub use lowering::{lower_ops, simulate_forward, simulate_iteration};
+pub use lowering::{lower_ops, simulate_backward_overlap, simulate_forward, simulate_iteration};
 pub use ops::{Op, ScheduleKind};

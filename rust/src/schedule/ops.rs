@@ -72,6 +72,54 @@ pub enum Op {
     /// intra/inter link-class overlap. The last SAA of the region joins
     /// the comm and compute streams back into the main frontier.
     Sp2Saa { bytes_per_pair: f64, index: usize, of: usize },
+    /// Backward EP-group AlltoAll (baseline family): `combine == false` is
+    /// the backward *dispatch* (transpose of the forward combine AlltoAll,
+    /// carrying dY to the experts), `combine == true` the backward
+    /// *combine* (transpose of the forward dispatch, returning dX). Same
+    /// per-pair volume as the forward counterpart it transposes.
+    BwdEpAlltoAll { bytes_per_pair: f64, combine: bool },
+    /// Backward fused EP&ESP-AlltoAll (PauseMP families) — transposition
+    /// semantics as [`Op::BwdEpAlltoAll`], over the product group.
+    BwdFusedAlltoAll { bytes_per_pair: f64, combine: bool },
+    /// Expert FFN activation gradient (dgrad): dL/dX through both expert
+    /// matmuls — same FLOPs as the forward FFN it differentiates.
+    BwdExpertDgrad { flops_per_rank: f64 },
+    /// Expert FFN weight gradient (wgrad): dL/dW through both expert
+    /// matmuls — same FLOPs as the forward FFN. Produces the gradients
+    /// the wgrad AllReduce synchronizes.
+    BwdExpertWgrad { flops_per_rank: f64 },
+    /// ESP-group AllReduce of the expert weight gradients
+    /// (`bytes_per_rank` = each member's wgrad buffer). With
+    /// `overlap == true` the interpreter defers its completion to the end
+    /// of the program so the reduction rides the comm stream under the
+    /// remaining backward ops; `overlap == false` chains it on the main
+    /// frontier (the non-overlapped ablation lowering).
+    BwdWgradAllReduce { bytes_per_rank: f64, overlap: bool },
+    /// Backward SP dispatch: transpose of forward `sp.combine.index`,
+    /// carrying chunk `index`'s dY — chains on the region's comm stream
+    /// exactly like [`Op::SpDispatch`].
+    BwdSpDispatch { bytes_per_pair: f64, index: usize, of: usize },
+    /// Backward SP dgrad over chunk `index`: compute-stream FFN gradient
+    /// whose completion feeds that chunk's backward combine.
+    BwdSpDgrad { flops_per_rank: f64, index: usize, of: usize },
+    /// Backward SP wgrad over chunk `index`: chains the compute stream
+    /// ONLY — the chunk's backward combine does not wait on it, so the
+    /// combine AlltoAll overlaps the weight-gradient compute.
+    BwdSpWgrad { flops_per_rank: f64, index: usize, of: usize },
+    /// Backward SP combine: transpose of forward `sp.dispatch.index`,
+    /// returning chunk `index`'s dX; the region's last combine joins the
+    /// comm and compute streams like [`Op::SpCombine`].
+    BwdSpCombine { bytes_per_pair: f64, index: usize, of: usize },
+    /// Backward SP2 dispatch: transpose of the AlltoAll phase of forward
+    /// `sp2.saa.index` (the SAA's MP-AllGather adjoint runs once up front
+    /// as an MP-ReduceScatter, not per chunk).
+    BwdSp2Dispatch { bytes_per_pair: f64, index: usize, of: usize },
+    /// Backward SP2 dgrad over chunk `index` (see [`Op::BwdSpDgrad`]).
+    BwdSp2Dgrad { flops_per_rank: f64, index: usize, of: usize },
+    /// Backward SP2 wgrad over chunk `index` (see [`Op::BwdSpWgrad`]).
+    BwdSp2Wgrad { flops_per_rank: f64, index: usize, of: usize },
+    /// Backward SP2 combine: transpose of forward `sp2.dispatch.index`.
+    BwdSp2Combine { bytes_per_pair: f64, index: usize, of: usize },
 }
 
 impl Op {
@@ -105,6 +153,21 @@ impl Op {
             Op::Sp2Dispatch { index, .. } => tags::SP2_DISPATCH[*index],
             Op::Sp2ExpertFfn { index, .. } => tags::SP2_FFN[*index],
             Op::Sp2Saa { index, .. } => tags::SP2_SAA[*index],
+            Op::BwdEpAlltoAll { combine: false, .. } => tags::BWD_EP_DISPATCH,
+            Op::BwdEpAlltoAll { combine: true, .. } => tags::BWD_EP_COMBINE,
+            Op::BwdFusedAlltoAll { combine: false, .. } => tags::BWD_FUSED_DISPATCH,
+            Op::BwdFusedAlltoAll { combine: true, .. } => tags::BWD_FUSED_COMBINE,
+            Op::BwdExpertDgrad { .. } => tags::BWD_EXPERT_DGRAD,
+            Op::BwdExpertWgrad { .. } => tags::BWD_EXPERT_WGRAD,
+            Op::BwdWgradAllReduce { .. } => tags::BWD_WGRAD_ALLREDUCE,
+            Op::BwdSpDispatch { index, .. } => tags::BWD_SP_DISPATCH[*index],
+            Op::BwdSpDgrad { index, .. } => tags::BWD_SP_DGRAD[*index],
+            Op::BwdSpWgrad { index, .. } => tags::BWD_SP_WGRAD[*index],
+            Op::BwdSpCombine { index, .. } => tags::BWD_SP_COMBINE[*index],
+            Op::BwdSp2Dispatch { index, .. } => tags::BWD_SP2_DISPATCH[*index],
+            Op::BwdSp2Dgrad { index, .. } => tags::BWD_SP2_DGRAD[*index],
+            Op::BwdSp2Wgrad { index, .. } => tags::BWD_SP2_WGRAD[*index],
+            Op::BwdSp2Combine { index, .. } => tags::BWD_SP2_COMBINE[*index],
         }
     }
 
@@ -124,6 +187,13 @@ impl Op {
                 | Op::SpCombine { .. }
                 | Op::Sp2Dispatch { .. }
                 | Op::Sp2Saa { .. }
+                | Op::BwdEpAlltoAll { .. }
+                | Op::BwdFusedAlltoAll { .. }
+                | Op::BwdWgradAllReduce { .. }
+                | Op::BwdSpDispatch { .. }
+                | Op::BwdSpCombine { .. }
+                | Op::BwdSp2Dispatch { .. }
+                | Op::BwdSp2Combine { .. }
         )
     }
 }
@@ -265,6 +335,15 @@ pub fn bytes_mp_ag_s1_per_rank(c: &MoeLayerConfig) -> f64 {
 /// slice (E, T/N_MP, M) — the AG_MP(ETM) of Eq. (14).
 pub fn bytes_mp_ag_s2_per_rank(c: &MoeLayerConfig) -> f64 {
     (c.e * c.t_pausemp() * c.m * c.dtype_bytes) as f64
+}
+
+/// Per-rank expert weight-gradient buffer: the two FFN matmul weights of
+/// each locally hosted expert slot, H-sharded over ESP —
+/// experts-per-slot × 2 × M × (H/N_ESP) elements. This is the per-member
+/// buffer the backward wgrad AllReduce synchronizes (the ESP replicas
+/// computed partial weight gradients from different token shards).
+pub fn bytes_wgrad_per_rank(c: &MoeLayerConfig) -> f64 {
+    (c.experts_per_rank() * 2 * c.m * (c.h / c.par.n_esp) * c.dtype_bytes) as f64
 }
 
 // ---- SP chunking (capacity spans shared by builder and data plane) -----
@@ -671,6 +750,87 @@ mod tests {
             Op::Sp2ExpertFfn { flops_per_rank: 1.0, index: 2, of: 4 }.tag(),
             "sp2.ffn.2"
         );
+        // The backward vocabulary.
+        assert_eq!(
+            Op::BwdEpAlltoAll { bytes_per_pair: 1.0, combine: false }.tag(),
+            "bwd.ep.dispatch"
+        );
+        assert_eq!(
+            Op::BwdEpAlltoAll { bytes_per_pair: 1.0, combine: true }.tag(),
+            "bwd.ep.combine"
+        );
+        assert_eq!(
+            Op::BwdFusedAlltoAll { bytes_per_pair: 1.0, combine: false }.tag(),
+            "bwd.fused.dispatch"
+        );
+        assert_eq!(
+            Op::BwdFusedAlltoAll { bytes_per_pair: 1.0, combine: true }.tag(),
+            "bwd.fused.combine"
+        );
+        assert!(Op::BwdEpAlltoAll { bytes_per_pair: 1.0, combine: false }.is_communication());
+        assert!(Op::BwdFusedAlltoAll { bytes_per_pair: 1.0, combine: true }.is_communication());
+        assert_eq!(
+            Op::BwdWgradAllReduce { bytes_per_rank: 1.0, overlap: true }.tag(),
+            "bwd.wgrad.allreduce"
+        );
+        assert!(Op::BwdWgradAllReduce { bytes_per_rank: 1.0, overlap: false }.is_communication());
+        assert!(!Op::BwdExpertDgrad { flops_per_rank: 1.0 }.is_communication());
+        assert!(!Op::BwdExpertWgrad { flops_per_rank: 1.0 }.is_communication());
+        assert_eq!(Op::BwdExpertDgrad { flops_per_rank: 1.0 }.tag(), "bwd.expert.dgrad");
+        assert_eq!(Op::BwdExpertWgrad { flops_per_rank: 1.0 }.tag(), "bwd.expert.wgrad");
+        assert_eq!(
+            Op::BwdSpDispatch { bytes_per_pair: 1.0, index: 1, of: 4 }.tag(),
+            "bwd.sp.dispatch.1"
+        );
+        assert_eq!(
+            Op::BwdSpCombine { bytes_per_pair: 1.0, index: 3, of: 4 }.tag(),
+            "bwd.sp.combine.3"
+        );
+        assert_eq!(
+            Op::BwdSpDgrad { flops_per_rank: 1.0, index: 0, of: 2 }.tag(),
+            "bwd.sp.dgrad.0"
+        );
+        assert_eq!(
+            Op::BwdSpWgrad { flops_per_rank: 1.0, index: 1, of: 2 }.tag(),
+            "bwd.sp.wgrad.1"
+        );
+        assert!(Op::BwdSpDispatch { bytes_per_pair: 1.0, index: 0, of: 2 }.is_communication());
+        assert!(Op::BwdSpCombine { bytes_per_pair: 1.0, index: 0, of: 2 }.is_communication());
+        assert!(!Op::BwdSpDgrad { flops_per_rank: 1.0, index: 0, of: 2 }.is_communication());
+        assert!(!Op::BwdSpWgrad { flops_per_rank: 1.0, index: 0, of: 2 }.is_communication());
+        assert_eq!(
+            Op::BwdSp2Dispatch { bytes_per_pair: 1.0, index: 2, of: 4 }.tag(),
+            "bwd.sp2.dispatch.2"
+        );
+        assert_eq!(
+            Op::BwdSp2Combine { bytes_per_pair: 1.0, index: 0, of: 4 }.tag(),
+            "bwd.sp2.combine.0"
+        );
+        assert_eq!(
+            Op::BwdSp2Dgrad { flops_per_rank: 1.0, index: 1, of: 2 }.tag(),
+            "bwd.sp2.dgrad.1"
+        );
+        assert_eq!(
+            Op::BwdSp2Wgrad { flops_per_rank: 1.0, index: 1, of: 2 }.tag(),
+            "bwd.sp2.wgrad.1"
+        );
+    }
+
+    #[test]
+    fn wgrad_bytes_track_the_expert_shard() {
+        // The wgrad AllReduce buffer is the H-sharded expert weights: it
+        // must shrink with N_ESP and scale with the hidden sizes, and it
+        // is independent of the batch geometry (weights, not activations).
+        let c = cfg();
+        let w = bytes_wgrad_per_rank(&c);
+        assert!(w > 0.0);
+        assert_eq!(
+            w,
+            (c.experts_per_rank() * 2 * c.m * (c.h / c.par.n_esp) * c.dtype_bytes) as f64
+        );
+        let mut bigger = cfg();
+        bigger.b *= 2;
+        assert_eq!(bytes_wgrad_per_rank(&bigger), w, "batch-independent");
     }
 
     #[test]

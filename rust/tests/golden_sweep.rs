@@ -17,11 +17,11 @@
 //! algorithms, the engine's resource model or the α-β fit shows up here
 //! as a diff — schedule-timing changes must update the golden files
 //! explicitly. Bless flow: `GOLDEN_BLESS=1 cargo test golden_sweep`
-//! rewrites the files (they are also written on first run when missing,
-//! with a notice to commit them); a stale file fails this test AND the CI
-//! binary-gate diff, and CI hard-fails while a golden is not committed
-//! (uploading the generated CSVs to commit verbatim), so timing changes
-//! cannot merge silently.
+//! rewrites the files; a MISSING golden is a hard failure (never a silent
+//! first-run write — that loophole let the goldens go uncommitted for six
+//! PRs), a stale one fails this test AND the CI binary-gate diff, and the
+//! CI golden-bless job uploads freshly blessed CSVs to commit verbatim,
+//! so timing changes cannot merge silently.
 
 use std::path::Path;
 
@@ -90,12 +90,22 @@ fn golden_sweep_smoke() {
             s.golden
         );
         let path = Path::new(s.golden);
-        if std::env::var_os("GOLDEN_BLESS").is_some() || !path.exists() {
+        if std::env::var_os("GOLDEN_BLESS").is_some() {
             std::fs::create_dir_all(path.parent().unwrap()).unwrap();
             std::fs::write(path, &got).unwrap();
             eprintln!("golden_sweep: blessed {} ({} cases) — commit it", s.golden, s.cases);
             continue;
         }
+        // A missing golden is a hard failure, not a bless: writing on
+        // first run let the gate pass without any file ever being
+        // committed. Only GOLDEN_BLESS=1 writes.
+        assert!(
+            path.exists(),
+            "{} is missing — the golden gate has nothing to compare against. \
+             Generate it with `GOLDEN_BLESS=1 cargo test golden_sweep` and \
+             commit the file (CI's golden-bless job uploads it as an artifact)",
+            s.golden
+        );
         let want = std::fs::read_to_string(path).unwrap();
         assert_eq!(
             want, got,

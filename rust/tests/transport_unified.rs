@@ -12,7 +12,7 @@
 use parm::config::moe::ParallelDegrees;
 use parm::config::{ClusterTopology, MoeLayerConfig};
 use parm::moe::{reference_forward, run_schedule, LayerState, NativeBackend};
-use parm::schedule::{forward_ops, lower_ops, ScheduleKind};
+use parm::schedule::{backward_ops, forward_ops, lower_ops, ScheduleKind};
 use parm::util::propcheck::{assert_close, check};
 use parm::util::prng::Rng;
 
@@ -304,6 +304,133 @@ fn prop_sp2_chunk_volumes_match_the_monolithic_s2_combine() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_backward_alltoalls_transpose_the_forward_volumes() {
+    // DAG-plane property of the backward programs, across all four
+    // families: transposition swaps the dispatch and combine roles but
+    // moves EXACTLY the forward volumes — the backward dispatch (dY)
+    // carries the forward combine's bytes and the backward combine (dX)
+    // the forward dispatch's, per leg for the monolithic schedules and
+    // chunk-for-chunk for the pipelined regions.
+    let cluster = ClusterTopology::testbed_b();
+    check("bwd-transposes-fwd-volumes", 15, |rng| {
+        let cfg = exact_cfg(rng);
+        cfg.validate().map_err(|e| format!("invalid cfg {cfg:?}: {e}"))?;
+        let lower = |kind: ScheduleKind, bwd: bool| {
+            let ops =
+                if bwd { backward_ops(kind, &cfg) } else { forward_ops(kind, &cfg) };
+            lower_ops(&ops, &cfg, &cluster).map_err(|e| e.to_string())
+        };
+        let eq = |what: &str, bwd: f64, fwd: f64| -> Result<(), String> {
+            if fwd <= 0.0 {
+                return Err(format!("{}: {what}: forward leg moved no bytes", cfg.id()));
+            }
+            if (bwd - fwd).abs() > 1e-6 * bwd.max(fwd) {
+                return Err(format!("{}: {what}: bwd {bwd} vs fwd {fwd}", cfg.id()));
+            }
+            Ok(())
+        };
+        // Baseline: two symmetric EP legs share one forward tag.
+        let f = lower(ScheduleKind::Baseline, false)?;
+        let b = lower(ScheduleKind::Baseline, true)?;
+        let ep_leg = f.comm_bytes_with_prefix("ep.alltoall") / 2.0;
+        eq("bwd.ep.dispatch", b.comm_bytes_with_prefix("bwd.ep.dispatch"), ep_leg)?;
+        eq("bwd.ep.combine", b.comm_bytes_with_prefix("bwd.ep.combine"), ep_leg)?;
+        // S1: two symmetric fused legs share one forward tag.
+        let f = lower(ScheduleKind::S1, false)?;
+        let b = lower(ScheduleKind::S1, true)?;
+        let fused_leg = f.comm_bytes_with_prefix("fused.alltoall") / 2.0;
+        eq("s1 bwd.fused.dispatch", b.comm_bytes_with_prefix("bwd.fused.dispatch"), fused_leg)?;
+        eq("s1 bwd.fused.combine", b.comm_bytes_with_prefix("bwd.fused.combine"), fused_leg)?;
+        // S2: the forward dispatch leg is `fused.alltoall`, the combine
+        // leg the SAA's AlltoAll phases (`saa.combine` wire bytes).
+        let f = lower(ScheduleKind::S2, false)?;
+        let b = lower(ScheduleKind::S2, true)?;
+        eq(
+            "s2 bwd.fused.dispatch",
+            b.comm_bytes_with_prefix("bwd.fused.dispatch"),
+            f.comm_bytes_with_prefix("saa.combine"),
+        )?;
+        eq(
+            "s2 bwd.fused.combine",
+            b.comm_bytes_with_prefix("bwd.fused.combine"),
+            f.comm_bytes_with_prefix("fused.alltoall"),
+        )?;
+        // SP / SP2: chunk-for-chunk swap of the dispatch and combine tags.
+        for chunks in [2usize, 4] {
+            let f = lower(ScheduleKind::Pipelined { chunks }, false)?;
+            let b = lower(ScheduleKind::Pipelined { chunks }, true)?;
+            for k in 0..chunks {
+                eq(
+                    &format!("bwd.sp.dispatch.{k}"),
+                    b.comm_bytes_with_prefix(&format!("bwd.sp.dispatch.{k}")),
+                    f.comm_bytes_with_prefix(&format!("sp.combine.{k}")),
+                )?;
+                eq(
+                    &format!("bwd.sp.combine.{k}"),
+                    b.comm_bytes_with_prefix(&format!("bwd.sp.combine.{k}")),
+                    f.comm_bytes_with_prefix(&format!("sp.dispatch.{k}")),
+                )?;
+            }
+            let f = lower(ScheduleKind::PipelinedS2 { chunks }, false)?;
+            let b = lower(ScheduleKind::PipelinedS2 { chunks }, true)?;
+            for k in 0..chunks {
+                eq(
+                    &format!("bwd.sp2.dispatch.{k}"),
+                    b.comm_bytes_with_prefix(&format!("bwd.sp2.dispatch.{k}")),
+                    f.comm_bytes_with_prefix(&format!("sp2.saa.{k}")),
+                )?;
+                eq(
+                    &format!("bwd.sp2.combine.{k}"),
+                    b.comm_bytes_with_prefix(&format!("bwd.sp2.combine.{k}")),
+                    f.comm_bytes_with_prefix(&format!("sp2.dispatch.{k}")),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pinned_transposed_combine_moves_the_forward_dispatch_volumes() {
+    // Pinned (non-property) unit of the transposition contract: on a fixed
+    // layout, the backward combine AlltoAll — the transpose of the forward
+    // dispatch, returning dX to the token owners — moves EXACTLY the
+    // forward dispatch's wire bytes, for both the EP (baseline) and the
+    // fused (S1) AlltoAll shapes. Uniform routing makes every per-pair
+    // volume identical, so the equality is exact, not toleranced.
+    let cluster = ClusterTopology::testbed_b();
+    let cfg = MoeLayerConfig {
+        par: ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 },
+        b: 1,
+        l: 64,
+        e: 4,
+        m: 8,
+        h: 8,
+        k: 2,
+        f: 1.0,
+        dtype_bytes: 4,
+        skew: 0.0,
+    };
+    cfg.validate().unwrap();
+    for (kind, fwd_tag, bwd_tag) in [
+        (ScheduleKind::Baseline, "ep.alltoall", "bwd.ep.combine"),
+        (ScheduleKind::S1, "fused.alltoall", "bwd.fused.combine"),
+    ] {
+        let fwd = lower_ops(&forward_ops(kind, &cfg), &cfg, &cluster).unwrap();
+        let bwd = lower_ops(&backward_ops(kind, &cfg), &cfg, &cluster).unwrap();
+        // The forward program runs the tag twice (dispatch + combine,
+        // equal volumes); one leg is half the total.
+        let dispatch_leg = fwd.comm_bytes_with_prefix(fwd_tag) / 2.0;
+        assert!(dispatch_leg > 0.0, "{kind:?}: forward dispatch moved no bytes");
+        assert_eq!(
+            bwd.comm_bytes_with_prefix(bwd_tag),
+            dispatch_leg,
+            "{kind:?}: transposed combine must move the forward dispatch volume exactly"
+        );
+    }
 }
 
 #[test]
