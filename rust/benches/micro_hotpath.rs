@@ -30,6 +30,7 @@ fn main() -> anyhow::Result<()> {
         f: 1.2,
         dtype_bytes: 4,
         skew: 0.0,
+        wire: Default::default(),
     };
     let ops = iteration_ops(ScheduleKind::S2, &cfg32);
     let dag = lowering::lower_ops(&ops, &cfg32, &cluster)?;

@@ -690,6 +690,7 @@ mod tests {
             f: 1.2,
             dtype_bytes: 4,
             skew: 0.0,
+            wire: Default::default(),
         }
     }
 

@@ -18,7 +18,7 @@
 //! ([`crate::comm::tags`]) means the schedule we time is — by construction,
 //! not by cross-check — the schedule we execute.
 
-use crate::config::ClusterTopology;
+use crate::config::{ClusterTopology, WireDtype, WireLeg, WirePrecision};
 use crate::sim::dag::{SimDag, TaskId};
 
 /// Payload of one point-to-point message inside a generic collective.
@@ -31,6 +31,10 @@ pub trait Chunk: Clone {
     /// Concatenate `parts` into one block (SAA's phased forwards send
     /// several accumulated slices as a single message).
     fn concat(parts: &[Self]) -> Self;
+    /// Simulate narrowing this payload to `dtype` on the wire. Byte counts
+    /// (`Lump`) carry no values to round — the timing plane prices the
+    /// narrowing in its transport instead — so the default is a no-op.
+    fn quantize(&mut self, _dtype: WireDtype) {}
 }
 
 /// Timing-plane payload: a byte count, no data.
@@ -70,6 +74,15 @@ impl Chunk for Vec<f32> {
             out.extend_from_slice(p);
         }
         out
+    }
+
+    fn quantize(&mut self, dtype: WireDtype) {
+        if dtype == WireDtype::F32 {
+            return;
+        }
+        for v in self.iter_mut() {
+            *v = dtype.quantize(*v);
+        }
     }
 }
 
@@ -128,18 +141,58 @@ pub trait Transport {
     /// per-(sender, link-class) send chaining of the pairwise AlltoAll and
     /// whether SAA has a second link class to overlap onto.
     fn same_node(&self, a: usize, b: usize) -> bool;
+
+    /// Select which [`WireLeg`] subsequent sends belong to. The
+    /// interpreter calls this before each collective; wire-precision-aware
+    /// transports price (timing plane) or log (data plane) sends at that
+    /// leg's dtype. The default ignores legs — an unconfigured transport
+    /// behaves exactly as the f32 wire.
+    fn set_wire_leg(&mut self, _leg: WireLeg) {}
+
+    /// Wire dtype of the currently selected leg (`F32` unless a policy was
+    /// installed). The interpreter quantizes marshalled data payloads with
+    /// this before handing them to the collective algorithms.
+    fn wire_dtype(&self) -> WireDtype {
+        WireDtype::F32
+    }
 }
 
 /// Timing plane: emit the collective as transfer/compute tasks of a
-/// [`SimDag`], classified against a [`ClusterTopology`] topology.
+/// [`SimDag`], classified against a [`ClusterTopology`] topology. With a
+/// wire-precision policy installed, every transfer is priced at the
+/// current leg's compressed volume (`wire_bytes / dtype_bytes` of the
+/// op's model-width bytes).
 pub struct DagTransport<'a> {
     dag: &'a mut SimDag,
     cluster: &'a ClusterTopology,
+    wire: WirePrecision,
+    /// Bytes per model element — the width the op byte fields were
+    /// derived at, i.e. the denominator of the compression factor.
+    model_bytes: f64,
+    leg: WireLeg,
 }
 
 impl<'a> DagTransport<'a> {
+    /// An f32-wire transport: prices exactly the op byte fields.
     pub fn new(dag: &'a mut SimDag, cluster: &'a ClusterTopology) -> DagTransport<'a> {
-        DagTransport { dag, cluster }
+        DagTransport::with_wire(dag, cluster, WirePrecision::default(), 4)
+    }
+
+    /// A transport pricing each leg at `wire`'s dtype, relative to a model
+    /// dtype of `dtype_bytes` per element.
+    pub fn with_wire(
+        dag: &'a mut SimDag,
+        cluster: &'a ClusterTopology,
+        wire: WirePrecision,
+        dtype_bytes: usize,
+    ) -> DagTransport<'a> {
+        DagTransport {
+            dag,
+            cluster,
+            wire,
+            model_bytes: dtype_bytes as f64,
+            leg: WireLeg::Dispatch,
+        }
     }
 }
 
@@ -155,7 +208,8 @@ impl Transport for DagTransport<'_> {
         deps: &[TaskId],
         tag: &'static str,
     ) -> TaskId {
-        self.dag.transfer(src, dst, chunk.0, deps, tag)
+        let scale = self.wire.dtype(self.leg).bytes() as f64 / self.model_bytes;
+        self.dag.transfer(src, dst, chunk.0 * scale, deps, tag)
     }
 
     fn compute(&mut self, rank: usize, flops: f64, deps: &[TaskId], tag: &'static str) -> TaskId {
@@ -169,21 +223,39 @@ impl Transport for DagTransport<'_> {
     fn same_node(&self, a: usize, b: usize) -> bool {
         self.cluster.same_node(a, b)
     }
+
+    fn set_wire_leg(&mut self, leg: WireLeg) {
+        self.leg = leg;
+    }
+
+    fn wire_dtype(&self) -> WireDtype {
+        self.wire.dtype(self.leg)
+    }
 }
 
 /// Data plane: chunks are real `f32` vectors that the algorithms move by
 /// value; the transport's job is the wire log. All ranks live in one
 /// process (`same_node` is uniformly true), so SAA degrades to its
-/// sequential form — per-tag volumes are identical either way.
+/// sequential form — per-tag volumes are identical either way. With a
+/// wire-precision policy, the log reports COMPRESSED byte counts (the
+/// buffers stay `f32` in memory; the interpreter rounds their values via
+/// [`Chunk::quantize`] before the send).
 #[derive(Debug, Default)]
 pub struct DataTransport {
     /// Aggregated `(tag, total bytes)` in first-touch order.
     log: Vec<(&'static str, f64)>,
+    wire: WirePrecision,
+    leg: Option<WireLeg>,
 }
 
 impl DataTransport {
     pub fn new() -> DataTransport {
         DataTransport::default()
+    }
+
+    /// A transport logging each leg's sends at `wire`'s compressed width.
+    pub fn with_wire(wire: WirePrecision) -> DataTransport {
+        DataTransport { log: Vec::new(), wire, leg: None }
     }
 
     /// The wire log accumulated so far.
@@ -209,7 +281,9 @@ impl Transport for DataTransport {
         _deps: &[()],
         tag: &'static str,
     ) {
-        let bytes = chunk.bytes();
+        // `bytes()` reports the in-memory f32 size; the wire carries the
+        // current leg's dtype.
+        let bytes = chunk.bytes() * self.wire_dtype().bytes() as f64 / 4.0;
         match self.log.iter_mut().find(|(t, _)| *t == tag) {
             Some((_, b)) => *b += bytes,
             None => self.log.push((tag, bytes)),
@@ -222,6 +296,14 @@ impl Transport for DataTransport {
 
     fn same_node(&self, _a: usize, _b: usize) -> bool {
         true
+    }
+
+    fn set_wire_leg(&mut self, leg: WireLeg) {
+        self.leg = Some(leg);
+    }
+
+    fn wire_dtype(&self) -> WireDtype {
+        self.leg.map_or(WireDtype::F32, |leg| self.wire.dtype(leg))
     }
 }
 
@@ -279,5 +361,43 @@ mod tests {
         t.send(1, 0, &vec![0.0f32; 2], &[], "b");
         t.send(0, 1, &vec![0.0f32; 4], &[], "a");
         assert_eq!(t.log(), &[("a", 32.0), ("b", 8.0)]);
+    }
+
+    #[test]
+    fn dag_transport_prices_compressed_legs() {
+        let cluster = ClusterTopology::testbed_a();
+        let wire = WirePrecision::uniform(WireDtype::Bf16).with_leg(WireLeg::Wgrad, WireDtype::F32);
+        let mut dag = SimDag::new();
+        let mut t = DagTransport::with_wire(&mut dag, &cluster, wire, 4);
+        t.set_wire_leg(WireLeg::Dispatch);
+        t.send(0, 1, &Lump(100.0), &[], "d");
+        t.set_wire_leg(WireLeg::Wgrad);
+        t.send(0, 1, &Lump(100.0), &[], "w");
+        // bf16 dispatch at half volume, f32 wgrad at full.
+        assert_eq!(dag.total_network_bytes(), 50.0 + 100.0);
+    }
+
+    #[test]
+    fn data_transport_logs_compressed_bytes() {
+        let mut t = DataTransport::with_wire(WirePrecision::uniform(WireDtype::Fp8));
+        // Before any leg is selected, sends log at f32 width.
+        t.send(0, 1, &vec![0.0f32; 4], &[], "pre");
+        t.set_wire_leg(WireLeg::Combine);
+        assert_eq!(t.wire_dtype(), WireDtype::Fp8);
+        t.send(0, 1, &vec![0.0f32; 4], &[], "c");
+        assert_eq!(t.log(), &[("pre", 16.0), ("c", 4.0)]);
+    }
+
+    #[test]
+    fn data_chunk_quantize_rounds_in_place() {
+        let mut v = vec![1.0f32, 3.14159, -271.828];
+        let exact = v.clone();
+        v.quantize(WireDtype::F32);
+        assert_eq!(v, exact);
+        v.quantize(WireDtype::Bf16);
+        assert_eq!(v[0], 1.0);
+        for (q, x) in v.iter().zip(&exact) {
+            assert!(((q - x) / x).abs() <= 2.0f32.powi(-8), "{x} -> {q}");
+        }
     }
 }

@@ -5,9 +5,11 @@
 pub mod cluster;
 pub mod model;
 pub mod moe;
+pub mod precision;
 pub mod sweep;
 
 pub use cluster::{AlphaBeta, ClusterTopology, LinkClass, NodeSpec};
 pub use model::ModelConfig;
 pub use moe::{MoeLayerConfig, ParallelDegrees};
+pub use precision::{WireDtype, WireLeg, WirePrecision};
 pub use sweep::{sweep_table3, sweep_table3_scaled, GridAxes, SweepFilter};

@@ -132,6 +132,7 @@ impl ModelConfig {
             f: self.capacity_factor,
             dtype_bytes: 4,
             skew: 0.0,
+            wire: Default::default(),
         }
     }
 

@@ -2,6 +2,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::config::precision::WirePrecision;
 use crate::util::json::Json;
 
 /// Degrees of the hybrid parallelism MP+EP+ESP (paper §II-B).
@@ -72,6 +73,10 @@ pub struct MoeLayerConfig {
     /// hottest). Drives the load-aware SP chunk spans and the skewed
     /// sweep family (`parm sweep --skew`).
     pub skew: f64,
+    /// Per-leg wire dtype policy for the layer's collectives. The default
+    /// (all-f32) matches `dtype_bytes: 4` exactly, so volumes, sims, and
+    /// ids are unchanged unless a leg is narrowed (`parm ... --wire`).
+    pub wire: WirePrecision,
 }
 
 impl MoeLayerConfig {
@@ -88,6 +93,7 @@ impl MoeLayerConfig {
             f: 1.2,
             dtype_bytes: 4,
             skew: 0.0,
+            wire: WirePrecision::default(),
         }
     }
 
@@ -136,6 +142,9 @@ impl MoeLayerConfig {
         }
         if self.f <= 0.0 {
             bail!("capacity factor must be positive, got {}", self.f);
+        }
+        if self.dtype_bytes == 0 {
+            bail!("dtype_bytes must be positive");
         }
         if self.h % self.par.n_esp != 0 {
             bail!("H={} not divisible by N_ESP={}", self.h, self.par.n_esp);
@@ -190,19 +199,22 @@ impl MoeLayerConfig {
     }
 
     /// Short human id, e.g. `p8_mp2_esp2_b2_l64_e4_m32_h64_k2_f1.2`
-    /// (suffixed `_s{skew}` only for skewed-routing configs, so uniform
-    /// ids — and the golden sweep CSV built from them — are unchanged).
+    /// (suffixed `_s{skew}` only for skewed-routing configs and `_w{wire}`
+    /// only for compressed-wire configs, so default ids — and the golden
+    /// sweep CSV built from them — are unchanged).
     pub fn id(&self) -> String {
-        let base = format!(
+        let mut base = format!(
             "p{}_mp{}_esp{}_b{}_l{}_e{}_m{}_h{}_k{}_f{}",
             self.par.p, self.par.n_mp, self.par.n_esp, self.b, self.l, self.e, self.m, self.h,
             self.k, self.f
         );
         if self.skew > 0.0 {
-            format!("{base}_s{}", self.skew)
-        } else {
-            base
+            base = format!("{base}_s{}", self.skew);
         }
+        if !self.wire.is_default() {
+            base = format!("{base}_w{}", self.wire.id_suffix());
+        }
+        base
     }
 
     pub fn to_json(&self) -> Json {
@@ -222,10 +234,26 @@ impl MoeLayerConfig {
         if self.skew > 0.0 {
             fields.push(("skew", Json::num(self.skew)));
         }
+        if !self.wire.is_default() {
+            fields.push(("wire", self.wire.to_json()));
+        }
         Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<MoeLayerConfig> {
+        // `dtype_bytes` feeds every volume helper AND the sweep-cache key:
+        // a present-but-malformed value must error loudly, never silently
+        // coerce to the default. Only a genuinely absent key defaults to 4.
+        let dtype_bytes = match j.get("dtype_bytes") {
+            Json::Null => 4,
+            v => v
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("dtype_bytes must be a non-negative integer, got {v:?}"))?,
+        };
+        let wire = match j.get("wire") {
+            Json::Null => WirePrecision::default(),
+            v => WirePrecision::from_json(v)?,
+        };
         let cfg = MoeLayerConfig {
             par: ParallelDegrees {
                 p: j.req_usize("p")?,
@@ -239,8 +267,9 @@ impl MoeLayerConfig {
             h: j.req_usize("h")?,
             k: j.req_usize("k")?,
             f: j.req_f64("f")?,
-            dtype_bytes: j.get("dtype_bytes").as_usize().unwrap_or(4),
+            dtype_bytes,
             skew: j.get("skew").as_f64().unwrap_or(0.0),
+            wire,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -298,6 +327,48 @@ mod tests {
         let j = c.to_json();
         let back = MoeLayerConfig::from_json(&j).unwrap();
         assert_eq!(c, back);
+    }
+
+    #[test]
+    fn json_roundtrip_with_wire_policy() {
+        use crate::config::precision::{WireDtype, WireLeg};
+        let mut c = MoeLayerConfig::test_default();
+        c.wire = WirePrecision::uniform(WireDtype::Bf16).with_leg(WireLeg::Wgrad, WireDtype::F32);
+        let back = MoeLayerConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, back);
+        // Default wire stays out of the serialized form and the id.
+        let d = MoeLayerConfig::test_default();
+        assert!(!d.to_json().to_string().contains("wire"));
+        assert!(!d.id().contains("_w"));
+        assert!(c.to_json().to_string().contains("wire"));
+        assert!(c.id().ends_with("_wdbf16-cbf16-gbf16-rf32"));
+    }
+
+    #[test]
+    fn malformed_dtype_bytes_errors_loudly() {
+        let c = MoeLayerConfig::test_default();
+        // Missing key still defaults to 4.
+        let j = c.to_json();
+        let mut without = match j.clone() {
+            Json::Obj(mut m) => {
+                m.remove("dtype_bytes");
+                Json::Obj(m)
+            }
+            _ => unreachable!(),
+        };
+        assert_eq!(MoeLayerConfig::from_json(&without).unwrap().dtype_bytes, 4);
+        // Present-but-malformed values must error, not coerce to 4.
+        for bad in [Json::str("four"), Json::num(2.5), Json::num(-4.0), Json::Bool(true)] {
+            without = match j.clone() {
+                Json::Obj(mut m) => {
+                    m.insert("dtype_bytes".to_string(), bad);
+                    Json::Obj(m)
+                }
+                _ => unreachable!(),
+            };
+            let err = MoeLayerConfig::from_json(&without).unwrap_err().to_string();
+            assert!(err.contains("dtype_bytes"), "{err}");
+        }
     }
 
     #[test]

@@ -1,0 +1,343 @@
+//! Wire precision as a first-class axis: which dtype each communication
+//! *leg* of a schedule rides at, independent of the model dtype.
+//!
+//! Parm's schedule picks are driven by β-dominated communication terms,
+//! and production MoE systems compress exactly those wires: dispatch and
+//! combine AlltoAlls in bf16/fp8 with f32 accumulation, while parameter
+//! state stays wide. A [`WirePrecision`] names a [`WireDtype`] per
+//! [`WireLeg`]; the op programs keep carrying MODEL-width byte fields
+//! (elements × `dtype_bytes`), and the two transports scale / quantize at
+//! the edge:
+//!
+//! * the timing plane prices every send at `wire_bytes / dtype_bytes` of
+//!   the op volume, so `t_d1/t_d2/t_sp/t_sp2`, the backward terms, and
+//!   Algorithm 1 all re-decide per precision;
+//! * the data plane rounds the real `f32` payloads to the wire dtype on
+//!   send ([`WireDtype::quantize`]) and logs compressed byte counts,
+//!   keeping f32 accumulation in every reduce step.
+//!
+//! The default policy is all-f32, which prices and rounds to exactly the
+//! current behaviour — configs, cache keys, goldens, and plan artifacts
+//! are byte-identical unless a leg is narrowed.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// A wire dtype a communication leg can ride at. `quantize` simulates the
+/// narrowing on real `f32` values (round-trip through the narrow format);
+/// storage stays `f32`, so "dequantize on receive" is the identity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum WireDtype {
+    /// 4-byte IEEE single — the lossless default.
+    F32,
+    /// 2-byte bfloat16: f32's exponent range, 8-bit significand.
+    Bf16,
+    /// 1-byte OCP e4m3: 4-bit exponent, 3-bit mantissa, max normal 448.
+    Fp8,
+}
+
+impl WireDtype {
+    /// Bytes per element on the wire.
+    pub fn bytes(self) -> usize {
+        match self {
+            WireDtype::F32 => 4,
+            WireDtype::Bf16 => 2,
+            WireDtype::Fp8 => 1,
+        }
+    }
+
+    /// Canonical lowercase name (CLI / JSON spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            WireDtype::F32 => "f32",
+            WireDtype::Bf16 => "bf16",
+            WireDtype::Fp8 => "fp8",
+        }
+    }
+
+    /// Parse the canonical spelling.
+    pub fn parse(s: &str) -> Result<WireDtype> {
+        match s {
+            "f32" => Ok(WireDtype::F32),
+            "bf16" => Ok(WireDtype::Bf16),
+            "fp8" => Ok(WireDtype::Fp8),
+            other => bail!("unknown wire dtype {other:?} (expected f32, bf16, or fp8)"),
+        }
+    }
+
+    /// Round-trip `v` through this wire format: the value a receiver would
+    /// dequantize after the sender narrowed it. Round-to-nearest-even for
+    /// the normal ranges; NaN and zero pass through unchanged.
+    pub fn quantize(self, v: f32) -> f32 {
+        match self {
+            WireDtype::F32 => v,
+            WireDtype::Bf16 => {
+                if v.is_nan() {
+                    return v;
+                }
+                // RNE to the top 16 bits: add half-ulp plus the tie-break
+                // bit, then truncate the low mantissa.
+                let bits = v.to_bits();
+                let round = 0x7fff + ((bits >> 16) & 1);
+                f32::from_bits(bits.wrapping_add(round) & 0xffff_0000)
+            }
+            WireDtype::Fp8 => {
+                if v.is_nan() || v == 0.0 {
+                    return v;
+                }
+                // e4m3 (OCP): max normal ±448, min normal 2^-6, subnormal
+                // grid multiples of 2^-9.
+                let clamped = v.clamp(-448.0, 448.0);
+                let a = clamped.abs();
+                if a < 0.015625 {
+                    // 2^-6: below the normal range, snap to the 2^-9 grid.
+                    let q = (a * 512.0).round() / 512.0;
+                    return if clamped < 0.0 { -q } else { q };
+                }
+                // Normal range: RNE the f32 mantissa down to 3 bits.
+                let bits = clamped.to_bits();
+                let round = 0x0007_ffff + ((bits >> 20) & 1);
+                let q = f32::from_bits(bits.wrapping_add(round) & 0xfff0_0000);
+                // Mantissa carry at the top binade can overshoot the format.
+                q.clamp(-448.0, 448.0)
+            }
+        }
+    }
+}
+
+/// The four independently narrowable communication legs of a schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireLeg {
+    /// Token dispatch AlltoAll (EP or fused EP×ESP), monolithic or chunked,
+    /// forward and its backward adjoint.
+    Dispatch,
+    /// Combine AlltoAll / SAA (a2a *and* its overlapped MP-AllGather
+    /// forwards ride together), forward and backward.
+    Combine,
+    /// The plain MP/ESP AllGather / ReduceScatter / AllReduce epilogues.
+    AllGather,
+    /// The backward expert weight-gradient AllReduce over ESP groups.
+    Wgrad,
+}
+
+impl WireLeg {
+    /// All legs, in canonical (JSON key) order.
+    pub const ALL: [WireLeg; 4] =
+        [WireLeg::Dispatch, WireLeg::Combine, WireLeg::AllGather, WireLeg::Wgrad];
+
+    /// Canonical lowercase name (JSON key).
+    pub fn name(self) -> &'static str {
+        match self {
+            WireLeg::Dispatch => "dispatch",
+            WireLeg::Combine => "combine",
+            WireLeg::AllGather => "allgather",
+            WireLeg::Wgrad => "wgrad",
+        }
+    }
+}
+
+/// Per-leg wire dtype policy. `Default` is all-f32 (today's behaviour);
+/// a policy only appears in config JSON / ids when it is non-default, so
+/// every existing cache key, golden, and plan artifact is unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WirePrecision {
+    pub dispatch: WireDtype,
+    pub combine: WireDtype,
+    pub allgather: WireDtype,
+    pub wgrad: WireDtype,
+}
+
+impl Default for WirePrecision {
+    fn default() -> WirePrecision {
+        WirePrecision::uniform(WireDtype::F32)
+    }
+}
+
+impl WirePrecision {
+    /// Every leg at the same dtype.
+    pub fn uniform(d: WireDtype) -> WirePrecision {
+        WirePrecision { dispatch: d, combine: d, allgather: d, wgrad: d }
+    }
+
+    /// True for the all-f32 policy (the one that never serializes).
+    pub fn is_default(&self) -> bool {
+        *self == WirePrecision::default()
+    }
+
+    /// The wire dtype of `leg`.
+    pub fn dtype(&self, leg: WireLeg) -> WireDtype {
+        match leg {
+            WireLeg::Dispatch => self.dispatch,
+            WireLeg::Combine => self.combine,
+            WireLeg::AllGather => self.allgather,
+            WireLeg::Wgrad => self.wgrad,
+        }
+    }
+
+    /// Replace `leg`'s dtype (builder-style, for CLI per-leg overrides).
+    pub fn with_leg(mut self, leg: WireLeg, d: WireDtype) -> WirePrecision {
+        match leg {
+            WireLeg::Dispatch => self.dispatch = d,
+            WireLeg::Combine => self.combine = d,
+            WireLeg::AllGather => self.allgather = d,
+            WireLeg::Wgrad => self.wgrad = d,
+        }
+        self
+    }
+
+    /// Compact id fragment for non-default policies: `bf16` when uniform,
+    /// `d<..>-c<..>-g<..>-r<..>` otherwise. Callers prepend `_w`.
+    pub fn id_suffix(&self) -> String {
+        let u = self.dispatch;
+        if *self == WirePrecision::uniform(u) {
+            return u.name().to_string();
+        }
+        format!(
+            "d{}-c{}-g{}-r{}",
+            self.dispatch.name(),
+            self.combine.name(),
+            self.allgather.name(),
+            self.wgrad.name()
+        )
+    }
+
+    /// Canonical JSON: the full per-leg object (keys sort alphabetically
+    /// in the canonical writer, so the form is stable for hashing).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dispatch", Json::str(self.dispatch.name())),
+            ("combine", Json::str(self.combine.name())),
+            ("allgather", Json::str(self.allgather.name())),
+            ("wgrad", Json::str(self.wgrad.name())),
+        ])
+    }
+
+    /// Parse either spelling: a bare string (`"bf16"` — uniform) or a
+    /// per-leg object with any subset of the four keys (missing legs stay
+    /// f32). Unknown keys and malformed values error loudly — this feeds
+    /// sweep-cache keys.
+    pub fn from_json(j: &Json) -> Result<WirePrecision> {
+        match j {
+            Json::Str(s) => Ok(WirePrecision::uniform(WireDtype::parse(s)?)),
+            Json::Obj(map) => {
+                let mut w = WirePrecision::default();
+                for (k, v) in map {
+                    let leg = match WireLeg::ALL.iter().find(|l| l.name() == k) {
+                        Some(&l) => l,
+                        None => bail!("unknown wire leg {k:?} (expected one of dispatch, combine, allgather, wgrad)"),
+                    };
+                    let s = v
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("wire leg {k:?} must be a dtype string"))?;
+                    w = w.with_leg(leg, WireDtype::parse(s)?);
+                }
+                Ok(w)
+            }
+            other => bail!("wire precision must be a dtype string or per-leg object, got {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_names_round_trip() {
+        for d in [WireDtype::F32, WireDtype::Bf16, WireDtype::Fp8] {
+            assert_eq!(WireDtype::parse(d.name()).unwrap(), d);
+        }
+        assert!(WireDtype::parse("f16").is_err());
+        assert_eq!(WireDtype::F32.bytes(), 4);
+        assert_eq!(WireDtype::Bf16.bytes(), 2);
+        assert_eq!(WireDtype::Fp8.bytes(), 1);
+    }
+
+    #[test]
+    fn f32_quantize_is_identity() {
+        for v in [0.0f32, -0.0, 1.0, -3.5e-20, 7.25e18, f32::INFINITY] {
+            assert_eq!(WireDtype::F32.quantize(v).to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn bf16_quantize_rounds_to_nearest_even() {
+        // Exactly representable values survive.
+        for v in [0.0f32, 1.0, -2.5, 448.0, 2.0f32.powi(-126)] {
+            assert_eq!(WireDtype::Bf16.quantize(v), v);
+        }
+        // bf16 stores 7 mantissa bits, so the ulp at 1.0 is 2^-7 and
+        // 1 + 2^-8 is the tie between 1.0 and 1 + 2^-7: ties to even → 1.0.
+        let half = 1.0f32 + 2.0f32.powi(-8);
+        assert_eq!(WireDtype::Bf16.quantize(half), 1.0);
+        // Just above the tie rounds up to the next bf16 value.
+        let above = 1.0f32 + 2.0f32.powi(-8) + 2.0f32.powi(-11);
+        assert_eq!(WireDtype::Bf16.quantize(above), 1.0 + 2.0f32.powi(-7));
+        // Relative error is bounded by 2^-8 across magnitudes.
+        for v in [3.14159f32, -271.828, 6.022e8, -1.6e-12] {
+            let q = WireDtype::Bf16.quantize(v);
+            assert!(((q - v) / v).abs() <= 2.0f32.powi(-8), "{v} -> {q}");
+        }
+        // NaN stays NaN (the carry trick must not walk it to ±inf).
+        assert!(WireDtype::Bf16.quantize(f32::NAN).is_nan());
+        assert_eq!(WireDtype::Bf16.quantize(f32::INFINITY), f32::INFINITY);
+    }
+
+    #[test]
+    fn fp8_quantize_clamps_and_rounds() {
+        // Representable e4m3 values survive.
+        for v in [0.0f32, 1.0, -1.75, 448.0, 0.015625] {
+            assert_eq!(WireDtype::Fp8.quantize(v), v);
+        }
+        // Saturation to ±448.
+        assert_eq!(WireDtype::Fp8.quantize(1.0e9), 448.0);
+        assert_eq!(WireDtype::Fp8.quantize(-4.9e4), -448.0);
+        // Relative error in the normal range is bounded by 2^-4.
+        for v in [3.14159f32, -0.1, 417.0, 0.02] {
+            let q = WireDtype::Fp8.quantize(v);
+            assert!(((q - v) / v).abs() <= 2.0f32.powi(-4), "{v} -> {q}");
+        }
+        // Subnormals snap to the 2^-9 grid; tiny magnitudes flush to 0.
+        assert_eq!(WireDtype::Fp8.quantize(0.003), 2.0 / 512.0);
+        assert_eq!(WireDtype::Fp8.quantize(1.0e-4), 0.0);
+        assert!(WireDtype::Fp8.quantize(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn default_policy_is_all_f32_and_stays_out_of_ids() {
+        let w = WirePrecision::default();
+        assert!(w.is_default());
+        for leg in WireLeg::ALL {
+            assert_eq!(w.dtype(leg), WireDtype::F32);
+        }
+        assert!(!WirePrecision::uniform(WireDtype::Bf16).is_default());
+    }
+
+    #[test]
+    fn id_suffix_compact_for_uniform_and_explicit_for_mixed() {
+        assert_eq!(WirePrecision::uniform(WireDtype::Bf16).id_suffix(), "bf16");
+        let mixed = WirePrecision::uniform(WireDtype::Bf16)
+            .with_leg(WireLeg::Wgrad, WireDtype::F32);
+        assert_eq!(mixed.id_suffix(), "dbf16-cbf16-gbf16-rf32");
+    }
+
+    #[test]
+    fn json_round_trips_both_spellings() {
+        let uniform = WirePrecision::uniform(WireDtype::Fp8);
+        assert_eq!(WirePrecision::from_json(&uniform.to_json()).unwrap(), uniform);
+        assert_eq!(
+            WirePrecision::from_json(&Json::str("bf16")).unwrap(),
+            WirePrecision::uniform(WireDtype::Bf16)
+        );
+        // Partial object: unnamed legs stay f32.
+        let j = Json::obj(vec![("dispatch", Json::str("bf16"))]);
+        let w = WirePrecision::from_json(&j).unwrap();
+        assert_eq!(w.dispatch, WireDtype::Bf16);
+        assert_eq!(w.combine, WireDtype::F32);
+        // Malformed input errors loudly.
+        assert!(WirePrecision::from_json(&Json::obj(vec![("disp", Json::str("bf16"))])).is_err());
+        assert!(WirePrecision::from_json(&Json::obj(vec![("wgrad", Json::Num(2.0))])).is_err());
+        assert!(WirePrecision::from_json(&Json::Num(16.0)).is_err());
+    }
+}

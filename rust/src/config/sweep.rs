@@ -192,6 +192,7 @@ fn enumerate_grid(
                                         f,
                                         dtype_bytes: 4,
                                         skew: 0.0,
+                                        wire: Default::default(),
                                     };
                                     if cfg.validate().is_err() {
                                         continue;

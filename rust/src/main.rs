@@ -25,7 +25,7 @@ use anyhow::{anyhow, bail, Result};
 use parm::bench::paper;
 use parm::bench::{CaseResult, SweepStats};
 use parm::config::moe::ParallelDegrees;
-use parm::config::{sweep as sweepcfg, ClusterTopology, MoeLayerConfig, SweepFilter};
+use parm::config::{sweep as sweepcfg, ClusterTopology, MoeLayerConfig, SweepFilter, WirePrecision};
 use parm::perfmodel::{closedform, selection, PerfModel, Plan};
 use parm::schedule::{lowering, ScheduleKind};
 use parm::sim::trace::chrome_trace;
@@ -104,6 +104,14 @@ const LAYER_SPECS: &[Spec] = &[
     Spec::opt_default("k", "2", "top-k"),
     Spec::opt_default("f", "1.2", "capacity factor"),
     Spec::opt_default("skew", "0", "Zipf routing-skew exponent (0 = uniform routing)"),
+    Spec::opt_default("dtype-bytes", "4", "model element width in bytes (all volumes scale with it)"),
+    Spec::opt_default(
+        "wire",
+        "f32",
+        "wire precision: f32|bf16|fp8 (uniform), or per-leg JSON like \
+         {\"dispatch\":\"fp8\",\"combine\":\"bf16\"} (legs: dispatch, combine, allgather, wgrad; \
+         unnamed legs stay f32)",
+    ),
     Spec::opt("e", "number of experts (default: P / N_ESP)"),
     Spec::opt(
         "plan",
@@ -121,6 +129,18 @@ fn cluster_from(a: &Args) -> Result<ClusterTopology> {
     }
 }
 
+/// Parse a `--wire` value: a uniform dtype name (`f32|bf16|fp8`) or a
+/// per-leg JSON object (`{"dispatch":"fp8","combine":"bf16"}`; unnamed
+/// legs stay f32).
+fn parse_wire(spec: &str) -> Result<WirePrecision> {
+    use parm::util::json::Json;
+    if spec.trim_start().starts_with('{') {
+        WirePrecision::from_json(&Json::parse(spec)?)
+    } else {
+        WirePrecision::from_json(&Json::str(spec))
+    }
+}
+
 fn layer_from(a: &Args) -> Result<(MoeLayerConfig, ClusterTopology)> {
     let cluster = cluster_from(a)?;
     let p = a.get_usize("p")?.unwrap();
@@ -134,8 +154,9 @@ fn layer_from(a: &Args) -> Result<(MoeLayerConfig, ClusterTopology)> {
         h: a.get_usize("hidden")?.unwrap(),
         k: a.get_usize("k")?.unwrap(),
         f: a.get_f64("f")?.unwrap(),
-        dtype_bytes: 4,
+        dtype_bytes: a.get_usize("dtype-bytes")?.unwrap(),
         skew: a.get_f64("skew")?.unwrap(),
+        wire: parse_wire(a.req("wire")?)?,
     };
     cfg.validate()?;
     anyhow::ensure!(
@@ -179,6 +200,23 @@ fn sweep_configs(a: &Args, cluster: &ClusterTopology) -> Result<Vec<MoeLayerConf
             c.skew = skew;
         }
     }
+    if let Some(dtype_bytes) = a.get_usize("dtype-bytes")? {
+        if dtype_bytes == 0 {
+            bail!("--dtype-bytes must be ≥ 1");
+        }
+        for c in &mut configs {
+            c.dtype_bytes = dtype_bytes;
+        }
+    }
+    if let Some(spec) = a.get("wire") {
+        // Compressed-wire workload family: the same grid with narrowed
+        // collective legs; every volume-driven term (and so Algorithm 1's
+        // pick and r*) re-decides at the compressed sizes.
+        let wire = parse_wire(spec)?;
+        for c in &mut configs {
+            c.wire = wire;
+        }
+    }
     Ok(configs)
 }
 
@@ -187,6 +225,12 @@ const GRID_SPECS: &[Spec] = &[
     Spec::opt("limit", "only run the first N configs"),
     Spec::opt("skew", "run the grid with a Zipf routing-skew exponent (imbalanced traffic)"),
     Spec::opt("scale", "grid multiplier K: densify the Table III axes to ≥ K× the rows"),
+    Spec::opt("dtype-bytes", "override the model element width (bytes) on every retained config"),
+    Spec::opt(
+        "wire",
+        "wire precision on every retained config: f32|bf16|fp8 or per-leg JSON \
+         (legs: dispatch, combine, allgather, wgrad)",
+    ),
 ];
 
 fn help_guard(a: &Args, cmd: &str, about: &str, specs: &[Spec]) -> bool {
@@ -637,8 +681,13 @@ fn write_sweep_bench_json(
         mean(&results.iter().map(|r| f(r)).collect::<Vec<f64>>())
     };
     let cases = configs.len() as f64;
+    // Wire-precision annotation so baselines from different wire runs are
+    // never compared silently ("f32" for the default lossless policy).
+    let wire_id =
+        configs.first().map(|c| c.wire.id_suffix()).unwrap_or_else(|| "f32".to_string());
     let j = Json::obj(vec![
         ("cluster", Json::str(&cluster.name)),
+        ("wire", Json::str(&wire_id)),
         ("cases", Json::num(cases)),
         ("threads", Json::num(threads as f64)),
         ("seq_sample_cases", Json::num(sample as f64)),

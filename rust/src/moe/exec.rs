@@ -126,7 +126,7 @@ fn run_ops(
     state: &LayerState,
     backend: &mut dyn ExpertBackend,
 ) -> Result<ExecResult> {
-    let mut transport = DataTransport::new();
+    let mut transport = DataTransport::with_wire(state.cfg.wire);
     let mut machine = DataMachine::new(state, backend, ops);
     run_program(ops, &state.groups, &mut transport, &mut machine)?;
     ensure!(
@@ -922,6 +922,7 @@ mod tests {
             f: 64.0, // generous: no drops anywhere
             dtype_bytes: 4,
             skew: 0.0,
+            wire: Default::default(),
         }
     }
 
@@ -1106,6 +1107,7 @@ mod tests {
             f: 1.0,
             dtype_bytes: 4,
             skew: 0.0,
+            wire: Default::default(),
         };
         c.validate().unwrap();
         assert_eq!(c.t_pausemp(), 2, "actual gate capacity for this layout");
@@ -1228,5 +1230,98 @@ mod tests {
         let c = cfg(4, 2, 2);
         let state = LayerState::random(&c, 1).unwrap();
         assert!(run_schedule(ScheduleKind::Parm, &state, &mut NativeBackend).is_err());
+    }
+
+    /// Worst element error of `a` vs `b`, normalized by `max(|b|, 1)` —
+    /// one combined abs/rel metric for the wire-precision bands.
+    fn max_err(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs() / y.abs().max(1.0)).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn reduced_wire_stays_within_tolerance_bands() {
+        // Reference equivalence is tolerance-banded at reduced wire
+        // precision: every schedule family quantizes its collective
+        // inputs to the wire dtype, keeps f32 accumulation, and must land
+        // within a band set by the format's relative error (bf16 ≈ 2⁻⁸,
+        // fp8 e4m3 ≈ 2⁻⁴) across the ~3 quantizing hops of a forward
+        // pass. At f32 wire the outputs stay bit-exact.
+        use crate::config::{WireDtype, WirePrecision};
+        let c = cfg(8, 2, 2);
+        let mut backend = NativeBackend;
+        let exact = LayerState::random(&c, 33).unwrap();
+        for kind in [
+            ScheduleKind::S1,
+            ScheduleKind::S2,
+            ScheduleKind::Pipelined { chunks: 3 },
+            ScheduleKind::PipelinedS2 { chunks: 3 },
+        ] {
+            let base = run_schedule(kind, &exact, &mut backend).unwrap();
+            // Explicit uniform f32 is the identity — bit-for-bit.
+            let mut cf = c.clone();
+            cf.wire = WirePrecision::uniform(WireDtype::F32);
+            let state = LayerState::random(&cf, 33).unwrap();
+            let res = run_schedule(kind, &state, &mut backend).unwrap();
+            for r in 0..c.par.p {
+                assert!(
+                    res.outputs[r]
+                        .iter()
+                        .zip(&base.outputs[r])
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{kind:?} rank {r}: f32 wire must be bit-exact"
+                );
+            }
+            // Narrowed wires: quantization must actually happen, and the
+            // error must stay inside the documented band.
+            for (dtype, band) in [(WireDtype::Bf16, 5e-2f32), (WireDtype::Fp8, 5e-1f32)] {
+                let mut cq = c.clone();
+                cq.wire = WirePrecision::uniform(dtype);
+                let state = LayerState::random(&cq, 33).unwrap();
+                let res = run_schedule(kind, &state, &mut backend).unwrap();
+                assert_eq!(res.dropped, 0, "{kind:?} {dtype:?}: routing must not change");
+                let mut worst = 0.0f32;
+                for r in 0..c.par.p {
+                    worst = worst.max(max_err(&res.outputs[r], &base.outputs[r]));
+                }
+                assert!(
+                    worst > 0.0,
+                    "{kind:?} {dtype:?}: outputs identical — wire quantization never ran"
+                );
+                assert!(
+                    worst <= band,
+                    "{kind:?} {dtype:?}: worst error {worst} exceeds band {band}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_wire_log_scales_bytes_tag_for_tag() {
+        // The data plane's wire log reports COMPRESSED bytes: a uniform
+        // bf16 policy halves every entry of every schedule family's log
+        // (f32 payloads priced at 2 of 4 bytes per element), tag for tag,
+        // without adding or dropping entries.
+        use crate::config::{WireDtype, WirePrecision};
+        let c = cfg(8, 2, 2);
+        let mut backend = NativeBackend;
+        let wide = LayerState::random(&c, 7).unwrap();
+        let mut ch = c.clone();
+        ch.wire = WirePrecision::uniform(WireDtype::Bf16);
+        let half = LayerState::random(&ch, 7).unwrap();
+        for kind in [
+            ScheduleKind::Baseline,
+            ScheduleKind::S1,
+            ScheduleKind::S2,
+            ScheduleKind::Pipelined { chunks: 2 },
+            ScheduleKind::PipelinedS2 { chunks: 2 },
+        ] {
+            let log_f32 = run_schedule(kind, &wide, &mut backend).unwrap().comm_log;
+            let log_bf16 = run_schedule(kind, &half, &mut backend).unwrap().comm_log;
+            assert_eq!(log_f32.len(), log_bf16.len(), "{kind:?}: entry counts diverged");
+            for ((t4, b4), (t2, b2)) in log_f32.iter().zip(&log_bf16) {
+                assert_eq!(t4, t2, "{kind:?}: tag order diverged");
+                assert_eq!(*b2, 0.5 * *b4, "{kind:?} {t4}: expected half of {b4}, got {b2}");
+            }
+        }
     }
 }

@@ -53,6 +53,7 @@ mod tests {
             f: 4.0,
             dtype_bytes: 4,
             skew: 0.0,
+            wire: Default::default(),
         }
     }
 

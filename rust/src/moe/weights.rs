@@ -83,6 +83,7 @@ mod tests {
             f: 2.0,
             dtype_bytes: 4,
             skew: 0.0,
+            wire: Default::default(),
         }
     }
 

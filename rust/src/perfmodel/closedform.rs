@@ -40,8 +40,9 @@
 //! informally in §IV.
 
 use crate::cluster::{GroupKind, ProcessGroups};
-use crate::config::{ClusterTopology, MoeLayerConfig};
+use crate::config::{ClusterTopology, MoeLayerConfig, WireLeg};
 use crate::schedule::ops;
+use crate::schedule::ops::wire_factor;
 
 /// Ring AllGather over a group: `x` = gathered output bytes. Each of the
 /// `|G|-1` steps moves one `x/|G|` chunk along every ring edge at once, so
@@ -148,20 +149,32 @@ fn worst_group(groups: &[Vec<usize>], cost: impl Fn(&[usize]) -> f64) -> f64 {
 }
 
 /// Analytical `t_B` (Eq. 1): baseline communication per forward pass.
+/// Every collective prices its wire leg's compressed volume
+/// ([`ops::wire_factor`]): the token AllGather/AllReduce ride the
+/// AllGather leg, and the two EP AlltoAlls split into a dispatch-priced
+/// and a combine-priced direction.
 pub fn t_baseline(cluster: &ClusterTopology, c: &MoeLayerConfig) -> f64 {
     let par = c.par;
     let groups = ProcessGroups::new(par).expect("valid degrees");
+    let w_g = wire_factor(c, WireLeg::AllGather);
     let esp = groups.all_groups(GroupKind::Esp);
     let ag = worst_group(&esp, |g| {
-        ag_ring(cluster, g, ops::bytes_esp_ag_per_rank(c) * par.n_esp as f64)
+        ag_ring(cluster, g, ops::bytes_esp_ag_per_rank(c) * par.n_esp as f64 * w_g)
     });
-    let ar = worst_group(&esp, |g| ar_ring(cluster, g, ops::bytes_esp_ar_total(c)));
+    let ar = worst_group(&esp, |g| ar_ring(cluster, g, ops::bytes_esp_ar_total(c) * w_g));
     // All N_ESP EP-group AlltoAlls fire at once, sharing every NIC.
     let ep = groups.all_groups(GroupKind::Ep);
-    let a2a = worst_group(&ep, |g| {
-        a2a_pairwise_concurrent(cluster, g, ops::bytes_ep_a2a_per_pair(c), par.n_esp)
-    });
-    ag + ar + 2.0 * a2a
+    let a2a_leg = |leg: WireLeg| {
+        worst_group(&ep, |g| {
+            a2a_pairwise_concurrent(
+                cluster,
+                g,
+                ops::bytes_ep_a2a_per_pair(c) * wire_factor(c, leg),
+                par.n_esp,
+            )
+        })
+    };
+    ag + ar + a2a_leg(WireLeg::Dispatch) + a2a_leg(WireLeg::Combine)
 }
 
 /// Worst MP-group AllGather of `x` gathered bytes over the layer.
@@ -170,13 +183,24 @@ fn ag_mp(cluster: &ClusterTopology, c: &MoeLayerConfig, x: f64) -> f64 {
     worst_group(&groups.all_groups(GroupKind::Mp), |g| ag_ring(cluster, g, x))
 }
 
-/// Analytical `t_D1` (Eq. 13).
+/// The fused AlltoAll priced at one wire leg's compressed per-pair volume.
+fn fused_a2a_leg(cluster: &ClusterTopology, c: &MoeLayerConfig, world: &[usize], leg: WireLeg) -> f64 {
+    a2a_pairwise(cluster, world, ops::bytes_fused_a2a_per_pair(c) * wire_factor(c, leg))
+}
+
+/// Analytical `t_D1` (Eq. 13): dispatch- plus combine-priced fused
+/// AlltoAlls and the AllGather-leg MP epilogue.
 pub fn t_d1(cluster: &ClusterTopology, c: &MoeLayerConfig) -> f64 {
     let groups = ProcessGroups::new(c.par).expect("valid degrees");
     let world = groups.world();
-    let fused = a2a_pairwise(cluster, &world, ops::bytes_fused_a2a_per_pair(c));
-    let ag = ag_mp(cluster, c, ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64);
-    2.0 * fused + ag
+    let fused_d = fused_a2a_leg(cluster, c, &world, WireLeg::Dispatch);
+    let fused_c = fused_a2a_leg(cluster, c, &world, WireLeg::Combine);
+    let ag = ag_mp(
+        cluster,
+        c,
+        ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64 * wire_factor(c, WireLeg::AllGather),
+    );
+    fused_d + fused_c + ag
 }
 
 /// Exposed fraction of an SAA-overlapped MP-AllGather: on a single-node
@@ -204,9 +228,17 @@ fn saa_exposed_fraction(cluster: &ClusterTopology, world: &[usize]) -> f64 {
 pub fn t_d2(cluster: &ClusterTopology, c: &MoeLayerConfig) -> f64 {
     let groups = ProcessGroups::new(c.par).expect("valid degrees");
     let world = groups.world();
-    let fused = a2a_pairwise(cluster, &world, ops::bytes_fused_a2a_per_pair(c));
-    let ag = ag_mp(cluster, c, ops::bytes_mp_ag_s2_per_rank(c) * c.par.n_mp as f64);
-    2.0 * fused + saa_exposed_fraction(cluster, &world) * ag
+    let fused_d = fused_a2a_leg(cluster, c, &world, WireLeg::Dispatch);
+    let fused_c = fused_a2a_leg(cluster, c, &world, WireLeg::Combine);
+    // The SAA's internal AllGather forwards ride the combine leg on both
+    // planes (the leg is set once per SAA op), so its exposed tail is
+    // priced at the combine width, not the standalone-AllGather width.
+    let ag = ag_mp(
+        cluster,
+        c,
+        ops::bytes_mp_ag_s2_per_rank(c) * c.par.n_mp as f64 * wire_factor(c, WireLeg::Combine),
+    );
+    fused_d + fused_c + saa_exposed_fraction(cluster, &world) * ag
 }
 
 /// Closed-form Algorithm 1: no fitting, no simulation.
@@ -224,8 +256,9 @@ pub fn choose(cluster: &ClusterTopology, c: &MoeLayerConfig) -> crate::schedule:
 /// from different token slices and must agree before the optimizer step.
 pub fn t_wgrad_ar(cluster: &ClusterTopology, c: &MoeLayerConfig) -> f64 {
     let groups = ProcessGroups::new(c.par).expect("valid degrees");
+    let w_r = wire_factor(c, WireLeg::Wgrad);
     worst_group(&groups.all_groups(GroupKind::Esp), |g| {
-        ar_ring(cluster, g, ops::bytes_wgrad_per_rank(c))
+        ar_ring(cluster, g, ops::bytes_wgrad_per_rank(c) * w_r)
     })
 }
 
@@ -247,12 +280,20 @@ pub fn exposed_wgrad_ar(ar: f64, tail: f64) -> f64 {
 pub fn t_bwd_d1_on(cluster: &ClusterTopology, c: &MoeLayerConfig, node: usize) -> f64 {
     let groups = ProcessGroups::new(c.par).expect("valid degrees");
     let world = groups.world();
-    let fused = a2a_pairwise(cluster, &world, ops::bytes_fused_a2a_per_pair(c));
-    let ag = ag_mp(cluster, c, ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64);
-    2.0 * fused
+    let fused_d = fused_a2a_leg(cluster, c, &world, WireLeg::Dispatch);
+    let fused_c = fused_a2a_leg(cluster, c, &world, WireLeg::Combine);
+    let ag = ag_mp(
+        cluster,
+        c,
+        ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64 * wire_factor(c, WireLeg::AllGather),
+    );
+    // The wgrad AllReduce hides behind the transposed combine AlltoAll and
+    // the final MP-AllGather — both priced at their own wire legs.
+    fused_d
+        + fused_c
         + 2.0 * ag
         + 2.0 * t_ffn_pausemp_on(cluster, c, node)
-        + exposed_wgrad_ar(t_wgrad_ar(cluster, c), fused + ag)
+        + exposed_wgrad_ar(t_wgrad_ar(cluster, c), fused_c + ag)
 }
 
 /// [`t_bwd_d1_on`] at the bottleneck node.
@@ -267,12 +308,18 @@ pub fn t_bwd_d1(cluster: &ClusterTopology, c: &MoeLayerConfig) -> f64 {
 pub fn t_bwd_d2_on(cluster: &ClusterTopology, c: &MoeLayerConfig, node: usize) -> f64 {
     let groups = ProcessGroups::new(c.par).expect("valid degrees");
     let world = groups.world();
-    let fused = a2a_pairwise(cluster, &world, ops::bytes_fused_a2a_per_pair(c));
-    let ag = ag_mp(cluster, c, ops::bytes_mp_ag_s2_per_rank(c) * c.par.n_mp as f64);
-    2.0 * fused
+    let fused_d = fused_a2a_leg(cluster, c, &world, WireLeg::Dispatch);
+    let fused_c = fused_a2a_leg(cluster, c, &world, WireLeg::Combine);
+    let ag = ag_mp(
+        cluster,
+        c,
+        ops::bytes_mp_ag_s2_per_rank(c) * c.par.n_mp as f64 * wire_factor(c, WireLeg::AllGather),
+    );
+    fused_d
+        + fused_c
         + 2.0 * ag
         + 2.0 * t_ffn_pausemp_on(cluster, c, node)
-        + exposed_wgrad_ar(t_wgrad_ar(cluster, c), fused + ag)
+        + exposed_wgrad_ar(t_wgrad_ar(cluster, c), fused_c + ag)
 }
 
 /// [`t_bwd_d2_on`] at the bottleneck node.
@@ -335,7 +382,11 @@ pub fn t_ffn_pausemp(cluster: &ClusterTopology, c: &MoeLayerConfig) -> f64 {
 /// value is hiding communication behind the FFN), so compare it against
 /// `t_D* + t_ffn_pausemp`.
 pub fn t_sp(cluster: &ClusterTopology, c: &MoeLayerConfig, chunks: usize) -> f64 {
-    let ag = ag_mp(cluster, c, ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64);
+    let ag = ag_mp(
+        cluster,
+        c,
+        ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64 * wire_factor(c, WireLeg::AllGather),
+    );
     sp_pipeline(cluster, c, chunks, 1.0) + ag
 }
 
@@ -373,12 +424,21 @@ pub fn sp_pipeline_on(
     let cap = c.t_pausemp();
     let spans = ops::sp_spans(c, cap, ops::sp_clamp_chunks(c, chunks));
     let flops = cluster.node(node).gpu_flops;
-    let comm = |span: (usize, usize)| {
-        a2a_pairwise(cluster, &world, ops::bytes_sp_chunk_per_pair(c, span.1))
+    // The chunked AlltoAll is structurally symmetric, but its two
+    // directions ride different wire legs, so each is priced at its own
+    // compressed volume.
+    let a2a_leg = |span: (usize, usize), leg: WireLeg| {
+        a2a_pairwise(
+            cluster,
+            &world,
+            ops::bytes_sp_chunk_per_pair(c, span.1) * wire_factor(c, leg),
+        )
     };
+    let dispatch = |span: (usize, usize)| a2a_leg(span, WireLeg::Dispatch);
+    let combine = |span: (usize, usize)| a2a_leg(span, WireLeg::Combine);
     let ffn =
         |span: (usize, usize)| ffn_scale * ops::sp_chunk_flops_span(c, cap, span) / flops;
-    pipeline_makespan(&spans, comm, ffn)
+    pipeline_makespan_asym(&spans, dispatch, combine, ffn)
 }
 
 /// The ONE pipeline recurrence, over the builder's emission order (`D_0`,
@@ -467,13 +527,21 @@ pub fn sp2_pipeline_on(
     let spans = ops::sp_spans(c, cap, ops::sp_clamp_chunks(c, chunks));
     let flops = cluster.node(node).gpu_flops;
     let frac = saa_exposed_fraction(cluster, &world);
-    let x_ag_full = ops::bytes_mp_ag_s2_per_rank(c) * c.par.n_mp as f64;
-    let dispatch = |span: (usize, usize)| {
-        a2a_pairwise(cluster, &world, ops::bytes_sp_chunk_per_pair(c, span.1))
+    // The chunked SAA — AlltoAll and its AllGather forwards alike — rides
+    // the combine leg, matching the interpreter's per-op leg assignment.
+    let x_ag_full =
+        ops::bytes_mp_ag_s2_per_rank(c) * c.par.n_mp as f64 * wire_factor(c, WireLeg::Combine);
+    let a2a_leg = |span: (usize, usize), leg: WireLeg| {
+        a2a_pairwise(
+            cluster,
+            &world,
+            ops::bytes_sp_chunk_per_pair(c, span.1) * wire_factor(c, leg),
+        )
     };
+    let dispatch = |span: (usize, usize)| a2a_leg(span, WireLeg::Dispatch);
     let combine = |span: (usize, usize)| {
         let ag_chunk = ag_mp(cluster, c, x_ag_full * span.1 as f64 / cap.max(1) as f64);
-        dispatch(span) + frac * ag_chunk
+        a2a_leg(span, WireLeg::Combine) + frac * ag_chunk
     };
     let ffn =
         |span: (usize, usize)| ffn_scale * ops::sp_chunk_flops_span(c, cap, span) / flops;
@@ -493,7 +561,11 @@ pub fn t_sp2_iteration_on(
     chunks: usize,
     node: usize,
 ) -> f64 {
-    let ag = ag_mp(cluster, c, ops::bytes_mp_ag_s2_per_rank(c) * c.par.n_mp as f64);
+    let ag = ag_mp(
+        cluster,
+        c,
+        ops::bytes_mp_ag_s2_per_rank(c) * c.par.n_mp as f64 * wire_factor(c, WireLeg::AllGather),
+    );
     sp2_pipeline_on(cluster, c, chunks, 1.0, node)
         + sp_pipeline_on(cluster, c, chunks, 2.0, node)
         + 2.0 * ag
@@ -534,7 +606,11 @@ pub fn t_sp_iteration_on(
     chunks: usize,
     node: usize,
 ) -> f64 {
-    let ag = ag_mp(cluster, c, ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64);
+    let ag = ag_mp(
+        cluster,
+        c,
+        ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64 * wire_factor(c, WireLeg::AllGather),
+    );
     sp_pipeline_on(cluster, c, chunks, 1.0, node)
         + sp_pipeline_on(cluster, c, chunks, 2.0, node)
         + 3.0 * ag
@@ -683,6 +759,7 @@ mod tests {
             f: 1.2,
             dtype_bytes: 4,
             skew: 0.0,
+            wire: Default::default(),
         }
     }
 
@@ -864,6 +941,7 @@ mod tests {
             f: 1.2,
             dtype_bytes: 4,
             skew: 0.0,
+            wire: Default::default(),
         };
         let (r_heavy, t_heavy) = optimal_chunks(&cluster, &heavy);
         assert!(r_heavy > 1, "compute-heavy config should pipeline, got r={r_heavy}");
@@ -892,6 +970,7 @@ mod tests {
             f: 1.2,
             dtype_bytes: 4,
             skew: 0.0,
+            wire: Default::default(),
         };
         let (r_light, _) = optimal_chunks(&cluster, &light);
         assert_eq!(r_light, 1, "comm-heavy config should not pipeline");
@@ -903,6 +982,103 @@ mod tests {
             ),
             "got {pick:?}"
         );
+    }
+
+    #[test]
+    fn bf16_wire_flips_the_algorithm1_pick_with_sim_agreement() {
+        // The acceptance bracket for wire precision as a decision axis:
+        // narrowing every leg to bf16 halves the β-dominated communication
+        // terms while the FFN term stands still, so somewhere on a
+        // capacity/hidden-size bracket Algorithm 1's pick (or its r*)
+        // must move — and the discrete-event simulator, whose timing
+        // plane prices the same compressed lumps, must agree the
+        // re-decided schedule is strictly faster on the bf16 config than
+        // the f32-wire pick would have been.
+        use crate::config::{WireDtype, WirePrecision};
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+        let base = MoeLayerConfig {
+            par: ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 },
+            ..cfg()
+        };
+        let mut found: Option<(String, ScheduleKind, ScheduleKind, f64, f64)> = None;
+        'outer: for h in [2048usize, 4096, 8192, 16384, 32768] {
+            for l in [512usize, 1024, 2048] {
+                let mut c32 = base.clone();
+                c32.h = h;
+                c32.l = l;
+                let mut c16 = c32.clone();
+                c16.wire = WirePrecision::uniform(WireDtype::Bf16);
+                let (pick32, _) = choose_extended(&cluster, &c32);
+                let (pick16, _) = choose_extended(&cluster, &c16);
+                if pick32 == pick16 {
+                    continue;
+                }
+                // Both schedules simulated ON the bf16 config: the wire
+                // pick must win where the decision actually applies.
+                let t16 = lowering::simulate_iteration(pick16, &c16, &cluster)
+                    .unwrap()
+                    .makespan;
+                let t32 = lowering::simulate_iteration(pick32, &c16, &cluster)
+                    .unwrap()
+                    .makespan;
+                if t16 < t32 {
+                    found = Some((c16.id(), pick32, pick16, t16, t32));
+                    break 'outer;
+                }
+            }
+        }
+        let (id, pick32, pick16, t16, t32) = found.expect(
+            "no pinned config where bf16 wire moves the Algorithm-1 pick (or r*) \
+             with the simulator confirming the re-decided schedule wins",
+        );
+        eprintln!(
+            "bf16 wire re-decides at {id}: {} → {} ({t16:.6}s vs {t32:.6}s)",
+            pick32.label(),
+            pick16.label()
+        );
+        assert!(t16 < t32);
+    }
+
+    #[test]
+    fn wire_factors_scale_the_closed_forms_consistently() {
+        // Sanity on the factored terms: a uniform bf16 policy prices every
+        // pure-communication closed form strictly cheaper, and never below
+        // half (each collective's volume scales by 1/2; the per-step α
+        // latency does not shrink). SP(1)/SP2(1) keep their structural
+        // identities at any policy because both sides share the factored
+        // volumes.
+        use crate::config::{WireDtype, WirePrecision};
+        let cluster = ClusterTopology::testbed_b();
+        let c32 = cfg();
+        let mut c16 = cfg();
+        c16.wire = WirePrecision::uniform(WireDtype::Bf16);
+        // Communication-only forms shrink, and never below half.
+        for (f32_t, bf16_t) in [
+            (t_baseline(&cluster, &c32), t_baseline(&cluster, &c16)),
+            (t_d1(&cluster, &c32), t_d1(&cluster, &c16)),
+            (t_d2(&cluster, &c32), t_d2(&cluster, &c16)),
+            (t_wgrad_ar(&cluster, &c32), t_wgrad_ar(&cluster, &c16)),
+        ] {
+            assert!(bf16_t < f32_t, "{bf16_t} !< {f32_t}");
+            assert!(bf16_t >= 0.5 * f32_t - 1e-15, "{bf16_t} below half of {f32_t}");
+        }
+        // A mixed policy only touches its own legs: narrowing wgrad alone
+        // moves t_wgrad_ar and nothing forward-side.
+        let mut cw = cfg();
+        cw.wire = WirePrecision::default().with_leg(WireLeg::Wgrad, WireDtype::Fp8);
+        assert_eq!(t_d1(&cluster, &cw), t_d1(&cluster, &c32));
+        assert_eq!(t_d2(&cluster, &cw), t_d2(&cluster, &c32));
+        assert_eq!(t_baseline(&cluster, &cw), t_baseline(&cluster, &c32));
+        assert!(t_wgrad_ar(&cluster, &cw) < t_wgrad_ar(&cluster, &c32));
+        // The SP(1)/SP2(1) identities hold at reduced precision too.
+        for c in [&c16, &cw] {
+            let lhs = t_sp(&cluster, c, 1);
+            let rhs = t_d1(&cluster, c) + t_ffn_pausemp(&cluster, c);
+            assert!((lhs - rhs).abs() / rhs < 1e-12, "SP(1): {lhs} vs {rhs}");
+            let lhs2 = t_sp2(&cluster, c, 1);
+            let rhs2 = t_d2(&cluster, c) + t_ffn_pausemp(&cluster, c);
+            assert!((lhs2 - rhs2).abs() / rhs2 < 1e-12, "SP2(1): {lhs2} vs {rhs2}");
+        }
     }
 
     /// testbed-B-subset(8)'s shape with node 1 slowed down by `factor`.
@@ -947,6 +1123,7 @@ mod tests {
             f: 1.2,
             dtype_bytes: 4,
             skew: 0.0,
+            wire: Default::default(),
         };
         // The fleet estimate equals the slow node's, exceeds the fast one's.
         let fast = t_sp_iteration_on(&het, &c, 2, 0);

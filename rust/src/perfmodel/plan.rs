@@ -55,7 +55,11 @@ use super::selection::{self, Prediction};
 /// `t_iter_s1`, `t_iter_s2`) and the sweep's cached cases the `t_bwd_*`
 /// columns — v1 artifacts fail loudly instead of deserializing stale
 /// forward-only decisions.
-pub const PLAN_SCHEMA_VERSION: u64 = 2;
+/// v3: wire precision became a first-class axis — configs may carry a
+/// per-leg `wire` policy and every prediction prices compressed volumes,
+/// so v2 artifacts (which could not express the axis) fail loudly rather
+/// than replay decisions that ignore it.
+pub const PLAN_SCHEMA_VERSION: u64 = 3;
 
 /// Stable content hash of a sweep grid: FNV-1a over each configuration's
 /// canonical JSON, in grid order — reordering or editing any config

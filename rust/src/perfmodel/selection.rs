@@ -30,8 +30,8 @@
 
 use anyhow::Result;
 
-use crate::config::MoeLayerConfig;
-use crate::schedule::ops::{self, ScheduleKind};
+use crate::config::{MoeLayerConfig, WireLeg};
+use crate::schedule::ops::{self, wire_factor, ScheduleKind};
 use crate::util::json::Json;
 
 use super::fit::{CollKind, PerfModel};
@@ -184,15 +184,18 @@ fn sp_pipeline_fitted(
 ) -> f64 {
     let cap = c.t_pausemp();
     let spans = ops::sp_spans(c, cap, ops::sp_clamp_chunks(c, chunks));
-    let comm = |span: (usize, usize)| {
+    // Each direction is priced at its own wire leg's compressed volume.
+    let leg = |span: (usize, usize), leg: WireLeg| {
         model.predict(
             CollKind::A2aFused,
-            ops::bytes_sp_chunk_per_pair(c, span.1) * c.par.p as f64,
+            ops::bytes_sp_chunk_per_pair(c, span.1) * c.par.p as f64 * wire_factor(c, leg),
         )
     };
+    let dispatch = |span: (usize, usize)| leg(span, WireLeg::Dispatch);
+    let combine = |span: (usize, usize)| leg(span, WireLeg::Combine);
     let ffn =
         |span: (usize, usize)| ffn_scale * ops::sp_chunk_flops_span(c, cap, span) / gpu_flops;
-    super::closedform::pipeline_makespan(&spans, comm, ffn)
+    super::closedform::pipeline_makespan_asym(&spans, dispatch, combine, ffn)
 }
 
 /// Fitted SP2 pipeline region: the asymmetric recurrence with each chunk's
@@ -213,13 +216,19 @@ fn sp2_pipeline_fitted(
     let dispatch = |span: (usize, usize)| {
         model.predict(
             CollKind::A2aFused,
-            ops::bytes_sp_chunk_per_pair(c, span.1) * c.par.p as f64,
+            ops::bytes_sp_chunk_per_pair(c, span.1)
+                * c.par.p as f64
+                * wire_factor(c, WireLeg::Dispatch),
         )
     };
+    // The chunked SAA rides the combine leg — AlltoAll and AllGather
+    // forwards alike (the interpreter sets the leg once per SAA op).
     let combine = |span: (usize, usize)| {
         model.predict(
             CollKind::SaaS2,
-            ops::bytes_sp_chunk_per_pair(c, span.1) * c.par.p as f64,
+            ops::bytes_sp_chunk_per_pair(c, span.1)
+                * c.par.p as f64
+                * wire_factor(c, WireLeg::Combine),
         )
     };
     let ffn =
@@ -237,33 +246,47 @@ pub fn predict(model: &PerfModel, c: &MoeLayerConfig) -> Prediction {
     let x_fused = ops::bytes_fused_a2a_per_pair(c) * c.par.p as f64;
     let x_ag_mp_s1 = ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64; // gathered = BLM·d
 
-    let t_baseline = model.predict(CollKind::AgEsp, x_ag_esp)
-        + model.predict(CollKind::ArEsp, x_ar_esp)
-        + 2.0 * model.predict(CollKind::A2aEp, x_a2a_ep);
-    let t_d1 = 2.0 * model.predict(CollKind::A2aFused, x_fused)
-        + model.predict(CollKind::AgMp, x_ag_mp_s1);
-    let t_d2 =
-        model.predict(CollKind::A2aFused, x_fused) + model.predict(CollKind::SaaS2, x_fused);
+    // Per-leg wire factors: each collective's volume argument is scaled
+    // to its leg's compressed width, so the fitted α-β curves are read at
+    // the bytes the engine would actually move (all 1.0 at f32 wire).
+    let w_d = wire_factor(c, WireLeg::Dispatch);
+    let w_c = wire_factor(c, WireLeg::Combine);
+    let w_g = wire_factor(c, WireLeg::AllGather);
+
+    let t_baseline = model.predict(CollKind::AgEsp, x_ag_esp * w_g)
+        + model.predict(CollKind::ArEsp, x_ar_esp * w_g)
+        + model.predict(CollKind::A2aEp, x_a2a_ep * w_d)
+        + model.predict(CollKind::A2aEp, x_a2a_ep * w_c);
+    let fused_d = model.predict(CollKind::A2aFused, x_fused * w_d);
+    let fused_c = model.predict(CollKind::A2aFused, x_fused * w_c);
+    let t_d1 = fused_d + fused_c + model.predict(CollKind::AgMp, x_ag_mp_s1 * w_g);
+    // The SAA's AlltoAll + AllGather forwards all ride the combine leg.
+    let t_d2 = fused_d + model.predict(CollKind::SaaS2, x_fused * w_c);
     // Bottleneck-node FFN: `model.gpu_flops` is the min over used nodes.
     let t_ffn = ops::expert_flops(c, ops::expert_tokens_per_rank(c, true))
         * ops::ffn_load_scale(c, c.t_pausemp())
         / model.gpu_flops;
 
-    let ag = model.predict(CollKind::AgMp, x_ag_mp_s1);
+    let ag = model.predict(CollKind::AgMp, x_ag_mp_s1 * w_g);
     let x_ag_mp_s2 = ops::bytes_mp_ag_s2_per_rank(c) * c.par.n_mp as f64;
-    let ag2 = model.predict(CollKind::AgMp, x_ag_mp_s2);
-    let fused = model.predict(CollKind::A2aFused, x_fused);
+    let ag2 = model.predict(CollKind::AgMp, x_ag_mp_s2 * w_g);
     // Fitted backward terms: the wgrad AllReduce is an ESP-group ring
     // AllReduce of the expert weight-gradient shard, priced by the same
-    // fitted model as the baseline's activation AllReduce. Its exposed
-    // share is what survives the deferred-completion overlap.
-    let t_wgrad_ar = model.predict(CollKind::ArEsp, ops::bytes_wgrad_per_rank(c));
+    // fitted model as the baseline's activation AllReduce — at the wgrad
+    // leg's compressed volume. Its exposed share is what survives the
+    // deferred-completion overlap.
+    let t_wgrad_ar = model.predict(
+        CollKind::ArEsp,
+        ops::bytes_wgrad_per_rank(c) * wire_factor(c, WireLeg::Wgrad),
+    );
     let exposed = super::closedform::exposed_wgrad_ar;
     // True t_bwd per unchunked family (see closedform::t_bwd_d1_on):
     // adjoint comm (RS + 2 transposed fused AlltoAlls + adjoint-of-split
-    // AG), doubled gradient FFN, exposed wgrad AR.
-    let t_bwd_s1 = 2.0 * fused + 2.0 * ag + 2.0 * t_ffn + exposed(t_wgrad_ar, fused + ag);
-    let t_bwd_s2 = 2.0 * fused + 2.0 * ag2 + 2.0 * t_ffn + exposed(t_wgrad_ar, fused + ag2);
+    // AG), doubled gradient FFN, exposed wgrad AR — the hiding tail is
+    // the combine-leg transposed AlltoAll plus the final AllGather.
+    let t_bwd_s1 = fused_d + fused_c + 2.0 * ag + 2.0 * t_ffn + exposed(t_wgrad_ar, fused_c + ag);
+    let t_bwd_s2 =
+        fused_d + fused_c + 2.0 * ag2 + 2.0 * t_ffn + exposed(t_wgrad_ar, fused_c + ag2);
     let t_iter_s1 = t_d1 + t_ffn + t_bwd_s1;
     let t_iter_s2 = t_d2 + t_ffn + t_bwd_s2;
     // The AlltoAll chunks are global collectives (one fitted model) and
@@ -348,6 +371,7 @@ mod tests {
             f,
             dtype_bytes: 4,
             skew: 0.0,
+            wire: Default::default(),
         }
     }
 

@@ -25,7 +25,8 @@ use anyhow::{bail, ensure, Result};
 use crate::cluster::{GroupKind, ProcessGroups};
 use crate::comm::algo;
 use crate::comm::tags;
-use crate::comm::transport::Transport;
+use crate::comm::transport::{Chunk, Transport};
+use crate::config::{WireDtype, WireLeg};
 
 use super::ops::Op;
 
@@ -109,6 +110,71 @@ fn merge_region<T: Transport>(
     }
 }
 
+/// Marshal the chunks each member of `grp` contributes to `op`, rounded
+/// to the transport's current wire dtype. This is the data plane's
+/// quantize-on-send: the narrowing happens once, on the marshalled
+/// inputs, before the collective algorithm moves them — so ReduceScatter
+/// / AllReduce / SAA reduce steps still accumulate in f32 (partials are
+/// never re-rounded). On the timing plane chunks are byte counts and
+/// `quantize` is a no-op; the transport prices the compression instead.
+fn marshal<T, M>(
+    machine: &mut M,
+    transport: &T,
+    op: &Op,
+    grp: &[usize],
+) -> Result<Vec<Vec<T::Chunk>>>
+where
+    T: Transport,
+    M: Machine<T>,
+{
+    let mut ins = machine.inputs(op, grp)?;
+    let wd = transport.wire_dtype();
+    if wd != WireDtype::F32 {
+        for per_member in &mut ins {
+            for chunk in per_member {
+                chunk.quantize(wd);
+            }
+        }
+    }
+    Ok(ins)
+}
+
+/// Which wire leg `op`'s sends ride. The forward dispatch and combine
+/// AlltoAlls share one op variant, so the interpreter disambiguates them
+/// positionally: the FIRST forward AlltoAll of a program is the dispatch,
+/// every later one is a combine (`fwd_a2a_seen` counts them). Backward
+/// AlltoAlls carry an explicit `combine` flag; SAA rides the Combine leg
+/// end to end (its MP-AllGather forwards included, on both planes); the
+/// plain MP/ESP epilogues ride AllGather; the wgrad AllReduce has its own
+/// leg. Compute/local ops return `None` (no sends to price).
+fn wire_leg_of(op: &Op, fwd_a2a_seen: &mut usize) -> Option<WireLeg> {
+    match op {
+        Op::EpAlltoAll { .. } | Op::FusedAlltoAll { .. } => {
+            let leg = if *fwd_a2a_seen == 0 { WireLeg::Dispatch } else { WireLeg::Combine };
+            *fwd_a2a_seen += 1;
+            Some(leg)
+        }
+        Op::SpDispatch { .. } | Op::Sp2Dispatch { .. } => Some(WireLeg::Dispatch),
+        Op::BwdEpAlltoAll { combine, .. } | Op::BwdFusedAlltoAll { combine, .. } => {
+            Some(if *combine { WireLeg::Combine } else { WireLeg::Dispatch })
+        }
+        Op::BwdSpDispatch { .. } | Op::BwdSp2Dispatch { .. } => Some(WireLeg::Dispatch),
+        Op::SaaCombine { .. }
+        | Op::AasCombine { .. }
+        | Op::SpCombine { .. }
+        | Op::Sp2Saa { .. }
+        | Op::BwdSpCombine { .. }
+        | Op::BwdSp2Combine { .. } => Some(WireLeg::Combine),
+        Op::EspAllGather { .. }
+        | Op::MpAllGather { .. }
+        | Op::EspReduceScatter { .. }
+        | Op::MpReduceScatter { .. }
+        | Op::EspAllReduce { .. } => Some(WireLeg::AllGather),
+        Op::BwdWgradAllReduce { .. } => Some(WireLeg::Wgrad),
+        _ => None,
+    }
+}
+
 /// Run one SAA/AAS collective over the whole world: marshal the machine's
 /// inputs, execute [`algo::saa`] (AlltoAll tagged with the op's tag, the
 /// MP-AllGather forwards with the canonical [`tags::MP_ALLGATHER`]), hand
@@ -131,7 +197,7 @@ where
 {
     let world = groups.world();
     let mp_groups = groups.all_groups(GroupKind::Mp);
-    let ins = machine.inputs(op, &world)?;
+    let ins = marshal(machine, transport, op, &world)?;
     ensure!(ins.len() == world.len(), "one chunk list per member");
     let (outs, ends) = algo::saa(
         transport,
@@ -183,6 +249,9 @@ where
     let p = groups.par.p;
     let mut frontier: Vec<Option<T::Handle>> = vec![None; p];
     let mut pipe: Option<PipeState<T::Handle>> = None;
+    // Forward AlltoAlls seen so far — disambiguates dispatch vs combine
+    // for the wire-precision leg (see `wire_leg_of`).
+    let mut fwd_a2a_seen = 0usize;
     // Completions of overlap-scheduled collectives (the backward wgrad
     // AllReduce): the ops that follow proceed from the pre-collective
     // frontier, and the deferred handles are joined back in at program
@@ -195,6 +264,9 @@ where
 
     for op in ops {
         let tag = op.tag();
+        if let Some(leg) = wire_leg_of(op, &mut fwd_a2a_seen) {
+            transport.set_wire_leg(leg);
+        }
         match *op {
             Op::EspSplit { .. } | Op::MpSplit { .. } => {
                 // Free on the wire (local view change); the frontier does
@@ -223,7 +295,7 @@ where
                     "sp dispatch chunk {index} of {of} does not fit the pipelined region"
                 );
                 for grp in groups.all_groups(GroupKind::EpEsp) {
-                    let ins = machine.inputs(op, &grp)?;
+                    let ins = marshal(machine, transport, op, &grp)?;
                     ensure!(ins.len() == grp.len(), "one chunk list per member");
                     let deps = deps_of(&st.comm, &grp);
                     let (outs, ends) = algo::pairwise_alltoall(transport, &grp, &ins, &deps, tag);
@@ -280,7 +352,7 @@ where
                         .ok_or_else(|| anyhow::anyhow!("sp.combine outside a pipelined region"))?;
                     ensure!(index < st.ffn.len(), "sp.combine chunk {index} out of range");
                     for grp in groups.all_groups(GroupKind::EpEsp) {
-                        let ins = machine.inputs(op, &grp)?;
+                        let ins = marshal(machine, transport, op, &grp)?;
                         ensure!(ins.len() == grp.len(), "one chunk list per member");
                         let mut deps = deps_of(&st.comm, &grp);
                         deps.extend(deps_of(&st.ffn[index], &grp));
@@ -346,7 +418,7 @@ where
                 // Without it the completions chain the main frontier —
                 // the non-overlapped ablation lowering.
                 for grp in groups.all_groups(GroupKind::Esp) {
-                    let ins = machine.inputs(op, &grp)?;
+                    let ins = marshal(machine, transport, op, &grp)?;
                     ensure!(ins.len() == grp.len(), "one chunk list per member");
                     let deps = deps_of(&frontier, &grp);
                     let (outs, ends) = algo::ring_allreduce(transport, &grp, &ins, &deps, tag);
@@ -365,7 +437,7 @@ where
                 let kind = group_kind(op)
                     .ok_or_else(|| anyhow::anyhow!("op {op:?} has no interpretation"))?;
                 for grp in groups.all_groups(kind) {
-                    let ins = machine.inputs(op, &grp)?;
+                    let ins = marshal(machine, transport, op, &grp)?;
                     ensure!(ins.len() == grp.len(), "one chunk list per member");
                     let deps = deps_of(&frontier, &grp);
                     let (outs, ends) = match *op {

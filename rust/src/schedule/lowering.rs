@@ -88,7 +88,9 @@ pub fn lower_ops(ops: &[Op], cfg: &MoeLayerConfig, cluster: &ClusterTopology) ->
     );
     let groups = ProcessGroups::new(cfg.par)?;
     let mut dag = SimDag::new();
-    let mut transport = DagTransport::new(&mut dag, cluster);
+    // Op byte fields are model-width; the transport prices each leg at the
+    // config's wire dtype (a no-op scale of 1.0 under the default policy).
+    let mut transport = DagTransport::with_wire(&mut dag, cluster, cfg.wire, cfg.dtype_bytes);
     run_program(ops, &groups, &mut transport, &mut DagMachine)?;
     Ok(dag)
 }
@@ -172,6 +174,7 @@ mod tests {
             f: 1.2,
             dtype_bytes: 4,
             skew: 0.0,
+            wire: Default::default(),
         }
     }
 
@@ -289,6 +292,7 @@ mod tests {
             f: 1.2,
             dtype_bytes: 4,
             skew: 0.0,
+            wire: Default::default(),
         };
         let (r, _) = crate::perfmodel::closedform::optimal_chunks(&cluster, &c);
         assert!(r > 1, "closed form should pick pipelining here, got r={r}");
@@ -346,6 +350,7 @@ mod tests {
                         f: 0.6,
                         dtype_bytes: 4,
                         skew: 0.0,
+                        wire: Default::default(),
                     };
                     let m = match &model {
                         Some(m) => m.clone(),
@@ -424,6 +429,7 @@ mod tests {
                 f: 1.2,
                 dtype_bytes: 4,
                 skew,
+                wire: Default::default(),
             };
             for r in [4usize, 8] {
                 let tw = simulate_iteration(ScheduleKind::Pipelined { chunks: r }, &c, &cluster)

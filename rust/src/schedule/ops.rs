@@ -4,7 +4,7 @@
 //! executor (numerics, [`crate::moe::exec`]) — so the schedule we time is
 //! exactly the schedule whose correctness the tests establish.
 
-use crate::config::MoeLayerConfig;
+use crate::config::{MoeLayerConfig, WireLeg};
 
 /// One step of a schedule. Communication sizes are in **bytes** and are
 /// per the unit noted on each variant; compute is in FLOPs per rank.
@@ -344,6 +344,17 @@ pub fn bytes_mp_ag_s2_per_rank(c: &MoeLayerConfig) -> f64 {
 /// computed partial weight gradients from different token shards).
 pub fn bytes_wgrad_per_rank(c: &MoeLayerConfig) -> f64 {
     (c.experts_per_rank() * 2 * c.m * (c.h / c.par.n_esp) * c.dtype_bytes) as f64
+}
+
+/// THE one place compressed-wire volumes are derived: the fraction of an
+/// op's model-width bytes that actually crosses the wire on `leg` under
+/// the config's [`crate::config::WirePrecision`] policy. Every `bytes_*`
+/// helper above stays in model width (elements × `dtype_bytes`) — the
+/// closed forms, the fitted predictions, and the timing transport all
+/// multiply by this factor instead of re-deriving per-leg widths locally.
+/// 1.0 under the default policy (f32 wire over a 4-byte model dtype).
+pub fn wire_factor(c: &MoeLayerConfig, leg: WireLeg) -> f64 {
+    c.wire.dtype(leg).bytes() as f64 / c.dtype_bytes as f64
 }
 
 // ---- SP chunking (capacity spans shared by builder and data plane) -----
@@ -1030,5 +1041,95 @@ mod tests {
         }
         assert_eq!(sp_clamp_chunks(&c, 0), 1);
         assert_eq!(sp_clamp_chunks(&c, 100), crate::comm::tags::SP_MAX_CHUNKS);
+    }
+
+    #[test]
+    fn bytes_helpers_scale_linearly_in_element_width() {
+        // Every volume helper is elements × dtype_bytes: doubling the
+        // element width must exactly double the bytes, at every width.
+        // Guards the volume-module refactor — a helper that baked in a
+        // width (or the wire policy) would break this linearity.
+        let helpers: [(&str, fn(&MoeLayerConfig) -> f64); 6] = [
+            ("esp_ag", bytes_esp_ag_per_rank),
+            ("ep_a2a", bytes_ep_a2a_per_pair),
+            ("esp_ar", bytes_esp_ar_total),
+            ("fused_a2a", bytes_fused_a2a_per_pair),
+            ("mp_ag_s1", bytes_mp_ag_s1_per_rank),
+            ("mp_ag_s2", bytes_mp_ag_s2_per_rank),
+        ];
+        let unit = {
+            let mut c = cfg();
+            c.dtype_bytes = 1;
+            c
+        };
+        for width in [1usize, 2, 4, 8] {
+            let mut c = cfg();
+            c.dtype_bytes = width;
+            for (name, h) in helpers {
+                assert_eq!(h(&c), h(&unit) * width as f64, "{name} at width {width}");
+            }
+            assert_eq!(
+                bytes_wgrad_per_rank(&c),
+                bytes_wgrad_per_rank(&unit) * width as f64,
+                "wgrad at width {width}"
+            );
+            assert_eq!(
+                bytes_sp_chunk_per_pair(&c, 5),
+                bytes_sp_chunk_per_pair(&unit, 5) * width as f64,
+                "sp_chunk at width {width}"
+            );
+        }
+    }
+
+    #[test]
+    fn sp_chunk_volumes_conserve_totals_at_every_width() {
+        // Per-chunk SP/SP2 volumes must partition the monolithic fused
+        // total regardless of the element width and span policy — the
+        // conservation law that keeps chunked and monolithic schedules
+        // pricing the same traffic.
+        for width in [1usize, 2, 4, 8] {
+            let mut c = cfg();
+            c.dtype_bytes = width;
+            let t = c.t_pausemp();
+            for r in [1usize, 2, 3, 4, 7] {
+                for spans in [chunk_spans(t, r), sp_spans(&c, t, r)] {
+                    let sum: f64 = spans.iter().map(|s| bytes_sp_chunk_per_pair(&c, s.1)).sum();
+                    assert_eq!(sum, bytes_fused_a2a_per_pair(&c), "width={width} r={r}");
+                }
+            }
+            // And under a skewed (load-aware) span policy.
+            let mut skewed = c.clone();
+            skewed.skew = 1.5;
+            let cap = skewed.t_pausemp();
+            for r in [2usize, 4] {
+                let sum: f64 = sp_spans(&skewed, cap, r)
+                    .iter()
+                    .map(|s| bytes_sp_chunk_per_pair(&skewed, s.1))
+                    .sum();
+                assert_eq!(sum, bytes_fused_a2a_per_pair(&skewed), "skewed width={width} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn wire_factor_is_per_leg_and_unit_by_default() {
+        use crate::config::{WireDtype, WirePrecision};
+        let c = cfg();
+        for leg in WireLeg::ALL {
+            assert_eq!(wire_factor(&c, leg), 1.0, "{leg:?} default");
+        }
+        let mut w = cfg();
+        w.wire = WirePrecision::uniform(WireDtype::Bf16).with_leg(WireLeg::Wgrad, WireDtype::F32);
+        assert_eq!(wire_factor(&w, WireLeg::Dispatch), 0.5);
+        assert_eq!(wire_factor(&w, WireLeg::Combine), 0.5);
+        assert_eq!(wire_factor(&w, WireLeg::AllGather), 0.5);
+        assert_eq!(wire_factor(&w, WireLeg::Wgrad), 1.0);
+        // The factor is relative to the MODEL width: a bf16 model dtype
+        // with an f32 wire prices 2× the op bytes.
+        let mut narrow = cfg();
+        narrow.dtype_bytes = 2;
+        assert_eq!(wire_factor(&narrow, WireLeg::Dispatch), 2.0);
+        narrow.wire = WirePrecision::uniform(WireDtype::Bf16);
+        assert_eq!(wire_factor(&narrow, WireLeg::Dispatch), 1.0);
     }
 }

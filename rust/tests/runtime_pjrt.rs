@@ -37,6 +37,7 @@ fn xlang_cfg() -> MoeLayerConfig {
         f: 1.2,
         dtype_bytes: 4,
         skew: 0.0,
+        wire: Default::default(),
     }
 }
 
@@ -106,6 +107,7 @@ fn jax_moe_layer_ref_matches_rust_reference() {
         f: 64.0,
         dtype_bytes: 4,
         skew: 0.0,
+        wire: Default::default(),
     };
     let w = GlobalWeights::random(&cfg, 5);
     let mut rng = Rng::new(6);

@@ -33,6 +33,7 @@ fn random_cfg(rng: &mut parm::util::prng::Rng) -> MoeLayerConfig {
         f: 64.0, // generous: drop-free
         dtype_bytes: 4,
         skew: 0.0,
+        wire: Default::default(),
     }
 }
 
@@ -107,6 +108,7 @@ fn s2_aas_shares_s2_data_plane() {
         f: 8.0,
         dtype_bytes: 4,
         skew: 0.0,
+        wire: Default::default(),
     };
     let state = LayerState::random(&cfg, 77).unwrap();
     let a = run_schedule(ScheduleKind::S2, &state, &mut NativeBackend).unwrap();

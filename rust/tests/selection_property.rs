@@ -38,6 +38,7 @@ fn selection_accuracy(skews: &[f64], seed: u64, label: &str) {
             f: *rng.choice(&[1.2f64, 2.4]),
             dtype_bytes: 4,
             skew: *rng.choice(skews),
+            wire: Default::default(),
         };
         if cfg.validate().is_err() {
             continue;

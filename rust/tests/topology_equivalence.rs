@@ -107,6 +107,7 @@ fn json_spelling_yields_identical_sweep_csv_timings_and_prediction() {
             f: 1.2,
             dtype_bytes: 4,
             skew: 0.0,
+            wire: Default::default(),
         };
         for kind in [
             ScheduleKind::Baseline,
@@ -165,6 +166,7 @@ fn light_cfg() -> MoeLayerConfig {
         f: 1.2,
         dtype_bytes: 4,
         skew: 0.0,
+        wire: Default::default(),
     }
 }
 

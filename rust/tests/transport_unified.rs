@@ -37,6 +37,7 @@ fn exact_cfg(rng: &mut Rng) -> MoeLayerConfig {
         f: 1.0,
         dtype_bytes: 4,
         skew: 0.0,
+        wire: Default::default(),
     }
 }
 
@@ -413,6 +414,7 @@ fn pinned_transposed_combine_moves_the_forward_dispatch_volumes() {
         f: 1.0,
         dtype_bytes: 4,
         skew: 0.0,
+        wire: Default::default(),
     };
     cfg.validate().unwrap();
     for (kind, fwd_tag, bwd_tag) in [
