@@ -1,0 +1,125 @@
+//! Drive-run bench summary: folds a [`DriveOutcome`] into the sweep's
+//! `BENCH_sweep.json` perf-trajectory artifact.
+//!
+//! The sweep writes the document; `parm drive --bench-json` then merges an
+//! `online vs. every-static-choice` summary under a `"drive"` key, so one
+//! artifact carries both the static-grid throughput and the adaptivity
+//! margin. Keys are additive — `ci/bench_regression.py` gates only the
+//! sweep throughput fields and ignores unknown keys.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::control::DriveOutcome;
+use crate::util::json::Json;
+
+/// The compact summary row: totals, the winning static, and the online
+/// speedup over it (`> 1` means adaptivity paid for its switch costs).
+pub fn drive_summary(outcome: &DriveOutcome) -> Json {
+    let (best_kind, best_total) = outcome.best_static();
+    Json::obj(vec![
+        ("trace", Json::str(&outcome.trace_name)),
+        ("cfg", Json::str(&outcome.cfg_id)),
+        ("cluster", Json::str(&outcome.cluster_name)),
+        ("seed", Json::num(outcome.seed as f64)),
+        ("threshold", Json::num(outcome.threshold)),
+        ("steps", Json::num(outcome.steps.len() as f64)),
+        ("online_total", Json::num(outcome.online_total)),
+        ("best_static", Json::str(&best_kind.label())),
+        ("best_static_total", Json::num(best_total)),
+        ("online_speedup", Json::num(best_total / outcome.online_total)),
+        ("switches", Json::num(outcome.switches as f64)),
+        ("redecisions", Json::num(outcome.redecisions as f64)),
+    ])
+}
+
+/// Merge `summary` under the `"drive"` key of the bench JSON at `path`,
+/// creating the document if the sweep has not written it yet (drive can
+/// run standalone). Existing keys are preserved.
+pub fn merge_drive_summary(path: &Path, summary: &Json) -> Result<()> {
+    let mut doc = match std::fs::read_to_string(path) {
+        Ok(text) => Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{e}"))
+            .with_context(|| format!("parsing bench JSON {}", path.display()))?,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Json::Obj(Default::default()),
+        Err(e) => return Err(e).with_context(|| format!("reading bench JSON {}", path.display())),
+    };
+    match &mut doc {
+        Json::Obj(map) => {
+            map.insert("drive".to_string(), summary.clone());
+        }
+        other => anyhow::bail!(
+            "bench JSON {} is not an object (found {})",
+            path.display(),
+            other.to_string()
+        ),
+    }
+    std::fs::write(path, doc.to_pretty())
+        .with_context(|| format!("writing bench JSON {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::StepDecision;
+    use crate::schedule::ScheduleKind;
+
+    fn outcome() -> DriveOutcome {
+        DriveOutcome {
+            trace_name: "t".into(),
+            seed: 7,
+            threshold: 0.25,
+            switch_frac: 0.5,
+            cfg_id: "cfg".into(),
+            cluster_name: "cl".into(),
+            steps: vec![StepDecision {
+                step: 0,
+                loads_digest: "d".into(),
+                drift: 0.0,
+                redecided: false,
+                switched: false,
+                respan: false,
+                kind: ScheduleKind::S1,
+                t_iter: 2.0,
+                switch_cost: 0.0,
+            }],
+            statics: vec![(ScheduleKind::S1, 3.0), (ScheduleKind::S2, 2.5)],
+            online_total: 2.0,
+            switches: 0,
+            redecisions: 0,
+        }
+    }
+
+    #[test]
+    fn summary_reports_the_best_static_and_speedup() {
+        let s = drive_summary(&outcome());
+        assert_eq!(s.get("best_static").as_str().unwrap(), "s2");
+        assert_eq!(s.get("best_static_total").as_f64().unwrap(), 2.5);
+        assert_eq!(s.get("online_speedup").as_f64().unwrap(), 1.25);
+    }
+
+    #[test]
+    fn merge_preserves_existing_keys_and_creates_missing_files() {
+        let dir = std::env::temp_dir().join(format!("parm_drive_merge_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.json");
+        // Fresh file: created as an object with just the drive key.
+        let _ = std::fs::remove_file(&path);
+        merge_drive_summary(&path, &drive_summary(&outcome())).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("drive").get("trace").as_str().unwrap(), "t");
+        // Existing sweep document: untouched except for the new key.
+        std::fs::write(&path, r#"{"cases_per_sec_par": 10, "cluster": "x"}"#).unwrap();
+        merge_drive_summary(&path, &drive_summary(&outcome())).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("cases_per_sec_par").as_f64().unwrap(), 10.0);
+        assert_eq!(doc.get("cluster").as_str().unwrap(), "x");
+        assert_eq!(doc.get("drive").get("seed").as_f64().unwrap(), 7.0);
+        // Non-object documents are rejected loudly.
+        std::fs::write(&path, "[1,2]").unwrap();
+        assert!(merge_drive_summary(&path, &Json::Null).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,15 +1,17 @@
 //! Configuration layer: MoE layer hyper-parameters, cluster topologies
-//! (per-node hardware + per-link α-β), real-world model descriptions, and
-//! the Table III sweep grid.
+//! (per-node hardware + per-link α-β), real-world model descriptions,
+//! the Table III sweep grid, and drifting-traffic trace specs.
 
 pub mod cluster;
 pub mod model;
 pub mod moe;
 pub mod precision;
 pub mod sweep;
+pub mod trace;
 
 pub use cluster::{AlphaBeta, ClusterTopology, LinkClass, NodeSpec};
 pub use model::ModelConfig;
 pub use moe::{MoeLayerConfig, ParallelDegrees};
 pub use precision::{WireDtype, WireLeg, WirePrecision};
 pub use sweep::{sweep_table3, sweep_table3_scaled, GridAxes, SweepFilter};
+pub use trace::TraceSpec;

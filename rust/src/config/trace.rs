@@ -1,0 +1,306 @@
+//! Drifting-traffic trace specs: the JSON schema behind `--trace`.
+//!
+//! A [`TraceSpec`] declares how routing statistics evolve over an
+//! N-iteration run — a Zipf skew ramp ([`Drift`]), a diurnal sinusoid
+//! ([`Diurnal`]), periodic hot-expert flips ([`Bursty`]), multiplicative
+//! per-expert noise, and straggler/jitter injection on nodes and links
+//! ([`Jitter`]). The spec is pure data: the `traffic` scenario engine
+//! turns it into per-step expert-load vectors and per-step clusters,
+//! deterministically under [`crate::util::prng`] from the spec's `seed`
+//! (CLI `--seed` overrides it). Committed examples live in
+//! `examples/trace_*.json`.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Sinusoidal load modulation: `skew += amplitude · sin(2π·(step/period) +
+/// phase)` — the "daytime concentrates traffic on popular experts" shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Diurnal {
+    pub amplitude: f64,
+    /// Period in steps (one full day); must be positive.
+    pub period: f64,
+    /// Phase offset in radians.
+    pub phase: f64,
+}
+
+/// Linear Zipf-skew ramp from `from` at step 0 to `to` at the last step —
+/// the sustained regime change the hysteresis must converge after. When
+/// present it replaces `base_skew` as the carrier the diurnal term rides.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Drift {
+    pub from: f64,
+    pub to: f64,
+}
+
+/// Periodic hot-expert flips: every `every` steps the hot seat rotates to
+/// the next expert and holds it for `hold` steps, boosting that expert's
+/// routing weight by `boost`×.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Bursty {
+    pub every: usize,
+    pub hold: usize,
+    pub boost: f64,
+}
+
+/// Straggler injection: per step, each node's FLOPs are divided by
+/// `1 + node·u` and each link's α/β multiplied by `1 + link·u` for
+/// fresh uniform draws `u ∈ [0,1)` — node 0 is never slowed so the
+/// bottleneck can move.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Jitter {
+    pub node: f64,
+    pub link: f64,
+}
+
+/// A drifting-traffic scenario: see the module docs for the composition
+/// order. Loaded from JSON with [`TraceSpec::load`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSpec {
+    pub name: String,
+    /// Number of iterations the drive loop runs.
+    pub steps: usize,
+    /// PRNG seed for noise/jitter streams. Defaults to 42 when the
+    /// document omits it; 0 is a valid seed (not "pick one for me") —
+    /// reproducibility always wins over entropy here.
+    pub seed: u64,
+    /// Carrier Zipf skew when no `drift` ramp is present.
+    pub base_skew: f64,
+    pub diurnal: Option<Diurnal>,
+    pub drift: Option<Drift>,
+    pub bursty: Option<Bursty>,
+    /// Multiplicative per-expert weight noise amplitude in [0,1): each
+    /// weight is scaled by `1 + noise·(2u−1)`.
+    pub noise: f64,
+    pub jitter: Option<Jitter>,
+    /// Steps whose routed-token count is forced to zero (router collapse /
+    /// empty micro-batch) — exercises the all-zero→expected fallback.
+    pub zero_steps: Vec<usize>,
+}
+
+impl TraceSpec {
+    /// The Zipf skew in effect at `step`: drift ramp (or `base_skew`)
+    /// plus the diurnal term, clamped at 0.
+    pub fn skew_at(&self, step: usize) -> f64 {
+        let frac = if self.steps > 1 { step as f64 / (self.steps - 1) as f64 } else { 0.0 };
+        let mut s = match self.drift {
+            Some(d) => d.from + (d.to - d.from) * frac,
+            None => self.base_skew,
+        };
+        if let Some(d) = self.diurnal {
+            s += d.amplitude * (std::f64::consts::TAU * step as f64 / d.period + d.phase).sin();
+        }
+        s.max(0.0)
+    }
+
+    /// Whether `step` sits inside a burst window, and if so which expert
+    /// seat (mod the expert count, applied by the scenario engine) holds
+    /// the boost.
+    pub fn burst_at(&self, step: usize) -> Option<(usize, f64)> {
+        let b = self.bursty?;
+        if step % b.every < b.hold {
+            Some((step / b.every, b.boost))
+        } else {
+            None
+        }
+    }
+
+    /// Load a trace spec document from `path`.
+    pub fn load(path: &str) -> Result<TraceSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace spec {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&j).with_context(|| format!("parsing trace spec {path}"))
+    }
+
+    /// Parse and validate a trace spec document.
+    pub fn from_json(j: &Json) -> Result<TraceSpec> {
+        let name = j.req_str("name")?.to_string();
+        let steps = j.req_usize("steps")?;
+        let seed = match j.get("seed") {
+            Json::Null => 42,
+            v => v.as_usize().map(|n| n as u64).ok_or_else(|| {
+                anyhow::anyhow!("`seed` must be a non-negative integer")
+            })?,
+        };
+        let opt_f64 = |key: &str, default: f64| -> Result<f64> {
+            match j.get(key) {
+                Json::Null => Ok(default),
+                v => v.as_f64().ok_or_else(|| anyhow::anyhow!("`{key}` must be a number")),
+            }
+        };
+        let base_skew = opt_f64("base_skew", 0.0)?;
+        let noise = opt_f64("noise", 0.0)?;
+        let diurnal = match j.get("diurnal") {
+            Json::Null => None,
+            d => Some(Diurnal {
+                amplitude: d.req_f64("amplitude")?,
+                period: d.req_f64("period")?,
+                phase: d.get("phase").as_f64().unwrap_or(0.0),
+            }),
+        };
+        let drift = match j.get("drift") {
+            Json::Null => None,
+            d => Some(Drift { from: d.req_f64("from")?, to: d.req_f64("to")? }),
+        };
+        let bursty = match j.get("bursty") {
+            Json::Null => None,
+            b => Some(Bursty {
+                every: b.req_usize("every")?,
+                hold: b.req_usize("hold")?,
+                boost: b.req_f64("boost")?,
+            }),
+        };
+        let jitter = match j.get("jitter") {
+            Json::Null => None,
+            v => Some(Jitter {
+                node: v.get("node").as_f64().unwrap_or(0.0),
+                link: v.get("link").as_f64().unwrap_or(0.0),
+            }),
+        };
+        let mut zero_steps = Vec::new();
+        if let Some(arr) = j.get("zero_steps").as_arr() {
+            for v in arr {
+                let idx = v
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("`zero_steps` entries must be step indices"))?;
+                zero_steps.push(idx);
+            }
+        }
+        let spec = TraceSpec {
+            name,
+            steps,
+            seed,
+            base_skew,
+            diurnal,
+            drift,
+            bursty,
+            noise,
+            jitter,
+            zero_steps,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Reject ill-formed scenarios with messages naming the bad field.
+    pub fn validate(&self) -> Result<()> {
+        if self.steps == 0 {
+            bail!("trace `steps` must be ≥ 1");
+        }
+        if self.base_skew < 0.0 {
+            bail!("`base_skew` must be ≥ 0");
+        }
+        if !(0.0..1.0).contains(&self.noise) {
+            bail!("`noise` must lie in [0, 1)");
+        }
+        if let Some(d) = self.diurnal {
+            if d.period <= 0.0 {
+                bail!("diurnal `period` must be positive");
+            }
+            if d.amplitude < 0.0 {
+                bail!("diurnal `amplitude` must be ≥ 0");
+            }
+        }
+        if let Some(d) = self.drift {
+            if d.from < 0.0 || d.to < 0.0 {
+                bail!("drift endpoints must be ≥ 0");
+            }
+        }
+        if let Some(b) = self.bursty {
+            if b.every == 0 {
+                bail!("bursty `every` must be ≥ 1");
+            }
+            if b.hold > b.every {
+                bail!("bursty `hold` must not exceed `every`");
+            }
+            if b.boost < 1.0 {
+                bail!("bursty `boost` must be ≥ 1");
+            }
+        }
+        if let Some(jit) = self.jitter {
+            if jit.node < 0.0 || jit.link < 0.0 {
+                bail!("jitter factors must be ≥ 0");
+            }
+        }
+        for &s in &self.zero_steps {
+            if s >= self.steps {
+                bail!("zero_steps entry {s} out of range (steps = {})", self.steps);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Result<TraceSpec> {
+        TraceSpec::from_json(&Json::parse(text).unwrap())
+    }
+
+    #[test]
+    fn parses_full_spec_and_defaults() {
+        let spec = parse(
+            r#"{"name": "t", "steps": 8, "drift": {"from": 1.0, "to": 2.0},
+                "diurnal": {"amplitude": 0.2, "period": 4},
+                "bursty": {"every": 4, "hold": 2, "boost": 3.0},
+                "noise": 0.05, "jitter": {"node": 0.1, "link": 0.2},
+                "zero_steps": [3]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.seed, 42, "omitted seed defaults to 42");
+        assert_eq!(spec.diurnal.unwrap().phase, 0.0);
+        assert_eq!(spec.burst_at(1), Some((0, 3.0)));
+        assert_eq!(spec.burst_at(2), None);
+        assert_eq!(spec.burst_at(5), Some((1, 3.0)));
+        // Drift ramp hits its endpoints and the diurnal term perturbs the
+        // interior symmetrically around it.
+        assert!((spec.skew_at(0) - 1.0).abs() < 1e-12);
+        assert!((spec.skew_at(7) - 2.0).abs() < 1e-12);
+        let minimal = parse(r#"{"name": "m", "steps": 1}"#).unwrap();
+        assert_eq!(minimal.base_skew, 0.0);
+        assert_eq!(minimal.noise, 0.0);
+        assert_eq!(minimal.skew_at(0), 0.0);
+        assert!(minimal.bursty.is_none() && minimal.jitter.is_none());
+    }
+
+    #[test]
+    fn seed_zero_is_a_valid_seed() {
+        let spec = parse(r#"{"name": "z", "steps": 2, "seed": 0}"#).unwrap();
+        assert_eq!(spec.seed, 0);
+    }
+
+    #[test]
+    fn skew_never_goes_negative() {
+        let spec = parse(
+            r#"{"name": "n", "steps": 16, "base_skew": 0.1,
+                "diurnal": {"amplitude": 5.0, "period": 8}}"#,
+        )
+        .unwrap();
+        for step in 0..spec.steps {
+            assert!(spec.skew_at(step) >= 0.0, "step {step}");
+        }
+    }
+
+    #[test]
+    fn rejects_ill_formed_specs() {
+        assert!(parse(r#"{"name": "x", "steps": 0}"#).is_err());
+        assert!(parse(r#"{"name": "x", "steps": 4, "noise": 1.0}"#).is_err());
+        assert!(parse(r#"{"name": "x", "steps": 4, "noise": -0.1}"#).is_err());
+        assert!(
+            parse(r#"{"name": "x", "steps": 4, "bursty": {"every": 2, "hold": 3, "boost": 2}}"#)
+                .is_err()
+        );
+        assert!(
+            parse(r#"{"name": "x", "steps": 4, "bursty": {"every": 2, "hold": 1, "boost": 0.5}}"#)
+                .is_err()
+        );
+        assert!(parse(r#"{"name": "x", "steps": 4, "zero_steps": [4]}"#).is_err());
+        assert!(parse(r#"{"name": "x", "steps": 4, "diurnal": {"amplitude": 1, "period": 0}}"#)
+            .is_err());
+        assert!(parse(r#"{"steps": 4}"#).is_err(), "name is required");
+    }
+}

@@ -1,0 +1,539 @@
+//! Online adaptive control plane: hysteresis-driven schedule switching
+//! over a drifting-traffic trace.
+//!
+//! Algorithm 1 picks one schedule per static configuration; this module
+//! makes that decision *online*. [`drive`] walks an N-iteration simulated
+//! run from a [`TraceSpec`]: each step it re-spans the chunk-pipelined
+//! schedules from the **previous** step's measured expert loads
+//! (amortizing away the second gate pass — the spans are ready before the
+//! step starts), computes a total-variation [`drift`] between the latest
+//! loads and the loads at the last decision, and only when that drift
+//! crosses the [`Hysteresis`] band re-runs Algorithm 1 with warm fits
+//! ([`predict_with_loads`] — no collective re-measurement) and switches
+//! schedule mid-run. A switch is charged `switch_frac × t_iter` (regroup
+//! barriers, buffer re-registration), so the controller cannot flap for
+//! free; `threshold = 0` degrades to re-deciding every step — the
+//! ablation that shows why the band exists.
+//!
+//! The outcome carries a per-step decision log (step, loads digest,
+//! drift, pick, simulated iteration time) in a byte-stable text form —
+//! two runs with the same seed, trace, and cluster produce identical
+//! logs at any `threads` count, because every randomized input comes
+//! from stateless per-step streams and the only parallelism (the static
+//! baselines) merges results by index. `online vs. every-static-choice`
+//! totals quantify the win: the statics run the same trace with the same
+//! measured FLOP pricing but expected (capacity) spans, so the online
+//! margin is pure adaptivity, not accounting.
+
+use anyhow::Result;
+
+use crate::config::trace::TraceSpec;
+use crate::config::{ClusterTopology, MoeLayerConfig};
+use crate::perfmodel::selection::{predict_with_loads, Prediction};
+use crate::perfmodel::PerfModel;
+use crate::schedule::lowering::simulate_iteration_traffic_with_dag;
+use crate::schedule::ops::ScheduleKind;
+use crate::traffic::{self, TrafficStep};
+use crate::util::hash::fnv64_hex;
+use crate::util::json::Json;
+
+/// Total-variation distance `½·Σ|p̂−q̂|` between two load vectors viewed
+/// as distributions (each normalized by its own mass). Symmetric and
+/// bounded in `[0, 1]`; an all-zero vector (a step that routed nothing)
+/// is read as the uniform distribution so comparisons stay defined.
+pub fn drift(p: &[usize], q: &[usize]) -> f64 {
+    let n = p.len().max(q.len());
+    if n == 0 {
+        return 0.0;
+    }
+    let norm = |v: &[usize]| -> Vec<f64> {
+        let total: usize = v.iter().sum();
+        match total {
+            0 => vec![1.0 / n as f64; n],
+            t => (0..n).map(|i| v.get(i).copied().unwrap_or(0) as f64 / t as f64).collect(),
+        }
+    };
+    let (pn, qn) = (norm(p), norm(q));
+    0.5 * pn.iter().zip(&qn).map(|(a, b)| (a - b).abs()).sum::<f64>()
+}
+
+/// The decision band: re-run Algorithm 1 only when the load distribution
+/// has drifted at least `threshold` (total variation) from the
+/// distribution anchored at the last decision. The first observation
+/// always decides (there is nothing to be anchored to yet), and
+/// `threshold = 0` decides every step.
+#[derive(Debug, Clone)]
+pub struct Hysteresis {
+    pub threshold: f64,
+    anchor: Option<Vec<usize>>,
+}
+
+impl Hysteresis {
+    pub fn new(threshold: f64) -> Hysteresis {
+        Hysteresis { threshold, anchor: None }
+    }
+
+    /// Feed the latest measured loads; returns `(redecide, drift)` where
+    /// `drift` is measured against the anchor. On `redecide` the anchor
+    /// moves to `loads`.
+    pub fn observe(&mut self, loads: &[usize]) -> (bool, f64) {
+        match &self.anchor {
+            None => {
+                self.anchor = Some(loads.to_vec());
+                (true, 0.0)
+            }
+            Some(anchor) => {
+                let d = drift(loads, anchor);
+                if d >= self.threshold {
+                    self.anchor = Some(loads.to_vec());
+                    (true, d)
+                } else {
+                    (false, d)
+                }
+            }
+        }
+    }
+}
+
+/// Knobs for one [`drive`] run.
+#[derive(Debug, Clone, Copy)]
+pub struct DriveOptions {
+    /// Hysteresis band (total-variation units); 0 re-decides every step.
+    pub threshold: f64,
+    /// Switch cost as a fraction of the switching step's iteration time.
+    pub switch_frac: f64,
+    /// Worker threads for the static baselines (the online loop is
+    /// inherently sequential). Any value produces identical output.
+    pub threads: usize,
+    /// Override for the trace's own seed (CLI `--seed` wins over spec).
+    pub seed: Option<u64>,
+}
+
+impl Default for DriveOptions {
+    fn default() -> DriveOptions {
+        DriveOptions { threshold: 0.25, switch_frac: 0.5, threads: 1, seed: None }
+    }
+}
+
+/// One row of the decision log.
+#[derive(Debug, Clone)]
+pub struct StepDecision {
+    pub step: usize,
+    /// FNV-1a digest of this step's measured loads (the trace's output,
+    /// available to the controller only from the *next* step on).
+    pub loads_digest: String,
+    /// Drift of the previous step's loads against the hysteresis anchor
+    /// (0 at step 0, where nothing has been measured yet).
+    pub drift: f64,
+    /// Did Algorithm 1 re-run this step?
+    pub redecided: bool,
+    /// Did the schedule actually change?
+    pub switched: bool,
+    /// Were the chunk spans rebuilt from measured loads (a chunked
+    /// schedule running on a step with usable previous-step loads)?
+    pub respan: bool,
+    pub kind: ScheduleKind,
+    /// Simulated iteration time of this step under `kind`.
+    pub t_iter: f64,
+    /// Charged switch cost (0 unless `switched`).
+    pub switch_cost: f64,
+}
+
+/// Everything one [`drive`] run produced.
+#[derive(Debug, Clone)]
+pub struct DriveOutcome {
+    pub trace_name: String,
+    pub seed: u64,
+    pub threshold: f64,
+    pub switch_frac: f64,
+    pub cfg_id: String,
+    pub cluster_name: String,
+    pub steps: Vec<StepDecision>,
+    /// Total simulated time of each static candidate over the same trace
+    /// (same jittered clusters, same measured FLOP pricing, expected
+    /// spans, no switch costs).
+    pub statics: Vec<(ScheduleKind, f64)>,
+    /// Online total including switch costs.
+    pub online_total: f64,
+    pub switches: usize,
+    pub redecisions: usize,
+}
+
+impl DriveOutcome {
+    /// The best single static (schedule, span) choice — the bar the
+    /// online controller has to clear.
+    pub fn best_static(&self) -> (ScheduleKind, f64) {
+        self.statics
+            .iter()
+            .cloned()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .expect("drive ran with at least one static candidate")
+    }
+
+    /// Byte-stable per-step decision log (the golden/CI artifact). Fixed
+    /// float widths, no ambient state: identical runs render identically.
+    pub fn decision_log(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "# parm drive trace={} seed={} threshold={:.6} switch_frac={:.6} cfg={} cluster={}\n",
+            self.trace_name, self.seed, self.threshold, self.switch_frac, self.cfg_id,
+            self.cluster_name
+        ));
+        for d in &self.steps {
+            out.push_str(&format!(
+                "step={} digest={} drift={:.6} redecide={} switch={} respan={} pick={} \
+                 t_iter={:.9e} cost={:.9e}\n",
+                d.step,
+                d.loads_digest,
+                d.drift,
+                d.redecided as u8,
+                d.switched as u8,
+                d.respan as u8,
+                d.kind.label(),
+                d.t_iter,
+                d.switch_cost
+            ));
+        }
+        for (kind, total) in &self.statics {
+            out.push_str(&format!("static pick={} total={:.9e}\n", kind.label(), total));
+        }
+        let (bk, bt) = self.best_static();
+        out.push_str(&format!(
+            "online total={:.9e} switches={} redecisions={} best_static={} \
+             best_static_total={:.9e}\n",
+            self.online_total,
+            self.switches,
+            self.redecisions,
+            bk.label(),
+            bt
+        ));
+        out
+    }
+
+    /// JSON form for `--json` and the bench summary.
+    pub fn to_json(&self) -> Json {
+        let steps = self
+            .steps
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("step", Json::num(d.step as f64)),
+                    ("digest", Json::str(&d.loads_digest)),
+                    ("drift", Json::num(d.drift)),
+                    ("redecided", Json::Bool(d.redecided)),
+                    ("switched", Json::Bool(d.switched)),
+                    ("respan", Json::Bool(d.respan)),
+                    ("pick", Json::str(&d.kind.label())),
+                    ("t_iter", Json::num(d.t_iter)),
+                    ("switch_cost", Json::num(d.switch_cost)),
+                ])
+            })
+            .collect::<Vec<_>>();
+        let statics = self
+            .statics
+            .iter()
+            .map(|(k, t)| {
+                Json::obj(vec![("pick", Json::str(&k.label())), ("total", Json::num(*t))])
+            })
+            .collect::<Vec<_>>();
+        let (bk, bt) = self.best_static();
+        Json::obj(vec![
+            ("trace", Json::str(&self.trace_name)),
+            ("seed", Json::num(self.seed as f64)),
+            ("threshold", Json::num(self.threshold)),
+            ("switch_frac", Json::num(self.switch_frac)),
+            ("cfg", Json::str(&self.cfg_id)),
+            ("cluster", Json::str(&self.cluster_name)),
+            ("steps", Json::Arr(steps)),
+            ("statics", Json::Arr(statics)),
+            ("online_total", Json::num(self.online_total)),
+            ("switches", Json::num(self.switches as f64)),
+            ("redecisions", Json::num(self.redecisions as f64)),
+            ("best_static", Json::str(&bk.label())),
+            ("best_static_total", Json::num(bt)),
+            ("online_speedup", Json::num(bt / self.online_total)),
+        ])
+    }
+}
+
+/// The static candidate set the drive compares against: the unchunked
+/// family plus the pipelined members at the chunk counts Algorithm 1
+/// chose from the expected profile.
+pub fn default_candidates(pred: &Prediction) -> Vec<ScheduleKind> {
+    vec![
+        ScheduleKind::Baseline,
+        ScheduleKind::S1,
+        ScheduleKind::S2,
+        ScheduleKind::Pipelined { chunks: pred.sp_chunks },
+        ScheduleKind::PipelinedUniform { chunks: pred.sp_chunks },
+        ScheduleKind::PipelinedS2 { chunks: pred.sp2_chunks },
+    ]
+}
+
+fn is_chunked(kind: ScheduleKind) -> bool {
+    matches!(
+        kind,
+        ScheduleKind::Pipelined { .. } | ScheduleKind::PipelinedS2 { .. } | ScheduleKind::Parm
+    )
+}
+
+fn digest_loads(loads: &[usize]) -> String {
+    let joined = loads.iter().map(|l| l.to_string()).collect::<Vec<_>>().join(",");
+    fnv64_hex(&[&joined])
+}
+
+/// Run the online controller over a trace. See the module docs for the
+/// loop structure; `model` must be fitted for `cfg.par` on `base` (the
+/// warm fits re-decisions reuse — pass a plan-loaded model to skip
+/// fitting entirely).
+pub fn drive(
+    spec: &TraceSpec,
+    cfg: &MoeLayerConfig,
+    base: &ClusterTopology,
+    model: &PerfModel,
+    candidates: &[ScheduleKind],
+    opts: &DriveOptions,
+) -> Result<DriveOutcome> {
+    let mut spec = spec.clone();
+    if let Some(seed) = opts.seed {
+        spec.seed = seed;
+    }
+    let steps = traffic::materialize(&spec, cfg, base)?;
+
+    // ---- online loop (sequential: step t needs step t-1's measurement).
+    let mut current = predict_with_loads(model, cfg, None).best();
+    let mut hyst = Hysteresis::new(opts.threshold);
+    let mut decisions = Vec::with_capacity(steps.len());
+    let mut online_total = 0.0;
+    let mut switches = 0;
+    let mut redecisions = 0;
+    let mut prev: Option<&[usize]> = None;
+    for (t, st) in steps.iter().enumerate() {
+        let (redecided, drift_v) = match prev {
+            None => (false, 0.0),
+            Some(loads) => hyst.observe(loads),
+        };
+        let mut switched = false;
+        if redecided {
+            let pick = predict_with_loads(model, cfg, prev).best();
+            redecisions += 1;
+            if pick != current {
+                current = pick;
+                switched = true;
+                switches += 1;
+            }
+        }
+        let usable_prev = prev.is_some_and(|l| l.iter().sum::<usize>() > 0);
+        let respan = usable_prev && is_chunked(current);
+        let (report, _) =
+            simulate_iteration_traffic_with_dag(current, cfg, &st.cluster, prev, Some(&st.loads))?;
+        let t_iter = report.makespan;
+        let switch_cost = if switched { opts.switch_frac * t_iter } else { 0.0 };
+        online_total += t_iter + switch_cost;
+        decisions.push(StepDecision {
+            step: t,
+            loads_digest: digest_loads(&st.loads),
+            drift: drift_v,
+            redecided,
+            switched,
+            respan,
+            kind: current,
+            t_iter,
+            switch_cost,
+        });
+        prev = Some(&st.loads);
+    }
+
+    // ---- static baselines: every (candidate × step) simulation is pure,
+    // so they fan out over worker threads and merge by job index — the
+    // totals are bit-identical at any thread count.
+    let totals = static_totals(cfg, &steps, candidates, opts.threads.max(1))?;
+    let statics = candidates.iter().cloned().zip(totals).collect();
+
+    Ok(DriveOutcome {
+        trace_name: spec.name.clone(),
+        seed: spec.seed,
+        threshold: opts.threshold,
+        switch_frac: opts.switch_frac,
+        cfg_id: cfg.id(),
+        cluster_name: base.name.clone(),
+        steps: decisions,
+        statics,
+        online_total,
+        switches,
+        redecisions,
+    })
+}
+
+fn static_totals(
+    cfg: &MoeLayerConfig,
+    steps: &[TrafficStep],
+    candidates: &[ScheduleKind],
+    threads: usize,
+) -> Result<Vec<f64>> {
+    let jobs: Vec<(usize, usize)> = (0..candidates.len())
+        .flat_map(|ci| (0..steps.len()).map(move |t| (ci, t)))
+        .collect();
+    let run = |&(ci, t): &(usize, usize)| -> Result<f64> {
+        let st = &steps[t];
+        let (report, _) = simulate_iteration_traffic_with_dag(
+            candidates[ci],
+            cfg,
+            &st.cluster,
+            None,
+            Some(&st.loads),
+        )?;
+        Ok(report.makespan)
+    };
+    let mut times = vec![0.0f64; jobs.len()];
+    if threads <= 1 {
+        for (idx, job) in jobs.iter().enumerate() {
+            times[idx] = run(job)?;
+        }
+    } else {
+        let chunks: Vec<Vec<(usize, Result<f64>)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|w| {
+                    let jobs = &jobs;
+                    let run = &run;
+                    scope.spawn(move || {
+                        jobs.iter()
+                            .enumerate()
+                            .skip(w)
+                            .step_by(threads)
+                            .map(|(idx, job)| (idx, run(job)))
+                            .collect()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("static worker panicked")).collect()
+        });
+        for (idx, r) in chunks.into_iter().flatten() {
+            times[idx] = r?;
+        }
+    }
+    let mut totals = vec![0.0f64; candidates.len()];
+    // Accumulate in (candidate, step) order — fixed regardless of which
+    // worker produced each value.
+    for (idx, &(ci, _)) in jobs.iter().enumerate() {
+        totals[ci] += times[idx];
+    }
+    Ok(totals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::moe::ParallelDegrees;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn drift_is_symmetric_bounded_and_zero_on_identical() {
+        let mut rng = Rng::new(0xd21f7);
+        for case in 0..200 {
+            let n = rng.range(1, 8);
+            let p: Vec<usize> = (0..n).map(|_| rng.usize(100)).collect();
+            let q: Vec<usize> = (0..n).map(|_| rng.usize(100)).collect();
+            let d = drift(&p, &q);
+            assert_eq!(d, drift(&q, &p), "symmetry, case {case}: {p:?} {q:?}");
+            assert!((0.0..=1.0).contains(&d), "bounds, case {case}: {d} {p:?} {q:?}");
+            assert_eq!(drift(&p, &p), 0.0, "identity, case {case}");
+        }
+        // All-zero reads as uniform: zero drift against an even vector,
+        // maximal-ish against a fully concentrated one.
+        assert_eq!(drift(&[0, 0, 0], &[5, 5, 5]), 0.0);
+        let concentrated = drift(&[0, 0, 0, 0], &[9, 0, 0, 0]);
+        assert!((concentrated - 0.75).abs() < 1e-12, "{concentrated}");
+        // Disjoint supports are maximally far apart.
+        assert_eq!(drift(&[7, 0], &[0, 3]), 1.0);
+        assert_eq!(drift(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn hysteresis_holds_on_constant_traces_and_converges_after_regime_change() {
+        let mut rng = Rng::new(0x4b1d);
+        for case in 0..50 {
+            let n = rng.range(2, 8);
+            let a: Vec<usize> = (0..n).map(|_| 1 + rng.usize(50)).collect();
+            // A genuinely different regime: rotate and concentrate.
+            let mut b = vec![0usize; n];
+            b[case % n] = 100 * n;
+            if drift(&a, &b) < 0.3 {
+                continue;
+            }
+            let mut h = Hysteresis::new(0.25);
+            assert!(h.observe(&a).0, "first observation always decides");
+            for _ in 0..10 {
+                let (re, d) = h.observe(&a);
+                assert!(!re && d == 0.0, "constant trace must never re-decide, case {case}");
+            }
+            // Sustained regime change: the very next observation crosses
+            // the band, re-anchors, and the new regime is then stable.
+            let (re, d) = h.observe(&b);
+            assert!(re && d >= 0.25, "regime change must re-decide, case {case} ({d})");
+            for _ in 0..10 {
+                assert!(!h.observe(&b).0, "converged regime must hold, case {case}");
+            }
+        }
+        // threshold = 0: every observation re-decides.
+        let mut h0 = Hysteresis::new(0.0);
+        for _ in 0..5 {
+            assert!(h0.observe(&[3, 3, 3]).0);
+        }
+    }
+
+    fn drive_fixture() -> (MoeLayerConfig, ClusterTopology, PerfModel) {
+        let cfg = MoeLayerConfig::test_default();
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+        let par = ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 };
+        let model = PerfModel::fit(&cluster, par).unwrap();
+        (cfg, cluster, model)
+    }
+
+    fn constant_spec(steps: usize) -> TraceSpec {
+        use crate::util::json::Json;
+        TraceSpec::from_json(
+            &Json::parse(&format!(r#"{{"name": "const", "steps": {steps}, "seed": 7}}"#)).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn constant_uniform_trace_never_switches() {
+        let (cfg, cluster, model) = drive_fixture();
+        let spec = constant_spec(5);
+        let cands = default_candidates(&predict_with_loads(&model, &cfg, None));
+        let out =
+            drive(&spec, &cfg, &cluster, &model, &cands, &DriveOptions::default()).unwrap();
+        // Only the anchor-setting first observation decides; after that
+        // warm-up alignment the schedule must hold dead steady (flap
+        // protection is the whole point of the band).
+        assert_eq!(out.redecisions, 1, "{}", out.decision_log());
+        assert!(out.switches <= 1, "{}", out.decision_log());
+        let held = out.steps[1].kind;
+        assert!(out.steps.iter().skip(1).all(|d| d.kind == held), "{}", out.decision_log());
+        assert!(out.steps.iter().skip(1).all(|d| d.drift == 0.0));
+        assert_eq!(out.statics.len(), cands.len());
+        assert!(out.online_total > 0.0);
+    }
+
+    #[test]
+    fn threshold_zero_redecides_every_step_and_logs_are_thread_invariant() {
+        let (cfg, cluster, model) = drive_fixture();
+        let spec = constant_spec(4);
+        let cands = default_candidates(&predict_with_loads(&model, &cfg, None));
+        let opts = DriveOptions { threshold: 0.0, threads: 1, ..Default::default() };
+        let a = drive(&spec, &cfg, &cluster, &model, &cands, &opts).unwrap();
+        assert!(a.steps.iter().skip(1).all(|d| d.redecided), "{}", a.decision_log());
+        assert_eq!(a.redecisions, spec.steps - 1);
+        // Same inputs → byte-identical logs, at any thread count.
+        let b = drive(&spec, &cfg, &cluster, &model, &cands, &opts).unwrap();
+        assert_eq!(a.decision_log(), b.decision_log());
+        let opts4 = DriveOptions { threads: 4, ..opts };
+        let c = drive(&spec, &cfg, &cluster, &model, &cands, &opts4).unwrap();
+        assert_eq!(a.decision_log(), c.decision_log());
+        // The log round-trips its own shape: one header, a row per step,
+        // a row per static, one summary.
+        assert_eq!(a.decision_log().lines().count(), 1 + spec.steps + cands.len() + 1);
+    }
+}

@@ -17,10 +17,12 @@ pub mod bench;
 pub mod cluster;
 pub mod comm;
 pub mod config;
+pub mod control;
 pub mod moe;
 pub mod perfmodel;
 pub mod runtime;
 pub mod schedule;
 pub mod sim;
+pub mod traffic;
 pub mod train;
 pub mod util;

@@ -10,12 +10,17 @@
 //!   sweep       Table III sweep on a cluster; summary per schedule
 //!   bench       regenerate paper tables/figures (fig1|fig6|table4|fig7|
 //!               table5|saa|selection|choices|all)
-//!   trace       emit a Chrome trace of one simulated schedule
+//!   trace       emit a Chrome trace of one simulated schedule (or of a
+//!               `drive` run via `--drive outcome.json`)
+//!   drive       online adaptive control: run a drifting-traffic trace,
+//!               re-spanning each step and switching schedule under a
+//!               hysteresis band
 //!
-//! `sim`, `choose` and `sweep` accept `--plan <file>` to load a compiled
-//! plan instead of refitting; `sweep` accepts `--cache-dir` for
+//! `sim`, `choose`, `sweep` and `drive` accept `--plan <file>` to load a
+//! compiled plan instead of refitting; `sweep` accepts `--cache-dir` for
 //! content-addressed incremental re-runs and `--scale K` to densify the
-//! grid.
+//! grid. Every stochastic verb takes `--seed` (0 is a valid seed, not
+//! "auto"; the documented default is 42).
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -53,6 +58,7 @@ fn main() -> ExitCode {
         "sweep" => cmd_sweep(&rest),
         "bench" => cmd_bench(&rest),
         "trace" => cmd_trace(&rest),
+        "drive" => cmd_drive(&rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -81,7 +87,8 @@ fn print_usage() {
          plan     compile a plan artifact (parm plan build)\n  \
          sweep    Table III sweep summary on a cluster\n  \
          bench    regenerate paper tables/figures\n  \
-         trace    emit Chrome trace of a simulated schedule\n\n\
+         trace    emit Chrome trace of a simulated schedule or drive run\n  \
+         drive    online adaptive control over a drifting-traffic trace\n\n\
          run `parm <command> --help` for options"
     );
 }
@@ -117,6 +124,7 @@ const LAYER_SPECS: &[Spec] = &[
         "plan",
         "compiled plan artifact (`parm plan build`); predictions load without refitting",
     ),
+    Spec::opt_default("seed", "42", "PRNG seed (0 is a valid seed, not \"auto\")"),
     Spec::flag("help", "show help"),
 ];
 
@@ -231,6 +239,7 @@ const GRID_SPECS: &[Spec] = &[
         "wire precision on every retained config: f32|bf16|fp8 or per-leg JSON \
          (legs: dispatch, combine, allgather, wgrad)",
     ),
+    Spec::opt_default("seed", "42", "PRNG seed (0 is a valid seed, not \"auto\")"),
 ];
 
 fn help_guard(a: &Args, cmd: &str, about: &str, specs: &[Spec]) -> bool {
@@ -335,7 +344,8 @@ fn cmd_sim(rest: &[String]) -> Result<()> {
             // Two-pass span selection: run the data-plane gate once on a
             // synthetic batch and feed its measured per-expert loads back
             // into the span policy (covers organic, non-Zipf imbalance).
-            let state = parm::moe::exec::LayerState::random(&cfg, 42)?;
+            let seed = a.get_usize("seed")?.unwrap() as u64;
+            let state = parm::moe::exec::LayerState::random(&cfg, seed)?;
             let loads = parm::moe::exec::measure_expert_loads(&state);
             eprintln!("measured expert loads (max over ranks): {loads:?}");
             Some(loads)
@@ -648,7 +658,17 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
         eprintln!("wrote per-case CSV to {path}");
     }
     if let Some(path) = a.get("bench-json") {
-        write_sweep_bench_json(path, &configs, &cluster, &results, threads, run_secs, &stats)?;
+        let seed = a.get_usize("seed")?.unwrap() as u64;
+        write_sweep_bench_json(
+            path,
+            &configs,
+            &cluster,
+            &results,
+            threads,
+            run_secs,
+            &stats,
+            seed,
+        )?;
     }
     Ok(())
 }
@@ -660,6 +680,7 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
 /// cases) so `--bench-json` never multiplies a large grid's runtime, and
 /// its output is cross-checked against the main run's rows (the full
 /// determinism property lives in the sweep tests).
+#[allow(clippy::too_many_arguments)]
 fn write_sweep_bench_json(
     path: &str,
     configs: &[MoeLayerConfig],
@@ -668,6 +689,7 @@ fn write_sweep_bench_json(
     threads: usize,
     par_s: f64,
     stats: &SweepStats,
+    seed: u64,
 ) -> Result<()> {
     use parm::util::json::Json;
     let sample = configs.len().min(64);
@@ -688,6 +710,7 @@ fn write_sweep_bench_json(
     let j = Json::obj(vec![
         ("cluster", Json::str(&cluster.name)),
         ("wire", Json::str(&wire_id)),
+        ("seed", Json::num(seed as f64)),
         ("cases", Json::num(cases)),
         ("threads", Json::num(threads as f64)),
         ("seq_sample_cases", Json::num(sample as f64)),
@@ -778,8 +801,31 @@ fn cmd_trace(rest: &[String]) -> Result<()> {
     let mut specs = LAYER_SPECS.to_vec();
     specs.push(Spec::opt_default("schedule", "s2", "schedule to trace"));
     specs.push(Spec::opt_default("out", "trace.json", "Chrome trace output path"));
+    specs.push(Spec::opt(
+        "drive",
+        "render a `parm drive --json` outcome instead: one span per step, with instant \
+         markers on schedule-switch and re-span events",
+    ));
     let a = Args::parse(rest, &specs)?;
     if help_guard(&a, "trace", "emit a Chrome trace of one iteration", &specs) {
+        return Ok(());
+    }
+    if let Some(path) = a.get("drive") {
+        // Drive-run rendering: the outcome JSON already carries every
+        // per-step decision, so no re-simulation happens here.
+        use parm::util::json::Json;
+        let text = std::fs::read_to_string(path)?;
+        let outcome = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let trace = parm::sim::trace::chrome_drive_trace(&outcome)?;
+        std::fs::write(a.req("out")?, trace.to_string())?;
+        let steps = outcome.req_arr("steps")?;
+        let switches = steps.iter().filter(|s| s.get("switched") == &Json::Bool(true)).count();
+        let respans = steps.iter().filter(|s| s.get("respan") == &Json::Bool(true)).count();
+        println!(
+            "{} drive steps ({switches} switch markers, {respans} re-span markers) → {}",
+            steps.len(),
+            a.req("out")?
+        );
         return Ok(());
     }
     let (cfg, cluster) = layer_from(&a)?;
@@ -815,5 +861,105 @@ fn cmd_trace(rest: &[String]) -> Result<()> {
         a.req("out")?
     );
     println!("backward region: {bwd_comm} comm + {bwd_compute} compute bwd.* tasks");
+    Ok(())
+}
+
+fn cmd_drive(rest: &[String]) -> Result<()> {
+    let mut specs = LAYER_SPECS.to_vec();
+    // The layer group's `--seed` has a default; drive's contract is "absent
+    // means the trace spec's own seed", so re-declare it defaultless.
+    specs.retain(|s| s.name != "seed");
+    specs.extend_from_slice(&[
+        Spec::opt("trace", "trace spec JSON (required; see examples/trace_*.json)"),
+        Spec::opt("steps", "override the trace's step count"),
+        Spec::opt_default(
+            "threshold",
+            "0.25",
+            "hysteresis band in total-variation units (0 = re-decide every step)",
+        ),
+        Spec::opt_default(
+            "switch-cost",
+            "0.5",
+            "schedule-switch cost as a fraction of the switching step's iteration time",
+        ),
+        Spec::opt("seed", "override the trace spec's seed (0 is a valid seed, not \"auto\")"),
+        Spec::opt_default("threads", "1", "worker threads for the static baselines"),
+        Spec::opt("log", "write the per-step decision log to PATH"),
+        Spec::opt("json", "write the full outcome JSON to PATH (feeds `parm trace --drive`)"),
+        Spec::opt(
+            "bench-json",
+            "merge the online-vs-static summary into the sweep bench JSON at PATH",
+        ),
+    ]);
+    let a = Args::parse(rest, &specs)?;
+    if help_guard(
+        &a,
+        "drive",
+        "online adaptive control: re-span every step, switch schedule under a hysteresis band",
+        &specs,
+    ) {
+        return Ok(());
+    }
+    let (cfg, cluster) = layer_from(&a)?;
+    let mut spec = parm::config::TraceSpec::load(a.req("trace")?)?;
+    if let Some(steps) = a.get_usize("steps")? {
+        anyhow::ensure!(steps >= 1, "--steps must be ≥ 1");
+        spec.steps = steps;
+        spec.zero_steps.retain(|&s| s < steps);
+    }
+    // Plan-aware warm fits: with `--plan` no fitting happens at all — the
+    // controller re-decides from the artifact's frozen α-β tables.
+    let model = match plan_from(&a, &cluster)? {
+        Some(plan) => plan.model_for(cfg.par).cloned().ok_or_else(|| {
+            anyhow!(
+                "--plan artifact lacks a fitted model for layout p={} mp={} esp={} — rebuild \
+                 it with `parm plan build` over this grid",
+                cfg.par.p,
+                cfg.par.n_mp,
+                cfg.par.n_esp
+            )
+        })?,
+        None => PerfModel::fit(&cluster, cfg.par)?,
+    };
+    let threshold = a.get_f64("threshold")?.unwrap();
+    let switch_frac = a.get_f64("switch-cost")?.unwrap();
+    anyhow::ensure!(threshold >= 0.0, "--threshold must be ≥ 0");
+    anyhow::ensure!(switch_frac >= 0.0, "--switch-cost must be ≥ 0");
+    let threads = a.get_usize("threads")?.unwrap();
+    anyhow::ensure!((1..=1024).contains(&threads), "--threads must be in 1..=1024");
+    let opts = parm::control::DriveOptions {
+        threshold,
+        switch_frac,
+        threads,
+        seed: a.get_usize("seed")?.map(|s| s as u64),
+    };
+    let pred0 = selection::predict_with_loads(&model, &cfg, None);
+    let candidates = parm::control::default_candidates(&pred0);
+    let outcome = parm::control::drive(&spec, &cfg, &cluster, &model, &candidates, &opts)?;
+    let log = outcome.decision_log();
+    print!("{log}");
+    let (best_kind, best_total) = outcome.best_static();
+    println!(
+        "online {} vs best static {} ({}): {:.3}× · {} switches · {} re-decisions over {} steps",
+        fmt_seconds(outcome.online_total),
+        fmt_seconds(best_total),
+        best_kind.label(),
+        best_total / outcome.online_total,
+        outcome.switches,
+        outcome.redecisions,
+        outcome.steps.len()
+    );
+    if let Some(path) = a.get("log") {
+        std::fs::write(path, &log)?;
+        eprintln!("wrote decision log to {path}");
+    }
+    if let Some(path) = a.get("json") {
+        std::fs::write(path, outcome.to_json().to_pretty())?;
+        eprintln!("wrote drive outcome JSON to {path}");
+    }
+    if let Some(path) = a.get("bench-json") {
+        parm::bench::merge_drive_summary(Path::new(path), &parm::bench::drive_summary(&outcome))?;
+        eprintln!("merged drive summary into {path}");
+    }
     Ok(())
 }

@@ -181,9 +181,9 @@ fn sp_pipeline_fitted(
     chunks: usize,
     ffn_scale: f64,
     gpu_flops: f64,
+    loads: Option<&[usize]>,
 ) -> f64 {
-    let cap = c.t_pausemp();
-    let spans = ops::sp_spans(c, cap, ops::sp_clamp_chunks(c, chunks));
+    let spans = policy_spans(c, chunks, loads);
     // Each direction is priced at its own wire leg's compressed volume.
     let leg = |span: (usize, usize), leg: WireLeg| {
         model.predict(
@@ -193,9 +193,30 @@ fn sp_pipeline_fitted(
     };
     let dispatch = |span: (usize, usize)| leg(span, WireLeg::Dispatch);
     let combine = |span: (usize, usize)| leg(span, WireLeg::Combine);
-    let ffn =
-        |span: (usize, usize)| ffn_scale * ops::sp_chunk_flops_span(c, cap, span) / gpu_flops;
+    let ffn = |span: (usize, usize)| ffn_scale * policy_flops(c, span, loads) / gpu_flops;
     super::closedform::pipeline_makespan_asym(&spans, dispatch, combine, ffn)
+}
+
+/// The span policy the fitted pipeline estimates share with the builders:
+/// measured loads when the re-decide entry supplied them, the expected
+/// profile otherwise — so a warm re-run of Algorithm 1 evaluates exactly
+/// the spans the online controller would lower next step.
+fn policy_spans(c: &MoeLayerConfig, chunks: usize, loads: Option<&[usize]>) -> Vec<(usize, usize)> {
+    let cap = c.t_pausemp();
+    let clamped = ops::sp_clamp_chunks(c, chunks);
+    match loads {
+        Some(l) => ops::sp_spans_measured(cap, clamped, l),
+        None => ops::sp_spans(c, cap, clamped),
+    }
+}
+
+/// The matching per-chunk FFN pricing (see [`policy_spans`]).
+fn policy_flops(c: &MoeLayerConfig, span: (usize, usize), loads: Option<&[usize]>) -> f64 {
+    let cap = c.t_pausemp();
+    match loads {
+        Some(l) => ops::sp_chunk_flops_measured(c, cap, span, l),
+        None => ops::sp_chunk_flops_span(c, cap, span),
+    }
 }
 
 /// Fitted SP2 pipeline region: the asymmetric recurrence with each chunk's
@@ -210,9 +231,9 @@ fn sp2_pipeline_fitted(
     chunks: usize,
     ffn_scale: f64,
     gpu_flops: f64,
+    loads: Option<&[usize]>,
 ) -> f64 {
-    let cap = c.t_pausemp();
-    let spans = ops::sp_spans(c, cap, ops::sp_clamp_chunks(c, chunks));
+    let spans = policy_spans(c, chunks, loads);
     let dispatch = |span: (usize, usize)| {
         model.predict(
             CollKind::A2aFused,
@@ -231,14 +252,30 @@ fn sp2_pipeline_fitted(
                 * wire_factor(c, WireLeg::Combine),
         )
     };
-    let ffn =
-        |span: (usize, usize)| ffn_scale * ops::sp_chunk_flops_span(c, cap, span) / gpu_flops;
+    let ffn = |span: (usize, usize)| ffn_scale * policy_flops(c, span, loads) / gpu_flops;
     super::closedform::pipeline_makespan_asym(&spans, &dispatch, &combine, ffn)
 }
 
 /// Evaluate the closed forms for one configuration.
 pub fn predict(model: &PerfModel, c: &MoeLayerConfig) -> Prediction {
+    predict_with_loads(model, c, None)
+}
+
+/// The online controller's warm re-decide entry point: Algorithm 1 with
+/// the pipelined families' spans and every FFN term priced at a measured
+/// per-expert load vector instead of the expected `--skew` profile. The
+/// fitted collective models are reused as-is (warm fits — no re-fit per
+/// step), so a re-decision costs only closed-form evaluation. `None` or an
+/// all-zero vector (a step that routed no tokens) falls back to the
+/// expected profile, making `predict_with_loads(m, c, None)` bit-identical
+/// to [`predict`].
+pub fn predict_with_loads(
+    model: &PerfModel,
+    c: &MoeLayerConfig,
+    loads: Option<&[usize]>,
+) -> Prediction {
     debug_assert_eq!(model.par, c.par, "model fitted for different degrees");
+    let loads = loads.filter(|l| l.iter().sum::<usize>() > 0);
     // Per-member volumes (bytes), shared with the schedule builders.
     let x_ag_esp = ops::bytes_esp_ag_per_rank(c) * c.par.n_esp as f64; // gathered output
     let x_ar_esp = ops::bytes_esp_ar_total(c);
@@ -263,9 +300,12 @@ pub fn predict(model: &PerfModel, c: &MoeLayerConfig) -> Prediction {
     // The SAA's AlltoAll + AllGather forwards all ride the combine leg.
     let t_d2 = fused_d + model.predict(CollKind::SaaS2, x_fused * w_c);
     // Bottleneck-node FFN: `model.gpu_flops` is the min over used nodes.
-    let t_ffn = ops::expert_flops(c, ops::expert_tokens_per_rank(c, true))
-        * ops::ffn_load_scale(c, c.t_pausemp())
-        / model.gpu_flops;
+    let ffn_scale = match loads {
+        Some(l) => ops::ffn_load_scale_measured(c, c.t_pausemp(), l),
+        None => ops::ffn_load_scale(c, c.t_pausemp()),
+    };
+    let t_ffn =
+        ops::expert_flops(c, ops::expert_tokens_per_rank(c, true)) * ffn_scale / model.gpu_flops;
 
     let ag = model.predict(CollKind::AgMp, x_ag_mp_s1 * w_g);
     let x_ag_mp_s2 = ops::bytes_mp_ag_s2_per_rank(c) * c.par.n_mp as f64;
@@ -303,26 +343,26 @@ pub fn predict(model: &PerfModel, c: &MoeLayerConfig) -> Prediction {
     // + transposed region at 2× compute + adjoint-of-split AG, and the
     // exposed wgrad-AR share (deferred across the final AG).
     let sp_iter_at = |r: usize| {
-        sp_pipeline_fitted(model, c, r, 1.0, bottleneck.1)
-            + sp_pipeline_fitted(model, c, r, 2.0, bottleneck.1)
+        sp_pipeline_fitted(model, c, r, 1.0, bottleneck.1, loads)
+            + sp_pipeline_fitted(model, c, r, 2.0, bottleneck.1, loads)
             + 3.0 * ag
             + exposed(t_wgrad_ar, ag)
     };
     let (sp_chunks, t_sp_iter) = super::closedform::argmin_chunks(c, sp_iter_at);
-    let t_sp = sp_pipeline_fitted(model, c, sp_chunks, 1.0, bottleneck.1) + ag;
+    let t_sp = sp_pipeline_fitted(model, c, sp_chunks, 1.0, bottleneck.1, loads) + ag;
 
     // SP2: same bottleneck-node argument — the chunked SAAs are global
     // collectives, so the slowest-GPU node's estimate is the fleet max.
     // Backward is structurally an SP region (plain transposed AlltoAlls,
     // no SAA) bracketed by the capacity-volume MP-ReduceScatter/AllGather.
     let sp2_iter_at = |r: usize| {
-        sp2_pipeline_fitted(model, c, r, 1.0, bottleneck.1)
-            + sp_pipeline_fitted(model, c, r, 2.0, bottleneck.1)
+        sp2_pipeline_fitted(model, c, r, 1.0, bottleneck.1, loads)
+            + sp_pipeline_fitted(model, c, r, 2.0, bottleneck.1, loads)
             + 2.0 * ag2
             + exposed(t_wgrad_ar, ag2)
     };
     let (sp2_chunks, t_sp2_iter) = super::closedform::argmin_chunks(c, sp2_iter_at);
-    let t_sp2 = sp2_pipeline_fitted(model, c, sp2_chunks, 1.0, bottleneck.1);
+    let t_sp2 = sp2_pipeline_fitted(model, c, sp2_chunks, 1.0, bottleneck.1, loads);
 
     Prediction {
         t_baseline,
@@ -531,6 +571,37 @@ mod tests {
                 || matches!(pick, ScheduleKind::PipelinedS2 { chunks } if chunks > 1),
             "expected a pipelined family on compute-heavy config, got {pick:?}"
         );
+    }
+
+    #[test]
+    fn warm_redecide_matches_predict_without_loads_and_reacts_to_skewed_loads() {
+        let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+        let par = ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 };
+        let model = PerfModel::fit(&cluster, par).unwrap();
+        let mut c = cfg(8, 2, 2, 2048, 1.2);
+        c.b = 8;
+        c.h = 32768;
+        let base = predict(&model, &c);
+        // None and all-zero loads both fall back to the expected profile
+        // bit-for-bit.
+        let none = predict_with_loads(&model, &c, None);
+        assert_eq!(format!("{none:?}"), format!("{base:?}"));
+        let zeros = vec![0usize; c.e];
+        let z = predict_with_loads(&model, &c, Some(&zeros));
+        assert_eq!(format!("{z:?}"), format!("{base:?}"));
+        // A head-heavy measurement (one saturated expert, the rest cold)
+        // concentrates compute below the dense profile, so the measured
+        // FFN term drops and the pipelined iteration estimate moves.
+        let cap = c.t_pausemp();
+        let mut hot = vec![cap / 8; c.e];
+        hot[0] = cap;
+        let skewed = predict_with_loads(&model, &c, Some(&hot));
+        let want = ops::ffn_load_scale_measured(&c, cap, &hot)
+            * ops::expert_flops(&c, ops::expert_tokens_per_rank(&c, true))
+            / model.gpu_flops;
+        assert!((skewed.t_ffn - want).abs() < 1e-12, "{skewed:?}");
+        assert!(skewed.t_ffn < base.t_ffn, "{skewed:?} vs {base:?}");
+        assert!(skewed.t_sp_iter != base.t_sp_iter, "{skewed:?} vs {base:?}");
     }
 
     #[test]

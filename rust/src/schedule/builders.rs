@@ -45,19 +45,49 @@ fn sp_policy_flops(c: &MoeLayerConfig, span: (usize, usize), measured: Option<&[
     }
 }
 
+/// The matching monolithic-FFN pricing: the measured load scale when a
+/// profile is supplied ([`ops::ffn_load_scale_measured`]), the expected
+/// one otherwise — so Baseline/S1/S2 and the SP chunks price compute from
+/// the same profile whichever source it came from.
+fn ffn_scale_policy(c: &MoeLayerConfig, cap: usize, flop_loads: Option<&[usize]>) -> f64 {
+    match flop_loads {
+        Some(loads) => ops::ffn_load_scale_measured(c, cap, loads),
+        None => ops::ffn_load_scale(c, cap),
+    }
+}
+
 /// [`forward_ops`] with an optional **measured** per-expert load profile
 /// (the two-pass span mode, `--spans measured`): when provided and the
 /// schedule is the load-aware SP family, chunk spans are FLOPs-balanced
-/// from the measurement ([`ops::sp_spans_measured`]) and the chunk FFNs
-/// priced by it ([`ops::sp_chunk_flops_measured`]) — covering organic
-/// imbalance the expected Zipf profile cannot see. All-zero measurements
-/// are ignored (expected-profile behaviour).
+/// from the measurement ([`ops::sp_spans_measured`]) and ALL expert
+/// compute — chunk FFNs and the monolithic schedules' FFN alike — priced
+/// by it, covering organic imbalance the expected Zipf profile cannot
+/// see. All-zero measurements are ignored (expected-profile behaviour).
 pub fn forward_ops_measured(
     kind: ScheduleKind,
     c: &MoeLayerConfig,
     measured: Option<&[usize]>,
 ) -> Vec<Op> {
-    let measured = measured.filter(|l| l.iter().sum::<usize>() > 0);
+    forward_ops_traffic(kind, c, measured, measured)
+}
+
+/// The two-profile core behind [`forward_ops_measured`] — the online
+/// controller's view of one step: `span_loads` is the *stale* profile the
+/// chunk spans were planned from (the previous step's measurement — the
+/// only thing an online re-span can know), `flop_loads` the profile the
+/// step *actually* routes, pricing every expert-FFN op. Communication
+/// volumes stay dense either way (zero-padded capacity slabs move
+/// regardless of fill), so the two profiles only differ in pipeline
+/// balance — exactly the gap an adaptive re-span closes. Passing the same
+/// profile for both recovers the two-pass measured mode.
+pub fn forward_ops_traffic(
+    kind: ScheduleKind,
+    c: &MoeLayerConfig,
+    span_loads: Option<&[usize]>,
+    flop_loads: Option<&[usize]>,
+) -> Vec<Op> {
+    let measured = span_loads.filter(|l| l.iter().sum::<usize>() > 0);
+    let flop_loads = flop_loads.filter(|l| l.iter().sum::<usize>() > 0);
     let d = c.dtype_bytes as f64;
     match kind {
         ScheduleKind::Parm => panic!("resolve Parm to S1/S2 via the perf model first"),
@@ -72,7 +102,7 @@ pub fn forward_ops_measured(
                 Op::EpAlltoAll { bytes_per_pair: ops::bytes_ep_a2a_per_pair(c) },
                 Op::ExpertFfn {
                     flops_per_rank: ops::expert_flops(c, ops::expert_tokens_per_rank(c, false))
-                        * ops::ffn_load_scale(c, c.t()),
+                        * ffn_scale_policy(c, c.t(), flop_loads),
                 },
                 Op::EspAllReduce { total_bytes: ops::bytes_esp_ar_total(c) },
                 Op::EpAlltoAll { bytes_per_pair: ops::bytes_ep_a2a_per_pair(c) },
@@ -99,7 +129,7 @@ pub fn forward_ops_measured(
                 Op::FusedAlltoAll { bytes_per_pair: ops::bytes_fused_a2a_per_pair(c) },
                 Op::ExpertFfn {
                     flops_per_rank: ops::expert_flops(c, ops::expert_tokens_per_rank(c, true))
-                        * ops::ffn_load_scale(c, c.t_pausemp()),
+                        * ffn_scale_policy(c, c.t_pausemp(), flop_loads),
                 },
                 Op::FusedAlltoAll { bytes_per_pair: ops::bytes_fused_a2a_per_pair(c) },
                 Op::LocalCombine { flops_per_rank: combine_elems },
@@ -124,7 +154,7 @@ pub fn forward_ops_measured(
             } else {
                 ops::chunk_spans(c.t_pausemp(), ops::sp_clamp_chunks(c, chunks))
             };
-            let chunk_flops = |span: (usize, usize)| sp_policy_flops(c, span, measured);
+            let chunk_flops = |span: (usize, usize)| sp_policy_flops(c, span, flop_loads);
             let r = spans.len();
             // S1's prologue/epilogue with the dispatch→FFN→combine middle
             // split into r capacity chunks. Emission order D_0, then per
@@ -182,7 +212,7 @@ pub fn forward_ops_measured(
             let combine_elems =
                 (c.e * c.t_pausemp() * c.m) as f64 * (c.par.n_esp.saturating_sub(1)) as f64;
             let spans = sp_policy_spans(c, chunks, measured);
-            let chunk_flops = |span: (usize, usize)| sp_policy_flops(c, span, measured);
+            let chunk_flops = |span: (usize, usize)| sp_policy_flops(c, span, flop_loads);
             let r = spans.len();
             let mut v = vec![
                 Op::Gate { flops_per_rank: ops::gate_flops(c, c.tokens()) },
@@ -233,7 +263,7 @@ pub fn forward_ops_measured(
                 Op::FusedAlltoAll { bytes_per_pair: ops::bytes_fused_a2a_per_pair(c) },
                 Op::ExpertFfn {
                     flops_per_rank: ops::expert_flops(c, ops::expert_tokens_per_rank(c, true))
-                        * ops::ffn_load_scale(c, c.t_pausemp()),
+                        * ffn_scale_policy(c, c.t_pausemp(), flop_loads),
                 },
                 // Second fused AlltoAll overlapped with the MP-AllGather of
                 // the (E, T/N_MP, M) combine output — AG_MP(ETM) in Eq. 14.
@@ -294,7 +324,31 @@ pub fn backward_ops_overlap(
     measured: Option<&[usize]>,
     overlap: bool,
 ) -> Vec<Op> {
-    let measured = measured.filter(|l| l.iter().sum::<usize>() > 0);
+    backward_ops_traffic_overlap(kind, c, measured, measured, overlap)
+}
+
+/// Two-profile backward program (see [`forward_ops_traffic`]): spans from
+/// the stale `span_loads`, all gradient FFN compute priced at the actual
+/// `flop_loads`.
+pub fn backward_ops_traffic(
+    kind: ScheduleKind,
+    c: &MoeLayerConfig,
+    span_loads: Option<&[usize]>,
+    flop_loads: Option<&[usize]>,
+) -> Vec<Op> {
+    backward_ops_traffic_overlap(kind, c, span_loads, flop_loads, true)
+}
+
+/// [`backward_ops_traffic`] with the wgrad-AllReduce overlap knob.
+pub fn backward_ops_traffic_overlap(
+    kind: ScheduleKind,
+    c: &MoeLayerConfig,
+    span_loads: Option<&[usize]>,
+    flop_loads: Option<&[usize]>,
+    overlap: bool,
+) -> Vec<Op> {
+    let measured = span_loads.filter(|l| l.iter().sum::<usize>() > 0);
+    let flop_loads = flop_loads.filter(|l| l.iter().sum::<usize>() > 0);
     let d = c.dtype_bytes as f64;
     let wgrad_ar = Op::BwdWgradAllReduce { bytes_per_rank: ops::bytes_wgrad_per_rank(c), overlap };
     match kind {
@@ -303,7 +357,7 @@ pub fn backward_ops_overlap(
             let gathered_tokens = c.tokens() * c.par.n_esp;
             let split_bytes = (gathered_tokens * c.m) as f64 * d / c.par.n_esp as f64;
             let ffn = ops::expert_flops(c, ops::expert_tokens_per_rank(c, false))
-                * ops::ffn_load_scale(c, c.t());
+                * ffn_scale_policy(c, c.t(), flop_loads);
             vec![
                 // Adjoint of the ESP-Split: gather the output-gradient
                 // slices back to the gathered-token view (Fig 3 note).
@@ -336,7 +390,7 @@ pub fn backward_ops_overlap(
             let combine_elems =
                 (c.e * c.t_pausemp() * c.m) as f64 * (c.par.n_esp.saturating_sub(1)) as f64;
             let ffn = ops::expert_flops(c, ops::expert_tokens_per_rank(c, true))
-                * ops::ffn_load_scale(c, c.t_pausemp());
+                * ffn_scale_policy(c, c.t_pausemp(), flop_loads);
             vec![
                 Op::MpReduceScatter {
                     total_bytes: ops::bytes_mp_ag_s1_per_rank(c) * c.par.n_mp as f64,
@@ -363,7 +417,7 @@ pub fn backward_ops_overlap(
             let combine_elems =
                 (c.e * c.t_pausemp() * c.m) as f64 * (c.par.n_esp.saturating_sub(1)) as f64;
             let ffn = ops::expert_flops(c, ops::expert_tokens_per_rank(c, true))
-                * ops::ffn_load_scale(c, c.t_pausemp());
+                * ffn_scale_policy(c, c.t_pausemp(), flop_loads);
             vec![
                 Op::Ungate { flops_per_rank: 2.0 * (c.tokens() * c.k * c.m) as f64 },
                 Op::LocalCombine { flops_per_rank: 2.0 * combine_elems },
@@ -403,7 +457,7 @@ pub fn backward_ops_overlap(
             } else {
                 ops::chunk_spans(c.t_pausemp(), ops::sp_clamp_chunks(c, chunks))
             };
-            let chunk_flops = |span: (usize, usize)| sp_policy_flops(c, span, measured);
+            let chunk_flops = |span: (usize, usize)| sp_policy_flops(c, span, flop_loads);
             let r = spans.len();
             // The region transposed: backward dispatch k moves the bytes of
             // forward combine k (dY in), backward combine k the bytes of
@@ -451,7 +505,7 @@ pub fn backward_ops_overlap(
             let combine_elems =
                 (c.e * c.t_pausemp() * c.m) as f64 * (c.par.n_esp.saturating_sub(1)) as f64;
             let spans = sp_policy_spans(c, chunks, measured);
-            let chunk_flops = |span: (usize, usize)| sp_policy_flops(c, span, measured);
+            let chunk_flops = |span: (usize, usize)| sp_policy_flops(c, span, flop_loads);
             let r = spans.len();
             // Adjoint of the chunked SAA: ONE up-front MP-ReduceScatter
             // (the aggregate of the per-chunk MP-AllGather forwards), then
@@ -508,8 +562,20 @@ pub fn iteration_ops_measured(
     c: &MoeLayerConfig,
     measured: Option<&[usize]>,
 ) -> Vec<Op> {
-    let mut v = forward_ops_measured(kind, c, measured);
-    v.extend(backward_ops_measured(kind, c, measured));
+    iteration_ops_traffic(kind, c, measured, measured)
+}
+
+/// Two-profile training-iteration program (see [`forward_ops_traffic`]):
+/// the online controller's step — spans planned from the stale
+/// `span_loads`, compute priced at the actual `flop_loads`.
+pub fn iteration_ops_traffic(
+    kind: ScheduleKind,
+    c: &MoeLayerConfig,
+    span_loads: Option<&[usize]>,
+    flop_loads: Option<&[usize]>,
+) -> Vec<Op> {
+    let mut v = forward_ops_traffic(kind, c, span_loads, flop_loads);
+    v.extend(backward_ops_traffic(kind, c, span_loads, flop_loads));
     v
 }
 
@@ -843,6 +909,68 @@ mod tests {
         assert_eq!(
             it.len(),
             measured.len() + backward_ops_measured(kind, &c, Some(&loads[..])).len()
+        );
+    }
+
+    #[test]
+    fn traffic_profiles_split_spans_from_pricing() {
+        // The online controller's step: spans planned from a STALE profile,
+        // compute priced at the ACTUAL one. Spans must follow span_loads
+        // only; total FFN flops must follow flop_loads only.
+        let c = cfg();
+        let cap = c.t_pausemp();
+        let stale: Vec<usize> = (0..c.e).map(|j| cap / (j + 1)).collect();
+        let actual: Vec<usize> = (0..c.e).map(|j| cap / (c.e - j)).collect();
+        let kind = ScheduleKind::Pipelined { chunks: 3 };
+        let dispatch_bytes = |ops: &[Op]| -> Vec<f64> {
+            ops.iter()
+                .filter_map(|o| match *o {
+                    Op::SpDispatch { bytes_per_pair, .. } => Some(bytes_per_pair),
+                    _ => None,
+                })
+                .collect()
+        };
+        let ffn_total = |ops: &[Op]| -> f64 {
+            ops.iter()
+                .map(|o| match *o {
+                    Op::SpExpertFfn { flops_per_rank, .. } => flops_per_rank,
+                    _ => 0.0,
+                })
+                .sum()
+        };
+        let two = forward_ops_traffic(kind, &c, Some(&stale), Some(&actual));
+        // Spans track the stale profile.
+        assert_eq!(
+            dispatch_bytes(&two),
+            dispatch_bytes(&forward_ops_measured(kind, &c, Some(&stale))),
+        );
+        // FFN totals track the actual profile (linearity: span-independent).
+        let measured_actual = forward_ops_measured(kind, &c, Some(&actual));
+        assert!(
+            (ffn_total(&two) - ffn_total(&measured_actual)).abs() / ffn_total(&two) < 1e-9,
+        );
+        // Same profile on both sides IS the measured mode.
+        assert_eq!(
+            forward_ops_traffic(kind, &c, Some(&stale), Some(&stale)),
+            forward_ops_measured(kind, &c, Some(&stale)),
+        );
+        // Monolithic schedules price their FFN from flop_loads too.
+        let s1 = forward_ops_traffic(ScheduleKind::S1, &c, None, Some(&actual));
+        let s1_ffn: f64 = s1
+            .iter()
+            .map(|o| match *o {
+                Op::ExpertFfn { flops_per_rank } => flops_per_rank,
+                _ => 0.0,
+            })
+            .sum();
+        let want = ops::expert_flops(&c, ops::expert_tokens_per_rank(&c, true))
+            * ops::ffn_load_scale_measured(&c, cap, &actual);
+        assert!((s1_ffn - want).abs() / want < 1e-12, "{s1_ffn} vs {want}");
+        // And the iteration program concatenates forward + backward.
+        let it = iteration_ops_traffic(kind, &c, Some(&stale), Some(&actual));
+        assert_eq!(
+            it.len(),
+            two.len() + backward_ops_traffic(kind, &c, Some(&stale), Some(&actual)).len()
         );
     }
 

@@ -125,7 +125,23 @@ pub fn simulate_iteration_measured_with_dag(
     cluster: &ClusterTopology,
     measured: Option<&[usize]>,
 ) -> Result<(SimReport, SimDag)> {
-    let ops = builders::iteration_ops_measured(kind, cfg, measured);
+    simulate_iteration_traffic_with_dag(kind, cfg, cluster, measured, measured)
+}
+
+/// Two-profile iteration timing (see
+/// [`crate::schedule::builders::forward_ops_traffic`]): spans planned from
+/// the stale `span_loads` (an online controller can only know the previous
+/// step's measurement), expert compute priced at the actual `flop_loads`.
+/// The online/static fairness contract of `parm drive` rests here: both
+/// sides pass the same `flop_loads`, and only the span source differs.
+pub fn simulate_iteration_traffic_with_dag(
+    kind: ScheduleKind,
+    cfg: &MoeLayerConfig,
+    cluster: &ClusterTopology,
+    span_loads: Option<&[usize]>,
+    flop_loads: Option<&[usize]>,
+) -> Result<(SimReport, SimDag)> {
+    let ops = builders::iteration_ops_traffic(kind, cfg, span_loads, flop_loads);
     let dag = lower_ops(&ops, cfg, cluster)?;
     let report = Simulator::new(cluster).run(&dag);
     Ok((report, dag))

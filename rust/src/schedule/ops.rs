@@ -600,6 +600,60 @@ pub fn ffn_load_scale(c: &MoeLayerConfig, cap: usize) -> f64 {
     }
 }
 
+/// [`ffn_load_scale`]'s pricing under a **measured** (or trace-supplied)
+/// per-expert load vector: the fraction of the dense expert FFN the
+/// measured fill actually computes. Loads are clamped to `cap`; an empty
+/// or all-zero measurement falls back to the expected-profile scale (the
+/// same uniform fallback [`sp_spans_measured`] applies), so a degenerate
+/// gate step never zeroes out the FFN. By linearity the scaled monolithic
+/// FFN equals the sum of [`sp_chunk_flops_measured`] over ANY span
+/// partition — monolithic and chunked schedules price the same profile.
+pub fn ffn_load_scale_measured(c: &MoeLayerConfig, cap: usize, measured: &[usize]) -> f64 {
+    let clamped: Vec<usize> = measured.iter().map(|&l| l.min(cap)).collect();
+    if clamped.iter().all(|&l| l == 0) {
+        return ffn_load_scale(c, cap);
+    }
+    let dense = c.par.n_ep() * c.experts_per_rank() * cap;
+    if dense == 0 {
+        return 1.0;
+    }
+    total_filled(&clamped, 0, cap) as f64 / dense as f64
+}
+
+/// Integer per-expert loads at capacity `cap` from an arbitrary per-expert
+/// **weight** vector (a traffic scenario's instantaneous routing bias) —
+/// the same k-round without-replacement renormalization as
+/// [`expert_load_fractions`], but over supplied weights instead of the
+/// static Zipf curve, and WITHOUT the hottest-expert normalization: the
+/// absolute fill tracks how concentrated the weights are, so total
+/// routed-token mass (and therefore FFN cost) responds to drift, not just
+/// its shape. All-zero weights yield all-zero loads (the degenerate-gate
+/// case downstream fallbacks handle); uniform weights fill every expert to
+/// `cap/f` — the uniform router's expected occupancy.
+pub fn loads_from_weights(c: &MoeLayerConfig, cap: usize, weights: &[f64]) -> Vec<usize> {
+    let w: Vec<f64> = weights.iter().map(|&x| x.max(0.0)).collect();
+    if w.is_empty() || w.iter().sum::<f64>() <= 0.0 {
+        return vec![0; w.len()];
+    }
+    let mut inc = vec![0.0f64; w.len()];
+    for _ in 0..c.k {
+        let denom: f64 = w.iter().zip(&inc).map(|(wj, ij)| wj * (1.0 - ij)).sum();
+        if denom <= 0.0 {
+            break;
+        }
+        for (ij, wj) in inc.iter_mut().zip(&w) {
+            *ij = (*ij + wj * (1.0 - *ij) / denom).min(1.0);
+        }
+    }
+    let kf = c.k as f64 * c.f;
+    inc.iter()
+        .map(|i| {
+            let fill = (i * w.len() as f64 / kf).min(1.0);
+            (fill * cap as f64 + 0.5).floor() as usize
+        })
+        .collect()
+}
+
 // ---- compute volumes (FLOPs per rank) ----------------------------------
 
 /// Gate FLOPs: tokens × M × E MACs (×2), on however many tokens this
@@ -1025,6 +1079,72 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn measured_ffn_scale_matches_fill_and_falls_back() {
+        let c = cfg();
+        let cap = c.t_pausemp();
+        // A fully saturated measurement prices the dense FFN.
+        let full = vec![cap; c.e];
+        assert!((ffn_load_scale_measured(&c, cap, &full) - 1.0).abs() < 1e-12);
+        // Half-filled experts price half the dense FFN.
+        let half: Vec<usize> = vec![cap / 2; c.e];
+        let got = ffn_load_scale_measured(&c, cap, &half);
+        let want = (cap / 2) as f64 / cap as f64;
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        // All-zero (degenerate gate) falls back to the expected profile —
+        // 1.0 with the skew knob off, the Zipf scale with it on.
+        assert_eq!(ffn_load_scale_measured(&c, cap, &[0, 0, 0]), 1.0);
+        assert_eq!(ffn_load_scale_measured(&c, cap, &[]), 1.0);
+        let mut skewed = cfg();
+        skewed.skew = 1.5;
+        assert_eq!(
+            ffn_load_scale_measured(&skewed, cap, &[0; 4]),
+            ffn_load_scale(&skewed, cap)
+        );
+        // Conservation: scaled monolithic FFN == Σ per-chunk measured flops.
+        let measured: Vec<usize> = (0..c.e).map(|j| cap / (j + 1)).collect();
+        let scaled = expert_flops(&c, expert_tokens_per_rank(&c, true))
+            * ffn_load_scale_measured(&c, cap, &measured);
+        for r in [1usize, 2, 4] {
+            let sum: f64 = chunk_spans(cap, r)
+                .iter()
+                .map(|&s| sp_chunk_flops_measured(&c, cap, s, &measured))
+                .sum();
+            assert!((sum - scaled).abs() / scaled < 1e-9, "r={r}: {sum} vs {scaled}");
+        }
+    }
+
+    #[test]
+    fn loads_from_weights_track_concentration() {
+        let c = cfg();
+        let cap = 64;
+        // Uniform weights: every expert filled to cap/f (the uniform
+        // router's expected occupancy), all equal.
+        let uni = loads_from_weights(&c, cap, &vec![1.0; c.e]);
+        assert_eq!(uni.len(), c.e);
+        assert!(uni.windows(2).all(|w| w[0] == w[1]), "{uni:?}");
+        let want = (cap as f64 / c.f + 0.5).floor() as usize;
+        assert_eq!(uni[0], want, "{uni:?}");
+        // Zipf-shaped weights reproduce the expected-profile SHAPE:
+        // monotone nonincreasing, hottest expert saturating under strong
+        // concentration.
+        let zipf: Vec<f64> = (0..c.e).map(|j| ((j + 1) as f64).powf(-2.0)).collect();
+        let skewed = loads_from_weights(&c, cap, &zipf);
+        assert!(skewed.windows(2).all(|w| w[0] >= w[1]), "{skewed:?}");
+        assert!(skewed[0] > skewed[c.e - 1], "{skewed:?}");
+        assert_eq!(skewed[0], cap, "hot expert saturates its capacity block");
+        // Total mass responds to concentration: the skewed profile routes
+        // less aggregate fill than the uniform one (hot expert clipped at
+        // capacity, tail starved).
+        assert!(
+            skewed.iter().sum::<usize>() < uni.iter().sum::<usize>(),
+            "{skewed:?} vs {uni:?}"
+        );
+        // All-zero weights → all-zero loads (degenerate gate step).
+        assert_eq!(loads_from_weights(&c, cap, &[0.0; 4]), vec![0; 4]);
+        assert_eq!(loads_from_weights(&c, cap, &[]), Vec::<usize>::new());
     }
 
     #[test]

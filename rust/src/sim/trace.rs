@@ -2,6 +2,8 @@
 //! for eyeballing overlap structure (e.g. that SAA really interleaves the
 //! AlltoAll phases with the AllGather forwards).
 
+use anyhow::Result;
+
 use crate::sim::dag::{SimDag, TaskKind};
 use crate::sim::engine::SimReport;
 use crate::util::json::Json;
@@ -34,6 +36,73 @@ pub fn chrome_trace(dag: &SimDag, report: &SimReport) -> Json {
     Json::obj(vec![("traceEvents", Json::Arr(events))])
 }
 
+/// Render a `parm drive` outcome document (the `--json` output of
+/// [`crate::control::drive`]) as a Chrome trace: one duration event per
+/// step named after the schedule picked for it, a shorter `switch:*`
+/// duration event charging the modeled switch cost, and global instant
+/// markers at every schedule-switch and chunk re-span step so an online
+/// run is visually auditable. No re-simulation happens here — the outcome
+/// JSON already carries every per-step decision and timing.
+pub fn chrome_drive_trace(outcome: &Json) -> Result<Json> {
+    let steps = outcome
+        .get("steps")
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("drive outcome JSON has no `steps` array"))?;
+    let mut events = Vec::new();
+    let mut ts = 0.0; // seconds of simulated online time so far
+    for s in steps {
+        let step = s.get("step").as_f64().unwrap_or(-1.0);
+        let pick = s.get("pick").as_str().unwrap_or("?");
+        let t_iter = s.get("t_iter").as_f64().ok_or_else(|| {
+            anyhow::anyhow!("drive outcome step {step} has no numeric `t_iter`")
+        })?;
+        let switch_cost = s.get("switch_cost").as_f64().unwrap_or(0.0);
+        let switched = s.get("switched") == &Json::Bool(true);
+        let respan = s.get("respan") == &Json::Bool(true);
+        if switched {
+            events.push(Json::obj(vec![
+                ("name", Json::str(&format!("switch→{pick}"))),
+                ("ph", Json::str("i")),
+                ("s", Json::str("g")),
+                ("pid", Json::num(0.0)),
+                ("tid", Json::num(0.0)),
+                ("ts", Json::num(ts * 1e6)),
+            ]));
+        }
+        if respan {
+            events.push(Json::obj(vec![
+                ("name", Json::str("re-span")),
+                ("ph", Json::str("i")),
+                ("s", Json::str("g")),
+                ("pid", Json::num(0.0)),
+                ("tid", Json::num(0.0)),
+                ("ts", Json::num(ts * 1e6)),
+            ]));
+        }
+        if switch_cost > 0.0 {
+            events.push(Json::obj(vec![
+                ("name", Json::str(&format!("switch:{pick}"))),
+                ("ph", Json::str("X")),
+                ("pid", Json::num(0.0)),
+                ("tid", Json::num(0.0)),
+                ("ts", Json::num(ts * 1e6)),
+                ("dur", Json::num(switch_cost * 1e6)),
+            ]));
+            ts += switch_cost;
+        }
+        events.push(Json::obj(vec![
+            ("name", Json::str(&format!("step {step}: {pick}"))),
+            ("ph", Json::str("X")),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(0.0)),
+            ("ts", Json::num(ts * 1e6)),
+            ("dur", Json::num(t_iter * 1e6)),
+        ]));
+        ts += t_iter;
+    }
+    Ok(Json::obj(vec![("traceEvents", Json::Arr(events))]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -54,5 +123,42 @@ mod tests {
         for e in events {
             assert!(e.get("dur").as_f64().unwrap() > 0.0);
         }
+    }
+
+    #[test]
+    fn drive_trace_marks_switch_and_respan_steps() {
+        let step = |n: f64, pick: &str, switched: bool, respan: bool, cost: f64| {
+            Json::obj(vec![
+                ("step", Json::num(n)),
+                ("pick", Json::str(pick)),
+                ("t_iter", Json::num(2.0)),
+                ("switch_cost", Json::num(cost)),
+                ("switched", Json::Bool(switched)),
+                ("respan", Json::Bool(respan)),
+            ])
+        };
+        let outcome = Json::obj(vec![(
+            "steps",
+            Json::Arr(vec![
+                step(0.0, "s1", false, false, 0.0),
+                step(1.0, "sp(r=4)", true, false, 1.0),
+                step(2.0, "sp(r=4)", false, true, 0.0),
+            ]),
+        )]);
+        let trace = chrome_drive_trace(&outcome).unwrap();
+        let events = trace.get("traceEvents").as_arr().unwrap();
+        // 3 step durations + 1 switch marker + 1 switch-cost slab + 1 re-span.
+        assert_eq!(events.len(), 6);
+        let names: Vec<_> =
+            events.iter().map(|e| e.get("name").as_str().unwrap().to_string()).collect();
+        assert!(names.contains(&"switch→sp(r=4)".to_string()));
+        assert!(names.contains(&"re-span".to_string()));
+        assert!(names.contains(&"switch:sp(r=4)".to_string()));
+        // Step 2's duration event starts after 2 + 1 + 2 seconds of online time.
+        let last = events.last().unwrap();
+        assert_eq!(last.get("name").as_str().unwrap(), "step 2: sp(r=4)");
+        assert!((last.get("ts").as_f64().unwrap() - 5.0e6).abs() < 1e-6);
+        // Outcomes without a steps array are rejected loudly.
+        assert!(chrome_drive_trace(&Json::Null).is_err());
     }
 }

@@ -1,0 +1,253 @@
+//! Drifting-traffic scenario engine: turns a [`TraceSpec`] into per-step
+//! expert-load vectors and per-step (jittered) clusters.
+//!
+//! The online control plane needs iteration-varying routing statistics the
+//! static `--skew` knob cannot express: diurnal load curves, bursty
+//! hot-expert flips, a Zipf skew that drifts over the run, and stragglers
+//! appearing on nodes and links. This module generates them — every step
+//! is a **pure function** of `(spec, step)`, with randomness drawn from a
+//! stateless per-step stream ([`stream`]) so two runs with the same seed
+//! produce identical traces at any thread count and steps can be
+//! materialized in any order.
+//!
+//! Composition at step `t`: the Zipf carrier at `spec.skew_at(t)` (drift
+//! ramp + diurnal term), the burst seat's weight boosted and rotated to
+//! the front, multiplicative per-expert noise, then
+//! [`ops::loads_from_weights`] converts routing weights into the
+//! per-expert load vector the span/pricing plumbing consumes. `zero_steps`
+//! short-circuit to an all-zero vector (the all-zero→expected fallback's
+//! trigger). Jitter rebuilds the cluster with slowed nodes/links; node 0
+//! is never slowed so the bottleneck can genuinely move.
+
+use anyhow::Result;
+
+use crate::config::trace::TraceSpec;
+use crate::config::{AlphaBeta, ClusterTopology, MoeLayerConfig, NodeSpec};
+use crate::schedule::ops;
+use crate::util::prng::{splitmix64, Rng};
+
+/// Salt for the per-expert weight-noise stream.
+const SALT_NOISE: u64 = 0x6e6f697365; // "noise"
+/// Salt for the node/link jitter stream.
+const SALT_JITTER: u64 = 0x6a697474; // "jitt"
+
+/// Stateless per-step RNG: `(seed, step, salt)` are mixed through
+/// SplitMix64 into a fresh Xoshiro state, so stream `t` never depends on
+/// how many draws stream `t-1` made — the determinism the byte-identical
+/// decision-log guarantee rests on.
+pub fn stream(seed: u64, step: usize, salt: u64) -> Rng {
+    let mut s = seed;
+    let base = splitmix64(&mut s);
+    let mut mix = base ^ (step as u64).wrapping_mul(0xA24BAED4963EE407) ^ salt;
+    Rng::new(splitmix64(&mut mix))
+}
+
+/// Per-expert routing weights at `step` (before capacity conversion):
+/// Zipf carrier, burst rotation/boost, multiplicative noise.
+pub fn step_weights(spec: &TraceSpec, c: &MoeLayerConfig, step: usize) -> Vec<f64> {
+    let skew = spec.skew_at(step);
+    let zipf: Vec<f64> = (0..c.e).map(|j| ((j + 1) as f64).powf(-skew)).collect();
+    let mut w = vec![0.0f64; c.e];
+    let hot = match spec.burst_at(step) {
+        Some((seat, _)) => seat % c.e,
+        None => 0,
+    };
+    // Rotate the curve so the burst seat takes the head rank; outside a
+    // burst window `hot == 0` and this is the identity.
+    for (j, &z) in zipf.iter().enumerate() {
+        w[(hot + j) % c.e] = z;
+    }
+    if let Some((_, boost)) = spec.burst_at(step) {
+        w[hot] *= boost;
+    }
+    if spec.noise > 0.0 {
+        let mut rng = stream(spec.seed, step, SALT_NOISE);
+        for wj in w.iter_mut() {
+            *wj *= 1.0 + spec.noise * (2.0 * rng.f64() - 1.0);
+        }
+    }
+    w
+}
+
+/// The measured-style per-expert load vector at `step`: all zeros on a
+/// `zero_steps` entry, otherwise the step weights pushed through the
+/// shared top-k fill model at the PauseMP capacity.
+pub fn step_loads(spec: &TraceSpec, c: &MoeLayerConfig, step: usize) -> Vec<usize> {
+    if spec.zero_steps.contains(&step) {
+        return vec![0; c.e];
+    }
+    let w = step_weights(spec, c, step);
+    ops::loads_from_weights(c, c.t_pausemp(), &w)
+}
+
+/// The cluster in effect at `step`: the base topology with this step's
+/// straggler draws applied. Without a jitter clause (or with both factors
+/// zero) the base is cloned untouched. Node `i > 0` divides its FLOPs by
+/// `1 + node·u` and scales both of its links' α/β by `1 + link·u`
+/// (uniform per-node λ, preserving the intra ≤ inter validation).
+pub fn step_cluster(
+    spec: &TraceSpec,
+    base: &ClusterTopology,
+    step: usize,
+) -> Result<ClusterTopology> {
+    let jit = match spec.jitter {
+        Some(j) if j.node > 0.0 || j.link > 0.0 => j,
+        _ => return Ok(base.clone()),
+    };
+    let mut rng = stream(spec.seed, step, SALT_JITTER);
+    let nodes: Vec<NodeSpec> = base
+        .node_specs()
+        .iter()
+        .enumerate()
+        .map(|(i, ns)| {
+            // Fixed draw order (node slow, then link λ) per node keeps the
+            // stream layout independent of which factors are enabled.
+            let slow = 1.0 + jit.node * rng.f64();
+            let lambda = 1.0 + jit.link * rng.f64();
+            if i == 0 {
+                return *ns;
+            }
+            let scale = |ab: AlphaBeta| AlphaBeta::new(ab.alpha * lambda, ab.beta * lambda);
+            NodeSpec {
+                gpu_flops: ns.gpu_flops / slow,
+                intra: scale(ns.intra),
+                inter: scale(ns.inter),
+                ..*ns
+            }
+        })
+        .collect();
+    ClusterTopology::new(&base.name, nodes)
+}
+
+/// One materialized trace step: the loads the router produced and the
+/// cluster the iteration ran on.
+#[derive(Debug, Clone)]
+pub struct TrafficStep {
+    pub loads: Vec<usize>,
+    pub cluster: ClusterTopology,
+}
+
+/// Materialize the whole trace up front (steps are independent, so this
+/// is just a map; the control loop and the static baselines index into
+/// one shared copy).
+pub fn materialize(
+    spec: &TraceSpec,
+    c: &MoeLayerConfig,
+    base: &ClusterTopology,
+) -> Result<Vec<TrafficStep>> {
+    (0..spec.steps)
+        .map(|t| {
+            Ok(TrafficStep { loads: step_loads(spec, c, t), cluster: step_cluster(spec, base, t)? })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::trace::{Bursty, Jitter};
+    use crate::util::json::Json;
+
+    fn cfg() -> MoeLayerConfig {
+        MoeLayerConfig::test_default()
+    }
+
+    fn spec(text: &str) -> TraceSpec {
+        TraceSpec::from_json(&Json::parse(text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn streams_are_stateless_and_salted() {
+        let mut a = stream(7, 3, SALT_NOISE);
+        let mut b = stream(7, 3, SALT_NOISE);
+        assert_eq!(a.next_u64(), b.next_u64(), "same (seed, step, salt) → same stream");
+        let mut c = stream(7, 4, SALT_NOISE);
+        let mut d = stream(7, 3, SALT_JITTER);
+        let v = stream(7, 3, SALT_NOISE).next_u64();
+        assert_ne!(v, c.next_u64(), "steps diverge");
+        assert_ne!(v, d.next_u64(), "salts diverge");
+    }
+
+    #[test]
+    fn drifting_trace_is_deterministic_and_tracks_skew() {
+        let s = spec(
+            r#"{"name": "d", "steps": 6, "seed": 11,
+                "drift": {"from": 0.2, "to": 2.5}, "noise": 0.05}"#,
+        );
+        let c = cfg();
+        let a: Vec<Vec<usize>> = (0..s.steps).map(|t| step_loads(&s, &c, t)).collect();
+        let b: Vec<Vec<usize>> = (0..s.steps).map(|t| step_loads(&s, &c, t)).collect();
+        assert_eq!(a, b, "same spec → identical trace");
+        // Rising skew concentrates routing: the tail expert's load shrinks
+        // from the first to the last step.
+        let e = c.e;
+        assert!(a[s.steps - 1][e - 1] < a[0][e - 1], "{a:?}");
+        // And total routed mass shrinks with concentration.
+        let sum = |v: &Vec<usize>| v.iter().sum::<usize>();
+        assert!(sum(&a[s.steps - 1]) < sum(&a[0]), "{a:?}");
+    }
+
+    #[test]
+    fn burst_rotates_the_hot_seat() {
+        let mut s = spec(r#"{"name": "b", "steps": 12, "base_skew": 1.0}"#);
+        s.bursty = Some(Bursty { every: 4, hold: 2, boost: 4.0 });
+        let c = cfg();
+        // Step 1 is inside window 0 (hot = 0), step 5 inside window 1
+        // (hot = 1): the argmax load follows the seat.
+        let argmax = |v: &[usize]| {
+            v.iter().enumerate().max_by_key(|&(i, &l)| (l, std::cmp::Reverse(i))).unwrap().0
+        };
+        assert_eq!(argmax(&step_loads(&s, &c, 1)), 0);
+        assert_eq!(argmax(&step_loads(&s, &c, 5)), 1);
+        // Outside the window the plain Zipf head leads again.
+        assert_eq!(argmax(&step_loads(&s, &c, 3)), 0);
+    }
+
+    #[test]
+    fn zero_steps_produce_all_zero_loads() {
+        let s = spec(
+            r#"{"name": "z", "steps": 4, "base_skew": 1.0, "zero_steps": [2]}"#,
+        );
+        let c = cfg();
+        assert!(step_loads(&s, &c, 2).iter().all(|&l| l == 0));
+        assert!(step_loads(&s, &c, 1).iter().sum::<usize>() > 0);
+    }
+
+    #[test]
+    fn jitter_slows_nodes_but_spares_node_zero() {
+        let base = ClusterTopology::testbed_b_subset(8).unwrap();
+        let mut s = spec(r#"{"name": "j", "steps": 3, "seed": 5}"#);
+        s.jitter = Some(Jitter { node: 0.5, link: 0.5 });
+        let jit = step_cluster(&s, &base, 1).unwrap();
+        assert_eq!(jit.node_specs().len(), base.node_specs().len());
+        let b0 = base.node_specs()[0];
+        let j0 = jit.node_specs()[0];
+        assert_eq!(j0, b0, "node 0 is never slowed");
+        for (i, (j, b)) in jit.node_specs().iter().zip(base.node_specs()).enumerate().skip(1) {
+            assert!(j.gpu_flops < b.gpu_flops, "node {i} flops");
+            assert!(j.inter.beta >= b.inter.beta, "node {i} link");
+            assert!(j.intra.beta <= j.inter.beta, "node {i} keeps link ordering");
+        }
+        // Determinism and per-step divergence.
+        let again = step_cluster(&s, &base, 1).unwrap();
+        assert_eq!(again.node_specs(), jit.node_specs());
+        let other = step_cluster(&s, &base, 2).unwrap();
+        assert_ne!(other.node_specs()[1].gpu_flops, jit.node_specs()[1].gpu_flops);
+        // No jitter clause → the base comes back untouched.
+        let plain = spec(r#"{"name": "p", "steps": 3}"#);
+        assert_eq!(step_cluster(&plain, &base, 1).unwrap().node_specs(), base.node_specs());
+    }
+
+    #[test]
+    fn materialize_covers_every_step() {
+        let base = ClusterTopology::testbed_b_subset(8).unwrap();
+        let s = spec(r#"{"name": "m", "steps": 5, "drift": {"from": 0.5, "to": 1.5}}"#);
+        let c = cfg();
+        let steps = materialize(&s, &c, &base).unwrap();
+        assert_eq!(steps.len(), 5);
+        for (t, st) in steps.iter().enumerate() {
+            assert_eq!(st.loads, step_loads(&s, &c, t));
+            assert_eq!(st.loads.len(), c.e);
+        }
+    }
+}

@@ -48,6 +48,38 @@ pub fn model_iteration_time(
     })
 }
 
+/// [`model_iteration_time`] under the two-profile traffic contract of the
+/// online control plane: the SP family's chunk spans are planned from the
+/// (stale) `span_loads` measurement while expert compute is priced at the
+/// actual `flop_loads` — see
+/// [`crate::schedule::lowering::simulate_iteration_traffic_with_dag`].
+/// `(None, None)` reproduces [`model_iteration_time`] exactly.
+pub fn model_iteration_time_measured(
+    model: &ModelConfig,
+    par: ParallelDegrees,
+    cluster: &ClusterTopology,
+    kind: ScheduleKind,
+    span_loads: Option<&[usize]>,
+    flop_loads: Option<&[usize]>,
+) -> Result<ModelTiming> {
+    let layer = model.moe_layer(par);
+    layer.validate()?;
+    let (report, _) = lowering::simulate_iteration_traffic_with_dag(
+        kind,
+        &layer,
+        cluster,
+        span_loads,
+        flop_loads,
+    )?;
+    let moe_seconds = report.makespan * model.n_moe_layers() as f64;
+    let dense_seconds = model.dense_flops_per_gpu(par.n_mp) / cluster.min_flops(par.p);
+    Ok(ModelTiming {
+        moe_seconds,
+        dense_seconds,
+        moe_comm_ratio: report.comm_ratio(),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -79,6 +111,30 @@ mod tests {
         let t = model_iteration_time(&model, par, &cluster, ScheduleKind::Baseline).unwrap();
         assert!(t.moe_seconds > t.dense_seconds);
         assert!(t.moe_comm_ratio > 0.5);
+    }
+
+    #[test]
+    fn measured_variant_matches_unmeasured_without_loads_and_reacts_to_skew() {
+        let cluster = ClusterTopology::testbed_a();
+        let model = ModelConfig::bert_base_moe(8);
+        let par = ParallelDegrees { p: 8, n_mp: 2, n_esp: 2 };
+        let kind = ScheduleKind::Pipelined { chunks: 4 };
+        let base = model_iteration_time(&model, par, &cluster, kind).unwrap();
+        let warm =
+            model_iteration_time_measured(&model, par, &cluster, kind, None, None).unwrap();
+        assert_eq!(base.total(), warm.total());
+        assert_eq!(base.moe_comm_ratio, warm.moe_comm_ratio);
+        // A measured hot-expert profile changes the MoE timing but leaves
+        // the dense blocks (which don't route) untouched.
+        let layer = model.moe_layer(par);
+        let mut loads = vec![layer.t_pausemp() / 8; layer.e];
+        loads[0] = layer.t_pausemp();
+        let skewed =
+            model_iteration_time_measured(&model, par, &cluster, kind, Some(&loads), Some(&loads))
+                .unwrap();
+        assert!(skewed.moe_seconds > 0.0);
+        assert_ne!(skewed.moe_seconds, base.moe_seconds);
+        assert_eq!(skewed.dense_seconds, base.dense_seconds);
     }
 
     #[test]

@@ -1,0 +1,167 @@
+//! End-to-end gates for the online adaptive control plane (`parm drive`):
+//!
+//! * **Adaptivity pays** — on the committed drifting trace
+//!   (`examples/trace_drift.json`) some pinned (hidden size, hysteresis
+//!   band) combination makes the online controller's total simulated time
+//!   strictly beat the best single static (schedule, span) choice, while
+//!   the `threshold = 0` ablation (re-decide every step, pay every switch)
+//!   does no better than the banded controller on that same combination.
+//! * **Determinism** — two drives with the same seed/trace/cluster produce
+//!   byte-identical decision logs at any `--threads` count, including on a
+//!   jittered trace where every step rebuilds the cluster.
+//! * **Zero-routed fallback** — a trace step that routes nothing still
+//!   simulates (the all-zero profile falls back to expected spans) and the
+//!   following step must not claim a measured re-span.
+//! * **Golden decision log** — the exact configuration CI's `drive-smoke`
+//!   step runs through the CLI, checked against
+//!   `tests/golden/drive_smoke.log`. Bless with `GOLDEN_BLESS=1 cargo test
+//!   --test drive_e2e`; when the golden is absent and blessing is off the
+//!   test skips (the CI binary diff is the hard gate for the committed
+//!   artifact, as with the sweep goldens).
+
+use std::path::Path;
+
+use parm::config::{ClusterTopology, MoeLayerConfig, TraceSpec};
+use parm::control::{default_candidates, drive, DriveOptions};
+use parm::perfmodel::selection::predict_with_loads;
+use parm::perfmodel::PerfModel;
+
+const TRACE_DRIFT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/trace_drift.json");
+const TRACE_BURSTY: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/trace_bursty.json");
+const TRACE_SMOKE: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/trace_drive_smoke.json");
+const GOLDEN_LOG: &str = "tests/golden/drive_smoke.log";
+
+/// The pinned drive layer: the CLI smoke configuration (`--b 8 --l 2048
+/// --hidden H --e 8` on the default p=8/mp=2/esp=2 layout).
+fn drive_cfg(h: usize) -> MoeLayerConfig {
+    let mut cfg = MoeLayerConfig::test_default();
+    cfg.b = 8;
+    cfg.l = 2048;
+    cfg.m = 1024;
+    cfg.h = h;
+    cfg.e = 8;
+    cfg.validate().unwrap();
+    cfg
+}
+
+#[test]
+fn online_controller_beats_best_static_on_committed_drift_trace() {
+    let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+    let spec = TraceSpec::load(TRACE_DRIFT).unwrap();
+    // The margin depends on where the FFN/comm balance puts the pipelined
+    // family, so sweep a pinned bracket of (hidden size, band) and require
+    // the acceptance shape to show up somewhere in it.
+    let mut report = Vec::new();
+    let mut witness = None;
+    for h in [16384usize, 32768] {
+        let cfg = drive_cfg(h);
+        let model = PerfModel::fit(&cluster, cfg.par).unwrap();
+        let cands = default_candidates(&predict_with_loads(&model, &cfg, None));
+        for threshold in [0.05f64, 0.2] {
+            let opts = DriveOptions { threshold, threads: 2, ..Default::default() };
+            let out = drive(&spec, &cfg, &cluster, &model, &cands, &opts).unwrap();
+            let (_, best_static) = out.best_static();
+            let ablation = DriveOptions { threshold: 0.0, threads: 2, ..Default::default() };
+            let thr0 = drive(&spec, &cfg, &cluster, &model, &cands, &ablation).unwrap();
+            let wins = out.online_total < best_static;
+            let band_needed = thr0.online_total >= out.online_total * (1.0 - 1e-9);
+            report.push(format!(
+                "h={h} threshold={threshold}: online={:.6e} best_static={:.6e} \
+                 thr0={:.6e} wins={wins} band_needed={band_needed}",
+                out.online_total, best_static, thr0.online_total
+            ));
+            if wins && band_needed && witness.is_none() {
+                witness = Some((h, threshold));
+            }
+        }
+    }
+    assert!(
+        witness.is_some(),
+        "no pinned combination shows online < best static with a useful band:\n{}",
+        report.join("\n")
+    );
+}
+
+#[test]
+fn decision_logs_are_byte_identical_across_runs_and_thread_counts() {
+    // The bursty trace carries link/node jitter, so every step rebuilds
+    // the cluster from the per-step stream — the hardest determinism case.
+    let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+    let spec = TraceSpec::load(TRACE_BURSTY).unwrap();
+    let cfg = drive_cfg(4096);
+    let model = PerfModel::fit(&cluster, cfg.par).unwrap();
+    let cands = default_candidates(&predict_with_loads(&model, &cfg, None));
+    let opts1 = DriveOptions { threads: 1, ..Default::default() };
+    let a = drive(&spec, &cfg, &cluster, &model, &cands, &opts1).unwrap();
+    let b = drive(&spec, &cfg, &cluster, &model, &cands, &opts1).unwrap();
+    assert_eq!(a.decision_log(), b.decision_log(), "same-thread repeat diverged");
+    let opts4 = DriveOptions { threads: 4, ..Default::default() };
+    let c = drive(&spec, &cfg, &cluster, &model, &cands, &opts4).unwrap();
+    assert_eq!(a.decision_log(), c.decision_log(), "thread count leaked into the log");
+    assert_eq!(a.steps.len(), spec.steps);
+}
+
+#[test]
+fn zero_routed_step_falls_back_to_expected_spans() {
+    use parm::util::json::Json;
+    let cluster = ClusterTopology::testbed_b_subset(8).unwrap();
+    let cfg = drive_cfg(4096);
+    let model = PerfModel::fit(&cluster, cfg.par).unwrap();
+    let cands = default_candidates(&predict_with_loads(&model, &cfg, None));
+    let spec = TraceSpec::from_json(
+        &Json::parse(
+            r#"{"name": "zero", "steps": 3, "seed": 5, "base_skew": 1.5, "zero_steps": [1]}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let out = drive(&spec, &cfg, &cluster, &model, &cands, &DriveOptions::default()).unwrap();
+    assert_eq!(out.steps.len(), 3);
+    // The zero step itself still takes time (all-zero → uniform fallback
+    // inside the op builders), and the step after it must not claim a
+    // measured re-span: there is nothing usable to re-span from.
+    assert!(out.steps.iter().all(|d| d.t_iter > 0.0), "{}", out.decision_log());
+    assert!(!out.steps[2].respan, "{}", out.decision_log());
+    assert!(out.online_total.is_finite());
+}
+
+#[test]
+fn golden_drive_smoke_log() {
+    // Mirrors CI's drive-smoke CLI invocation exactly: testbed_a,
+    // --b 8 --l 2048 --hidden 16384 --e 8 --threads 2, spec seed, default
+    // band/switch cost. The decision log is the byte-stable artifact.
+    let cluster = ClusterTopology::testbed_a();
+    let spec = TraceSpec::load(TRACE_SMOKE).unwrap();
+    let cfg = drive_cfg(16384);
+    let model = PerfModel::fit(&cluster, cfg.par).unwrap();
+    let cands = default_candidates(&predict_with_loads(&model, &cfg, None));
+    let opts = DriveOptions { threads: 2, ..Default::default() };
+    let out = drive(&spec, &cfg, &cluster, &model, &cands, &opts).unwrap();
+    let got = out.decision_log();
+    assert_eq!(got.lines().count(), 1 + spec.steps + cands.len() + 1);
+    let path = Path::new(GOLDEN_LOG);
+    if std::env::var_os("GOLDEN_BLESS").is_some() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(path, &got).unwrap();
+        eprintln!("drive_e2e: blessed {GOLDEN_LOG} — commit it");
+        return;
+    }
+    if !path.exists() {
+        // Unlike the sweep goldens this test soft-skips when the golden is
+        // absent: CI's drive-smoke step diffs the committed file against
+        // the CLI output, which is the hard gate for this artifact.
+        eprintln!(
+            "drive_e2e: {GOLDEN_LOG} not present — skipping byte comparison \
+             (bless with GOLDEN_BLESS=1 cargo test --test drive_e2e)"
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(path).unwrap();
+    assert_eq!(
+        want, got,
+        "drive decision log diverged from {GOLDEN_LOG}; if the control-plane \
+         change is intentional, regenerate with `GOLDEN_BLESS=1 cargo test \
+         --test drive_e2e` and commit the updated golden"
+    );
+}
