@@ -34,10 +34,11 @@ pub fn drive_summary(outcome: &DriveOutcome) -> Json {
     ])
 }
 
-/// Merge `summary` under the `"drive"` key of the bench JSON at `path`,
-/// creating the document if the sweep has not written it yet (drive can
-/// run standalone). Existing keys are preserved.
-pub fn merge_drive_summary(path: &Path, summary: &Json) -> Result<()> {
+/// Merge `summary` under `key` in the bench JSON at `path`, creating the
+/// document if no producer has written it yet (each producer can run
+/// standalone). Existing keys are preserved. The shared merge under
+/// `parm drive --bench-json` and `parm lint --bench-json`.
+pub fn merge_summary_under(path: &Path, key: &str, summary: &Json) -> Result<()> {
     let mut doc = match std::fs::read_to_string(path) {
         Ok(text) => Json::parse(&text)
             .map_err(|e| anyhow::anyhow!("{e}"))
@@ -47,7 +48,7 @@ pub fn merge_drive_summary(path: &Path, summary: &Json) -> Result<()> {
     };
     match &mut doc {
         Json::Obj(map) => {
-            map.insert("drive".to_string(), summary.clone());
+            map.insert(key.to_string(), summary.clone());
         }
         other => anyhow::bail!(
             "bench JSON {} is not an object (found {})",
@@ -58,6 +59,18 @@ pub fn merge_drive_summary(path: &Path, summary: &Json) -> Result<()> {
     std::fs::write(path, doc.to_pretty())
         .with_context(|| format!("writing bench JSON {}", path.display()))?;
     Ok(())
+}
+
+/// Merge `summary` under the `"drive"` key of the bench JSON at `path`.
+pub fn merge_drive_summary(path: &Path, summary: &Json) -> Result<()> {
+    merge_summary_under(path, "drive", summary)
+}
+
+/// Merge `summary` under the `"lint"` key of the bench JSON at `path` —
+/// the per-rule finding counts of `parm lint` ride along in
+/// `BENCH_sweep.json` next to the sweep and drive summaries.
+pub fn merge_lint_summary(path: &Path, summary: &Json) -> Result<()> {
+    merge_summary_under(path, "lint", summary)
 }
 
 #[cfg(test)]
@@ -120,6 +133,25 @@ mod tests {
         // Non-object documents are rejected loudly.
         std::fs::write(&path, "[1,2]").unwrap();
         assert!(merge_drive_summary(&path, &Json::Null).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn lint_summary_merges_next_to_drive() {
+        let dir = std::env::temp_dir().join(format!("parm_lint_merge_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.json");
+        let _ = std::fs::remove_file(&path);
+        merge_drive_summary(&path, &drive_summary(&outcome())).unwrap();
+        let lint = Json::obj(vec![
+            ("programs", Json::num(12.0)),
+            ("findings", Json::num(0.0)),
+        ]);
+        merge_lint_summary(&path, &lint).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("drive").get("trace").as_str().unwrap(), "t");
+        assert_eq!(doc.get("lint").get("programs").as_f64().unwrap(), 12.0);
+        assert_eq!(doc.get("lint").get("findings").as_f64().unwrap(), 0.0);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

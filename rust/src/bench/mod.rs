@@ -6,7 +6,7 @@ pub mod drive;
 pub mod paper;
 pub mod runner;
 
-pub use drive::{drive_summary, merge_drive_summary};
+pub use drive::{drive_summary, merge_drive_summary, merge_lint_summary, merge_summary_under};
 pub use paper::{fig1, fig6, fig7, saa_ablation, selection_accuracy, table4, table5};
 pub use runner::{
     case_key, run_sweep, run_sweep_cached, run_sweep_with_threads, sweep_csv, CaseResult,

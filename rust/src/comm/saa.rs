@@ -36,10 +36,13 @@
 //! Every entry point validates that `mp_groups` PARTITIONS `a2a_group`
 //! ([`validate_mp_partition`]): an overlapping or incomplete partition
 //! would silently corrupt data-plane buffers (a rank would receive a
-//! peer's block twice, or never), so it panics with a clear message
-//! instead.
+//! peer's block twice, or never), so it is refused up front as a typed
+//! [`VerifyError`] (rule `group-validity` — the same check the static
+//! schedule verifier runs), surfaced to the CLI as a clean error instead
+//! of a panic.
 
 use crate::config::ClusterTopology;
+use crate::schedule::verify::{self, VerifyError};
 use crate::sim::dag::{SimDag, TaskId};
 
 use super::algo;
@@ -51,32 +54,15 @@ use super::transport::{split_chunks, DagTransport, DataTransport, Lump};
 /// `a2a_group` appears in exactly one MP group, and no MP group contains a
 /// rank outside `a2a_group`. Anything else would corrupt the data plane
 /// (double-received or never-received AllGather blocks), so the SAA entry
-/// points refuse it up front.
-pub fn validate_mp_partition(a2a_group: &[usize], mp_groups: &[Vec<usize>]) -> Result<(), String> {
-    let mut seen: Vec<usize> = Vec::new();
-    for grp in mp_groups {
-        for &r in grp {
-            if !a2a_group.contains(&r) {
-                return Err(format!(
-                    "mp group member {r} is not in the a2a group — mp_groups must partition it"
-                ));
-            }
-            if seen.contains(&r) {
-                return Err(format!(
-                    "rank {r} appears in more than one mp group — overlapping partition"
-                ));
-            }
-            seen.push(r);
-        }
-    }
-    for &r in a2a_group {
-        if !seen.contains(&r) {
-            return Err(format!(
-                "a2a group member {r} is missing from the mp partition — incomplete partition"
-            ));
-        }
-    }
-    Ok(())
+/// points refuse it up front. Delegates to the static schedule verifier's
+/// [`verify::validate_partition`] — ONE partition check for both the
+/// lowering and the lint pass — and returns its typed error (rule
+/// `group-validity`).
+pub fn validate_mp_partition(
+    a2a_group: &[usize],
+    mp_groups: &[Vec<usize>],
+) -> Result<(), VerifyError> {
+    verify::validate_partition(a2a_group, mp_groups)
 }
 
 /// Data-plane SAA: the phased algorithm over real buffers. The result
@@ -88,12 +74,14 @@ pub fn validate_mp_partition(a2a_group: &[usize], mp_groups: &[Vec<usize>]) -> R
 /// chunk split is ragged ([`split_chunks`] — sizes differ by at most one
 /// element), matching [`data::alltoall`]'s convention, and zero-byte
 /// chunks stay off the wire.
-pub fn saa_data(world: &mut [Vec<f32>], a2a_group: &[usize], mp_groups: &[Vec<usize>]) {
+pub fn saa_data(
+    world: &mut [Vec<f32>],
+    a2a_group: &[usize],
+    mp_groups: &[Vec<usize>],
+) -> Result<(), VerifyError> {
     let g = a2a_group.len();
     assert!(g > 0);
-    if let Err(e) = validate_mp_partition(a2a_group, mp_groups) {
-        panic!("saa_data: {e}");
-    }
+    validate_mp_partition(a2a_group, mp_groups)?;
     let n = world[a2a_group[0]].len();
     assert!(a2a_group.iter().all(|&r| world[r].len() == n));
 
@@ -111,6 +99,7 @@ pub fn saa_data(world: &mut [Vec<f32>], a2a_group: &[usize], mp_groups: &[Vec<us
         }
         world[r] = buf;
     }
+    Ok(())
 }
 
 /// Reference semantics for SAA: compose the two collectives.
@@ -134,14 +123,12 @@ pub fn saa_lower(
     deps: &[TaskId],
     tag_a2a: &'static str,
     tag_ag: &'static str,
-) -> Vec<TaskId> {
-    if let Err(e) = validate_mp_partition(a2a_group, mp_groups) {
-        panic!("saa_lower: {e}");
-    }
+) -> Result<Vec<TaskId>, VerifyError> {
+    validate_mp_partition(a2a_group, mp_groups)?;
     let mut t = DagTransport::new(dag, cluster);
     let g = a2a_group.len();
     let inputs = vec![vec![Lump(bytes_per_pair); g]; g];
-    algo::saa(&mut t, a2a_group, mp_groups, &inputs, deps, tag_a2a, tag_ag, true).1
+    Ok(algo::saa(&mut t, a2a_group, mp_groups, &inputs, deps, tag_a2a, tag_ag, true).1)
 }
 
 /// AAS — the non-overlapped ablation: AlltoAll to completion, then a ring
@@ -156,14 +143,12 @@ pub fn aas_lower(
     deps: &[TaskId],
     tag_a2a: &'static str,
     tag_ag: &'static str,
-) -> Vec<TaskId> {
-    if let Err(e) = validate_mp_partition(a2a_group, mp_groups) {
-        panic!("aas_lower: {e}");
-    }
+) -> Result<Vec<TaskId>, VerifyError> {
+    validate_mp_partition(a2a_group, mp_groups)?;
     let mut t = DagTransport::new(dag, cluster);
     let g = a2a_group.len();
     let inputs = vec![vec![Lump(bytes_per_pair); g]; g];
-    algo::saa(&mut t, a2a_group, mp_groups, &inputs, deps, tag_a2a, tag_ag, false).1
+    Ok(algo::saa(&mut t, a2a_group, mp_groups, &inputs, deps, tag_a2a, tag_ag, false).1)
 }
 
 #[cfg(test)]
@@ -188,7 +173,7 @@ mod tests {
                 (0..g / m).map(|b| (b * m..(b + 1) * m).collect()).collect();
 
             let mut via_saa = world0.clone();
-            saa_data(&mut via_saa, &a2a_group, &mp_groups);
+            saa_data(&mut via_saa, &a2a_group, &mp_groups).unwrap();
             let mut via_ref = world0.clone();
             saa_reference(&mut via_ref, &a2a_group, &mp_groups);
             for r in 0..g {
@@ -211,7 +196,7 @@ mod tests {
             let mp_groups: Vec<Vec<usize>> =
                 (0..g / m).map(|b| (b * m..(b + 1) * m).collect()).collect();
             let mut via_saa = world0.clone();
-            saa_data(&mut via_saa, &a2a_group, &mp_groups);
+            saa_data(&mut via_saa, &a2a_group, &mp_groups).unwrap();
             let mut via_ref = world0.clone();
             saa_reference(&mut via_ref, &a2a_group, &mp_groups);
             for r in 0..g {
@@ -260,44 +245,49 @@ mod tests {
 
     #[test]
     fn mp_partition_validation() {
+        use crate::schedule::verify::Rule;
         let grp = [0usize, 1, 2, 3];
         // Valid partitions.
         assert!(validate_mp_partition(&grp, &[vec![0, 1], vec![2, 3]]).is_ok());
         assert!(validate_mp_partition(&grp, &[vec![0], vec![1], vec![2], vec![3]]).is_ok());
         // Overlapping: rank 1 in two groups.
         let err = validate_mp_partition(&grp, &[vec![0, 1], vec![1, 2, 3]]).unwrap_err();
-        assert!(err.contains("overlapping"), "{err}");
+        assert_eq!(err.rule, Rule::GroupValidity);
+        assert!(err.to_string().contains("overlapping"), "{err}");
         // Duplicate within one group is also an overlap.
         assert!(validate_mp_partition(&grp, &[vec![0, 0], vec![1, 2, 3]]).is_err());
         // Incomplete: rank 3 uncovered.
         let err = validate_mp_partition(&grp, &[vec![0, 1], vec![2]]).unwrap_err();
-        assert!(err.contains("incomplete"), "{err}");
+        assert!(err.to_string().contains("incomplete"), "{err}");
         // Foreign rank: 9 is not in the a2a group.
         let err = validate_mp_partition(&grp, &[vec![0, 1], vec![2, 3, 9]]).unwrap_err();
-        assert!(err.contains("not in the a2a group"), "{err}");
+        assert!(err.to_string().contains("not in the a2a group"), "{err}");
     }
 
     #[test]
-    #[should_panic(expected = "overlapping partition")]
     fn saa_data_rejects_overlapping_partition() {
         let mut world: Vec<Vec<f32>> = (0..4).map(|_| vec![0.0; 4]).collect();
-        saa_data(&mut world, &[0, 1, 2, 3], &[vec![0, 1], vec![1, 2, 3]]);
+        let err =
+            saa_data(&mut world, &[0, 1, 2, 3], &[vec![0, 1], vec![1, 2, 3]]).unwrap_err();
+        assert!(err.to_string().contains("overlapping partition"), "{err}");
     }
 
     #[test]
-    #[should_panic(expected = "incomplete partition")]
     fn saa_lower_rejects_incomplete_partition() {
         let c = two_node_cluster();
         let mut dag = SimDag::new();
-        saa_lower(&mut dag, &c, &[0, 1, 2, 3], &[vec![0, 1]], 8.0, &[], "a2a", "ag");
+        let err = saa_lower(&mut dag, &c, &[0, 1, 2, 3], &[vec![0, 1]], 8.0, &[], "a2a", "ag")
+            .unwrap_err();
+        assert!(err.to_string().contains("incomplete partition"), "{err}");
     }
 
     #[test]
-    #[should_panic(expected = "not in the a2a group")]
     fn aas_lower_rejects_foreign_rank() {
         let c = two_node_cluster();
         let mut dag = SimDag::new();
-        aas_lower(&mut dag, &c, &[0, 1], &[vec![0, 1, 5]], 8.0, &[], "a2a", "ag");
+        let err = aas_lower(&mut dag, &c, &[0, 1], &[vec![0, 1, 5]], 8.0, &[], "a2a", "ag")
+            .unwrap_err();
+        assert!(err.to_string().contains("not in the a2a group"), "{err}");
     }
 
     fn two_node_cluster_with_inter(inter: crate::config::AlphaBeta) -> ClusterTopology {
@@ -322,10 +312,10 @@ mod tests {
             .map(|b| (b * mp_size..(b + 1) * mp_size).collect())
             .collect();
         let mut d1 = SimDag::new();
-        saa_lower(&mut d1, c, &a2a, &mp, bytes, &[], "a2a", "ag");
+        saa_lower(&mut d1, c, &a2a, &mp, bytes, &[], "a2a", "ag").unwrap();
         let t_saa = Simulator::new(c).run(&d1).makespan;
         let mut d2 = SimDag::new();
-        aas_lower(&mut d2, c, &a2a, &mp, bytes, &[], "a2a", "ag");
+        aas_lower(&mut d2, c, &a2a, &mp, bytes, &[], "a2a", "ag").unwrap();
         let t_aas = Simulator::new(c).run(&d2).makespan;
         (t_saa, t_aas)
     }
@@ -375,9 +365,9 @@ mod tests {
 
         let mut d1 = SimDag::new();
         let c = two_node_cluster();
-        saa_lower(&mut d1, &c, &a2a, &mp, bytes, &[], "a2a", "ag");
+        saa_lower(&mut d1, &c, &a2a, &mp, bytes, &[], "a2a", "ag").unwrap();
         let mut d2 = SimDag::new();
-        aas_lower(&mut d2, &c, &a2a, &mp, bytes, &[], "a2a", "ag");
+        aas_lower(&mut d2, &c, &a2a, &mp, bytes, &[], "a2a", "ag").unwrap();
         assert!((d1.total_network_bytes() - d2.total_network_bytes()).abs() < 1e-6);
     }
 
@@ -390,7 +380,7 @@ mod tests {
         let bytes = 2.0e5;
 
         let mut d1 = SimDag::new();
-        saa_lower(&mut d1, &c, &a2a, &mp, bytes, &[], "a2a", "ag");
+        saa_lower(&mut d1, &c, &a2a, &mp, bytes, &[], "a2a", "ag").unwrap();
         let t_saa = Simulator::new(&c).run(&d1).makespan;
 
         let mut d2 = SimDag::new();
@@ -409,9 +399,9 @@ mod tests {
         let mp: Vec<Vec<usize>> = vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]];
         let bytes = 3.0e4;
         let mut d1 = SimDag::new();
-        saa_lower(&mut d1, &c, &a2a, &mp, bytes, &[], "a2a", "ag");
+        saa_lower(&mut d1, &c, &a2a, &mp, bytes, &[], "a2a", "ag").unwrap();
         let mut d2 = SimDag::new();
-        aas_lower(&mut d2, &c, &a2a, &mp, bytes, &[], "a2a", "ag");
+        aas_lower(&mut d2, &c, &a2a, &mp, bytes, &[], "a2a", "ag").unwrap();
         let l1 = d1.comm_log();
         let l2 = d2.comm_log();
         assert_eq!(l1.len(), l2.len());

@@ -233,6 +233,56 @@ pub const BWD_SP2_COMBINE: [&str; SP_MAX_CHUNKS] = [
 ];
 /// Gating network + top-k routing (compute).
 pub const GATE: &str = "gate";
+/// The complete tag vocabulary, scalar constants first, then every
+/// per-chunk array in declaration order. The schedule verifier
+/// ([`crate::schedule::verify`]) checks each emitted tag against this
+/// list — a new tag constant must be added here to be considered
+/// well-formed.
+pub fn all() -> Vec<&'static str> {
+    let mut v = vec![
+        ESP_ALLGATHER,
+        EP_ALLTOALL,
+        ESP_ALLREDUCE,
+        ESP_REDUCESCATTER,
+        MP_REDUCESCATTER,
+        ESP_SPLIT,
+        MP_SPLIT,
+        MP_ALLGATHER,
+        FUSED_ALLTOALL,
+        SAA_COMBINE,
+        AAS_COMBINE,
+        BWD_EP_DISPATCH,
+        BWD_EP_COMBINE,
+        BWD_FUSED_DISPATCH,
+        BWD_FUSED_COMBINE,
+        BWD_EXPERT_DGRAD,
+        BWD_EXPERT_WGRAD,
+        BWD_WGRAD_ALLREDUCE,
+        GATE,
+        EXPERT_FFN,
+        LOCAL_COMBINE,
+        UNGATE,
+    ];
+    for arr in [
+        &SP_DISPATCH,
+        &SP_FFN,
+        &SP_COMBINE,
+        &SP2_DISPATCH,
+        &SP2_FFN,
+        &SP2_SAA,
+        &BWD_SP_DISPATCH,
+        &BWD_SP_DGRAD,
+        &BWD_SP_WGRAD,
+        &BWD_SP_COMBINE,
+        &BWD_SP2_DISPATCH,
+        &BWD_SP2_DGRAD,
+        &BWD_SP2_WGRAD,
+        &BWD_SP2_COMBINE,
+    ] {
+        v.extend(arr.iter().copied());
+    }
+    v
+}
 /// Expert FFN shards (compute).
 pub const EXPERT_FFN: &str = "expert.ffn";
 /// Local partial-sum combine of the N_ESP returned copies (compute).

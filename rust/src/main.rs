@@ -15,6 +15,9 @@
 //!   drive       online adaptive control: run a drifting-traffic trace,
 //!               re-spanning each step and switching schedule under a
 //!               hysteresis band
+//!   lint        statically verify every builder op program over the sweep
+//!               grid (volume conservation, span discipline, frontier
+//!               safety, tag discipline, plane capability, group validity)
 //!
 //! `sim`, `choose`, `sweep` and `drive` accept `--plan <file>` to load a
 //! compiled plan instead of refitting; `sweep` accepts `--cache-dir` for
@@ -59,6 +62,7 @@ fn main() -> ExitCode {
         "bench" => cmd_bench(&rest),
         "trace" => cmd_trace(&rest),
         "drive" => cmd_drive(&rest),
+        "lint" => cmd_lint(&rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -88,7 +92,8 @@ fn print_usage() {
          sweep    Table III sweep summary on a cluster\n  \
          bench    regenerate paper tables/figures\n  \
          trace    emit Chrome trace of a simulated schedule or drive run\n  \
-         drive    online adaptive control over a drifting-traffic trace\n\n\
+         drive    online adaptive control over a drifting-traffic trace\n  \
+         lint     statically verify every builder op program on the grid\n\n\
          run `parm <command> --help` for options"
     );
 }
@@ -961,5 +966,138 @@ fn cmd_drive(rest: &[String]) -> Result<()> {
         parm::bench::merge_drive_summary(Path::new(path), &parm::bench::drive_summary(&outcome))?;
         eprintln!("merged drive summary into {path}");
     }
+    Ok(())
+}
+
+/// `parm lint`: run the static schedule verifier over every builder
+/// program of the sweep grid — all schedule families × forward/backward/
+/// iteration × uniform and skewed load profiles — without executing any
+/// of them. The `N programs verified, F findings` summary line is grepped
+/// verbatim by CI's lint-schedules job; exit is nonzero on any finding.
+fn cmd_lint(rest: &[String]) -> Result<()> {
+    use parm::schedule::{builders, ops, verify};
+    use parm::util::json::Json;
+    let mut specs = vec![
+        Spec::opt_default("cluster", "testbed_b", "cluster name or JSON path"),
+        Spec::opt("cluster-json", "cluster topology JSON (overrides --cluster)"),
+    ];
+    specs.extend_from_slice(GRID_SPECS);
+    specs.extend_from_slice(&[
+        Spec::opt("json", "write the full findings report JSON to PATH"),
+        Spec::opt(
+            "bench-json",
+            "merge program/finding counts (per rule) into the sweep bench JSON at PATH",
+        ),
+        Spec::flag("help", "show help"),
+    ]);
+    let a = Args::parse(rest, &specs)?;
+    if help_guard(
+        &a,
+        "lint",
+        "statically verify every builder op program over the sweep grid",
+        &specs,
+    ) {
+        return Ok(());
+    }
+    let cluster = cluster_from(&a)?;
+    let configs = sweep_configs(&a, &cluster)?;
+    anyhow::ensure!(!configs.is_empty(), "no feasible configs to lint on {}", cluster.name);
+    let mut programs = 0usize;
+    let mut all: Vec<parm::schedule::VerifyError> = Vec::new();
+    let mut reports: Vec<Json> = Vec::new();
+    for cfg in &configs {
+        let (r, _) = closedform::optimal_chunks(&cluster, cfg);
+        let (r2, _) = closedform::optimal_chunks_sp2(&cluster, cfg);
+        let kinds = [
+            ScheduleKind::Baseline,
+            ScheduleKind::S1,
+            ScheduleKind::S2,
+            ScheduleKind::S2Aas,
+            ScheduleKind::Pipelined { chunks: r },
+            ScheduleKind::PipelinedUniform { chunks: r },
+            ScheduleKind::PipelinedS2 { chunks: r2 },
+        ];
+        // The skewed profile exercises the load-aware span policy:
+        // harmonic routing weights through the same gate model the
+        // traffic layer uses for drifting traces.
+        let w: Vec<f64> = (0..cfg.e).map(|i| 1.0 / (i + 1) as f64).collect();
+        let skewed = ops::loads_from_weights(cfg, cfg.t_pausemp(), &w);
+        for kind in kinds {
+            for loads in [None, Some(skewed.as_slice())] {
+                let built = [
+                    ("forward", builders::forward_ops_measured(kind, cfg, loads)),
+                    ("backward", builders::backward_ops_measured(kind, cfg, loads)),
+                    ("iteration", builders::iteration_ops_measured(kind, cfg, loads)),
+                ];
+                for (dir, program) in built {
+                    programs += 1;
+                    let mut findings =
+                        verify::verify_program(&program, cfg, &cluster, verify::Plane::Timing);
+                    if dir == "forward" {
+                        // Forward programs also run on the data plane —
+                        // prove they carry no backward-only ops.
+                        findings.extend(verify::plane_findings(&program, verify::Plane::Data));
+                    }
+                    for f in &findings {
+                        reports.push(Json::obj(vec![
+                            ("cfg", Json::str(&cfg.id())),
+                            ("schedule", Json::str(&kind.label())),
+                            ("direction", Json::str(dir)),
+                            (
+                                "loads",
+                                Json::str(if loads.is_some() { "skewed" } else { "uniform" }),
+                            ),
+                            ("rule", Json::str(f.rule.id())),
+                            ("op", f.op_index.map(|i| Json::num(i as f64)).unwrap_or(Json::Null)),
+                            ("message", Json::str(&f.message)),
+                        ]));
+                    }
+                    all.extend(findings);
+                }
+            }
+        }
+    }
+    let counts = parm::schedule::rule_counts(&all);
+    // CI greps this line verbatim — keep the format stable.
+    println!("{programs} programs verified, {} findings", all.len());
+    for (rule, n) in &counts {
+        println!("  {rule:<20} {n}");
+    }
+    for r in &reports {
+        eprintln!(
+            "finding: {} {} {} ({}): [{}] {}",
+            r.get("cfg").as_str().unwrap_or("?"),
+            r.get("schedule").as_str().unwrap_or("?"),
+            r.get("direction").as_str().unwrap_or("?"),
+            r.get("loads").as_str().unwrap_or("?"),
+            r.get("rule").as_str().unwrap_or("?"),
+            r.get("message").as_str().unwrap_or("?"),
+        );
+    }
+    let per_rule =
+        Json::Obj(counts.iter().map(|(k, v)| (k.to_string(), Json::num(*v as f64))).collect());
+    if let Some(path) = a.get("json") {
+        let doc = Json::obj(vec![
+            ("cluster", Json::str(&cluster.name)),
+            ("configs", Json::num(configs.len() as f64)),
+            ("programs", Json::num(programs as f64)),
+            ("findings", Json::num(all.len() as f64)),
+            ("per_rule", per_rule.clone()),
+            ("reports", Json::Arr(reports)),
+        ]);
+        std::fs::write(path, doc.to_pretty())?;
+        eprintln!("wrote lint report JSON to {path}");
+    }
+    if let Some(path) = a.get("bench-json") {
+        let summary = Json::obj(vec![
+            ("cluster", Json::str(&cluster.name)),
+            ("programs", Json::num(programs as f64)),
+            ("findings", Json::num(all.len() as f64)),
+            ("per_rule", per_rule),
+        ]);
+        parm::bench::merge_lint_summary(Path::new(path), &summary)?;
+        eprintln!("merged lint summary into {path}");
+    }
+    anyhow::ensure!(all.is_empty(), "schedule lint failed: {} findings", all.len());
     Ok(())
 }

@@ -26,6 +26,7 @@ use crate::moe::gating::{self, DispatchInfo};
 use crate::moe::weights::GlobalWeights;
 use crate::schedule::builders::forward_ops_measured;
 use crate::schedule::interp::{run_program, Machine};
+use crate::schedule::verify;
 use crate::schedule::{forward_ops, Op, ScheduleKind};
 use crate::util::prng::Rng;
 
@@ -126,6 +127,13 @@ fn run_ops(
     state: &LayerState,
     backend: &mut dyn ExpertBackend,
 ) -> Result<ExecResult> {
+    // Plane-capability pre-scan (always on): a backward op in a data-plane
+    // program is a structured verifier diagnostic naming the op index and
+    // family, not a mid-walk bail from whichever machine arm sees it
+    // first. The per-op bail arms below remain as the backstop.
+    if let Some(f) = verify::plane_findings(ops, verify::Plane::Data).into_iter().next() {
+        bail!("schedule {kind:?} is not executable on the data plane: {f}");
+    }
     let mut transport = DataTransport::with_wire(state.cfg.wire);
     let mut machine = DataMachine::new(state, backend, ops);
     run_program(ops, &state.groups, &mut transport, &mut machine)?;

@@ -126,7 +126,7 @@ pub fn measure_collective(
             let per_pair = x / par.p as f64;
             let world = groups.world();
             let mp_groups = groups.all_groups(GroupKind::Mp);
-            saa::saa_lower(&mut dag, cluster, &world, &mp_groups, per_pair, &[], "m", "g");
+            saa::saa_lower(&mut dag, cluster, &world, &mp_groups, per_pair, &[], "m", "g")?;
         }
     }
     Ok(Simulator::new(cluster).run(&dag).makespan)

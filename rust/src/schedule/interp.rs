@@ -147,7 +147,7 @@ where
 /// end to end (its MP-AllGather forwards included, on both planes); the
 /// plain MP/ESP epilogues ride AllGather; the wgrad AllReduce has its own
 /// leg. Compute/local ops return `None` (no sends to price).
-fn wire_leg_of(op: &Op, fwd_a2a_seen: &mut usize) -> Option<WireLeg> {
+pub(crate) fn wire_leg_of(op: &Op, fwd_a2a_seen: &mut usize) -> Option<WireLeg> {
     match op {
         Op::EpAlltoAll { .. } | Op::FusedAlltoAll { .. } => {
             let leg = if *fwd_a2a_seen == 0 { WireLeg::Dispatch } else { WireLeg::Combine };
@@ -246,6 +246,15 @@ where
     T: Transport,
     M: Machine<T>,
 {
+    // Debug builds statically verify every program before walking it, so
+    // the whole test suite transitively exercises the structural rules of
+    // `schedule::verify` (tag/span/frontier discipline; the config-aware
+    // volume rules run in the lowering, which knows the config).
+    #[cfg(debug_assertions)]
+    if let Err(e) = super::verify::check_structure(ops) {
+        bail!("malformed op program: {e}");
+    }
+
     let p = groups.par.p;
     let mut frontier: Vec<Option<T::Handle>> = vec![None; p];
     let mut pipe: Option<PipeState<T::Handle>> = None;

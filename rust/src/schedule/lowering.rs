@@ -87,6 +87,19 @@ pub fn lower_ops(ops: &[Op], cfg: &MoeLayerConfig, cluster: &ClusterTopology) ->
         cluster.total_gpus()
     );
     let groups = ProcessGroups::new(cfg.par)?;
+    // Debug builds run the FULL static verifier (structure + volume
+    // conservation + span capacity + group validity) here, where the
+    // config is known — every simulated program in the test suite is
+    // proved well-formed before it is lowered.
+    #[cfg(debug_assertions)]
+    {
+        let findings = super::verify::verify_program(ops, cfg, cluster, super::verify::Plane::Timing);
+        ensure!(
+            findings.is_empty(),
+            "schedule program failed static verification:\n{}",
+            findings.iter().map(|f| format!("  {f}")).collect::<Vec<_>>().join("\n")
+        );
+    }
     let mut dag = SimDag::new();
     // Op byte fields are model-width; the transport prices each leg at the
     // config's wire dtype (a no-op scale of 1.0 under the default policy).

@@ -113,13 +113,52 @@
 //! measurement through [`builders::forward_ops_measured`]; on the CLI it
 //! is `parm sim --spans measured`, and on the data plane
 //! [`crate::moe::exec::run_schedule_measured`].
+//!
+//! # The static verifier
+//!
+//! [`verify`] proves an op program well-formed WITHOUT executing it — a
+//! single symbolic walk that mirrors the interpreter's frontier semantics
+//! over a dependency graph and reports typed [`verify::VerifyError`]s,
+//! one per violated rule. Six rules cover the invariant classes the
+//! schedules rest on:
+//!
+//! * `volume-conservation` — monolithic collectives carry their
+//!   closed-form volumes; a pipelined region's chunked dispatch/combine
+//!   bytes sum to the monolithic fused AlltoAll; combine chunk k
+//!   transposes dispatch chunk k; chunk FFN flops are positive and
+//!   bounded by the dense capacity FFN.
+//! * `span-discipline` — chunk spans cover whole capacity rows, are
+//!   emitted in order, and partition the capacity.
+//! * `frontier-safety` — every op's completion is reachable from the
+//!   program's final join (no detached completions, even for zero-byte
+//!   chunks) and the dependency graph is acyclic.
+//! * `tag-discipline` — every tag exists in [`crate::comm::tags::all`],
+//!   chunk indices are dense `0..r`, and the wire-leg classification
+//!   matches the op kind.
+//! * `plane-capability` — backward ops in a data-plane program are a
+//!   structured diagnostic, not a runtime bail.
+//! * `group-validity` — MP/EP/ESP groups partition the world (the same
+//!   logic [`crate::comm::saa::validate_mp_partition`] delegates to).
+//!
+//! Three wiring points keep the verifier honest: debug builds run the
+//! structural rules inside [`interp::run_program`] on EVERY program (so
+//! the whole test suite transitively exercises them) and the full
+//! config-aware pass inside [`lowering::lower_ops`]; `parm lint` sweeps
+//! builders × families × a config grid from the CLI; and
+//! `tests/verify_mutations.rs` pins each rule with seeded IR corruptions.
+//! To add a rule, see the "How to add a rule" section of [`verify`].
 
 pub mod builders;
 pub mod interp;
 pub mod lowering;
 pub mod ops;
+pub mod verify;
 
 pub use builders::{backward_ops, backward_ops_overlap, forward_ops, iteration_ops};
 pub use interp::{run_program, Machine};
 pub use lowering::{lower_ops, simulate_backward_overlap, simulate_forward, simulate_iteration};
 pub use ops::{Op, ScheduleKind};
+pub use verify::{
+    check_program, check_structure, rule_counts, verify_program, verify_structure, Plane, Rule,
+    VerifyError,
+};

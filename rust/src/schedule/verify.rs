@@ -1,0 +1,1079 @@
+//! Static schedule-program verifier: proves an [`Op`] program well-formed
+//! WITHOUT executing it.
+//!
+//! Every schedule family is "just" an op program fed to the one shared
+//! interpreter, so every invariant the schedules rest on — chunk volumes
+//! conserving the monolithic collective, backward legs transposing the
+//! forward ones, completion joins never detaching, MP groups partitioning
+//! the a2a group — can be checked once, over the IR, for all families ×
+//! forward/backward × every config. This module is that check: a single
+//! linear walk that mirrors the interpreter's frontier semantics
+//! symbolically and reports typed [`VerifyError`]s instead of running (or
+//! panicking) anything.
+//!
+//! # Rule set
+//!
+//! | rule id               | proves |
+//! |-----------------------|--------|
+//! | `volume-conservation` | monolithic collectives carry their closed-form volumes; a region's chunked dispatch/combine bytes sum to the monolithic fused AlltoAll; combine chunk k transposes dispatch chunk k; chunk FFN flops are positive and bounded by the dense capacity FFN |
+//! | `span-discipline`     | dispatch bytes decode to an integral row count; chunk spans partition the capacity; dispatch chunk indices are strictly increasing; every chunk op agrees on the region's chunk count `of` |
+//! | `frontier-safety`     | chunk ops only appear inside an open pipelined region; FFN/dgrad/wgrad k follow dispatch k; combine k joins an FFN completion; no chunk combines twice; the region closes; every op's completion is reachable from the program's final join and the dependency graph is acyclic |
+//! | `tag-discipline`      | chunk `index`/`of` fit the [`tags`] vocabulary bounds; dispatch chunk indices are dense `0..of`; every emitted tag exists in [`tags::all`]; the wire-leg classification matches the op kind |
+//! | `plane-capability`    | a data-plane program contains no backward/training-only ops (`Bwd*`, the ReduceScatter adjoints) |
+//! | `group-validity`      | the parallel degrees validate; MP/EP/ESP groups partition the world (same logic the SAA lowering uses); the layout fits the cluster |
+//!
+//! # How to add a rule
+//!
+//! 1. Add a variant to [`Rule`] (and its id in [`Rule::id`]).
+//! 2. Emit findings from the symbolic walk in [`Verifier::step`] (per-op
+//!    rules), [`Verifier::close_region`] (whole-region rules), or
+//!    [`verify_program`] (whole-program/config rules) via
+//!    `self.flag(rule, Some(op_index), message)`.
+//! 3. Pin the rule with a seeded corruption in `tests/verify_mutations.rs`
+//!    — every rule must have at least one mutation only it catches.
+//!
+//! Structural rules (everything not needing a config) also run under
+//! [`verify_structure`], which the interpreter calls on every program in
+//! debug builds — so the whole test suite transitively exercises them.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+use crate::cluster::{GroupKind, ProcessGroups};
+use crate::comm::tags;
+use crate::config::{ClusterTopology, MoeLayerConfig, WireLeg};
+
+use super::interp;
+use super::ops::{self, Op};
+
+/// Relative tolerance for volume conservation.
+const VOL_TOL: f64 = 1e-9;
+/// Absolute tolerance for "bytes decode to an integral row count".
+const ROW_TOL: f64 = 1e-6;
+
+/// The verifier's rule set. Each finding cites exactly one rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Rule {
+    VolumeConservation,
+    SpanDiscipline,
+    FrontierSafety,
+    TagDiscipline,
+    PlaneCapability,
+    GroupValidity,
+}
+
+impl Rule {
+    /// All rules, in reporting order.
+    pub const ALL: [Rule; 6] = [
+        Rule::VolumeConservation,
+        Rule::SpanDiscipline,
+        Rule::FrontierSafety,
+        Rule::TagDiscipline,
+        Rule::PlaneCapability,
+        Rule::GroupValidity,
+    ];
+
+    /// Stable kebab-case rule id (JSON reports, CI grep).
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::VolumeConservation => "volume-conservation",
+            Rule::SpanDiscipline => "span-discipline",
+            Rule::FrontierSafety => "frontier-safety",
+            Rule::TagDiscipline => "tag-discipline",
+            Rule::PlaneCapability => "plane-capability",
+            Rule::GroupValidity => "group-validity",
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One typed finding: which rule, where in the program, and why.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VerifyError {
+    pub rule: Rule,
+    /// Index into the op program, when the finding is op-local.
+    pub op_index: Option<usize>,
+    pub message: String,
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.op_index {
+            Some(i) => write!(f, "[{}] op {}: {}", self.rule, i, self.message),
+            None => write!(f, "[{}] {}", self.rule, self.message),
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// Which interpreter a program targets: the DAG timing plane runs every op;
+/// the data plane executes forward numerics only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Plane {
+    Timing,
+    Data,
+}
+
+/// Structural verification: every rule that needs only the op program
+/// (tag + span ordering discipline, frontier safety, leg consistency).
+/// This is the debug-assertion hook the interpreter runs on EVERY program.
+pub fn verify_structure(program: &[Op]) -> Vec<VerifyError> {
+    let mut v = Verifier::new(None);
+    v.walk(program);
+    v.findings
+}
+
+/// [`verify_structure`], first finding as an `Err` (the interpreter hook).
+pub fn check_structure(program: &[Op]) -> Result<(), VerifyError> {
+    match verify_structure(program).into_iter().next() {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Full static verification of `program` against its config, cluster, and
+/// target plane: structure + volume conservation + span capacity + group
+/// validity + plane capability. Returns ALL findings, in discovery order.
+pub fn verify_program(
+    program: &[Op],
+    cfg: &MoeLayerConfig,
+    cluster: &ClusterTopology,
+    plane: Plane,
+) -> Vec<VerifyError> {
+    let mut v = Verifier::new(Some(cfg));
+    v.walk(program);
+    let mut findings = v.findings;
+    findings.extend(group_findings(cfg, cluster));
+    findings.extend(plane_findings(program, plane));
+    findings
+}
+
+/// [`verify_program`], first finding as an `Err` (the lowering hook).
+pub fn check_program(
+    program: &[Op],
+    cfg: &MoeLayerConfig,
+    cluster: &ClusterTopology,
+    plane: Plane,
+) -> Result<(), VerifyError> {
+    match verify_program(program, cfg, cluster, plane).into_iter().next() {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Findings per rule id, for the lint report / bench JSON merge. Every
+/// rule appears (zero-filled) so reports have a stable shape.
+pub fn rule_counts(findings: &[VerifyError]) -> BTreeMap<&'static str, usize> {
+    let mut counts: BTreeMap<&'static str, usize> = Rule::ALL.iter().map(|r| (r.id(), 0)).collect();
+    for f in findings {
+        *counts.entry(f.rule.id()).or_insert(0) += 1;
+    }
+    counts
+}
+
+/// The `plane-capability` rule: ops a data-plane program must not contain.
+/// The data plane executes forward numerics; backward programs exist for
+/// the timing plane only, as do the backward collective adjoints.
+pub fn plane_findings(program: &[Op], plane: Plane) -> Vec<VerifyError> {
+    if plane == Plane::Timing {
+        return Vec::new();
+    }
+    program
+        .iter()
+        .enumerate()
+        .filter(|(_, op)| data_plane_incapable(op))
+        .map(|(i, op)| VerifyError {
+            rule: Rule::PlaneCapability,
+            op_index: Some(i),
+            message: format!(
+                "`{}` is a {} op: the data plane executes forward numerics only \
+                 (use the timing plane for backward programs)",
+                op_tag_lossy(op),
+                op_family(op),
+            ),
+        })
+        .collect()
+}
+
+/// True when the data-plane machine cannot execute `op` (mirrors the
+/// rejection arms of `moe::exec`'s `DataMachine`).
+pub fn data_plane_incapable(op: &Op) -> bool {
+    matches!(
+        op,
+        Op::EspReduceScatter { .. }
+            | Op::MpReduceScatter { .. }
+            | Op::BwdEpAlltoAll { .. }
+            | Op::BwdFusedAlltoAll { .. }
+            | Op::BwdWgradAllReduce { .. }
+            | Op::BwdExpertDgrad { .. }
+            | Op::BwdExpertWgrad { .. }
+            | Op::BwdSpDispatch { .. }
+            | Op::BwdSpCombine { .. }
+            | Op::BwdSpDgrad { .. }
+            | Op::BwdSpWgrad { .. }
+            | Op::BwdSp2Dispatch { .. }
+            | Op::BwdSp2Combine { .. }
+            | Op::BwdSp2Dgrad { .. }
+            | Op::BwdSp2Wgrad { .. }
+    )
+}
+
+/// Short family name for diagnostics.
+pub fn op_family(op: &Op) -> &'static str {
+    match op {
+        Op::EspReduceScatter { .. } | Op::MpReduceScatter { .. } => "backward collective adjoint",
+        Op::BwdEpAlltoAll { .. } | Op::BwdFusedAlltoAll { .. } => "backward AlltoAll",
+        Op::BwdWgradAllReduce { .. } => "backward wgrad AllReduce",
+        Op::BwdExpertDgrad { .. } | Op::BwdExpertWgrad { .. } => "backward expert compute",
+        Op::BwdSpDispatch { .. }
+        | Op::BwdSpCombine { .. }
+        | Op::BwdSpDgrad { .. }
+        | Op::BwdSpWgrad { .. } => "backward SP chunk",
+        Op::BwdSp2Dispatch { .. }
+        | Op::BwdSp2Combine { .. }
+        | Op::BwdSp2Dgrad { .. }
+        | Op::BwdSp2Wgrad { .. } => "backward SP2 chunk",
+        Op::SpDispatch { .. } | Op::SpCombine { .. } | Op::SpExpertFfn { .. } => "SP chunk",
+        Op::Sp2Dispatch { .. } | Op::Sp2Saa { .. } | Op::Sp2ExpertFfn { .. } => "SP2 chunk",
+        _ => "forward",
+    }
+}
+
+/// The partition check shared with the SAA/AAS lowering
+/// (`comm::saa::validate_mp_partition` delegates here): `mp_groups` must
+/// partition `a2a_group` — no foreign ranks, no overlaps, no gaps.
+/// Messages are kept stable; callers match on them in tests.
+pub fn validate_partition(
+    a2a_group: &[usize],
+    mp_groups: &[Vec<usize>],
+) -> Result<(), VerifyError> {
+    let group_err =
+        |msg: String| VerifyError { rule: Rule::GroupValidity, op_index: None, message: msg };
+    let mut seen: BTreeSet<usize> = BTreeSet::new();
+    for g in mp_groups {
+        for &r in g {
+            if !a2a_group.contains(&r) {
+                return Err(group_err(format!(
+                    "mp group member {r} is not in the a2a group — mp_groups must partition it"
+                )));
+            }
+            if !seen.insert(r) {
+                return Err(group_err(format!(
+                    "rank {r} appears in more than one mp group — overlapping partition"
+                )));
+            }
+        }
+    }
+    for &r in a2a_group {
+        if !seen.contains(&r) {
+            return Err(group_err(format!(
+                "a2a group member {r} is missing from the mp partition — incomplete partition"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// The `group-validity` rule: parallel degrees validate, every group kind
+/// partitions the world, and the layout fits the cluster.
+fn group_findings(cfg: &MoeLayerConfig, cluster: &ClusterTopology) -> Vec<VerifyError> {
+    let mut out = Vec::new();
+    match cfg.par.validate() {
+        Err(e) => out.push(VerifyError {
+            rule: Rule::GroupValidity,
+            op_index: None,
+            message: format!("parallel degrees invalid: {e:#}"),
+        }),
+        Ok(()) => {
+            let groups = ProcessGroups { par: cfg.par };
+            let world = groups.world();
+            for kind in [GroupKind::Mp, GroupKind::Ep, GroupKind::Esp] {
+                if let Err(e) = validate_partition(&world, &groups.all_groups(kind)) {
+                    out.push(VerifyError {
+                        rule: Rule::GroupValidity,
+                        op_index: None,
+                        message: format!(
+                            "{kind:?} groups do not partition the world: {}",
+                            e.message
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    if cfg.par.p > cluster.total_gpus() {
+        out.push(VerifyError {
+            rule: Rule::GroupValidity,
+            op_index: None,
+            message: format!(
+                "layout needs {} GPUs but cluster `{}` has {}",
+                cfg.par.p,
+                cluster.name,
+                cluster.total_gpus()
+            ),
+        });
+    }
+    out
+}
+
+/// Role an op plays inside a pipelined region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ChunkRole {
+    Dispatch,
+    Ffn,
+    Wgrad,
+    Combine,
+}
+
+/// `(role, index, of)` for the chunked (pipelined-region) ops.
+fn chunk_op(op: &Op) -> Option<(ChunkRole, usize, usize)> {
+    match *op {
+        Op::SpDispatch { index, of, .. }
+        | Op::Sp2Dispatch { index, of, .. }
+        | Op::BwdSpDispatch { index, of, .. }
+        | Op::BwdSp2Dispatch { index, of, .. } => Some((ChunkRole::Dispatch, index, of)),
+        Op::SpExpertFfn { index, of, .. }
+        | Op::Sp2ExpertFfn { index, of, .. }
+        | Op::BwdSpDgrad { index, of, .. }
+        | Op::BwdSp2Dgrad { index, of, .. } => Some((ChunkRole::Ffn, index, of)),
+        Op::BwdSpWgrad { index, of, .. } | Op::BwdSp2Wgrad { index, of, .. } => {
+            Some((ChunkRole::Wgrad, index, of))
+        }
+        Op::SpCombine { index, of, .. }
+        | Op::Sp2Saa { index, of, .. }
+        | Op::BwdSpCombine { index, of, .. }
+        | Op::BwdSp2Combine { index, of, .. } => Some((ChunkRole::Combine, index, of)),
+        _ => None,
+    }
+}
+
+/// The op's single magnitude field (bytes or flops).
+fn op_scalar(op: &Op) -> f64 {
+    match *op {
+        Op::EspAllGather { bytes_per_rank }
+        | Op::EspSplit { bytes_per_rank }
+        | Op::MpSplit { bytes_per_rank }
+        | Op::MpAllGather { bytes_per_rank } => bytes_per_rank,
+        Op::BwdWgradAllReduce { bytes_per_rank, .. } => bytes_per_rank,
+        Op::EspAllReduce { total_bytes }
+        | Op::EspReduceScatter { total_bytes }
+        | Op::MpReduceScatter { total_bytes } => total_bytes,
+        Op::EpAlltoAll { bytes_per_pair }
+        | Op::FusedAlltoAll { bytes_per_pair }
+        | Op::SaaCombine { bytes_per_pair }
+        | Op::AasCombine { bytes_per_pair } => bytes_per_pair,
+        Op::BwdEpAlltoAll { bytes_per_pair, .. } | Op::BwdFusedAlltoAll { bytes_per_pair, .. } => {
+            bytes_per_pair
+        }
+        Op::SpDispatch { bytes_per_pair, .. }
+        | Op::SpCombine { bytes_per_pair, .. }
+        | Op::Sp2Dispatch { bytes_per_pair, .. }
+        | Op::Sp2Saa { bytes_per_pair, .. }
+        | Op::BwdSpDispatch { bytes_per_pair, .. }
+        | Op::BwdSpCombine { bytes_per_pair, .. }
+        | Op::BwdSp2Dispatch { bytes_per_pair, .. }
+        | Op::BwdSp2Combine { bytes_per_pair, .. } => bytes_per_pair,
+        Op::Gate { flops_per_rank }
+        | Op::ExpertFfn { flops_per_rank }
+        | Op::LocalCombine { flops_per_rank }
+        | Op::Ungate { flops_per_rank }
+        | Op::BwdExpertDgrad { flops_per_rank }
+        | Op::BwdExpertWgrad { flops_per_rank } => flops_per_rank,
+        Op::SpExpertFfn { flops_per_rank, .. }
+        | Op::Sp2ExpertFfn { flops_per_rank, .. }
+        | Op::BwdSpDgrad { flops_per_rank, .. }
+        | Op::BwdSpWgrad { flops_per_rank, .. }
+        | Op::BwdSp2Dgrad { flops_per_rank, .. }
+        | Op::BwdSp2Wgrad { flops_per_rank, .. } => flops_per_rank,
+    }
+}
+
+/// `op.tag()` where safe; a description otherwise (`Op::tag` indexes the
+/// per-chunk tag arrays, so out-of-vocabulary chunk indices would panic).
+fn op_tag_lossy(op: &Op) -> String {
+    match chunk_op(op) {
+        Some((_, index, _)) if index >= tags::SP_MAX_CHUNKS => format!("chunk op index {index}"),
+        _ => op.tag().to_string(),
+    }
+}
+
+/// The wire leg each op kind must classify to. Forward `EpAlltoAll` /
+/// `FusedAlltoAll` are positional (first = dispatch, later = combine), so
+/// they accept either AlltoAll leg.
+enum LegExpect {
+    Fixed(Option<WireLeg>),
+    FwdA2A,
+}
+
+fn expected_leg(op: &Op) -> LegExpect {
+    match op {
+        Op::EpAlltoAll { .. } | Op::FusedAlltoAll { .. } => LegExpect::FwdA2A,
+        Op::SpDispatch { .. }
+        | Op::Sp2Dispatch { .. }
+        | Op::BwdSpDispatch { .. }
+        | Op::BwdSp2Dispatch { .. } => LegExpect::Fixed(Some(WireLeg::Dispatch)),
+        Op::BwdEpAlltoAll { combine, .. } | Op::BwdFusedAlltoAll { combine, .. } => {
+            LegExpect::Fixed(Some(if *combine { WireLeg::Combine } else { WireLeg::Dispatch }))
+        }
+        Op::SaaCombine { .. }
+        | Op::AasCombine { .. }
+        | Op::SpCombine { .. }
+        | Op::Sp2Saa { .. }
+        | Op::BwdSpCombine { .. }
+        | Op::BwdSp2Combine { .. } => LegExpect::Fixed(Some(WireLeg::Combine)),
+        Op::EspAllGather { .. }
+        | Op::MpAllGather { .. }
+        | Op::EspReduceScatter { .. }
+        | Op::MpReduceScatter { .. }
+        | Op::EspAllReduce { .. } => LegExpect::Fixed(Some(WireLeg::AllGather)),
+        Op::BwdWgradAllReduce { .. } => LegExpect::Fixed(Some(WireLeg::Wgrad)),
+        _ => LegExpect::Fixed(None),
+    }
+}
+
+/// Symbolic state of one open pipelined region (mirrors the interpreter's
+/// `PipeState`, with dependency-graph node ids instead of transport
+/// handles).
+struct Region {
+    of: usize,
+    /// Op index of the dispatch that opened the region.
+    opened_at: usize,
+    /// Comm-stream frontier (node ids).
+    comm: Vec<usize>,
+    /// Compute-stream frontier (node ids).
+    comp: Vec<usize>,
+    /// Chunk index → dispatch node.
+    dispatched: BTreeMap<usize, usize>,
+    /// Chunk index → last FFN/dgrad node (what the combine joins).
+    ffn_slot: BTreeMap<usize, usize>,
+    /// Chunk indices already combined (protocol: each exactly once).
+    combined: BTreeSet<usize>,
+    combines_done: usize,
+    last_dispatch: Option<usize>,
+    /// Byte accumulators. The sums include every chunk op (even ones with
+    /// out-of-range indices), so a pure index corruption does not cascade
+    /// into a volume finding; the per-index maps hold only well-indexed
+    /// ops.
+    dispatch_sum: f64,
+    combine_sum: f64,
+    dispatch_bytes: BTreeMap<usize, f64>,
+    combine_bytes: BTreeMap<usize, f64>,
+    ffn_flops: f64,
+}
+
+impl Region {
+    fn new(of: usize, opened_at: usize, frontier: &[usize]) -> Region {
+        Region {
+            of,
+            opened_at,
+            comm: frontier.to_vec(),
+            comp: frontier.to_vec(),
+            dispatched: BTreeMap::new(),
+            ffn_slot: BTreeMap::new(),
+            combined: BTreeSet::new(),
+            combines_done: 0,
+            last_dispatch: None,
+            dispatch_sum: 0.0,
+            combine_sum: 0.0,
+            dispatch_bytes: BTreeMap::new(),
+            combine_bytes: BTreeMap::new(),
+            ffn_flops: 0.0,
+        }
+    }
+}
+
+/// `|got - want|` within the relative volume tolerance.
+fn vol_close(got: f64, want: f64) -> bool {
+    (got - want).abs() <= VOL_TOL * want.abs().max(1.0)
+}
+
+/// The symbolic walker: one pass over the program, mirroring the
+/// interpreter's frontier/region/deferred semantics on a dependency graph
+/// whose nodes are op indices.
+struct Verifier<'a> {
+    cfg: Option<&'a MoeLayerConfig>,
+    findings: Vec<VerifyError>,
+    /// `deps[i]` = graph dependencies (node ids) of op `i`.
+    deps: Vec<Vec<usize>>,
+    /// Ops whose completion must be reachable from the final join (all but
+    /// the free splits).
+    needs_reach: Vec<bool>,
+    /// Ops that already carry a finding — exempt from the reachability
+    /// backstop so one corruption yields one finding, not a cascade.
+    flagged: Vec<bool>,
+    frontier: Vec<usize>,
+    deferred: Vec<usize>,
+    region: Option<Region>,
+    fwd_a2a_seen: usize,
+    vocab: Vec<&'static str>,
+}
+
+impl<'a> Verifier<'a> {
+    fn new(cfg: Option<&'a MoeLayerConfig>) -> Verifier<'a> {
+        Verifier {
+            cfg,
+            findings: Vec::new(),
+            deps: Vec::new(),
+            needs_reach: Vec::new(),
+            flagged: Vec::new(),
+            frontier: Vec::new(),
+            deferred: Vec::new(),
+            region: None,
+            fwd_a2a_seen: 0,
+            vocab: tags::all(),
+        }
+    }
+
+    fn flag(&mut self, rule: Rule, op_index: Option<usize>, message: String) {
+        if let Some(i) = op_index {
+            if let Some(slot) = self.flagged.get_mut(i) {
+                *slot = true;
+            }
+        }
+        self.findings.push(VerifyError { rule, op_index, message });
+    }
+
+    fn walk(&mut self, program: &[Op]) {
+        let n = program.len();
+        self.deps = vec![Vec::new(); n];
+        self.needs_reach = vec![true; n];
+        self.flagged = vec![false; n];
+        for (i, op) in program.iter().enumerate() {
+            self.step(i, op);
+        }
+        self.finish(n);
+    }
+
+    /// Per-op rules + symbolic interpretation of op `i`.
+    fn step(&mut self, i: usize, op: &Op) {
+        // Magnitudes must be finite and non-negative before any sum is
+        // meaningful.
+        let scalar = op_scalar(op);
+        if !scalar.is_finite() || scalar < 0.0 {
+            self.flag(
+                Rule::VolumeConservation,
+                Some(i),
+                format!("op magnitude {scalar} is negative or non-finite"),
+            );
+        }
+
+        // Tag-discipline bounds come FIRST: `Op::tag()` indexes the
+        // per-chunk tag arrays, so an out-of-vocabulary index would panic
+        // the very accessor every later rule uses.
+        if let Some((role, index, of)) = chunk_op(op) {
+            if of == 0 || of > tags::SP_MAX_CHUNKS || index >= of {
+                self.flag(
+                    Rule::TagDiscipline,
+                    Some(i),
+                    format!(
+                        "chunk index {index} of {of} is outside the tag vocabulary \
+                         (need 1 <= of <= {} and index < of)",
+                        tags::SP_MAX_CHUNKS
+                    ),
+                );
+                // Mirror the interpreter's region accounting just enough to
+                // avoid cascading findings: combines still count toward the
+                // region's close, and chunked bytes toward its volume sums.
+                let mut close = false;
+                if let Some(reg) = self.region.as_mut() {
+                    match role {
+                        ChunkRole::Dispatch => reg.dispatch_sum += scalar,
+                        ChunkRole::Combine => {
+                            reg.combine_sum += scalar;
+                            reg.combines_done += 1;
+                            close = reg.combines_done == reg.of;
+                        }
+                        _ => {}
+                    }
+                }
+                if close {
+                    self.close_region(i);
+                }
+                return;
+            }
+        }
+
+        let tag = op.tag();
+        if !self.vocab.contains(&tag) {
+            self.flag(
+                Rule::TagDiscipline,
+                Some(i),
+                format!("tag `{tag}` is not in the comm/tags.rs vocabulary"),
+            );
+        }
+
+        // Wire-leg classification must agree with the op kind.
+        let got = interp::wire_leg_of(op, &mut self.fwd_a2a_seen);
+        match expected_leg(op) {
+            LegExpect::FwdA2A => {
+                if !matches!(got, Some(WireLeg::Dispatch) | Some(WireLeg::Combine)) {
+                    self.flag(
+                        Rule::TagDiscipline,
+                        Some(i),
+                        format!(
+                            "forward AlltoAll classified to wire leg {got:?}, \
+                             want an AlltoAll leg"
+                        ),
+                    );
+                }
+            }
+            LegExpect::Fixed(want) => {
+                if got != want {
+                    self.flag(
+                        Rule::TagDiscipline,
+                        Some(i),
+                        format!("`{tag}` classified to wire leg {got:?}, want {want:?}"),
+                    );
+                }
+            }
+        }
+
+        // Monolithic per-op volume pins (the backward AlltoAlls carry the
+        // SAME closed-form volume as their forward legs — this pin IS the
+        // transposition check for the monolithic families).
+        if let Some(c) = self.cfg {
+            let want = match op {
+                Op::EpAlltoAll { .. } | Op::BwdEpAlltoAll { .. } => {
+                    Some(("EP AlltoAll", ops::bytes_ep_a2a_per_pair(c)))
+                }
+                Op::FusedAlltoAll { .. }
+                | Op::BwdFusedAlltoAll { .. }
+                | Op::SaaCombine { .. }
+                | Op::AasCombine { .. } => {
+                    Some(("fused EP×ESP AlltoAll", ops::bytes_fused_a2a_per_pair(c)))
+                }
+                Op::EspAllReduce { .. } => Some(("ESP AllReduce", ops::bytes_esp_ar_total(c))),
+                Op::BwdWgradAllReduce { .. } => {
+                    Some(("wgrad AllReduce", ops::bytes_wgrad_per_rank(c)))
+                }
+                _ => None,
+            };
+            if let Some((what, want)) = want {
+                if !vol_close(scalar, want) {
+                    self.flag(
+                        Rule::VolumeConservation,
+                        Some(i),
+                        format!(
+                            "`{tag}` carries {scalar} bytes, closed-form {what} volume is {want}"
+                        ),
+                    );
+                }
+            }
+        }
+
+        match chunk_op(op) {
+            Some((role, index, of)) => self.step_chunk(i, role, index, of, scalar),
+            None => match op {
+                Op::EspSplit { .. } | Op::MpSplit { .. } => {
+                    // Free local view change: no completion event.
+                    self.needs_reach[i] = false;
+                }
+                Op::BwdWgradAllReduce { overlap, .. } => {
+                    self.deps[i] = self.frontier.clone();
+                    if *overlap {
+                        // Deferred completion: joined at program end.
+                        self.deferred.push(i);
+                    } else {
+                        self.frontier = vec![i];
+                    }
+                }
+                _ => {
+                    // Plain op on the main frontier (the interpreter runs
+                    // these outside the region streams).
+                    self.deps[i] = self.frontier.clone();
+                    self.frontier = vec![i];
+                }
+            },
+        }
+    }
+
+    /// Symbolic interpretation of a chunked (pipelined-region) op.
+    fn step_chunk(&mut self, i: usize, role: ChunkRole, index: usize, of: usize, scalar: f64) {
+        if role == ChunkRole::Dispatch && self.region.is_none() {
+            self.region = Some(Region::new(of, i, &self.frontier));
+        }
+        let (reg_of, reg_opened) = match self.region.as_ref() {
+            Some(reg) => (reg.of, reg.opened_at),
+            None => {
+                self.flag(
+                    Rule::FrontierSafety,
+                    Some(i),
+                    format!("{role:?} chunk {index} appears outside an open pipelined region"),
+                );
+                return;
+            }
+        };
+        if of != reg_of {
+            self.flag(
+                Rule::SpanDiscipline,
+                Some(i),
+                format!(
+                    "chunk op claims {of} chunks but the region opened at op {reg_opened} \
+                     has {reg_of}"
+                ),
+            );
+        }
+        match role {
+            ChunkRole::Dispatch => {
+                let reg = self.region.as_mut().expect("region open");
+                let prev = reg.last_dispatch;
+                reg.last_dispatch = Some(prev.map_or(index, |l| l.max(index)));
+                self.deps[i] = std::mem::replace(&mut reg.comm, vec![i]);
+                reg.dispatched.insert(index, i);
+                reg.dispatch_sum += scalar;
+                reg.dispatch_bytes.insert(index, scalar);
+                if let Some(last) = prev {
+                    if index <= last {
+                        self.flag(
+                            Rule::SpanDiscipline,
+                            Some(i),
+                            format!(
+                                "dispatch chunk {index} after chunk {last}: \
+                                 dispatch indices must be strictly increasing"
+                            ),
+                        );
+                    }
+                }
+                // Span discipline: dispatch bytes must decode to an
+                // integral number of capacity rows.
+                if let Some(c) = self.cfg {
+                    let row = ops::bytes_sp_chunk_per_pair(c, 1);
+                    let rows = scalar / row;
+                    if (rows - rows.round()).abs() > ROW_TOL {
+                        self.flag(
+                            Rule::SpanDiscipline,
+                            Some(i),
+                            format!(
+                                "dispatch chunk {index} carries {scalar} bytes = {rows} \
+                                 capacity rows of {row} bytes — spans must cover whole rows"
+                            ),
+                        );
+                    }
+                }
+            }
+            ChunkRole::Ffn | ChunkRole::Wgrad => {
+                let reg = self.region.as_mut().expect("region open");
+                let mut deps = std::mem::replace(&mut reg.comp, vec![i]);
+                let missing_dispatch = match reg.dispatched.get(&index) {
+                    Some(&d) => {
+                        deps.push(d);
+                        false
+                    }
+                    None => true,
+                };
+                if role == ChunkRole::Ffn {
+                    reg.ffn_slot.insert(index, i);
+                    reg.ffn_flops += scalar;
+                }
+                self.deps[i] = deps;
+                if missing_dispatch {
+                    let what = if role == ChunkRole::Ffn { "FFN/dgrad" } else { "wgrad" };
+                    self.flag(
+                        Rule::FrontierSafety,
+                        Some(i),
+                        format!("{what} for chunk {index} precedes that chunk's dispatch"),
+                    );
+                }
+            }
+            ChunkRole::Combine => {
+                let reg = self.region.as_mut().expect("region open");
+                let mut deps = std::mem::replace(&mut reg.comm, vec![i]);
+                let missing_ffn = match reg.ffn_slot.get(&index) {
+                    Some(&f) => {
+                        deps.push(f);
+                        false
+                    }
+                    None => true,
+                };
+                let duplicate = !reg.combined.insert(index);
+                reg.combine_sum += scalar;
+                reg.combine_bytes.insert(index, scalar);
+                reg.combines_done += 1;
+                let close = reg.combines_done == reg.of;
+                self.deps[i] = deps;
+                if missing_ffn {
+                    self.flag(
+                        Rule::FrontierSafety,
+                        Some(i),
+                        format!(
+                            "combine for chunk {index} has no FFN/dgrad completion to join \
+                             — its compute would detach from the final frontier"
+                        ),
+                    );
+                }
+                if duplicate {
+                    self.flag(
+                        Rule::FrontierSafety,
+                        Some(i),
+                        format!("chunk {index} combined twice — the region would close early"),
+                    );
+                }
+                if close {
+                    self.close_region(i);
+                }
+            }
+        }
+    }
+
+    /// Region close: join both streams back into the main frontier (the
+    /// interpreter's `merge_region`) and run the whole-region rules.
+    fn close_region(&mut self, close_op: usize) {
+        let reg = self.region.take().expect("close_region with region open");
+        self.frontier = reg.comm.iter().chain(reg.comp.iter()).copied().collect();
+
+        // Tag discipline: dispatch chunk indices must be dense 0..of.
+        let want: BTreeSet<usize> = (0..reg.of).collect();
+        let got: BTreeSet<usize> = reg.dispatched.keys().copied().collect();
+        if got != want {
+            self.flag(
+                Rule::TagDiscipline,
+                Some(close_op),
+                format!(
+                    "region dispatch chunk indices {:?} are not dense 0..{}",
+                    got.iter().collect::<Vec<_>>(),
+                    reg.of
+                ),
+            );
+        }
+
+        let Some(c) = self.cfg else { return };
+        let fused = ops::bytes_fused_a2a_per_pair(c);
+        if !vol_close(reg.dispatch_sum, fused) {
+            self.flag(
+                Rule::VolumeConservation,
+                Some(close_op),
+                format!(
+                    "region dispatch bytes sum to {} but the monolithic fused AlltoAll \
+                     moves {}",
+                    reg.dispatch_sum, fused
+                ),
+            );
+        }
+        if !vol_close(reg.combine_sum, fused) {
+            self.flag(
+                Rule::VolumeConservation,
+                Some(close_op),
+                format!(
+                    "region combine bytes sum to {} but the monolithic fused AlltoAll \
+                     moves {}",
+                    reg.combine_sum, fused
+                ),
+            );
+        }
+        // Per-chunk transposition: combine k moves exactly dispatch k's
+        // bytes (forward: same span; backward: the transposed leg).
+        for (k, &db) in &reg.dispatch_bytes {
+            if let Some(&cb) = reg.combine_bytes.get(k) {
+                if !vol_close(cb, db) {
+                    self.findings.push(VerifyError {
+                        rule: Rule::VolumeConservation,
+                        op_index: Some(close_op),
+                        message: format!(
+                            "chunk {k} combine moves {cb} bytes, its dispatch moved {db}"
+                        ),
+                    });
+                }
+            }
+        }
+        // Span discipline: the spans partition the capacity.
+        let row = ops::bytes_sp_chunk_per_pair(c, 1);
+        let rows = reg.dispatch_sum / row;
+        let cap = c.t_pausemp() as f64;
+        if (rows - cap).abs() > ROW_TOL {
+            self.flag(
+                Rule::SpanDiscipline,
+                Some(close_op),
+                format!("region spans cover {rows} capacity rows, capacity is {cap}"),
+            );
+        }
+        // FFN conservation: positive total, bounded by the dense capacity
+        // FFN (load scaling only ever removes work).
+        let dense = ops::sp_chunk_flops(c, c.t_pausemp());
+        if reg.ffn_flops <= 0.0 {
+            self.flag(
+                Rule::VolumeConservation,
+                Some(close_op),
+                format!("region expert FFN flops sum to {} — no expert compute", reg.ffn_flops),
+            );
+        } else if reg.ffn_flops > dense * (1.0 + VOL_TOL) {
+            self.flag(
+                Rule::VolumeConservation,
+                Some(close_op),
+                format!(
+                    "region expert FFN flops {} exceed the dense capacity FFN {}",
+                    reg.ffn_flops, dense
+                ),
+            );
+        }
+    }
+
+    /// End of program: the region must have closed, and every completion
+    /// must be reachable from the final join.
+    fn finish(&mut self, n: usize) {
+        if let Some(reg) = self.region.take() {
+            self.flag(
+                Rule::FrontierSafety,
+                None,
+                format!(
+                    "pipelined region opened at op {} did not complete: {}/{} combines \
+                     (a chunk's combine is missing)",
+                    reg.opened_at, reg.combines_done, reg.of
+                ),
+            );
+            // Join the streams anyway so the one finding above does not
+            // cascade into per-op reachability findings.
+            self.frontier.extend(reg.comm);
+            self.frontier.extend(reg.comp);
+        }
+
+        // Acyclicity: the graph is built with every edge pointing to an
+        // earlier op, so a forward edge is a structural impossibility —
+        // checked anyway as the backstop the reachability walk rests on.
+        for i in 0..n {
+            if self.deps[i].iter().any(|&d| d >= i) {
+                self.findings.push(VerifyError {
+                    rule: Rule::FrontierSafety,
+                    op_index: Some(i),
+                    message: "dependency graph has a forward edge (cycle)".to_string(),
+                });
+            }
+        }
+
+        // Reachability: reverse walk from the final join (frontier +
+        // deferred completions) over the dependency edges.
+        let mut reached = vec![false; n];
+        let mut stack: Vec<usize> =
+            self.frontier.iter().chain(self.deferred.iter()).copied().collect();
+        while let Some(i) = stack.pop() {
+            if reached[i] {
+                continue;
+            }
+            reached[i] = true;
+            stack.extend(self.deps[i].iter().copied());
+        }
+        for i in 0..n {
+            if self.needs_reach[i] && !reached[i] && !self.flagged[i] {
+                self.findings.push(VerifyError {
+                    rule: Rule::FrontierSafety,
+                    op_index: Some(i),
+                    message: "op completion is not reachable from the program's final join \
+                              (detached completion)"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::builders;
+    use crate::schedule::ops::ScheduleKind;
+
+    fn cfg() -> MoeLayerConfig {
+        MoeLayerConfig::test_default()
+    }
+
+    fn kinds() -> Vec<ScheduleKind> {
+        vec![
+            ScheduleKind::Baseline,
+            ScheduleKind::S1,
+            ScheduleKind::S2,
+            ScheduleKind::S2Aas,
+            ScheduleKind::Pipelined { chunks: 2 },
+            ScheduleKind::PipelinedUniform { chunks: 3 },
+            ScheduleKind::PipelinedS2 { chunks: 2 },
+        ]
+    }
+
+    #[test]
+    fn rule_ids_are_stable() {
+        let ids: Vec<&str> = Rule::ALL.iter().map(|r| r.id()).collect();
+        assert_eq!(
+            ids,
+            vec![
+                "volume-conservation",
+                "span-discipline",
+                "frontier-safety",
+                "tag-discipline",
+                "plane-capability",
+                "group-validity"
+            ]
+        );
+    }
+
+    #[test]
+    fn all_builder_programs_verify_clean() {
+        let c = cfg();
+        let cluster = ClusterTopology::testbed_a();
+        for kind in kinds() {
+            for program in [
+                builders::forward_ops(kind, &c),
+                builders::backward_ops(kind, &c),
+                builders::iteration_ops(kind, &c),
+            ] {
+                let findings = verify_program(&program, &c, &cluster, Plane::Timing);
+                assert!(findings.is_empty(), "{kind:?}: {findings:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_programs_verify_clean_on_the_data_plane() {
+        let c = cfg();
+        let cluster = ClusterTopology::testbed_a();
+        for kind in kinds() {
+            let program = builders::forward_ops(kind, &c);
+            let findings = verify_program(&program, &c, &cluster, Plane::Data);
+            assert!(findings.is_empty(), "{kind:?}: {findings:?}");
+        }
+    }
+
+    #[test]
+    fn backward_on_the_data_plane_is_a_plane_capability_finding() {
+        let c = cfg();
+        let cluster = ClusterTopology::testbed_a();
+        let program = builders::backward_ops(ScheduleKind::S1, &c);
+        let findings = verify_program(&program, &c, &cluster, Plane::Data);
+        assert!(!findings.is_empty());
+        assert!(findings.iter().all(|f| f.rule == Rule::PlaneCapability), "{findings:?}");
+        assert!(findings.iter().all(|f| f.op_index.is_some()));
+    }
+
+    #[test]
+    fn partition_validation_reports_typed_errors() {
+        let world = vec![0, 1, 2, 3];
+        assert!(validate_partition(&world, &[vec![0, 1], vec![2, 3]]).is_ok());
+        let overlap = validate_partition(&world, &[vec![0, 1], vec![1, 2, 3]]).unwrap_err();
+        assert_eq!(overlap.rule, Rule::GroupValidity);
+        assert!(overlap.message.contains("overlapping partition"), "{overlap}");
+        let foreign = validate_partition(&world, &[vec![0, 7]]).unwrap_err();
+        assert!(foreign.message.contains("not in the a2a group"), "{foreign}");
+        let gap = validate_partition(&world, &[vec![0, 1]]).unwrap_err();
+        assert!(gap.message.contains("incomplete partition"), "{gap}");
+    }
+
+    #[test]
+    fn display_cites_rule_and_op() {
+        let e = VerifyError {
+            rule: Rule::SpanDiscipline,
+            op_index: Some(3),
+            message: "m".to_string(),
+        };
+        assert_eq!(e.to_string(), "[span-discipline] op 3: m");
+    }
+
+    #[test]
+    fn rule_counts_are_zero_filled() {
+        let counts = rule_counts(&[]);
+        assert_eq!(counts.len(), Rule::ALL.len());
+        assert!(counts.values().all(|&v| v == 0));
+    }
+}

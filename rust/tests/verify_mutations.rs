@@ -1,0 +1,338 @@
+//! Mutation coverage for the static schedule verifier: every rule is
+//! pinned by at least one seeded corruption of a REAL builder program
+//! that only that corruption's intended rule flags, and every shipped
+//! builder output — all schedule families × forward/backward/iteration ×
+//! uniform and skewed load profiles, on a homogeneous testbed and the
+//! mixed-fleet example topology — verifies clean.
+
+use parm::config::{sweep as sweepcfg, ClusterTopology, MoeLayerConfig, SweepFilter};
+use parm::schedule::ops::{self, Op};
+use parm::schedule::{builders, verify, Plane, Rule, ScheduleKind, VerifyError};
+
+fn cfg() -> MoeLayerConfig {
+    MoeLayerConfig::test_default()
+}
+
+fn cluster() -> ClusterTopology {
+    ClusterTopology::testbed_a()
+}
+
+fn kinds(r: usize) -> Vec<ScheduleKind> {
+    vec![
+        ScheduleKind::Baseline,
+        ScheduleKind::S1,
+        ScheduleKind::S2,
+        ScheduleKind::S2Aas,
+        ScheduleKind::Pipelined { chunks: r },
+        ScheduleKind::PipelinedUniform { chunks: r },
+        ScheduleKind::PipelinedS2 { chunks: r },
+    ]
+}
+
+/// Position of the first op matching `pred`.
+fn pos(program: &[Op], pred: impl Fn(&Op) -> bool) -> usize {
+    program.iter().position(pred).expect("expected op kind present in program")
+}
+
+fn verify(program: &[Op]) -> Vec<VerifyError> {
+    verify::verify_program(program, &cfg(), &cluster(), Plane::Timing)
+}
+
+#[track_caller]
+fn assert_flags(findings: &[VerifyError], rule: Rule, what: &str) {
+    assert!(
+        findings.iter().any(|f| f.rule == rule),
+        "{what}: expected a {rule:?} finding, got {findings:?}"
+    );
+}
+
+#[track_caller]
+fn assert_only(findings: &[VerifyError], rule: Rule, what: &str) {
+    assert!(!findings.is_empty(), "{what}: expected findings, got none");
+    assert!(
+        findings.iter().all(|f| f.rule == rule),
+        "{what}: expected only {rule:?} findings, got {findings:?}"
+    );
+}
+
+// ---- volume-conservation -------------------------------------------------
+
+#[test]
+fn mutation_doubled_ep_alltoall_bytes() {
+    let mut p = builders::forward_ops(ScheduleKind::Baseline, &cfg());
+    let i = pos(&p, |o| matches!(o, Op::EpAlltoAll { .. }));
+    match &mut p[i] {
+        Op::EpAlltoAll { bytes_per_pair } => *bytes_per_pair *= 2.0,
+        _ => unreachable!(),
+    }
+    assert_only(&verify(&p), Rule::VolumeConservation, "doubled EP a2a");
+}
+
+#[test]
+fn mutation_backward_alltoall_stops_transposing_forward() {
+    let mut p = builders::backward_ops(ScheduleKind::Baseline, &cfg());
+    let i = pos(&p, |o| matches!(o, Op::BwdEpAlltoAll { .. }));
+    match &mut p[i] {
+        Op::BwdEpAlltoAll { bytes_per_pair, .. } => *bytes_per_pair *= 1.5,
+        _ => unreachable!(),
+    }
+    assert_only(&verify(&p), Rule::VolumeConservation, "scaled bwd EP a2a");
+}
+
+#[test]
+fn mutation_fused_alltoall_bytes_drift() {
+    let mut p = builders::forward_ops(ScheduleKind::S2, &cfg());
+    let i = pos(&p, |o| matches!(o, Op::FusedAlltoAll { .. }));
+    match &mut p[i] {
+        Op::FusedAlltoAll { bytes_per_pair } => *bytes_per_pair += 64.0,
+        _ => unreachable!(),
+    }
+    assert_only(&verify(&p), Rule::VolumeConservation, "drifted fused a2a");
+}
+
+#[test]
+fn mutation_backward_fused_alltoall_bytes_drift() {
+    let mut p = builders::backward_ops(ScheduleKind::S2, &cfg());
+    let i = pos(&p, |o| matches!(o, Op::BwdFusedAlltoAll { .. }));
+    match &mut p[i] {
+        Op::BwdFusedAlltoAll { bytes_per_pair, .. } => *bytes_per_pair *= 0.5,
+        _ => unreachable!(),
+    }
+    assert_only(&verify(&p), Rule::VolumeConservation, "halved bwd fused a2a");
+}
+
+#[test]
+fn mutation_wgrad_allreduce_bytes_drift() {
+    let mut p = builders::backward_ops(ScheduleKind::S1, &cfg());
+    let i = pos(&p, |o| matches!(o, Op::BwdWgradAllReduce { .. }));
+    match &mut p[i] {
+        Op::BwdWgradAllReduce { bytes_per_rank, .. } => *bytes_per_rank *= 3.0,
+        _ => unreachable!(),
+    }
+    assert_only(&verify(&p), Rule::VolumeConservation, "tripled wgrad AR");
+}
+
+#[test]
+fn mutation_chunk_combine_leaks_bytes() {
+    let mut p = builders::forward_ops(ScheduleKind::PipelinedUniform { chunks: 2 }, &cfg());
+    let i = pos(&p, |o| matches!(o, Op::SpCombine { .. }));
+    match &mut p[i] {
+        Op::SpCombine { bytes_per_pair, .. } => *bytes_per_pair *= 2.0,
+        _ => unreachable!(),
+    }
+    assert_only(&verify(&p), Rule::VolumeConservation, "doubled chunk combine");
+}
+
+#[test]
+fn mutation_negative_magnitude() {
+    let mut p = builders::forward_ops(ScheduleKind::Pipelined { chunks: 2 }, &cfg());
+    let i = pos(&p, |o| matches!(o, Op::SpExpertFfn { .. }));
+    match &mut p[i] {
+        Op::SpExpertFfn { flops_per_rank, .. } => *flops_per_rank = -1.0,
+        _ => unreachable!(),
+    }
+    assert_flags(&verify(&p), Rule::VolumeConservation, "negative FFN flops");
+}
+
+#[test]
+fn mutation_region_without_expert_compute() {
+    let mut p = builders::forward_ops(ScheduleKind::PipelinedUniform { chunks: 2 }, &cfg());
+    for op in &mut p {
+        if let Op::SpExpertFfn { flops_per_rank, .. } = op {
+            *flops_per_rank = 0.0;
+        }
+    }
+    let findings = verify(&p);
+    assert_flags(&findings, Rule::VolumeConservation, "zeroed region FFN");
+    assert!(
+        findings.iter().any(|f| f.message.contains("no expert compute")),
+        "{findings:?}"
+    );
+}
+
+// ---- span-discipline -----------------------------------------------------
+
+#[test]
+fn mutation_dispatch_covers_half_a_row() {
+    let c = cfg();
+    let mut p = builders::forward_ops(ScheduleKind::PipelinedUniform { chunks: 2 }, &c);
+    let i = pos(&p, |o| matches!(o, Op::SpDispatch { .. }));
+    let half_row = ops::bytes_sp_chunk_per_pair(&c, 1) / 2.0;
+    match &mut p[i] {
+        Op::SpDispatch { bytes_per_pair, .. } => *bytes_per_pair += half_row,
+        _ => unreachable!(),
+    }
+    assert_flags(&verify(&p), Rule::SpanDiscipline, "half-row dispatch");
+}
+
+#[test]
+fn mutation_dispatch_order_reversed() {
+    let mut p = builders::forward_ops(ScheduleKind::PipelinedUniform { chunks: 2 }, &cfg());
+    let d0 = pos(&p, |o| matches!(o, Op::SpDispatch { index: 0, .. }));
+    let d1 = pos(&p, |o| matches!(o, Op::SpDispatch { index: 1, .. }));
+    p.swap(d0, d1);
+    assert_only(&verify(&p), Rule::SpanDiscipline, "reversed dispatch order");
+}
+
+#[test]
+fn mutation_chunk_count_disagrees_with_region() {
+    let mut p = builders::forward_ops(ScheduleKind::PipelinedUniform { chunks: 2 }, &cfg());
+    let i = pos(&p, |o| matches!(o, Op::SpExpertFfn { index: 0, .. }));
+    match &mut p[i] {
+        Op::SpExpertFfn { of, .. } => *of = 3,
+        _ => unreachable!(),
+    }
+    assert_only(&verify(&p), Rule::SpanDiscipline, "FFN claims 3 chunks of 2");
+}
+
+// ---- frontier-safety -----------------------------------------------------
+
+#[test]
+fn mutation_dropped_final_combine_leaves_region_open() {
+    let mut p = builders::forward_ops(ScheduleKind::PipelinedUniform { chunks: 2 }, &cfg());
+    let i = pos(&p, |o| matches!(o, Op::SpCombine { index: 1, .. }));
+    p.remove(i);
+    let findings = verify(&p);
+    assert_only(&findings, Rule::FrontierSafety, "dropped final combine");
+    assert!(
+        findings.iter().any(|f| f.message.contains("did not complete")),
+        "{findings:?}"
+    );
+}
+
+#[test]
+fn mutation_dropped_ffn_detaches_its_combine() {
+    let mut p = builders::forward_ops(ScheduleKind::PipelinedUniform { chunks: 2 }, &cfg());
+    let i = pos(&p, |o| matches!(o, Op::SpExpertFfn { index: 1, .. }));
+    p.remove(i);
+    assert_flags(&verify(&p), Rule::FrontierSafety, "dropped chunk FFN");
+}
+
+#[test]
+fn mutation_combine_precedes_its_ffn() {
+    let mut p = builders::forward_ops(ScheduleKind::PipelinedUniform { chunks: 2 }, &cfg());
+    let f0 = pos(&p, |o| matches!(o, Op::SpExpertFfn { index: 0, .. }));
+    let c0 = pos(&p, |o| matches!(o, Op::SpCombine { index: 0, .. }));
+    assert!(f0 < c0, "builder emits FFN before combine");
+    p.swap(f0, c0);
+    assert_only(&verify(&p), Rule::FrontierSafety, "combine before FFN");
+}
+
+#[test]
+fn mutation_chunk_op_outside_any_region() {
+    let mut p = builders::forward_ops(ScheduleKind::PipelinedUniform { chunks: 2 }, &cfg());
+    let c0 = pos(&p, |o| matches!(o, Op::SpCombine { index: 0, .. }));
+    let combine = p.remove(c0);
+    p.insert(0, combine);
+    assert_only(&verify(&p), Rule::FrontierSafety, "combine before any dispatch");
+}
+
+// ---- tag-discipline ------------------------------------------------------
+
+#[test]
+fn mutation_chunk_index_outside_vocabulary() {
+    let mut p = builders::forward_ops(ScheduleKind::PipelinedUniform { chunks: 2 }, &cfg());
+    let i = pos(&p, |o| matches!(o, Op::SpCombine { .. }));
+    match &mut p[i] {
+        Op::SpCombine { index, .. } => *index = 5,
+        _ => unreachable!(),
+    }
+    assert_only(&verify(&p), Rule::TagDiscipline, "combine index 5 of 2");
+}
+
+#[test]
+fn mutation_chunk_count_exceeds_tag_arrays() {
+    let mut p = builders::forward_ops(ScheduleKind::Pipelined { chunks: 2 }, &cfg());
+    for op in &mut p {
+        match op {
+            Op::SpDispatch { of, .. }
+            | Op::SpExpertFfn { of, .. }
+            | Op::SpCombine { of, .. } => *of = 9,
+            _ => {}
+        }
+    }
+    assert_only(&verify(&p), Rule::TagDiscipline, "of=9 beyond SP_MAX_CHUNKS");
+}
+
+// ---- plane-capability ----------------------------------------------------
+
+#[test]
+fn mutation_backward_program_on_the_data_plane() {
+    let p = builders::backward_ops(ScheduleKind::S2, &cfg());
+    let findings = verify::verify_program(&p, &cfg(), &cluster(), Plane::Data);
+    assert_flags(&findings, Rule::PlaneCapability, "backward program, data plane");
+    assert!(findings.iter().all(|f| f.rule == Rule::PlaneCapability), "{findings:?}");
+    assert!(findings.iter().all(|f| f.op_index.is_some()), "{findings:?}");
+}
+
+// ---- group-validity ------------------------------------------------------
+
+#[test]
+fn mutation_layout_larger_than_cluster() {
+    let mut c = cfg();
+    c.par.p = 16;
+    c.par.n_mp = 2;
+    c.par.n_esp = 2;
+    c.validate().expect("16-GPU layout is itself valid");
+    let p = builders::forward_ops(ScheduleKind::S1, &c);
+    // Built and verified against the SAME config, so only the cluster
+    // capacity rule can fire.
+    let findings = verify::verify_program(&p, &c, &cluster(), Plane::Timing);
+    assert_only(&findings, Rule::GroupValidity, "16 GPUs on an 8-GPU testbed");
+}
+
+#[test]
+fn mutation_overlapping_mp_partition() {
+    let err = verify::validate_partition(&[0, 1, 2, 3], &[vec![0, 1], vec![1, 2, 3]]).unwrap_err();
+    assert_eq!(err.rule, Rule::GroupValidity);
+    assert!(err.message.contains("overlapping partition"), "{err}");
+}
+
+// ---- clean grid ----------------------------------------------------------
+
+/// Skewed per-expert load profile through the same gate model the traffic
+/// layer uses (harmonic routing weights).
+fn skewed_loads(c: &MoeLayerConfig) -> Vec<usize> {
+    let w: Vec<f64> = (0..c.e).map(|i| 1.0 / (i + 1) as f64).collect();
+    ops::loads_from_weights(c, c.t_pausemp(), &w)
+}
+
+fn assert_grid_clean(cluster: &ClusterTopology) {
+    let configs = sweepcfg::sweep_table3_scaled(cluster, SweepFilter::Feasible, 1);
+    assert!(!configs.is_empty(), "no feasible configs on {}", cluster.name);
+    let mut programs = 0usize;
+    for c in &configs {
+        let skewed = skewed_loads(c);
+        for kind in kinds(2).into_iter().chain(kinds(3)) {
+            for loads in [None, Some(skewed.as_slice())] {
+                for program in [
+                    builders::forward_ops_measured(kind, c, loads),
+                    builders::backward_ops_measured(kind, c, loads),
+                    builders::iteration_ops_measured(kind, c, loads),
+                ] {
+                    programs += 1;
+                    let findings = verify::verify_program(&program, c, cluster, Plane::Timing);
+                    assert!(
+                        findings.is_empty(),
+                        "{} {kind:?} loads={:?}: {findings:?}",
+                        c.id(),
+                        loads.map(|_| "skewed").unwrap_or("uniform"),
+                    );
+                }
+            }
+        }
+    }
+    assert!(programs > 0);
+}
+
+#[test]
+fn all_builder_programs_verify_clean_on_the_homogeneous_testbed() {
+    assert_grid_clean(&ClusterTopology::testbed_b());
+}
+
+#[test]
+fn all_builder_programs_verify_clean_on_the_mixed_fleet() {
+    let cluster = ClusterTopology::from_json_file("../examples/cluster_hetero.json")
+        .expect("example topology parses");
+    assert_grid_clean(&cluster);
+}
